@@ -1,0 +1,88 @@
+//! Human-in-the-loop RFT (paper §3.5): model rollouts -> annotation
+//! batches -> simulated annotator pool (Label Studio stand-in) ->
+//! quality-controlled preference pairs -> DPO in train-only mode.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use trinity_rft::coordinator::{RftConfig, RftSession};
+use trinity_rft::data::formatter::{FormatSpec, Formatter};
+use trinity_rft::data::human::{
+    results_to_preference_pairs, AnnotationItem, AnnotationService, AnnotatorConfig,
+};
+use trinity_rft::envs::math::MathTaskGen;
+
+fn main() -> anyhow::Result<()> {
+    trinity_rft::util::logging::init_from_env();
+
+    // === stage 1: candidate responses (normally: model rollouts) ===
+    let mut gen = MathTaskGen::new(5, "pref");
+    let items: Vec<AnnotationItem> = (0..8)
+        .map(|i| {
+            let t = gen.gen(1);
+            AnnotationItem {
+                prompt: t.question.clone(),
+                answer_a: if i % 2 == 0 { t.answer.to_string() } else { "99".into() },
+                answer_b: if i % 2 == 0 { "99".into() } else { t.answer.to_string() },
+                gold_answer: t.answer,
+            }
+        })
+        .collect();
+
+    // === stage 2: async annotation with timeout-aware polling ===
+    let svc = AnnotationService::new(
+        AnnotatorConfig {
+            annotators_per_item: 3,
+            accuracy: 0.9,
+            mean_latency: Duration::from_millis(30),
+            min_agreement: 0.6,
+        },
+        4,
+        42,
+    );
+    let batch_id = svc.post_batch(items.clone());
+    println!("posted annotation batch {batch_id} (8 items, 3 annotators each)");
+    println!("status while annotators work: {:?}", svc.status(batch_id));
+    // ... the RFT loop would keep exploring here (async model) ...
+    let results = svc.wait_for_batch(batch_id, Duration::from_secs(10))?;
+    println!(
+        "batch committed atomically: {} items passed agreement QC",
+        results.len()
+    );
+    for (idx, r) in &results {
+        println!(
+            "  item {idx}: chose {} (agreement {:.0}%)",
+            if r.chosen_is_a { "A" } else { "B" },
+            r.agreement * 100.0
+        );
+    }
+
+    // === stage 3: preferences -> DPODataModel pairs -> train-only DPO ===
+    let mut cfg = RftConfig::default();
+    cfg.mode = "train".into();
+    cfg.algorithm = "dpo".into();
+    cfg.hyper.tau_or_beta = 0.5;
+    cfg.hyper.lr = 5e-4;
+    // tiny dpo artifact trains 2 pairs/step
+    cfg.total_steps = (results.len() as u64 / 2).max(1);
+    let mut session = RftSession::build(cfg, None, None)?;
+    let formatter =
+        Formatter { spec: FormatSpec::default(), tokenizer: Arc::clone(&session.tokenizer) };
+    let pairs = results_to_preference_pairs(&items, &results, &formatter)?;
+    println!("\nwrote {} chosen/rejected experiences to the buffer", pairs.len());
+    session.buffer.write(pairs)?;
+
+    let report = session.run()?;
+    println!("\nstep  dpo_loss  margin    accuracy");
+    for m in &report.trainer_metrics {
+        println!(
+            "{:<5} {:<9.4} {:<9.4} {:<8.2}",
+            m.step,
+            m.get("loss").unwrap_or(0.0),
+            m.get("margin").unwrap_or(0.0),
+            m.get("accuracy").unwrap_or(0.0)
+        );
+    }
+    println!("\nhuman feedback entered the RL loop without breaking the async model");
+    Ok(())
+}

@@ -1,0 +1,91 @@
+//! The MIX algorithm (paper §3.2, Fig. 8): online GRPO on rollout
+//! experiences + SFT on expert trajectories, in one training loop.
+//!
+//! Exactly the paper's three plug-in pieces, in Rust form:
+//!   * `MixSampleStrategy`  — batch = usual buffer + expert buffer
+//!   * the `mix` loss       — (1-mu) * GRPO + mu * SFT (an L2 artifact)
+//!   * the `mix` algorithm  — wired through TrainerConfig
+//!
+//! The expert buffer is filled from formatter-converted gold QA pairs.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use trinity_rft::buffer::{ExperienceBuffer, MixSampleStrategy, QueueBuffer};
+use trinity_rft::coordinator::{MathTaskSource, RftConfig, RftSession, TaskSource};
+use trinity_rft::data::formatter::{FormatSpec, Formatter};
+use trinity_rft::envs::math::MathTaskGen;
+use trinity_rft::model::ParamStore;
+use trinity_rft::trainer::{Trainer, TrainerConfig};
+use trinity_rft::util::json::Value;
+
+fn main() -> anyhow::Result<()> {
+    trinity_rft::util::logging::init_from_env();
+    let steps: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(6);
+
+    // a standard session provides engine + explorer + rollout buffer
+    let mut cfg = RftConfig::default();
+    cfg.mode = "both".into();
+    cfg.algorithm = "mix".into();
+    cfg.total_steps = steps;
+    cfg.batch_tasks = 1;
+    cfg.repeat_times = 3; // 3 rollouts + 1 expert = tiny batch of 4
+    cfg.max_new_tokens = 6;
+    cfg.hyper.lr = 5e-4;
+    cfg.hyper.mu = 0.25; // SFT weight on the expert slice
+    let mut session = RftSession::build(cfg.clone(), None, None)?;
+
+    // --- expert buffer: gold answers as high-quality trajectories ---
+    let formatter =
+        Formatter { spec: FormatSpec::default(), tokenizer: Arc::clone(&session.tokenizer) };
+    let expert_buffer = Arc::new(QueueBuffer::new(4096));
+    let mut gen = MathTaskGen::new(99, "expert");
+    let mut experts = vec![];
+    for _ in 0..(steps as usize + 2) {
+        let t = gen.gen(1);
+        let raw = Value::obj(vec![
+            ("question", Value::str(t.question.clone())),
+            ("answer", Value::str(t.answer.to_string())),
+        ]);
+        experts.push(formatter.to_expert_experience(&raw)?);
+    }
+    let n_expert = experts.len();
+    expert_buffer.write(experts)?;
+
+    // --- swap in the MIX sample strategy (the paper's MixSampleStrategy) ---
+    let strategy = Box::new(MixSampleStrategy {
+        usual: Arc::clone(&session.buffer),
+        expert: expert_buffer,
+        expert_fraction: 0.25, // 1 of 4 per batch
+        timeout: Duration::from_secs(600),
+    });
+    let mut tcfg = TrainerConfig::new("mix");
+    tcfg.algorithm.hyper = cfg.effective_hyper();
+    let params = ParamStore::init(&session.engine.model, cfg.seed)?;
+    // explorer must start from the same weights
+    session.load_explorer_weights(&params.snapshot()?, 0)?;
+    session.trainer = Some(Trainer::new(Arc::clone(&session.engine), params, strategy, tcfg)?);
+
+    println!("MIX: {} expert trajectories + online rollouts, mu=0.25", n_expert);
+    let source: Arc<dyn TaskSource> = Arc::new(MathTaskSource::new(7, 1, 1, 3));
+    session.task_source = source;
+    let report = session.run()?;
+
+    println!("\nstep  loss      grpo_loss  sft_loss  expert_frac");
+    for m in &report.trainer_metrics {
+        println!(
+            "{:<5} {:<9.4} {:<10.4} {:<9.4} {:<6.2}",
+            m.step,
+            m.get("loss").unwrap_or(0.0),
+            m.get("grpo_loss").unwrap_or(0.0),
+            m.get("sft_loss").unwrap_or(0.0),
+            m.get("expert_frac").unwrap_or(0.0)
+        );
+    }
+    println!(
+        "\nevery batch mixed {}% expert data into the GRPO stream (one loss, two sources)",
+        25
+    );
+    println!("wall {:.1}s over {} steps", report.wall_s, report.train_steps);
+    Ok(())
+}

@@ -1,0 +1,69 @@
+//! Quickstart: the full stack in ~60 lines.
+//!
+//! Loads the AOT artifacts, wires the explorer/buffer/trainer trinity on
+//! the tiny preset, runs a few synchronous GRPO steps on synthetic math,
+//! and prints the metrics.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use trinity_rft::coordinator::{RftConfig, RftSession};
+use trinity_rft::util::timeseries;
+
+fn main() -> anyhow::Result<()> {
+    trinity_rft::util::logging::init_from_env();
+
+    let mut cfg = RftConfig::default();
+    cfg.mode = "both".into(); // synchronous (Fig. 4a)
+    cfg.model_preset = "tiny".into();
+    cfg.algorithm = "grpo".into();
+    cfg.total_steps = 5;
+    cfg.sync_interval = 1; // strictly on-policy
+    cfg.batch_tasks = 1;
+    cfg.repeat_times = 4; // GRPO group size = tiny batch bucket
+    cfg.max_new_tokens = 6;
+    cfg.min_difficulty = 1;
+    cfg.max_difficulty = 1;
+    cfg.hyper.lr = 5e-4;
+
+    println!("building session (compiling {} artifacts)...", cfg.model_preset);
+    let mut session = RftSession::build(cfg, None, None)?;
+    println!(
+        "model '{}': {} params, algorithms: {:?}",
+        session.engine.model.name,
+        session.engine.model.param_count,
+        session.engine.algorithms()
+    );
+
+    let report = session.run()?;
+
+    println!("\nstep  reward  loss      kl        entropy   resp_len");
+    for m in &report.trainer_metrics {
+        println!(
+            "{:<5} {:<7.3} {:<9.4} {:<9.5} {:<9.3} {:<8.1}",
+            m.step,
+            m.mean_reward,
+            m.get("loss").unwrap_or(0.0),
+            m.get("kl").unwrap_or(0.0),
+            m.get("entropy").unwrap_or(0.0),
+            m.mean_response_len,
+        );
+    }
+    let rewards = report.reward_series();
+    println!(
+        "\n{} train steps in {:.1}s — reward {}",
+        report.train_steps,
+        report.wall_s,
+        timeseries::fmt_mean_std(&timeseries::summarize(&rewards))
+    );
+    println!("explorer util {:.1}%, trainer util {:.1}%", report.explorer_util, report.trainer_util);
+
+    // bench mode on two held-out tiers
+    let bench = session.run_bench(&["math500s", "amcs"], 4, 2, 0.6)?;
+    println!("\nbench (Avg@2):");
+    for (tier, r) in bench {
+        println!("  {:<10} avg_reward={:.3} pass@k={:.3}", tier, r.avg_reward, r.pass_at_k);
+    }
+    Ok(())
+}

@@ -1,0 +1,311 @@
+"""AOT compile path: lower every L2 entry point to HLO text + manifest.
+
+Python runs exactly once (``make artifacts``); the Rust coordinator then
+loads ``artifacts/*.hlo.txt`` through the PJRT C API and never touches
+Python again.
+
+Interchange format is HLO **text**: jax >= 0.5 serializes HloModuleProto
+with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+published `xla` crate binds) rejects; the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+The manifest (artifacts/manifest.json) is the contract with Rust: model
+configs, parameter leaf order (jax sorted-dict flattening), per-artifact
+input/output descriptors with roles, hyper-vector slot names, and metric
+slot names.
+"""
+
+import argparse
+import functools
+import json
+import os
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import losses, model
+from .model import PRESETS, ModelConfig
+
+HYPER_SLOTS = ["lr", "beta1", "beta2", "adam_eps", "clip_eps", "tau_or_beta", "mu", "kl_coef"]
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _params_spec(cfg: ModelConfig):
+    return {name: _spec(shape) for name, shape, _ in model.param_shapes(cfg)}
+
+
+def _leaf_descriptors(tree, role_fn) -> List[Dict[str, Any]]:
+    """Flatten a pytree of ShapeDtypeStructs into named descriptors."""
+    leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for i, (path, leaf) in enumerate(leaves):
+        name = jax.tree_util.keystr(path, simple=True, separator="/") if path else f"leaf{i}"
+        out.append(
+            {
+                "name": name,
+                "shape": list(leaf.shape),
+                "dtype": str(leaf.dtype),
+                "role": role_fn(path),
+            }
+        )
+    return out
+
+
+def _role_for_top(top_names: List[str]):
+    def role_fn(path):
+        if not path:
+            return top_names[0]
+        idx = path[0].idx if hasattr(path[0], "idx") else 0
+        return top_names[idx]
+
+    return role_fn
+
+
+class ArtifactBuilder:
+    def __init__(self, out_dir: str):
+        self.out_dir = out_dir
+        self.manifest: Dict[str, Any] = {
+            "version": 1,
+            "hyper_slots": HYPER_SLOTS,
+            "models": {},
+            "artifacts": {},
+        }
+
+    def add_model(self, cfg: ModelConfig):
+        self.manifest["models"][cfg.name] = {
+            "vocab_size": cfg.vocab_size,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "d_ff": cfg.d_ff,
+            "max_seq": cfg.max_seq,
+            "param_count": cfg.param_count(),
+            "params": [
+                {"name": n, "shape": list(s), "init_std": std}
+                for n, s, std in model.param_shapes(cfg)
+            ],
+        }
+
+    def lower(self, name: str, fn, example_args, in_roles: List[str], out_roles: List[str], extra: Dict[str, Any]):
+        """Lower fn(*example_args), write HLO text, record manifest entry."""
+        print(f"[aot] lowering {name} ...", flush=True)
+        # keep_unused: the manifest promises every input is an HLO parameter,
+        # even leaves a particular entry point doesn't read (e.g. `unembed`
+        # in the embed artifact) — Rust feeds the full param set uniformly.
+        lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_shape = jax.eval_shape(fn, *example_args)
+        inputs = _leaf_descriptors(tuple(example_args), _role_for_top(in_roles))
+        outputs = _leaf_descriptors(out_shape, _role_for_top(out_roles))
+        entry = {"file": fname, "inputs": inputs, "outputs": outputs}
+        entry.update(extra)
+        self.manifest["artifacts"][name] = entry
+        print(f"[aot]   wrote {fname} ({len(text)} chars, {len(inputs)} in, {len(outputs)} out)", flush=True)
+
+    def save_manifest(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"[aot] wrote {path}")
+
+
+# ---------------------------------------------------------------------------
+# artifact set definitions
+
+
+def build_generation(b: ArtifactBuilder, cfg: ModelConfig, batch: int, prompt_len: int, cache_len: int):
+    p = _params_spec(cfg)
+    prefill_fn = functools.partial(model.prefill, cfg, cache_len=cache_len)
+    b.lower(
+        f"{cfg.name}_prefill_b{batch}_t{prompt_len}",
+        lambda params, tokens, lens: prefill_fn(params, tokens, lens),
+        (p, _spec((batch, prompt_len), jnp.int32), _spec((batch,), jnp.int32)),
+        ["param", "data", "data"],
+        ["data", "data", "data"],
+        {
+            "model": cfg.name,
+            "kind": "prefill",
+            "batch": batch,
+            "seq": prompt_len,
+            "cache_len": cache_len,
+        },
+    )
+    b.lower(
+        f"{cfg.name}_decode_b{batch}",
+        functools.partial(model.decode_step, cfg),
+        (
+            p,
+            _spec((cfg.n_layers, batch, cache_len, cfg.n_heads, cfg.head_dim)),
+            _spec((cfg.n_layers, batch, cache_len, cfg.n_heads, cfg.head_dim)),
+            _spec((batch,), jnp.int32),
+            _spec((batch,), jnp.int32),
+        ),
+        ["param", "data", "data", "data", "data"],
+        ["data", "data", "data"],
+        {"model": cfg.name, "kind": "decode", "batch": batch, "cache_len": cache_len},
+    )
+
+
+def build_logprobs(b: ArtifactBuilder, cfg: ModelConfig, batch: int, seq: int):
+    b.lower(
+        f"{cfg.name}_logprobs_b{batch}_t{seq}",
+        functools.partial(model.token_logprobs, cfg),
+        (_params_spec(cfg), _spec((batch, seq), jnp.int32)),
+        ["param", "data"],
+        ["data", "data"],
+        {"model": cfg.name, "kind": "logprobs", "batch": batch, "seq": seq},
+    )
+
+
+def build_embed(b: ArtifactBuilder, cfg: ModelConfig, batch: int, seq: int):
+    b.lower(
+        f"{cfg.name}_embed_b{batch}_t{seq}",
+        functools.partial(model.pooled_embed, cfg),
+        (_params_spec(cfg), _spec((batch, seq), jnp.int32), _spec((batch, seq))),
+        ["param", "data", "data"],
+        ["data"],
+        {"model": cfg.name, "kind": "embed", "batch": batch, "seq": seq},
+    )
+
+
+def _train_data_spec(alg: str, batch: int, seq: int):
+    tok = _spec((batch, seq), jnp.int32)
+    f_bt = _spec((batch, seq))
+    f_b = _spec((batch,))
+    if alg in ("grpo", "ppo"):
+        return (tok, f_bt, f_b, f_bt), ["tokens", "mask", "advantages", "old_lp"]
+    if alg == "sft":
+        return (tok, f_bt), ["tokens", "mask"]
+    if alg == "dpo":
+        return (tok, f_bt, tok, f_bt, f_b, f_b), [
+            "tokens_chosen",
+            "mask_chosen",
+            "tokens_rejected",
+            "mask_rejected",
+            "ref_lp_chosen",
+            "ref_lp_rejected",
+        ]
+    if alg == "mix":
+        return (tok, f_bt, f_b, f_bt, f_b), ["tokens", "mask", "advantages", "old_lp", "is_expert"]
+    if alg.startswith("opmd"):
+        return (tok, f_bt, f_b, f_bt), ["tokens", "mask", "rewards", "old_lp"]
+    raise ValueError(alg)
+
+
+def build_train(b: ArtifactBuilder, cfg: ModelConfig, alg: str, batch: int, seq: int, group_size: int = 1):
+    p = _params_spec(cfg)
+    data, data_names = _train_data_spec(alg, batch, seq)
+    step_fn = losses.make_train_step(cfg, alg, group_size=group_size)
+    example = (p, p, p, _spec((), jnp.float32), _spec((len(HYPER_SLOTS),))) + data
+    in_roles = ["param", "opt_m", "opt_v", "step", "hyper"] + ["data"] * len(data)
+    name = f"{cfg.name}_train_{alg}_b{batch}_t{seq}"
+    b.lower(
+        name,
+        step_fn,
+        example,
+        in_roles,
+        ["param", "opt_m", "opt_v", "metrics"],
+        {
+            "model": cfg.name,
+            "kind": "train",
+            "alg": alg,
+            "batch": batch,
+            "seq": seq,
+            "group_size": group_size,
+            "data_inputs": data_names,
+            "metrics": losses.metric_names(alg),
+        },
+    )
+
+
+DEFAULT_SETS = {
+    # preset -> dict describing the artifact bundle
+    "tiny": {
+        "gen": [(4, 32, 64)],  # (batch, prompt_len, cache_len)
+        "logprobs": [(4, 64)],
+        "embed": [(4, 64)],
+        "train": [
+            ("grpo", 4, 64, 4),
+            ("ppo", 4, 64, 4),
+            ("sft", 4, 64, 1),
+            ("dpo", 2, 64, 1),
+            ("mix", 4, 64, 4),
+            ("opmd_kimi", 4, 64, 4),
+            ("opmd_pairwise", 4, 64, 4),
+            ("opmd_simple", 4, 64, 4),
+        ],
+    },
+    "small": {
+        "gen": [(8, 64, 128)],
+        "logprobs": [(8, 128)],
+        "embed": [(8, 128)],
+        "train": [
+            ("grpo", 8, 128, 8),
+            ("sft", 8, 128, 1),
+            ("mix", 8, 128, 8),
+            ("opmd_simple", 8, 128, 8),
+        ],
+    },
+    "base": {
+        "gen": [(8, 64, 256)],
+        "logprobs": [(8, 256)],
+        "embed": [(8, 256)],
+        "train": [("grpo", 8, 256, 8), ("sft", 8, 256, 1)],
+    },
+    "large": {
+        "gen": [(4, 128, 512)],
+        "logprobs": [(4, 512)],
+        "embed": [(4, 512)],
+        "train": [("grpo", 4, 512, 4)],
+    },
+}
+
+
+def build_preset(b: ArtifactBuilder, preset: str):
+    cfg = PRESETS[preset]
+    spec = DEFAULT_SETS[preset]
+    b.add_model(cfg)
+    for batch, prompt_len, cache_len in spec["gen"]:
+        build_generation(b, cfg, batch, prompt_len, cache_len)
+    for batch, seq in spec["logprobs"]:
+        build_logprobs(b, cfg, batch, seq)
+    for batch, seq in spec["embed"]:
+        build_embed(b, cfg, batch, seq)
+    for alg, batch, seq, group in spec["train"]:
+        build_train(b, cfg, alg, batch, seq, group)
+
+
+def main():
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--presets",
+        default="tiny,small",
+        help="comma-separated model presets to build (tiny,small,base,large)",
+    )
+    args = parser.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+    b = ArtifactBuilder(args.out_dir)
+    for preset in args.presets.split(","):
+        build_preset(b, preset.strip())
+    b.save_manifest()
+
+
+if __name__ == "__main__":
+    main()

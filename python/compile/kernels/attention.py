@@ -1,0 +1,132 @@
+"""Pallas tiled causal flash-attention (L1 hot-spot of the training path).
+
+TPU adaptation of the GPU flash-attention insight (DESIGN.md
+§Hardware-Adaptation): the [T, T] score matrix never touches HBM. The grid
+iterates over (batch, head, q-tile); each step streams K/V tiles through
+VMEM while an online-softmax accumulator (running max, running denominator,
+weighted-value accumulator) is carried in registers. On real TPU the K/V
+BlockSpec would double-buffer HBM->VMEM DMA; under interpret=True (the only
+mode the CPU PJRT plugin can execute) the same schedule runs as numpy.
+
+VMEM budget per grid step (f32): q-tile Bq*dh + K/V 2*T*dh + acc Bq*dh +
+scores Bq*Bk.  For the `base` preset (T=256, dh=64, Bq=Bk=64) that is
+~180 KiB — far below the ~16 MiB/core VMEM, leaving room for the
+double-buffered pipeline.
+
+Backward: custom_vjp with a rematerializing jnp backward (standard
+flash-attention practice: recompute scores tile-by-tile; here the remat is
+a single jnp pass since interpret mode has no memory cliff).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import NEG_INF
+
+DEFAULT_BLOCK_Q = 32
+DEFAULT_BLOCK_K = 32
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k: int, causal: bool, scale: float):
+    # q_ref: [1, 1, Bq, dh]; k_ref/v_ref: [1, 1, T, dh]; o_ref: [1, 1, Bq, dh]
+    block_q = q_ref.shape[2]
+    dh = q_ref.shape[3]
+    t = k_ref.shape[2]
+    n_k = t // block_k
+    iq = pl.program_id(2)
+
+    q = q_ref[0, 0, :, :] * scale  # [Bq, dh]
+    q_idx = iq * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+
+    def body(jk, carry):
+        m_prev, l_prev, acc_prev = carry
+        k_tile = k_ref[0, 0, pl.dslice(jk * block_k, block_k), :]  # [Bk, dh]
+        v_tile = v_ref[0, 0, pl.dslice(jk * block_k, block_k), :]
+        s = q @ k_tile.T  # [Bq, Bk]
+        if causal:
+            k_idx = jk * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+            s = jnp.where(q_idx >= k_idx, s, NEG_INF)
+        m_cur = jnp.max(s, axis=-1)  # [Bq]
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)  # rescale of old accumulator
+        p = jnp.exp(s - m_new[:, None])  # [Bq, Bk]
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc_prev * alpha[:, None] + p @ v_tile
+        return m_new, l_new, acc_new
+
+    m0 = jnp.full((block_q,), NEG_INF, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros((block_q, dh), dtype=jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, n_k, body, (m0, l0, acc0))
+    o_ref[0, 0, :, :] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _flash_attention_fwd_impl(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool,
+    block_q: int,
+    block_k: int,
+) -> jax.Array:
+    b, h, t, dh = q.shape
+    if t % block_q != 0 or t % block_k != 0:
+        raise ValueError(f"seq len {t} must divide block sizes ({block_q}, {block_k})")
+    scale = 1.0 / float(dh) ** 0.5
+    grid = (b, h, t // block_q)
+    kernel = functools.partial(_attn_kernel, block_k=block_k, causal=causal, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh), lambda ib, ih, iq: (ib, ih, iq, 0)),
+            pl.BlockSpec((1, 1, t, dh), lambda ib, ih, iq: (ib, ih, 0, 0)),
+            pl.BlockSpec((1, 1, t, dh), lambda ib, ih, iq: (ib, ih, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh), lambda ib, ih, iq: (ib, ih, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=True,
+    )(q, k, v)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    causal: bool = True,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+) -> jax.Array:
+    """Tiled causal attention. q, k, v: [B, H, T, dh] -> [B, H, T, dh]."""
+    return _flash_attention_fwd_impl(q, k, v, causal=causal, block_q=block_q, block_k=block_k)
+
+
+def _fwd(q, k, v, causal, block_q, block_k):
+    o = _flash_attention_fwd_impl(q, k, v, causal=causal, block_q=block_q, block_k=block_k)
+    return o, (q, k, v)
+
+
+def _bwd(causal, block_q, block_k, res, do):
+    q, k, v = res
+    dh = q.shape[-1]
+    scale = 1.0 / float(dh) ** 0.5
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        t = q.shape[2]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        s = jnp.where(mask[None, None, :, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", p, do)
+    dp = jnp.einsum("bhqd,bhkd->bhqk", do, v)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jnp.einsum("bhqk,bhkd->bhqd", ds, k) * scale
+    dk = jnp.einsum("bhqk,bhqd->bhkd", ds, q) * scale
+    return dq, dk, dv
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,217 @@
+"""Pallas vocab-tiled fused unembed + log-softmax kernel (L1 hot-spot).
+
+The RFT training memory hot-spot is the logits tensor: B*T*V floats that a
+naive implementation materializes in HBM three times (forward logits,
+softmax, backward dlogits).  For the `large` preset (B=8, T=512, V=16384)
+that is 256 MiB per materialization.  This kernel computes per-token target
+log-probabilities, logsumexp and entropy in one pass that tiles the vocab
+dimension: a hidden-row tile [Bn, D] and a weight tile [D, Bv] meet in VMEM,
+and only O(Bn) statistics survive.  Backward recomputes the per-tile softmax
+from the saved logsumexp (flash-attention-style rematerialization) in two
+Pallas kernels: one accumulating dH over vocab tiles (row-parallel grid),
+one accumulating dW over row tiles (vocab-parallel grid) so that every
+output block is revisited only by consecutive grid steps — the layout a
+real TPU requires for accumulation.
+
+VMEM per grid step (f32, base preset D=512, Bn=64, Bv=512): h-tile 128 KiB +
+w-tile 1 MiB + logits tile 128 KiB ≈ 1.3 MiB.  MXU work is the [Bn,D]x[D,Bv]
+matmul; VPU work is O(Bn*Bv) exp/max — compute intensity identical to the
+fused kernels in production LM stacks.
+
+Entropy and logsumexp are produced as metrics; the custom_vjp deliberately
+propagates gradients only through the target log-probability (L2 stop-grads
+the metric outputs), which keeps the backward at exactly two recompute
+matmuls per tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BLOCK_N = 32
+DEFAULT_BLOCK_V = 128
+
+
+def _fwd_kernel(h_ref, w_ref, t_ref, lp_ref, lse_ref, ent_ref, *, block_v: int):
+    # h_ref: [Bn, D]; w_ref: [D, V]; t_ref: [Bn]; outputs: [Bn]
+    block_n = h_ref.shape[0]
+    v_total = w_ref.shape[1]
+    n_v = v_total // block_v
+    h = h_ref[:, :]  # [Bn, D]
+    targets = t_ref[:]  # [Bn] int32
+
+    def body(jv, carry):
+        m_prev, l_prev, s_prev, t_prev = carry
+        w_tile = w_ref[:, pl.dslice(jv * block_v, block_v)]  # [D, Bv]
+        x = h @ w_tile  # [Bn, Bv]
+        v_idx = jv * block_v + jax.lax.broadcasted_iota(jnp.int32, (block_n, block_v), 1)
+        # Online max / denominator / x-weighted sum (for entropy).
+        m_cur = jnp.max(x, axis=-1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(x - m_new[:, None])
+        l_new = l_prev * alpha + jnp.sum(p, axis=-1)
+        s_new = s_prev * alpha + jnp.sum(x * p, axis=-1)
+        # Exactly one tile contains each row's target column.
+        hit = v_idx == targets[:, None]
+        t_new = t_prev + jnp.sum(jnp.where(hit, x, 0.0), axis=-1)
+        return m_new, l_new, s_new, t_new
+
+    m0 = jnp.full((block_n,), -1e30, dtype=jnp.float32)
+    l0 = jnp.zeros((block_n,), dtype=jnp.float32)
+    s0 = jnp.zeros((block_n,), dtype=jnp.float32)
+    t0 = jnp.zeros((block_n,), dtype=jnp.float32)
+    m, l, s, t = jax.lax.fori_loop(0, n_v, body, (m0, l0, s0, t0))
+    lse = m + jnp.log(l)
+    lp_ref[:] = t - lse
+    lse_ref[:] = lse
+    # H = lse - E_p[x]; E_p[x] = s / l (s, l share the same max-shift).
+    ent_ref[:] = lse - s / l
+
+
+def _dh_kernel(h_ref, w_ref, t_ref, lse_ref, g_ref, dh_ref, *, block_v: int):
+    # Row-parallel: grid over row tiles, loop vocab tiles, accumulate dH.
+    # dH = g * (w[:, target] - W @ p)  per row.
+    block_n = h_ref.shape[0]
+    d = h_ref.shape[1]
+    v_total = w_ref.shape[1]
+    n_v = v_total // block_v
+    h = h_ref[:, :]
+    targets = t_ref[:]
+    lse = lse_ref[:]
+    g = g_ref[:]
+
+    def body(jv, acc):
+        w_tile = w_ref[:, pl.dslice(jv * block_v, block_v)]  # [D, Bv]
+        x = h @ w_tile  # [Bn, Bv]
+        p = jnp.exp(x - lse[:, None])
+        v_idx = jv * block_v + jax.lax.broadcasted_iota(jnp.int32, (block_n, block_v), 1)
+        hit = (v_idx == targets[:, None]).astype(jnp.float32)
+        coeff = g[:, None] * (hit - p)  # [Bn, Bv]
+        return acc + coeff @ w_tile.T  # [Bn, D]
+
+    acc0 = jnp.zeros((block_n, d), dtype=jnp.float32)
+    dh_ref[:, :] = jax.lax.fori_loop(0, n_v, body, acc0)
+
+
+def _dw_kernel(h_ref, w_ref, t_ref, lse_ref, g_ref, dw_ref, *, block_n: int):
+    # Vocab-parallel: grid over vocab tiles, loop row tiles, accumulate dW.
+    # dW[:, j] = sum_rows h_r * g_r * (onehot - p)_rj.
+    d = h_ref.shape[1]
+    block_v = dw_ref.shape[1]
+    iv = pl.program_id(0)
+    n_total = h_ref.shape[0]
+    n_n = n_total // block_n
+
+    def body(jn, acc):
+        h = h_ref[pl.dslice(jn * block_n, block_n), :]  # [Bn, D]
+        targets = t_ref[pl.dslice(jn * block_n, block_n)]
+        lse = lse_ref[pl.dslice(jn * block_n, block_n)]
+        g = g_ref[pl.dslice(jn * block_n, block_n)]
+        w_tile = w_ref[:, :]  # [D, Bv] (this grid step's tile)
+        x = h @ w_tile
+        p = jnp.exp(x - lse[:, None])
+        v_idx = iv * block_v + jax.lax.broadcasted_iota(jnp.int32, (block_n, block_v), 1)
+        hit = (v_idx == targets[:, None]).astype(jnp.float32)
+        coeff = g[:, None] * (hit - p)
+        return acc + h.T @ coeff  # [D, Bv]
+
+    acc0 = jnp.zeros((d, block_v), dtype=jnp.float32)
+    dw_ref[:, :] = jax.lax.fori_loop(0, n_n, body, acc0)
+
+
+def _fused_ce_fwd_impl(h, w, targets, *, block_n: int, block_v: int):
+    n, d = h.shape
+    v = w.shape[1]
+    block_n = min(block_n, n)
+    block_v = min(block_v, v)
+    if n % block_n != 0 or v % block_v != 0:
+        raise ValueError(f"shapes N={n}, V={v} must divide blocks ({block_n}, {block_v})")
+    grid = (n // block_n,)
+    kernel = functools.partial(_fwd_kernel, block_v=block_v)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, v), lambda i: (0, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ],
+        interpret=True,
+    )(h, w, targets)
+    return tuple(out)
+
+
+def fused_ce_grads(h, w, targets, lse, g_lp, *, block_n: int = DEFAULT_BLOCK_N, block_v: int = DEFAULT_BLOCK_V):
+    """Pallas backward: grads of sum(g_lp * lp) wrt h and w."""
+    n, d = h.shape
+    v = w.shape[1]
+    block_n = min(block_n, n)
+    block_v = min(block_v, v)
+    dh = pl.pallas_call(
+        functools.partial(_dh_kernel, block_v=block_v),
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, v), lambda i: (0, 0)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=True,
+    )(h, w, targets, lse, g_lp)
+    dw = pl.pallas_call(
+        functools.partial(_dw_kernel, block_n=block_n),
+        grid=(v // block_v,),
+        in_specs=[
+            pl.BlockSpec((n, d), lambda i: (0, 0)),
+            pl.BlockSpec((d, block_v), lambda i: (0, i)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((d, block_v), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((d, v), jnp.float32),
+        interpret=True,
+    )(h, w, targets, lse, g_lp)
+    return dh, dw
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def fused_ce(h, w, targets, block_n: int = DEFAULT_BLOCK_N, block_v: int = DEFAULT_BLOCK_V):
+    """Fused unembed + log-softmax. h: [N, D], w: [D, V], targets: [N].
+
+    Returns (target_logprob [N], logsumexp [N], entropy [N]).  Gradients flow
+    only through target_logprob (metric outputs are for logging; L2
+    stop-grads them).
+    """
+    return _fused_ce_fwd_impl(h, w, targets, block_n=block_n, block_v=block_v)
+
+
+def _ce_fwd(h, w, targets, block_n, block_v):
+    lp, lse, ent = _fused_ce_fwd_impl(h, w, targets, block_n=block_n, block_v=block_v)
+    return (lp, lse, ent), (h, w, targets, lse)
+
+
+def _ce_bwd(block_n, block_v, res, cotangents):
+    h, w, targets, lse = res
+    g_lp, _g_lse, _g_ent = cotangents  # metric cotangents ignored by design
+    dh, dw = fused_ce_grads(h, w, targets, lse, g_lp, block_n=block_n, block_v=block_v)
+    return dh, dw, None
+
+
+fused_ce.defvjp(_ce_fwd, _ce_bwd)

@@ -1,0 +1,66 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with the most straightforward jnp formulation (materializing the
+full score matrix / full logits). pytest pins kernel == ref to tight
+tolerances across shape/dtype sweeps; the kernels exist to avoid these
+materializations, not to change the math.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def ref_attention(q: jax.Array, k: jax.Array, v: jax.Array, causal: bool = True) -> jax.Array:
+    """Plain softmax attention. q, k, v: [B, H, T, dh] -> [B, H, T, dh]."""
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, dtype=q.dtype))
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        t = q.shape[2]
+        mask = jnp.tril(jnp.ones((t, t), dtype=bool))
+        scores = jnp.where(mask[None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+
+
+def ref_fused_ce(h: jax.Array, w: jax.Array, targets: jax.Array):
+    """Unembed + log-softmax + target gather, materializing full logits.
+
+    h: [N, D], w: [D, V], targets: [N] int32.
+    Returns (target_logprob [N], logsumexp [N], entropy [N]).
+    """
+    logits = h @ w  # [N, V]
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)  # [N]
+    target_logit = jnp.take_along_axis(logits, targets[:, None], axis=-1)[:, 0]
+    lp = target_logit - lse
+    probs = jax.nn.softmax(logits, axis=-1)
+    entropy = lse - jnp.sum(probs * logits, axis=-1)
+    return lp, lse, entropy
+
+
+def ref_fused_ce_grads(h: jax.Array, w: jax.Array, targets: jax.Array, g_lp: jax.Array):
+    """Analytic grads of sum(g_lp * target_logprob) wrt h and w."""
+    logits = h @ w
+    probs = jax.nn.softmax(logits, axis=-1)  # [N, V]
+    onehot = jax.nn.one_hot(targets, w.shape[1], dtype=h.dtype)
+    dlogits = g_lp[:, None] * (onehot - probs)  # [N, V]
+    dh = dlogits @ w.T
+    dw = h.T @ dlogits
+    return dh, dw
+
+
+def ref_adam(p, g, m, v, lr, b1, b2, eps, bc1, bc2):
+    """One Adam step with externally supplied bias corrections.
+
+    bc1 = 1 - b1**t, bc2 = 1 - b2**t.  All args are arrays or scalars.
+    Returns (p', m', v').
+    """
+    m_new = b1 * m + (1.0 - b1) * g
+    v_new = b2 * v + (1.0 - b2) * g * g
+    m_hat = m_new / bc1
+    v_hat = v_new / bc2
+    p_new = p - lr * m_hat / (jnp.sqrt(v_hat) + eps)
+    return p_new, m_new, v_new

@@ -1,0 +1,243 @@
+"""L2: RL loss functions + fused train steps (loss -> grads -> Adam in one HLO).
+
+Implements the paper's algorithm registry (§3.2, Appendix A):
+
+  * ``grpo``          — clipped policy gradient with group advantages
+                        (advantages are computed in Rust from grouped rewards;
+                        ratio clipping handles off-policyness as in the paper)
+  * ``ppo``           — same surrogate with an active KL penalty slot
+  * ``sft``           — supervised fine-tuning on masked response tokens
+  * ``dpo``           — direct preference optimization on chosen/rejected pairs
+  * ``mix``           — (1-mu) * GRPO(usual) + mu * SFT(expert)   (paper §3.2)
+  * ``opmd_kimi``     — Kimi k1.5 OPMD surrogate (Appendix A.1)
+  * ``opmd_pairwise`` — pairwise OPMD (Appendix A.2)
+  * ``opmd_simple``   — the "embarrassingly simple" variant (Appendix A.3),
+                        i.e. baseline-subtracted PG scaled by 1/(1+tau)
+
+The hyper-parameter vector is a runtime input so the Rust coordinator can
+set lr=0 for dummy-learning profiling (Tables 1-2) without recompiling:
+
+  hyper = [lr, beta1, beta2, adam_eps, clip_eps, tau_or_beta, mu, kl_coef]
+
+Every train step returns a fixed-width metrics vector; slot names are
+recorded per-algorithm in the AOT manifest.
+"""
+
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.adam import adam_update_tree
+from .model import ModelConfig, Params, token_logprobs
+
+N_METRICS = 8
+
+H_LR, H_B1, H_B2, H_EPS, H_CLIP, H_TAU, H_MU, H_KL = range(8)
+
+
+def masked_mean(x: jax.Array, mask: jax.Array) -> jax.Array:
+    return jnp.sum(x * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def _seq_logprob(lp: jax.Array, mask: jax.Array) -> jax.Array:
+    """Sequence log-prob: sum of masked token log-probs. [B, T] -> [B]."""
+    return jnp.sum(lp * mask, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# loss functions: fn(cfg, params, hyper, *data) -> (loss, metrics[N_METRICS])
+
+
+def _pg_clip_core(lp, ent, mask, advantages, old_lp, clip_eps, kl_coef, weight=None):
+    """Shared clipped-PG surrogate. weight: optional [B] per-sequence weight."""
+    log_ratio = lp - old_lp
+    ratio = jnp.exp(log_ratio)
+    adv = advantages[:, None]
+    w_mask = mask if weight is None else mask * weight[:, None]
+    unclipped = ratio * adv
+    clipped = jnp.clip(ratio, 1.0 - clip_eps, 1.0 + clip_eps) * adv
+    pg_loss = -masked_mean(jnp.minimum(unclipped, clipped), w_mask)
+    # k3 estimator of KL(new || old) is standard; the paper logs KL magnitude.
+    kl = masked_mean(jnp.exp(-log_ratio) - 1.0 + log_ratio, w_mask)
+    clip_frac = masked_mean((jnp.abs(ratio - 1.0) > clip_eps).astype(jnp.float32), w_mask)
+    entropy = masked_mean(ent, w_mask)
+    loss = pg_loss + kl_coef * kl
+    return loss, pg_loss, kl, clip_frac, entropy, masked_mean(ratio, w_mask)
+
+
+def grpo_loss(cfg: ModelConfig, params: Params, hyper, tokens, mask, advantages, old_lp):
+    lp, ent = token_logprobs(cfg, params, tokens)
+    loss, pg, kl, clip_frac, entropy, ratio = _pg_clip_core(
+        lp, ent, mask, advantages, old_lp, hyper[H_CLIP], hyper[H_KL]
+    )
+    metrics = jnp.stack([loss, pg, kl, clip_frac, entropy, ratio, jnp.mean(advantages), 0.0])
+    return loss, metrics
+
+
+GRPO_METRICS = ["loss", "pg_loss", "kl", "clip_frac", "entropy", "ratio", "adv_mean", "_"]
+
+
+def sft_loss(cfg: ModelConfig, params: Params, hyper, tokens, mask):
+    lp, ent = token_logprobs(cfg, params, tokens)
+    loss = -masked_mean(lp, mask)
+    metrics = jnp.stack([loss, loss, 0.0, 0.0, masked_mean(ent, mask), 0.0, 0.0, 0.0])
+    return loss, metrics
+
+
+SFT_METRICS = ["loss", "nll", "_", "_", "entropy", "_", "_", "_"]
+
+
+def dpo_loss(cfg: ModelConfig, params: Params, hyper, tokens_c, mask_c, tokens_r, mask_r, ref_c, ref_r):
+    beta = hyper[H_TAU]
+    lp_c, _ = token_logprobs(cfg, params, tokens_c)
+    lp_r, _ = token_logprobs(cfg, params, tokens_r)
+    seq_c = _seq_logprob(lp_c, mask_c)
+    seq_r = _seq_logprob(lp_r, mask_r)
+    margin = beta * ((seq_c - ref_c) - (seq_r - ref_r))
+    loss = -jnp.mean(jax.nn.log_sigmoid(margin))
+    acc = jnp.mean((margin > 0).astype(jnp.float32))
+    metrics = jnp.stack(
+        [loss, jnp.mean(margin), acc, jnp.mean(seq_c - ref_c), jnp.mean(seq_r - ref_r), 0.0, 0.0, 0.0]
+    )
+    return loss, metrics
+
+
+DPO_METRICS = ["loss", "margin", "accuracy", "chosen_delta", "rejected_delta", "_", "_", "_"]
+
+
+def mix_loss(cfg: ModelConfig, params: Params, hyper, tokens, mask, advantages, old_lp, is_expert):
+    """Paper §3.2 MIX: (1-mu) * GRPO on usual rollouts + mu * SFT on expert."""
+    mu = hyper[H_MU]
+    lp, ent = token_logprobs(cfg, params, tokens)
+    usual = 1.0 - is_expert
+    grpo_part, pg, kl, clip_frac, entropy, _ = _pg_clip_core(
+        lp, ent, mask, advantages, old_lp, hyper[H_CLIP], hyper[H_KL], weight=usual
+    )
+    sft_part = -masked_mean(lp, mask * is_expert[:, None])
+    loss = (1.0 - mu) * grpo_part + mu * sft_part
+    metrics = jnp.stack([loss, grpo_part, sft_part, kl, clip_frac, entropy, jnp.mean(is_expert), 0.0])
+    return loss, metrics
+
+
+MIX_METRICS = ["loss", "grpo_loss", "sft_loss", "kl", "clip_frac", "entropy", "expert_frac", "_"]
+
+
+def _group_reshape(x: jax.Array, group_size: int) -> jax.Array:
+    return x.reshape(-1, group_size)
+
+
+def opmd_kimi_loss(cfg: ModelConfig, params: Params, hyper, tokens, mask, rewards, old_lp, *, group_size: int):
+    """Kimi k1.5 OPMD (Appendix A.1): squared consistency residual with
+    log Z-hat estimated from the group's rewards."""
+    tau = hyper[H_TAU]
+    lp, ent = token_logprobs(cfg, params, tokens)
+    seq_lp = _seq_logprob(lp, mask)
+    ref_lp = _seq_logprob(old_lp, mask)  # rollout policy = pi_ref at sampling time
+    r_g = _group_reshape(rewards, group_size)  # [G, K]
+    # tau * log( (1/K) sum exp(r/tau) ) — computed stably per group.
+    m = jnp.max(r_g, axis=1, keepdims=True)
+    log_z = tau * jnp.log(jnp.mean(jnp.exp((r_g - m) / jnp.maximum(tau, 1e-6)), axis=1)) + m[:, 0]
+    resid = r_g - log_z[:, None] - tau * _group_reshape(seq_lp - ref_lp, group_size)
+    loss = jnp.mean(resid**2)
+    metrics = jnp.stack(
+        [loss, jnp.mean(rewards), jnp.mean(seq_lp), masked_mean(ent, mask), jnp.mean(log_z), 0.0, 0.0, 0.0]
+    )
+    return loss, metrics
+
+
+OPMD_KIMI_METRICS = ["loss", "reward_mean", "seq_lp", "entropy", "log_z", "_", "_", "_"]
+
+
+def opmd_pairwise_loss(cfg: ModelConfig, params: Params, hyper, tokens, mask, rewards, old_lp, *, group_size: int):
+    """Pairwise OPMD (Appendix A.2): sum_{i<j} (a_i - a_j)^2 with
+    a_i = r_i - tau (log pi - log pi_ref); Z eliminated by pairing.
+    Uses the identity sum_{i<j}(a_i-a_j)^2 = K*sum a^2 - (sum a)^2."""
+    tau = hyper[H_TAU]
+    lp, ent = token_logprobs(cfg, params, tokens)
+    seq_lp = _seq_logprob(lp, mask)
+    ref_lp = _seq_logprob(old_lp, mask)
+    a = _group_reshape(rewards - tau * (seq_lp - ref_lp), group_size)  # [G, K]
+    k = float(group_size)
+    per_group = k * jnp.sum(a**2, axis=1) - jnp.sum(a, axis=1) ** 2
+    loss = jnp.mean(per_group) / (k * k)  # scale-normalize by pair count
+    metrics = jnp.stack(
+        [loss, jnp.mean(rewards), jnp.mean(seq_lp), masked_mean(ent, mask), jnp.mean(a), 0.0, 0.0, 0.0]
+    )
+    return loss, metrics
+
+
+OPMD_PAIRWISE_METRICS = ["loss", "reward_mean", "seq_lp", "entropy", "a_mean", "_", "_", "_"]
+
+
+def opmd_simple_loss(cfg: ModelConfig, params: Params, hyper, tokens, mask, rewards, old_lp, *, group_size: int):
+    """Simple OPMD (Appendix A.3): -1/(1+tau) * sum_i (r_i - rbar_group) log pi.
+
+    Exactly the standard policy gradient with the group-mean baseline, but
+    derived via one-step mirror descent — valid off-policy per the paper."""
+    tau = hyper[H_TAU]
+    lp, ent = token_logprobs(cfg, params, tokens)
+    seq_lp = _seq_logprob(lp, mask)
+    r_g = _group_reshape(rewards, group_size)
+    baseline = jnp.mean(r_g, axis=1, keepdims=True)
+    adv = (r_g - baseline).reshape(-1)
+    loss = -jnp.mean(adv * seq_lp) / (1.0 + tau)
+    metrics = jnp.stack(
+        [loss, jnp.mean(rewards), jnp.mean(seq_lp), masked_mean(ent, mask), jnp.mean(jnp.abs(adv)), 0.0, 0.0, 0.0]
+    )
+    return loss, metrics
+
+
+OPMD_SIMPLE_METRICS = ["loss", "reward_mean", "seq_lp", "entropy", "adv_abs", "_", "_", "_"]
+
+
+ALGORITHMS: Dict[str, Tuple[Callable, List[str], bool]] = {
+    # name -> (loss_fn, metric names, needs_group_size)
+    "grpo": (grpo_loss, GRPO_METRICS, False),
+    "ppo": (grpo_loss, GRPO_METRICS, False),  # same surrogate; kl_coef active
+    "sft": (sft_loss, SFT_METRICS, False),
+    "dpo": (dpo_loss, DPO_METRICS, False),
+    "mix": (mix_loss, MIX_METRICS, False),
+    "opmd_kimi": (opmd_kimi_loss, OPMD_KIMI_METRICS, True),
+    "opmd_pairwise": (opmd_pairwise_loss, OPMD_PAIRWISE_METRICS, True),
+    "opmd_simple": (opmd_simple_loss, OPMD_SIMPLE_METRICS, True),
+}
+
+
+def global_grad_norm(grads) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(grads)
+    return jnp.sqrt(sum(jnp.sum(g * g) for g in leaves))
+
+
+def make_train_step(cfg: ModelConfig, alg: str, group_size: int = 1):
+    """Build step(params, m, v, step_count, hyper, *data) ->
+    (params', m', v', metrics[N_METRICS+1]) — last metric slot is grad_norm."""
+    loss_fn, _names, needs_group = ALGORITHMS[alg]
+
+    def step(params, m, v, step_count, hyper, *data):
+        def wrapped(p):
+            if needs_group:
+                return loss_fn(cfg, p, hyper, *data, group_size=group_size)
+            return loss_fn(cfg, p, hyper, *data)
+
+        (_loss, metrics), grads = jax.value_and_grad(wrapped, has_aux=True)(params)
+        gnorm = global_grad_norm(grads)
+        t = step_count.astype(jnp.float32)
+        adam_hyper = jnp.stack(
+            [
+                hyper[H_LR],
+                hyper[H_B1],
+                hyper[H_B2],
+                hyper[H_EPS],
+                1.0 - hyper[H_B1] ** t,
+                1.0 - hyper[H_B2] ** t,
+            ]
+        )
+        params, m, v = adam_update_tree(params, grads, m, v, adam_hyper)
+        return params, m, v, jnp.concatenate([metrics, gnorm[None]])
+
+    return step
+
+
+def metric_names(alg: str) -> List[str]:
+    return ALGORITHMS[alg][1] + ["grad_norm"]

@@ -1,0 +1,275 @@
+"""L2: the policy LLM as pure-functional JAX, calling the L1 Pallas kernels.
+
+A GPT-style decoder-only transformer (pre-RMSNorm, RoPE, SiLU MLP) sized by
+preset.  Entry points (all lowered to HLO by aot.py):
+
+  * ``forward_hidden``  — final hidden states (flash-attention kernel inside)
+  * ``token_logprobs``  — per-token log-probs + entropy via the fused-CE kernel
+  * ``prefill``         — prompt forward + KV-cache population + last logits
+  * ``decode_step``     — single-token decode against the KV cache
+  * ``pooled_embed``    — mean-pooled, L2-normalized sequence embedding
+                          (the GTE-embedder stand-in for diversity rewards)
+
+Parameter pytree is a flat dict keyed by zero-padded names so that JAX's
+sorted-dict flattening order is deterministic; the AOT manifest records the
+order and Rust's ParamStore reproduces it exactly.
+"""
+
+import dataclasses
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import flash_attention
+from .kernels.fused_ce import fused_ce
+
+Params = Dict[str, jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab_size: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        per_layer = 4 * self.d_model**2 + 2 * self.d_model * self.d_ff + 2 * self.d_model
+        return (
+            2 * self.vocab_size * self.d_model
+            + self.n_layers * per_layer
+            + self.d_model
+        )
+
+
+PRESETS = {
+    # vocab sizes are multiples of the fused-CE vocab tile (128)
+    "tiny": ModelConfig("tiny", 512, 64, 2, 4, 256, 64),
+    "small": ModelConfig("small", 1024, 192, 4, 6, 768, 128),
+    "base": ModelConfig("base", 4096, 512, 8, 8, 2048, 256),
+    "large": ModelConfig("large", 16384, 768, 12, 12, 3072, 512),
+}
+
+
+# ---------------------------------------------------------------------------
+# parameters
+
+
+def param_spec(cfg: ModelConfig):
+    """(name -> (shape, init_std)) — init_std 0.0 means 'init to ones' (norms)."""
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab_size
+    std = 0.02
+    out_std = std / (2 * cfg.n_layers) ** 0.5  # residual-branch scaling
+    spec = {
+        "tok_emb": ((v, d), std),
+        "unembed": ((d, v), std),
+        "final_norm": ((d,), 0.0),
+    }
+    for i in range(cfg.n_layers):
+        p = f"layers.{i:02d}."
+        spec[p + "attn_norm"] = ((d,), 0.0)
+        spec[p + "wq"] = ((d, d), std)
+        spec[p + "wk"] = ((d, d), std)
+        spec[p + "wv"] = ((d, d), std)
+        spec[p + "wo"] = ((d, d), out_std)
+        spec[p + "mlp_norm"] = ((d,), 0.0)
+        spec[p + "w_up"] = ((d, f), std)
+        spec[p + "w_down"] = ((f, d), out_std)
+    return spec
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    params = {}
+    for i, (name, (shape, std)) in enumerate(sorted(param_spec(cfg).items())):
+        if std == 0.0:
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            sub = jax.random.fold_in(key, i)
+            params[name] = std * jax.random.normal(sub, shape, jnp.float32)
+    return params
+
+
+def param_shapes(cfg: ModelConfig):
+    """Flattened leaf order as jax will see it (sorted dict keys)."""
+    spec = param_spec(cfg)
+    return [(name, spec[name][0], spec[name][1]) for name in sorted(spec)]
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * scale
+
+
+def rope_angles(positions: jax.Array, head_dim: int, theta: float = 10000.0):
+    """positions: int32 [...]. Returns (cos, sin) with shape [..., head_dim/2]."""
+    half = head_dim // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """x: [..., head_dim]; cos/sin broadcastable to [..., head_dim/2]."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _attention_full(cfg: ModelConfig, params: Params, prefix: str, x: jax.Array, positions: jax.Array):
+    """Full-sequence attention through the flash kernel.
+
+    x: [B, T, D]. Returns (out [B, T, D], k_rot [B, T, H, dh], v [B, T, H, dh]).
+    """
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.head_dim
+    q = (x @ params[prefix + "wq"]).reshape(b, t, h, dh)
+    k = (x @ params[prefix + "wk"]).reshape(b, t, h, dh)
+    v = (x @ params[prefix + "wv"]).reshape(b, t, h, dh)
+    cos, sin = rope_angles(positions, dh)  # [T, dh/2]
+    cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    # flash kernel wants [B, H, T, dh]
+    o = flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+    )
+    o = o.transpose(0, 2, 1, 3).reshape(b, t, d)
+    return o @ params[prefix + "wo"], k, v
+
+
+def _mlp(params: Params, prefix: str, x: jax.Array) -> jax.Array:
+    return jax.nn.silu(x @ params[prefix + "w_up"]) @ params[prefix + "w_down"]
+
+
+# ---------------------------------------------------------------------------
+# entry points
+
+
+def forward_hidden(cfg: ModelConfig, params: Params, tokens: jax.Array, collect_kv: bool = False):
+    """tokens: [B, T] int32 -> final hidden [B, T, D] (+ per-layer post-RoPE K/V)."""
+    b, t = tokens.shape
+    positions = jnp.arange(t, dtype=jnp.int32)
+    x = params["tok_emb"][tokens]
+    kvs = []
+    for i in range(cfg.n_layers):
+        p = f"layers.{i:02d}."
+        attn_out, k, v = _attention_full(cfg, params, p, rms_norm(x, params[p + "attn_norm"]), positions)
+        x = x + attn_out
+        x = x + _mlp(params, p, rms_norm(x, params[p + "mlp_norm"]))
+        if collect_kv:
+            kvs.append((k, v))
+    h = rms_norm(x, params["final_norm"])
+    return (h, kvs) if collect_kv else h
+
+
+def token_logprobs(cfg: ModelConfig, params: Params, tokens: jax.Array):
+    """Per-token log-probabilities via the fused-CE kernel.
+
+    Returns (lp [B, T], ent [B, T]) where lp[:, j] = log pi(tokens[:, j] |
+    tokens[:, :j]) for j >= 1 and lp[:, 0] = 0; ent[:, j] is the entropy of
+    the distribution that produced token j (stop-gradient, metric only).
+    """
+    b, t = tokens.shape
+    h = forward_hidden(cfg, params, tokens)  # [B, T, D]
+    # position j predicts token j+1; last position's target is a dummy 0.
+    targets = jnp.concatenate([tokens[:, 1:], jnp.zeros((b, 1), jnp.int32)], axis=1)
+    lp_full, _lse, ent_full = fused_ce(
+        h.reshape(b * t, cfg.d_model), params["unembed"], targets.reshape(b * t)
+    )
+    lp_full = lp_full.reshape(b, t)
+    ent_full = ent_full.reshape(b, t)
+    zeros = jnp.zeros((b, 1), jnp.float32)
+    lp = jnp.concatenate([zeros, lp_full[:, :-1]], axis=1)
+    ent = jnp.concatenate([zeros, ent_full[:, :-1]], axis=1)
+    return lp, jax.lax.stop_gradient(ent)
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array, prompt_lens: jax.Array, cache_len: int):
+    """Prompt forward populating a KV cache.
+
+    tokens: [B, Tp] right-padded prompts; prompt_lens: [B] int32.
+    Returns (last_logits [B, V], k_cache, v_cache [L, B, Tc, H, dh]).
+    Pad positions write garbage K/V beyond prompt_lens; decode overwrites
+    position `pos` before attending to it, so they are never observed.
+    """
+    b, tp = tokens.shape
+    h, kvs = forward_hidden(cfg, params, tokens, collect_kv=True)
+    k_cache = jnp.zeros((cfg.n_layers, b, cache_len, cfg.n_heads, cfg.head_dim), jnp.float32)
+    v_cache = jnp.zeros_like(k_cache)
+    for i, (k, v) in enumerate(kvs):
+        k_cache = k_cache.at[i, :, :tp].set(k)
+        v_cache = v_cache.at[i, :, :tp].set(v)
+    last_h = jnp.take_along_axis(h, (prompt_lens - 1)[:, None, None], axis=1)[:, 0]  # [B, D]
+    last_logits = last_h @ params["unembed"]
+    return last_logits, k_cache, v_cache
+
+
+def decode_step(
+    cfg: ModelConfig,
+    params: Params,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    tokens: jax.Array,
+    pos: jax.Array,
+):
+    """One decode step with per-sequence positions (continuous batching).
+
+    tokens: [B] int32 (the token at position pos[b]); pos: [B] int32.
+    Returns (logits [B, V], k_cache', v_cache').
+    """
+    b = tokens.shape[0]
+    hcount, dh = cfg.n_heads, cfg.head_dim
+    tc = k_cache.shape[2]
+    x = params["tok_emb"][tokens]  # [B, D]
+    cos, sin = rope_angles(pos, dh)  # [B, dh/2]
+    cos_h, sin_h = cos[:, None, :], sin[:, None, :]
+    t_idx = jnp.arange(tc, dtype=jnp.int32)
+    scale = 1.0 / float(dh) ** 0.5
+
+    def write(cache_l, new, p):
+        # cache_l: [B, Tc, H, dh], new: [B, H, dh]
+        return jax.vmap(
+            lambda c, n, pp: jax.lax.dynamic_update_slice(c, n[None], (pp, 0, 0))
+        )(cache_l, new, p)
+
+    for i in range(cfg.n_layers):
+        pfx = f"layers.{i:02d}."
+        hn = rms_norm(x, params[pfx + "attn_norm"])
+        q = (hn @ params[pfx + "wq"]).reshape(b, hcount, dh)
+        k = (hn @ params[pfx + "wk"]).reshape(b, hcount, dh)
+        v = (hn @ params[pfx + "wv"]).reshape(b, hcount, dh)
+        q = apply_rope(q, cos_h, sin_h)
+        k = apply_rope(k, cos_h, sin_h)
+        k_cache = k_cache.at[i].set(write(k_cache[i], k, pos))
+        v_cache = v_cache.at[i].set(write(v_cache[i], v, pos))
+        scores = jnp.einsum("bhd,bthd->bht", q, k_cache[i]) * scale
+        mask = t_idx[None, :] <= pos[:, None]  # attend to 0..pos inclusive
+        scores = jnp.where(mask[:, None, :], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bht,bthd->bhd", probs, v_cache[i]).reshape(b, cfg.d_model)
+        x = x + o @ params[pfx + "wo"]
+        x = x + _mlp(params, pfx, rms_norm(x, params[pfx + "mlp_norm"]))
+    hfin = rms_norm(x, params["final_norm"])
+    return hfin @ params["unembed"], k_cache, v_cache
+
+
+def pooled_embed(cfg: ModelConfig, params: Params, tokens: jax.Array, mask: jax.Array):
+    """Mean-pooled, L2-normalized final hidden state. mask: [B, T] f32."""
+    h = forward_hidden(cfg, params, tokens)  # [B, T, D]
+    s = jnp.sum(h * mask[:, :, None], axis=1)
+    denom = jnp.maximum(jnp.sum(mask, axis=1, keepdims=True), 1.0)
+    emb = s / denom
+    norm = jnp.maximum(jnp.linalg.norm(emb, axis=-1, keepdims=True), 1e-8)
+    return emb / norm

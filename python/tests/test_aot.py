@@ -1,0 +1,100 @@
+"""AOT contract tests: manifest <-> HLO consistency (the Rust-facing contract)."""
+
+import json
+import os
+import re
+
+import pytest
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+MANIFEST = os.path.join(ART_DIR, "manifest.json")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(MANIFEST), reason="artifacts not built (run `make artifacts`)"
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(MANIFEST) as f:
+        return json.load(f)
+
+
+def test_manifest_has_models_and_artifacts(manifest):
+    assert "tiny" in manifest["models"]
+    assert len(manifest["artifacts"]) >= 10
+    assert manifest["hyper_slots"][0] == "lr"
+
+
+def test_all_artifact_files_exist(manifest):
+    for name, entry in manifest["artifacts"].items():
+        path = os.path.join(ART_DIR, entry["file"])
+        assert os.path.exists(path), f"missing {path}"
+        assert os.path.getsize(path) > 1000
+
+
+def test_param_leaves_match_model_spec(manifest):
+    from compile import model
+
+    for preset, entry in manifest["models"].items():
+        cfg = model.PRESETS[preset]
+        expected = model.param_shapes(cfg)
+        assert len(entry["params"]) == len(expected)
+        for rec, (name, shape, std) in zip(entry["params"], expected):
+            assert rec["name"] == name
+            assert tuple(rec["shape"]) == tuple(shape)
+            assert rec["init_std"] == std
+
+
+def test_hlo_parameter_count_matches_manifest(manifest):
+    """The number of ENTRY parameters in each HLO must equal manifest inputs."""
+    for name, entry in manifest["artifacts"].items():
+        path = os.path.join(ART_DIR, entry["file"])
+        with open(path) as f:
+            text = f.read()
+        entry_match = re.search(r"ENTRY[^{]*\{(.*?)\n\}", text, re.S)
+        assert entry_match, f"no ENTRY computation in {name}"
+        n_params = len(re.findall(r"=\s*\S+\s+parameter\(\d+\)", entry_match.group(1)))
+        assert n_params == len(entry["inputs"]), (
+            f"{name}: {n_params} HLO params vs {len(entry['inputs'])} manifest inputs"
+        )
+
+
+def test_train_artifacts_roundtrip_param_roles(manifest):
+    for name, entry in manifest["artifacts"].items():
+        if entry["kind"] != "train":
+            continue
+        n_leaves = len(manifest["models"][entry["model"]]["params"])
+        roles = [i["role"] for i in entry["inputs"]]
+        assert roles.count("param") == n_leaves
+        assert roles.count("opt_m") == n_leaves
+        assert roles.count("opt_v") == n_leaves
+        assert roles.count("step") == 1
+        assert roles.count("hyper") == 1
+        out_roles = [o["role"] for o in entry["outputs"]]
+        assert out_roles.count("param") == n_leaves
+        assert out_roles.count("metrics") == 1
+        assert len(entry["metrics"]) == 9  # 8 loss metrics + grad_norm
+
+    # param input shapes must match the model param table, in order
+    entry = next(e for e in manifest["artifacts"].values() if e["kind"] == "train")
+    model_params = manifest["models"][entry["model"]]["params"]
+    param_inputs = [i for i in entry["inputs"] if i["role"] == "param"]
+    for mp, pi in zip(model_params, param_inputs):
+        assert pi["shape"] == mp["shape"]
+
+
+def test_data_input_names_recorded(manifest):
+    for name, entry in manifest["artifacts"].items():
+        if entry["kind"] != "train":
+            continue
+        data_inputs = [i for i in entry["inputs"] if i["role"] == "data"]
+        assert len(data_inputs) == len(entry["data_inputs"])
+
+
+def test_hlo_is_text_not_proto(manifest):
+    """Guard against regressions to .serialize() (64-bit-id protos)."""
+    any_file = next(iter(manifest["artifacts"].values()))["file"]
+    with open(os.path.join(ART_DIR, any_file), "rb") as f:
+        head = f.read(64)
+    assert b"HloModule" in head

@@ -1,0 +1,219 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (and block sizes) as required for the kernel
+contract; fixed-seed regression cases pin exact tolerances.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.adam import adam_update_flat, adam_update_tree
+from compile.kernels.attention import flash_attention
+from compile.kernels.fused_ce import fused_ce, fused_ce_grads
+
+ATOL = 2e-5
+
+
+def rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+
+
+class TestFlashAttention:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        b=st.sampled_from([1, 2, 3]),
+        h=st.sampled_from([1, 2, 4]),
+        t=st.sampled_from([32, 64, 128]),
+        dh=st.sampled_from([8, 16, 32]),
+        causal=st.booleans(),
+    )
+    def test_matches_ref(self, b, h, t, dh, causal):
+        q, k, v = (rand(i + 17 * b + t, (b, h, t, dh)) for i in range(3))
+        out = flash_attention(q, k, v, causal)
+        expected = ref.ref_attention(q, k, v, causal)
+        assert jnp.max(jnp.abs(out - expected)) < ATOL
+
+    @pytest.mark.parametrize("block_q,block_k", [(16, 16), (32, 16), (16, 32), (64, 64)])
+    def test_block_size_invariance(self, block_q, block_k):
+        q, k, v = (rand(i, (2, 2, 64, 16)) for i in range(3))
+        out = flash_attention(q, k, v, True, block_q, block_k)
+        expected = ref.ref_attention(q, k, v, True)
+        assert jnp.max(jnp.abs(out - expected)) < ATOL
+
+    def test_gradients_match_ref(self):
+        q, k, v = (rand(i + 5, (2, 2, 32, 16)) for i in range(3))
+        f = lambda *a: jnp.sum(flash_attention(*a) ** 2)
+        fr = lambda *a: jnp.sum(ref.ref_attention(*a) ** 2)
+        grads = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+        grads_ref = jax.grad(fr, argnums=(0, 1, 2))(q, k, v)
+        for g, gr in zip(grads, grads_ref):
+            assert jnp.max(jnp.abs(g - gr)) < 1e-4
+
+    def test_causality(self):
+        """Perturbing future K/V must not change past outputs."""
+        q, k, v = (rand(i + 9, (1, 1, 64, 16)) for i in range(3))
+        out1 = flash_attention(q, k, v)
+        k2 = k.at[:, :, 40:, :].add(100.0)
+        v2 = v.at[:, :, 40:, :].add(100.0)
+        out2 = flash_attention(q, k2, v2)
+        assert jnp.max(jnp.abs(out1[:, :, :40] - out2[:, :, :40])) < 1e-6
+        assert jnp.max(jnp.abs(out1[:, :, 41:] - out2[:, :, 41:])) > 1e-3
+
+    def test_softmax_stability_large_logits(self):
+        q, k, v = (rand(i, (1, 1, 32, 8), scale=30.0) for i in range(3))
+        out = flash_attention(q, k, v)
+        assert bool(jnp.all(jnp.isfinite(out)))
+        expected = ref.ref_attention(q, k, v)
+        assert jnp.max(jnp.abs(out - expected)) < 1e-3
+
+    def test_under_jit_and_vmap_compat(self):
+        q, k, v = (rand(i, (2, 2, 32, 16)) for i in range(3))
+        out = jax.jit(lambda a, b, c: flash_attention(a, b, c))(q, k, v)
+        expected = ref.ref_attention(q, k, v)
+        assert jnp.max(jnp.abs(out - expected)) < ATOL
+
+
+# ---------------------------------------------------------------------------
+# fused CE
+
+
+class TestFusedCE:
+    @settings(max_examples=12, deadline=None)
+    @given(
+        n=st.sampled_from([32, 64, 96]),
+        d=st.sampled_from([16, 32, 64]),
+        v=st.sampled_from([128, 256, 512]),
+        scale=st.sampled_from([0.1, 1.0, 5.0]),
+    )
+    def test_matches_ref(self, n, d, v, scale):
+        h = rand(n + d, (n, d), scale)
+        w = rand(v, (d, v), 0.1)
+        t = jax.random.randint(jax.random.PRNGKey(n * v), (n,), 0, v)
+        lp, lse, ent = fused_ce(h, w, t)
+        lp_r, lse_r, ent_r = ref.ref_fused_ce(h, w, t)
+        assert jnp.max(jnp.abs(lp - lp_r)) < ATOL * max(1.0, scale)
+        assert jnp.max(jnp.abs(lse - lse_r)) < ATOL * max(1.0, scale)
+        assert jnp.max(jnp.abs(ent - ent_r)) < 1e-3 * max(1.0, scale)
+
+    def test_logprobs_are_normalized(self):
+        """exp(lp) summed over all possible targets must be 1."""
+        n, d, v = 4, 16, 128
+        h = rand(0, (n, d))
+        w = rand(1, (d, v), 0.1)
+        total = jnp.zeros((n,))
+        for tgt in range(v):
+            lp, _, _ = fused_ce(h, w, jnp.full((n,), tgt, jnp.int32))
+            total = total + jnp.exp(lp)
+        assert jnp.max(jnp.abs(total - 1.0)) < 1e-3
+
+    def test_grads_match_analytic(self):
+        n, d, v = 64, 32, 256
+        h = rand(3, (n, d))
+        w = rand(4, (d, v), 0.1)
+        t = jax.random.randint(jax.random.PRNGKey(5), (n,), 0, v)
+        g = rand(6, (n,))
+
+        def loss(h_, w_):
+            lp, _, _ = fused_ce(h_, w_, t)
+            return jnp.sum(lp * g)
+
+        dh, dw = jax.grad(loss, argnums=(0, 1))(h, w)
+        dh_r, dw_r = ref.ref_fused_ce_grads(h, w, t, g)
+        assert jnp.max(jnp.abs(dh - dh_r)) < 1e-4
+        assert jnp.max(jnp.abs(dw - dw_r)) < 1e-4
+
+    def test_direct_grad_kernel(self):
+        n, d, v = 32, 16, 128
+        h = rand(7, (n, d))
+        w = rand(8, (d, v), 0.1)
+        t = jax.random.randint(jax.random.PRNGKey(9), (n,), 0, v)
+        g = rand(10, (n,))
+        _, lse, _ = fused_ce(h, w, t)
+        dh, dw = fused_ce_grads(h, w, t, lse, g)
+        dh_r, dw_r = ref.ref_fused_ce_grads(h, w, t, g)
+        assert jnp.max(jnp.abs(dh - dh_r)) < 1e-4
+        assert jnp.max(jnp.abs(dw - dw_r)) < 1e-4
+
+    def test_entropy_nonnegative_and_bounded(self):
+        n, d, v = 32, 16, 256
+        h = rand(11, (n, d))
+        w = rand(12, (d, v), 0.05)
+        t = jnp.zeros((n,), jnp.int32)
+        _, _, ent = fused_ce(h, w, t)
+        assert bool(jnp.all(ent >= -1e-4))
+        assert bool(jnp.all(ent <= jnp.log(v) + 1e-4))
+
+    def test_metric_cotangents_ignored(self):
+        """lse/ent are metrics; grads must flow only through lp."""
+        n, d, v = 32, 16, 128
+        h = rand(13, (n, d))
+        w = rand(14, (d, v), 0.1)
+        t = jax.random.randint(jax.random.PRNGKey(15), (n,), 0, v)
+
+        def loss(h_):
+            lp, lse, ent = fused_ce(h_, w, t)
+            return jnp.sum(lp) + 0.0 * jnp.sum(lse) + 0.0 * jnp.sum(ent)
+
+        dh = jax.grad(loss)(h)
+        dh_r, _ = ref.ref_fused_ce_grads(h, w, t, jnp.ones((n,)))
+        assert jnp.max(jnp.abs(dh - dh_r)) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# fused Adam
+
+
+class TestFusedAdam:
+    @settings(max_examples=10, deadline=None)
+    @given(
+        n=st.integers(min_value=1, max_value=2000),
+        step=st.integers(min_value=1, max_value=100),
+        lr=st.sampled_from([0.0, 1e-4, 1e-2]),
+    )
+    def test_matches_ref(self, n, step, lr):
+        p = rand(n, (n,))
+        g = rand(n + 1, (n,))
+        m = rand(n + 2, (n,), 0.1)
+        v = jnp.abs(rand(n + 3, (n,), 0.1))
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        bc1, bc2 = 1 - b1**step, 1 - b2**step
+        hyper = jnp.array([lr, b1, b2, eps, bc1, bc2], jnp.float32)
+        p2, m2, v2 = adam_update_flat(p, g, m, v, hyper)
+        pr, mr, vr = ref.ref_adam(p, g, m, v, lr, b1, b2, eps, bc1, bc2)
+        assert jnp.max(jnp.abs(p2 - pr)) < 1e-5
+        assert jnp.max(jnp.abs(m2 - mr)) < 1e-5
+        assert jnp.max(jnp.abs(v2 - vr)) < 1e-5
+
+    def test_lr_zero_is_identity_on_params(self):
+        """lr=0 dummy learning (Tables 1-2) must leave params untouched."""
+        p = rand(1, (257,))
+        g = rand(2, (257,))
+        m = jnp.zeros_like(p)
+        v = jnp.zeros_like(p)
+        hyper = jnp.array([0.0, 0.9, 0.999, 1e-8, 0.1, 1e-3], jnp.float32)
+        p2, m2, v2 = adam_update_flat(p, g, m, v, hyper)
+        assert jnp.max(jnp.abs(p2 - p)) == 0.0
+        # but optimizer state still advances (as in the real system)
+        assert jnp.max(jnp.abs(m2)) > 0.0
+
+    def test_tree_update_matches_flat(self):
+        tree_p = {"a": rand(1, (40, 3)), "b": rand(2, (7,))}
+        tree_g = {"a": rand(3, (40, 3)), "b": rand(4, (7,))}
+        tree_m = jax.tree_util.tree_map(jnp.zeros_like, tree_p)
+        tree_v = jax.tree_util.tree_map(jnp.zeros_like, tree_p)
+        hyper = jnp.array([1e-3, 0.9, 0.999, 1e-8, 0.1, 1e-3], jnp.float32)
+        p2, m2, v2 = adam_update_tree(tree_p, tree_g, tree_m, tree_v, hyper)
+        for k in tree_p:
+            pr, mr, vr = ref.ref_adam(
+                tree_p[k], tree_g[k], tree_m[k], tree_v[k], 1e-3, 0.9, 0.999, 1e-8, 0.1, 1e-3
+            )
+            assert jnp.max(jnp.abs(p2[k] - pr)) < 1e-6
+            assert jnp.max(jnp.abs(m2[k] - mr)) < 1e-6
+            assert jnp.max(jnp.abs(v2[k] - vr)) < 1e-6

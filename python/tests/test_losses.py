@@ -1,0 +1,234 @@
+"""L2 algorithm correctness: loss identities and one-step learning direction."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import losses, model
+from compile.losses import H_CLIP, H_LR, H_MU, H_TAU
+
+CFG = model.PRESETS["tiny"]
+B, T = 4, 64
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, jax.random.PRNGKey(42))
+
+
+@pytest.fixture(scope="module")
+def batch(params):
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, CFG.vocab_size)
+    mask = jnp.ones((B, T)).at[:, 0].set(0.0).at[:, :8].set(0.0)  # prompt of 8
+    lp, _ = model.token_logprobs(CFG, params, tokens)
+    return tokens, mask, lp
+
+
+def default_hyper(**kw):
+    h = {"lr": 1e-3, "beta1": 0.9, "beta2": 0.999, "adam_eps": 1e-8,
+         "clip_eps": 0.2, "tau_or_beta": 1.0, "mu": 0.1, "kl_coef": 0.0}
+    h.update(kw)
+    return jnp.array(list(h.values()), jnp.float32)
+
+
+def zeros_like_tree(t):
+    return jax.tree_util.tree_map(jnp.zeros_like, t)
+
+
+class TestGRPO:
+    def test_on_policy_loss_gradient_direction(self, params, batch):
+        """A step with +adv on seq 0 / -adv on seq 1 must raise lp(seq0) and
+        lower lp(seq1)."""
+        tokens, mask, lp = batch
+        adv = jnp.array([2.0, -2.0, 0.0, 0.0])
+        step = losses.make_train_step(CFG, "grpo")
+        m, v = zeros_like_tree(params), zeros_like_tree(params)
+        hyper = default_hyper(lr=5e-3)
+        p2, *_ = jax.jit(step)(params, m, v, jnp.float32(1), hyper, tokens, mask, adv, lp)
+        lp2, _ = model.token_logprobs(CFG, p2, tokens)
+        seq = lambda l: jnp.sum(l * mask, axis=1)
+        assert float(seq(lp2)[0]) > float(seq(lp)[0])
+        assert float(seq(lp2)[1]) < float(seq(lp)[1])
+
+    def test_on_policy_zero_mean_adv_gives_zero_pg(self, params, batch):
+        """At ratio==1, pg loss = -mean(adv) over mask; group-centred adv -> 0."""
+        tokens, mask, lp = batch
+        adv = jnp.array([1.0, -1.0, 0.5, -0.5])
+        loss, metrics = losses.grpo_loss(CFG, params, default_hyper(), tokens, mask, adv, lp)
+        assert abs(float(metrics[2])) < 1e-5  # KL(new||old) == 0 on-policy
+        assert abs(float(loss)) < 1e-4
+
+    def test_clipping_limits_offpolicy_update(self, params, batch):
+        tokens, mask, lp = batch
+        adv = jnp.ones((B,))
+        # very off-policy old_lp -> ratios far from 1 -> clip_frac high
+        old_lp = lp - 2.0 * mask
+        _, metrics = losses.grpo_loss(CFG, params, default_hyper(), tokens, mask, adv, old_lp)
+        assert float(metrics[3]) > 0.9  # clip_frac
+
+    def test_metrics_finite(self, params, batch):
+        tokens, mask, lp = batch
+        adv = jnp.array([1.0, -1.0, 2.0, 0.0])
+        _, metrics = losses.grpo_loss(CFG, params, default_hyper(), tokens, mask, adv, lp)
+        assert bool(jnp.all(jnp.isfinite(metrics)))
+
+
+class TestSFT:
+    def test_nll_decreases(self, params, batch):
+        tokens, mask, lp = batch
+        step = losses.make_train_step(CFG, "sft")
+        m, v = zeros_like_tree(params), zeros_like_tree(params)
+        p, hyper = params, default_hyper(lr=5e-3)
+        nll0 = -float(losses.masked_mean(lp, mask))
+        for i in range(3):
+            p, m, v, metrics = jax.jit(step)(p, m, v, jnp.float32(i + 1), hyper, tokens, mask)
+        lp2, _ = model.token_logprobs(CFG, p, tokens)
+        assert -float(losses.masked_mean(lp2, mask)) < nll0
+
+
+class TestDummyLearning:
+    """lr=0 'dummy learning' (Tables 1-2): full compute, frozen params."""
+
+    @pytest.mark.parametrize("alg,group", [("grpo", 1), ("sft", 1), ("opmd_simple", 4)])
+    def test_lr0_freezes_params(self, params, batch, alg, group):
+        tokens, mask, lp = batch
+        step = losses.make_train_step(CFG, alg, group_size=group)
+        m, v = zeros_like_tree(params), zeros_like_tree(params)
+        hyper = default_hyper(lr=0.0)
+        data = {
+            "grpo": (tokens, mask, jnp.ones((B,)), lp),
+            "sft": (tokens, mask),
+            "opmd_simple": (tokens, mask, jnp.array([1.0, 0.0, 0.5, 0.2]), lp),
+        }[alg]
+        p2, m2, _, metrics = jax.jit(step)(params, m, v, jnp.float32(1), hyper, *data)
+        for k in params:
+            assert float(jnp.max(jnp.abs(p2[k] - params[k]))) == 0.0
+        assert bool(jnp.all(jnp.isfinite(metrics)))
+
+
+class TestDPO:
+    def test_margin_improves(self, params):
+        tc = jax.random.randint(jax.random.PRNGKey(2), (2, T), 0, CFG.vocab_size)
+        tr = jax.random.randint(jax.random.PRNGKey(3), (2, T), 0, CFG.vocab_size)
+        mask = jnp.ones((2, T)).at[:, 0].set(0.0)
+        lp_c, _ = model.token_logprobs(CFG, params, tc)
+        lp_r, _ = model.token_logprobs(CFG, params, tr)
+        ref_c = jnp.sum(lp_c * mask, axis=1)
+        ref_r = jnp.sum(lp_r * mask, axis=1)
+        step = losses.make_train_step(CFG, "dpo")
+        m, v = zeros_like_tree(params), zeros_like_tree(params)
+        hyper = default_hyper(lr=5e-3, tau_or_beta=0.5)
+        p = params
+        for i in range(3):
+            p, m, v, metrics = jax.jit(step)(
+                p, m, v, jnp.float32(i + 1), hyper, tc, mask, tr, mask, ref_c, ref_r
+            )
+        lp_c2, _ = model.token_logprobs(CFG, p, tc)
+        lp_r2, _ = model.token_logprobs(CFG, p, tr)
+        margin = jnp.sum(lp_c2 * mask, axis=1) - ref_c - (jnp.sum(lp_r2 * mask, axis=1) - ref_r)
+        assert float(jnp.min(margin)) > 0.0
+
+    def test_zero_margin_gives_log2(self, params):
+        """Identical chosen/rejected -> loss == log 2."""
+        tc = jax.random.randint(jax.random.PRNGKey(4), (2, T), 0, CFG.vocab_size)
+        mask = jnp.ones((2, T)).at[:, 0].set(0.0)
+        lp, _ = model.token_logprobs(CFG, params, tc)
+        ref = jnp.sum(lp * mask, axis=1)
+        loss, _ = losses.dpo_loss(CFG, params, default_hyper(tau_or_beta=0.5), tc, mask, tc, mask, ref, ref)
+        assert abs(float(loss) - float(jnp.log(2.0))) < 1e-5
+
+
+class TestMIX:
+    def test_mu_zero_equals_grpo(self, params, batch):
+        tokens, mask, lp = batch
+        adv = jnp.array([1.0, -1.0, 0.5, -0.5])
+        is_expert = jnp.zeros((B,))
+        hyper = default_hyper(mu=0.0)
+        l_mix, _ = losses.mix_loss(CFG, params, hyper, tokens, mask, adv, lp, is_expert)
+        l_grpo, _ = losses.grpo_loss(CFG, params, hyper, tokens, mask, adv, lp)
+        assert abs(float(l_mix) - float(l_grpo)) < 1e-5
+
+    def test_mu_one_equals_sft_on_experts(self, params, batch):
+        tokens, mask, lp = batch
+        adv = jnp.zeros((B,))
+        is_expert = jnp.ones((B,))
+        hyper = default_hyper(mu=1.0)
+        l_mix, _ = losses.mix_loss(CFG, params, hyper, tokens, mask, adv, lp, is_expert)
+        l_sft, _ = losses.sft_loss(CFG, params, hyper, tokens, mask)
+        assert abs(float(l_mix) - float(l_sft)) < 1e-5
+
+    def test_expert_frac_metric(self, params, batch):
+        tokens, mask, lp = batch
+        is_expert = jnp.array([1.0, 0.0, 1.0, 0.0])
+        _, metrics = losses.mix_loss(
+            CFG, params, default_hyper(), tokens, mask, jnp.zeros((B,)), lp, is_expert
+        )
+        assert abs(float(metrics[6]) - 0.5) < 1e-6
+
+
+class TestOPMD:
+    """Appendix A: the three OPMD variants."""
+
+    def test_pairwise_identity(self):
+        """K*sum(a^2) - (sum a)^2 == sum_{i<j} (a_i - a_j)^2."""
+        a = jax.random.normal(jax.random.PRNGKey(0), (7,))
+        k = 7
+        lhs = k * jnp.sum(a**2) - jnp.sum(a) ** 2
+        rhs = sum(float((a[i] - a[j]) ** 2) for i in range(k) for j in range(i + 1, k))
+        assert abs(float(lhs) - rhs) < 1e-4
+
+    def test_simple_opmd_equals_scaled_pg_at_theta_t(self, params, batch):
+        """Appendix A.3: at theta=theta_t the OPMD-simple gradient equals the
+        group-baseline policy gradient scaled by 1/(1+tau)."""
+        tokens, mask, lp = batch
+        rewards = jnp.array([1.0, 0.0, 0.5, 0.25])
+        tau = 1.0
+
+        def opmd(p):
+            return losses.opmd_simple_loss(
+                CFG, p, default_hyper(tau_or_beta=tau), tokens, mask, rewards, lp, group_size=4
+            )[0]
+
+        def vanilla_pg(p):
+            lp_new, _ = model.token_logprobs(CFG, p, tokens)
+            seq_lp = jnp.sum(lp_new * mask, axis=1)
+            adv = rewards - jnp.mean(rewards)
+            return -jnp.mean(adv * seq_lp)
+
+        g1 = jax.grad(opmd)(params)
+        g2 = jax.grad(vanilla_pg)(params)
+        for k in params:
+            assert float(jnp.max(jnp.abs(g1[k] * (1.0 + tau) - g2[k]))) < 1e-5
+
+    def test_kimi_opmd_zero_loss_at_consistency(self, params, batch):
+        """If rewards are constant within the group and theta==theta_t, the
+        residual reduces to r - logZ = 0 (logZ = r for constant rewards)."""
+        tokens, mask, lp = batch
+        rewards = jnp.full((B,), 0.7)
+        loss, _ = losses.opmd_kimi_loss(
+            CFG, params, default_hyper(tau_or_beta=1.0), tokens, mask, rewards, lp, group_size=4
+        )
+        assert abs(float(loss)) < 1e-6
+
+    def test_pairwise_opmd_learning_direction(self, params, batch):
+        tokens, mask, lp = batch
+        rewards = jnp.array([1.0, 0.0, 0.0, 0.0])
+        step = losses.make_train_step(CFG, "opmd_pairwise", group_size=4)
+        m, v = zeros_like_tree(params), zeros_like_tree(params)
+        p2, *_ = jax.jit(step)(
+            params, m, v, jnp.float32(1), default_hyper(lr=5e-3), tokens, mask, rewards, lp
+        )
+        lp2, _ = model.token_logprobs(CFG, p2, tokens)
+        seq = lambda l: jnp.sum(l * mask, axis=1)
+        # the rewarded sequence's logprob should rise relative to the others
+        delta = seq(lp2) - seq(lp)
+        assert float(delta[0]) > float(jnp.max(delta[1:]))
+
+    @pytest.mark.parametrize("alg", ["opmd_kimi", "opmd_pairwise", "opmd_simple"])
+    def test_all_variants_finite(self, params, batch, alg):
+        tokens, mask, lp = batch
+        rewards = jnp.array([1.0, -1.0, 0.5, 0.0])
+        fn = losses.ALGORITHMS[alg][0]
+        loss, metrics = fn(CFG, params, default_hyper(), tokens, mask, rewards, lp, group_size=4)
+        assert bool(jnp.isfinite(loss))
+        assert bool(jnp.all(jnp.isfinite(metrics)))

@@ -1,0 +1,162 @@
+"""L2 model correctness: shapes, decode/prefill consistency, logprob semantics."""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.model import PRESETS
+
+CFG = PRESETS["tiny"]
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(CFG, jax.random.PRNGKey(0))
+
+
+def toks(key, b, t):
+    return jax.random.randint(jax.random.PRNGKey(key), (b, t), 0, CFG.vocab_size)
+
+
+class TestForward:
+    def test_hidden_shape(self, params):
+        h = model.forward_hidden(CFG, params, toks(0, 2, 32))
+        assert h.shape == (2, 32, CFG.d_model)
+        assert bool(jnp.all(jnp.isfinite(h)))
+
+    def test_param_count_matches_spec(self, params):
+        total = sum(p.size for p in params.values())
+        assert total == CFG.param_count()
+
+    def test_param_order_is_sorted(self, params):
+        leaves = jax.tree_util.tree_flatten_with_path(params)[0]
+        names = [jax.tree_util.keystr(p, simple=True, separator="/") for p, _ in leaves]
+        assert names == sorted(names)
+        assert names == [n for n, _, _ in model.param_shapes(CFG)]
+
+    def test_causality_of_forward(self, params):
+        """Changing token t must not change hidden states before t."""
+        t1 = toks(1, 1, 32)
+        t2 = t1.at[0, 20].set((t1[0, 20] + 1) % CFG.vocab_size)
+        h1 = model.forward_hidden(CFG, params, t1)
+        h2 = model.forward_hidden(CFG, params, t2)
+        assert jnp.max(jnp.abs(h1[:, :20] - h2[:, :20])) < 1e-5
+        assert jnp.max(jnp.abs(h1[:, 20:] - h2[:, 20:])) > 1e-4
+
+
+class TestLogprobs:
+    def test_shapes_and_first_column_zero(self, params):
+        lp, ent = model.token_logprobs(CFG, params, toks(2, 4, 64))
+        assert lp.shape == (4, 64) and ent.shape == (4, 64)
+        assert jnp.max(jnp.abs(lp[:, 0])) == 0.0
+
+    def test_logprobs_nonpositive(self, params):
+        lp, _ = model.token_logprobs(CFG, params, toks(3, 2, 32))
+        assert bool(jnp.all(lp <= 1e-6))
+
+    def test_matches_naive_softmax(self, params):
+        tokens = toks(4, 2, 32)
+        lp, _ = model.token_logprobs(CFG, params, tokens)
+        h = model.forward_hidden(CFG, params, tokens)
+        logits = h @ params["unembed"]
+        naive = jax.nn.log_softmax(logits, axis=-1)
+        for b in range(2):
+            for j in range(1, 32):
+                assert abs(float(lp[b, j]) - float(naive[b, j - 1, tokens[b, j]])) < 1e-4
+
+    def test_entropy_no_gradient(self, params):
+        tokens = toks(5, 2, 32)
+
+        def f(p):
+            _, ent = model.token_logprobs(CFG, p, tokens)
+            return jnp.sum(ent)
+
+        g = jax.grad(f)(params)
+        assert all(float(jnp.max(jnp.abs(v))) == 0.0 for v in jax.tree_util.tree_leaves(g))
+
+
+class TestGeneration:
+    def test_prefill_decode_consistency(self, params):
+        """Greedy path through prefill+decode == full forward logits."""
+        b, tp, tc = 4, 32, 64
+        tokens = toks(6, b, tp)
+        lens = jnp.array([5, 9, 12, 3], jnp.int32)
+        last_logits, kc, vc = model.prefill(CFG, params, tokens, lens, tc)
+        h = model.forward_hidden(CFG, params, tokens)
+        for i in range(b):
+            expected = h[i, lens[i] - 1] @ params["unembed"]
+            assert jnp.max(jnp.abs(last_logits[i] - expected)) < 1e-4
+
+    def test_multistep_decode_matches_forward(self, params):
+        """Decode 5 tokens sequentially; logits match a fresh full forward."""
+        b, tp, tc = 4, 32, 64
+        prompt = toks(7, b, tp)
+        lens = jnp.array([4, 7, 10, 6], jnp.int32)
+        _, kc, vc = model.prefill(CFG, params, prompt, lens, tc)
+        seq = prompt
+        pos = lens
+        decode = functools.partial(model.decode_step, CFG)
+        new_tokens = jax.random.randint(jax.random.PRNGKey(8), (5, b), 0, CFG.vocab_size)
+        for s in range(5):
+            nt = new_tokens[s]
+            logits, kc, vc = decode(params, kc, vc, nt, pos)
+            for i in range(b):
+                seq = seq.at[i, pos[i]].set(nt[i])
+            # reference: full forward over the written sequence
+            h = model.forward_hidden(CFG, params, seq)
+            for i in range(b):
+                expected = h[i, pos[i]] @ params["unembed"]
+                assert jnp.max(jnp.abs(logits[i] - expected)) < 2e-4, f"step {s} seq {i}"
+            pos = pos + 1
+
+    def test_per_sequence_positions_independent(self, params):
+        """Continuous batching: sequences at different positions don't interfere."""
+        b, tp, tc = 4, 32, 64
+        prompt = toks(9, b, tp)
+        lens = jnp.array([3, 30, 15, 8], jnp.int32)
+        _, kc, vc = model.prefill(CFG, params, prompt, lens, tc)
+        nt = jnp.array([1, 2, 3, 4], jnp.int32)
+        logits, _, _ = model.decode_step(CFG, params, kc, vc, nt, lens)
+        assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+class TestEmbed:
+    def test_shape_and_norm(self, params):
+        emb = model.pooled_embed(CFG, params, toks(10, 4, 64), jnp.ones((4, 64)))
+        assert emb.shape == (4, CFG.d_model)
+        norms = jnp.linalg.norm(emb, axis=-1)
+        assert jnp.max(jnp.abs(norms - 1.0)) < 1e-5
+
+    def test_mask_excludes_positions(self, params):
+        tokens = toks(11, 2, 64)
+        mask_full = jnp.ones((2, 64))
+        mask_half = mask_full.at[:, 32:].set(0.0)
+        e1 = model.pooled_embed(CFG, params, tokens, mask_half)
+        # changing masked-out tokens must not change the embedding
+        tokens2 = tokens.at[:, 40:].set(0)
+        e2 = model.pooled_embed(CFG, params, tokens2, mask_half)
+        # (hidden states at masked positions still differ, but causality means
+        # positions < 32 are unaffected by edits at >= 40)
+        assert jnp.max(jnp.abs(e1 - e2)) < 1e-5
+
+    def test_identical_sequences_have_cosine_one(self, params):
+        tokens = jnp.tile(toks(12, 1, 64), (4, 1))
+        emb = model.pooled_embed(CFG, params, tokens, jnp.ones((4, 64)))
+        sims = emb @ emb.T
+        assert jnp.min(sims) > 1.0 - 1e-5
+
+
+class TestPresets:
+    @pytest.mark.parametrize("name", ["tiny", "small", "base", "large"])
+    def test_preset_sanity(self, name):
+        cfg = PRESETS[name]
+        assert cfg.d_model % cfg.n_heads == 0
+        assert cfg.head_dim % 2 == 0  # RoPE needs even head dim
+        assert cfg.vocab_size % 128 == 0  # fused-CE vocab tile
+        assert cfg.max_seq % 32 == 0  # attention q/k tiles
+
+    def test_large_is_roughly_100m(self):
+        assert 80e6 < PRESETS["large"].param_count() < 150e6

@@ -1,0 +1,71 @@
+//! Appendix A: the three OPMD variants in the bandit setting, plus the
+//! paper's punchline identity — the "embarrassingly simple" variant's
+//! gradient equals the group-baseline policy gradient scaled by 1/(1+tau)
+//! even off-policy.
+
+use trinity_rft::envs::bandit::{
+    run_learning, sample_group, surrogate_grad, Bandit, OpmdVariant, SoftmaxPolicy,
+};
+use trinity_rft::util::benchkit::{scaled, sparkline, write_json, Table};
+use trinity_rft::util::json::Value;
+use trinity_rft::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let steps = scaled(400);
+    let group = 8;
+    let tau = 1.0;
+    let bandit = Bandit::new(vec![0.1, 0.3, 0.9, 0.2, 0.5], 0.1);
+    println!("Appendix A reproduction: bandit arms {:?}, {steps} steps", bandit.means);
+
+    // 1. gradient identity check (exact, Appendix A.3)
+    let policy = SoftmaxPolicy { logits: vec![0.2, -0.1, 0.4, 0.0, -0.3] };
+    let mut rng = Rng::new(7);
+    let g = sample_group(&bandit, &policy, group, &mut rng);
+    let g_simple = surrogate_grad(OpmdVariant::Simple, &policy, &g, tau);
+    let g_pg = surrogate_grad(OpmdVariant::VanillaPg, &policy, &g, tau);
+    let max_err = g_simple
+        .iter()
+        .zip(&g_pg)
+        .map(|(a, b)| (a * (1.0 + tau) - b).abs())
+        .fold(0.0f64, f64::max);
+    println!("identity check: max |(1+tau)*grad_simple - grad_pg| = {max_err:.2e}");
+    assert!(max_err < 1e-10);
+
+    // 2. learning curves per variant x staleness
+    let mut table = Table::new(
+        "Appendix A — OPMD variants (expected reward, final 5%)",
+        &["Variant", "on-policy", "staleness=5", "staleness=20"],
+    );
+    let mut curves_out = Vec::new();
+    for (name, v) in [
+        ("OPMD (Kimi)", OpmdVariant::Kimi),
+        ("OPMD (pairwise)", OpmdVariant::Pairwise),
+        ("OPMD (simple)", OpmdVariant::Simple),
+        ("vanilla PG", OpmdVariant::VanillaPg),
+    ] {
+        let mut cells = vec![name.to_string()];
+        for staleness in [0usize, 5, 20] {
+            let curve = run_learning(v, &bandit, steps, group, 0.3, tau, staleness, 21);
+            let tail = &curve[steps - steps / 20..];
+            let final_r = tail.iter().sum::<f64>() / tail.len() as f64;
+            cells.push(format!("{final_r:.3}"));
+            if staleness == 0 {
+                println!("{name:<16} {}", sparkline(&curve));
+            }
+            curves_out.push(Value::obj(vec![
+                ("variant", Value::str(name)),
+                ("staleness", Value::num(staleness as f64)),
+                ("final_reward", Value::num(final_r)),
+            ]));
+        }
+        table.row(cells);
+    }
+    table.print();
+    write_json("appendixA_opmd_bandit", &Value::arr(curves_out));
+    println!(
+        "\npaper shape check: all variants approach the best arm (0.9) on-policy;\n\
+         the simple variant (== scaled PG) remains a feasible ascent direction\n\
+         under stale rollouts (Appendix A's surprising conclusion)."
+    );
+    Ok(())
+}

@@ -1,0 +1,106 @@
+//! Micro-bench: experience buffer throughput (queue vs persistent store
+//! vs priority view) under concurrent writers — the substrate numbers
+//! behind the modes' pipeline behavior.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use trinity_rft::buffer::{
+    Experience, ExperienceBuffer, FileStore, PriorityBuffer, QueueBuffer, UtilityWeights,
+};
+use trinity_rft::util::benchkit::{scaled, write_json, Table};
+use trinity_rft::util::json::Value;
+
+fn exp(i: usize) -> Experience {
+    let mut e = Experience::new(&format!("t{i}"), vec![1; 64], 8, (i % 2) as f32);
+    e.logprobs = vec![-0.5; 64];
+    e
+}
+
+fn bench_writes(buffer: &dyn ExperienceBuffer, n: usize) -> f64 {
+    let start = Instant::now();
+    for i in 0..n {
+        buffer.write(vec![exp(i)]).unwrap();
+    }
+    n as f64 / start.elapsed().as_secs_f64()
+}
+
+fn bench_reads(buffer: &dyn ExperienceBuffer, n: usize) -> f64 {
+    let start = Instant::now();
+    let mut got = 0;
+    while got < n {
+        got += buffer.read(64.min(n - got), Duration::from_secs(1)).unwrap().len();
+    }
+    n as f64 / start.elapsed().as_secs_f64()
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = scaled(20_000);
+    let mut table = Table::new(
+        "buffer micro-benchmarks",
+        &["buffer", "write/s", "read/s", "concurrent write/s"],
+    );
+
+    // queue
+    let q = QueueBuffer::new(n + 1);
+    let wq = bench_writes(&q, n);
+    let rq = bench_reads(&q, n);
+    let qc = Arc::new(QueueBuffer::new(n + 1));
+    let start = Instant::now();
+    let handles: Vec<_> = (0..4)
+        .map(|w| {
+            let q = Arc::clone(&qc);
+            std::thread::spawn(move || {
+                for i in 0..n / 4 {
+                    q.write(vec![exp(w * 1_000_000 + i)]).unwrap();
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let wqc = (n / 4 * 4) as f64 / start.elapsed().as_secs_f64();
+    table.row(vec![
+        "queue (ray.Queue analog)".into(),
+        format!("{wq:.0}"),
+        format!("{rq:.0}"),
+        format!("{wqc:.0}"),
+    ]);
+
+    // persistent store
+    let path = std::env::temp_dir().join(format!("trft_bench_store_{}", std::process::id()));
+    let _ = std::fs::remove_file(&path);
+    let s = FileStore::open(&path)?;
+    let ws = bench_writes(&s, n);
+    let rs = bench_reads(&s, n);
+    table.row(vec![
+        "file store (SQLite analog)".into(),
+        format!("{ws:.0}"),
+        format!("{rs:.0}"),
+        "-".into(),
+    ]);
+    let _ = std::fs::remove_file(&path);
+
+    // priority view
+    let p = PriorityBuffer::new(UtilityWeights::default(), 1_000_000);
+    let start = Instant::now();
+    p.insert((0..n).map(exp).collect());
+    let wp = n as f64 / start.elapsed().as_secs_f64();
+    let start = Instant::now();
+    let mut got = 0;
+    while got < n {
+        got += p.sample_top(64, 0)?.len();
+    }
+    let rp = n as f64 / start.elapsed().as_secs_f64();
+    table.row(vec![
+        "priority view".into(),
+        format!("{wp:.0}"),
+        format!("{rp:.0}"),
+        "-".into(),
+    ]);
+
+    table.print();
+    write_json("micro_buffer", &table.to_json());
+    Ok(())
+}

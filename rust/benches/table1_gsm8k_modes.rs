@@ -1,0 +1,97 @@
+//! Table 1: performance profiling for GSM8k across RFT modes.
+//!
+//! Dummy learning (lr=0) exactly as in the paper, so rollout distribution
+//! is identical across modes; we report speedup vs the strictly-on-policy
+//! synchronous mode, wall time, explorer utilization (the GPU-util analog)
+//! and PJRT busy fraction (the GPU-power analog).
+//!
+//! Scale: `TRINITY_BENCH_SCALE` multiplies the 10-step default;
+//! `TRINITY_BENCH_PRESETS=tiny,small` selects model sizes (the paper's
+//! 1.5B vs 7B sweep).
+
+use trinity_rft::coordinator::{RftConfig, RftSession};
+use trinity_rft::util::benchkit::{env_usize, scaled, write_json, Table};
+use trinity_rft::util::json::Value;
+use trinity_rft::util::timeseries::{fmt_mean_std, summarize};
+
+struct ModeSpec {
+    label: &'static str,
+    mode: &'static str,
+    interval: u64,
+    offset: u64,
+}
+
+const MODES: &[ModeSpec] = &[
+    ModeSpec { label: "Sync (interval=1)", mode: "both", interval: 1, offset: 0 },
+    ModeSpec { label: "Sync (interval=2)", mode: "both", interval: 2, offset: 0 },
+    ModeSpec { label: "Sync (interval=10)", mode: "both", interval: 10, offset: 0 },
+    ModeSpec { label: "One-step off-policy", mode: "both", interval: 1, offset: 1 },
+    ModeSpec { label: "Fully async.", mode: "async", interval: 10, offset: 0 },
+];
+
+fn run_once(preset: &str, spec: &ModeSpec, steps: u64, seed: u64) -> anyhow::Result<(f64, f64, f64)> {
+    let mut cfg = RftConfig::default();
+    cfg.mode = spec.mode.into();
+    cfg.model_preset = preset.into();
+    cfg.sync_interval = spec.interval;
+    cfg.sync_offset = spec.offset;
+    cfg.total_steps = steps;
+    cfg.dummy_learning = true; // paper's profiling methodology
+    cfg.batch_tasks = 1;
+    cfg.repeat_times = if preset == "small" { 8 } else { 4 };
+    cfg.max_new_tokens = 6;
+    cfg.seed = seed;
+    let mut session = RftSession::build(cfg, None, None)?;
+    let report = session.run()?;
+    Ok((report.wall_s, report.explorer_util, report.device_busy))
+}
+
+fn main() -> anyhow::Result<()> {
+    trinity_rft::util::logging::init_from_env();
+    let steps = scaled(10) as u64;
+    let trials = env_usize("TRINITY_BENCH_TRIALS", 2);
+    let presets_env =
+        std::env::var("TRINITY_BENCH_PRESETS").unwrap_or_else(|_| "tiny".to_string());
+    let presets: Vec<&str> = presets_env.split(',').collect();
+    println!("Table 1 reproduction: {steps} dummy-learning steps x {trials} trials");
+
+    let mut all = Vec::new();
+    for preset in &presets {
+        let mut table = Table::new(
+            &format!("Table 1 — GSM8k profiling ({preset} preset)"),
+            &["Mode", "Speedup", "Time (s)", "Util (%)", "Busy (%)"],
+        );
+        let mut baseline_time = None;
+        for spec in MODES {
+            let mut times = vec![];
+            let mut utils = vec![];
+            let mut busys = vec![];
+            for trial in 0..trials {
+                let (t, u, b) = run_once(preset, spec, steps, 100 + trial as u64)?;
+                times.push(t);
+                utils.push(u);
+                busys.push(b);
+            }
+            let t = summarize(&times);
+            if baseline_time.is_none() {
+                baseline_time = Some(t.mean);
+            }
+            let speedup = baseline_time.unwrap() / t.mean;
+            table.row(vec![
+                spec.label.to_string(),
+                format!("{speedup:.2}x"),
+                fmt_mean_std(&t),
+                fmt_mean_std(&summarize(&utils)),
+                fmt_mean_std(&summarize(&busys)),
+            ]);
+        }
+        table.print();
+        all.push(table.to_json());
+    }
+    write_json("table1_gsm8k_modes", &Value::arr(all));
+    println!(
+        "\npaper shape check: speedup should grow with sync_interval; one-step\n\
+         off-policy and fully-async should beat strict on-policy (Table 1)."
+    );
+    Ok(())
+}

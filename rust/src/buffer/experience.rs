@@ -1,0 +1,318 @@
+//! Experience schema (the paper's ExperienceModel) and its JSON codec for
+//! the persistent store.
+//!
+//! One experience = one packed token sequence: prompt + response(s), with
+//! per-token rollout log-probs, a loss mask (1 where the token belongs to
+//! the training objective — multi-turn workflows mask out observation
+//! tokens), a possibly-delayed reward, and lineage/provenance metadata.
+//! DPO preference pairs reuse the schema: two experiences sharing a
+//! `pair_id`, roles "chosen"/"rejected" (the DPODataModel analog).
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Value;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Source {
+    Explorer,
+    Expert,
+    Human,
+    Synthetic,
+}
+
+impl Source {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Source::Explorer => "explorer",
+            Source::Expert => "expert",
+            Source::Human => "human",
+            Source::Synthetic => "synthetic",
+        }
+    }
+    pub fn parse(s: &str) -> Result<Source> {
+        Ok(match s {
+            "explorer" => Source::Explorer,
+            "expert" => Source::Expert,
+            "human" => Source::Human,
+            "synthetic" => Source::Synthetic,
+            other => bail!("unknown source '{other}'"),
+        })
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Experience {
+    /// Unique id (assigned by the buffer on write if 0).
+    pub id: u64,
+    /// Task that produced this rollout.
+    pub task_id: String,
+    /// Group id: rollouts of the same task share it (GRPO advantages).
+    pub group: u64,
+    /// Packed token sequence (prompt + response, multi-turn compacted).
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    /// Per-token rollout log-probs aligned with `tokens` (0 outside mask).
+    pub logprobs: Vec<f32>,
+    /// 1.0 where the token enters the RL objective.
+    pub loss_mask: Vec<f32>,
+    /// Reward; meaningful once `ready`.
+    pub reward: f32,
+    /// Delayed-reward support: not-ready experiences are invisible to
+    /// readers until the environment's signal arrives.
+    pub ready: bool,
+    pub source: Source,
+    /// Rollout model weight version (staleness tracking).
+    pub model_version: u64,
+    /// Lineage: id of the experience this one was derived from, if any.
+    pub parent_id: Option<u64>,
+    /// Priority score for utility-based sampling.
+    pub utility: f64,
+    /// Times this experience has been sampled for training.
+    pub reuse_count: u32,
+    /// Free-form metadata (env rounds, quality scores, annotator ids, ...).
+    pub metadata: Value,
+}
+
+impl Experience {
+    pub fn new(task_id: &str, tokens: Vec<i32>, prompt_len: usize, reward: f32) -> Experience {
+        let n = tokens.len();
+        let mut loss_mask = vec![0.0; n];
+        for m in loss_mask.iter_mut().skip(prompt_len) {
+            *m = 1.0;
+        }
+        Experience {
+            id: 0,
+            task_id: task_id.to_string(),
+            group: 0,
+            tokens,
+            prompt_len,
+            logprobs: vec![0.0; n],
+            loss_mask,
+            reward,
+            ready: true,
+            source: Source::Explorer,
+            model_version: 0,
+            parent_id: None,
+            utility: 0.0,
+            reuse_count: 0,
+            metadata: Value::Object(vec![]),
+        }
+    }
+
+    pub fn response_len(&self) -> usize {
+        self.loss_mask.iter().filter(|&&m| m > 0.0).count()
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Sum of masked rollout log-probs (sequence log-prob under the
+    /// rollout policy).
+    pub fn rollout_seq_logprob(&self) -> f32 {
+        self.logprobs.iter().zip(&self.loss_mask).map(|(l, m)| l * m).sum()
+    }
+
+    pub fn meta_f64(&self, key: &str) -> Option<f64> {
+        self.metadata.get(key).and_then(Value::as_f64)
+    }
+
+    pub fn set_meta(&mut self, key: &str, v: Value) {
+        if !matches!(self.metadata, Value::Object(_)) {
+            self.metadata = Value::Object(vec![]);
+        }
+        self.metadata.set(key, v);
+    }
+
+    // -- JSON codec ----------------------------------------------------------
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("id", Value::num(self.id as f64)),
+            ("task_id", Value::str(self.task_id.clone())),
+            ("group", Value::num(self.group as f64)),
+            ("tokens", Value::arr(self.tokens.iter().map(|&t| Value::int(t as i64)).collect())),
+            ("prompt_len", Value::int(self.prompt_len as i64)),
+            ("logprobs", Value::arr(self.logprobs.iter().map(|&l| Value::num(l as f64)).collect())),
+            (
+                "loss_mask",
+                Value::arr(self.loss_mask.iter().map(|&m| Value::num(m as f64)).collect()),
+            ),
+            ("reward", Value::num(self.reward as f64)),
+            ("ready", Value::Bool(self.ready)),
+            ("source", Value::str(self.source.as_str())),
+            ("model_version", Value::num(self.model_version as f64)),
+            (
+                "parent_id",
+                self.parent_id.map(|p| Value::num(p as f64)).unwrap_or(Value::Null),
+            ),
+            ("utility", Value::num(self.utility)),
+            ("reuse_count", Value::int(self.reuse_count as i64)),
+            ("metadata", self.metadata.clone()),
+        ])
+    }
+
+    pub fn from_json(v: &Value) -> Result<Experience> {
+        let f32s = |key: &str| -> Result<Vec<f32>> {
+            Ok(v.get(key)
+                .and_then(Value::as_array)
+                .with_context(|| format!("experience field {key}"))?
+                .iter()
+                .filter_map(Value::as_f64)
+                .map(|x| x as f32)
+                .collect())
+        };
+        let tokens: Vec<i32> = v
+            .get("tokens")
+            .and_then(Value::as_array)
+            .context("tokens")?
+            .iter()
+            .filter_map(Value::as_i64)
+            .map(|t| t as i32)
+            .collect();
+        Ok(Experience {
+            id: v.get("id").and_then(Value::as_f64).context("id")? as u64,
+            task_id: v.get("task_id").and_then(Value::as_str).context("task_id")?.to_string(),
+            group: v.get("group").and_then(Value::as_f64).unwrap_or(0.0) as u64,
+            prompt_len: v.get("prompt_len").and_then(Value::as_usize).context("prompt_len")?,
+            logprobs: f32s("logprobs")?,
+            loss_mask: f32s("loss_mask")?,
+            reward: v.get("reward").and_then(Value::as_f64).context("reward")? as f32,
+            ready: v.get("ready").and_then(Value::as_bool).unwrap_or(true),
+            source: Source::parse(v.get("source").and_then(Value::as_str).unwrap_or("explorer"))?,
+            model_version: v.get("model_version").and_then(Value::as_f64).unwrap_or(0.0) as u64,
+            parent_id: v.get("parent_id").and_then(Value::as_f64).map(|p| p as u64),
+            utility: v.get("utility").and_then(Value::as_f64).unwrap_or(0.0),
+            reuse_count: v.get("reuse_count").and_then(Value::as_i64).unwrap_or(0) as u32,
+            metadata: v.get("metadata").cloned().unwrap_or(Value::Object(vec![])),
+            tokens,
+        })
+    }
+}
+
+/// A batch grouped for training (helper used by sample strategies).
+#[derive(Debug, Default)]
+pub struct ExperienceBatch {
+    pub experiences: Vec<Experience>,
+}
+
+impl ExperienceBatch {
+    /// Group-mean-baseline advantages (GRPO): experiences sharing a group
+    /// id get `r - mean(group rewards)`, optionally std-normalized.
+    pub fn group_advantages(&self, normalize_std: bool) -> Vec<f32> {
+        use std::collections::HashMap;
+        let mut sums: HashMap<u64, (f32, f32, u32)> = HashMap::new();
+        for e in &self.experiences {
+            let s = sums.entry(e.group).or_default();
+            s.0 += e.reward;
+            s.1 += e.reward * e.reward;
+            s.2 += 1;
+        }
+        self.experiences
+            .iter()
+            .map(|e| {
+                let (sum, sq, n) = sums[&e.group];
+                let n = n as f32;
+                let mean = sum / n;
+                let mut adv = e.reward - mean;
+                if normalize_std && n > 1.0 {
+                    let var = (sq / n - mean * mean).max(0.0);
+                    adv /= var.sqrt() + 1e-4;
+                }
+                adv
+            })
+            .collect()
+    }
+
+    pub fn mean_reward(&self) -> f64 {
+        if self.experiences.is_empty() {
+            return 0.0;
+        }
+        self.experiences.iter().map(|e| e.reward as f64).sum::<f64>() / self.experiences.len() as f64
+    }
+
+    pub fn mean_response_len(&self) -> f64 {
+        if self.experiences.is_empty() {
+            return 0.0;
+        }
+        self.experiences.iter().map(|e| e.response_len() as f64).sum::<f64>()
+            / self.experiences.len() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Experience {
+        let mut e = Experience::new("t1", vec![1, 5, 6, 7, 2], 2, 0.5);
+        e.id = 42;
+        e.group = 3;
+        e.logprobs = vec![0.0, 0.0, -1.5, -0.5, -0.1];
+        e.model_version = 7;
+        e.parent_id = Some(41);
+        e.set_meta("quality", Value::num(0.8));
+        e
+    }
+
+    #[test]
+    fn default_mask_covers_response() {
+        let e = Experience::new("t", vec![1, 2, 3, 4, 5], 2, 0.0);
+        assert_eq!(e.loss_mask, vec![0.0, 0.0, 1.0, 1.0, 1.0]);
+        assert_eq!(e.response_len(), 3);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let e = sample();
+        let v = e.to_json();
+        let text = v.to_string_compact();
+        let parsed = Value::parse(&text).unwrap();
+        let back = Experience::from_json(&parsed).unwrap();
+        assert_eq!(back, e);
+    }
+
+    #[test]
+    fn rollout_seq_logprob_masks() {
+        let e = sample();
+        let expected: f32 = -1.5 - 0.5 - 0.1;
+        assert!((e.rollout_seq_logprob() - expected).abs() < 1e-6);
+    }
+
+    #[test]
+    fn group_advantages_zero_mean_per_group() {
+        let mut batch = ExperienceBatch::default();
+        for (g, r) in [(1u64, 1.0f32), (1, 0.0), (2, 0.5), (2, 0.7)] {
+            let mut e = Experience::new("t", vec![1, 2], 1, r);
+            e.group = g;
+            batch.experiences.push(e);
+        }
+        let adv = batch.group_advantages(false);
+        assert!((adv[0] + adv[1]).abs() < 1e-6);
+        assert!((adv[2] + adv[3]).abs() < 1e-6);
+        assert!(adv[0] > 0.0 && adv[1] < 0.0);
+    }
+
+    #[test]
+    fn group_advantages_std_normalized_are_bounded() {
+        let mut batch = ExperienceBatch::default();
+        for r in [10.0f32, -10.0, 10.0, -10.0] {
+            let mut e = Experience::new("t", vec![1], 0, r);
+            e.group = 1;
+            batch.experiences.push(e);
+        }
+        let adv = batch.group_advantages(true);
+        for a in adv {
+            assert!(a.abs() < 1.1);
+        }
+    }
+
+    #[test]
+    fn metadata_accessors() {
+        let mut e = sample();
+        assert_eq!(e.meta_f64("quality"), Some(0.8));
+        e.set_meta("quality", Value::num(0.9));
+        assert_eq!(e.meta_f64("quality"), Some(0.9));
+        assert_eq!(e.meta_f64("missing"), None);
+    }
+}

@@ -1,0 +1,36 @@
+//! The experience buffer — the standalone centerpiece of the paper's
+//! trinity (Fig. 3): explorer(s) write, trainer reads, with data
+//! persistence, delayed-reward completion, priority views and pluggable
+//! sampling strategies.
+
+pub mod experience;
+pub mod priority;
+pub mod queue;
+pub mod reader;
+pub mod store;
+
+pub use experience::{Experience, ExperienceBatch, Source};
+pub use priority::{PriorityBuffer, UtilityWeights};
+pub use queue::QueueBuffer;
+pub use reader::{FifoStrategy, MixSampleStrategy, RandomStrategy, SampleStrategy};
+pub use store::FileStore;
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+/// The buffer interface both the non-persistent queue (ray.Queue analog)
+/// and the persistent store (SQLite analog) implement.
+pub trait ExperienceBuffer: Send + Sync {
+    /// Append experiences (they become readable once `ready`).
+    fn write(&self, exps: Vec<Experience>) -> Result<()>;
+    /// Read up to `n` ready experiences, blocking up to `timeout` for the
+    /// first one.  Returns fewer than `n` only on timeout/closure.
+    fn read(&self, n: usize, timeout: Duration) -> Result<Vec<Experience>>;
+    /// Ready experiences currently readable.
+    fn ready_len(&self) -> usize;
+    /// Total experiences ever written.
+    fn total_written(&self) -> u64;
+    /// Close the buffer: readers drain what's left, writers fail.
+    fn close(&self);
+}

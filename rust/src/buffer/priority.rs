@@ -1,0 +1,159 @@
+//! Prioritized experience replay (the DataActiveIterator analog):
+//! multi-dimensional utility scoring, version-controlled reuse limits,
+//! and asynchronous utility updates as delayed feedback arrives.
+
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use super::Experience;
+
+/// Weights over the utility features; the paper's "flexible,
+/// multi-dimensional utility scoring".
+#[derive(Debug, Clone)]
+pub struct UtilityWeights {
+    /// Weight on raw reward (amplify successes).
+    pub reward: f64,
+    /// Weight on recency (newer model versions score higher).
+    pub recency: f64,
+    /// Penalty per previous reuse (decay already-trained-on samples).
+    pub reuse_penalty: f64,
+    /// Weight on the explicit per-experience utility field (set by data
+    /// pipelines, human feedback, etc.).
+    pub explicit: f64,
+}
+
+impl Default for UtilityWeights {
+    fn default() -> Self {
+        UtilityWeights { reward: 1.0, recency: 0.1, reuse_penalty: 0.5, explicit: 1.0 }
+    }
+}
+
+impl UtilityWeights {
+    pub fn score(&self, e: &Experience, latest_version: u64) -> f64 {
+        let staleness = latest_version.saturating_sub(e.model_version) as f64;
+        self.reward * e.reward as f64 - self.recency * staleness
+            - self.reuse_penalty * e.reuse_count as f64
+            + self.explicit * e.utility
+    }
+}
+
+/// In-memory priority view over a set of experiences.
+pub struct PriorityBuffer {
+    inner: Mutex<Vec<Experience>>,
+    pub weights: UtilityWeights,
+    /// Experiences sampled more than this many times are retired.
+    pub max_reuse: u32,
+}
+
+impl PriorityBuffer {
+    pub fn new(weights: UtilityWeights, max_reuse: u32) -> PriorityBuffer {
+        PriorityBuffer { inner: Mutex::new(Vec::new()), weights, max_reuse }
+    }
+
+    pub fn insert(&self, exps: Vec<Experience>) {
+        self.inner.lock().unwrap().extend(exps);
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Update the explicit utility of an experience (delayed feedback).
+    pub fn update_utility(&self, id: u64, utility: f64) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        for e in inner.iter_mut() {
+            if e.id == id {
+                e.utility = utility;
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Take the top-`n` by utility; bumps reuse counts and retires
+    /// experiences past `max_reuse`.
+    pub fn sample_top(&self, n: usize, latest_version: u64) -> Result<Vec<Experience>> {
+        let mut inner = self.inner.lock().unwrap();
+        // retire over-reused samples
+        inner.retain(|e| e.reuse_count < self.max_reuse);
+        let mut order: Vec<usize> = (0..inner.len()).collect();
+        order.sort_by(|&a, &b| {
+            let sa = self.weights.score(&inner[a], latest_version);
+            let sb = self.weights.score(&inner[b], latest_version);
+            sb.partial_cmp(&sa).unwrap()
+        });
+        let mut out = Vec::with_capacity(n.min(order.len()));
+        for &i in order.iter().take(n) {
+            inner[i].reuse_count += 1;
+            out.push(inner[i].clone());
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exp(id: u64, reward: f32, version: u64) -> Experience {
+        let mut e = Experience::new("t", vec![1, 2], 1, reward);
+        e.id = id;
+        e.model_version = version;
+        e
+    }
+
+    #[test]
+    fn higher_reward_sampled_first() {
+        let buf = PriorityBuffer::new(UtilityWeights::default(), 10);
+        buf.insert(vec![exp(1, 0.1, 0), exp(2, 0.9, 0), exp(3, 0.5, 0)]);
+        let got = buf.sample_top(2, 0).unwrap();
+        assert_eq!(got[0].id, 2);
+        assert_eq!(got[1].id, 3);
+    }
+
+    #[test]
+    fn staleness_penalized() {
+        let w = UtilityWeights { reward: 0.0, recency: 1.0, reuse_penalty: 0.0, explicit: 0.0 };
+        let buf = PriorityBuffer::new(w, 10);
+        buf.insert(vec![exp(1, 0.0, 1), exp(2, 0.0, 9)]);
+        let got = buf.sample_top(1, 10).unwrap();
+        assert_eq!(got[0].id, 2, "fresher experience wins");
+    }
+
+    #[test]
+    fn reuse_penalty_rotates_samples() {
+        let buf = PriorityBuffer::new(UtilityWeights::default(), 10);
+        buf.insert(vec![exp(1, 0.6, 0), exp(2, 0.5, 0)]);
+        let first = buf.sample_top(1, 0).unwrap();
+        assert_eq!(first[0].id, 1);
+        // id 1 now has reuse_count 1 -> penalized below id 2
+        let second = buf.sample_top(1, 0).unwrap();
+        assert_eq!(second[0].id, 2);
+    }
+
+    #[test]
+    fn max_reuse_retires() {
+        let buf = PriorityBuffer::new(UtilityWeights::default(), 2);
+        buf.insert(vec![exp(1, 1.0, 0)]);
+        assert_eq!(buf.sample_top(1, 0).unwrap().len(), 1);
+        assert_eq!(buf.sample_top(1, 0).unwrap().len(), 1);
+        // reuse_count == 2 == max -> retired
+        assert!(buf.sample_top(1, 0).unwrap().is_empty());
+        assert_eq!(buf.len(), 0);
+    }
+
+    #[test]
+    fn explicit_utility_update() {
+        let buf = PriorityBuffer::new(UtilityWeights::default(), 10);
+        buf.insert(vec![exp(1, 0.5, 0), exp(2, 0.5, 0)]);
+        assert!(buf.update_utility(2, 5.0));
+        assert!(!buf.update_utility(99, 1.0));
+        let got = buf.sample_top(1, 0).unwrap();
+        assert_eq!(got[0].id, 2);
+    }
+}

@@ -1,0 +1,219 @@
+//! Non-persistent FIFO buffer (the ray.Queue analog) with blocking reads
+//! and backpressure, plus a holding pen for delayed-reward experiences.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use super::{Experience, ExperienceBuffer};
+
+struct State {
+    ready: VecDeque<Experience>,
+    /// Experiences written with `ready=false`, waiting for their reward.
+    pending: Vec<Experience>,
+    closed: bool,
+}
+
+pub struct QueueBuffer {
+    state: Mutex<State>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    capacity: usize,
+    next_id: AtomicU64,
+    written: AtomicU64,
+}
+
+impl QueueBuffer {
+    pub fn new(capacity: usize) -> QueueBuffer {
+        QueueBuffer {
+            state: Mutex::new(State { ready: VecDeque::new(), pending: Vec::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            capacity: capacity.max(1),
+            next_id: AtomicU64::new(1),
+            written: AtomicU64::new(0),
+        }
+    }
+
+    /// Complete a delayed-reward experience: set its reward and move it to
+    /// the readable queue (the paper's "marked ready for training").
+    pub fn complete(&self, id: u64, reward: f32) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let Some(idx) = st.pending.iter().position(|e| e.id == id) else {
+            bail!("no pending experience with id {id}");
+        };
+        let mut e = st.pending.remove(idx);
+        e.reward = reward;
+        e.ready = true;
+        st.ready.push_back(e);
+        drop(st);
+        self.not_empty.notify_all();
+        Ok(())
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.state.lock().unwrap().pending.len()
+    }
+}
+
+impl ExperienceBuffer for QueueBuffer {
+    fn write(&self, exps: Vec<Experience>) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        for mut e in exps {
+            if e.id == 0 {
+                e.id = self.next_id.fetch_add(1, Ordering::SeqCst);
+            }
+            // backpressure on the ready queue
+            while st.ready.len() >= self.capacity && !st.closed {
+                st = self.not_full.wait(st).unwrap();
+            }
+            if st.closed {
+                bail!("buffer closed");
+            }
+            self.written.fetch_add(1, Ordering::SeqCst);
+            if e.ready {
+                st.ready.push_back(e);
+                self.not_empty.notify_one();
+            } else {
+                st.pending.push(e);
+            }
+        }
+        Ok(())
+    }
+
+    fn read(&self, n: usize, timeout: Duration) -> Result<Vec<Experience>> {
+        let deadline = Instant::now() + timeout;
+        let mut out = Vec::with_capacity(n);
+        let mut st = self.state.lock().unwrap();
+        while out.len() < n {
+            if let Some(mut e) = st.ready.pop_front() {
+                e.reuse_count += 1;
+                out.push(e);
+                self.not_full.notify_one();
+                continue;
+            }
+            if st.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (g, _) = self.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = g;
+        }
+        Ok(out)
+    }
+
+    fn ready_len(&self) -> usize {
+        self.state.lock().unwrap().ready.len()
+    }
+
+    fn total_written(&self) -> u64 {
+        self.written.load(Ordering::SeqCst)
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn exp(task: &str, reward: f32) -> Experience {
+        Experience::new(task, vec![1, 2, 3], 1, reward)
+    }
+
+    #[test]
+    fn fifo_read_write() {
+        let q = QueueBuffer::new(16);
+        q.write(vec![exp("a", 0.1), exp("b", 0.2)]).unwrap();
+        let got = q.read(2, Duration::from_millis(10)).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].task_id, "a");
+        assert_eq!(got[1].task_id, "b");
+        assert!(got.iter().all(|e| e.id > 0));
+    }
+
+    #[test]
+    fn read_times_out_when_short() {
+        let q = QueueBuffer::new(16);
+        q.write(vec![exp("a", 0.0)]).unwrap();
+        let start = Instant::now();
+        let got = q.read(3, Duration::from_millis(40)).unwrap();
+        assert_eq!(got.len(), 1);
+        assert!(start.elapsed() >= Duration::from_millis(35));
+    }
+
+    #[test]
+    fn delayed_reward_flow() {
+        let q = QueueBuffer::new(16);
+        let mut e = exp("slow", 0.0);
+        e.ready = false;
+        e.id = 99;
+        q.write(vec![e]).unwrap();
+        assert_eq!(q.ready_len(), 0);
+        assert_eq!(q.pending_len(), 1);
+        // reader sees nothing yet
+        assert!(q.read(1, Duration::from_millis(10)).unwrap().is_empty());
+        // reward arrives
+        q.complete(99, 0.75).unwrap();
+        let got = q.read(1, Duration::from_millis(10)).unwrap();
+        assert_eq!(got[0].reward, 0.75);
+        assert!(got[0].ready);
+        assert!(q.complete(99, 1.0).is_err()); // already completed
+    }
+
+    #[test]
+    fn blocking_reader_wakes_on_write() {
+        let q = Arc::new(QueueBuffer::new(16));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.read(1, Duration::from_secs(5)).unwrap());
+        std::thread::sleep(Duration::from_millis(30));
+        q.write(vec![exp("late", 1.0)]).unwrap();
+        let got = h.join().unwrap();
+        assert_eq!(got.len(), 1);
+    }
+
+    #[test]
+    fn close_unblocks_and_rejects() {
+        let q = Arc::new(QueueBuffer::new(4));
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || q2.read(1, Duration::from_secs(5)).unwrap());
+        std::thread::sleep(Duration::from_millis(20));
+        q.close();
+        assert!(h.join().unwrap().is_empty());
+        assert!(q.write(vec![exp("x", 0.0)]).is_err());
+    }
+
+    #[test]
+    fn capacity_backpressure() {
+        let q = Arc::new(QueueBuffer::new(2));
+        q.write(vec![exp("a", 0.0), exp("b", 0.0)]).unwrap();
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            q2.write(vec![exp("c", 0.0)]).unwrap();
+            t0.elapsed()
+        });
+        std::thread::sleep(Duration::from_millis(40));
+        let _ = q.read(1, Duration::from_millis(10)).unwrap();
+        assert!(h.join().unwrap() >= Duration::from_millis(30));
+    }
+
+    #[test]
+    fn reuse_count_increments_on_read() {
+        let q = QueueBuffer::new(4);
+        q.write(vec![exp("a", 0.0)]).unwrap();
+        let got = q.read(1, Duration::from_millis(5)).unwrap();
+        assert_eq!(got[0].reuse_count, 1);
+    }
+}

@@ -1,0 +1,148 @@
+//! Sampling strategies — how the trainer pulls batches from buffers.
+//!
+//! `MixSampleStrategy` is the paper's §3.2 example verbatim: a batch
+//! composed of usual rollout experiences plus expert trajectories from a
+//! second buffer, to be consumed by the MIX loss.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+
+use crate::util::rng::Rng;
+
+use super::{Experience, ExperienceBuffer, FileStore, Source};
+
+pub trait SampleStrategy: Send + Sync {
+    /// Sample a training batch for `step`.  Blocks (bounded by the
+    /// strategy's timeout) until enough ready experiences exist.
+    fn sample(&self, step: u64, batch: usize) -> Result<Vec<Experience>>;
+    fn name(&self) -> &'static str;
+}
+
+/// Plain FIFO consumption from one buffer (the default strategy).
+pub struct FifoStrategy {
+    pub buffer: Arc<dyn ExperienceBuffer>,
+    pub timeout: Duration,
+}
+
+impl SampleStrategy for FifoStrategy {
+    fn sample(&self, _step: u64, batch: usize) -> Result<Vec<Experience>> {
+        let got = self.buffer.read(batch, self.timeout)?;
+        ensure!(!got.is_empty(), "buffer drained or timed out before any experience");
+        Ok(got)
+    }
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+}
+
+/// Uniform random sampling from a persistent store (off-policy replay).
+pub struct RandomStrategy {
+    pub store: Arc<FileStore>,
+    pub seed: u64,
+}
+
+impl SampleStrategy for RandomStrategy {
+    fn sample(&self, step: u64, batch: usize) -> Result<Vec<Experience>> {
+        let n_ready = self.store.ready_count();
+        ensure!(n_ready > 0, "no ready experiences in store");
+        let mut rng = Rng::new(self.seed ^ step.wrapping_mul(0x9e3779b97f4a7c15));
+        let indices: Vec<usize> =
+            (0..batch).map(|_| rng.below(n_ready as u64) as usize).collect();
+        Ok(self.store.sample_ready(&indices))
+    }
+    fn name(&self) -> &'static str {
+        "random"
+    }
+}
+
+/// Paper §3.2: usual rollout experiences + expert trajectories, with the
+/// expert fraction of each batch configurable.  Expert samples get their
+/// source stamped so the MIX batch builder can produce `is_expert`.
+pub struct MixSampleStrategy {
+    pub usual: Arc<dyn ExperienceBuffer>,
+    pub expert: Arc<dyn ExperienceBuffer>,
+    pub expert_fraction: f64,
+    pub timeout: Duration,
+}
+
+impl SampleStrategy for MixSampleStrategy {
+    fn sample(&self, _step: u64, batch: usize) -> Result<Vec<Experience>> {
+        let n_expert = ((batch as f64) * self.expert_fraction).round() as usize;
+        let n_expert = n_expert.min(batch);
+        let n_usual = batch - n_expert;
+        let mut out = self.usual.read(n_usual, self.timeout)?;
+        let mut experts = self.expert.read(n_expert, self.timeout)?;
+        for e in &mut experts {
+            e.source = Source::Expert;
+        }
+        out.extend(experts);
+        ensure!(!out.is_empty(), "both buffers empty");
+        Ok(out)
+    }
+    fn name(&self) -> &'static str {
+        "mix"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::buffer::QueueBuffer;
+
+    fn filled_queue(n: usize, tag: &str) -> Arc<QueueBuffer> {
+        let q = Arc::new(QueueBuffer::new(1024));
+        let exps: Vec<Experience> = (0..n)
+            .map(|i| Experience::new(&format!("{tag}{i}"), vec![1, 2, 3], 1, i as f32))
+            .collect();
+        q.write(exps).unwrap();
+        q
+    }
+
+    #[test]
+    fn fifo_strategy_reads_in_order() {
+        let q = filled_queue(8, "t");
+        let s = FifoStrategy { buffer: q, timeout: Duration::from_millis(20) };
+        let b = s.sample(0, 4).unwrap();
+        assert_eq!(b.len(), 4);
+        assert_eq!(b[0].task_id, "t0");
+        assert_eq!(b[3].task_id, "t3");
+    }
+
+    #[test]
+    fn mix_strategy_composition() {
+        let usual = filled_queue(8, "u");
+        let expert = filled_queue(8, "e");
+        let s = MixSampleStrategy {
+            usual,
+            expert,
+            expert_fraction: 0.25,
+            timeout: Duration::from_millis(20),
+        };
+        let b = s.sample(0, 8).unwrap();
+        assert_eq!(b.len(), 8);
+        let experts = b.iter().filter(|e| e.source == Source::Expert).count();
+        assert_eq!(experts, 2);
+        // experts come from the expert buffer
+        assert!(b.iter().filter(|e| e.source == Source::Expert).all(|e| e.task_id.starts_with('e')));
+    }
+
+    #[test]
+    fn random_strategy_replays_same_store() {
+        let p = std::env::temp_dir().join(format!("trft_rand_{}", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        let store = Arc::new(FileStore::open(&p).unwrap());
+        store
+            .write((0..10).map(|i| Experience::new(&format!("r{i}"), vec![1], 0, i as f32)).collect())
+            .unwrap();
+        let s = RandomStrategy { store: Arc::clone(&store), seed: 1 };
+        let b1 = s.sample(1, 6).unwrap();
+        let b2 = s.sample(2, 6).unwrap();
+        assert_eq!(b1.len(), 6);
+        // replay: same experiences can appear in multiple batches
+        let total_reads: u32 = store.snapshot_ready().iter().map(|e| e.reuse_count).sum();
+        assert_eq!(total_reads as usize, b1.len() + b2.len());
+        std::fs::remove_file(&p).unwrap();
+    }
+}

@@ -1,0 +1,431 @@
+//! Persistent experience store (the SQLite analog): an append-only record
+//! log with CRC-guarded frames, in-memory index, crash recovery, and
+//! in-place (logical) updates for delayed rewards.
+//!
+//! Frame format: `[u32 len][payload bytes][u32 crc32(payload)]`.
+//! Payload is a JSON object: either a full experience
+//! (`{"t":"exp", ...experience}`) or an update
+//! (`{"t":"upd", "id":..., "reward":..., "ready":...}`).
+//! Recovery replays the log, applying updates over experiences; a torn
+//! final frame (crash mid-write) is truncated away.
+
+use std::collections::HashMap;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::checkpoint::crc32;
+use crate::util::json::Value;
+
+use super::{Experience, ExperienceBuffer};
+
+struct State {
+    /// All experiences, insertion order.
+    all: Vec<Experience>,
+    /// id -> index in `all`.
+    index: HashMap<u64, usize>,
+    /// read cursor into `all` (fifo consumption; skips non-ready).
+    cursor: usize,
+    file: std::fs::File,
+    closed: bool,
+}
+
+pub struct FileStore {
+    path: PathBuf,
+    state: Mutex<State>,
+    not_empty: Condvar,
+    next_id: AtomicU64,
+    written: AtomicU64,
+}
+
+fn write_frame(file: &mut std::fs::File, payload: &[u8]) -> Result<()> {
+    file.write_all(&(payload.len() as u32).to_le_bytes())?;
+    file.write_all(payload)?;
+    file.write_all(&crc32(payload).to_le_bytes())?;
+    Ok(())
+}
+
+impl FileStore {
+    /// Open (or create) a store; replays the log on open.
+    pub fn open(path: impl AsRef<Path>) -> Result<FileStore> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = std::fs::OpenOptions::new()
+            .create(true)
+            .read(true)
+            .append(true)
+            .open(&path)
+            .with_context(|| format!("opening store {path:?}"))?;
+
+        // -- recovery replay --
+        let mut raw = Vec::new();
+        file.seek(SeekFrom::Start(0))?;
+        file.read_to_end(&mut raw)?;
+        let mut all: Vec<Experience> = Vec::new();
+        let mut index: HashMap<u64, usize> = HashMap::new();
+        let mut pos = 0usize;
+        let mut valid_end = 0usize;
+        let mut max_id = 0u64;
+        while pos + 8 <= raw.len() {
+            let len = u32::from_le_bytes(raw[pos..pos + 4].try_into().unwrap()) as usize;
+            if pos + 4 + len + 4 > raw.len() {
+                break; // torn final frame
+            }
+            let payload = &raw[pos + 4..pos + 4 + len];
+            let stored = u32::from_le_bytes(raw[pos + 4 + len..pos + 8 + len].try_into().unwrap());
+            if crc32(payload) != stored {
+                break; // corruption: stop replay here
+            }
+            let text = std::str::from_utf8(payload).context("store frame utf8")?;
+            let v = Value::parse(text).context("store frame json")?;
+            match v.get("t").and_then(Value::as_str) {
+                Some("exp") => {
+                    let e = Experience::from_json(&v)?;
+                    max_id = max_id.max(e.id);
+                    index.insert(e.id, all.len());
+                    all.push(e);
+                }
+                Some("upd") => {
+                    let id = v.get("id").and_then(Value::as_f64).context("upd id")? as u64;
+                    if let Some(&i) = index.get(&id) {
+                        if let Some(r) = v.get("reward").and_then(Value::as_f64) {
+                            all[i].reward = r as f32;
+                        }
+                        if let Some(rd) = v.get("ready").and_then(Value::as_bool) {
+                            all[i].ready = rd;
+                        }
+                        if let Some(u) = v.get("utility").and_then(Value::as_f64) {
+                            all[i].utility = u;
+                        }
+                    }
+                }
+                _ => bail!("unknown frame type in store"),
+            }
+            pos += 8 + len;
+            valid_end = pos;
+        }
+        if valid_end < raw.len() {
+            // truncate torn tail so future appends are clean
+            file.set_len(valid_end as u64)?;
+        }
+        file.seek(SeekFrom::End(0))?;
+
+        Ok(FileStore {
+            path,
+            state: Mutex::new(State { all, index, cursor: 0, file, closed: false }),
+            not_empty: Condvar::new(),
+            next_id: AtomicU64::new(max_id + 1),
+            written: AtomicU64::new(0),
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Total records (ready or not) currently stored.
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().all.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Update reward/ready/utility of an existing experience (logged).
+    pub fn update(
+        &self,
+        id: u64,
+        reward: Option<f32>,
+        ready: Option<bool>,
+        utility: Option<f64>,
+    ) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let Some(&i) = st.index.get(&id) else { bail!("no experience {id}") };
+        let mut pairs = vec![("t", Value::str("upd")), ("id", Value::num(id as f64))];
+        if let Some(r) = reward {
+            st.all[i].reward = r;
+            pairs.push(("reward", Value::num(r as f64)));
+        }
+        if let Some(rd) = ready {
+            st.all[i].ready = rd;
+            pairs.push(("ready", Value::Bool(rd)));
+        }
+        if let Some(u) = utility {
+            st.all[i].utility = u;
+            pairs.push(("utility", Value::num(u)));
+        }
+        let payload = Value::obj(pairs).to_string_compact();
+        write_frame(&mut st.file, payload.as_bytes())?;
+        drop(st);
+        self.not_empty.notify_all();
+        Ok(())
+    }
+
+    /// Mark a delayed experience ready with its final reward.
+    pub fn complete(&self, id: u64, reward: f32) -> Result<()> {
+        self.update(id, Some(reward), Some(true), None)
+    }
+
+    /// Snapshot of all ready experiences (for priority views / pipelines).
+    pub fn snapshot_ready(&self) -> Vec<Experience> {
+        self.state.lock().unwrap().all.iter().filter(|e| e.ready).cloned().collect()
+    }
+
+    /// Get by id.
+    pub fn get(&self, id: u64) -> Option<Experience> {
+        let st = self.state.lock().unwrap();
+        st.index.get(&id).map(|&i| st.all[i].clone())
+    }
+
+    /// Random-access read of `n` ready experiences without consuming the
+    /// FIFO cursor (used by random/priority strategies); bumps reuse counts.
+    pub fn sample_ready(&self, indices: &[usize]) -> Vec<Experience> {
+        let mut st = self.state.lock().unwrap();
+        let ready_idx: Vec<usize> =
+            (0..st.all.len()).filter(|&i| st.all[i].ready).collect();
+        indices
+            .iter()
+            .filter_map(|&i| ready_idx.get(i).copied())
+            .map(|i| {
+                st.all[i].reuse_count += 1;
+                st.all[i].clone()
+            })
+            .collect()
+    }
+
+    pub fn ready_count(&self) -> usize {
+        self.state.lock().unwrap().all.iter().filter(|e| e.ready).count()
+    }
+
+    /// Flush to disk (appends are buffered by the OS; tests use this).
+    pub fn sync(&self) -> Result<()> {
+        self.state.lock().unwrap().file.sync_all()?;
+        Ok(())
+    }
+}
+
+impl ExperienceBuffer for FileStore {
+    fn write(&self, exps: Vec<Experience>) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            bail!("store closed");
+        }
+        for mut e in exps {
+            if e.id == 0 {
+                e.id = self.next_id.fetch_add(1, Ordering::SeqCst);
+            }
+            let mut v = e.to_json();
+            v.set("t", Value::str("exp"));
+            let payload = v.to_string_compact();
+            write_frame(&mut st.file, payload.as_bytes())?;
+            let idx = st.all.len();
+            st.index.insert(e.id, idx);
+            st.all.push(e);
+            self.written.fetch_add(1, Ordering::SeqCst);
+        }
+        drop(st);
+        self.not_empty.notify_all();
+        Ok(())
+    }
+
+    fn read(&self, n: usize, timeout: Duration) -> Result<Vec<Experience>> {
+        let deadline = Instant::now() + timeout;
+        let mut out = Vec::with_capacity(n);
+        let mut st = self.state.lock().unwrap();
+        loop {
+            // advance cursor over ready records
+            while out.len() < n && st.cursor < st.all.len() {
+                let i = st.cursor;
+                if st.all[i].ready {
+                    st.all[i].reuse_count += 1;
+                    out.push(st.all[i].clone());
+                    st.cursor += 1;
+                } else {
+                    // delayed record at the head: skip it for now but do not
+                    // consume it — move it behind the cursor conceptually by
+                    // swapping is complex; instead scan ahead.
+                    let mut j = i + 1;
+                    while j < st.all.len() && !st.all[j].ready {
+                        j += 1;
+                    }
+                    if j < st.all.len() {
+                        st.all.swap(i, j);
+                        let (a, b) = (st.all[i].id, st.all[j].id);
+                        st.index.insert(a, i);
+                        st.index.insert(b, j);
+                    } else {
+                        break;
+                    }
+                }
+            }
+            if out.len() >= n || st.closed {
+                return Ok(out);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(out);
+            }
+            let (g, _) = self.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = g;
+        }
+    }
+
+    fn ready_len(&self) -> usize {
+        let st = self.state.lock().unwrap();
+        st.all[st.cursor.min(st.all.len())..].iter().filter(|e| e.ready).count()
+    }
+
+    fn total_written(&self) -> u64 {
+        self.written.load(Ordering::SeqCst)
+    }
+
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("trft_store_{}_{}", std::process::id(), name))
+    }
+
+    fn exp(task: &str, reward: f32) -> Experience {
+        Experience::new(task, vec![1, 7, 8, 2], 1, reward)
+    }
+
+    #[test]
+    fn write_read_fifo() {
+        let p = tmp("fifo");
+        let _ = std::fs::remove_file(&p);
+        let s = FileStore::open(&p).unwrap();
+        s.write(vec![exp("a", 1.0), exp("b", 2.0), exp("c", 3.0)]).unwrap();
+        let got = s.read(2, Duration::from_millis(5)).unwrap();
+        assert_eq!(got.iter().map(|e| e.task_id.as_str()).collect::<Vec<_>>(), vec!["a", "b"]);
+        let got2 = s.read(2, Duration::from_millis(5)).unwrap();
+        assert_eq!(got2.len(), 1);
+        assert_eq!(got2[0].task_id, "c");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn persistence_across_reopen() {
+        let p = tmp("reopen");
+        let _ = std::fs::remove_file(&p);
+        {
+            let s = FileStore::open(&p).unwrap();
+            s.write(vec![exp("x", 0.5), exp("y", 0.7)]).unwrap();
+            s.update(1, Some(0.9), None, Some(2.5)).unwrap();
+            s.sync().unwrap();
+        }
+        let s = FileStore::open(&p).unwrap();
+        assert_eq!(s.len(), 2);
+        let x = s.get(1).unwrap();
+        assert_eq!(x.reward, 0.9);
+        assert_eq!(x.utility, 2.5);
+        // ids continue from the recovered max
+        s.write(vec![exp("z", 0.0)]).unwrap();
+        assert_eq!(s.get(3).unwrap().task_id, "z");
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn torn_tail_is_recovered() {
+        let p = tmp("torn");
+        let _ = std::fs::remove_file(&p);
+        {
+            let s = FileStore::open(&p).unwrap();
+            s.write(vec![exp("good", 1.0)]).unwrap();
+            s.sync().unwrap();
+        }
+        // simulate a crash mid-append
+        {
+            let mut f = std::fs::OpenOptions::new().append(true).open(&p).unwrap();
+            f.write_all(&[200, 0, 0, 0, b'{', b'"']).unwrap(); // len=200 but 2 bytes
+        }
+        let s = FileStore::open(&p).unwrap();
+        assert_eq!(s.len(), 1);
+        // store is usable after truncation
+        s.write(vec![exp("after", 2.0)]).unwrap();
+        s.sync().unwrap();
+        drop(s);
+        let s2 = FileStore::open(&p).unwrap();
+        assert_eq!(s2.len(), 2);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn delayed_rewards_invisible_until_complete() {
+        let p = tmp("delayed");
+        let _ = std::fs::remove_file(&p);
+        let s = FileStore::open(&p).unwrap();
+        let mut e = exp("slow", 0.0);
+        e.ready = false;
+        s.write(vec![e, exp("fast", 1.0)]).unwrap();
+        // reader should get only the ready one (delayed is skipped, not consumed)
+        let got = s.read(2, Duration::from_millis(10)).unwrap();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].task_id, "fast");
+        s.complete(1, 0.42).unwrap();
+        let got2 = s.read(1, Duration::from_millis(10)).unwrap();
+        assert_eq!(got2[0].task_id, "slow");
+        assert_eq!(got2[0].reward, 0.42);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn delayed_reward_survives_reopen() {
+        let p = tmp("delayed_reopen");
+        let _ = std::fs::remove_file(&p);
+        {
+            let s = FileStore::open(&p).unwrap();
+            let mut e = exp("slow", 0.0);
+            e.ready = false;
+            s.write(vec![e]).unwrap();
+            s.complete(1, 0.8).unwrap();
+            s.sync().unwrap();
+        }
+        let s = FileStore::open(&p).unwrap();
+        let e = s.get(1).unwrap();
+        assert!(e.ready);
+        assert_eq!(e.reward, 0.8);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn concurrent_writers_and_reader() {
+        let p = tmp("mpmc");
+        let _ = std::fs::remove_file(&p);
+        let s = std::sync::Arc::new(FileStore::open(&p).unwrap());
+        let writers: Vec<_> = (0..4)
+            .map(|w| {
+                let s = std::sync::Arc::clone(&s);
+                std::thread::spawn(move || {
+                    for i in 0..25 {
+                        s.write(vec![exp(&format!("w{w}-{i}"), 0.0)]).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for w in writers {
+            w.join().unwrap();
+        }
+        let got = s.read(100, Duration::from_millis(50)).unwrap();
+        assert_eq!(got.len(), 100);
+        let mut ids: Vec<u64> = got.iter().map(|e| e.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), 100, "ids must be unique");
+        std::fs::remove_file(&p).unwrap();
+    }
+}

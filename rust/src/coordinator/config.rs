@@ -1,0 +1,299 @@
+//! Typed run configuration (the paper's YAML config files, §3.3/§3.4),
+//! parsed from the YAML-subset loader with defaults and validation.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::trainer::HyperParams;
+use crate::util::json::Value;
+use crate::util::yamlite;
+
+#[derive(Debug, Clone)]
+pub struct RftConfig {
+    /// both | async | explore | train | bench
+    pub mode: String,
+    pub model_preset: String,
+    pub seed: u64,
+    /// Algorithm name (grpo, ppo, sft, dpo, mix, opmd_*).
+    pub algorithm: String,
+    pub hyper: HyperParams,
+    pub adv_std_normalize: bool,
+    /// Dummy learning: force lr = 0 (Tables 1-2 profiling).
+    pub dummy_learning: bool,
+
+    pub total_steps: u64,
+    pub sync_interval: u64,
+    pub sync_offset: u64,
+    /// Number of independent explorers (multi-explorer async mode).
+    pub explorer_count: usize,
+    pub explorer_threads: usize,
+    /// Tasks per explorer batch (each task yields `repeat_times` rollouts).
+    pub batch_tasks: usize,
+    pub repeat_times: usize,
+
+    pub temperature: f32,
+    pub top_k: usize,
+    pub top_p: f32,
+    pub max_new_tokens: usize,
+
+    /// queue | file
+    pub buffer_kind: String,
+    pub buffer_capacity: usize,
+    pub buffer_path: Option<PathBuf>,
+    /// memory | checkpoint
+    pub sync_method: String,
+    pub sync_dir: Option<PathBuf>,
+
+    /// Workflow + task source ("math" or "alfworld").
+    pub workflow: String,
+    pub min_difficulty: usize,
+    pub max_difficulty: usize,
+
+    pub task_timeout_s: f64,
+    pub task_max_attempts: usize,
+
+    /// Evaluate (and snapshot) every N train steps; 0 = never.
+    pub eval_every: u64,
+    pub eval_tasks: usize,
+
+    pub monitor_dir: Option<PathBuf>,
+    pub artifacts_dir: Option<PathBuf>,
+}
+
+impl Default for RftConfig {
+    fn default() -> Self {
+        RftConfig {
+            mode: "both".into(),
+            model_preset: "tiny".into(),
+            seed: 42,
+            algorithm: "grpo".into(),
+            hyper: HyperParams::default(),
+            adv_std_normalize: false,
+            dummy_learning: false,
+            total_steps: 10,
+            sync_interval: 1,
+            sync_offset: 0,
+            explorer_count: 1,
+            explorer_threads: 2,
+            batch_tasks: 1,
+            repeat_times: 4,
+            temperature: 1.0,
+            top_k: 0,
+            top_p: 1.0,
+            max_new_tokens: 8,
+            buffer_kind: "queue".into(),
+            buffer_capacity: 4096,
+            buffer_path: None,
+            sync_method: "memory".into(),
+            sync_dir: None,
+            workflow: "math".into(),
+            min_difficulty: 1,
+            max_difficulty: 2,
+            task_timeout_s: 300.0,
+            task_max_attempts: 2,
+            eval_every: 0,
+            eval_tasks: 16,
+            monitor_dir: None,
+            artifacts_dir: None,
+        }
+    }
+}
+
+impl RftConfig {
+    pub fn from_file(path: impl AsRef<Path>) -> Result<RftConfig> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading config {:?}", path.as_ref()))?;
+        let v = yamlite::parse(&text).context("parsing config yaml")?;
+        Self::from_value(&v)
+    }
+
+    pub fn from_value(v: &Value) -> Result<RftConfig> {
+        let mut cfg = RftConfig::default();
+        let s = |key: &str, out: &mut String| {
+            if let Some(x) = v.path(key).and_then(Value::as_str) {
+                *out = x.to_string();
+            }
+        };
+        let u = |key: &str, out: &mut u64| {
+            if let Some(x) = v.path(key).and_then(Value::as_i64) {
+                *out = x.max(0) as u64;
+            }
+        };
+        let us = |key: &str, out: &mut usize| {
+            if let Some(x) = v.path(key).and_then(Value::as_usize) {
+                *out = x;
+            }
+        };
+        let f = |key: &str, out: &mut f32| {
+            if let Some(x) = v.path(key).and_then(Value::as_f64) {
+                *out = x as f32;
+            }
+        };
+        let b = |key: &str, out: &mut bool| {
+            if let Some(x) = v.path(key).and_then(Value::as_bool) {
+                *out = x;
+            }
+        };
+
+        s("mode", &mut cfg.mode);
+        s("model.preset", &mut cfg.model_preset);
+        u("model.seed", &mut cfg.seed);
+        s("algorithm.name", &mut cfg.algorithm);
+        f("algorithm.lr", &mut cfg.hyper.lr);
+        f("algorithm.clip_eps", &mut cfg.hyper.clip_eps);
+        f("algorithm.tau", &mut cfg.hyper.tau_or_beta);
+        f("algorithm.beta", &mut cfg.hyper.tau_or_beta);
+        f("algorithm.mu", &mut cfg.hyper.mu);
+        f("algorithm.kl_coef", &mut cfg.hyper.kl_coef);
+        b("algorithm.adv_std_normalize", &mut cfg.adv_std_normalize);
+        b("algorithm.dummy_learning", &mut cfg.dummy_learning);
+
+        u("train.total_steps", &mut cfg.total_steps);
+        u("sync.interval", &mut cfg.sync_interval);
+        u("sync.offset", &mut cfg.sync_offset);
+        s("sync.method", &mut cfg.sync_method);
+        if let Some(d) = v.path("sync.dir").and_then(Value::as_str) {
+            cfg.sync_dir = Some(PathBuf::from(d));
+        }
+
+        us("explorer.count", &mut cfg.explorer_count);
+        us("explorer.threads", &mut cfg.explorer_threads);
+        us("explorer.batch_tasks", &mut cfg.batch_tasks);
+        us("explorer.repeat_times", &mut cfg.repeat_times);
+        f("explorer.temperature", &mut cfg.temperature);
+        us("explorer.top_k", &mut cfg.top_k);
+        f("explorer.top_p", &mut cfg.top_p);
+        us("explorer.max_new_tokens", &mut cfg.max_new_tokens);
+        if let Some(x) = v.path("explorer.timeout_s").and_then(Value::as_f64) {
+            cfg.task_timeout_s = x;
+        }
+        us("explorer.max_attempts", &mut cfg.task_max_attempts);
+
+        s("buffer.kind", &mut cfg.buffer_kind);
+        us("buffer.capacity", &mut cfg.buffer_capacity);
+        if let Some(p) = v.path("buffer.path").and_then(Value::as_str) {
+            cfg.buffer_path = Some(PathBuf::from(p));
+        }
+
+        s("data.workflow", &mut cfg.workflow);
+        us("data.min_difficulty", &mut cfg.min_difficulty);
+        us("data.max_difficulty", &mut cfg.max_difficulty);
+
+        u("eval.every", &mut cfg.eval_every);
+        us("eval.tasks", &mut cfg.eval_tasks);
+        if let Some(d) = v.path("monitor.dir").and_then(Value::as_str) {
+            cfg.monitor_dir = Some(PathBuf::from(d));
+        }
+        if let Some(d) = v.path("artifacts.dir").and_then(Value::as_str) {
+            cfg.artifacts_dir = Some(PathBuf::from(d));
+        }
+
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        match self.mode.as_str() {
+            "both" | "async" | "explore" | "train" | "bench" => {}
+            other => bail!("unknown mode '{other}'"),
+        }
+        if self.sync_interval == 0 {
+            bail!("sync.interval must be >= 1");
+        }
+        if self.explorer_count == 0 {
+            bail!("explorer.count must be >= 1");
+        }
+        if self.mode == "both" && self.explorer_count > 1 {
+            bail!("multi-explorer requires mode=async (paper §2.1.1)");
+        }
+        match self.workflow.as_str() {
+            "math" | "alfworld" | "reflect_once" => {}
+            other => bail!("unknown workflow '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Effective hyper-parameters: dummy learning zeroes the lr, keeping
+    /// all compute identical (the paper's profiling methodology).
+    pub fn effective_hyper(&self) -> HyperParams {
+        let mut h = self.hyper.clone();
+        if self.dummy_learning {
+            h.lr = 0.0;
+        }
+        h
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+mode: both
+model:
+  preset: tiny
+  seed: 7
+algorithm:
+  name: grpo
+  lr: 0.0005
+  clip_eps: 0.3
+  dummy_learning: true
+train:
+  total_steps: 25
+sync:
+  interval: 10
+  offset: 1
+explorer:
+  count: 1
+  threads: 4
+  batch_tasks: 2
+  repeat_times: 4
+  temperature: 0.8
+buffer:
+  kind: queue
+  capacity: 128
+data:
+  workflow: math
+  min_difficulty: 1
+  max_difficulty: 3
+eval:
+  every: 5
+  tasks: 8
+";
+
+    #[test]
+    fn parses_full_config() {
+        let v = yamlite::parse(SAMPLE).unwrap();
+        let cfg = RftConfig::from_value(&v).unwrap();
+        assert_eq!(cfg.mode, "both");
+        assert_eq!(cfg.seed, 7);
+        assert!((cfg.hyper.lr - 5e-4).abs() < 1e-9);
+        assert!((cfg.hyper.clip_eps - 0.3).abs() < 1e-9);
+        assert_eq!(cfg.total_steps, 25);
+        assert_eq!(cfg.sync_interval, 10);
+        assert_eq!(cfg.sync_offset, 1);
+        assert_eq!(cfg.explorer_threads, 4);
+        assert_eq!(cfg.eval_every, 5);
+        assert!(cfg.dummy_learning);
+        assert_eq!(cfg.effective_hyper().lr, 0.0);
+    }
+
+    #[test]
+    fn defaults_fill_missing() {
+        let cfg = RftConfig::from_value(&yamlite::parse("mode: both\n").unwrap()).unwrap();
+        assert_eq!(cfg.model_preset, "tiny");
+        assert_eq!(cfg.sync_interval, 1);
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        assert!(RftConfig::from_value(&yamlite::parse("mode: warp\n").unwrap()).is_err());
+        assert!(RftConfig::from_value(&yamlite::parse("mode: both\nsync:\n  interval: 0\n").unwrap())
+            .is_err());
+        assert!(RftConfig::from_value(
+            &yamlite::parse("mode: both\nexplorer:\n  count: 2\n").unwrap()
+        )
+        .is_err());
+    }
+}

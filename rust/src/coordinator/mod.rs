@@ -1,0 +1,13 @@
+//! The coordinator: the paper's unified RFT modes (§2.1.1) over the
+//! explorer / buffer / trainer trinity, plus typed configuration, the
+//! monitor, and task sources.
+
+pub mod config;
+pub mod modes;
+pub mod monitor;
+pub mod tasks;
+
+pub use config::RftConfig;
+pub use modes::{run_mode, ModeReport, RftMode, RftSession};
+pub use monitor::Monitor;
+pub use tasks::{AlfworldTaskSource, MathTaskSource, PrioritizedTaskSource, TaskSource};

@@ -1,0 +1,155 @@
+//! The monitor (paper §2.4, Fig. 6): per-step metric streams to JSONL +
+//! CSV, qualitative rollout-example capture, and console progress — the
+//! WandB/TensorBoard stand-in.
+
+use std::collections::BTreeMap;
+use std::io::Write;
+use std::path::PathBuf;
+use std::sync::Mutex;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Value;
+
+struct Inner {
+    jsonl: Option<std::fs::File>,
+    series: BTreeMap<String, Vec<(u64, f64)>>,
+    examples: Vec<(u64, String)>,
+}
+
+pub struct Monitor {
+    out_dir: Option<PathBuf>,
+    inner: Mutex<Inner>,
+    pub console_every: u64,
+}
+
+impl Monitor {
+    /// A monitor writing under `out_dir` (created), or purely in-memory if
+    /// `None`.
+    pub fn new(out_dir: Option<PathBuf>) -> Result<Monitor> {
+        let jsonl = match &out_dir {
+            Some(dir) => {
+                std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+                Some(std::fs::File::create(dir.join("metrics.jsonl"))?)
+            }
+            None => None,
+        };
+        Ok(Monitor {
+            out_dir,
+            inner: Mutex::new(Inner { jsonl, series: BTreeMap::new(), examples: vec![] }),
+            console_every: 10,
+        })
+    }
+
+    pub fn in_memory() -> Monitor {
+        Self::new(None).unwrap()
+    }
+
+    /// Log named scalars under `role` ("trainer", "explorer-0", ...) at a
+    /// step.
+    pub fn log(&self, role: &str, step: u64, metrics: &[(String, f64)]) {
+        let mut inner = self.inner.lock().unwrap();
+        for (name, v) in metrics {
+            inner.series.entry(format!("{role}/{name}")).or_default().push((step, *v));
+        }
+        if let Some(f) = &mut inner.jsonl {
+            let mut pairs = vec![
+                ("role".to_string(), Value::str(role)),
+                ("step".to_string(), Value::num(step as f64)),
+            ];
+            pairs.extend(metrics.iter().map(|(n, v)| (n.clone(), Value::num(*v))));
+            let _ = writeln!(f, "{}", Value::Object(pairs).to_string_compact());
+        }
+        if step % self.console_every == 0 && !metrics.is_empty() {
+            let shown: Vec<String> =
+                metrics.iter().take(5).map(|(n, v)| format!("{n}={v:.4}")).collect();
+            crate::log_info!("monitor", "[{role} step {step}] {}", shown.join(" "));
+        }
+    }
+
+    /// Capture a qualitative rollout example (paper: concrete trajectories
+    /// at different RL steps).
+    pub fn log_example(&self, step: u64, text: &str) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.examples.push((step, text.to_string()));
+        if let Some(f) = &mut inner.jsonl {
+            let v = Value::obj(vec![
+                ("role", Value::str("example")),
+                ("step", Value::num(step as f64)),
+                ("text", Value::str(text)),
+            ]);
+            let _ = writeln!(f, "{}", v.to_string_compact());
+        }
+    }
+
+    /// Full series for a key (e.g. "trainer/reward").
+    pub fn series(&self, key: &str) -> Vec<(u64, f64)> {
+        self.inner.lock().unwrap().series.get(key).cloned().unwrap_or_default()
+    }
+
+    pub fn series_values(&self, key: &str) -> Vec<f64> {
+        self.series(key).into_iter().map(|(_, v)| v).collect()
+    }
+
+    pub fn keys(&self) -> Vec<String> {
+        self.inner.lock().unwrap().series.keys().cloned().collect()
+    }
+
+    pub fn examples(&self) -> Vec<(u64, String)> {
+        self.inner.lock().unwrap().examples.clone()
+    }
+
+    /// Write every series as CSV under the out dir (one file per role).
+    pub fn flush_csv(&self) -> Result<()> {
+        let Some(dir) = &self.out_dir else { return Ok(()) };
+        let inner = self.inner.lock().unwrap();
+        for (key, points) in &inner.series {
+            let fname = format!("{}.csv", key.replace('/', "_"));
+            let mut f = std::fs::File::create(dir.join(fname))?;
+            writeln!(f, "step,value")?;
+            for (s, v) in points {
+                writeln!(f, "{s},{v}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn series_accumulate() {
+        let m = Monitor::in_memory();
+        m.log("trainer", 1, &[("loss".into(), 0.5), ("reward".into(), 0.1)]);
+        m.log("trainer", 2, &[("loss".into(), 0.4)]);
+        m.log("explorer-0", 1, &[("reward".into(), 0.2)]);
+        assert_eq!(m.series("trainer/loss"), vec![(1, 0.5), (2, 0.4)]);
+        assert_eq!(m.series_values("explorer-0/reward"), vec![0.2]);
+        assert_eq!(m.keys().len(), 3);
+    }
+
+    #[test]
+    fn jsonl_and_csv_written() {
+        let dir = std::env::temp_dir().join(format!("trft_mon_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let m = Monitor::new(Some(dir.clone())).unwrap();
+        m.log("trainer", 1, &[("loss".into(), 1.0)]);
+        m.log_example(1, "Q: 1+1 | A: 2");
+        m.flush_csv().unwrap();
+        let jsonl = std::fs::read_to_string(dir.join("metrics.jsonl")).unwrap();
+        assert!(jsonl.lines().count() == 2);
+        assert!(Value::parse(jsonl.lines().next().unwrap()).is_ok());
+        let csv = std::fs::read_to_string(dir.join("trainer_loss.csv")).unwrap();
+        assert!(csv.contains("1,1"));
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn examples_captured() {
+        let m = Monitor::in_memory();
+        m.log_example(5, "hello");
+        assert_eq!(m.examples(), vec![(5, "hello".to_string())]);
+    }
+}

@@ -1,0 +1,223 @@
+//! Task sources: where the explorer's work comes from.  The default
+//! sources wrap the synthetic envs; `PrioritizedTaskSource` serves a
+//! pre-curated, priority-ordered task set produced by the data pipeline
+//! (curriculum learning, Fig. 10).
+
+use std::sync::Mutex;
+
+use crate::envs::math::MathTaskGen;
+use crate::explorer::Task;
+use crate::util::json::Value;
+
+pub trait TaskSource: Send + Sync {
+    /// Next batch of `n` tasks (each expanded to `repeat_times` rollouts
+    /// by its workflow).
+    fn next_batch(&self, n: usize) -> Vec<Task>;
+    /// A held-out evaluation batch (disjoint from training tasks).
+    fn eval_batch(&self, n: usize) -> Vec<Task>;
+}
+
+/// Synthetic verifiable-math tasks in a difficulty band.
+pub struct MathTaskSource {
+    gen: Mutex<MathTaskGen>,
+    eval_gen: Mutex<MathTaskGen>,
+    pub min_difficulty: usize,
+    pub max_difficulty: usize,
+    pub repeat_times: usize,
+}
+
+impl MathTaskSource {
+    pub fn new(seed: u64, min_d: usize, max_d: usize, repeat_times: usize) -> MathTaskSource {
+        MathTaskSource {
+            gen: Mutex::new(MathTaskGen::new(seed, "train")),
+            eval_gen: Mutex::new(MathTaskGen::new(seed, "eval")),
+            min_difficulty: min_d,
+            max_difficulty: max_d,
+            repeat_times,
+        }
+    }
+
+    fn make(&self, gen: &Mutex<MathTaskGen>, n: usize) -> Vec<Task> {
+        let mut g = gen.lock().unwrap();
+        g.gen_batch(n, self.min_difficulty, self.max_difficulty)
+            .into_iter()
+            .map(|mt| {
+                let mut t = Task::new(&mt.id, "math", mt.to_payload());
+                t.difficulty = mt.difficulty as f64;
+                t.repeat_times = self.repeat_times;
+                t
+            })
+            .collect()
+    }
+}
+
+impl TaskSource for MathTaskSource {
+    fn next_batch(&self, n: usize) -> Vec<Task> {
+        self.make(&self.gen, n)
+    }
+    fn eval_batch(&self, n: usize) -> Vec<Task> {
+        self.make(&self.eval_gen, n)
+    }
+}
+
+/// Benchmark-tier eval sets (the AIME/AMC/MATH500 stand-ins).
+pub fn benchmark_tasks(tier: &str, n: usize, repeat_times: usize, seed: u64) -> Vec<Task> {
+    let (lo, hi) = MathTaskGen::benchmark_difficulty(tier);
+    let mut g = MathTaskGen::new(seed, tier);
+    g.gen_batch(n, lo, hi)
+        .into_iter()
+        .map(|mt| {
+            let mut t = Task::new(&mt.id, "math", mt.to_payload());
+            t.difficulty = mt.difficulty as f64;
+            t.repeat_times = repeat_times;
+            t
+        })
+        .collect()
+}
+
+/// Multi-turn grid-world episodes.
+pub struct AlfworldTaskSource {
+    counter: Mutex<u64>,
+    pub seed: u64,
+    pub repeat_times: usize,
+}
+
+impl AlfworldTaskSource {
+    pub fn new(seed: u64, repeat_times: usize) -> AlfworldTaskSource {
+        AlfworldTaskSource { counter: Mutex::new(0), seed, repeat_times }
+    }
+}
+
+impl TaskSource for AlfworldTaskSource {
+    fn next_batch(&self, n: usize) -> Vec<Task> {
+        let mut c = self.counter.lock().unwrap();
+        (0..n)
+            .map(|_| {
+                *c += 1;
+                let env_seed = self.seed.wrapping_add(*c);
+                let mut t = Task::new(
+                    &format!("alf-{}", *c),
+                    "alfworld",
+                    Value::obj(vec![("seed", Value::num(env_seed as f64))]),
+                );
+                t.repeat_times = self.repeat_times;
+                t
+            })
+            .collect()
+    }
+
+    fn eval_batch(&self, n: usize) -> Vec<Task> {
+        (0..n)
+            .map(|i| {
+                let env_seed = self.seed.wrapping_add(1_000_000 + i as u64);
+                let mut t = Task::new(
+                    &format!("alf-eval-{i}"),
+                    "alfworld",
+                    Value::obj(vec![("seed", Value::num(env_seed as f64))]),
+                );
+                t.repeat_times = self.repeat_times;
+                t
+            })
+            .collect()
+    }
+}
+
+/// A fixed, pre-curated task list served in priority order, cycling when
+/// exhausted (the output of the task-curation pipeline).
+pub struct PrioritizedTaskSource {
+    tasks: Vec<Task>,
+    eval: Vec<Task>,
+    cursor: Mutex<usize>,
+}
+
+impl PrioritizedTaskSource {
+    pub fn new(tasks: Vec<Task>, eval: Vec<Task>) -> PrioritizedTaskSource {
+        PrioritizedTaskSource { tasks, eval, cursor: Mutex::new(0) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.tasks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tasks.is_empty()
+    }
+}
+
+impl TaskSource for PrioritizedTaskSource {
+    fn next_batch(&self, n: usize) -> Vec<Task> {
+        let mut cursor = self.cursor.lock().unwrap();
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            if self.tasks.is_empty() {
+                break;
+            }
+            out.push(self.tasks[*cursor % self.tasks.len()].clone());
+            *cursor += 1;
+        }
+        out
+    }
+
+    fn eval_batch(&self, n: usize) -> Vec<Task> {
+        self.eval.iter().take(n).cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn math_source_batches_with_difficulty_band() {
+        let s = MathTaskSource::new(1, 2, 4, 8);
+        let b = s.next_batch(6);
+        assert_eq!(b.len(), 6);
+        for t in &b {
+            assert!((2.0..=4.0).contains(&t.difficulty));
+            assert_eq!(t.repeat_times, 8);
+            assert!(t.payload.get("question").is_some());
+        }
+        // train and eval are disjoint streams
+        let e = s.eval_batch(6);
+        assert_ne!(
+            b[0].payload.get("question").unwrap().as_str(),
+            e[0].payload.get("question").unwrap().as_str()
+        );
+    }
+
+    #[test]
+    fn benchmark_tiers_have_expected_difficulty() {
+        let t = benchmark_tasks("aime25s", 10, 4, 3);
+        assert_eq!(t.len(), 10);
+        assert!(t.iter().all(|x| x.difficulty >= 5.0));
+        let easy = benchmark_tasks("math500s", 10, 4, 3);
+        assert!(easy.iter().all(|x| x.difficulty <= 2.0));
+    }
+
+    #[test]
+    fn prioritized_source_cycles_in_order() {
+        let tasks: Vec<Task> = (0..3)
+            .map(|i| Task::new(&format!("p{i}"), "math", Value::Object(vec![])))
+            .collect();
+        let s = PrioritizedTaskSource::new(tasks, vec![]);
+        let b = s.next_batch(5);
+        let ids: Vec<&str> = b.iter().map(|t| t.id.as_str()).collect();
+        assert_eq!(ids, vec!["p0", "p1", "p2", "p0", "p1"]);
+    }
+
+    #[test]
+    fn alfworld_source_unique_seeds() {
+        let s = AlfworldTaskSource::new(9, 2);
+        let b1 = s.next_batch(3);
+        let b2 = s.next_batch(3);
+        let seeds: Vec<f64> = b1
+            .iter()
+            .chain(&b2)
+            .map(|t| t.payload.get("seed").unwrap().as_f64().unwrap())
+            .collect();
+        let mut uniq = seeds.clone();
+        uniq.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        uniq.dedup();
+        assert_eq!(uniq.len(), seeds.len());
+    }
+}

@@ -1,0 +1,117 @@
+//! Agent-driven data processing (paper §2.3.3): translate a high-level
+//! natural-language objective ("improve response diversity and safety")
+//! into an executable operator pipeline.  The translator is rule-based —
+//! the framework seam is identical to the paper's (command -> pipeline),
+//! with the LLM planner swapped for keyword rules per the substitution
+//! policy in DESIGN.md.
+
+use std::sync::Arc;
+
+use crate::tokenizer::Tokenizer;
+
+use super::experience_pipeline::{
+    ChainProcessor, ExperienceProcessor, OperatorProcessor, QualityRewardProcessor,
+};
+use super::operators::{
+    DedupFilter, FailureRepair, LengthFilter, OperatorPool, QualityScorer, SafetyFilter,
+    SuccessAmplifier,
+};
+
+/// The plan produced from a command: named stages for transparency
+/// (what the paper's UI shows) plus the executable processor.
+pub struct AgenticPlan {
+    pub stages: Vec<String>,
+    pub processor: Arc<dyn ExperienceProcessor>,
+}
+
+/// Translate a natural-language processing objective into a pipeline.
+pub fn translate_command(command: &str, tokenizer: Arc<Tokenizer>) -> AgenticPlan {
+    let lower = command.to_lowercase();
+    let mut pool = OperatorPool::default();
+    let mut stages: Vec<String> = vec![];
+    let mut extra: Vec<Arc<dyn ExperienceProcessor>> = vec![];
+
+    if lower.contains("clean") || lower.contains("filter") || lower.contains("length") {
+        pool.push(Box::new(LengthFilter { min_tokens: 1, max_tokens: 512 }));
+        stages.push("length_filter".into());
+    }
+    if lower.contains("dedup") || lower.contains("duplicate") || lower.contains("diversity") {
+        pool.push(Box::new(DedupFilter { similarity_threshold: 0.9 }));
+        stages.push("dedup".into());
+    }
+    if lower.contains("safety") || lower.contains("safe") || lower.contains("toxic") {
+        pool.push(Box::new(SafetyFilter));
+        stages.push("safety_filter".into());
+    }
+    if lower.contains("quality") {
+        pool.push(Box::new(QualityScorer));
+        stages.push("quality_scorer".into());
+        extra.push(Arc::new(QualityRewardProcessor { weight: 1.0 }));
+        stages.push("quality_reward".into());
+    }
+    if lower.contains("amplif") || lower.contains("success") {
+        pool.push(Box::new(SuccessAmplifier { reward_threshold: 0.5, factor: 2 }));
+        stages.push("success_amplifier".into());
+    }
+    if lower.contains("repair") || lower.contains("fix") || lower.contains("failure") {
+        pool.push(Box::new(FailureRepair { tokenizer: Arc::clone(&tokenizer) }));
+        stages.push("failure_repair".into());
+    }
+    if stages.is_empty() {
+        // default hygiene pipeline
+        pool.push(Box::new(LengthFilter { min_tokens: 1, max_tokens: 512 }));
+        pool.push(Box::new(DedupFilter { similarity_threshold: 1.0 }));
+        stages = vec!["length_filter".into(), "dedup".into()];
+    }
+
+    let mut chain: Vec<Arc<dyn ExperienceProcessor>> = vec![Arc::new(OperatorProcessor { pool })];
+    chain.extend(extra);
+    AgenticPlan { stages, processor: Arc::new(ChainProcessor { stages: chain }) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::buffer::Experience;
+    use crate::util::json::Value;
+
+    fn tok() -> Arc<Tokenizer> {
+        Arc::new(Tokenizer::new())
+    }
+
+    #[test]
+    fn diversity_and_safety_command() {
+        let plan =
+            translate_command("improve response diversity and safety for coding scenarios", tok());
+        assert!(plan.stages.contains(&"dedup".to_string()));
+        assert!(plan.stages.contains(&"safety_filter".to_string()));
+    }
+
+    #[test]
+    fn quality_command_builds_reward_stage() {
+        let plan = translate_command("improve quality", tok());
+        assert!(plan.stages.contains(&"quality_reward".to_string()));
+        let mut e = Experience::new("t", vec![1, 10, 11, 2], 1, 0.0);
+        e.set_meta("response", Value::str("42"));
+        let out = plan.processor.process(vec![e]).unwrap();
+        assert!(out[0].reward > 0.0);
+    }
+
+    #[test]
+    fn empty_command_gets_default_hygiene() {
+        let plan = translate_command("do something", tok());
+        assert_eq!(plan.stages, vec!["length_filter", "dedup"]);
+    }
+
+    #[test]
+    fn pipeline_executes_end_to_end() {
+        let plan = translate_command("dedup and amplify successes", tok());
+        let mut good = Experience::new("g", vec![1, 10, 11, 12, 13, 2], 1, 1.0);
+        good.set_meta("response", Value::str("9"));
+        let dup = good.clone();
+        let out = plan.processor.process(vec![good, dup]).unwrap();
+        // dedup drops the copy, amplifier duplicates the survivor
+        assert_eq!(out.len(), 2);
+        assert!(out[1].metadata.get("amplified").is_some());
+    }
+}

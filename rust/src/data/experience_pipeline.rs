@@ -1,0 +1,279 @@
+//! Active experience shaping (paper §2.3.3): processors applied between
+//! explorer and trainer, at every RFT step, so the reward signal adapts to
+//! the evolving policy.
+//!
+//! * [`QualityRewardProcessor`] — Fig. 12: add a quality score in
+//!   [-0.5, 0.5] to the sparse rule reward.
+//! * [`DiversityRewardProcessor`] — Fig. 14: reward distance from the
+//!   group-mean embedding (policy-collapse counterweight) with a decaying
+//!   weight schedule.
+//! * [`ShapingBuffer`] — the adapter that interposes a processor chain on
+//!   every buffer write, so any mode picks up shaping transparently.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::buffer::{Experience, ExperienceBuffer};
+use crate::explorer::GenerationEngine;
+use crate::runtime::Tensor;
+use crate::util::json::Value;
+
+use super::operators::QualityScorer;
+
+/// A shaping stage: transform a batch of fresh experiences before they
+/// become visible to the trainer.
+pub trait ExperienceProcessor: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn process(&self, exps: Vec<Experience>) -> Result<Vec<Experience>>;
+}
+
+/// Chain of processors applied in order.
+pub struct ChainProcessor {
+    pub stages: Vec<Arc<dyn ExperienceProcessor>>,
+}
+
+impl ExperienceProcessor for ChainProcessor {
+    fn name(&self) -> &'static str {
+        "chain"
+    }
+    fn process(&self, mut exps: Vec<Experience>) -> Result<Vec<Experience>> {
+        for s in &self.stages {
+            exps = s.process(exps)?;
+        }
+        Ok(exps)
+    }
+}
+
+/// Fig. 12: reward += weight * quality, quality in [-0.5, 0.5].
+pub struct QualityRewardProcessor {
+    pub weight: f32,
+}
+
+impl ExperienceProcessor for QualityRewardProcessor {
+    fn name(&self) -> &'static str {
+        "quality_reward"
+    }
+    fn process(&self, exps: Vec<Experience>) -> Result<Vec<Experience>> {
+        let scorer = QualityScorer;
+        Ok(exps
+            .into_iter()
+            .map(|mut e| {
+                let q = scorer.score(&e) as f32;
+                e.set_meta("quality", Value::num(q as f64));
+                e.set_meta("base_reward", Value::num(e.reward as f64));
+                e.reward += self.weight * q;
+                e
+            })
+            .collect())
+    }
+}
+
+/// Fig. 14: diversity reward = 1 - cos(embedding, group mean), weighted by
+/// a schedule decaying from `w_start` to `w_end` over `decay_steps` calls.
+/// Embeddings come from the policy model's pooled-embedding artifact (the
+/// GTE-embedder stand-in).
+pub struct DiversityRewardProcessor {
+    pub engine: Arc<GenerationEngine>,
+    pub w_start: f32,
+    pub w_end: f32,
+    pub decay_steps: u64,
+    calls: AtomicU64,
+}
+
+impl DiversityRewardProcessor {
+    pub fn new(engine: Arc<GenerationEngine>, w_start: f32, w_end: f32, decay_steps: u64) -> Self {
+        DiversityRewardProcessor { engine, w_start, w_end, decay_steps, calls: AtomicU64::new(0) }
+    }
+
+    fn current_weight(&self) -> f32 {
+        let t = self.calls.fetch_add(1, Ordering::SeqCst) as f32;
+        let frac = (t / self.decay_steps.max(1) as f32).min(1.0);
+        self.w_start + (self.w_end - self.w_start) * frac
+    }
+
+    /// Compute embeddings for the batch through the embed artifact,
+    /// bucketing to the artifact's [B, T] shape.
+    fn embeddings(&self, exps: &[Experience]) -> Result<Vec<Vec<f32>>> {
+        let engine = self.engine.engine();
+        let (b, t) = engine.seq_shape();
+        let mut out: Vec<Vec<f32>> = Vec::with_capacity(exps.len());
+        let snapshot = self.engine.snapshot_weights()?;
+        let params = crate::model::ParamStore::from_snapshot(&engine.model, &snapshot)?;
+        for chunk in exps.chunks(b) {
+            let mut tokens = vec![0i32; b * t];
+            let mut mask = vec![0f32; b * t];
+            for (i, e) in chunk.iter().enumerate() {
+                let n = e.tokens.len().min(t);
+                tokens[i * t..i * t + n].copy_from_slice(&e.tokens[..n]);
+                for j in 0..n {
+                    mask[i * t + j] = 1.0;
+                }
+            }
+            let emb = engine.embed(
+                &params,
+                &Tensor::from_i32(vec![b, t], tokens),
+                &Tensor::from_f32(vec![b, t], mask),
+            )?;
+            for i in 0..chunk.len() {
+                out.push(emb.row_f32(i)?.to_vec());
+            }
+        }
+        Ok(out)
+    }
+}
+
+fn cosine(a: &[f32], b: &[f32]) -> f32 {
+    let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+    let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+    let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if na * nb < 1e-12 {
+        0.0
+    } else {
+        dot / (na * nb)
+    }
+}
+
+impl ExperienceProcessor for DiversityRewardProcessor {
+    fn name(&self) -> &'static str {
+        "diversity_reward"
+    }
+    fn process(&self, mut exps: Vec<Experience>) -> Result<Vec<Experience>> {
+        if exps.is_empty() {
+            return Ok(exps);
+        }
+        let weight = self.current_weight();
+        let embeddings = self.embeddings(&exps)?;
+        // group-mean embeddings
+        let mut groups: HashMap<u64, (Vec<f32>, usize)> = HashMap::new();
+        let dim = embeddings[0].len();
+        for (e, emb) in exps.iter().zip(&embeddings) {
+            let entry = groups.entry(e.group).or_insert_with(|| (vec![0.0; dim], 0));
+            for (s, v) in entry.0.iter_mut().zip(emb) {
+                *s += v;
+            }
+            entry.1 += 1;
+        }
+        for (sum, n) in groups.values_mut() {
+            for s in sum.iter_mut() {
+                *s /= *n as f32;
+            }
+        }
+        for (e, emb) in exps.iter_mut().zip(&embeddings) {
+            let mean = &groups[&e.group].0;
+            let diversity = 1.0 - cosine(emb, mean);
+            e.set_meta("diversity", Value::num(diversity as f64));
+            e.set_meta("diversity_weight", Value::num(weight as f64));
+            e.reward += weight * diversity;
+        }
+        Ok(exps)
+    }
+}
+
+/// Buffer adapter: apply a processor chain on every write, then forward.
+/// This is how shaping interposes between explorer and trainer in all
+/// modes without either knowing (paper Fig. 5, right side).
+pub struct ShapingBuffer {
+    inner: Arc<dyn ExperienceBuffer>,
+    processor: Arc<dyn ExperienceProcessor>,
+}
+
+impl ShapingBuffer {
+    pub fn new(inner: Arc<dyn ExperienceBuffer>, processor: Arc<dyn ExperienceProcessor>) -> Self {
+        ShapingBuffer { inner, processor }
+    }
+}
+
+impl ExperienceBuffer for ShapingBuffer {
+    fn write(&self, exps: Vec<Experience>) -> Result<()> {
+        let shaped = self.processor.process(exps)?;
+        if shaped.is_empty() {
+            return Ok(());
+        }
+        self.inner.write(shaped)
+    }
+    fn read(&self, n: usize, timeout: Duration) -> Result<Vec<Experience>> {
+        self.inner.read(n, timeout)
+    }
+    fn ready_len(&self) -> usize {
+        self.inner.ready_len()
+    }
+    fn total_written(&self) -> u64 {
+        self.inner.total_written()
+    }
+    fn close(&self) {
+        self.inner.close()
+    }
+}
+
+/// Operator-pool-backed processor (clean/filter/synthesize stages built
+/// from `data::operators`).
+pub struct OperatorProcessor {
+    pub pool: super::operators::OperatorPool,
+}
+
+impl ExperienceProcessor for OperatorProcessor {
+    fn name(&self) -> &'static str {
+        "operators"
+    }
+    fn process(&self, exps: Vec<Experience>) -> Result<Vec<Experience>> {
+        Ok(self.pool.apply(exps))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::buffer::QueueBuffer;
+
+    fn exp(resp: &str, reward: f32, group: u64) -> Experience {
+        let mut e = Experience::new("t", vec![1, 10, 11, 2], 1, reward);
+        e.group = group;
+        e.set_meta("response", Value::str(resp));
+        e
+    }
+
+    #[test]
+    fn quality_reward_augments() {
+        let p = QualityRewardProcessor { weight: 1.0 };
+        let out = p.process(vec![exp("42", 1.0, 1), exp("", 0.0, 1)]).unwrap();
+        // "42" gets positive quality, "" negative
+        assert!(out[0].reward > 1.0);
+        assert!(out[1].reward < 0.0);
+        assert_eq!(out[0].meta_f64("base_reward"), Some(1.0));
+    }
+
+    #[test]
+    fn shaping_buffer_applies_on_write() {
+        let q = Arc::new(QueueBuffer::new(16));
+        let shaped = ShapingBuffer::new(q.clone(), Arc::new(QualityRewardProcessor { weight: 1.0 }));
+        shaped.write(vec![exp("42", 0.0, 1)]).unwrap();
+        let got = shaped.read(1, Duration::from_millis(10)).unwrap();
+        assert!(got[0].reward > 0.0);
+        assert!(got[0].meta_f64("quality").is_some());
+    }
+
+    #[test]
+    fn chain_runs_in_order() {
+        let chain = ChainProcessor {
+            stages: vec![
+                Arc::new(QualityRewardProcessor { weight: 0.5 }),
+                Arc::new(QualityRewardProcessor { weight: 0.5 }),
+            ],
+        };
+        let out = chain.process(vec![exp("7", 0.0, 1)]).unwrap();
+        // applied twice
+        let q = out[0].meta_f64("quality").unwrap() as f32;
+        assert!((out[0].reward - q).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cosine_helper() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-6);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-6);
+        assert!((cosine(&[1.0, 0.0], &[-1.0, 0.0]) + 1.0).abs() < 1e-6);
+    }
+}

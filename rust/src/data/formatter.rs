@@ -1,0 +1,166 @@
+//! The Formatter module (paper §2.3.1): convert disparate raw records
+//! (prompt/response pairs, QA with tagged rewards, preference pairs) into
+//! the structured task / experience / DPO schemas, with field
+//! normalization and metadata recording.
+
+use anyhow::{Context, Result};
+
+use crate::buffer::{Experience, Source};
+use crate::explorer::Task;
+use crate::tokenizer::Tokenizer;
+use crate::util::json::Value;
+
+/// Field mapping for raw records (the paper's `format:` config block).
+#[derive(Debug, Clone)]
+pub struct FormatSpec {
+    pub prompt_key: String,
+    pub response_key: String,
+    pub reward_key: Option<String>,
+}
+
+impl Default for FormatSpec {
+    fn default() -> Self {
+        FormatSpec {
+            prompt_key: "question".into(),
+            response_key: "answer".into(),
+            reward_key: None,
+        }
+    }
+}
+
+pub struct Formatter {
+    pub spec: FormatSpec,
+    pub tokenizer: std::sync::Arc<Tokenizer>,
+}
+
+impl Formatter {
+    /// Raw record -> rollout Task (the task-pipeline input path).
+    pub fn to_task(&self, id: &str, workflow: &str, raw: &Value) -> Result<Task> {
+        let question = raw
+            .get(&self.spec.prompt_key)
+            .and_then(Value::as_str)
+            .with_context(|| format!("raw record missing '{}'", self.spec.prompt_key))?;
+        let answer = raw.get(&self.spec.response_key).and_then(Value::as_str).unwrap_or("");
+        let mut payload = Value::obj(vec![
+            ("question", Value::str(question)),
+            ("answer", Value::str(answer)),
+        ]);
+        if let Some(d) = raw.get("difficulty") {
+            payload.set("difficulty", d.clone());
+        }
+        let mut t = Task::new(id, workflow, payload);
+        t.difficulty = raw.get("difficulty").and_then(Value::as_f64).unwrap_or(0.0);
+        Ok(t)
+    }
+
+    /// Raw (prompt, response[, reward]) -> expert Experience (SFT/MIX
+    /// warm-start data, paper §3.2).
+    pub fn to_expert_experience(&self, raw: &Value) -> Result<Experience> {
+        let prompt = raw
+            .get(&self.spec.prompt_key)
+            .and_then(Value::as_str)
+            .with_context(|| format!("raw record missing '{}'", self.spec.prompt_key))?;
+        let response = raw
+            .get(&self.spec.response_key)
+            .and_then(Value::as_str)
+            .with_context(|| format!("raw record missing '{}'", self.spec.response_key))?;
+        let reward = self
+            .spec
+            .reward_key
+            .as_ref()
+            .and_then(|k| raw.get(k))
+            .and_then(Value::as_f64)
+            .unwrap_or(1.0) as f32;
+        let mut tokens = self.tokenizer.encode_prompt(prompt);
+        let plen = tokens.len();
+        tokens.extend(self.tokenizer.encode(response));
+        tokens.push(crate::tokenizer::EOS);
+        let mut e = Experience::new("expert", tokens, plen, reward);
+        e.source = Source::Expert;
+        e.set_meta("response", Value::str(response));
+        Ok(e)
+    }
+
+    /// Raw preference record -> a chosen/rejected Experience pair sharing
+    /// `pair_id` (the DPODataModel analog).
+    pub fn to_preference_pair(&self, pair_id: u64, raw: &Value) -> Result<(Experience, Experience)> {
+        let prompt = raw
+            .get(&self.spec.prompt_key)
+            .and_then(Value::as_str)
+            .context("preference record missing prompt")?;
+        let chosen = raw.get("chosen").and_then(Value::as_str).context("missing 'chosen'")?;
+        let rejected = raw.get("rejected").and_then(Value::as_str).context("missing 'rejected'")?;
+        let build = |resp: &str, role: &str, reward: f32| -> Experience {
+            let mut tokens = self.tokenizer.encode_prompt(prompt);
+            let plen = tokens.len();
+            tokens.extend(self.tokenizer.encode(resp));
+            tokens.push(crate::tokenizer::EOS);
+            let mut e = Experience::new(&format!("pref-{pair_id}"), tokens, plen, reward);
+            e.source = Source::Human;
+            e.group = pair_id;
+            e.set_meta("pair", Value::num(pair_id as f64));
+            e.set_meta("role", Value::str(role));
+            e.set_meta("response", Value::str(resp));
+            e
+        };
+        Ok((build(chosen, "chosen", 1.0), build(rejected, "rejected", 0.0)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn formatter() -> Formatter {
+        Formatter { spec: FormatSpec::default(), tokenizer: std::sync::Arc::new(Tokenizer::new()) }
+    }
+
+    #[test]
+    fn raw_to_task() {
+        let f = formatter();
+        let raw = Value::obj(vec![
+            ("question", Value::str("what is 1 + 1")),
+            ("answer", Value::str("2")),
+            ("difficulty", Value::num(3.0)),
+        ]);
+        let t = f.to_task("t1", "math", &raw).unwrap();
+        assert_eq!(t.payload_str("question").unwrap(), "what is 1 + 1");
+        assert_eq!(t.difficulty, 3.0);
+    }
+
+    #[test]
+    fn raw_to_expert_experience() {
+        let f = formatter();
+        let raw = Value::obj(vec![
+            ("question", Value::str("what is 2 + 2")),
+            ("answer", Value::str("4")),
+        ]);
+        let e = f.to_expert_experience(&raw).unwrap();
+        assert_eq!(e.source, Source::Expert);
+        assert_eq!(e.reward, 1.0);
+        assert!(e.response_len() >= 2); // "4" + EOS
+        assert_eq!(f.tokenizer.decode_response(&e.tokens, e.prompt_len), "4");
+    }
+
+    #[test]
+    fn raw_to_preference_pair() {
+        let f = formatter();
+        let raw = Value::obj(vec![
+            ("question", Value::str("pick one")),
+            ("chosen", Value::str("good answer")),
+            ("rejected", Value::str("bad")),
+        ]);
+        let (c, r) = f.to_preference_pair(9, &raw).unwrap();
+        assert_eq!(c.metadata.get("role").unwrap().as_str(), Some("chosen"));
+        assert_eq!(r.metadata.get("role").unwrap().as_str(), Some("rejected"));
+        assert_eq!(c.meta_f64("pair"), Some(9.0));
+        assert_eq!(c.group, r.group);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let f = formatter();
+        assert!(f.to_task("x", "math", &Value::obj(vec![("other", Value::str("y"))])).is_err());
+        assert!(f.to_preference_pair(1, &Value::obj(vec![("question", Value::str("q"))])).is_err());
+    }
+}

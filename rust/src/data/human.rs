@@ -1,0 +1,314 @@
+//! Human-in-the-loop collaboration (paper §2.3.4, §3.5): annotation
+//! batches flow to a simulated annotator pool (the Label Studio stand-in)
+//! with realistic latency, inter-annotator agreement and noise; results
+//! commit atomically and become DPO preference pairs.
+//!
+//! The asynchronous execution model is the point: annotation requests are
+//! posted, the RFT loop keeps running, and completed batches are polled
+//! with a timeout (`wait_for_annotations` in the paper's config).
+
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+use crate::buffer::Experience;
+use crate::envs::math::verify;
+use crate::exec::ThreadPool;
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+
+/// One item: two candidate responses for a prompt; annotators pick one.
+#[derive(Debug, Clone)]
+pub struct AnnotationItem {
+    pub prompt: String,
+    pub answer_a: String,
+    pub answer_b: String,
+    /// Ground truth for the simulated annotator's judgement.
+    pub gold_answer: i64,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct AnnotationResult {
+    pub chosen_is_a: bool,
+    /// Agreement among annotators in [0, 1].
+    pub agreement: f64,
+}
+
+#[derive(Debug, Clone)]
+pub struct AnnotatorConfig {
+    /// Annotators per item (majority vote).
+    pub annotators_per_item: usize,
+    /// Probability each annotator judges correctly.
+    pub accuracy: f64,
+    /// Mean per-item latency (exponential).
+    pub mean_latency: Duration,
+    /// Items whose agreement falls below this are rejected (quality
+    /// control stage).
+    pub min_agreement: f64,
+}
+
+impl Default for AnnotatorConfig {
+    fn default() -> Self {
+        AnnotatorConfig {
+            annotators_per_item: 3,
+            accuracy: 0.9,
+            mean_latency: Duration::from_millis(10),
+            min_agreement: 0.6,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BatchStatus {
+    Pending,
+    Done,
+    Failed,
+}
+
+struct BatchState {
+    status: BatchStatus,
+    results: Vec<Option<AnnotationResult>>,
+}
+
+/// The annotation service: post batches, poll with timeout, atomic commit
+/// (a batch is visible only when every item is annotated).
+pub struct AnnotationService {
+    pool: Arc<ThreadPool>,
+    config: AnnotatorConfig,
+    batches: Arc<(Mutex<HashMap<u64, BatchState>>, Condvar)>,
+    next_id: Mutex<u64>,
+    seed: u64,
+}
+
+impl AnnotationService {
+    pub fn new(config: AnnotatorConfig, workers: usize, seed: u64) -> AnnotationService {
+        AnnotationService {
+            pool: Arc::new(ThreadPool::new("annotators", workers.max(1))),
+            config,
+            batches: Arc::new((Mutex::new(HashMap::new()), Condvar::new())),
+            next_id: Mutex::new(1),
+            seed,
+        }
+    }
+
+    /// Post a batch; returns its id immediately (async model).
+    pub fn post_batch(&self, items: Vec<AnnotationItem>) -> u64 {
+        let id = {
+            let mut next = self.next_id.lock().unwrap();
+            let id = *next;
+            *next += 1;
+            id
+        };
+        let n = items.len();
+        self.batches
+            .0
+            .lock()
+            .unwrap()
+            .insert(id, BatchState { status: BatchStatus::Pending, results: vec![None; n] });
+
+        for (idx, item) in items.into_iter().enumerate() {
+            let batches = Arc::clone(&self.batches);
+            let cfg = self.config.clone();
+            let seed = self.seed ^ (id << 16) ^ idx as u64;
+            self.pool.submit(move || {
+                let mut rng = Rng::new(seed);
+                if !cfg.mean_latency.is_zero() {
+                    let latency = rng.exponential(1.0 / cfg.mean_latency.as_secs_f64());
+                    std::thread::sleep(Duration::from_secs_f64(latency.min(2.0)));
+                }
+                // each simulated annotator votes; a "correct" vote picks the
+                // truly better answer (verified against gold)
+                let a_correct = verify(&item.answer_a, item.gold_answer) > 0.5;
+                let b_correct = verify(&item.answer_b, item.gold_answer) > 0.5;
+                let truth_is_a = a_correct || !b_correct;
+                let mut votes_a = 0usize;
+                for _ in 0..cfg.annotators_per_item {
+                    let correct = rng.bool(cfg.accuracy);
+                    let vote_a = if correct { truth_is_a } else { !truth_is_a };
+                    if vote_a {
+                        votes_a += 1;
+                    }
+                }
+                let majority_a = votes_a * 2 >= cfg.annotators_per_item;
+                let agreement = votes_a.max(cfg.annotators_per_item - votes_a) as f64
+                    / cfg.annotators_per_item as f64;
+                let result = AnnotationResult { chosen_is_a: majority_a, agreement };
+
+                let (lock, cvar) = &*batches;
+                let mut map = lock.lock().unwrap();
+                if let Some(state) = map.get_mut(&id) {
+                    state.results[idx] = Some(result);
+                    if state.results.iter().all(Option::is_some) {
+                        state.status = BatchStatus::Done; // atomic commit point
+                        cvar.notify_all();
+                    }
+                }
+            });
+        }
+        id
+    }
+
+    pub fn status(&self, batch_id: u64) -> BatchStatus {
+        self.batches
+            .0
+            .lock()
+            .unwrap()
+            .get(&batch_id)
+            .map(|s| s.status)
+            .unwrap_or(BatchStatus::Failed)
+    }
+
+    /// Timeout-aware poll (paper: `wait_for_annotations` + `timeout`).
+    /// Returns quality-controlled results (low-agreement items dropped).
+    pub fn wait_for_batch(
+        &self,
+        batch_id: u64,
+        timeout: Duration,
+    ) -> Result<Vec<(usize, AnnotationResult)>> {
+        let (lock, cvar) = &*self.batches;
+        let deadline = std::time::Instant::now() + timeout;
+        let mut map = lock.lock().unwrap();
+        loop {
+            match map.get(&batch_id) {
+                None => bail!("unknown annotation batch {batch_id}"),
+                Some(state) if state.status == BatchStatus::Done => {
+                    let results = state
+                        .results
+                        .iter()
+                        .enumerate()
+                        .filter_map(|(i, r)| r.clone().map(|r| (i, r)))
+                        .filter(|(_, r)| r.agreement >= self.config.min_agreement)
+                        .collect();
+                    return Ok(results);
+                }
+                Some(_) => {
+                    let now = std::time::Instant::now();
+                    if now >= deadline {
+                        bail!("annotation batch {batch_id} timed out");
+                    }
+                    let (guard, _) = cvar.wait_timeout(map, deadline - now).unwrap();
+                    map = guard;
+                }
+            }
+        }
+    }
+}
+
+/// Turn annotated preference items into DPO experience pairs.
+pub fn results_to_preference_pairs(
+    items: &[AnnotationItem],
+    results: &[(usize, AnnotationResult)],
+    formatter: &super::formatter::Formatter,
+) -> Result<Vec<Experience>> {
+    let mut out = Vec::with_capacity(results.len() * 2);
+    for (idx, res) in results {
+        let item = &items[*idx];
+        let (chosen, rejected) = if res.chosen_is_a {
+            (&item.answer_a, &item.answer_b)
+        } else {
+            (&item.answer_b, &item.answer_a)
+        };
+        let raw = Value::obj(vec![
+            ("question", Value::str(item.prompt.clone())),
+            ("chosen", Value::str(chosen.clone())),
+            ("rejected", Value::str(rejected.clone())),
+        ]);
+        let (mut c, mut r) = formatter.to_preference_pair(*idx as u64 + 1, &raw)?;
+        c.set_meta("agreement", Value::num(res.agreement));
+        r.set_meta("agreement", Value::num(res.agreement));
+        out.push(c);
+        out.push(r);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn items(n: usize) -> Vec<AnnotationItem> {
+        (0..n)
+            .map(|i| AnnotationItem {
+                prompt: format!("what is 3 + {i} ?"),
+                answer_a: (3 + i as i64).to_string(), // correct
+                answer_b: "99".to_string(),           // wrong
+                gold_answer: 3 + i as i64,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn batch_completes_and_majority_is_correct() {
+        let svc = AnnotationService::new(
+            AnnotatorConfig { mean_latency: Duration::from_millis(2), ..Default::default() },
+            4,
+            1,
+        );
+        let batch = items(8);
+        let id = svc.post_batch(batch);
+        assert_eq!(svc.status(id), BatchStatus::Pending);
+        let results = svc.wait_for_batch(id, Duration::from_secs(5)).unwrap();
+        assert!(!results.is_empty());
+        let correct = results.iter().filter(|(_, r)| r.chosen_is_a).count();
+        assert!(correct as f64 >= results.len() as f64 * 0.7, "{correct}/{}", results.len());
+        assert_eq!(svc.status(id), BatchStatus::Done);
+    }
+
+    #[test]
+    fn timeout_on_slow_annotators() {
+        let svc = AnnotationService::new(
+            AnnotatorConfig { mean_latency: Duration::from_millis(500), ..Default::default() },
+            1,
+            2,
+        );
+        let id = svc.post_batch(items(4));
+        assert!(svc.wait_for_batch(id, Duration::from_millis(30)).is_err());
+    }
+
+    #[test]
+    fn low_agreement_items_dropped() {
+        // accuracy 0.5 -> coin-flip annotators; with min_agreement 1.0 only
+        // unanimous items survive
+        let svc = AnnotationService::new(
+            AnnotatorConfig {
+                accuracy: 0.5,
+                min_agreement: 1.0,
+                mean_latency: Duration::ZERO,
+                annotators_per_item: 3,
+            },
+            4,
+            3,
+        );
+        let id = svc.post_batch(items(20));
+        let results = svc.wait_for_batch(id, Duration::from_secs(5)).unwrap();
+        assert!(results.len() < 20, "unanimity should be rare: {}", results.len());
+        assert!(results.iter().all(|(_, r)| r.agreement == 1.0));
+    }
+
+    #[test]
+    fn results_become_dpo_pairs() {
+        let batch = items(3);
+        let results: Vec<(usize, AnnotationResult)> = (0..3)
+            .map(|i| (i, AnnotationResult { chosen_is_a: true, agreement: 1.0 }))
+            .collect();
+        let formatter = super::super::formatter::Formatter {
+            spec: Default::default(),
+            tokenizer: Arc::new(crate::tokenizer::Tokenizer::new()),
+        };
+        let pairs = results_to_preference_pairs(&batch, &results, &formatter).unwrap();
+        assert_eq!(pairs.len(), 6);
+        let chosen: Vec<_> = pairs
+            .iter()
+            .filter(|e| e.metadata.get("role").unwrap().as_str() == Some("chosen"))
+            .collect();
+        assert_eq!(chosen.len(), 3);
+    }
+
+    #[test]
+    fn unknown_batch_errors() {
+        let svc = AnnotationService::new(Default::default(), 1, 4);
+        assert!(svc.wait_for_batch(999, Duration::from_millis(5)).is_err());
+    }
+}

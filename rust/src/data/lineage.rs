@@ -1,0 +1,115 @@
+//! LineageTracker (paper §2.3.4): parent/child links across shaping
+//! operations (amplification, repair, synthesis), with ancestry queries —
+//! the full-data-lineage requirement of the pgAdmin/asynchronous-training
+//! story.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use crate::buffer::Experience;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct LineageRecord {
+    pub id: u64,
+    pub parent: Option<u64>,
+    pub op: String,
+}
+
+#[derive(Default)]
+pub struct LineageTracker {
+    records: Mutex<HashMap<u64, LineageRecord>>,
+}
+
+impl LineageTracker {
+    pub fn new() -> LineageTracker {
+        Self::default()
+    }
+
+    pub fn record(&self, id: u64, parent: Option<u64>, op: &str) {
+        self.records
+            .lock()
+            .unwrap()
+            .insert(id, LineageRecord { id, parent, op: op.to_string() });
+    }
+
+    /// Record a batch after buffer assignment of ids.
+    pub fn record_batch(&self, exps: &[Experience], op: &str) {
+        let mut map = self.records.lock().unwrap();
+        for e in exps {
+            if e.id != 0 {
+                map.insert(e.id, LineageRecord { id: e.id, parent: e.parent_id, op: op.to_string() });
+            }
+        }
+    }
+
+    /// Walk ancestry from id to the root (inclusive, child-first).
+    pub fn ancestry(&self, id: u64) -> Vec<LineageRecord> {
+        let map = self.records.lock().unwrap();
+        let mut out = vec![];
+        let mut cur = Some(id);
+        while let Some(c) = cur {
+            match map.get(&c) {
+                Some(rec) => {
+                    out.push(rec.clone());
+                    cur = rec.parent;
+                }
+                None => break,
+            }
+            if out.len() > 1000 {
+                break; // cycle guard
+            }
+        }
+        out
+    }
+
+    /// Direct children of an id.
+    pub fn children(&self, id: u64) -> Vec<u64> {
+        let map = self.records.lock().unwrap();
+        let mut out: Vec<u64> =
+            map.values().filter(|r| r.parent == Some(id)).map(|r| r.id).collect();
+        out.sort_unstable();
+        out
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ancestry_chain() {
+        let t = LineageTracker::new();
+        t.record(1, None, "rollout");
+        t.record(2, Some(1), "amplify");
+        t.record(3, Some(2), "repair");
+        let chain = t.ancestry(3);
+        assert_eq!(chain.len(), 3);
+        assert_eq!(chain[0].op, "repair");
+        assert_eq!(chain[2].op, "rollout");
+        assert_eq!(t.children(1), vec![2]);
+    }
+
+    #[test]
+    fn batch_recording_skips_unassigned() {
+        let t = LineageTracker::new();
+        let mut a = Experience::new("a", vec![1], 0, 0.0);
+        a.id = 10;
+        let b = Experience::new("b", vec![1], 0, 0.0); // id 0 -> skipped
+        t.record_batch(&[a, b], "rollout");
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn missing_id_gives_empty_ancestry() {
+        let t = LineageTracker::new();
+        assert!(t.ancestry(42).is_empty());
+    }
+}

@@ -1,0 +1,31 @@
+//! Data pipelines (paper §2.3): tasks and experiences as *dynamic assets*.
+//!
+//! * [`operators`] — the Data-Juicer-analog operator pool: filters,
+//!   dedup, difficulty/quality scorers, success amplification, failure
+//!   repair.
+//! * [`task_pipeline`] — task curation & prioritization ahead of the RFT
+//!   loop (curriculum learning, Fig. 10).
+//! * [`experience_pipeline`] — active experience shaping between explorer
+//!   and trainer: quality (Fig. 12) and diversity (Fig. 14) reward
+//!   augmentation, composed processors, the `ShapingBuffer` adapter.
+//! * [`formatter`] — raw record -> task/experience conversion.
+//! * [`agentic`] — NL command -> operator pipeline translation.
+//! * [`human`] — human-in-the-loop simulation: annotator pool, timeout
+//!   polling, atomic batch commit, preference pairs (DPO data).
+//! * [`lineage`] — parent/child tracking across shaping operations.
+
+pub mod agentic;
+pub mod experience_pipeline;
+pub mod formatter;
+pub mod human;
+pub mod lineage;
+pub mod operators;
+pub mod task_pipeline;
+
+pub use experience_pipeline::{
+    ChainProcessor, DiversityRewardProcessor, ExperienceProcessor, QualityRewardProcessor,
+    ShapingBuffer,
+};
+pub use lineage::LineageTracker;
+pub use operators::{Operator, OperatorPool};
+pub use task_pipeline::TaskPipeline;

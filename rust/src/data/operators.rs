@@ -1,0 +1,350 @@
+//! The operator pool (Data-Juicer analog): composable building blocks for
+//! experience cleaning, safety alignment, scoring and synthesis
+//! (paper §2.3.2/§2.3.3).  Operators transform record lists; the pipeline
+//! modules chain them.
+
+use std::collections::HashSet;
+
+use crate::buffer::Experience;
+use crate::envs::math::format_score;
+use crate::util::json::Value;
+
+/// A record-level transform over experiences.
+pub trait Operator: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn apply(&self, exps: Vec<Experience>) -> Vec<Experience>;
+}
+
+// -- filters -----------------------------------------------------------------
+
+/// Drop experiences whose response length is outside [min, max] tokens.
+pub struct LengthFilter {
+    pub min_tokens: usize,
+    pub max_tokens: usize,
+}
+
+impl Operator for LengthFilter {
+    fn name(&self) -> &'static str {
+        "length_filter"
+    }
+    fn apply(&self, exps: Vec<Experience>) -> Vec<Experience> {
+        exps.into_iter()
+            .filter(|e| {
+                let n = e.response_len();
+                n >= self.min_tokens && n <= self.max_tokens
+            })
+            .collect()
+    }
+}
+
+/// Exact + near (token-shingle) dedup over responses.
+pub struct DedupFilter {
+    /// Jaccard-style threshold on 3-token shingles; 1.0 = exact only.
+    pub similarity_threshold: f64,
+}
+
+fn shingles(tokens: &[i32]) -> HashSet<(i32, i32, i32)> {
+    tokens.windows(3).map(|w| (w[0], w[1], w[2])).collect()
+}
+
+impl Operator for DedupFilter {
+    fn name(&self) -> &'static str {
+        "dedup"
+    }
+    fn apply(&self, exps: Vec<Experience>) -> Vec<Experience> {
+        let mut kept: Vec<Experience> = Vec::with_capacity(exps.len());
+        let mut kept_shingles: Vec<HashSet<(i32, i32, i32)>> = vec![];
+        'outer: for e in exps {
+            let resp: Vec<i32> = e
+                .tokens
+                .iter()
+                .zip(&e.loss_mask)
+                .filter(|(_, &m)| m > 0.0)
+                .map(|(&t, _)| t)
+                .collect();
+            let sh = shingles(&resp);
+            for prev in &kept_shingles {
+                if sh.is_empty() && prev.is_empty() {
+                    continue 'outer; // both degenerate -> duplicates
+                }
+                let inter = sh.intersection(prev).count() as f64;
+                let union = sh.union(prev).count() as f64;
+                if union > 0.0 && inter / union >= self.similarity_threshold {
+                    continue 'outer;
+                }
+            }
+            kept_shingles.push(sh);
+            kept.push(e);
+        }
+        kept
+    }
+}
+
+/// Toxicity-sim filter: drops experiences whose metadata marks them
+/// unsafe (the safety-alignment stand-in; a scorer upstream sets the tag).
+pub struct SafetyFilter;
+
+impl Operator for SafetyFilter {
+    fn name(&self) -> &'static str {
+        "safety_filter"
+    }
+    fn apply(&self, exps: Vec<Experience>) -> Vec<Experience> {
+        exps.into_iter()
+            .filter(|e| e.metadata.get("unsafe").and_then(Value::as_bool) != Some(true))
+            .collect()
+    }
+}
+
+// -- scorers -----------------------------------------------------------------
+
+/// Heuristic difficulty scorer for *task-like* records (the Qwen-Max
+/// stand-in): uses the task's declared difficulty when present, otherwise
+/// question length as a proxy.
+pub struct DifficultyScorer;
+
+impl DifficultyScorer {
+    pub fn score_task(&self, task: &crate::explorer::Task) -> f64 {
+        if task.difficulty > 0.0 {
+            return task.difficulty;
+        }
+        task.payload
+            .get("question")
+            .and_then(Value::as_str)
+            .map(|q| (q.len() as f64 / 10.0).min(8.0))
+            .unwrap_or(4.0)
+    }
+}
+
+/// Quality scorer (the Qwen3-32B llm_quality_filter stand-in): verifier
+/// outcome + well-formedness, normalized to [-0.5, 0.5] as in Fig. 12.
+pub struct QualityScorer;
+
+impl QualityScorer {
+    pub fn score(&self, e: &Experience) -> f64 {
+        let resp = e.metadata.get("response").and_then(Value::as_str).unwrap_or("");
+        // format_score in [0,1] -> [-0.5, 0.5]
+        (format_score(resp) as f64) - 0.5
+    }
+}
+
+impl Operator for QualityScorer {
+    fn name(&self) -> &'static str {
+        "quality_scorer"
+    }
+    fn apply(&self, exps: Vec<Experience>) -> Vec<Experience> {
+        exps.into_iter()
+            .map(|mut e| {
+                let q = self.score(&e);
+                e.set_meta("quality", Value::num(q));
+                e
+            })
+            .collect()
+    }
+}
+
+// -- synthesis ---------------------------------------------------------------
+
+/// Success amplification (paper §2.3.5): duplicate high-reward
+/// experiences `factor` times with lineage links.
+pub struct SuccessAmplifier {
+    pub reward_threshold: f32,
+    pub factor: usize,
+}
+
+impl Operator for SuccessAmplifier {
+    fn name(&self) -> &'static str {
+        "success_amplifier"
+    }
+    fn apply(&self, exps: Vec<Experience>) -> Vec<Experience> {
+        let mut out = Vec::with_capacity(exps.len());
+        for e in exps {
+            let amplify = e.reward >= self.reward_threshold;
+            let parent = e.id;
+            out.push(e.clone());
+            if amplify {
+                for _ in 1..self.factor.max(1) {
+                    let mut copy = e.clone();
+                    copy.id = 0; // buffer reassigns
+                    copy.parent_id = Some(parent).filter(|&p| p != 0);
+                    copy.set_meta("amplified", Value::Bool(true));
+                    out.push(copy);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Failure repair (paper §2.3.5): failed trajectories whose metadata
+/// carries a ground-truth answer are rewritten into corrected SFT-style
+/// experiences (reward 1, Synthetic source).  The repair function is
+/// pluggable; the default replaces the response with the gold answer.
+pub struct FailureRepair {
+    pub tokenizer: std::sync::Arc<crate::tokenizer::Tokenizer>,
+}
+
+impl Operator for FailureRepair {
+    fn name(&self) -> &'static str {
+        "failure_repair"
+    }
+    fn apply(&self, exps: Vec<Experience>) -> Vec<Experience> {
+        let mut out = Vec::with_capacity(exps.len());
+        for e in exps {
+            if e.reward <= 0.0 {
+                if let Some(answer) = e.metadata.get("gold_answer").and_then(Value::as_str) {
+                    let mut fixed = e.clone();
+                    fixed.id = 0;
+                    fixed.parent_id = Some(e.id).filter(|&p| p != 0);
+                    // rebuild: prompt + corrected answer
+                    let mut tokens = e.tokens[..e.prompt_len].to_vec();
+                    let answer_toks = self.tokenizer.encode(answer);
+                    tokens.extend_from_slice(&answer_toks);
+                    tokens.push(crate::tokenizer::EOS);
+                    let n = tokens.len();
+                    let mut mask = vec![0.0; e.prompt_len];
+                    mask.extend(std::iter::repeat(1.0).take(n - e.prompt_len));
+                    fixed.tokens = tokens;
+                    fixed.loss_mask = mask;
+                    fixed.logprobs = vec![0.0; n];
+                    fixed.reward = 1.0;
+                    fixed.source = crate::buffer::Source::Synthetic;
+                    fixed.set_meta("repaired", Value::Bool(true));
+                    out.push(fixed);
+                }
+            }
+            out.push(e);
+        }
+        out
+    }
+}
+
+/// A named pool of operators assembled by config or the agentic
+/// translator.
+#[derive(Default)]
+pub struct OperatorPool {
+    pub ops: Vec<Box<dyn Operator>>,
+}
+
+impl OperatorPool {
+    pub fn push(&mut self, op: Box<dyn Operator>) -> &mut Self {
+        self.ops.push(op);
+        self
+    }
+
+    pub fn apply(&self, mut exps: Vec<Experience>) -> Vec<Experience> {
+        for op in &self.ops {
+            exps = op.apply(exps);
+        }
+        exps
+    }
+
+    pub fn names(&self) -> Vec<&'static str> {
+        self.ops.iter().map(|o| o.name()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::buffer::Source;
+
+    fn exp_with_response(tokens: Vec<i32>, plen: usize, reward: f32, resp: &str) -> Experience {
+        let mut e = Experience::new("t", tokens, plen, reward);
+        e.set_meta("response", Value::str(resp));
+        e
+    }
+
+    #[test]
+    fn length_filter_bounds() {
+        let f = LengthFilter { min_tokens: 2, max_tokens: 4 };
+        let exps = vec![
+            Experience::new("a", vec![1, 2], 1, 0.0),          // resp 1 -> drop
+            Experience::new("b", vec![1, 2, 3], 1, 0.0),       // resp 2 -> keep
+            Experience::new("c", vec![1; 10], 1, 0.0),         // resp 9 -> drop
+        ];
+        let kept = f.apply(exps);
+        assert_eq!(kept.len(), 1);
+        assert_eq!(kept[0].task_id, "b");
+    }
+
+    #[test]
+    fn dedup_drops_exact_and_near() {
+        let f = DedupFilter { similarity_threshold: 0.8 };
+        let mk = |resp: Vec<i32>| {
+            let mut tokens = vec![1];
+            tokens.extend(&resp);
+            Experience::new("t", tokens, 1, 0.0)
+        };
+        let exps = vec![
+            mk(vec![10, 11, 12, 13, 14]),
+            mk(vec![10, 11, 12, 13, 14]),       // exact dup
+            mk(vec![10, 11, 12, 13, 15]),       // near dup (shingles overlap 3/5)
+            mk(vec![20, 21, 22, 23, 24]),       // distinct
+        ];
+        let kept = f.apply(exps);
+        assert_eq!(kept.len(), 3); // near-dup at 0.6 jaccard survives 0.8 threshold
+        let f2 = DedupFilter { similarity_threshold: 0.5 };
+        let exps2 = vec![
+            mk(vec![10, 11, 12, 13, 14]),
+            mk(vec![10, 11, 12, 13, 15]),
+            mk(vec![20, 21, 22, 23, 24]),
+        ];
+        assert_eq!(f2.apply(exps2).len(), 2);
+    }
+
+    #[test]
+    fn quality_scorer_annotates_in_range() {
+        let exps = vec![
+            exp_with_response(vec![1, 2, 3], 1, 0.0, "42"),
+            exp_with_response(vec![1, 2, 3], 1, 0.0, ""),
+        ];
+        let scored = QualityScorer.apply(exps);
+        let q0 = scored[0].meta_f64("quality").unwrap();
+        let q1 = scored[1].meta_f64("quality").unwrap();
+        assert!(q0 > q1);
+        assert!((-0.5..=0.5).contains(&q0));
+        assert!((-0.5..=0.5).contains(&q1));
+    }
+
+    #[test]
+    fn success_amplifier_duplicates_with_lineage() {
+        let mut good = Experience::new("g", vec![1, 2, 3], 1, 1.0);
+        good.id = 7;
+        let bad = Experience::new("b", vec![1, 2, 3], 1, 0.0);
+        let out = SuccessAmplifier { reward_threshold: 0.5, factor: 3 }.apply(vec![good, bad]);
+        assert_eq!(out.len(), 4); // 1 original + 2 copies + 1 bad
+        let copies: Vec<_> = out.iter().filter(|e| e.parent_id == Some(7)).collect();
+        assert_eq!(copies.len(), 2);
+        assert!(copies.iter().all(|c| c.id == 0));
+    }
+
+    #[test]
+    fn failure_repair_synthesizes_corrected() {
+        let tok = std::sync::Arc::new(crate::tokenizer::Tokenizer::new());
+        let prompt = tok.encode_prompt("what is 2 + 2 ?");
+        let plen = prompt.len();
+        let mut tokens = prompt;
+        tokens.extend(tok.encode("5"));
+        let mut e = Experience::new("t", tokens, plen, 0.0);
+        e.id = 3;
+        e.set_meta("gold_answer", Value::str("4"));
+        let out = FailureRepair { tokenizer: tok.clone() }.apply(vec![e]);
+        assert_eq!(out.len(), 2);
+        let repaired = &out[0];
+        assert_eq!(repaired.reward, 1.0);
+        assert_eq!(repaired.source, Source::Synthetic);
+        assert_eq!(repaired.parent_id, Some(3));
+        assert_eq!(tok.decode_response(&repaired.tokens, repaired.prompt_len), "4");
+    }
+
+    #[test]
+    fn pool_chains_operators() {
+        let mut pool = OperatorPool::default();
+        pool.push(Box::new(QualityScorer));
+        pool.push(Box::new(LengthFilter { min_tokens: 1, max_tokens: 100 }));
+        let out = pool.apply(vec![exp_with_response(vec![1, 2, 3], 1, 0.0, "7")]);
+        assert_eq!(out.len(), 1);
+        assert!(out[0].meta_f64("quality").is_some());
+        assert_eq!(pool.names(), vec!["quality_scorer", "length_filter"]);
+    }
+}

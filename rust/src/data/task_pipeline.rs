@@ -1,0 +1,108 @@
+//! Task curation & prioritization (paper §2.3.2, Fig. 5 left): raw tasks
+//! -> formatter -> scoring operators -> priority-ordered task set.
+//! With `priority_weights: {difficulty: -1.0}` this yields the easy->hard
+//! curriculum of Fig. 10.
+
+use anyhow::Result;
+
+use crate::explorer::Task;
+use crate::util::json::Value;
+
+use super::operators::DifficultyScorer;
+
+/// Priority weights over task features (the paper's YAML
+/// `priority_weights` block; negative difficulty = easy first).
+#[derive(Debug, Clone)]
+pub struct PriorityWeights {
+    pub difficulty: f64,
+    pub length: f64,
+}
+
+impl Default for PriorityWeights {
+    fn default() -> Self {
+        PriorityWeights { difficulty: 0.0, length: 0.0 }
+    }
+}
+
+pub struct TaskPipeline {
+    pub weights: PriorityWeights,
+    /// Drop tasks above this difficulty (0 = no cap).
+    pub max_difficulty: f64,
+}
+
+impl TaskPipeline {
+    pub fn new(weights: PriorityWeights) -> TaskPipeline {
+        TaskPipeline { weights, max_difficulty: 0.0 }
+    }
+
+    /// Curriculum preset: easy-to-hard ordering (Fig. 10's
+    /// `priority_weights: difficulty: -1.0`).
+    pub fn easy_to_hard() -> TaskPipeline {
+        TaskPipeline::new(PriorityWeights { difficulty: -1.0, length: 0.0 })
+    }
+
+    fn score(&self, task: &Task) -> f64 {
+        let difficulty = DifficultyScorer.score_task(task);
+        let length = task
+            .payload
+            .get("question")
+            .and_then(Value::as_str)
+            .map(|q| q.len() as f64)
+            .unwrap_or(0.0);
+        self.weights.difficulty * difficulty + self.weights.length * length
+    }
+
+    /// Curate and order a raw task set: score, filter, sort by descending
+    /// priority; annotates each task's metadata with its score.
+    pub fn run(&self, mut tasks: Vec<Task>) -> Result<Vec<Task>> {
+        if self.max_difficulty > 0.0 {
+            tasks.retain(|t| DifficultyScorer.score_task(t) <= self.max_difficulty);
+        }
+        let mut scored: Vec<(f64, Task)> =
+            tasks.into_iter().map(|t| (self.score(&t), t)).collect();
+        scored.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap());
+        Ok(scored
+            .into_iter()
+            .map(|(s, mut t)| {
+                t.payload.set("priority", Value::num(s));
+                t
+            })
+            .collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn task(id: &str, difficulty: f64) -> Task {
+        let mut t = Task::new(id, "math", Value::obj(vec![("question", Value::str("q"))]));
+        t.difficulty = difficulty;
+        t
+    }
+
+    #[test]
+    fn easy_to_hard_orders_ascending_difficulty() {
+        let p = TaskPipeline::easy_to_hard();
+        let out = p.run(vec![task("hard", 7.0), task("easy", 1.0), task("mid", 4.0)]).unwrap();
+        let ids: Vec<&str> = out.iter().map(|t| t.id.as_str()).collect();
+        assert_eq!(ids, vec!["easy", "mid", "hard"]);
+        assert!(out[0].payload.get("priority").is_some());
+    }
+
+    #[test]
+    fn hard_to_easy_with_positive_weight() {
+        let p = TaskPipeline::new(PriorityWeights { difficulty: 1.0, length: 0.0 });
+        let out = p.run(vec![task("a", 2.0), task("b", 6.0)]).unwrap();
+        assert_eq!(out[0].id, "b");
+    }
+
+    #[test]
+    fn difficulty_cap_filters() {
+        let mut p = TaskPipeline::easy_to_hard();
+        p.max_difficulty = 3.0;
+        let out = p.run(vec![task("keep", 2.0), task("drop", 5.0)]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, "keep");
+    }
+}

@@ -1,0 +1,344 @@
+//! Tabular softmax bandit for the Appendix-A OPMD study.
+//!
+//! The paper derives three OPMD variants in the bandit setting and reports
+//! that the "embarrassingly simple" variant equals the group-baseline
+//! policy gradient.  This module implements all three with analytic
+//! gradients over a tabular softmax policy, so the Appendix-A bench can
+//! reproduce the comparison (and verify the gradient identity) without any
+//! LLM in the loop.
+
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct Bandit {
+    pub means: Vec<f64>,
+    pub noise_std: f64,
+}
+
+impl Bandit {
+    pub fn new(means: Vec<f64>, noise_std: f64) -> Bandit {
+        Bandit { means, noise_std }
+    }
+
+    pub fn n_arms(&self) -> usize {
+        self.means.len()
+    }
+
+    pub fn pull(&self, arm: usize, rng: &mut Rng) -> f64 {
+        self.means[arm] + self.noise_std * rng.normal()
+    }
+
+    pub fn best_mean(&self) -> f64 {
+        self.means.iter().cloned().fold(f64::NEG_INFINITY, f64::max)
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct SoftmaxPolicy {
+    pub logits: Vec<f64>,
+}
+
+impl SoftmaxPolicy {
+    pub fn uniform(n: usize) -> SoftmaxPolicy {
+        SoftmaxPolicy { logits: vec![0.0; n] }
+    }
+
+    pub fn probs(&self) -> Vec<f64> {
+        let max = self.logits.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        let exps: Vec<f64> = self.logits.iter().map(|&l| (l - max).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        exps.iter().map(|e| e / z).collect()
+    }
+
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        rng.categorical(&self.probs())
+    }
+
+    pub fn log_prob(&self, arm: usize) -> f64 {
+        let p = self.probs();
+        p[arm].max(1e-300).ln()
+    }
+
+    /// d log pi(arm) / d logits = onehot(arm) - probs.
+    pub fn grad_log_prob(&self, arm: usize) -> Vec<f64> {
+        let mut g: Vec<f64> = self.probs().iter().map(|p| -p).collect();
+        g[arm] += 1.0;
+        g
+    }
+
+    pub fn apply_grad(&mut self, grad: &[f64], lr: f64) {
+        for (l, g) in self.logits.iter_mut().zip(grad) {
+            *l += lr * g;
+        }
+    }
+
+    pub fn expected_reward(&self, bandit: &Bandit) -> f64 {
+        self.probs().iter().zip(&bandit.means).map(|(p, m)| p * m).sum()
+    }
+}
+
+/// One sampled group: arms pulled from the *rollout* policy (which may be
+/// stale — that's the off-policy knob) plus their rewards and rollout
+/// log-probs.
+#[derive(Debug, Clone)]
+pub struct Group {
+    pub arms: Vec<usize>,
+    pub rewards: Vec<f64>,
+    pub rollout_log_probs: Vec<f64>,
+}
+
+pub fn sample_group(bandit: &Bandit, rollout: &SoftmaxPolicy, k: usize, rng: &mut Rng) -> Group {
+    let mut arms = Vec::with_capacity(k);
+    let mut rewards = Vec::with_capacity(k);
+    let mut lps = Vec::with_capacity(k);
+    for _ in 0..k {
+        let a = rollout.sample(rng);
+        rewards.push(bandit.pull(a, rng));
+        lps.push(rollout.log_prob(a));
+        arms.push(a);
+    }
+    Group { arms, rewards, rollout_log_probs: lps }
+}
+
+/// Gradient of the surrogate loss for each OPMD variant, wrt the *current*
+/// policy's logits, evaluated at the current policy.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpmdVariant {
+    /// Appendix A.1 — Kimi k1.5 squared-residual surrogate.
+    Kimi,
+    /// Appendix A.2 — pairwise surrogate (Z eliminated).
+    Pairwise,
+    /// Appendix A.3 — baseline-subtracted PG scaled by 1/(1+tau).
+    Simple,
+    /// Vanilla on-policy PG with group-mean baseline (reference).
+    VanillaPg,
+}
+
+pub fn surrogate_grad(
+    variant: OpmdVariant,
+    policy: &SoftmaxPolicy,
+    group: &Group,
+    tau: f64,
+) -> Vec<f64> {
+    let k = group.arms.len();
+    let n = policy.logits.len();
+    let mut grad = vec![0.0; n]; // gradient of the LOSS (descend this)
+    match variant {
+        OpmdVariant::Kimi => {
+            // loss = sum_i (r_i - tau log Z - tau (log pi - log pi_ref))^2
+            let max = group.rewards.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let z: f64 =
+                group.rewards.iter().map(|r| ((r - max) / tau).exp()).sum::<f64>() / k as f64;
+            let log_z = tau * z.ln() + max;
+            for i in 0..k {
+                let a_i = group.rewards[i]
+                    - log_z
+                    - tau * (policy.log_prob(group.arms[i]) - group.rollout_log_probs[i]);
+                let g = policy.grad_log_prob(group.arms[i]);
+                for j in 0..n {
+                    grad[j] += 2.0 * a_i * (-tau) * g[j];
+                }
+            }
+        }
+        OpmdVariant::Pairwise => {
+            // loss = sum_{i<j} (a_i - a_j)^2, a_i = r_i - tau (lp - lp_ref)
+            let a: Vec<f64> = (0..k)
+                .map(|i| {
+                    group.rewards[i]
+                        - tau * (policy.log_prob(group.arms[i]) - group.rollout_log_probs[i])
+                })
+                .collect();
+            let sum_a: f64 = a.iter().sum();
+            for i in 0..k {
+                // d loss / d a_i = 2 (K a_i - sum a); d a_i/d logits = -tau grad_lp
+                let coeff = 2.0 * (k as f64 * a[i] - sum_a) * (-tau);
+                let g = policy.grad_log_prob(group.arms[i]);
+                for j in 0..n {
+                    grad[j] += coeff * g[j] / (k as f64 * k as f64); // scale-normalized
+                }
+            }
+        }
+        OpmdVariant::Simple => {
+            // loss = -1/(1+tau) sum_i (r_i - rbar) log pi(y_i)
+            let rbar: f64 = group.rewards.iter().sum::<f64>() / k as f64;
+            for i in 0..k {
+                let adv = group.rewards[i] - rbar;
+                let g = policy.grad_log_prob(group.arms[i]);
+                for j in 0..n {
+                    grad[j] += -adv * g[j] / (1.0 + tau);
+                }
+            }
+        }
+        OpmdVariant::VanillaPg => {
+            let rbar: f64 = group.rewards.iter().sum::<f64>() / k as f64;
+            for i in 0..k {
+                let adv = group.rewards[i] - rbar;
+                let g = policy.grad_log_prob(group.arms[i]);
+                for j in 0..n {
+                    grad[j] += -adv * g[j];
+                }
+            }
+        }
+    }
+    grad
+}
+
+/// Run a full bandit learning curve; returns expected reward per step.
+/// `staleness` = how many steps the rollout policy lags the trained policy
+/// (0 = on-policy), the bandit-level analog of sync_interval.
+pub fn run_learning(
+    variant: OpmdVariant,
+    bandit: &Bandit,
+    steps: usize,
+    group_size: usize,
+    lr: f64,
+    tau: f64,
+    staleness: usize,
+    seed: u64,
+) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    let mut policy = SoftmaxPolicy::uniform(bandit.n_arms());
+    let mut rollout = policy.clone();
+    let mut curve = Vec::with_capacity(steps);
+    for step in 0..steps {
+        if staleness == 0 || step % staleness == 0 {
+            rollout = policy.clone();
+        }
+        let group = sample_group(bandit, &rollout, group_size, &mut rng);
+        let grad = surrogate_grad(variant, &policy, &group, tau);
+        // descend the loss
+        let neg: Vec<f64> = grad.iter().map(|g| -g).collect();
+        policy.apply_grad(&neg, lr);
+        curve.push(policy.expected_reward(bandit));
+    }
+    curve
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_bandit() -> Bandit {
+        Bandit::new(vec![0.1, 0.3, 0.9, 0.2], 0.05)
+    }
+
+    #[test]
+    fn softmax_probs_normalize() {
+        let p = SoftmaxPolicy { logits: vec![1.0, 2.0, 3.0] };
+        let probs = p.probs();
+        assert!((probs.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(probs[2] > probs[1] && probs[1] > probs[0]);
+    }
+
+    #[test]
+    fn grad_log_prob_sums_to_zero() {
+        let p = SoftmaxPolicy { logits: vec![0.5, -1.0, 2.0] };
+        let g = p.grad_log_prob(1);
+        assert!(g.iter().sum::<f64>().abs() < 1e-12);
+        assert!(g[1] > 0.0);
+    }
+
+    #[test]
+    fn simple_opmd_equals_scaled_vanilla_pg() {
+        // Appendix A.3's punchline, verified exactly at the bandit level.
+        let policy = SoftmaxPolicy { logits: vec![0.2, -0.3, 0.1, 0.7] };
+        let mut rng = Rng::new(5);
+        let group = sample_group(&test_bandit(), &policy, 8, &mut rng);
+        let tau = 1.5;
+        let g_simple = surrogate_grad(OpmdVariant::Simple, &policy, &group, tau);
+        let g_pg = surrogate_grad(OpmdVariant::VanillaPg, &policy, &group, tau);
+        for (a, b) in g_simple.iter().zip(&g_pg) {
+            assert!((a * (1.0 + tau) - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn kimi_grad_matches_finite_difference() {
+        let policy = SoftmaxPolicy { logits: vec![0.3, -0.2, 0.5] };
+        let mut rng = Rng::new(6);
+        let bandit = Bandit::new(vec![0.2, 0.8, 0.5], 0.0);
+        let group = sample_group(&bandit, &policy, 6, &mut rng);
+        let tau = 0.7;
+        let loss = |p: &SoftmaxPolicy| -> f64 {
+            let k = group.arms.len();
+            let max = group.rewards.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            let z: f64 =
+                group.rewards.iter().map(|r| ((r - max) / tau).exp()).sum::<f64>() / k as f64;
+            let log_z = tau * z.ln() + max;
+            (0..k)
+                .map(|i| {
+                    let a = group.rewards[i]
+                        - log_z
+                        - tau * (p.log_prob(group.arms[i]) - group.rollout_log_probs[i]);
+                    a * a
+                })
+                .sum()
+        };
+        let g = surrogate_grad(OpmdVariant::Kimi, &policy, &group, tau);
+        let eps = 1e-6;
+        for j in 0..3 {
+            let mut p_hi = policy.clone();
+            p_hi.logits[j] += eps;
+            let mut p_lo = policy.clone();
+            p_lo.logits[j] -= eps;
+            let fd = (loss(&p_hi) - loss(&p_lo)) / (2.0 * eps);
+            assert!((fd - g[j]).abs() < 1e-4, "arm {j}: fd {fd} vs analytic {}", g[j]);
+        }
+    }
+
+    #[test]
+    fn pairwise_grad_matches_finite_difference() {
+        let policy = SoftmaxPolicy { logits: vec![0.1, 0.4, -0.6] };
+        let mut rng = Rng::new(7);
+        let bandit = Bandit::new(vec![0.2, 0.8, 0.5], 0.0);
+        let group = sample_group(&bandit, &policy, 5, &mut rng);
+        let tau = 1.2;
+        let k = group.arms.len() as f64;
+        let loss = |p: &SoftmaxPolicy| -> f64 {
+            let a: Vec<f64> = group
+                .arms
+                .iter()
+                .zip(&group.rewards)
+                .zip(&group.rollout_log_probs)
+                .map(|((&arm, &r), &lp_ref)| r - tau * (p.log_prob(arm) - lp_ref))
+                .collect();
+            let sum: f64 = a.iter().sum();
+            let sq: f64 = a.iter().map(|x| x * x).sum();
+            (k * sq - sum * sum) / (k * k)
+        };
+        let g = surrogate_grad(OpmdVariant::Pairwise, &policy, &group, tau);
+        let eps = 1e-6;
+        for j in 0..3 {
+            let mut hi = policy.clone();
+            hi.logits[j] += eps;
+            let mut lo = policy.clone();
+            lo.logits[j] -= eps;
+            let fd = (loss(&hi) - loss(&lo)) / (2.0 * eps);
+            assert!((fd - g[j]).abs() < 1e-4, "arm {j}: fd {fd} vs analytic {}", g[j]);
+        }
+    }
+
+    #[test]
+    fn all_variants_learn_the_bandit() {
+        let bandit = test_bandit();
+        for variant in
+            [OpmdVariant::Kimi, OpmdVariant::Pairwise, OpmdVariant::Simple, OpmdVariant::VanillaPg]
+        {
+            let curve = run_learning(variant, &bandit, 400, 8, 0.3, 1.0, 0, 11);
+            let start = curve[0];
+            let late: f64 = curve[380..].iter().sum::<f64>() / 20.0;
+            assert!(
+                late > start && late > 0.8,
+                "{variant:?} failed to learn: {start:.3} -> {late:.3}"
+            );
+        }
+    }
+
+    #[test]
+    fn off_policy_staleness_still_learns_with_simple() {
+        let bandit = test_bandit();
+        let curve = run_learning(OpmdVariant::Simple, &bandit, 600, 8, 0.2, 1.0, 10, 13);
+        let late: f64 = curve[560..].iter().sum::<f64>() / 40.0;
+        assert!(late > 0.7, "stale rollouts should still converge: {late:.3}");
+    }
+}

@@ -1,0 +1,14 @@
+//! Environments: the paper's workloads rebuilt as synthetic, verifiable
+//! substrates (DESIGN.md §Hardware-Adaptation documents each substitution).
+//!
+//! * [`math`] — GSM8K stand-in: generated arithmetic (word) problems with
+//!   exact-match verifiable answers and a difficulty knob; four held-out
+//!   benchmark tiers stand in for AIME24/AIME25/AMC/MATH500.
+//! * [`alfworld`] — ALFWorld stand-in: a multi-turn text grid-world with
+//!   pick-and-place goals, long-tailed episode lengths and reset-vs-reinit
+//!   cost semantics.
+//! * [`bandit`] — the Appendix-A tabular softmax bandit for the OPMD study.
+
+pub mod alfworld;
+pub mod bandit;
+pub mod math;

@@ -1,0 +1,298 @@
+//! Bounded MPMC channel with blocking backpressure (condvar-based).
+//!
+//! This is the plumbing between explorer and buffer, and between data
+//! pipeline stages: multiple workflow-runner threads `send` experiences,
+//! multiple consumers `recv`, and a full channel blocks producers — the
+//! backpressure the paper's Controller module applies against resource
+//! exhaustion.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum SendError {
+    #[error("channel closed")]
+    Closed,
+}
+
+#[derive(Debug, thiserror::Error, PartialEq)]
+pub enum RecvError {
+    #[error("channel closed and drained")]
+    Closed,
+    #[error("recv timed out")]
+    Timeout,
+    #[error("channel empty")]
+    Empty,
+}
+
+struct Inner<T> {
+    queue: Mutex<State<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    capacity: usize,
+}
+
+struct State<T> {
+    items: VecDeque<T>,
+    closed: bool,
+    senders: usize,
+}
+
+pub struct Sender<T> {
+    inner: Arc<Inner<T>>,
+}
+
+pub struct Receiver<T> {
+    inner: Arc<Inner<T>>,
+}
+
+pub fn bounded<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
+    assert!(capacity > 0);
+    let inner = Arc::new(Inner {
+        queue: Mutex::new(State { items: VecDeque::new(), closed: false, senders: 1 }),
+        not_full: Condvar::new(),
+        not_empty: Condvar::new(),
+        capacity,
+    });
+    (Sender { inner: Arc::clone(&inner) }, Receiver { inner })
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.inner.queue.lock().unwrap().senders += 1;
+        Sender { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let mut st = self.inner.queue.lock().unwrap();
+        st.senders -= 1;
+        if st.senders == 0 {
+            st.closed = true;
+            drop(st);
+            self.inner.not_empty.notify_all();
+        }
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        Receiver { inner: Arc::clone(&self.inner) }
+    }
+}
+
+impl<T> Sender<T> {
+    /// Blocking send with backpressure.
+    pub fn send(&self, item: T) -> Result<(), SendError> {
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(SendError::Closed);
+            }
+            if st.items.len() < self.inner.capacity {
+                st.items.push_back(item);
+                drop(st);
+                self.inner.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.inner.not_full.wait(st).unwrap();
+        }
+    }
+
+    pub fn try_send(&self, item: T) -> Result<(), T> {
+        let mut st = self.inner.queue.lock().unwrap();
+        if st.closed || st.items.len() >= self.inner.capacity {
+            return Err(item);
+        }
+        st.items.push_back(item);
+        drop(st);
+        self.inner.not_empty.notify_one();
+        Ok(())
+    }
+
+    pub fn close(&self) {
+        let mut st = self.inner.queue.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.inner.not_empty.notify_all();
+        self.inner.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.queue.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; returns `Closed` only after the queue drains.
+    pub fn recv(&self) -> Result<T, RecvError> {
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.inner.not_full.notify_one();
+                return Ok(item);
+            }
+            if st.closed {
+                return Err(RecvError::Closed);
+            }
+            st = self.inner.not_empty.wait(st).unwrap();
+        }
+    }
+
+    pub fn recv_timeout(&self, timeout: Duration) -> Result<T, RecvError> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut st = self.inner.queue.lock().unwrap();
+        loop {
+            if let Some(item) = st.items.pop_front() {
+                drop(st);
+                self.inner.not_full.notify_one();
+                return Ok(item);
+            }
+            if st.closed {
+                return Err(RecvError::Closed);
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return Err(RecvError::Timeout);
+            }
+            let (guard, res) = self.inner.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+            if res.timed_out() && st.items.is_empty() {
+                if st.closed {
+                    return Err(RecvError::Closed);
+                }
+                return Err(RecvError::Timeout);
+            }
+        }
+    }
+
+    pub fn try_recv(&self) -> Result<T, RecvError> {
+        let mut st = self.inner.queue.lock().unwrap();
+        if let Some(item) = st.items.pop_front() {
+            drop(st);
+            self.inner.not_full.notify_one();
+            return Ok(item);
+        }
+        if st.closed {
+            Err(RecvError::Closed)
+        } else {
+            Err(RecvError::Empty)
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.queue.lock().unwrap().items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Instant;
+
+    #[test]
+    fn fifo_order() {
+        let (tx, rx) = bounded(10);
+        for i in 0..5 {
+            tx.send(i).unwrap();
+        }
+        let got: Vec<i32> = (0..5).map(|_| rx.recv().unwrap()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn backpressure_blocks_producer() {
+        let (tx, rx) = bounded(2);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        assert!(tx.try_send(3).is_err());
+        let t = std::thread::spawn(move || {
+            let start = Instant::now();
+            tx.send(3).unwrap(); // blocks until consumer drains
+            start.elapsed()
+        });
+        std::thread::sleep(Duration::from_millis(50));
+        assert_eq!(rx.recv().unwrap(), 1);
+        let blocked_for = t.join().unwrap();
+        assert!(blocked_for >= Duration::from_millis(40), "{blocked_for:?}");
+    }
+
+    #[test]
+    fn close_drains_then_errors() {
+        let (tx, rx) = bounded(4);
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        tx.close();
+        assert_eq!(rx.recv().unwrap(), 1);
+        assert_eq!(rx.recv().unwrap(), 2);
+        assert_eq!(rx.recv().unwrap_err(), RecvError::Closed);
+        assert_eq!(tx.send(3).unwrap_err(), SendError::Closed);
+    }
+
+    #[test]
+    fn drop_all_senders_closes() {
+        let (tx, rx) = bounded::<i32>(4);
+        let tx2 = tx.clone();
+        tx.send(7).unwrap();
+        drop(tx);
+        drop(tx2);
+        assert_eq!(rx.recv().unwrap(), 7);
+        assert_eq!(rx.recv().unwrap_err(), RecvError::Closed);
+    }
+
+    #[test]
+    fn recv_timeout() {
+        let (_tx, rx) = bounded::<i32>(1);
+        let start = Instant::now();
+        assert_eq!(rx.recv_timeout(Duration::from_millis(30)).unwrap_err(), RecvError::Timeout);
+        assert!(start.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn mpmc_all_items_delivered_once() {
+        let (tx, rx) = bounded(8);
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let tx = tx.clone();
+                std::thread::spawn(move || {
+                    for i in 0..100 {
+                        tx.send(p * 1000 + i).unwrap();
+                    }
+                })
+            })
+            .collect();
+        drop(tx);
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let rx = rx.clone();
+                std::thread::spawn(move || {
+                    let mut got = vec![];
+                    while let Ok(v) = rx.recv() {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        let mut all: Vec<i32> = consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        all.sort_unstable();
+        let mut expected: Vec<i32> =
+            (0..4).flat_map(|p| (0..100).map(move |i| p * 1000 + i)).collect();
+        expected.sort_unstable();
+        assert_eq!(all, expected);
+    }
+}

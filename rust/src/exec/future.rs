@@ -1,0 +1,154 @@
+//! Promise / cancellation primitives for the thread-pool executor.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Duration;
+
+#[derive(Debug, Clone, thiserror::Error, PartialEq)]
+pub enum TaskError {
+    #[error("task panicked: {0}")]
+    Panicked(String),
+    #[error("task timed out after {0:?}")]
+    Timeout(Duration),
+    #[error("task was cancelled")]
+    Cancelled,
+    #[error("executor shut down before task completed")]
+    Disconnected,
+    #[error("task failed: {0}")]
+    Failed(String),
+}
+
+/// One-shot result handle for a submitted task.
+pub struct Promise<T> {
+    rx: mpsc::Receiver<Result<T, TaskError>>,
+}
+
+pub struct Completer<T> {
+    tx: mpsc::Sender<Result<T, TaskError>>,
+}
+
+impl<T> Completer<T> {
+    pub fn complete(self, value: T) {
+        let _ = self.tx.send(Ok(value));
+    }
+    pub fn fail(self, err: TaskError) {
+        let _ = self.tx.send(Err(err));
+    }
+}
+
+impl<T> Promise<T> {
+    pub fn pair() -> (Completer<T>, Promise<T>) {
+        let (tx, rx) = mpsc::channel();
+        (Completer { tx }, Promise { rx })
+    }
+
+    /// Create an already-resolved promise.
+    pub fn ready(value: T) -> Promise<T> {
+        let (c, p) = Self::pair();
+        c.complete(value);
+        p
+    }
+
+    /// Block until the task completes.
+    pub fn wait(self) -> Result<T, TaskError> {
+        self.rx.recv().unwrap_or(Err(TaskError::Disconnected))
+    }
+
+    /// Block up to `timeout`; the promise is consumed either way (the
+    /// runner treats a timed-out task as abandoned, per the paper's
+    /// timeout/skip fault tolerance).
+    pub fn wait_timeout(self, timeout: Duration) -> Result<T, TaskError> {
+        match self.rx.recv_timeout(timeout) {
+            Ok(r) => r,
+            Err(mpsc::RecvTimeoutError::Timeout) => Err(TaskError::Timeout(timeout)),
+            Err(mpsc::RecvTimeoutError::Disconnected) => Err(TaskError::Disconnected),
+        }
+    }
+
+    /// Non-blocking poll.
+    pub fn try_take(&self) -> Option<Result<T, TaskError>> {
+        match self.rx.try_recv() {
+            Ok(r) => Some(r),
+            Err(mpsc::TryRecvError::Empty) => None,
+            Err(mpsc::TryRecvError::Disconnected) => Some(Err(TaskError::Disconnected)),
+        }
+    }
+}
+
+/// Cooperative cancellation shared across workers.
+#[derive(Debug, Clone, Default)]
+pub struct CancellationToken {
+    flag: Arc<AtomicBool>,
+}
+
+impl CancellationToken {
+    pub fn new() -> CancellationToken {
+        Self::default()
+    }
+    pub fn cancel(&self) {
+        self.flag.store(true, Ordering::SeqCst);
+    }
+    pub fn is_cancelled(&self) -> bool {
+        self.flag.load(Ordering::SeqCst)
+    }
+    /// Sleep in small increments so cancellation is observed promptly.
+    pub fn sleep(&self, total: Duration) -> bool {
+        let step = Duration::from_millis(5);
+        let mut remaining = total;
+        while remaining > Duration::ZERO {
+            if self.is_cancelled() {
+                return false;
+            }
+            let d = remaining.min(step);
+            std::thread::sleep(d);
+            remaining = remaining.saturating_sub(d);
+        }
+        !self.is_cancelled()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn promise_resolves() {
+        let (c, p) = Promise::pair();
+        std::thread::spawn(move || c.complete(42));
+        assert_eq!(p.wait().unwrap(), 42);
+    }
+
+    #[test]
+    fn promise_timeout() {
+        let (_c, p) = Promise::<i32>::pair();
+        let err = p.wait_timeout(Duration::from_millis(20)).unwrap_err();
+        assert!(matches!(err, TaskError::Timeout(_)));
+    }
+
+    #[test]
+    fn promise_disconnected() {
+        let (c, p) = Promise::<i32>::pair();
+        drop(c);
+        assert_eq!(p.wait().unwrap_err(), TaskError::Disconnected);
+    }
+
+    #[test]
+    fn try_take_polls() {
+        let (c, p) = Promise::pair();
+        assert!(p.try_take().is_none());
+        c.complete(7);
+        assert_eq!(p.try_take().unwrap().unwrap(), 7);
+    }
+
+    #[test]
+    fn cancellation() {
+        let tok = CancellationToken::new();
+        let t2 = tok.clone();
+        let h = std::thread::spawn(move || t2.sleep(Duration::from_secs(10)));
+        std::thread::sleep(Duration::from_millis(20));
+        tok.cancel();
+        assert!(!h.join().unwrap()); // sleep interrupted
+        assert!(tok.is_cancelled());
+    }
+}

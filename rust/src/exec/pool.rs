@@ -1,0 +1,195 @@
+//! Fixed-size thread pool with panic containment and busy-fraction
+//! accounting.
+//!
+//! Busy-fraction is the CPU-era stand-in for the paper's GPU-utilization
+//! metric (Tables 1–2): the fraction of wall-time the pool's workers spent
+//! executing tasks.  Explorer and trainer each own a pool, mirroring the
+//! paper's explorer/trainer GPU partition.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use super::future::{Promise, TaskError};
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    busy_nanos: AtomicU64,
+    in_flight: AtomicUsize,
+    started_at: Mutex<Instant>,
+}
+
+pub struct ThreadPool {
+    name: String,
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<JoinHandle<()>>,
+    shared: Arc<Shared>,
+    size: usize,
+}
+
+impl ThreadPool {
+    pub fn new(name: &str, size: usize) -> ThreadPool {
+        assert!(size > 0);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let shared = Arc::new(Shared {
+            busy_nanos: AtomicU64::new(0),
+            in_flight: AtomicUsize::new(0),
+            started_at: Mutex::new(Instant::now()),
+        });
+        let mut workers = Vec::with_capacity(size);
+        for i in 0..size {
+            let rx = Arc::clone(&rx);
+            let shared = Arc::clone(&shared);
+            let thread_name = format!("{name}-{i}");
+            workers.push(
+                std::thread::Builder::new()
+                    .name(thread_name)
+                    .spawn(move || loop {
+                        let job = {
+                            let guard = rx.lock().unwrap();
+                            guard.recv()
+                        };
+                        match job {
+                            Ok(job) => {
+                                shared.in_flight.fetch_add(1, Ordering::SeqCst);
+                                let start = Instant::now();
+                                // Panics are contained per-job: a failing
+                                // workflow must not take down the runner.
+                                let _ = catch_unwind(AssertUnwindSafe(job));
+                                shared
+                                    .busy_nanos
+                                    .fetch_add(start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                                shared.in_flight.fetch_sub(1, Ordering::SeqCst);
+                            }
+                            Err(_) => break,
+                        }
+                    })
+                    .expect("spawn worker"),
+            );
+        }
+        ThreadPool { name: name.to_string(), tx: Some(tx), workers, shared, size }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    /// Submit a job; the promise resolves with its return value, or with
+    /// `TaskError::Panicked` if it panicked.
+    pub fn submit<T, F>(&self, f: F) -> Promise<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let (completer, promise) = Promise::pair();
+        let job: Job = Box::new(move || {
+            match catch_unwind(AssertUnwindSafe(f)) {
+                Ok(v) => completer.complete(v),
+                Err(payload) => {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "<non-string panic>".to_string());
+                    completer.fail(TaskError::Panicked(msg));
+                }
+            }
+        });
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(job);
+        }
+        promise
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.shared.in_flight.load(Ordering::SeqCst)
+    }
+
+    /// Reset the busy-fraction accounting window.
+    pub fn reset_utilization(&self) {
+        self.shared.busy_nanos.store(0, Ordering::SeqCst);
+        *self.shared.started_at.lock().unwrap() = Instant::now();
+    }
+
+    /// Busy fraction over the current window, normalized per worker, in
+    /// percent (the "GPU utilization" analog).
+    pub fn utilization_percent(&self) -> f64 {
+        let wall = self.shared.started_at.lock().unwrap().elapsed().as_nanos() as f64;
+        if wall <= 0.0 {
+            return 0.0;
+        }
+        let busy = self.shared.busy_nanos.load(Ordering::Relaxed) as f64;
+        100.0 * busy / (wall * self.size as f64)
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.tx.take(); // close the queue
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn runs_jobs_concurrently() {
+        let pool = ThreadPool::new("t", 4);
+        let start = Instant::now();
+        let promises: Vec<_> = (0..4)
+            .map(|i| {
+                pool.submit(move || {
+                    std::thread::sleep(Duration::from_millis(50));
+                    i * 2
+                })
+            })
+            .collect();
+        let results: Vec<i32> = promises.into_iter().map(|p| p.wait().unwrap()).collect();
+        assert_eq!(results, vec![0, 2, 4, 6]);
+        assert!(start.elapsed() < Duration::from_millis(160), "not parallel");
+    }
+
+    #[test]
+    fn contains_panics() {
+        let pool = ThreadPool::new("t", 1);
+        let p1 = pool.submit(|| panic!("boom"));
+        assert!(matches!(p1.wait().unwrap_err(), TaskError::Panicked(m) if m.contains("boom")));
+        // pool still alive after a panic
+        let p2 = pool.submit(|| 1);
+        assert_eq!(p2.wait().unwrap(), 1);
+    }
+
+    #[test]
+    fn utilization_accounting() {
+        let pool = ThreadPool::new("t", 2);
+        pool.reset_utilization();
+        let ps: Vec<_> =
+            (0..2).map(|_| pool.submit(|| std::thread::sleep(Duration::from_millis(60)))).collect();
+        for p in ps {
+            p.wait().unwrap();
+        }
+        let util = pool.utilization_percent();
+        assert!(util > 40.0 && util <= 101.0, "util {util}");
+    }
+
+    #[test]
+    fn shutdown_joins_workers() {
+        let pool = ThreadPool::new("t", 2);
+        let p = pool.submit(|| 5);
+        drop(pool);
+        assert_eq!(p.wait().unwrap(), 5);
+    }
+}

@@ -1,0 +1,121 @@
+//! Deadlines and retry-with-backoff — the primitives behind the paper's
+//! timeout/retry/skip fault-tolerance for agent–environment interaction.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone, Copy)]
+pub struct Deadline {
+    at: Instant,
+}
+
+impl Deadline {
+    pub fn after(d: Duration) -> Deadline {
+        Deadline { at: Instant::now() + d }
+    }
+    pub fn expired(&self) -> bool {
+        Instant::now() >= self.at
+    }
+    pub fn remaining(&self) -> Duration {
+        self.at.saturating_duration_since(Instant::now())
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct RetryPolicy {
+    pub max_attempts: usize,
+    pub base_delay: Duration,
+    pub backoff: f64,
+    pub max_delay: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 3,
+            base_delay: Duration::from_millis(10),
+            backoff: 2.0,
+            max_delay: Duration::from_secs(1),
+        }
+    }
+}
+
+impl RetryPolicy {
+    pub fn delay_for_attempt(&self, attempt: usize) -> Duration {
+        let ms = self.base_delay.as_secs_f64() * self.backoff.powi(attempt as i32);
+        Duration::from_secs_f64(ms).min(self.max_delay)
+    }
+}
+
+/// Run `f` until it succeeds or attempts are exhausted.  Returns the last
+/// error alongside the attempt count so the runner can log retry stats.
+pub fn retry<T, E, F>(policy: &RetryPolicy, mut f: F) -> Result<(T, usize), (E, usize)>
+where
+    F: FnMut(usize) -> Result<T, E>,
+{
+    let mut last_err = None;
+    for attempt in 0..policy.max_attempts {
+        match f(attempt) {
+            Ok(v) => return Ok((v, attempt + 1)),
+            Err(e) => {
+                last_err = Some(e);
+                if attempt + 1 < policy.max_attempts {
+                    std::thread::sleep(policy.delay_for_attempt(attempt));
+                }
+            }
+        }
+    }
+    Err((last_err.unwrap(), policy.max_attempts))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deadline_expires() {
+        let d = Deadline::after(Duration::from_millis(20));
+        assert!(!d.expired());
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(d.expired());
+        assert_eq!(d.remaining(), Duration::ZERO);
+    }
+
+    #[test]
+    fn retry_succeeds_after_failures() {
+        let policy = RetryPolicy { base_delay: Duration::from_millis(1), ..Default::default() };
+        let mut calls = 0;
+        let result = retry(&policy, |_| {
+            calls += 1;
+            if calls < 3 {
+                Err("fail")
+            } else {
+                Ok(42)
+            }
+        });
+        assert_eq!(result.unwrap(), (42, 3));
+    }
+
+    #[test]
+    fn retry_exhausts() {
+        let policy = RetryPolicy {
+            max_attempts: 2,
+            base_delay: Duration::from_millis(1),
+            ..Default::default()
+        };
+        let result: Result<((), usize), _> = retry(&policy, |_| Err::<(), _>("nope"));
+        assert_eq!(result.unwrap_err(), ("nope", 2));
+    }
+
+    #[test]
+    fn backoff_grows_and_caps() {
+        let policy = RetryPolicy {
+            max_attempts: 10,
+            base_delay: Duration::from_millis(100),
+            backoff: 10.0,
+            max_delay: Duration::from_secs(2),
+        };
+        assert_eq!(policy.delay_for_attempt(0), Duration::from_millis(100));
+        assert_eq!(policy.delay_for_attempt(1), Duration::from_secs(1));
+        assert_eq!(policy.delay_for_attempt(5), Duration::from_secs(2)); // capped
+    }
+}

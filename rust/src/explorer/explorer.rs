@@ -1,0 +1,198 @@
+//! The Explorer actor (paper Fig. 3): takes task batches, executes
+//! workflows through the runner, streams experiences into the buffer,
+//! participates in weight sync, and serves bench-mode evaluation.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::buffer::ExperienceBuffer;
+use crate::envs::math::verify;
+use crate::exec::ThreadPool;
+use crate::model::WeightSync;
+use crate::tokenizer::Tokenizer;
+use crate::util::json::Value;
+
+use super::generation::{GenerationEngine, RolloutModel, SamplingArgs};
+use super::runner::{RunnerConfig, RunnerEvent, RunnerStats, WorkflowRunner};
+use super::workflow::{Task, WorkflowRegistry};
+
+#[derive(Clone)]
+pub struct ExplorerConfig {
+    pub runner: RunnerConfig,
+    pub sampling: SamplingArgs,
+    /// Worker threads for workflow execution.
+    pub threads: usize,
+}
+
+impl Default for ExplorerConfig {
+    fn default() -> Self {
+        ExplorerConfig {
+            runner: RunnerConfig::default(),
+            sampling: SamplingArgs::default(),
+            threads: 2,
+        }
+    }
+}
+
+pub struct Explorer {
+    pub id: usize,
+    engine: Arc<GenerationEngine>,
+    runner: WorkflowRunner,
+    registry: Arc<WorkflowRegistry>,
+    tokenizer: Arc<Tokenizer>,
+    buffer: Arc<dyn ExperienceBuffer>,
+    config: ExplorerConfig,
+    batches_done: AtomicU64,
+    pool: Arc<ThreadPool>,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct EvalReport {
+    /// Mean reward over all rollouts (Avg@K).
+    pub avg_reward: f64,
+    /// Fraction of tasks with at least one correct rollout (Pass@K).
+    pub pass_at_k: f64,
+    pub mean_response_len: f64,
+    pub tasks: usize,
+    pub rollouts: usize,
+}
+
+impl Explorer {
+    pub fn new(
+        id: usize,
+        engine: Arc<GenerationEngine>,
+        registry: Arc<WorkflowRegistry>,
+        tokenizer: Arc<Tokenizer>,
+        buffer: Arc<dyn ExperienceBuffer>,
+        config: ExplorerConfig,
+    ) -> Explorer {
+        let pool = Arc::new(ThreadPool::new(&format!("explorer-{id}"), config.threads));
+        let runner = WorkflowRunner::new(Arc::clone(&pool), config.runner.clone());
+        Explorer { id, engine, runner, registry, tokenizer, buffer, config, batches_done: AtomicU64::new(0), pool }
+    }
+
+    pub fn engine(&self) -> &Arc<GenerationEngine> {
+        &self.engine
+    }
+
+    pub fn pool(&self) -> &Arc<ThreadPool> {
+        &self.pool
+    }
+
+    pub fn weight_version(&self) -> u64 {
+        self.engine.params_version()
+    }
+
+    /// Explore one batch of tasks, streaming experiences into the buffer
+    /// as tasks complete.
+    pub fn explore_batch(&self, tasks: Vec<Task>) -> Result<RunnerStats> {
+        let rx = self.runner.run_streaming(
+            tasks,
+            Arc::clone(&self.registry),
+            self.engine.clone() as Arc<dyn RolloutModel>,
+            Arc::clone(&self.tokenizer),
+            self.config.sampling.clone(),
+        );
+        let mut stats = RunnerStats::default();
+        while let Ok(ev) = rx.recv() {
+            match ev {
+                RunnerEvent::Done { experiences, .. } => {
+                    stats.completed += 1;
+                    stats.experiences += experiences.len();
+                    if !experiences.is_empty() {
+                        self.buffer.write(experiences)?;
+                    }
+                }
+                RunnerEvent::Skipped { task_id, error } => {
+                    stats.skipped += 1;
+                    if error == "timeout" {
+                        stats.timeouts += 1;
+                    }
+                    crate::log_warn!("explorer", "task {task_id} skipped: {error}");
+                }
+            }
+        }
+        self.batches_done.fetch_add(1, Ordering::SeqCst);
+        Ok(stats)
+    }
+
+    pub fn batches_done(&self) -> u64 {
+        self.batches_done.load(Ordering::SeqCst)
+    }
+
+    /// Pull newer weights if published (returns true when updated).
+    pub fn sync_weights(&self, sync: &dyn WeightSync) -> Result<bool> {
+        self.engine.try_sync(sync)
+    }
+
+    /// Bench mode (paper §2.1.1): evaluate the current weights on a task
+    /// set without writing to the buffer.  Avg@K over `repeat_times`
+    /// rollouts per task, greedy-ish low temperature.
+    pub fn evaluate(&self, tasks: &[Task], temperature: f32) -> Result<EvalReport> {
+        let mut report = EvalReport { tasks: tasks.len(), ..Default::default() };
+        let sampling = SamplingArgs { temperature, ..self.config.sampling.clone() };
+        let mut total_reward = 0.0;
+        let mut total_len = 0.0;
+        let mut rollouts = 0usize;
+        for task in tasks {
+            let question = task.payload.get("question").and_then(Value::as_str).unwrap_or("");
+            let answer: i64 = task
+                .payload
+                .get("answer")
+                .and_then(Value::as_str)
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(0);
+            let prompt = self.tokenizer.encode_prompt(question);
+            let outs = self.engine.chat(&prompt, task.repeat_times.max(1), &sampling)?;
+            let mut any_correct = false;
+            for out in &outs {
+                let resp = self.tokenizer.decode_response(&out.tokens, out.prompt_len);
+                let r = verify(&resp, answer);
+                if r > 0.5 {
+                    any_correct = true;
+                }
+                total_reward += r as f64;
+                total_len += (out.tokens.len() - out.prompt_len) as f64;
+                rollouts += 1;
+            }
+            if any_correct {
+                report.pass_at_k += 1.0;
+            }
+        }
+        report.rollouts = rollouts;
+        if rollouts > 0 {
+            report.avg_reward = total_reward / rollouts as f64;
+            report.mean_response_len = total_len / rollouts as f64;
+        }
+        if !tasks.is_empty() {
+            report.pass_at_k /= tasks.len() as f64;
+        }
+        Ok(report)
+    }
+
+    /// Utilization of this explorer's worker pool (the per-"device" metric
+    /// for Tables 1–2).
+    pub fn utilization_percent(&self) -> f64 {
+        self.pool.utilization_percent()
+    }
+
+    pub fn reset_utilization(&self) {
+        self.pool.reset_utilization();
+    }
+
+    /// Wait until the buffer has drained below a watermark (backpressure
+    /// for async modes).
+    pub fn wait_for_buffer_below(&self, watermark: usize, timeout: Duration) -> bool {
+        let deadline = std::time::Instant::now() + timeout;
+        while self.buffer.ready_len() > watermark {
+            if std::time::Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        true
+    }
+}

@@ -1,0 +1,456 @@
+//! The rollout engine (vLLM stand-in): batched KV-cache generation with
+//! per-sequence positions, streaming-friendly sessions, and multi-turn
+//! continuation that *feeds* environment tokens through the decode path
+//! instead of re-prefilling (the paper's avoid-recomputation optimization
+//! for multi-turn workflows, §2.2).
+//!
+//! Concurrency: rollouts run under a read lock on the weights, so many
+//! runner threads generate in parallel; weight sync takes the write lock —
+//! exactly the "service pauses while the explorer updates weights" window
+//! that the multi-explorer mode exists to hide.
+
+use std::sync::{Arc, RwLock};
+
+use anyhow::{ensure, Result};
+
+use crate::model::{ParamStore, WeightSync};
+use crate::runtime::{GenerationState, ModelEngine, Tensor};
+use crate::tokenizer::{BOS, EOS};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct SamplingArgs {
+    pub temperature: f32,
+    pub top_k: usize,
+    pub top_p: f32,
+    pub max_new_tokens: usize,
+    pub seed: u64,
+}
+
+impl Default for SamplingArgs {
+    fn default() -> Self {
+        SamplingArgs { temperature: 1.0, top_k: 0, top_p: 1.0, max_new_tokens: 16, seed: 0 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct GenOutput {
+    /// Full sequence: prompt + generated tokens (EOS included if emitted).
+    pub tokens: Vec<i32>,
+    pub prompt_len: usize,
+    /// Per-token log-probs aligned with `tokens` (0 for prompt positions).
+    pub logprobs: Vec<f32>,
+    /// Loss mask aligned with `tokens` (1 for sampled tokens).
+    pub loss_mask: Vec<f32>,
+    /// True if the sequence ended with EOS (vs budget exhaustion).
+    pub finished: bool,
+}
+
+/// The interface workflows talk to (the paper's ModelWrapper).
+pub trait RolloutModel: Send + Sync {
+    /// Generate `n` independent completions of `prompt`.
+    fn chat(&self, prompt: &[i32], n: usize, args: &SamplingArgs) -> Result<Vec<GenOutput>>;
+    /// Version of the weights that will serve the next call.
+    fn weight_version(&self) -> u64;
+}
+
+/// An in-flight generation batch (KV caches + per-row cursors).
+pub struct Session {
+    state: GenerationState,
+    /// Next write position per row.
+    pos: Vec<usize>,
+    /// Accumulated full sequences per row.
+    pub tokens: Vec<Vec<i32>>,
+    pub logprobs: Vec<Vec<f32>>,
+    pub loss_mask: Vec<Vec<f32>>,
+    /// Rows that correspond to real prompts (batch padding rows are inactive).
+    pub active: Vec<bool>,
+    rngs: Vec<Rng>,
+    cache_len: usize,
+}
+
+impl Session {
+    pub fn remaining_budget(&self, row: usize) -> usize {
+        self.cache_len.saturating_sub(self.pos[row])
+    }
+
+    pub fn output(&self, row: usize, prompt_len: usize, finished: bool) -> GenOutput {
+        GenOutput {
+            tokens: self.tokens[row].clone(),
+            prompt_len,
+            logprobs: self.logprobs[row].clone(),
+            loss_mask: self.loss_mask[row].clone(),
+            finished,
+        }
+    }
+}
+
+pub struct GenerationEngine {
+    engine: Arc<ModelEngine>,
+    params: RwLock<ParamStore>,
+}
+
+impl GenerationEngine {
+    pub fn new(engine: Arc<ModelEngine>, params: ParamStore) -> GenerationEngine {
+        GenerationEngine { engine, params: RwLock::new(params) }
+    }
+
+    pub fn engine(&self) -> &Arc<ModelEngine> {
+        &self.engine
+    }
+
+    pub fn params_version(&self) -> u64 {
+        self.params.read().unwrap().version()
+    }
+
+    /// Pull newer weights if available.  Takes the write lock: in-flight
+    /// rollouts finish first, new ones wait (the single-explorer service
+    /// gap the paper describes).
+    pub fn try_sync(&self, sync: &dyn WeightSync) -> Result<bool> {
+        let current = self.params_version();
+        if let Some(update) = sync.fetch_if_newer(current)? {
+            let mut guard = self.params.write().unwrap();
+            guard.load_snapshot(&update.weights, update.version)?;
+            crate::log_debug!("explorer", "synced weights to v{} (step {})", update.version, update.step);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    /// Overwrite weights directly (initial load).
+    pub fn set_weights(&self, weights: &[Vec<f32>], version: u64) -> Result<()> {
+        self.params.write().unwrap().load_snapshot(weights, version)
+    }
+
+    pub fn snapshot_weights(&self) -> Result<Vec<Vec<f32>>> {
+        self.params.read().unwrap().snapshot()
+    }
+
+    /// Start a session for up to `gen_batch` prompts (padded internally).
+    pub fn start_session(&self, prompts: &[Vec<i32>], seed: u64) -> Result<Session> {
+        let (b, tp, cache) = self.engine.gen_shape();
+        ensure!(prompts.len() <= b, "session supports at most {b} prompts");
+        ensure!(!prompts.is_empty(), "empty prompt set");
+        let mut tokens = Tensor::zeros(crate::runtime::DType::I32, &[b, tp]);
+        let mut lens = vec![1i32; b];
+        let mut seqs: Vec<Vec<i32>> = Vec::with_capacity(b);
+        let mut active = vec![false; b];
+        {
+            let data = match &mut tokens {
+                Tensor::I32 { data, .. } => data,
+                _ => unreachable!(),
+            };
+            for row in 0..b {
+                let prompt: &[i32] = if row < prompts.len() {
+                    active[row] = true;
+                    &prompts[row]
+                } else {
+                    &[BOS] // padding row
+                };
+                let plen = prompt.len().min(tp);
+                ensure!(plen >= 1, "prompt must be non-empty");
+                data[row * tp..row * tp + plen].copy_from_slice(&prompt[..plen]);
+                lens[row] = plen as i32;
+                seqs.push(prompt[..plen].to_vec());
+            }
+        }
+        let lens_t = Tensor::from_i32(vec![b], lens.clone());
+        let guard = self.params.read().unwrap();
+        let state = self.engine.prefill(&guard, &tokens, &lens_t)?;
+        drop(guard);
+        let pos: Vec<usize> = lens.iter().map(|&l| l as usize).collect();
+        let zero_lp: Vec<Vec<f32>> = seqs.iter().map(|s| vec![0.0; s.len()]).collect();
+        let zero_mask: Vec<Vec<f32>> = seqs.iter().map(|s| vec![0.0; s.len()]).collect();
+        let mut rngs = Vec::with_capacity(b);
+        for row in 0..b {
+            rngs.push(Rng::with_stream(seed.wrapping_add(row as u64), 0x5eed + row as u64));
+        }
+        Ok(Session {
+            state,
+            pos,
+            tokens: seqs,
+            logprobs: zero_lp,
+            loss_mask: zero_mask,
+            active,
+            rngs,
+            cache_len: cache,
+        })
+    }
+
+    /// Teacher-force environment/observation tokens into the caches (mask
+    /// 0, logprob 0).  Rows with shorter inputs re-feed their last token at
+    /// a frozen position, which rewrites the same K/V and is a no-op.
+    pub fn feed(&self, session: &mut Session, row_tokens: &[Vec<i32>]) -> Result<()> {
+        let b = session.pos.len();
+        ensure!(row_tokens.len() == b, "feed wants {b} rows");
+        let max_len = row_tokens.iter().map(Vec::len).max().unwrap_or(0);
+        if max_len == 0 {
+            return Ok(());
+        }
+        for (row, toks) in row_tokens.iter().enumerate() {
+            ensure!(
+                session.pos[row] + toks.len() < session.cache_len,
+                "row {row} overflows cache ({} + {})",
+                session.pos[row],
+                toks.len()
+            );
+        }
+        let guard = self.params.read().unwrap();
+        for step in 0..max_len {
+            let mut step_tokens = Vec::with_capacity(b);
+            let mut step_pos = Vec::with_capacity(b);
+            for row in 0..b {
+                if step < row_tokens[row].len() {
+                    let t = row_tokens[row][step];
+                    step_tokens.push(t);
+                    step_pos.push(session.pos[row] as i32);
+                    session.pos[row] += 1;
+                    session.tokens[row].push(t);
+                    session.logprobs[row].push(0.0);
+                    session.loss_mask[row].push(0.0);
+                } else {
+                    // idempotent re-write of the last token at its position
+                    let last = *session.tokens[row].last().unwrap_or(&BOS);
+                    step_tokens.push(last);
+                    step_pos.push((session.pos[row].saturating_sub(1)) as i32);
+                }
+            }
+            let tok_t = Tensor::from_i32(vec![b], step_tokens);
+            let pos_t = Tensor::from_i32(vec![b], step_pos);
+            self.engine.decode(&guard, &mut session.state, &tok_t, &pos_t)?;
+        }
+        Ok(())
+    }
+
+    /// Sample up to `max_new` tokens per active row, stopping rows at EOS.
+    /// Returns which rows finished with EOS.
+    pub fn sample(
+        &self,
+        session: &mut Session,
+        args: &SamplingArgs,
+        rows: &[bool],
+    ) -> Result<Vec<bool>> {
+        let b = session.pos.len();
+        ensure!(rows.len() == b, "rows mask arity");
+        let mut live: Vec<bool> = rows.to_vec();
+        let mut finished = vec![false; b];
+        let guard = self.params.read().unwrap();
+        for _ in 0..args.max_new_tokens {
+            if !live.iter().any(|&l| l) {
+                break;
+            }
+            // sample from the current logits
+            let mut step_tokens = Vec::with_capacity(b);
+            let mut step_pos = Vec::with_capacity(b);
+            for row in 0..b {
+                if live[row] && session.pos[row] < session.cache_len {
+                    let logits = session.state.logits.row_f32(row)?;
+                    let tok = session.rngs[row].sample_logits(
+                        logits,
+                        args.temperature,
+                        args.top_k,
+                        args.top_p,
+                    ) as i32;
+                    let lp = log_softmax_at(logits, tok as usize);
+                    session.tokens[row].push(tok);
+                    session.logprobs[row].push(lp);
+                    session.loss_mask[row].push(1.0);
+                    step_tokens.push(tok);
+                    step_pos.push(session.pos[row] as i32);
+                    session.pos[row] += 1;
+                    if tok == EOS {
+                        finished[row] = true;
+                        live[row] = false;
+                    } else if session.pos[row] >= session.cache_len {
+                        live[row] = false;
+                    }
+                } else {
+                    live[row] = false;
+                    let last = *session.tokens[row].last().unwrap_or(&BOS);
+                    step_tokens.push(last);
+                    step_pos.push((session.pos[row].saturating_sub(1)) as i32);
+                }
+            }
+            // the sampled tokens must enter the cache before the next
+            // sampling iteration; skip the trailing decode once all rows
+            // are done.
+            if live.iter().any(|&l| l) {
+                let tok_t = Tensor::from_i32(vec![b], step_tokens);
+                let pos_t = Tensor::from_i32(vec![b], step_pos);
+                self.engine.decode(&guard, &mut session.state, &tok_t, &pos_t)?;
+            }
+        }
+        Ok(finished)
+    }
+
+    /// Single-turn batched generation: the `chat` fast path.
+    ///
+    /// Prompts longer than the prefill bucket are handled by prefixing the
+    /// first `Tp` tokens through prefill and streaming the remainder
+    /// through the decode path (`feed`), so multi-turn workflows whose
+    /// packed context outgrows the prompt bucket keep working — bounded
+    /// only by the KV-cache length.
+    pub fn generate(&self, prompts: &[Vec<i32>], args: &SamplingArgs) -> Result<Vec<GenOutput>> {
+        let (b, tp, cache) = self.engine.gen_shape();
+        let mut outputs = Vec::with_capacity(prompts.len());
+        for chunk in prompts.chunks(b) {
+            // clamp prompts that cannot fit the cache at all
+            let clamped: Vec<Vec<i32>> = chunk
+                .iter()
+                .map(|p| {
+                    let max = cache.saturating_sub(2);
+                    if p.len() > max {
+                        p[..max].to_vec()
+                    } else {
+                        p.clone()
+                    }
+                })
+                .collect();
+            let heads: Vec<Vec<i32>> =
+                clamped.iter().map(|p| p[..p.len().min(tp)].to_vec()).collect();
+            let mut session = self.start_session(&heads, args.seed.wrapping_add(outputs.len() as u64))?;
+            let tails: Vec<Vec<i32>> = (0..session.pos.len())
+                .map(|row| {
+                    if row < clamped.len() && clamped[row].len() > tp {
+                        clamped[row][tp..].to_vec()
+                    } else {
+                        Vec::new()
+                    }
+                })
+                .collect();
+            if tails.iter().any(|t| !t.is_empty()) {
+                self.feed(&mut session, &tails)?;
+            }
+            let rows = session.active.clone();
+            let finished = self.sample(&mut session, args, &rows)?;
+            for (row, prompt) in clamped.iter().enumerate() {
+                let plen = prompt.len().min(session.tokens[row].len());
+                outputs.push(session.output(row, plen, finished[row]));
+            }
+        }
+        Ok(outputs)
+    }
+}
+
+impl RolloutModel for GenerationEngine {
+    fn chat(&self, prompt: &[i32], n: usize, args: &SamplingArgs) -> Result<Vec<GenOutput>> {
+        let prompts: Vec<Vec<i32>> = (0..n).map(|_| prompt.to_vec()).collect();
+        // vary seeds across the n rollouts via the chunk offset in generate()
+        self.generate(&prompts, args)
+    }
+
+    fn weight_version(&self) -> u64 {
+        self.params_version()
+    }
+}
+
+fn log_softmax_at(logits: &[f32], idx: usize) -> f32 {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse: f32 = logits.iter().map(|&x| (x - max).exp()).sum::<f32>().ln() + max;
+    logits[idx] - lse
+}
+
+// ---------------------------------------------------------------------------
+// Mock model for unit tests of runners/pipelines (no PJRT involved).
+
+/// Scripted rollout model: configurable latency, failure rate and response
+/// text; used by runner/coordinator unit tests and failure injection.
+pub struct MockModel {
+    pub latency: std::time::Duration,
+    pub fail_rate: f64,
+    pub respond: Box<dyn Fn(&[i32], &mut Rng) -> Vec<i32> + Send + Sync>,
+    rng: std::sync::Mutex<Rng>,
+    version: std::sync::atomic::AtomicU64,
+}
+
+impl MockModel {
+    pub fn new(seed: u64, latency: std::time::Duration, fail_rate: f64) -> MockModel {
+        MockModel {
+            latency,
+            fail_rate,
+            respond: Box::new(|_, rng| {
+                let n = 1 + rng.below(4) as usize;
+                let mut out: Vec<i32> = (0..n).map(|_| 100 + rng.below(20) as i32).collect();
+                out.push(EOS);
+                out
+            }),
+            rng: std::sync::Mutex::new(Rng::new(seed)),
+            version: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
+
+    pub fn with_response(mut self, f: impl Fn(&[i32], &mut Rng) -> Vec<i32> + Send + Sync + 'static) -> Self {
+        self.respond = Box::new(f);
+        self
+    }
+
+    pub fn set_version(&self, v: u64) {
+        self.version.store(v, std::sync::atomic::Ordering::SeqCst);
+    }
+}
+
+impl RolloutModel for MockModel {
+    fn chat(&self, prompt: &[i32], n: usize, _args: &SamplingArgs) -> Result<Vec<GenOutput>> {
+        if !self.latency.is_zero() {
+            std::thread::sleep(self.latency);
+        }
+        let mut rng = self.rng.lock().unwrap();
+        if self.fail_rate > 0.0 && rng.bool(self.fail_rate) {
+            anyhow::bail!("mock model transient failure");
+        }
+        let mut outs = Vec::with_capacity(n);
+        for _ in 0..n {
+            let resp = (self.respond)(prompt, &mut rng);
+            let mut tokens = prompt.to_vec();
+            let plen = tokens.len();
+            let mut logprobs = vec![0.0f32; plen];
+            let mut mask = vec![0.0f32; plen];
+            let finished = resp.last() == Some(&EOS);
+            for &t in &resp {
+                tokens.push(t);
+                logprobs.push(-1.0 - rng.uniform() as f32);
+                mask.push(1.0);
+            }
+            outs.push(GenOutput { tokens, prompt_len: plen, logprobs, loss_mask: mask, finished });
+        }
+        Ok(outs)
+    }
+
+    fn weight_version(&self) -> u64 {
+        self.version.load(std::sync::atomic::Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_model_shapes() {
+        let m = MockModel::new(1, std::time::Duration::ZERO, 0.0);
+        let outs = m.chat(&[1, 10, 11], 3, &SamplingArgs::default()).unwrap();
+        assert_eq!(outs.len(), 3);
+        for o in outs {
+            assert_eq!(o.prompt_len, 3);
+            assert_eq!(o.tokens.len(), o.logprobs.len());
+            assert_eq!(o.tokens.len(), o.loss_mask.len());
+            assert!(o.finished);
+            assert_eq!(o.loss_mask[..3], [0.0, 0.0, 0.0]);
+            assert!(o.loss_mask[3..].iter().all(|&m| m == 1.0));
+        }
+    }
+
+    #[test]
+    fn mock_model_failure_injection() {
+        let m = MockModel::new(2, std::time::Duration::ZERO, 1.0);
+        assert!(m.chat(&[1], 1, &SamplingArgs::default()).is_err());
+    }
+
+    #[test]
+    fn log_softmax_at_matches_manual() {
+        let logits = [1.0f32, 2.0, 3.0];
+        let lp = log_softmax_at(&logits, 2);
+        let z: f32 = logits.iter().map(|x| x.exp()).sum();
+        assert!((lp - (3.0f32.exp() / z).ln()).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,21 @@
+//! The explorer — rollout side of the trinity (paper §2.1, Fig. 3).
+//!
+//! * [`generation`] — the vLLM stand-in: KV-cache prefill/decode sessions,
+//!   batched sampling, multi-turn continuation without re-prefill.
+//! * [`workflow`] — the `Workflow` / `MultiTurnWorkflow` abstraction and
+//!   registry, with the paper's built-ins (math, ALFWorld, reflect-once
+//!   experience synthesis).
+//! * [`runner`] — workflow runners: streaming completion, per-task
+//!   timeout, bounded retry, skip-on-failure (paper §2.2).
+//! * [`explorer`] — the Explorer actor: task intake, buffer emission,
+//!   weight-sync participation, bench-mode evaluation.
+
+pub mod explorer;
+pub mod generation;
+pub mod runner;
+pub mod workflow;
+
+pub use explorer::{EvalReport, Explorer, ExplorerConfig};
+pub use generation::{GenOutput, GenerationEngine, MockModel, RolloutModel, SamplingArgs, Session};
+pub use runner::{RunnerConfig, RunnerStats, WorkflowRunner};
+pub use workflow::{Task, Workflow, WorkflowCtx, WorkflowRegistry};

@@ -1,0 +1,347 @@
+//! Workflow runners: execute workflows on the explorer's thread pool with
+//! the paper's §2.2 fault tolerance — per-task timeout, bounded retry,
+//! skip-on-failure — and *streaming* completion so stragglers never block
+//! already-finished experiences from reaching the buffer.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use crate::buffer::Experience;
+use crate::exec::{bounded, Receiver, TaskError, ThreadPool};
+use crate::tokenizer::Tokenizer;
+use crate::util::rng::Rng;
+
+use super::generation::{RolloutModel, SamplingArgs};
+use super::workflow::{Task, WorkflowCtx, WorkflowRegistry};
+
+#[derive(Debug, Clone)]
+pub struct RunnerConfig {
+    /// Per-task wall-clock timeout.
+    pub timeout: Duration,
+    /// Attempts per task (1 = no retry).
+    pub max_attempts: usize,
+    pub retry_delay: Duration,
+    /// Seed for per-task RNG streams.
+    pub seed: u64,
+}
+
+impl Default for RunnerConfig {
+    fn default() -> Self {
+        RunnerConfig {
+            timeout: Duration::from_secs(120),
+            max_attempts: 2,
+            retry_delay: Duration::from_millis(20),
+            seed: 0,
+        }
+    }
+}
+
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct RunnerStats {
+    pub completed: usize,
+    pub experiences: usize,
+    pub retried: usize,
+    pub skipped: usize,
+    pub timeouts: usize,
+}
+
+/// Events emitted on the streaming channel as tasks finish.
+pub enum RunnerEvent {
+    Done { task_id: String, experiences: Vec<Experience> },
+    Skipped { task_id: String, error: String },
+}
+
+pub struct WorkflowRunner {
+    pool: Arc<ThreadPool>,
+    pub config: RunnerConfig,
+}
+
+impl WorkflowRunner {
+    pub fn new(pool: Arc<ThreadPool>, config: RunnerConfig) -> WorkflowRunner {
+        WorkflowRunner { pool, config }
+    }
+
+    pub fn pool(&self) -> &Arc<ThreadPool> {
+        &self.pool
+    }
+
+    /// Launch all tasks; returns a streaming receiver of per-task events.
+    /// Experiences arrive as soon as each task completes (straggler
+    /// mitigation), in completion order.
+    pub fn run_streaming(
+        &self,
+        tasks: Vec<Task>,
+        registry: Arc<WorkflowRegistry>,
+        model: Arc<dyn RolloutModel>,
+        tokenizer: Arc<Tokenizer>,
+        sampling: SamplingArgs,
+    ) -> Receiver<RunnerEvent> {
+        let (tx, rx) = bounded::<RunnerEvent>(tasks.len().max(1));
+        let config = self.config.clone();
+        let mut promises = Vec::with_capacity(tasks.len());
+        for (i, task) in tasks.into_iter().enumerate() {
+            let registry = Arc::clone(&registry);
+            let model = Arc::clone(&model);
+            let tokenizer = Arc::clone(&tokenizer);
+            let sampling = sampling.clone();
+            let cfg = config.clone();
+            let promise = self.pool.submit(move || -> (Task, Result<Vec<Experience>>, usize) {
+                let mut attempts_used = 0;
+                let mut last_err: Option<anyhow::Error> = None;
+                for attempt in 0..cfg.max_attempts {
+                    attempts_used = attempt + 1;
+                    let wf = match registry.get(&task.workflow) {
+                        Ok(wf) => wf,
+                        Err(e) => return (task, Err(e), attempts_used),
+                    };
+                    let mut ctx = WorkflowCtx {
+                        model: model.as_ref(),
+                        tokenizer: &tokenizer,
+                        task: &task,
+                        sampling: SamplingArgs {
+                            seed: cfg.seed
+                                ^ (i as u64) << 20
+                                ^ (attempt as u64) << 40
+                                ^ sampling.seed,
+                            ..sampling.clone()
+                        },
+                        rng: Rng::with_stream(cfg.seed.wrapping_add(i as u64), attempt as u64 | 1),
+                    };
+                    match wf.run(&mut ctx) {
+                        Ok(exps) => return (task, Ok(exps), attempts_used),
+                        Err(e) => {
+                            last_err = Some(e);
+                            if attempt + 1 < cfg.max_attempts {
+                                std::thread::sleep(cfg.retry_delay);
+                            }
+                        }
+                    }
+                }
+                (task, Err(last_err.unwrap()), attempts_used)
+            });
+            promises.push(promise);
+        }
+
+        // collector thread: applies the timeout per task and forwards
+        // events in completion order (polling, so one straggler can't
+        // block the rest)
+        let timeout = config.timeout;
+        std::thread::spawn(move || {
+            let deadline = std::time::Instant::now() + timeout;
+            let mut pending: Vec<_> = promises.into_iter().enumerate().collect();
+            let mut timed_out: Vec<usize> = vec![];
+            while !pending.is_empty() {
+                let mut still = Vec::with_capacity(pending.len());
+                for (i, p) in pending {
+                    match p.try_take() {
+                        Some(Ok((task, Ok(exps), _attempts))) => {
+                            let _ = tx.send(RunnerEvent::Done { task_id: task.id, experiences: exps });
+                        }
+                        Some(Ok((task, Err(e), _))) => {
+                            let _ = tx.send(RunnerEvent::Skipped {
+                                task_id: task.id,
+                                error: format!("{e:#}"),
+                            });
+                        }
+                        Some(Err(TaskError::Panicked(msg))) => {
+                            let _ = tx.send(RunnerEvent::Skipped {
+                                task_id: format!("task-{i}"),
+                                error: format!("panic: {msg}"),
+                            });
+                        }
+                        Some(Err(e)) => {
+                            let _ = tx.send(RunnerEvent::Skipped {
+                                task_id: format!("task-{i}"),
+                                error: e.to_string(),
+                            });
+                        }
+                        None => {
+                            if std::time::Instant::now() >= deadline {
+                                timed_out.push(i);
+                            } else {
+                                still.push((i, p));
+                            }
+                        }
+                    }
+                }
+                for i in timed_out.drain(..) {
+                    let _ = tx.send(RunnerEvent::Skipped {
+                        task_id: format!("task-{i}"),
+                        error: "timeout".to_string(),
+                    });
+                }
+                pending = still;
+                if !pending.is_empty() {
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+            }
+            tx.close();
+        });
+        rx
+    }
+
+    /// Convenience: run tasks and collect everything (plus stats).
+    pub fn run_collect(
+        &self,
+        tasks: Vec<Task>,
+        registry: Arc<WorkflowRegistry>,
+        model: Arc<dyn RolloutModel>,
+        tokenizer: Arc<Tokenizer>,
+        sampling: SamplingArgs,
+    ) -> (Vec<Experience>, RunnerStats) {
+        let rx = self.run_streaming(tasks, registry, model, tokenizer, sampling);
+        let mut stats = RunnerStats::default();
+        let mut out = Vec::new();
+        while let Ok(ev) = rx.recv() {
+            match ev {
+                RunnerEvent::Done { experiences, .. } => {
+                    stats.completed += 1;
+                    stats.experiences += experiences.len();
+                    out.extend(experiences);
+                }
+                RunnerEvent::Skipped { error, .. } => {
+                    stats.skipped += 1;
+                    if error == "timeout" {
+                        stats.timeouts += 1;
+                    }
+                }
+            }
+        }
+        (out, stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explorer::generation::MockModel;
+    use crate::util::json::Value;
+
+    fn math_tasks(n: usize) -> Vec<Task> {
+        (0..n)
+            .map(|i| {
+                let mut t = Task::new(
+                    &format!("t{i}"),
+                    "math",
+                    Value::obj(vec![
+                        ("question", Value::str("what is 3 + 4 ?")),
+                        ("answer", Value::str("7")),
+                    ]),
+                );
+                t.repeat_times = 2;
+                t
+            })
+            .collect()
+    }
+
+    fn setup(model: MockModel) -> (WorkflowRunner, Arc<WorkflowRegistry>, Arc<dyn RolloutModel>, Arc<Tokenizer>) {
+        let pool = Arc::new(ThreadPool::new("test-explorer", 4));
+        let runner = WorkflowRunner::new(
+            pool,
+            RunnerConfig {
+                timeout: Duration::from_secs(2),
+                max_attempts: 3,
+                retry_delay: Duration::from_millis(1),
+                seed: 7,
+            },
+        );
+        (
+            runner,
+            Arc::new(WorkflowRegistry::with_builtins()),
+            Arc::new(model),
+            Arc::new(Tokenizer::new()),
+        )
+    }
+
+    #[test]
+    fn all_tasks_complete_and_stream() {
+        let (runner, reg, model, tok) = setup(MockModel::new(1, Duration::from_millis(5), 0.0));
+        let (exps, stats) =
+            runner.run_collect(math_tasks(8), reg, model, tok, SamplingArgs::default());
+        assert_eq!(stats.completed, 8);
+        assert_eq!(stats.skipped, 0);
+        assert_eq!(exps.len(), 16); // repeat_times = 2
+    }
+
+    #[test]
+    fn transient_failures_are_retried() {
+        // fail_rate 0.5 with 3 attempts: nearly all should eventually pass
+        let (runner, reg, model, tok) = setup(MockModel::new(2, Duration::ZERO, 0.5));
+        let (_, stats) = runner.run_collect(math_tasks(12), reg, model, tok, SamplingArgs::default());
+        assert!(stats.completed >= 9, "retries should rescue most tasks: {stats:?}");
+    }
+
+    #[test]
+    fn hard_failures_are_skipped_not_fatal() {
+        let (runner, reg, model, tok) = setup(MockModel::new(3, Duration::ZERO, 1.0));
+        let (exps, stats) = runner.run_collect(math_tasks(5), reg, model, tok, SamplingArgs::default());
+        assert_eq!(stats.completed, 0);
+        assert_eq!(stats.skipped, 5);
+        assert!(exps.is_empty());
+    }
+
+    #[test]
+    fn unknown_workflow_is_skipped() {
+        let (runner, reg, model, tok) = setup(MockModel::new(4, Duration::ZERO, 0.0));
+        let tasks = vec![Task::new("x", "does_not_exist", Value::Object(vec![]))];
+        let (_, stats) = runner.run_collect(tasks, reg, model, tok, SamplingArgs::default());
+        assert_eq!(stats.skipped, 1);
+    }
+
+    #[test]
+    fn straggler_does_not_block_stream() {
+        // 3 fast tasks + 1 slow; fast results must arrive before the slow one
+        let tok = Tokenizer::new();
+        let slow_marker = tok.encode_prompt("what is 9 + 9 ?");
+        let model = MockModel::new(5, Duration::ZERO, 0.0).with_response(move |prompt, rng| {
+            if prompt == slow_marker.as_slice() {
+                std::thread::sleep(Duration::from_millis(300));
+            }
+            let mut r: Vec<i32> = vec![100 + rng.below(5) as i32];
+            r.push(crate::tokenizer::EOS);
+            r
+        });
+        let (runner, reg, model, tok) = setup(model);
+        let mut tasks = math_tasks(3);
+        tasks.push(Task::new(
+            "slow",
+            "math",
+            Value::obj(vec![("question", Value::str("what is 9 + 9 ?")), ("answer", Value::str("18"))]),
+        ));
+        let start = std::time::Instant::now();
+        let rx = runner.run_streaming(tasks, reg, model, tok, SamplingArgs::default());
+        let first = rx.recv().unwrap();
+        assert!(start.elapsed() < Duration::from_millis(200), "fast task should stream early");
+        match first {
+            RunnerEvent::Done { task_id, .. } => assert_ne!(task_id, "slow"),
+            _ => panic!("expected Done"),
+        }
+        // drain
+        while rx.recv().is_ok() {}
+    }
+
+    #[test]
+    fn timeout_skips_stuck_tasks() {
+        let model = MockModel::new(6, Duration::from_millis(500), 0.0);
+        let pool = Arc::new(ThreadPool::new("t", 2));
+        let runner = WorkflowRunner::new(
+            pool,
+            RunnerConfig {
+                timeout: Duration::from_millis(60),
+                max_attempts: 1,
+                retry_delay: Duration::ZERO,
+                seed: 0,
+            },
+        );
+        let (_, stats) = runner.run_collect(
+            math_tasks(2),
+            Arc::new(WorkflowRegistry::with_builtins()),
+            Arc::new(model),
+            Arc::new(Tokenizer::new()),
+            SamplingArgs::default(),
+        );
+        assert_eq!(stats.timeouts, 2, "{stats:?}");
+    }
+}

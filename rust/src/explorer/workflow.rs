@@ -1,0 +1,489 @@
+//! Workflows: the single abstraction a user implements to adapt the
+//! framework to a new scenario (paper §2.2, §3.1).
+//!
+//! Built-ins mirror the paper's examples:
+//! * [`MathWorkflow`] — single-turn verifiable math (Listing 1).
+//! * [`AlfworldWorkflow`] — multi-turn ReAct-style episodes compacted into
+//!   one masked sequence (Listing 2).
+//! * [`ReflectOnceWorkflow`] — experience synthesis with environmental
+//!   feedback (Listing 3): K rollouts, verify, reflect, keep the corrected
+//!   answer as an SFT-style experience.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::buffer::{Experience, Source};
+use crate::envs::alfworld::{parse_action, AlfworldEnv};
+use crate::envs::math::{format_score, verify};
+use crate::tokenizer::{Tokenizer, SEP};
+use crate::util::json::Value;
+use crate::util::rng::Rng;
+
+use super::generation::{GenOutput, RolloutModel, SamplingArgs};
+
+/// A rollout task (the paper's Task: raw payload + rollout arguments).
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub id: String,
+    pub workflow: String,
+    pub payload: Value,
+    pub difficulty: f64,
+    /// Rollouts per task (GRPO group size).
+    pub repeat_times: usize,
+}
+
+impl Task {
+    pub fn new(id: &str, workflow: &str, payload: Value) -> Task {
+        Task { id: id.to_string(), workflow: workflow.to_string(), payload, difficulty: 0.0, repeat_times: 1 }
+    }
+
+    /// Stable group id for GRPO advantage grouping.
+    pub fn group_id(&self) -> u64 {
+        self.id.bytes().fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+    }
+
+    pub fn payload_str(&self, key: &str) -> Result<&str> {
+        self.payload.get(key).and_then(Value::as_str).with_context(|| format!("task payload '{key}'"))
+    }
+}
+
+pub struct WorkflowCtx<'a> {
+    pub model: &'a dyn RolloutModel,
+    pub tokenizer: &'a Tokenizer,
+    pub task: &'a Task,
+    pub sampling: SamplingArgs,
+    pub rng: Rng,
+}
+
+impl<'a> WorkflowCtx<'a> {
+    /// Turn a single-turn GenOutput into an Experience.
+    pub fn experience_from_output(&self, out: &GenOutput, reward: f32) -> Experience {
+        let mut e = Experience {
+            id: 0,
+            task_id: self.task.id.clone(),
+            group: self.task.group_id(),
+            tokens: out.tokens.clone(),
+            prompt_len: out.prompt_len,
+            logprobs: out.logprobs.clone(),
+            loss_mask: out.loss_mask.clone(),
+            reward,
+            ready: true,
+            source: Source::Explorer,
+            model_version: self.model.weight_version(),
+            parent_id: None,
+            utility: 0.0,
+            reuse_count: 0,
+            metadata: Value::Object(vec![]),
+        };
+        let resp = self.tokenizer.decode_response(&out.tokens, out.prompt_len);
+        e.set_meta("response", Value::str(resp));
+        e.set_meta("finished", Value::Bool(out.finished));
+        e
+    }
+}
+
+pub trait Workflow: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn run(&self, ctx: &mut WorkflowCtx) -> Result<Vec<Experience>>;
+}
+
+// ---------------------------------------------------------------------------
+// registry
+
+#[derive(Default)]
+pub struct WorkflowRegistry {
+    map: HashMap<String, Arc<dyn Workflow>>,
+}
+
+impl WorkflowRegistry {
+    pub fn new() -> WorkflowRegistry {
+        Self::default()
+    }
+
+    /// All built-in workflows registered (the library default).
+    pub fn with_builtins() -> WorkflowRegistry {
+        let mut r = Self::new();
+        r.register(Arc::new(MathWorkflow { quality_bonus: 0.0 }));
+        r.register(Arc::new(AlfworldWorkflow::default()));
+        r.register(Arc::new(ReflectOnceWorkflow { k_rollouts: 4 }));
+        r
+    }
+
+    pub fn register(&mut self, wf: Arc<dyn Workflow>) {
+        self.map.insert(wf.name().to_string(), wf);
+    }
+
+    pub fn get(&self, name: &str) -> Result<Arc<dyn Workflow>> {
+        self.map.get(name).cloned().with_context(|| format!("workflow '{name}' not registered"))
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.map.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+// ---------------------------------------------------------------------------
+// built-in: single-turn math (paper Listing 1)
+
+pub struct MathWorkflow {
+    /// Optional small format-quality bonus added to the rule reward
+    /// (the static flavor; the dynamic version lives in data pipelines).
+    pub quality_bonus: f32,
+}
+
+impl Workflow for MathWorkflow {
+    fn name(&self) -> &'static str {
+        "math"
+    }
+
+    fn run(&self, ctx: &mut WorkflowCtx) -> Result<Vec<Experience>> {
+        let question = ctx.task.payload_str("question")?;
+        let answer: i64 = ctx.task.payload_str("answer")?.parse().context("answer must be integer")?;
+        let prompt = ctx.tokenizer.encode_prompt(question);
+        let outs = ctx.model.chat(&prompt, ctx.task.repeat_times.max(1), &ctx.sampling)?;
+        let mut experiences = Vec::with_capacity(outs.len());
+        for out in &outs {
+            let resp = ctx.tokenizer.decode_response(&out.tokens, out.prompt_len);
+            let mut reward = verify(&resp, answer);
+            if self.quality_bonus > 0.0 {
+                reward += self.quality_bonus * format_score(&resp);
+            }
+            let mut e = ctx.experience_from_output(out, reward);
+            e.set_meta("correct", Value::Bool(verify(&resp, answer) > 0.5));
+            experiences.push(e);
+        }
+        Ok(experiences)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// built-in: multi-turn grid-world (paper Listing 2)
+
+pub struct AlfworldWorkflow {
+    pub max_env_steps: usize,
+    pub env_init_cost: Duration,
+    /// Hard cap on the packed sequence (must fit the generation bucket's
+    /// KV-cache length minus one response budget).
+    pub max_seq_tokens: usize,
+}
+
+impl Default for AlfworldWorkflow {
+    fn default() -> Self {
+        AlfworldWorkflow { max_env_steps: 4, env_init_cost: Duration::ZERO, max_seq_tokens: 56 }
+    }
+}
+
+impl Workflow for AlfworldWorkflow {
+    fn name(&self) -> &'static str {
+        "alfworld"
+    }
+
+    fn run(&self, ctx: &mut WorkflowCtx) -> Result<Vec<Experience>> {
+        let seed = ctx.task.payload.get("seed").and_then(Value::as_f64).unwrap_or(0.0) as u64;
+        // one env, reset (not re-created) per rollout — the paper's
+        // environment-reuse optimization
+        let mut env = AlfworldEnv::create(seed, self.max_env_steps, self.env_init_cost);
+        let mut experiences = Vec::with_capacity(ctx.task.repeat_times);
+        for rollout in 0..ctx.task.repeat_times.max(1) {
+            if rollout > 0 {
+                env.reset();
+            }
+            experiences.push(self.run_episode(ctx, &mut env)?);
+        }
+        Ok(experiences)
+    }
+}
+
+impl AlfworldWorkflow {
+    /// `process_messages_to_experience`: the whole episode becomes ONE
+    /// packed sequence; observation tokens are masked out, action tokens
+    /// are trained on.
+    fn run_episode(&self, ctx: &mut WorkflowCtx, env: &mut AlfworldEnv) -> Result<Experience> {
+        let tok = ctx.tokenizer;
+        let goal = env.goal_text();
+        let first_obs = env.observe();
+
+        // running packed sequence
+        let mut tokens = tok.encode_prompt(&format!("{goal} . {first_obs}"));
+        let prompt_len = tokens.len();
+        let mut logprobs = vec![0.0f32; prompt_len];
+        let mut loss_mask = vec![0.0f32; prompt_len];
+
+        let mut final_reward = -0.1f32;
+        let mut rounds = 0usize;
+        let mut done = false;
+        // per-turn response budget
+        let budget = ctx.sampling.max_new_tokens.max(4);
+
+        for _round in 0..self.max_env_steps {
+            // the model continues the packed sequence
+            let outs = ctx.model.chat(&tokens, 1, &ctx.sampling)?;
+            let out = &outs[0];
+            // splice the response (tokens after the current prefix)
+            let resp_start = out.prompt_len;
+            let resp_tokens = &out.tokens[resp_start..];
+            let resp_lp = &out.logprobs[resp_start..];
+            tokens.extend_from_slice(resp_tokens);
+            logprobs.extend_from_slice(resp_lp);
+            loss_mask.extend(std::iter::repeat(1.0).take(resp_tokens.len()));
+
+            let action_text = tok.decode_response(&out.tokens, resp_start);
+            let action = parse_action(&action_text);
+            let (obs, reward, is_done) = env.step(&action);
+            rounds += 1;
+            final_reward = reward;
+            done = is_done;
+            if done {
+                break;
+            }
+            // append the observation (masked) + SEP
+            let mut obs_tokens = tok.encode(&obs);
+            obs_tokens.push(SEP);
+            tokens.extend_from_slice(&obs_tokens);
+            logprobs.extend(std::iter::repeat(0.0).take(obs_tokens.len()));
+            loss_mask.extend(std::iter::repeat(0.0).take(obs_tokens.len()));
+
+            // stop if the next turn can't fit within the sequence budget
+            if tokens.len() + budget + 8 > self.max_seq_tokens {
+                break;
+            }
+        }
+
+        let mut e = Experience {
+            id: 0,
+            task_id: ctx.task.id.clone(),
+            group: ctx.task.group_id(),
+            prompt_len,
+            reward: final_reward,
+            ready: true,
+            source: Source::Explorer,
+            model_version: ctx.model.weight_version(),
+            parent_id: None,
+            utility: 0.0,
+            reuse_count: 0,
+            metadata: Value::Object(vec![]),
+            tokens,
+            logprobs,
+            loss_mask,
+        };
+        e.set_meta("env_rounds", Value::int(rounds as i64));
+        e.set_meta("env_done", Value::Bool(done));
+        Ok(e)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// built-in: experience synthesis via reflection (paper Listing 3)
+
+pub struct ReflectOnceWorkflow {
+    pub k_rollouts: usize,
+}
+
+impl Workflow for ReflectOnceWorkflow {
+    fn name(&self) -> &'static str {
+        "reflect_once"
+    }
+
+    fn run(&self, ctx: &mut WorkflowCtx) -> Result<Vec<Experience>> {
+        let question = ctx.task.payload_str("question")?;
+        let answer: i64 = ctx.task.payload_str("answer")?.parse()?;
+        let tok = ctx.tokenizer;
+
+        // Stage 1: K rollouts
+        let prompt = tok.encode_prompt(question);
+        let outs = ctx.model.chat(&prompt, self.k_rollouts, &ctx.sampling)?;
+
+        // Stage 2: verification (environmental feedback, plain text)
+        let verdicts: Vec<(String, bool)> = outs
+            .iter()
+            .map(|o| {
+                let resp = tok.decode_response(&o.tokens, o.prompt_len);
+                let ok = verify(&resp, answer) > 0.5;
+                (resp, ok)
+            })
+            .collect();
+
+        // Stage 3: reflection — feed back attempts + verdicts
+        let mut reflection = format!("question {question} .");
+        for (resp, ok) in verdicts.iter().take(3) {
+            let adj = if *ok { "yes" } else { "no" };
+            reflection.push_str(&format!(" answer {resp} ok {adj} ."));
+        }
+        reflection.push_str(" think step and answer");
+        let refl_prompt = tok.encode_prompt(&reflection);
+        let refl_outs = ctx.model.chat(&refl_prompt, 1, &ctx.sampling)?;
+        let refl = &refl_outs[0];
+        let refl_text = tok.decode_response(&refl.tokens, refl.prompt_len);
+
+        // keep the synthesized experience only if the reflection is correct —
+        // it becomes SFT-style data (Source::Synthetic) for the trainer
+        let mut experiences = Vec::new();
+        if verify(&refl_text, answer) > 0.5 {
+            let mut e = ctx.experience_from_output(refl, 1.0);
+            e.source = Source::Synthetic;
+            e.set_meta("synthesized", Value::Bool(true));
+            e.set_meta("k_attempts", Value::int(self.k_rollouts as i64));
+            experiences.push(e);
+        }
+        Ok(experiences)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explorer::generation::MockModel;
+    use crate::tokenizer::EOS;
+
+    fn ctx_parts() -> (Tokenizer, SamplingArgs) {
+        (Tokenizer::new(), SamplingArgs { max_new_tokens: 8, ..Default::default() })
+    }
+
+    fn math_task(q: &str, a: i64, n: usize) -> Task {
+        let mut t = Task::new(
+            "t1",
+            "math",
+            Value::obj(vec![("question", Value::str(q)), ("answer", Value::str(a.to_string()))]),
+        );
+        t.repeat_times = n;
+        t
+    }
+
+    /// Mock that always answers "7".
+    fn mock_always_7(tok: &Tokenizer) -> MockModel {
+        let resp = tok.encode("7");
+        MockModel::new(1, Duration::ZERO, 0.0).with_response(move |_, _| {
+            let mut r = resp.clone();
+            r.push(EOS);
+            r
+        })
+    }
+
+    #[test]
+    fn math_workflow_rewards_correct_answers() {
+        let (tok, sampling) = ctx_parts();
+        let model = mock_always_7(&tok);
+        let task = math_task("what is 3 + 4 ?", 7, 3);
+        let mut ctx = WorkflowCtx { model: &model, tokenizer: &tok, task: &task, sampling, rng: Rng::new(1) };
+        let wf = MathWorkflow { quality_bonus: 0.0 };
+        let exps = wf.run(&mut ctx).unwrap();
+        assert_eq!(exps.len(), 3);
+        for e in &exps {
+            assert_eq!(e.reward, 1.0);
+            assert_eq!(e.group, task.group_id());
+            assert!(e.response_len() > 0);
+            assert_eq!(e.metadata.get("correct").unwrap().as_bool(), Some(true));
+        }
+    }
+
+    #[test]
+    fn math_workflow_zero_reward_for_wrong() {
+        let (tok, sampling) = ctx_parts();
+        let model = mock_always_7(&tok);
+        let task = math_task("what is 1 + 1 ?", 2, 2);
+        let mut ctx = WorkflowCtx { model: &model, tokenizer: &tok, task: &task, sampling, rng: Rng::new(2) };
+        let exps = MathWorkflow { quality_bonus: 0.0 }.run(&mut ctx).unwrap();
+        assert!(exps.iter().all(|e| e.reward == 0.0));
+    }
+
+    #[test]
+    fn alfworld_workflow_packs_episode_with_masks() {
+        let (tok, sampling) = ctx_parts();
+        // model that always says "look" — episode runs to max steps
+        let look = tok.encode("look");
+        let model = MockModel::new(3, Duration::ZERO, 0.0).with_response(move |_, _| {
+            let mut r = look.clone();
+            r.push(EOS);
+            r
+        });
+        let mut task = Task::new("a1", "alfworld", Value::obj(vec![("seed", Value::int(5))]));
+        task.repeat_times = 2;
+        let mut ctx =
+            WorkflowCtx { model: &model, tokenizer: &tok, task: &task, sampling, rng: Rng::new(3) };
+        let wf = AlfworldWorkflow { max_env_steps: 3, env_init_cost: Duration::ZERO, max_seq_tokens: 200 };
+        let exps = wf.run(&mut ctx).unwrap();
+        assert_eq!(exps.len(), 2);
+        for e in &exps {
+            assert_eq!(e.tokens.len(), e.loss_mask.len());
+            assert_eq!(e.tokens.len(), e.logprobs.len());
+            // prompt masked out
+            assert!(e.loss_mask[..e.prompt_len].iter().all(|&m| m == 0.0));
+            // some action tokens trained on, some obs tokens masked
+            let trained = e.loss_mask.iter().filter(|&&m| m > 0.0).count();
+            let masked_after_prompt =
+                e.loss_mask[e.prompt_len..].iter().filter(|&&m| m == 0.0).count();
+            assert!(trained > 0);
+            assert!(masked_after_prompt > 0, "obs tokens should be masked");
+            assert_eq!(e.reward, -0.1); // never solved by 'look'
+            assert_eq!(e.meta_f64("env_rounds"), Some(3.0));
+        }
+    }
+
+    #[test]
+    fn alfworld_expert_plan_gets_full_reward() {
+        let (tok, sampling) = ctx_parts();
+        // a "model" that replays the optimal plan step by step
+        let seed = 11u64;
+        let env_probe = AlfworldEnv::create(seed, 8, Duration::ZERO);
+        let plan: Vec<String> =
+            env_probe.optimal_plan().iter().map(AlfworldEnv::action_text).collect();
+        let counter = std::sync::atomic::AtomicUsize::new(0);
+        let tok2 = Tokenizer::new();
+        let model = MockModel::new(4, Duration::ZERO, 0.0).with_response(move |_, _| {
+            let i = counter.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+            let text = plan.get(i.min(plan.len() - 1)).cloned().unwrap_or_else(|| "look".into());
+            let mut r = tok2.encode(&text);
+            r.push(EOS);
+            r
+        });
+        let task = Task::new("a2", "alfworld", Value::obj(vec![("seed", Value::int(seed as i64))]));
+        let mut ctx =
+            WorkflowCtx { model: &model, tokenizer: &tok, task: &task, sampling, rng: Rng::new(4) };
+        let wf = AlfworldWorkflow { max_env_steps: 8, env_init_cost: Duration::ZERO, max_seq_tokens: 200 };
+        let exps = wf.run(&mut ctx).unwrap();
+        assert_eq!(exps[0].reward, 1.0);
+        assert_eq!(exps[0].metadata.get("env_done").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn reflect_once_synthesizes_only_correct() {
+        let (tok, sampling) = ctx_parts();
+        let model = mock_always_7(&tok);
+        // answer matches -> one synthetic experience
+        let task = math_task("what is 3 + 4 ?", 7, 1);
+        let mut ctx = WorkflowCtx { model: &model, tokenizer: &tok, task: &task, sampling: sampling.clone(), rng: Rng::new(5) };
+        let wf = ReflectOnceWorkflow { k_rollouts: 2 };
+        let exps = wf.run(&mut ctx).unwrap();
+        assert_eq!(exps.len(), 1);
+        assert_eq!(exps[0].source, Source::Synthetic);
+        assert_eq!(exps[0].reward, 1.0);
+        // answer wrong -> nothing kept
+        let task2 = math_task("what is 1 + 1 ?", 2, 1);
+        let mut ctx2 = WorkflowCtx { model: &model, tokenizer: &tok, task: &task2, sampling, rng: Rng::new(6) };
+        assert!(wf.run(&mut ctx2).unwrap().is_empty());
+    }
+
+    #[test]
+    fn registry_builtins() {
+        let r = WorkflowRegistry::with_builtins();
+        assert!(r.get("math").is_ok());
+        assert!(r.get("alfworld").is_ok());
+        assert!(r.get("reflect_once").is_ok());
+        assert!(r.get("nope").is_err());
+        assert_eq!(r.names().len(), 3);
+    }
+
+    #[test]
+    fn group_ids_stable_and_distinct() {
+        let t1 = Task::new("a", "math", Value::Object(vec![]));
+        let t1b = Task::new("a", "math", Value::Object(vec![]));
+        let t2 = Task::new("b", "math", Value::Object(vec![]));
+        assert_eq!(t1.group_id(), t1b.group_id());
+        assert_ne!(t1.group_id(), t2.group_id());
+    }
+}

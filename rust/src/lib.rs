@@ -1,0 +1,41 @@
+//! Trinity-RFT reproduction: a three-layer Rust + JAX + Pallas stack.
+//!
+//! This crate is Layer 3 — the coordinator holding the paper's system
+//! contribution: the explorer / buffer / trainer trinity, the unified RFT
+//! modes (synchronous, one-step off-policy, fully asynchronous,
+//! multi-explorer, bench, train-only), first-class agent–environment
+//! interaction, and the systematic data pipelines.  Layers 1–2 (Pallas
+//! kernels + JAX model) are compiled ahead-of-time to `artifacts/*.hlo.txt`
+//! by `python/compile/aot.py`; Python is never on the request path.
+//!
+//! Module map (see DESIGN.md §3 for the full inventory):
+//!
+//! * [`util`], [`exec`] — substrates built from scratch for the offline
+//!   environment (JSON, YAML-subset config, CLI, PRNG, thread pool,
+//!   promises, channels).
+//! * [`runtime`], [`model`] — PJRT artifact loading/execution, parameter
+//!   store, checkpoints, weight synchronization.
+//! * [`buffer`] — the experience buffer: queue, persistent store,
+//!   priority views, sampling strategies, delayed rewards.
+//! * [`explorer`] — workflows, workflow runners with timeout/retry/skip,
+//!   and the continuous-batching generation engine.
+//! * [`trainer`] — algorithm registry (GRPO/PPO/SFT/DPO/MIX/OPMD×3) and
+//!   the training loop.
+//! * [`coordinator`] — RFT modes, launcher, monitor, typed config.
+//! * [`data`] — task curation, experience shaping, agentic pipelines,
+//!   human-in-the-loop simulation, lineage.
+//! * [`envs`] — synthetic verifiable-math tasks (GSM8K stand-in),
+//!   multi-turn grid-world (ALFWorld stand-in), tabular bandit (Appendix A).
+//! * [`tokenizer`] — the deterministic tokenizer shared by all tasks.
+
+pub mod buffer;
+pub mod coordinator;
+pub mod data;
+pub mod envs;
+pub mod exec;
+pub mod explorer;
+pub mod model;
+pub mod runtime;
+pub mod tokenizer;
+pub mod trainer;
+pub mod util;

@@ -1,0 +1,289 @@
+//! `trinity` — the leader binary: run RFT from a YAML config, bench
+//! checkpoints, evaluate OPMD variants, or inspect artifacts.
+//!
+//! ```text
+//! trinity run   --config configs/gsm8k_grpo.yaml
+//! trinity bench --preset tiny --tiers math500s,amcs --tasks 16 --k 4
+//! trinity opmd  --steps 400 --group 8
+//! trinity info
+//! ```
+
+
+use anyhow::Result;
+
+use trinity_rft::coordinator::{RftConfig, RftSession};
+use trinity_rft::envs::bandit::{run_learning, Bandit, OpmdVariant};
+use trinity_rft::runtime::Manifest;
+use trinity_rft::util::cli::{arg, arg_default, flag, Cli, CliError};
+use trinity_rft::util::timeseries;
+
+fn cli() -> Cli {
+    Cli::new("trinity", "Trinity-RFT reproduction — unified RFT over Rust + JAX + Pallas")
+        .command(
+            "run",
+            "run an RFT process from a YAML config",
+            vec![
+                arg("config", "path to YAML config"),
+                arg("mode", "override mode (both|async|train|bench)"),
+                arg("steps", "override total train steps"),
+                flag("dummy", "dummy learning (lr = 0, profiling)"),
+            ],
+        )
+        .command(
+            "bench",
+            "evaluate current weights on benchmark tiers",
+            vec![
+                arg_default("preset", "model preset", "tiny"),
+                arg_default("tiers", "comma-separated tiers", "math500s,amcs,aime24s,aime25s"),
+                arg_default("tasks", "tasks per tier", "16"),
+                arg_default("k", "rollouts per task (Avg@K)", "4"),
+                arg("checkpoint", "load a .ckpt before evaluating"),
+            ],
+        )
+        .command(
+            "opmd",
+            "Appendix-A OPMD bandit comparison",
+            vec![
+                arg_default("steps", "learning steps", "400"),
+                arg_default("group", "group size K", "8"),
+                arg_default("tau", "KL temperature", "1.0"),
+                arg_default("staleness", "rollout staleness (0 = on-policy)", "0"),
+            ],
+        )
+        .command(
+            "perf",
+            "profile the hot paths (per-artifact PJRT timings)",
+            vec![
+                arg_default("preset", "model preset", "tiny"),
+                arg_default("iters", "iterations per artifact", "30"),
+            ],
+        )
+        .command("info", "show artifact manifest summary", vec![])
+}
+
+fn cmd_run(m: &trinity_rft::util::cli::Matches) -> Result<()> {
+    let mut cfg = match m.get("config") {
+        Some(path) => RftConfig::from_file(path)?,
+        None => RftConfig::default(),
+    };
+    if let Some(mode) = m.get("mode") {
+        cfg.mode = mode.to_string();
+    }
+    if let Some(steps) = m.get("steps") {
+        cfg.total_steps = steps.parse()?;
+    }
+    if m.has_flag("dummy") {
+        cfg.dummy_learning = true;
+    }
+    cfg.validate()?;
+    println!(
+        "mode={} preset={} alg={} steps={} sync_interval={} sync_offset={} explorers={}",
+        cfg.mode,
+        cfg.model_preset,
+        cfg.algorithm,
+        cfg.total_steps,
+        cfg.sync_interval,
+        cfg.sync_offset,
+        cfg.explorer_count
+    );
+    let mut session = RftSession::build(cfg, None, None)?;
+    let report = session.run()?;
+    println!("\n== run report ==");
+    println!("mode            {}", report.mode);
+    println!("wall time       {:.2}s", report.wall_s);
+    println!("train steps     {}", report.train_steps);
+    println!("explore batches {}", report.explore_batches);
+    println!("weight syncs    {}", report.sync_count);
+    println!("explorer util   {:.1}%", report.explorer_util);
+    println!("trainer util    {:.1}%", report.trainer_util);
+    println!("device busy     {:.1}%", report.device_busy);
+    let rewards = report.reward_series();
+    if !rewards.is_empty() {
+        let s = timeseries::summarize(&rewards);
+        println!("reward          {}", timeseries::fmt_mean_std(&s));
+    }
+    session.monitor.flush_csv()?;
+    Ok(())
+}
+
+fn cmd_bench(m: &trinity_rft::util::cli::Matches) -> Result<()> {
+    let mut cfg = RftConfig::default();
+    cfg.model_preset = m.get_or("preset", "tiny");
+    cfg.mode = "bench".into();
+    let session = RftSession::build(cfg, None, None)?;
+    if let Some(ckpt) = m.get("checkpoint") {
+        let ck = trinity_rft::model::load_checkpoint(ckpt)?;
+        session.load_explorer_weights(&ck.weights(), ck.weight_version)?;
+        println!("loaded checkpoint step={} version={}", ck.step, ck.weight_version);
+    }
+    let tiers_str = m.get_or("tiers", "math500s,amcs");
+    let tiers: Vec<&str> = tiers_str.split(',').collect();
+    let reports =
+        session.run_bench(&tiers, m.get_usize("tasks", 16), m.get_usize("k", 4), 0.6)?;
+    println!("{:<12} {:>8} {:>8} {:>10}", "tier", "Avg@K", "Pass@K", "resp_len");
+    for (tier, r) in reports {
+        println!(
+            "{:<12} {:>8.3} {:>8.3} {:>10.1}",
+            tier, r.avg_reward, r.pass_at_k, r.mean_response_len
+        );
+    }
+    Ok(())
+}
+
+fn cmd_opmd(m: &trinity_rft::util::cli::Matches) -> Result<()> {
+    let steps = m.get_usize("steps", 400);
+    let group = m.get_usize("group", 8);
+    let tau = m.get_f64("tau", 1.0);
+    let staleness = m.get_usize("staleness", 0);
+    let bandit = Bandit::new(vec![0.1, 0.3, 0.9, 0.2, 0.5], 0.1);
+    println!("bandit arms = {:?}, staleness = {staleness}", bandit.means);
+    println!("{:<12} {:>10} {:>10}", "variant", "start", "final");
+    for (name, v) in [
+        ("kimi", OpmdVariant::Kimi),
+        ("pairwise", OpmdVariant::Pairwise),
+        ("simple", OpmdVariant::Simple),
+        ("vanilla_pg", OpmdVariant::VanillaPg),
+    ] {
+        let curve = run_learning(v, &bandit, steps, group, 0.3, tau, staleness, 17);
+        println!("{:<12} {:>10.3} {:>10.3}", name, curve[0], curve[steps - 1]);
+    }
+    Ok(())
+}
+
+fn cmd_perf(m: &trinity_rft::util::cli::Matches) -> Result<()> {
+    use trinity_rft::explorer::{GenerationEngine, RolloutModel, SamplingArgs};
+    use trinity_rft::model::ParamStore;
+    use trinity_rft::runtime::{ModelEngine, RuntimeClient, Tensor, TrainState};
+    use trinity_rft::util::rng::Rng;
+
+    let preset = m.get_or("preset", "tiny");
+    let iters = m.get_usize("iters", 30);
+    let manifest = Manifest::load_default()
+        .ok_or_else(|| anyhow::anyhow!("artifacts not built — run `make artifacts`"))?;
+    let client = RuntimeClient::global();
+    let engine = std::sync::Arc::new(ModelEngine::new(client.clone(), &manifest, &preset)?);
+    engine.warmup()?;
+    let params = ParamStore::init(&engine.model, 1)?;
+    let (b, t) = engine.seq_shape();
+    let mut rng = Rng::new(2);
+    let tokens = Tensor::from_i32(
+        vec![b, t],
+        (0..b * t).map(|_| rng.below(engine.model.vocab_size as u64) as i32).collect(),
+    );
+    let mask = Tensor::from_f32(vec![b, t], vec![1.0; b * t]);
+
+    // logprobs path
+    for _ in 0..iters {
+        engine.token_logprobs(&params, &tokens)?;
+    }
+    // embed path
+    for _ in 0..iters {
+        engine.embed(&params, &tokens, &mask)?;
+    }
+    // generation path (prefill + decode loop)
+    let gen = GenerationEngine::new(std::sync::Arc::clone(&engine), ParamStore::init(&engine.model, 1)?);
+    let prompt: Vec<i32> = vec![1, 10, 11, 12];
+    let args = SamplingArgs { max_new_tokens: 8, ..Default::default() };
+    let t0 = std::time::Instant::now();
+    let mut gen_tokens = 0usize;
+    for i in 0..iters {
+        let outs = gen.chat(&prompt, b, &SamplingArgs { seed: i as u64, ..args.clone() })?;
+        gen_tokens += outs.iter().map(|o| o.tokens.len() - o.prompt_len).sum::<usize>();
+    }
+    let gen_wall = t0.elapsed().as_secs_f64();
+    // train path
+    let mut state = TrainState::new(ParamStore::init(&engine.model, 1)?)?;
+    let (tb, tt, _) = engine.train_shape("grpo")?;
+    let ttokens = Tensor::from_i32(
+        vec![tb, tt],
+        (0..tb * tt).map(|_| rng.below(engine.model.vocab_size as u64) as i32).collect(),
+    );
+    let tmask = Tensor::from_f32(vec![tb, tt], {
+        let mut v = vec![1.0; tb * tt];
+        for i in 0..tb { v[i * tt] = 0.0; }
+        v
+    });
+    let (lp, _) = engine.token_logprobs(&state.params, &ttokens)?;
+    let adv = Tensor::from_f32(vec![tb], (0..tb).map(|i| if i % 2 == 0 { 1.0 } else { -1.0 }).collect());
+    let hyper = [1e-4, 0.9, 0.999, 1e-8, 0.2, 1.0, 0.1, 0.0];
+    let t1 = std::time::Instant::now();
+    for _ in 0..iters {
+        engine.train_step("grpo", &mut state, &hyper, &[&ttokens, &tmask, &adv, &lp])?;
+    }
+    let train_wall = t1.elapsed().as_secs_f64();
+
+    println!("
+== per-artifact PJRT timings ({preset}, {iters} iters) ==");
+    let mut stats: Vec<_> = client.stats().into_iter().filter(|(_, s)| s.executions > 0).collect();
+    stats.sort_by(|a, b| b.1.total_seconds.partial_cmp(&a.1.total_seconds).unwrap());
+    println!("{:<42} {:>8} {:>12} {:>12}", "artifact", "execs", "total (s)", "ms/exec");
+    for (name, s) in &stats {
+        println!(
+            "{:<42} {:>8} {:>12.3} {:>12.3}",
+            name,
+            s.executions,
+            s.total_seconds,
+            1000.0 * s.total_seconds / s.executions as f64
+        );
+    }
+    println!("
+generation: {:.1} tokens/s end-to-end ({} tokens in {:.2}s, batch {b})",
+        gen_tokens as f64 / gen_wall, gen_tokens, gen_wall);
+    println!("train: {:.2} steps/s ({} steps in {:.2}s)", iters as f64 / train_wall, iters, train_wall);
+    println!("params/step round-trip: {} leaves x3 (p,m,v)", state.params.leaf_count());
+    Ok(())
+}
+
+fn cmd_info() -> Result<()> {
+    let manifest = Manifest::load_default()
+        .ok_or_else(|| anyhow::anyhow!("artifacts not built — run `make artifacts`"))?;
+    println!("artifacts dir: {:?}", manifest.dir);
+    println!("hyper slots: {:?}", manifest.hyper_slots);
+    for (name, m) in &manifest.models {
+        println!(
+            "model {name}: vocab={} d={} layers={} heads={} params={}",
+            m.vocab_size, m.d_model, m.n_layers, m.n_heads, m.param_count
+        );
+    }
+    println!("{} artifacts:", manifest.artifacts.len());
+    for (name, a) in &manifest.artifacts {
+        println!(
+            "  {:<40} kind={:<9} b={} t={} alg={}",
+            name,
+            a.kind,
+            a.batch,
+            a.seq,
+            a.alg.as_deref().unwrap_or("-")
+        );
+    }
+    Ok(())
+}
+
+fn main() {
+    trinity_rft::util::logging::init_from_env();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = cli();
+    let matches = match cli.parse(&args) {
+        Ok(m) => m,
+        Err(CliError::NoCommand(help)) | Err(CliError::Help(help)) => {
+            println!("{help}");
+            return;
+        }
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    let result = match matches.command.as_str() {
+        "run" => cmd_run(&matches),
+        "bench" => cmd_bench(&matches),
+        "opmd" => cmd_opmd(&matches),
+        "perf" => cmd_perf(&matches),
+        "info" => cmd_info(),
+        _ => unreachable!(),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

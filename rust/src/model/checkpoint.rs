@@ -1,0 +1,254 @@
+//! Binary checkpoint format (magic / version / CRC32-guarded payload).
+//!
+//! Layout (little-endian):
+//! ```text
+//!   "TRFT"  u32 format_version  u64 step  u64 weight_version
+//!   u16 preset_len  preset bytes
+//!   u32 n_leaves
+//!   per leaf: u16 name_len, name, u8 ndim, u32 dims[ndim], u32 n, f32 data[n]
+//!   u32 crc32 (over everything after the magic)
+//! ```
+//! Writes go to a temp file + atomic rename so a crashed writer never
+//! leaves a torn checkpoint — the async modes poll this directory.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context, Result};
+
+const MAGIC: &[u8; 4] = b"TRFT";
+const FORMAT_VERSION: u32 = 1;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Checkpoint {
+    pub preset: String,
+    pub step: u64,
+    pub weight_version: u64,
+    pub leaves: Vec<(String, Vec<usize>, Vec<f32>)>,
+}
+
+impl Checkpoint {
+    pub fn weights(&self) -> Vec<Vec<f32>> {
+        self.leaves.iter().map(|(_, _, w)| w.clone()).collect()
+    }
+}
+
+// -- CRC32 (IEEE 802.3) ------------------------------------------------------
+
+fn crc32_table() -> &'static [u32; 256] {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut table = [0u32; 256];
+        for (i, slot) in table.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *slot = c;
+        }
+        table
+    })
+}
+
+pub fn crc32(data: &[u8]) -> u32 {
+    let table = crc32_table();
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = table[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// -- encode / decode ----------------------------------------------------------
+
+struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    fn bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+}
+
+struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        ensure!(self.pos + n <= self.buf.len(), "truncated checkpoint");
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+}
+
+pub fn save_checkpoint(
+    path: impl AsRef<Path>,
+    preset: &str,
+    step: u64,
+    weight_version: u64,
+    leaves: &[(String, Vec<usize>, &[f32])],
+) -> Result<()> {
+    let mut e = Enc { buf: Vec::new() };
+    e.u32(FORMAT_VERSION);
+    e.u64(step);
+    e.u64(weight_version);
+    e.u16(preset.len() as u16);
+    e.bytes(preset.as_bytes());
+    e.u32(leaves.len() as u32);
+    for (name, shape, data) in leaves {
+        e.u16(name.len() as u16);
+        e.bytes(name.as_bytes());
+        e.u8(shape.len() as u8);
+        for &d in shape {
+            e.u32(d as u32);
+        }
+        e.u32(data.len() as u32);
+        // bulk copy of the f32 payload
+        let bytes = unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+        e.bytes(bytes);
+    }
+    let crc = crc32(&e.buf);
+    e.u32(crc);
+
+    let path = path.as_ref();
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::fs::File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+        f.write_all(MAGIC)?;
+        f.write_all(&e.buf)?;
+        f.sync_all()?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming into {path:?}"))?;
+    Ok(())
+}
+
+pub fn load_checkpoint(path: impl AsRef<Path>) -> Result<Checkpoint> {
+    let mut raw = Vec::new();
+    std::fs::File::open(path.as_ref())
+        .with_context(|| format!("opening checkpoint {:?}", path.as_ref()))?
+        .read_to_end(&mut raw)?;
+    ensure!(raw.len() > 8 && &raw[..4] == MAGIC, "not a TRFT checkpoint");
+    let body = &raw[4..raw.len() - 4];
+    let stored_crc = u32::from_le_bytes(raw[raw.len() - 4..].try_into().unwrap());
+    ensure!(crc32(body) == stored_crc, "checkpoint CRC mismatch (torn write?)");
+
+    let mut d = Dec { buf: body, pos: 0 };
+    let fmt = d.u32()?;
+    if fmt != FORMAT_VERSION {
+        bail!("unsupported checkpoint format {fmt}");
+    }
+    let step = d.u64()?;
+    let weight_version = d.u64()?;
+    let preset_len = d.u16()? as usize;
+    let preset = String::from_utf8(d.take(preset_len)?.to_vec()).context("preset utf8")?;
+    let n_leaves = d.u32()? as usize;
+    let mut leaves = Vec::with_capacity(n_leaves);
+    for _ in 0..n_leaves {
+        let name_len = d.u16()? as usize;
+        let name = String::from_utf8(d.take(name_len)?.to_vec()).context("leaf name utf8")?;
+        let ndim = d.u8()? as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            shape.push(d.u32()? as usize);
+        }
+        let n = d.u32()? as usize;
+        ensure!(n == shape.iter().product::<usize>().max(1) || shape.is_empty(), "leaf '{name}' shape/size mismatch");
+        let bytes = d.take(n * 4)?;
+        let mut data = vec![0f32; n];
+        unsafe {
+            std::ptr::copy_nonoverlapping(bytes.as_ptr(), data.as_mut_ptr() as *mut u8, n * 4);
+        }
+        leaves.push((name, shape, data));
+    }
+    Ok(Checkpoint { preset, step, weight_version, leaves })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_leaves() -> Vec<(String, Vec<usize>, Vec<f32>)> {
+        vec![
+            ("a.w".to_string(), vec![2, 3], vec![1.0, -2.0, 3.5, 0.0, 7.25, -0.125]),
+            ("b.norm".to_string(), vec![4], vec![1.0; 4]),
+        ]
+    }
+
+    fn as_refs(leaves: &[(String, Vec<usize>, Vec<f32>)]) -> Vec<(String, Vec<usize>, &[f32])> {
+        leaves.iter().map(|(n, s, d)| (n.clone(), s.clone(), d.as_slice())).collect()
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join(format!("trft_ckpt_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.ckpt");
+        let leaves = sample_leaves();
+        save_checkpoint(&path, "tiny", 123, 9, &as_refs(&leaves)).unwrap();
+        let ck = load_checkpoint(&path).unwrap();
+        assert_eq!(ck.preset, "tiny");
+        assert_eq!(ck.step, 123);
+        assert_eq!(ck.weight_version, 9);
+        assert_eq!(ck.leaves, leaves);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn detects_corruption() {
+        let dir = std::env::temp_dir().join(format!("trft_ckpt_c_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("m.ckpt");
+        let leaves = sample_leaves();
+        save_checkpoint(&path, "tiny", 1, 1, &as_refs(&leaves)).unwrap();
+        let mut raw = std::fs::read(&path).unwrap();
+        let mid = raw.len() / 2;
+        raw[mid] ^= 0xFF;
+        std::fs::write(&path, &raw).unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn rejects_non_checkpoint() {
+        let dir = std::env::temp_dir().join(format!("trft_ckpt_r_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.bin");
+        std::fs::write(&path, b"definitely not a checkpoint").unwrap();
+        assert!(load_checkpoint(&path).is_err());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn crc32_known_vector() {
+        // standard test vector: crc32("123456789") == 0xCBF43926
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+    }
+}

@@ -1,0 +1,11 @@
+//! Model-state management: the parameter store (leaf order mirrors the
+//! jax pytree flattening), binary checkpoints, and the weight-sync service
+//! connecting trainer to explorer(s).
+
+pub mod checkpoint;
+pub mod params;
+pub mod sync;
+
+pub use checkpoint::{load_checkpoint, save_checkpoint, Checkpoint};
+pub use params::ParamStore;
+pub use sync::{CheckpointSync, MemorySync, WeightSync, WeightUpdate};

@@ -1,0 +1,182 @@
+//! The parameter store: model weights held as PJRT literals in manifest
+//! leaf order (identical to jax's sorted-dict pytree flattening, which is
+//! the AOT contract).
+
+use anyhow::{ensure, Context, Result};
+
+use crate::runtime::artifact::ModelInfo;
+use crate::util::rng::Rng;
+
+pub struct ParamStore {
+    pub model: ModelInfo,
+    literals: Vec<xla::Literal>,
+    version: u64,
+}
+
+// Literals are host-memory buffers behind raw pointers; moving them across
+// threads is safe (the PJRT CPU client synchronizes internally), the auto
+// impls are only blocked by the raw pointers in the `xla` wrappers.
+unsafe impl Send for ParamStore {}
+unsafe impl Sync for ParamStore {}
+
+impl ParamStore {
+    /// Initialize parameters exactly as `model.init_params` does shape-wise:
+    /// normal(0, std) for weight matrices, ones for norm scales.  (The RNG
+    /// differs from jax's — initial weights are random either way; tests
+    /// that need numeric parity load a checkpoint instead.)
+    pub fn init(model: &ModelInfo, seed: u64) -> Result<ParamStore> {
+        let mut rng = Rng::new(seed);
+        let mut literals = Vec::with_capacity(model.params.len());
+        for (i, p) in model.params.iter().enumerate() {
+            let n = p.element_count();
+            let mut leaf_rng = rng.fork(i as u64);
+            let data: Vec<f32> = if p.init_std == 0.0 {
+                vec![1.0; n]
+            } else {
+                (0..n).map(|_| (leaf_rng.normal() * p.init_std) as f32).collect()
+            };
+            literals.push(to_literal(&data, &p.shape)?);
+        }
+        let _ = rng.next_u64();
+        Ok(ParamStore { model: model.clone(), literals, version: 0 })
+    }
+
+    /// Build from a host snapshot (leaf order must match the manifest).
+    pub fn from_snapshot(model: &ModelInfo, weights: &[Vec<f32>]) -> Result<ParamStore> {
+        ensure!(weights.len() == model.params.len(), "snapshot leaf count mismatch");
+        let mut literals = Vec::with_capacity(weights.len());
+        for (p, w) in model.params.iter().zip(weights) {
+            ensure!(w.len() == p.element_count(), "leaf '{}' size mismatch", p.name);
+            literals.push(to_literal(w, &p.shape)?);
+        }
+        Ok(ParamStore { model: model.clone(), literals, version: 0 })
+    }
+
+    pub fn literals(&self) -> &[xla::Literal] {
+        &self.literals
+    }
+
+    pub fn leaf_count(&self) -> usize {
+        self.literals.len()
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn set_version(&mut self, v: u64) {
+        self.version = v;
+    }
+
+    /// Replace all leaves (e.g. with a train step's outputs). Bumps version.
+    pub fn replace(&mut self, literals: Vec<xla::Literal>) -> Result<()> {
+        ensure!(literals.len() == self.literals.len(), "leaf count mismatch on replace");
+        self.literals = literals;
+        self.version += 1;
+        Ok(())
+    }
+
+    /// Copy weights out to host vectors (for checkpointing / weight sync).
+    pub fn snapshot(&self) -> Result<Vec<Vec<f32>>> {
+        self.literals.iter().map(|l| l.to_vec::<f32>().context("literal to_vec")).collect()
+    }
+
+    /// Load a host snapshot in place (weight sync receive path).
+    pub fn load_snapshot(&mut self, weights: &[Vec<f32>], version: u64) -> Result<()> {
+        ensure!(weights.len() == self.literals.len(), "snapshot leaf count mismatch");
+        for (i, (p, w)) in self.model.params.iter().zip(weights).enumerate() {
+            ensure!(w.len() == p.element_count(), "leaf '{}' size mismatch", p.name);
+            self.literals[i] = to_literal(w, &p.shape)?;
+        }
+        self.version = version;
+        Ok(())
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        self.model.params.iter().map(|p| p.element_count()).sum()
+    }
+
+    /// L2 distance to another store (diagnostics / tests).
+    pub fn l2_distance(&self, other: &ParamStore) -> Result<f64> {
+        let a = self.snapshot()?;
+        let b = other.snapshot()?;
+        let mut acc = 0.0f64;
+        for (x, y) in a.iter().zip(&b) {
+            for (u, v) in x.iter().zip(y) {
+                acc += ((u - v) as f64).powi(2);
+            }
+        }
+        Ok(acc.sqrt())
+    }
+}
+
+fn to_literal(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data).reshape(&dims).context("reshape param literal")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::artifact::{default_artifacts_dir, Manifest};
+
+    fn tiny_model() -> Option<ModelInfo> {
+        let dir = default_artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        Some(Manifest::load(dir).unwrap().model("tiny").unwrap().clone())
+    }
+
+    #[test]
+    fn init_deterministic_and_shaped() {
+        let Some(model) = tiny_model() else { return };
+        let a = ParamStore::init(&model, 7).unwrap();
+        let b = ParamStore::init(&model, 7).unwrap();
+        let c = ParamStore::init(&model, 8).unwrap();
+        assert_eq!(a.param_count(), model.param_count);
+        assert!(a.l2_distance(&b).unwrap() == 0.0);
+        assert!(a.l2_distance(&c).unwrap() > 0.0);
+    }
+
+    #[test]
+    fn norm_leaves_are_ones() {
+        let Some(model) = tiny_model() else { return };
+        let store = ParamStore::init(&model, 1).unwrap();
+        let snap = store.snapshot().unwrap();
+        for (p, w) in model.params.iter().zip(&snap) {
+            if p.init_std == 0.0 {
+                assert!(w.iter().all(|&x| x == 1.0), "norm leaf '{}' not ones", p.name);
+            } else {
+                let std =
+                    (w.iter().map(|&x| (x as f64).powi(2)).sum::<f64>() / w.len() as f64).sqrt();
+                assert!(
+                    (std - p.init_std).abs() < p.init_std * 0.5,
+                    "leaf '{}' std {std} vs {}",
+                    p.name,
+                    p.init_std
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn snapshot_roundtrip() {
+        let Some(model) = tiny_model() else { return };
+        let store = ParamStore::init(&model, 3).unwrap();
+        let snap = store.snapshot().unwrap();
+        let rebuilt = ParamStore::from_snapshot(&model, &snap).unwrap();
+        assert_eq!(store.l2_distance(&rebuilt).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn load_snapshot_updates_version() {
+        let Some(model) = tiny_model() else { return };
+        let mut store = ParamStore::init(&model, 3).unwrap();
+        let other = ParamStore::init(&model, 9).unwrap();
+        store.load_snapshot(&other.snapshot().unwrap(), 42).unwrap();
+        assert_eq!(store.version(), 42);
+        assert_eq!(store.l2_distance(&other).unwrap(), 0.0);
+    }
+}

@@ -1,0 +1,247 @@
+//! Model weight synchronization between trainer and explorer(s).
+//!
+//! Two implementations mirroring the paper (§2.1.2):
+//! * [`MemorySync`] — the NCCL analog: an in-memory shared store, fast,
+//!   available when explorer and trainer share a process ("same host").
+//! * [`CheckpointSync`] — checkpoint save/load through a directory;
+//!   slower but works across independently launched explorer/trainer
+//!   processes, the mechanism the fully-async modes use.
+//!
+//! Both are versioned: the explorer pulls only when the trainer has
+//! published something newer, and multiple explorers may pull the same
+//! version at different moments (the multi-explorer mode's 24/7-service
+//! property relies on this).
+
+use std::path::PathBuf;
+use std::sync::{Arc, Condvar, Mutex};
+
+use anyhow::{Context, Result};
+
+use super::checkpoint::{load_checkpoint, save_checkpoint};
+
+#[derive(Debug, Clone)]
+pub struct WeightUpdate {
+    pub version: u64,
+    pub step: u64,
+    pub weights: Vec<Vec<f32>>,
+}
+
+pub trait WeightSync: Send + Sync {
+    /// Trainer-side: publish weights as `version` (monotonically increasing).
+    fn publish(&self, version: u64, step: u64, weights: Vec<Vec<f32>>) -> Result<()>;
+    /// Explorer-side: fetch the newest published weights if newer than
+    /// `current_version`.
+    fn fetch_if_newer(&self, current_version: u64) -> Result<Option<WeightUpdate>>;
+    /// Latest published version (0 = nothing published).
+    fn latest_version(&self) -> u64;
+}
+
+// ---------------------------------------------------------------------------
+// in-memory (NCCL analog)
+
+#[derive(Default)]
+struct MemState {
+    latest: Option<WeightUpdate>,
+}
+
+#[derive(Clone, Default)]
+pub struct MemorySync {
+    state: Arc<(Mutex<MemState>, Condvar)>,
+}
+
+impl MemorySync {
+    pub fn new() -> MemorySync {
+        Self::default()
+    }
+
+    /// Block until a version newer than `current_version` is available (or
+    /// timeout); used by tests and the synchronous mode's barrier.
+    pub fn wait_for_newer(
+        &self,
+        current_version: u64,
+        timeout: std::time::Duration,
+    ) -> Option<WeightUpdate> {
+        let (lock, cvar) = &*self.state;
+        let deadline = std::time::Instant::now() + timeout;
+        let mut guard = lock.lock().unwrap();
+        loop {
+            if let Some(u) = &guard.latest {
+                if u.version > current_version {
+                    return Some(u.clone());
+                }
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g, res) = cvar.wait_timeout(guard, deadline - now).unwrap();
+            guard = g;
+            if res.timed_out() {
+                return guard.latest.clone().filter(|u| u.version > current_version);
+            }
+        }
+    }
+}
+
+impl WeightSync for MemorySync {
+    fn publish(&self, version: u64, step: u64, weights: Vec<Vec<f32>>) -> Result<()> {
+        let (lock, cvar) = &*self.state;
+        let mut guard = lock.lock().unwrap();
+        guard.latest = Some(WeightUpdate { version, step, weights });
+        cvar.notify_all();
+        Ok(())
+    }
+
+    fn fetch_if_newer(&self, current_version: u64) -> Result<Option<WeightUpdate>> {
+        let (lock, _) = &*self.state;
+        let guard = lock.lock().unwrap();
+        Ok(guard.latest.clone().filter(|u| u.version > current_version))
+    }
+
+    fn latest_version(&self) -> u64 {
+        let (lock, _) = &*self.state;
+        lock.lock().unwrap().latest.as_ref().map(|u| u.version).unwrap_or(0)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// checkpoint directory (flexible path)
+
+pub struct CheckpointSync {
+    dir: PathBuf,
+    preset: String,
+    leaf_names: Vec<(String, Vec<usize>)>,
+}
+
+impl CheckpointSync {
+    pub fn new(dir: impl Into<PathBuf>, preset: &str, leaf_names: Vec<(String, Vec<usize>)>) -> Result<CheckpointSync> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir).with_context(|| format!("creating sync dir {dir:?}"))?;
+        Ok(CheckpointSync { dir, preset: preset.to_string(), leaf_names })
+    }
+
+    fn latest_path(&self) -> PathBuf {
+        self.dir.join("LATEST")
+    }
+
+    fn ckpt_path(&self, version: u64) -> PathBuf {
+        self.dir.join(format!("weights_v{version}.ckpt"))
+    }
+
+    fn read_latest(&self) -> u64 {
+        std::fs::read_to_string(self.latest_path())
+            .ok()
+            .and_then(|s| s.trim().parse().ok())
+            .unwrap_or(0)
+    }
+
+    /// Remove checkpoints older than the newest `keep` (rotation).
+    pub fn rotate(&self, keep: usize) -> Result<()> {
+        let latest = self.read_latest();
+        if latest as usize <= keep {
+            return Ok(());
+        }
+        for v in 1..=(latest - keep as u64) {
+            let _ = std::fs::remove_file(self.ckpt_path(v));
+        }
+        Ok(())
+    }
+}
+
+impl WeightSync for CheckpointSync {
+    fn publish(&self, version: u64, step: u64, weights: Vec<Vec<f32>>) -> Result<()> {
+        let leaves: Vec<(String, Vec<usize>, &[f32])> = self
+            .leaf_names
+            .iter()
+            .zip(&weights)
+            .map(|((n, s), w)| (n.clone(), s.clone(), w.as_slice()))
+            .collect();
+        save_checkpoint(self.ckpt_path(version), &self.preset, step, version, &leaves)?;
+        // atomic LATEST update
+        let tmp = self.latest_path().with_extension("tmp");
+        std::fs::write(&tmp, format!("{version}"))?;
+        std::fs::rename(&tmp, self.latest_path())?;
+        Ok(())
+    }
+
+    fn fetch_if_newer(&self, current_version: u64) -> Result<Option<WeightUpdate>> {
+        let latest = self.read_latest();
+        if latest <= current_version {
+            return Ok(None);
+        }
+        let ck = load_checkpoint(self.ckpt_path(latest))?;
+        Ok(Some(WeightUpdate {
+            version: ck.weight_version,
+            step: ck.step,
+            weights: ck.weights(),
+        }))
+    }
+
+    fn latest_version(&self) -> u64 {
+        self.read_latest()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn weights(tag: f32) -> Vec<Vec<f32>> {
+        vec![vec![tag; 4], vec![tag * 2.0; 2]]
+    }
+
+    #[test]
+    fn memory_sync_versioning() {
+        let s = MemorySync::new();
+        assert!(s.fetch_if_newer(0).unwrap().is_none());
+        s.publish(1, 10, weights(1.0)).unwrap();
+        let u = s.fetch_if_newer(0).unwrap().unwrap();
+        assert_eq!((u.version, u.step), (1, 10));
+        assert!(s.fetch_if_newer(1).unwrap().is_none());
+        s.publish(2, 20, weights(2.0)).unwrap();
+        assert_eq!(s.fetch_if_newer(1).unwrap().unwrap().weights[0][0], 2.0);
+        assert_eq!(s.latest_version(), 2);
+    }
+
+    #[test]
+    fn memory_sync_wait_wakes_on_publish() {
+        let s = MemorySync::new();
+        let s2 = s.clone();
+        let h = std::thread::spawn(move || s2.wait_for_newer(0, std::time::Duration::from_secs(5)));
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        s.publish(1, 1, weights(3.0)).unwrap();
+        let u = h.join().unwrap().unwrap();
+        assert_eq!(u.version, 1);
+    }
+
+    #[test]
+    fn checkpoint_sync_roundtrip_and_rotation() {
+        let dir = std::env::temp_dir().join(format!("trft_sync_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let names = vec![("a".to_string(), vec![4]), ("b".to_string(), vec![2])];
+        let s = CheckpointSync::new(&dir, "tiny", names).unwrap();
+        assert!(s.fetch_if_newer(0).unwrap().is_none());
+        for v in 1..=4 {
+            s.publish(v, v * 100, weights(v as f32)).unwrap();
+        }
+        let u = s.fetch_if_newer(2).unwrap().unwrap();
+        assert_eq!(u.version, 4);
+        assert_eq!(u.step, 400);
+        assert_eq!(u.weights[1][0], 8.0);
+        s.rotate(1).unwrap();
+        assert!(!dir.join("weights_v1.ckpt").exists());
+        assert!(dir.join("weights_v4.ckpt").exists());
+        // fetch still works after rotation
+        assert!(s.fetch_if_newer(0).unwrap().is_some());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn multiple_consumers_can_pull_same_version() {
+        let s = MemorySync::new();
+        s.publish(5, 50, weights(5.0)).unwrap();
+        // two explorers at different versions both get v5
+        assert_eq!(s.fetch_if_newer(0).unwrap().unwrap().version, 5);
+        assert_eq!(s.fetch_if_newer(3).unwrap().unwrap().version, 5);
+    }
+}

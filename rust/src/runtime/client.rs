@@ -1,0 +1,130 @@
+//! The PJRT client wrapper: one process-wide CPU client, a compile cache
+//! keyed by artifact name, and per-artifact execution statistics that feed
+//! the monitor's "device" accounting.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::artifact::{ArtifactInfo, Manifest};
+
+#[derive(Debug, Default, Clone)]
+pub struct ExecStats {
+    pub executions: u64,
+    pub total_seconds: f64,
+    pub compile_seconds: f64,
+}
+
+pub struct RuntimeClient {
+    client: xla::PjRtClient,
+    executables: Mutex<HashMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    stats: Mutex<HashMap<String, ExecStats>>,
+}
+
+// The PJRT CPU client and its executables are internally synchronized;
+// the raw pointers inside the `xla` wrappers are what block the auto
+// impls.
+unsafe impl Send for RuntimeClient {}
+unsafe impl Sync for RuntimeClient {}
+
+static GLOBAL: OnceLock<Arc<RuntimeClient>> = OnceLock::new();
+
+impl RuntimeClient {
+    pub fn new() -> Result<RuntimeClient> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(RuntimeClient {
+            client,
+            executables: Mutex::new(HashMap::new()),
+            stats: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// Process-wide shared client (PJRT CPU client creation is expensive;
+    /// explorer and trainer share one, each owning its own executables and
+    /// parameters — the isolation the paper needs lives at the engine
+    /// level, not the device level).
+    pub fn global() -> Arc<RuntimeClient> {
+        GLOBAL
+            .get_or_init(|| Arc::new(RuntimeClient::new().expect("PJRT CPU client")))
+            .clone()
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an artifact (cached by name).
+    pub fn load(&self, info: &ArtifactInfo) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.executables.lock().unwrap().get(&info.name) {
+            return Ok(Arc::clone(exe));
+        }
+        let start = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&info.file)
+            .with_context(|| format!("parsing HLO text {:?}", info.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Arc::new(self.client.compile(&comp).with_context(|| format!("compiling {}", info.name))?);
+        let elapsed = start.elapsed().as_secs_f64();
+        crate::log_debug!("runtime", "compiled {} in {:.2}s", info.name, elapsed);
+        self.stats.lock().unwrap().entry(info.name.clone()).or_default().compile_seconds = elapsed;
+        self.executables.lock().unwrap().insert(info.name.clone(), Arc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Pre-compile every artifact of a manifest matching a predicate.
+    pub fn warmup(&self, manifest: &Manifest, pred: impl Fn(&ArtifactInfo) -> bool) -> Result<usize> {
+        let mut n = 0;
+        for info in manifest.artifacts.values() {
+            if pred(info) {
+                self.load(info)?;
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Execute an artifact with literal inputs; returns the decomposed
+    /// output tuple (aot.py lowers with return_tuple=True).
+    pub fn execute(
+        &self,
+        info: &ArtifactInfo,
+        args: &[&xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        anyhow::ensure!(
+            args.len() == info.inputs.len(),
+            "artifact {} expects {} inputs, got {}",
+            info.name,
+            info.inputs.len(),
+            args.len()
+        );
+        let exe = self.load(info)?;
+        let start = Instant::now();
+        let result = exe.execute::<&xla::Literal>(args).with_context(|| format!("executing {}", info.name))?;
+        let tuple = result[0][0].to_literal_sync().context("fetching output tuple")?;
+        let outputs = tuple.to_tuple().context("decomposing output tuple")?;
+        let elapsed = start.elapsed().as_secs_f64();
+        {
+            let mut stats = self.stats.lock().unwrap();
+            let entry = stats.entry(info.name.clone()).or_default();
+            entry.executions += 1;
+            entry.total_seconds += elapsed;
+        }
+        anyhow::ensure!(
+            outputs.len() == info.outputs.len(),
+            "artifact {} returned {} outputs, manifest says {}",
+            info.name,
+            outputs.len(),
+            info.outputs.len()
+        );
+        Ok(outputs)
+    }
+
+    pub fn stats(&self) -> HashMap<String, ExecStats> {
+        self.stats.lock().unwrap().clone()
+    }
+
+    pub fn total_exec_seconds(&self) -> f64 {
+        self.stats.lock().unwrap().values().map(|s| s.total_seconds).sum()
+    }
+}

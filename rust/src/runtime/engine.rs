@@ -1,0 +1,320 @@
+//! `ModelEngine`: the typed execution surface over the AOT artifacts.
+//!
+//! One engine per role (explorer's rollout engine / trainer's policy
+//! engine), each with its own `ParamStore` — the paper's decoupling means
+//! the two never share mutable weight state; they exchange weights only
+//! through the sync service.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::model::params::ParamStore;
+
+use super::artifact::{ArtifactInfo, Manifest, ModelInfo, Role};
+use super::client::RuntimeClient;
+use super::tensor::Tensor;
+
+pub const N_HYPER: usize = 8;
+
+pub struct ModelEngine {
+    client: Arc<RuntimeClient>,
+    pub model: ModelInfo,
+    logprobs: ArtifactInfo,
+    prefill: ArtifactInfo,
+    decode: ArtifactInfo,
+    embed: ArtifactInfo,
+    train: HashMap<String, ArtifactInfo>,
+}
+
+/// KV-cache state for one generation batch; the cache literals are fed
+/// back into every decode step and never leave the runtime.
+pub struct GenerationState {
+    pub batch: usize,
+    pub cache_len: usize,
+    pub logits: Tensor,
+    k_cache: xla::Literal,
+    v_cache: xla::Literal,
+}
+
+unsafe impl Send for GenerationState {}
+
+/// Trainer-side state: params + Adam moments + step counter.
+pub struct TrainState {
+    pub params: ParamStore,
+    m: Vec<xla::Literal>,
+    v: Vec<xla::Literal>,
+    pub step: u64,
+}
+
+unsafe impl Send for TrainState {}
+
+impl TrainState {
+    pub fn new(params: ParamStore) -> Result<TrainState> {
+        let zeros = |model: &ModelInfo| -> Result<Vec<xla::Literal>> {
+            model
+                .params
+                .iter()
+                .map(|p| {
+                    let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+                    xla::Literal::vec1(&vec![0f32; p.element_count()])
+                        .reshape(&dims)
+                        .context("zero literal")
+                })
+                .collect()
+        };
+        let m = zeros(&params.model)?;
+        let v = zeros(&params.model)?;
+        Ok(TrainState { params, m, v, step: 0 })
+    }
+
+    /// Reset optimizer moments (used when swapping in external weights).
+    pub fn reset_optimizer(&mut self) -> Result<()> {
+        let fresh = TrainState::new(ParamStore::from_snapshot(&self.params.model, &self.params.snapshot()?)?)?;
+        self.m = fresh.m;
+        self.v = fresh.v;
+        self.step = 0;
+        Ok(())
+    }
+}
+
+impl ModelEngine {
+    pub fn new(client: Arc<RuntimeClient>, manifest: &Manifest, preset: &str) -> Result<ModelEngine> {
+        let model = manifest.model(preset)?.clone();
+        let mut train = HashMap::new();
+        for a in manifest.artifacts.values() {
+            if a.model == preset && a.kind == "train" {
+                train.insert(a.alg.clone().unwrap_or_default(), a.clone());
+            }
+        }
+        Ok(ModelEngine {
+            client,
+            logprobs: manifest.find(preset, "logprobs", None)?.clone(),
+            prefill: manifest.find(preset, "prefill", None)?.clone(),
+            decode: manifest.find(preset, "decode", None)?.clone(),
+            embed: manifest.find(preset, "embed", None)?.clone(),
+            train,
+            model,
+        })
+    }
+
+    /// Compile all artifacts up front (excluded from step timings).
+    pub fn warmup(&self) -> Result<()> {
+        for info in [&self.logprobs, &self.prefill, &self.decode, &self.embed] {
+            self.client.load(info)?;
+        }
+        for info in self.train.values() {
+            self.client.load(info)?;
+        }
+        Ok(())
+    }
+
+    pub fn client(&self) -> &Arc<RuntimeClient> {
+        &self.client
+    }
+
+    // -- shape buckets -------------------------------------------------------
+
+    /// (batch, seq) of the logprobs/train bucket.
+    pub fn seq_shape(&self) -> (usize, usize) {
+        (self.logprobs.batch, self.logprobs.seq)
+    }
+
+    /// (batch, prompt_len, cache_len) of the generation bucket.
+    pub fn gen_shape(&self) -> (usize, usize, usize) {
+        (self.prefill.batch, self.prefill.seq, self.prefill.cache_len)
+    }
+
+    pub fn train_shape(&self, alg: &str) -> Result<(usize, usize, usize)> {
+        let a = self.train_artifact(alg)?;
+        Ok((a.batch, a.seq, a.group_size))
+    }
+
+    pub fn has_algorithm(&self, alg: &str) -> bool {
+        self.train.contains_key(alg)
+    }
+
+    pub fn algorithms(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.train.keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    fn train_artifact(&self, alg: &str) -> Result<&ArtifactInfo> {
+        self.train
+            .get(alg)
+            .with_context(|| format!("no train artifact for algorithm '{alg}' (model {})", self.model.name))
+    }
+
+    // -- execution ----------------------------------------------------------
+
+    fn check_data(&self, info: &ArtifactInfo, data: &[&Tensor]) -> Result<()> {
+        let descs = info.data_input_descs();
+        ensure!(
+            descs.len() == data.len(),
+            "artifact {} wants {} data inputs, got {}",
+            info.name,
+            descs.len(),
+            data.len()
+        );
+        for (d, t) in descs.iter().zip(data) {
+            ensure!(
+                d.shape == t.shape() && d.dtype == t.dtype(),
+                "artifact {} input '{}' expects {:?} {:?}, got {:?} {:?}",
+                info.name,
+                d.name,
+                d.dtype,
+                d.shape,
+                t.dtype(),
+                t.shape()
+            );
+        }
+        Ok(())
+    }
+
+    fn run_with_params(
+        &self,
+        info: &ArtifactInfo,
+        params: &ParamStore,
+        data: &[&Tensor],
+    ) -> Result<Vec<xla::Literal>> {
+        self.check_data(info, data)?;
+        let data_lits: Vec<xla::Literal> = data.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(info.inputs.len());
+        args.extend(params.literals().iter());
+        args.extend(data_lits.iter());
+        self.client.execute(info, &args)
+    }
+
+    /// Per-token log-probs + entropy for a [B, T] token batch.
+    pub fn token_logprobs(&self, params: &ParamStore, tokens: &Tensor) -> Result<(Tensor, Tensor)> {
+        let out = self.run_with_params(&self.logprobs, params, &[tokens])?;
+        Ok((Tensor::from_literal(&out[0])?, Tensor::from_literal(&out[1])?))
+    }
+
+    /// Pooled embedding for a [B, T] token batch with a [B, T] f32 mask.
+    pub fn embed(&self, params: &ParamStore, tokens: &Tensor, mask: &Tensor) -> Result<Tensor> {
+        let out = self.run_with_params(&self.embed, params, &[tokens, mask])?;
+        Tensor::from_literal(&out[0])
+    }
+
+    /// Prompt prefill: returns last-position logits + populated KV cache.
+    pub fn prefill(&self, params: &ParamStore, tokens: &Tensor, lens: &Tensor) -> Result<GenerationState> {
+        let mut out = self.run_with_params(&self.prefill, params, &[tokens, lens])?;
+        ensure!(out.len() == 3, "prefill returns 3 outputs");
+        let v_cache = out.pop().unwrap();
+        let k_cache = out.pop().unwrap();
+        let logits = Tensor::from_literal(&out[0])?;
+        Ok(GenerationState {
+            batch: self.prefill.batch,
+            cache_len: self.prefill.cache_len,
+            logits,
+            k_cache,
+            v_cache,
+        })
+    }
+
+    /// One decode step at per-sequence positions; updates the cache state
+    /// in place and returns next-token logits [B, V].
+    pub fn decode(
+        &self,
+        params: &ParamStore,
+        state: &mut GenerationState,
+        tokens: &Tensor,
+        pos: &Tensor,
+    ) -> Result<Tensor> {
+        ensure!(tokens.shape() == [state.batch], "decode tokens must be [batch]");
+        ensure!(pos.shape() == [state.batch], "decode pos must be [batch]");
+        let tok_lit = tokens.to_literal()?;
+        let pos_lit = pos.to_literal()?;
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(self.decode.inputs.len());
+        args.extend(params.literals().iter());
+        args.push(&state.k_cache);
+        args.push(&state.v_cache);
+        args.push(&tok_lit);
+        args.push(&pos_lit);
+        let mut out = self.client.execute(&self.decode, &args)?;
+        ensure!(out.len() == 3, "decode returns 3 outputs");
+        state.v_cache = out.pop().unwrap();
+        state.k_cache = out.pop().unwrap();
+        let logits = Tensor::from_literal(&out[0])?;
+        state.logits = logits.clone();
+        Ok(logits)
+    }
+
+    /// One fused train step (loss -> grads -> Adam).  Updates `state` in
+    /// place and returns named metrics.
+    pub fn train_step(
+        &self,
+        alg: &str,
+        state: &mut TrainState,
+        hyper: &[f32],
+        data: &[&Tensor],
+    ) -> Result<Vec<(String, f32)>> {
+        ensure!(hyper.len() == N_HYPER, "hyper vector must have {N_HYPER} slots");
+        let info = self.train_artifact(alg)?.clone();
+        self.check_data(&info, data)?;
+
+        state.step += 1;
+        let step_lit = Tensor::scalar_f32(state.step as f32).to_literal()?;
+        let hyper_lit = Tensor::from_f32(vec![N_HYPER], hyper.to_vec()).to_literal()?;
+        let data_lits: Vec<xla::Literal> = data.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+
+        let n = state.params.leaf_count();
+        let mut args: Vec<&xla::Literal> = Vec::with_capacity(info.inputs.len());
+        args.extend(state.params.literals().iter());
+        args.extend(state.m.iter());
+        args.extend(state.v.iter());
+        args.push(&step_lit);
+        args.push(&hyper_lit);
+        args.extend(data_lits.iter());
+
+        let mut out = self.client.execute(&info, &args)?;
+        ensure!(out.len() == 3 * n + 1, "train step output arity");
+        let metrics_lit = out.pop().unwrap();
+        let v: Vec<xla::Literal> = out.split_off(2 * n);
+        let m: Vec<xla::Literal> = out.split_off(n);
+        state.params.replace(out)?;
+        state.m = m;
+        state.v = v;
+
+        let metrics = metrics_lit.to_vec::<f32>()?;
+        let names = &info.metrics;
+        ensure!(metrics.len() == names.len(), "metric arity mismatch");
+        Ok(names.iter().cloned().zip(metrics).collect())
+    }
+
+    /// Metric names for an algorithm (manifest order).
+    pub fn metric_names(&self, alg: &str) -> Result<Vec<String>> {
+        Ok(self.train_artifact(alg)?.metrics.clone())
+    }
+
+    /// Group size baked into an OPMD-family train artifact.
+    pub fn group_size(&self, alg: &str) -> Result<usize> {
+        Ok(self.train_artifact(alg)?.group_size)
+    }
+
+    /// Which data tensors (by name, in order) an algorithm's step expects.
+    pub fn data_input_names(&self, alg: &str) -> Result<Vec<String>> {
+        Ok(self.train_artifact(alg)?.data_inputs.clone())
+    }
+
+    /// Validate that every artifact's param inputs match the model table —
+    /// run at startup so a stale artifact set fails fast.
+    pub fn validate_manifest(&self) -> Result<()> {
+        for info in [&self.logprobs, &self.prefill, &self.decode, &self.embed]
+            .into_iter()
+            .chain(self.train.values())
+        {
+            let params: Vec<_> = info.inputs.iter().filter(|d| d.role == Role::Param).collect();
+            ensure!(params.len() == self.model.params.len(), "{}: param arity", info.name);
+            for (d, p) in params.iter().zip(&self.model.params) {
+                if d.shape != p.shape {
+                    bail!("{}: param '{}' shape {:?} vs model '{}' {:?}", info.name, d.name, d.shape, p.name, p.shape);
+                }
+            }
+        }
+        Ok(())
+    }
+}

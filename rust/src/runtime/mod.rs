@@ -1,0 +1,17 @@
+//! PJRT runtime: load AOT artifacts (`artifacts/*.hlo.txt`) and execute
+//! them from the L3 hot path via the `xla` crate's PJRT CPU client.
+//!
+//! Flow (see /opt/xla-example/load_hlo): `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute`.
+//! The manifest (artifacts/manifest.json) is the contract with L2: it
+//! names every input/output leaf, its shape/dtype, and its role.
+
+pub mod artifact;
+pub mod client;
+pub mod engine;
+pub mod tensor;
+
+pub use artifact::{ArtifactInfo, IoDesc, Manifest, ModelInfo, Role};
+pub use client::RuntimeClient;
+pub use engine::{GenerationState, ModelEngine, TrainState};
+pub use tensor::{DType, Tensor};

@@ -1,0 +1,210 @@
+//! Deterministic hybrid word/char tokenizer.
+//!
+//! The whole corpus is synthetic (envs generate task text in Rust), so the
+//! vocabulary is fixed at build time: special tokens, digits, a curated
+//! word list covering the math / grid-world domains, then printable ASCII
+//! as character fallback.  Encoding is greedy word-level with char
+//! fallback; decoding is exact for single-spaced text (round-trip tested).
+//!
+//! Python never sees text — the model config only fixes `vocab_size`, and
+//! this tokenizer guarantees every id < 256, fitting every preset.
+
+use std::collections::HashMap;
+
+pub const PAD: i32 = 0;
+pub const BOS: i32 = 1;
+pub const EOS: i32 = 2;
+pub const SEP: i32 = 3;
+pub const UNK: i32 = 4;
+
+/// Words the synthetic envs emit; keeping them single tokens keeps
+/// sequences short enough for the tiny/small shape buckets.
+const WORDS: &[&str] = &[
+    // math domain
+    "what", "is", "compute", "calculate", "answer", "question", "equals", "sum", "of",
+    "plus", "minus", "times", "divided", "by", "and", "then", "result", "the", "a",
+    "has", "gets", "loses", "buys", "gives", "apples", "coins", "books", "total",
+    "how", "many", "left", "now", "more", "away", "starts", "with",
+    // grid-world domain
+    "go", "take", "put", "open", "look", "in", "on", "room", "kitchen", "hall",
+    "office", "garden", "box", "chest", "drawer", "shelf", "table", "apple", "key",
+    "ball", "lamp", "book", "cup", "you", "are", "see", "closed", "empty", "holding",
+    "nothing", "done", "goal", "task", "move", "to", "from", "it", "at", "there",
+    // dialogue scaffolding
+    "user", "assistant", "system", "turn", "ok", "yes", "no", "think", "step",
+];
+
+pub struct Tokenizer {
+    vocab: Vec<String>,
+    word_ids: HashMap<String, i32>,
+    char_ids: HashMap<char, i32>,
+    space_id: i32,
+}
+
+impl Default for Tokenizer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tokenizer {
+    pub fn new() -> Tokenizer {
+        let mut vocab: Vec<String> =
+            vec!["<pad>".into(), "<bos>".into(), "<eos>".into(), "<sep>".into(), "<unk>".into()];
+        let mut word_ids = HashMap::new();
+        let mut char_ids = HashMap::new();
+
+        // explicit space token
+        let space_id = vocab.len() as i32;
+        vocab.push(" ".into());
+
+        for w in WORDS {
+            word_ids.insert(w.to_string(), vocab.len() as i32);
+            vocab.push(w.to_string());
+        }
+        // printable ASCII chars as fallback units (also covers digits,
+        // operators, punctuation)
+        for c in 33u8..127 {
+            let ch = c as char;
+            char_ids.insert(ch, vocab.len() as i32);
+            vocab.push(ch.to_string());
+        }
+        assert!(vocab.len() <= 256, "tokenizer must fit every model preset");
+        Tokenizer { vocab, word_ids, char_ids, space_id }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab.len()
+    }
+
+    /// Greedy word-level encoding with char fallback; words separated by
+    /// the explicit space token.
+    pub fn encode(&self, text: &str) -> Vec<i32> {
+        let mut out = Vec::with_capacity(text.len());
+        for (i, word) in text.split(' ').enumerate() {
+            if i > 0 {
+                out.push(self.space_id);
+            }
+            if word.is_empty() {
+                continue;
+            }
+            if let Some(&id) = self.word_ids.get(word) {
+                out.push(id);
+            } else {
+                for c in word.chars() {
+                    out.push(*self.char_ids.get(&c).unwrap_or(&UNK));
+                }
+            }
+        }
+        out
+    }
+
+    /// Encode with BOS prefix and SEP suffix (the prompt convention all
+    /// workflows use).
+    pub fn encode_prompt(&self, text: &str) -> Vec<i32> {
+        let mut out = vec![BOS];
+        out.extend(self.encode(text));
+        out.push(SEP);
+        out
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        let mut out = String::new();
+        for &t in tokens {
+            match t {
+                PAD | BOS | EOS => {}
+                SEP => out.push_str(" | "),
+                UNK => out.push('\u{fffd}'),
+                t if (t as usize) < self.vocab.len() => out.push_str(&self.vocab[t as usize]),
+                _ => out.push('\u{fffd}'),
+            }
+        }
+        out
+    }
+
+    /// Decode only the response part (after prompt_len), stopping at EOS.
+    pub fn decode_response(&self, tokens: &[i32], prompt_len: usize) -> String {
+        let resp: Vec<i32> =
+            tokens[prompt_len.min(tokens.len())..].iter().copied().take_while(|&t| t != EOS).collect();
+        self.decode(&resp)
+    }
+
+    pub fn eos(&self) -> i32 {
+        EOS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_math_text() {
+        let tok = Tokenizer::new();
+        for text in [
+            "what is 3 + 4 * 2 ?",
+            "compute 12 - 5",
+            "tom has 3 apples and buys 4 more",
+            "answer: 42",
+        ] {
+            let ids = tok.encode(text);
+            assert_eq!(tok.decode(&ids), text, "roundtrip failed for {text:?}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_gridworld_text() {
+        let tok = Tokenizer::new();
+        for text in ["go kitchen", "take apple", "put apple in box", "you are in hall . see key"] {
+            let ids = tok.encode(text);
+            assert_eq!(tok.decode(&ids), text);
+        }
+    }
+
+    #[test]
+    fn known_words_are_single_tokens() {
+        let tok = Tokenizer::new();
+        assert_eq!(tok.encode("go").len(), 1);
+        assert_eq!(tok.encode("kitchen").len(), 1);
+        // unknown word falls back to chars
+        assert_eq!(tok.encode("zxq").len(), 3);
+    }
+
+    #[test]
+    fn digits_are_char_level() {
+        let tok = Tokenizer::new();
+        assert_eq!(tok.encode("42").len(), 2);
+        assert_eq!(tok.encode("7").len(), 1);
+    }
+
+    #[test]
+    fn prompt_framing() {
+        let tok = Tokenizer::new();
+        let ids = tok.encode_prompt("what is 1 + 1");
+        assert_eq!(ids[0], BOS);
+        assert_eq!(*ids.last().unwrap(), SEP);
+    }
+
+    #[test]
+    fn decode_response_stops_at_eos() {
+        let tok = Tokenizer::new();
+        let mut ids = tok.encode_prompt("q");
+        let plen = ids.len();
+        ids.extend(tok.encode("42"));
+        ids.push(EOS);
+        ids.extend(tok.encode("junk"));
+        assert_eq!(tok.decode_response(&ids, plen), "42");
+    }
+
+    #[test]
+    fn vocab_fits_smallest_preset() {
+        assert!(Tokenizer::new().vocab_size() <= 256);
+    }
+
+    #[test]
+    fn all_ids_in_range() {
+        let tok = Tokenizer::new();
+        let ids = tok.encode("the quick brown fox 123 !?");
+        assert!(ids.iter().all(|&i| (0..tok.vocab_size() as i32).contains(&i)));
+    }
+}

@@ -1,0 +1,322 @@
+//! Algorithm registry: batch builders that turn sampled experiences into
+//! the exact data tensors each train-step artifact expects (paper §3.2's
+//! AlgorithmType, with GRPO/PPO/SFT/DPO/MIX and the Appendix-A OPMD
+//! family).
+
+use anyhow::{bail, ensure, Result};
+
+use crate::buffer::{Experience, ExperienceBatch, Source};
+use crate::runtime::Tensor;
+
+/// The 8 hyper slots of every train artifact (manifest `hyper_slots`).
+#[derive(Debug, Clone)]
+pub struct HyperParams {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub adam_eps: f32,
+    pub clip_eps: f32,
+    /// tau for OPMD, beta for DPO.
+    pub tau_or_beta: f32,
+    pub mu: f32,
+    pub kl_coef: f32,
+}
+
+impl Default for HyperParams {
+    fn default() -> Self {
+        HyperParams {
+            lr: 1e-4,
+            beta1: 0.9,
+            beta2: 0.999,
+            adam_eps: 1e-8,
+            clip_eps: 0.2,
+            tau_or_beta: 1.0,
+            mu: 0.1,
+            kl_coef: 0.0,
+        }
+    }
+}
+
+impl HyperParams {
+    pub fn to_vec(&self) -> Vec<f32> {
+        vec![
+            self.lr,
+            self.beta1,
+            self.beta2,
+            self.adam_eps,
+            self.clip_eps,
+            self.tau_or_beta,
+            self.mu,
+            self.kl_coef,
+        ]
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct AlgorithmConfig {
+    pub name: String,
+    pub hyper: HyperParams,
+    /// Std-normalize group advantages (GRPO flavor).
+    pub adv_std_normalize: bool,
+}
+
+impl AlgorithmConfig {
+    pub fn new(name: &str) -> AlgorithmConfig {
+        AlgorithmConfig { name: name.to_string(), hyper: HyperParams::default(), adv_std_normalize: false }
+    }
+
+    /// Which buffer data tensors this algorithm needs, mirroring
+    /// `aot.py::_train_data_spec`.
+    pub fn is_group_based(&self) -> bool {
+        self.name.starts_with("opmd")
+    }
+}
+
+/// Pack tokens / per-token arrays into fixed [b, t] tensors, truncating
+/// long sequences and padding short ones.  Index 0's mask is forced to 0
+/// (the logprob convention: lp[:, 0] is undefined).
+fn pack(exps: &[Experience], b: usize, t: usize) -> (Tensor, Tensor, Tensor) {
+    let mut tokens = vec![0i32; b * t];
+    let mut mask = vec![0f32; b * t];
+    let mut old_lp = vec![0f32; b * t];
+    for (i, e) in exps.iter().enumerate().take(b) {
+        let n = e.tokens.len().min(t);
+        for j in 0..n {
+            tokens[i * t + j] = e.tokens[j];
+            mask[i * t + j] = e.loss_mask[j];
+            old_lp[i * t + j] = e.logprobs[j];
+        }
+        mask[i * t] = 0.0;
+    }
+    (
+        Tensor::from_i32(vec![b, t], tokens),
+        Tensor::from_f32(vec![b, t], mask),
+        Tensor::from_f32(vec![b, t], old_lp),
+    )
+}
+
+/// Sort experiences so same-group rollouts are contiguous and complete
+/// groups of size `k` (required by the OPMD artifacts' group reshape).
+fn order_groups(exps: &mut Vec<Experience>, k: usize) -> Result<()> {
+    ensure!(k >= 1, "group size must be >= 1");
+    exps.sort_by_key(|e| e.group);
+    ensure!(exps.len() % k == 0, "batch of {} not divisible by group size {k}", exps.len());
+    for chunk in exps.chunks(k) {
+        let g = chunk[0].group;
+        ensure!(
+            chunk.iter().all(|e| e.group == g),
+            "incomplete group {g}: OPMD batches need {k} rollouts per task"
+        );
+    }
+    Ok(())
+}
+
+/// Build the data tensor list for `alg` from a sampled batch.
+/// `(b, t, k)` is the train artifact's shape bucket.
+pub fn build_batch(
+    cfg: &AlgorithmConfig,
+    mut exps: Vec<Experience>,
+    b: usize,
+    t: usize,
+    k: usize,
+) -> Result<Vec<Tensor>> {
+    // DPO artifacts are shaped [pairs, T]; a batch of `b` pairs consumes
+    // 2*b experiences (chosen + rejected).
+    let expected = if cfg.name == "dpo" { 2 * b } else { b };
+    ensure!(
+        exps.len() == expected,
+        "algorithm '{}' needs exactly {expected} experiences, got {}",
+        cfg.name,
+        exps.len()
+    );
+    match cfg.name.as_str() {
+        "grpo" | "ppo" => {
+            let batch = ExperienceBatch { experiences: exps };
+            let adv = batch.group_advantages(cfg.adv_std_normalize);
+            let (tokens, mask, old_lp) = pack(&batch.experiences, b, t);
+            Ok(vec![tokens, mask, Tensor::from_f32(vec![b], adv), old_lp])
+        }
+        "sft" => {
+            let (tokens, mask, _) = pack(&exps, b, t);
+            Ok(vec![tokens, mask])
+        }
+        "mix" => {
+            let batch = ExperienceBatch { experiences: exps };
+            let adv = batch.group_advantages(cfg.adv_std_normalize);
+            let (tokens, mask, old_lp) = pack(&batch.experiences, b, t);
+            let is_expert: Vec<f32> = batch
+                .experiences
+                .iter()
+                .map(|e| if matches!(e.source, Source::Expert | Source::Synthetic | Source::Human) { 1.0 } else { 0.0 })
+                .collect();
+            Ok(vec![
+                tokens,
+                mask,
+                Tensor::from_f32(vec![b], adv),
+                old_lp,
+                Tensor::from_f32(vec![b], is_expert),
+            ])
+        }
+        "opmd_kimi" | "opmd_pairwise" | "opmd_simple" => {
+            order_groups(&mut exps, k)?;
+            let rewards: Vec<f32> = exps.iter().map(|e| e.reward).collect();
+            let (tokens, mask, old_lp) = pack(&exps, b, t);
+            Ok(vec![tokens, mask, Tensor::from_f32(vec![b], rewards), old_lp])
+        }
+        "dpo" => {
+            // experiences carry metadata role=chosen/rejected + pair ids
+            let mut chosen: Vec<&Experience> = vec![];
+            let mut rejected: Vec<&Experience> = vec![];
+            for e in &exps {
+                match e.metadata.get("role").and_then(crate::util::json::Value::as_str) {
+                    Some("chosen") => chosen.push(e),
+                    Some("rejected") => rejected.push(e),
+                    _ => bail!("dpo experiences need metadata.role chosen/rejected"),
+                }
+            }
+            ensure!(
+                chosen.len() == rejected.len() && chosen.len() == b,
+                "dpo batch must be {b}/{b} chosen/rejected"
+            );
+            // align pairs by pair id
+            let pair_of = |e: &Experience| e.meta_f64("pair").unwrap_or(0.0) as u64;
+            chosen.sort_by_key(|e| pair_of(e));
+            rejected.sort_by_key(|e| pair_of(e));
+            for (c, r) in chosen.iter().zip(&rejected) {
+                ensure!(pair_of(c) == pair_of(r), "unmatched dpo pair ids");
+            }
+            let cvec: Vec<Experience> = chosen.into_iter().cloned().collect();
+            let rvec: Vec<Experience> = rejected.into_iter().cloned().collect();
+            let (tok_c, mask_c, _) = pack(&cvec, b, t);
+            let (tok_r, mask_r, _) = pack(&rvec, b, t);
+            let ref_c: Vec<f32> = cvec.iter().map(Experience::rollout_seq_logprob).collect();
+            let ref_r: Vec<f32> = rvec.iter().map(Experience::rollout_seq_logprob).collect();
+            Ok(vec![
+                tok_c,
+                mask_c,
+                tok_r,
+                mask_r,
+                Tensor::from_f32(vec![b], ref_c),
+                Tensor::from_f32(vec![b], ref_r),
+            ])
+        }
+        other => bail!("unknown algorithm '{other}'"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Value;
+
+    fn exp(group: u64, reward: f32, tokens: Vec<i32>, plen: usize) -> Experience {
+        let mut e = Experience::new(&format!("g{group}"), tokens, plen, reward);
+        e.group = group;
+        e.logprobs.iter_mut().skip(plen).for_each(|l| *l = -1.0);
+        e
+    }
+
+    #[test]
+    fn grpo_batch_shapes_and_advantages() {
+        let cfg = AlgorithmConfig::new("grpo");
+        let exps = vec![
+            exp(1, 1.0, vec![1, 10, 11, 2], 2),
+            exp(1, 0.0, vec![1, 10, 12, 2], 2),
+            exp(2, 0.5, vec![1, 20, 2], 1),
+            exp(2, 0.5, vec![1, 21, 2], 1),
+        ];
+        let out = build_batch(&cfg, exps, 4, 8, 1).unwrap();
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].shape(), &[4, 8]);
+        let adv = out[2].f32_data().unwrap();
+        assert!((adv[0] - 0.5).abs() < 1e-6);
+        assert!((adv[1] + 0.5).abs() < 1e-6);
+        assert_eq!(adv[2], 0.0);
+        // padding masked out
+        let mask = out[1].f32_data().unwrap();
+        assert_eq!(mask[0], 0.0); // index 0 forced off
+        assert_eq!(mask[6], 0.0); // beyond sequence
+    }
+
+    #[test]
+    fn truncation_respects_bucket() {
+        let cfg = AlgorithmConfig::new("sft");
+        let long = exp(1, 1.0, (0..50).collect(), 3);
+        let out = build_batch(&cfg, vec![long], 1, 8, 1).unwrap();
+        assert_eq!(out[0].shape(), &[1, 8]);
+        assert_eq!(out[0].i32_data().unwrap()[7], 7);
+    }
+
+    #[test]
+    fn opmd_requires_complete_groups() {
+        let cfg = AlgorithmConfig::new("opmd_simple");
+        // groups of 2, interleaved order — must be sorted contiguous
+        let exps = vec![
+            exp(5, 1.0, vec![1, 2, 3], 1),
+            exp(9, 0.3, vec![1, 2, 3], 1),
+            exp(5, 0.0, vec![1, 2, 3], 1),
+            exp(9, 0.6, vec![1, 2, 3], 1),
+        ];
+        let out = build_batch(&cfg, exps, 4, 4, 2).unwrap();
+        let rewards = out[2].f32_data().unwrap();
+        // sorted by group: [5, 5, 9, 9]
+        assert_eq!(rewards, &[1.0, 0.0, 0.3, 0.6]);
+        // incomplete group errors
+        let bad = vec![
+            exp(1, 1.0, vec![1, 2], 1),
+            exp(1, 0.0, vec![1, 2], 1),
+            exp(2, 0.5, vec![1, 2], 1),
+            exp(3, 0.5, vec![1, 2], 1),
+        ];
+        assert!(build_batch(&cfg, bad, 4, 4, 2).is_err());
+    }
+
+    #[test]
+    fn mix_batch_flags_non_explorer_sources() {
+        let cfg = AlgorithmConfig::new("mix");
+        let mut e1 = exp(1, 1.0, vec![1, 2, 3], 1);
+        let mut e2 = exp(1, 0.0, vec![1, 2, 3], 1);
+        e1.source = Source::Expert;
+        e2.source = Source::Explorer;
+        let mut e3 = exp(2, 0.0, vec![1, 2, 3], 1);
+        e3.source = Source::Synthetic;
+        let e4 = exp(2, 1.0, vec![1, 2, 3], 1);
+        let out = build_batch(&cfg, vec![e1, e2, e3, e4], 4, 4, 1).unwrap();
+        assert_eq!(out[4].f32_data().unwrap(), &[1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn dpo_batch_pairs_by_id() {
+        let cfg = AlgorithmConfig::new("dpo");
+        let mk = |pair: u64, role: &str, reward: f32| {
+            let mut e = exp(pair, reward, vec![1, 5, 6, 2], 1);
+            e.set_meta("pair", Value::num(pair as f64));
+            e.set_meta("role", Value::str(role));
+            e
+        };
+        let exps =
+            vec![mk(2, "rejected", 0.0), mk(1, "chosen", 1.0), mk(2, "chosen", 1.0), mk(1, "rejected", 0.0)];
+        let out = build_batch(&cfg, exps, 2, 8, 1).unwrap();
+        assert_eq!(out.len(), 6);
+        assert_eq!(out[0].shape(), &[2, 8]);
+        assert_eq!(out[4].shape(), &[2]);
+        // ref logprobs are masked rollout sums: 3 response tokens * -1.0
+        for v in out[4].f32_data().unwrap() {
+            assert!((*v + 3.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn wrong_batch_size_errors() {
+        let cfg = AlgorithmConfig::new("grpo");
+        assert!(build_batch(&cfg, vec![exp(1, 0.0, vec![1, 2], 1)], 4, 8, 1).is_err());
+    }
+
+    #[test]
+    fn hyper_vec_layout_matches_manifest() {
+        let h = HyperParams { lr: 0.5, ..Default::default() };
+        let v = h.to_vec();
+        assert_eq!(v.len(), 8);
+        assert_eq!(v[0], 0.5); // lr first (manifest hyper_slots[0])
+    }
+}

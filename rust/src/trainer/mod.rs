@@ -1,0 +1,8 @@
+//! The trainer — learning side of the trinity: sample strategies feed
+//! batch builders, batch builders feed the fused train-step artifacts.
+
+pub mod algorithms;
+pub mod trainer;
+
+pub use algorithms::{build_batch, AlgorithmConfig, HyperParams};
+pub use trainer::{StepMetrics, Trainer, TrainerConfig};

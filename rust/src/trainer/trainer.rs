@@ -1,0 +1,163 @@
+//! The Trainer actor: sample -> build -> fused train step -> metrics,
+//! plus weight publication through the sync service.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::buffer::{ExperienceBatch, SampleStrategy};
+use crate::model::{ParamStore, WeightSync};
+use crate::runtime::{ModelEngine, TrainState};
+
+use super::algorithms::{build_batch, AlgorithmConfig};
+
+#[derive(Debug, Clone)]
+pub struct TrainerConfig {
+    pub algorithm: AlgorithmConfig,
+    /// Checkpoint/publish version counter starts here.
+    pub initial_version: u64,
+}
+
+impl TrainerConfig {
+    pub fn new(alg: &str) -> TrainerConfig {
+        TrainerConfig { algorithm: AlgorithmConfig::new(alg), initial_version: 0 }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct StepMetrics {
+    pub step: u64,
+    pub named: Vec<(String, f32)>,
+    pub mean_reward: f64,
+    pub mean_response_len: f64,
+    /// Seconds spent waiting for the batch (pipeline bubble indicator).
+    pub sample_wait_s: f64,
+    /// Seconds in the fused PJRT train step.
+    pub compute_s: f64,
+}
+
+impl StepMetrics {
+    pub fn get(&self, name: &str) -> Option<f32> {
+        self.named.iter().find(|(n, _)| n == name).map(|(_, v)| *v)
+    }
+}
+
+pub struct Trainer {
+    engine: Arc<ModelEngine>,
+    state: TrainState,
+    strategy: Box<dyn SampleStrategy>,
+    pub config: TrainerConfig,
+    version: u64,
+    history: Vec<StepMetrics>,
+}
+
+impl Trainer {
+    pub fn new(
+        engine: Arc<ModelEngine>,
+        params: ParamStore,
+        strategy: Box<dyn SampleStrategy>,
+        config: TrainerConfig,
+    ) -> Result<Trainer> {
+        let state = TrainState::new(params)?;
+        Ok(Trainer { engine, state, strategy, version: config.initial_version, config, history: vec![] })
+    }
+
+    pub fn step(&self) -> u64 {
+        self.state.step
+    }
+
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    pub fn params(&self) -> &ParamStore {
+        &self.state.params
+    }
+
+    pub fn history(&self) -> &[StepMetrics] {
+        &self.history
+    }
+
+    /// One full training step: sample a batch from the buffer (blocking on
+    /// the strategy's policy), build tensors, execute the fused artifact.
+    pub fn train_step(&mut self) -> Result<StepMetrics> {
+        let alg = &self.config.algorithm;
+        let (b, t, k) = self.engine.train_shape(&alg.name)?;
+
+        let t0 = Instant::now();
+        // DPO consumes chosen+rejected pairs: 2x the artifact batch
+        let sample_n = if alg.name == "dpo" { 2 * b } else { b };
+        let exps = self
+            .strategy
+            .sample(self.state.step + 1, sample_n)
+            .with_context(|| format!("sampling batch for step {}", self.state.step + 1))?;
+        let sample_wait_s = t0.elapsed().as_secs_f64();
+
+        let batch_stats = ExperienceBatch { experiences: exps.clone() };
+        let mean_reward = batch_stats.mean_reward();
+        let mean_response_len = batch_stats.mean_response_len();
+
+        let data = build_batch(alg, exps, b, t, k)?;
+        let data_refs: Vec<&crate::runtime::Tensor> = data.iter().collect();
+
+        let t1 = Instant::now();
+        let hyper = alg.hyper.to_vec();
+        let alg_name = alg.name.clone();
+        let named = self.engine.train_step(&alg_name, &mut self.state, &hyper, &data_refs)?;
+        // trainer "device utilization" = compute_s / wall (accounted by the
+        // coordinator's monitor per synchronization window)
+        let compute_s = t1.elapsed().as_secs_f64();
+
+        let metrics = StepMetrics {
+            step: self.state.step,
+            named,
+            mean_reward,
+            mean_response_len,
+            sample_wait_s,
+            compute_s,
+        };
+        self.history.push(metrics.clone());
+        Ok(metrics)
+    }
+
+    /// Publish current weights as the next version.
+    pub fn publish_weights(&mut self, sync: &dyn WeightSync) -> Result<u64> {
+        self.version += 1;
+        let snap = self.state.params.snapshot()?;
+        sync.publish(self.version, self.state.step, snap)?;
+        Ok(self.version)
+    }
+
+    /// Save a checkpoint of the current state.
+    pub fn save_checkpoint(&self, path: impl AsRef<std::path::Path>) -> Result<()> {
+        let snap = self.state.params.snapshot()?;
+        let leaves: Vec<(String, Vec<usize>, &[f32])> = self
+            .state
+            .params
+            .model
+            .params
+            .iter()
+            .zip(&snap)
+            .map(|(p, w)| (p.name.clone(), p.shape.clone(), w.as_slice()))
+            .collect();
+        crate::model::save_checkpoint(
+            path,
+            &self.state.params.model.name,
+            self.state.step,
+            self.version,
+            &leaves,
+        )
+    }
+
+    /// Load weights (e.g. a published checkpoint) into the trainer,
+    /// keeping or resetting the optimizer state.
+    pub fn load_weights(&mut self, weights: &[Vec<f32>], version: u64, reset_optimizer: bool) -> Result<()> {
+        self.state.params.load_snapshot(weights, version)?;
+        self.version = version;
+        if reset_optimizer {
+            self.state.reset_optimizer()?;
+        }
+        Ok(())
+    }
+}

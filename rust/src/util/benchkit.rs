@@ -1,0 +1,138 @@
+//! Shared harness for the paper-reproduction benches (criterion is not in
+//! the offline registry): env-tunable scale knobs, aligned table printing,
+//! and JSON result dumps under `bench_out/`.
+
+use std::path::PathBuf;
+
+use super::json::Value;
+
+/// Scale knob: benches honor `TRINITY_BENCH_SCALE` (0.1 = smoke, 1.0 =
+/// default, larger = closer to the paper's step counts).
+pub fn scale() -> f64 {
+    std::env::var("TRINITY_BENCH_SCALE").ok().and_then(|s| s.parse().ok()).unwrap_or(1.0)
+}
+
+pub fn scaled(base: usize) -> usize {
+    ((base as f64 * scale()).round() as usize).max(1)
+}
+
+pub fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Aligned table printer (paper-style rows).
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(String::len).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate().take(ncols) {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let fmt_row = |cells: &[String]| {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate().take(ncols) {
+                if i == 0 {
+                    line.push_str(&format!("{:<width$}", c, width = widths[i] + 2));
+                } else {
+                    line.push_str(&format!("{:>width$}", c, width = widths[i] + 2));
+                }
+            }
+            line
+        };
+        println!("{}", fmt_row(&self.headers));
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * ncols));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+    }
+
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("title", Value::str(self.title.clone())),
+            ("headers", Value::arr(self.headers.iter().map(|h| Value::str(h.clone())).collect())),
+            (
+                "rows",
+                Value::arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Value::arr(r.iter().map(|c| Value::str(c.clone())).collect()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Write a bench result JSON under bench_out/.
+pub fn write_json(name: &str, value: &Value) {
+    let dir = PathBuf::from("bench_out");
+    let _ = std::fs::create_dir_all(&dir);
+    let path = dir.join(format!("{name}.json"));
+    if std::fs::write(&path, value.to_string_pretty()).is_ok() {
+        println!("[bench] wrote {path:?}");
+    }
+}
+
+/// Series -> compact sparkline-ish string for console figures.
+pub fn sparkline(values: &[f64]) -> String {
+    if values.is_empty() {
+        return String::new();
+    }
+    const BARS: &[char] = &['▁', '▂', '▃', '▄', '▅', '▆', '▇', '█'];
+    let min = values.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = values.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let span = (max - min).max(1e-12);
+    values
+        .iter()
+        .map(|v| BARS[(((v - min) / span) * 7.0).round() as usize])
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_prints_and_serializes() {
+        let mut t = Table::new("Test", &["mode", "speedup"]);
+        t.row(vec!["sync".into(), "1.00x".into()]);
+        t.row(vec!["async".into(), "1.61x".into()]);
+        t.print();
+        let v = t.to_json();
+        assert_eq!(v.get("rows").unwrap().as_array().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn sparkline_shape() {
+        let s = sparkline(&[0.0, 0.5, 1.0]);
+        assert_eq!(s.chars().count(), 3);
+        assert!(s.starts_with('▁'));
+        assert!(s.ends_with('█'));
+    }
+
+    #[test]
+    fn scale_default_is_one() {
+        assert_eq!(scaled(10), (10.0 * scale()).round() as usize);
+    }
+}

@@ -1,0 +1,227 @@
+//! Declarative CLI parser (the offline registry has no clap).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, typed
+//! accessors with defaults, and generated help text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub takes_value: bool,
+    pub default: Option<&'static str>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Command {
+    pub name: &'static str,
+    pub about: &'static str,
+    pub args: Vec<ArgSpec>,
+}
+
+#[derive(Debug, Default)]
+pub struct Cli {
+    pub program: &'static str,
+    pub about: &'static str,
+    pub commands: Vec<Command>,
+}
+
+#[derive(Debug)]
+pub struct Matches {
+    pub command: String,
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug, thiserror::Error)]
+pub enum CliError {
+    #[error("unknown command '{0}'")]
+    UnknownCommand(String),
+    #[error("unknown argument '--{0}'")]
+    UnknownArg(String),
+    #[error("argument '--{0}' requires a value")]
+    MissingValue(String),
+    #[error("no command given\n{0}")]
+    NoCommand(String),
+    #[error("help requested\n{0}")]
+    Help(String),
+}
+
+impl Cli {
+    pub fn new(program: &'static str, about: &'static str) -> Cli {
+        Cli { program, about, commands: vec![] }
+    }
+
+    pub fn command(mut self, name: &'static str, about: &'static str, args: Vec<ArgSpec>) -> Cli {
+        self.commands.push(Command { name, about, args });
+        self
+    }
+
+    pub fn help(&self) -> String {
+        let mut out = format!("{} — {}\n\nCOMMANDS:\n", self.program, self.about);
+        for c in &self.commands {
+            out.push_str(&format!("  {:<14} {}\n", c.name, c.about));
+        }
+        out.push_str("\nRun with '<command> --help' for per-command options.\n");
+        out
+    }
+
+    pub fn command_help(&self, cmd: &Command) -> String {
+        let mut out = format!("{} {} — {}\n\nOPTIONS:\n", self.program, cmd.name, cmd.about);
+        for a in &cmd.args {
+            let value = if a.takes_value { " <value>" } else { "" };
+            let default = a.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+            out.push_str(&format!("  --{:<20} {}{}\n", format!("{}{}", a.name, value), a.help, default));
+        }
+        out
+    }
+
+    pub fn parse(&self, argv: &[String]) -> Result<Matches, CliError> {
+        if argv.is_empty() || argv[0] == "--help" || argv[0] == "-h" {
+            return Err(CliError::NoCommand(self.help()));
+        }
+        let cmd_name = &argv[0];
+        let cmd = self
+            .commands
+            .iter()
+            .find(|c| c.name == cmd_name)
+            .ok_or_else(|| CliError::UnknownCommand(cmd_name.clone()))?;
+        let mut m = Matches {
+            command: cmd_name.clone(),
+            values: BTreeMap::new(),
+            flags: vec![],
+            positional: vec![],
+        };
+        for spec in &cmd.args {
+            if let (true, Some(d)) = (spec.takes_value, spec.default) {
+                m.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut i = 1;
+        while i < argv.len() {
+            let tok = &argv[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(CliError::Help(self.command_help(cmd)));
+            }
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (name, inline_val) = match rest.split_once('=') {
+                    Some((n, v)) => (n, Some(v.to_string())),
+                    None => (rest, None),
+                };
+                let spec = cmd
+                    .args
+                    .iter()
+                    .find(|a| a.name == name)
+                    .ok_or_else(|| CliError::UnknownArg(name.to_string()))?;
+                if spec.takes_value {
+                    let val = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            argv.get(i).cloned().ok_or_else(|| CliError::MissingValue(name.to_string()))?
+                        }
+                    };
+                    m.values.insert(name.to_string(), val);
+                } else {
+                    m.flags.push(name.to_string());
+                }
+            } else {
+                m.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        Ok(m)
+    }
+}
+
+impl Matches {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+pub fn arg(name: &'static str, help: &'static str) -> ArgSpec {
+    ArgSpec { name, help, takes_value: true, default: None }
+}
+
+pub fn arg_default(name: &'static str, help: &'static str, default: &'static str) -> ArgSpec {
+    ArgSpec { name, help, takes_value: true, default: Some(default) }
+}
+
+pub fn flag(name: &'static str, help: &'static str) -> ArgSpec {
+    ArgSpec { name, help, takes_value: false, default: None }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("trinity", "test").command(
+            "run",
+            "run a config",
+            vec![
+                arg("config", "path"),
+                arg_default("mode", "rft mode", "both"),
+                flag("verbose", "loud"),
+            ],
+        )
+    }
+
+    fn argv(parts: &[&str]) -> Vec<String> {
+        parts.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_flags_defaults() {
+        let m = cli().parse(&argv(&["run", "--config", "c.yaml", "--verbose"])).unwrap();
+        assert_eq!(m.command, "run");
+        assert_eq!(m.get("config"), Some("c.yaml"));
+        assert_eq!(m.get("mode"), Some("both"));
+        assert!(m.has_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_syntax() {
+        let m = cli().parse(&argv(&["run", "--mode=train"])).unwrap();
+        assert_eq!(m.get("mode"), Some("train"));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(matches!(cli().parse(&argv(&["nope"])), Err(CliError::UnknownCommand(_))));
+        assert!(matches!(cli().parse(&argv(&["run", "--bogus"])), Err(CliError::UnknownArg(_))));
+        assert!(matches!(cli().parse(&argv(&["run", "--config"])), Err(CliError::MissingValue(_))));
+        assert!(matches!(cli().parse(&argv(&[])), Err(CliError::NoCommand(_))));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let m = cli().parse(&argv(&["run", "--config", "x", "--mode", "7"])).unwrap();
+        assert_eq!(m.get_usize("mode", 0), 7);
+        assert_eq!(m.get_f64("missing", 1.5), 1.5);
+    }
+
+    #[test]
+    fn positional_args() {
+        let m = cli().parse(&argv(&["run", "task1", "task2"])).unwrap();
+        assert_eq!(m.positional, vec!["task1", "task2"]);
+    }
+}

@@ -1,0 +1,95 @@
+//! Leveled logger with wall-clock timestamps and a global level switch.
+//!
+//! Deliberately tiny: stderr sink, `RUST_LOG`-style level from env or
+//! `set_level`, and elapsed-time prefixes so coordinator traces read like
+//! the paper's monitor output.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::time::Instant;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug = 0,
+    Info = 1,
+    Warn = 2,
+    Error = 3,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(1);
+static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
+
+pub fn set_level(level: Level) {
+    LEVEL.store(level as u8, Ordering::Relaxed);
+}
+
+pub fn init_from_env() {
+    let level = match std::env::var("TRINITY_LOG").as_deref() {
+        Ok("debug") => Level::Debug,
+        Ok("warn") => Level::Warn,
+        Ok("error") => Level::Error,
+        _ => Level::Info,
+    };
+    set_level(level);
+    START.get_or_init(Instant::now);
+}
+
+pub fn enabled(level: Level) -> bool {
+    level as u8 >= LEVEL.load(Ordering::Relaxed)
+}
+
+pub fn log(level: Level, target: &str, msg: std::fmt::Arguments) {
+    if !enabled(level) {
+        return;
+    }
+    let elapsed = START.get_or_init(Instant::now).elapsed();
+    let tag = match level {
+        Level::Debug => "DEBUG",
+        Level::Info => "INFO ",
+        Level::Warn => "WARN ",
+        Level::Error => "ERROR",
+    };
+    eprintln!("[{:>9.3}s {} {}] {}", elapsed.as_secs_f64(), tag, target, msg);
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Debug, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Info, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Warn, $target, format_args!($($arg)*))
+    };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($target:expr, $($arg:tt)*) => {
+        $crate::util::logging::log($crate::util::logging::Level::Error, $target, format_args!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_gating() {
+        set_level(Level::Warn);
+        assert!(!enabled(Level::Debug));
+        assert!(!enabled(Level::Info));
+        assert!(enabled(Level::Warn));
+        assert!(enabled(Level::Error));
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,10 @@
+//! Substrate utilities built from scratch (no serde/clap/rand available
+//! in the offline registry — see DESIGN.md §1).
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod timeseries;
+pub mod yamlite;

@@ -1,0 +1,295 @@
+//! PCG-XSH-RR 64/32 PRNG with the distributions the stack needs
+//! (uniform, normal, categorical, Gumbel for sampling, shuffling).
+//!
+//! Deterministic and splittable via `fork`, so every component (task
+//! generator, sampler, annotator sim, ...) gets an independent,
+//! reproducible stream from the run seed.
+
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    inc: u64,
+    cached_normal: Option<f64>,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Rng {
+    pub fn new(seed: u64) -> Rng {
+        Self::with_stream(seed, 0xda3e39cb94b95bdb)
+    }
+
+    pub fn with_stream(seed: u64, stream: u64) -> Rng {
+        let mut rng = Rng { state: 0, inc: (stream << 1) | 1, cached_normal: None };
+        rng.next_u32();
+        rng.state = rng.state.wrapping_add(seed);
+        rng.next_u32();
+        rng
+    }
+
+    /// Derive an independent child stream (stable: same parent state +
+    /// same tag -> same child).
+    pub fn fork(&self, tag: u64) -> Rng {
+        Rng::with_stream(self.state.wrapping_add(tag.wrapping_mul(0x9e3779b97f4a7c15)), tag | 1)
+    }
+
+    pub fn next_u32(&mut self) -> u32 {
+        let old = self.state;
+        self.state = old.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let xorshifted = (((old >> 18) ^ old) >> 27) as u32;
+        let rot = (old >> 59) as u32;
+        xorshifted.rotate_right(rot)
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        ((self.next_u32() as u64) << 32) | self.next_u32() as u64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, bound) without modulo bias (Lemire).
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128).wrapping_mul(bound as u128);
+        let mut l = m as u64;
+        if l < bound {
+            let t = bound.wrapping_neg() % bound;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128).wrapping_mul(bound as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform integer in [lo, hi] inclusive.
+    pub fn range_i64(&mut self, lo: i64, hi: i64) -> i64 {
+        assert!(lo <= hi);
+        lo + self.below((hi - lo + 1) as u64) as i64
+    }
+
+    /// Standard normal (Box–Muller with caching).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(z) = self.cached_normal.take() {
+            return z;
+        }
+        let (u1, u2) = (self.uniform().max(1e-300), self.uniform());
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.cached_normal = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    /// Exponential with the given rate.
+    pub fn exponential(&mut self, rate: f64) -> f64 {
+        -self.uniform().max(1e-300).ln() / rate
+    }
+
+    /// Pareto (long-tail) sample with scale x_m and shape alpha — used to
+    /// model long-tailed rollout/annotation latencies.
+    pub fn pareto(&mut self, x_m: f64, alpha: f64) -> f64 {
+        x_m / self.uniform().max(1e-300).powf(1.0 / alpha)
+    }
+
+    /// Sample an index from unnormalized non-negative weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        if total <= 0.0 {
+            return self.below(weights.len() as u64) as usize;
+        }
+        let mut target = self.uniform() * total;
+        for (i, w) in weights.iter().enumerate() {
+            target -= w;
+            if target <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Sample from logits with temperature + optional top-k / top-p — the
+    /// generation-engine sampler.
+    pub fn sample_logits(&mut self, logits: &[f32], temperature: f32, top_k: usize, top_p: f32) -> usize {
+        if temperature <= 1e-6 {
+            // greedy
+            return logits
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap_or(0);
+        }
+        let mut idx: Vec<usize> = (0..logits.len()).collect();
+        idx.sort_unstable_by(|&a, &b| logits[b].partial_cmp(&logits[a]).unwrap());
+        let k = if top_k == 0 { logits.len() } else { top_k.min(logits.len()) };
+        let max_logit = logits[idx[0]] as f64;
+        let t = temperature as f64;
+        let mut probs: Vec<f64> = Vec::with_capacity(k);
+        for &i in idx.iter().take(k) {
+            probs.push(((logits[i] as f64 - max_logit) / t).exp());
+        }
+        let total: f64 = probs.iter().sum();
+        // nucleus cut on the sorted (descending) probabilities
+        if top_p < 1.0 {
+            let mut acc = 0.0;
+            let mut cut = probs.len();
+            for (j, p) in probs.iter().enumerate() {
+                acc += p / total;
+                if acc >= top_p as f64 {
+                    cut = j + 1;
+                    break;
+                }
+            }
+            probs.truncate(cut);
+        }
+        idx[self.categorical(&probs)]
+    }
+
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.below((i + 1) as u64) as usize;
+            items.swap(i, j);
+        }
+    }
+
+    pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.below(items.len() as u64) as usize]
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_streams() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Rng::new(8);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn fork_is_independent_and_stable() {
+        let base = Rng::new(1);
+        let mut f1 = base.fork(10);
+        let mut f2 = base.fork(10);
+        let mut f3 = base.fork(11);
+        assert_eq!(f1.next_u64(), f2.next_u64());
+        assert_ne!(f1.next_u64(), f3.next_u64());
+    }
+
+    #[test]
+    fn uniform_mean_and_bounds() {
+        let mut rng = Rng::new(3);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn below_is_unbiased_roughly() {
+        let mut rng = Rng::new(4);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[rng.below(5) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Rng::new(5);
+        let n = 50_000;
+        let (mut s1, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let z = rng.normal();
+            s1 += z;
+            s2 += z * z;
+        }
+        let mean = s1 / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.05, "var {var}");
+    }
+
+    #[test]
+    fn categorical_follows_weights() {
+        let mut rng = Rng::new(6);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[rng.categorical(&[1.0, 2.0, 7.0])] += 1;
+        }
+        assert!((counts[2] as f64 / 30_000.0 - 0.7).abs() < 0.02);
+        assert!((counts[1] as f64 / 30_000.0 - 0.2).abs() < 0.02);
+    }
+
+    #[test]
+    fn greedy_sampling_picks_argmax() {
+        let mut rng = Rng::new(7);
+        let logits = vec![0.1f32, 5.0, -2.0, 4.9];
+        for _ in 0..10 {
+            assert_eq!(rng.sample_logits(&logits, 0.0, 0, 1.0), 1);
+        }
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let mut rng = Rng::new(8);
+        let logits = vec![10.0f32, 9.0, -50.0, -60.0];
+        for _ in 0..200 {
+            let s = rng.sample_logits(&logits, 1.0, 2, 1.0);
+            assert!(s == 0 || s == 1);
+        }
+    }
+
+    #[test]
+    fn top_p_restricts_support() {
+        let mut rng = Rng::new(9);
+        // p(0) ~ 0.88 -> top_p=0.5 keeps only index 0
+        let logits = vec![3.0f32, 1.0, 0.0, -1.0];
+        for _ in 0..100 {
+            assert_eq!(rng.sample_logits(&logits, 1.0, 0, 0.5), 0);
+        }
+    }
+
+    #[test]
+    fn shuffle_is_a_permutation() {
+        let mut rng = Rng::new(10);
+        let mut v: Vec<u32> = (0..100).collect();
+        rng.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pareto_is_long_tailed() {
+        let mut rng = Rng::new(11);
+        let n = 20_000;
+        let samples: Vec<f64> = (0..n).map(|_| rng.pareto(1.0, 2.0)).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let max = samples.iter().cloned().fold(0.0, f64::max);
+        assert!((mean - 2.0).abs() < 0.2); // E = alpha/(alpha-1) = 2
+        assert!(max > 10.0); // tail actually shows up
+    }
+}

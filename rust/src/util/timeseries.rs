@@ -1,0 +1,123 @@
+//! Time-series helpers for the monitor and the figure benches: moving
+//! averages (Fig. 9 uses a 40-step moving average), EMA smoothing, and
+//! summary statistics (mean ± std as reported in Tables 1–3).
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary { count: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0 };
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+    Summary {
+        count: xs.len(),
+        mean,
+        std: var.sqrt(),
+        min: xs.iter().cloned().fold(f64::INFINITY, f64::min),
+        max: xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
+
+/// Centered-window-free trailing moving average (paper's Fig. 9 smoothing).
+pub fn moving_average(xs: &[f64], window: usize) -> Vec<f64> {
+    assert!(window > 0);
+    let mut out = Vec::with_capacity(xs.len());
+    let mut sum = 0.0;
+    for (i, &x) in xs.iter().enumerate() {
+        sum += x;
+        if i >= window {
+            sum -= xs[i - window];
+        }
+        let n = (i + 1).min(window) as f64;
+        out.push(sum / n);
+    }
+    out
+}
+
+pub fn ema(xs: &[f64], alpha: f64) -> Vec<f64> {
+    let mut out = Vec::with_capacity(xs.len());
+    let mut acc = None;
+    for &x in xs {
+        let next = match acc {
+            None => x,
+            Some(prev) => alpha * x + (1.0 - alpha) * prev,
+        };
+        out.push(next);
+        acc = Some(next);
+    }
+    out
+}
+
+/// Percentile via linear interpolation on a sorted copy (p in [0, 100]).
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// "mean ± std" formatting used by the table benches.
+pub fn fmt_mean_std(s: &Summary) -> String {
+    format!("{:.2} ± {:.2}", s.mean, s.std)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basic() {
+        let s = summarize(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(s.mean, 2.5);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 4.0);
+        assert!((s.std - 1.118).abs() < 1e-3);
+    }
+
+    #[test]
+    fn summary_empty() {
+        assert_eq!(summarize(&[]).count, 0);
+    }
+
+    #[test]
+    fn moving_average_warmup_and_steady() {
+        let xs = vec![1.0, 2.0, 3.0, 4.0, 5.0];
+        let ma = moving_average(&xs, 2);
+        assert_eq!(ma, vec![1.0, 1.5, 2.5, 3.5, 4.5]);
+    }
+
+    #[test]
+    fn ema_converges() {
+        let xs = vec![10.0; 50];
+        let e = ema(&xs, 0.1);
+        assert!((e[49] - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 100.0);
+        assert!((percentile(&xs, 99.0) - 99.01).abs() < 0.1);
+    }
+}

@@ -1,0 +1,311 @@
+//! YAML-subset config parser (the offline registry has no serde_yaml).
+//!
+//! Supports the subset our configs need — which mirrors the paper's YAML
+//! configuration files (Listing 5): nested maps by 2-space indentation,
+//! block lists (`- item`, including `- key: val` object items), inline
+//! lists (`[1, 2]`), scalars (bool/null/int/float/string, quoted strings),
+//! comments (`#`) and blank lines.  Produces `util::json::Value`.
+
+use super::json::Value;
+
+#[derive(Debug, thiserror::Error)]
+#[error("yaml parse error at line {line}: {msg}")]
+pub struct YamlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+struct Line {
+    indent: usize,
+    text: String,
+    lineno: usize,
+}
+
+pub fn parse(text: &str) -> Result<Value, YamlError> {
+    let lines: Vec<Line> = text
+        .lines()
+        .enumerate()
+        .filter_map(|(i, raw)| {
+            let without_comment = strip_comment(raw);
+            let trimmed = without_comment.trim_end();
+            if trimmed.trim().is_empty() {
+                return None;
+            }
+            let indent = trimmed.len() - trimmed.trim_start().len();
+            Some(Line { indent, text: trimmed.trim_start().to_string(), lineno: i + 1 })
+        })
+        .collect();
+    let mut pos = 0;
+    let v = parse_block(&lines, &mut pos, 0)?;
+    if pos != lines.len() {
+        return Err(YamlError { line: lines[pos].lineno, msg: "unexpected dedent/content".into() });
+    }
+    Ok(v)
+}
+
+/// Strip a `#` comment, respecting quoted strings.
+fn strip_comment(line: &str) -> &str {
+    let mut in_single = false;
+    let mut in_double = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '\'' if !in_double => in_single = !in_single,
+            '"' if !in_single => in_double = !in_double,
+            '#' if !in_single && !in_double => {
+                // YAML requires '#' to start a comment at start or after space
+                if i == 0 || line[..i].ends_with(' ') {
+                    return &line[..i];
+                }
+            }
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_block(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Value, YamlError> {
+    if *pos >= lines.len() {
+        return Ok(Value::Object(vec![]));
+    }
+    if lines[*pos].text.starts_with("- ") || lines[*pos].text == "-" {
+        parse_list(lines, pos, indent)
+    } else {
+        parse_map(lines, pos, indent)
+    }
+}
+
+fn parse_map(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Value, YamlError> {
+    let mut pairs: Vec<(String, Value)> = Vec::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent < indent {
+            break;
+        }
+        if line.indent > indent {
+            return Err(YamlError { line: line.lineno, msg: "unexpected indent".into() });
+        }
+        let (key, rest) = split_key(&line.text)
+            .ok_or_else(|| YamlError { line: line.lineno, msg: "expected 'key: value'".into() })?;
+        *pos += 1;
+        let value = if rest.is_empty() {
+            // nested block (or empty -> empty object)
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                parse_block(lines, pos, lines[*pos].indent)?
+            } else {
+                Value::Object(vec![])
+            }
+        } else {
+            parse_scalar(rest, line.lineno)?
+        };
+        pairs.push((key.to_string(), value));
+    }
+    Ok(Value::Object(pairs))
+}
+
+fn parse_list(lines: &[Line], pos: &mut usize, indent: usize) -> Result<Value, YamlError> {
+    let mut items = Vec::new();
+    while *pos < lines.len() {
+        let line = &lines[*pos];
+        if line.indent != indent || !(line.text.starts_with("- ") || line.text == "-") {
+            if line.indent >= indent && !line.text.starts_with('-') {
+                break;
+            }
+            if line.indent < indent {
+                break;
+            }
+            return Err(YamlError { line: line.lineno, msg: "bad list item".into() });
+        }
+        let rest = line.text[1..].trim_start().to_string();
+        let lineno = line.lineno;
+        *pos += 1;
+        if rest.is_empty() {
+            // nested block under a bare '-'
+            if *pos < lines.len() && lines[*pos].indent > indent {
+                items.push(parse_block(lines, pos, lines[*pos].indent)?);
+            } else {
+                items.push(Value::Null);
+            }
+        } else if let Some((key, val)) = split_key(&rest) {
+            // '- key: value' starts an inline object item; following lines at
+            // deeper indent extend it.
+            let mut pairs = vec![];
+            let first_val = if val.is_empty() {
+                if *pos < lines.len() && lines[*pos].indent > indent + 2 {
+                    parse_block(lines, pos, lines[*pos].indent)?
+                } else {
+                    Value::Object(vec![])
+                }
+            } else {
+                parse_scalar(val, lineno)?
+            };
+            pairs.push((key.to_string(), first_val));
+            // continuation keys are indented by the '- ' width (2)
+            if *pos < lines.len() && lines[*pos].indent == indent + 2 && split_key(&lines[*pos].text).is_some() {
+                if let Value::Object(more) = parse_map(lines, pos, indent + 2)? {
+                    pairs.extend(more);
+                }
+            }
+            items.push(Value::Object(pairs));
+        } else {
+            items.push(parse_scalar(&rest, lineno)?);
+        }
+    }
+    Ok(Value::Array(items))
+}
+
+/// Split "key: rest" (colon must be followed by space or end).
+fn split_key(text: &str) -> Option<(&str, &str)> {
+    let mut in_single = false;
+    let mut in_double = false;
+    for (i, c) in text.char_indices() {
+        match c {
+            '\'' if !in_double => in_single = !in_single,
+            '"' if !in_single => in_double = !in_double,
+            ':' if !in_single && !in_double => {
+                let rest = &text[i + 1..];
+                if rest.is_empty() || rest.starts_with(' ') {
+                    let key = text[..i].trim();
+                    let key = key.trim_matches('"').trim_matches('\'');
+                    return Some((key, rest.trim()));
+                }
+            }
+            _ => {}
+        }
+    }
+    None
+}
+
+fn parse_scalar(text: &str, lineno: usize) -> Result<Value, YamlError> {
+    let t = text.trim();
+    if t.starts_with('[') {
+        return parse_inline_list(t, lineno);
+    }
+    if (t.starts_with('"') && t.ends_with('"') && t.len() >= 2)
+        || (t.starts_with('\'') && t.ends_with('\'') && t.len() >= 2)
+    {
+        return Ok(Value::String(t[1..t.len() - 1].to_string()));
+    }
+    Ok(match t {
+        "null" | "~" => Value::Null,
+        "true" | "True" => Value::Bool(true),
+        "false" | "False" => Value::Bool(false),
+        _ => {
+            if let Ok(n) = t.parse::<f64>() {
+                Value::Number(n)
+            } else {
+                Value::String(t.to_string())
+            }
+        }
+    })
+}
+
+fn parse_inline_list(text: &str, lineno: usize) -> Result<Value, YamlError> {
+    let inner = text
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or_else(|| YamlError { line: lineno, msg: "unterminated inline list".into() })?;
+    let mut items = Vec::new();
+    if inner.trim().is_empty() {
+        return Ok(Value::Array(items));
+    }
+    for part in split_top_level(inner, ',') {
+        items.push(parse_scalar(part.trim(), lineno)?);
+    }
+    Ok(Value::Array(items))
+}
+
+fn split_top_level(s: &str, sep: char) -> Vec<&str> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut start = 0usize;
+    let mut in_q = false;
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' | '\'' => in_q = !in_q,
+            '[' if !in_q => depth += 1,
+            ']' if !in_q => depth = depth.saturating_sub(1),
+            c if c == sep && depth == 0 && !in_q => {
+                out.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    out.push(&s[start..]);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_scalars() {
+        let v = parse("a: 1\nb: hello\nc: true\nd: 2.5\ne: null\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_i64(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("hello"));
+        assert_eq!(v.get("c").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("d").unwrap().as_f64(), Some(2.5));
+        assert!(v.get("e").unwrap().is_null());
+    }
+
+    #[test]
+    fn nested_maps() {
+        let src = "model:\n  name: tiny\n  sizes:\n    batch: 4\nmode: both\n";
+        let v = parse(src).unwrap();
+        assert_eq!(v.path("model.name").unwrap().as_str(), Some("tiny"));
+        assert_eq!(v.path("model.sizes.batch").unwrap().as_i64(), Some(4));
+        assert_eq!(v.get("mode").unwrap().as_str(), Some("both"));
+    }
+
+    #[test]
+    fn block_lists() {
+        let src = "items:\n  - 1\n  - two\n  - true\n";
+        let v = parse(src).unwrap();
+        let items = v.get("items").unwrap().as_array().unwrap();
+        assert_eq!(items.len(), 3);
+        assert_eq!(items[1].as_str(), Some("two"));
+    }
+
+    #[test]
+    fn list_of_objects_paper_style() {
+        // mirrors the paper's Listing 5 input_buffers section
+        let src = "input_buffers:\n  - name: raw_input\n    path: openai/gsm8k\n    raw: true\n  - name: second\n    path: other\n";
+        let v = parse(src).unwrap();
+        let bufs = v.get("input_buffers").unwrap().as_array().unwrap();
+        assert_eq!(bufs.len(), 2);
+        assert_eq!(bufs[0].get("name").unwrap().as_str(), Some("raw_input"));
+        assert_eq!(bufs[0].get("raw").unwrap().as_bool(), Some(true));
+        assert_eq!(bufs[1].get("path").unwrap().as_str(), Some("other"));
+    }
+
+    #[test]
+    fn inline_lists_and_comments() {
+        let src = "# header comment\nsync_intervals: [1, 2, 10]  # paper's sweep\nname: 'quoted: colon'\n";
+        let v = parse(src).unwrap();
+        let ints = v.get("sync_intervals").unwrap().as_array().unwrap();
+        assert_eq!(ints.iter().map(|x| x.as_i64().unwrap()).collect::<Vec<_>>(), vec![1, 2, 10]);
+        assert_eq!(v.get("name").unwrap().as_str(), Some("quoted: colon"));
+    }
+
+    #[test]
+    fn priority_weights_example() {
+        // the paper's Listing 5 priority_weights block
+        let src = "priority_weights:\n  difficulty: -1.0\n";
+        let v = parse(src).unwrap();
+        assert_eq!(v.path("priority_weights.difficulty").unwrap().as_f64(), Some(-1.0));
+    }
+
+    #[test]
+    fn empty_and_errors() {
+        assert!(parse("").unwrap().as_object().unwrap().is_empty());
+        assert!(parse("a: 1\n    b: 2\n").is_err()); // stray indent under scalar...
+    }
+
+    #[test]
+    fn deep_nesting() {
+        let src = "a:\n  b:\n    c:\n      d: deep\n";
+        let v = parse(src).unwrap();
+        assert_eq!(v.path("a.b.c.d").unwrap().as_str(), Some("deep"));
+    }
+}

@@ -1,0 +1,133 @@
+//! Integration: data pipelines composed with the real engine — diversity
+//! rewards through the embed artifact, curriculum task ordering feeding a
+//! session, human-in-the-loop -> DPO train-only.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use trinity_rft::buffer::ExperienceBuffer;
+use trinity_rft::coordinator::{PrioritizedTaskSource, RftConfig, RftSession, TaskSource};
+use trinity_rft::data::formatter::Formatter;
+use trinity_rft::data::human::{
+    results_to_preference_pairs, AnnotationItem, AnnotationService, AnnotatorConfig,
+};
+use trinity_rft::data::{DiversityRewardProcessor, ExperienceProcessor, TaskPipeline};
+use trinity_rft::envs::math::MathTaskGen;
+use trinity_rft::explorer::Task;
+use trinity_rft::runtime::Manifest;
+
+fn base_cfg() -> Option<RftConfig> {
+    Manifest::load_default()?;
+    let mut cfg = RftConfig::default();
+    cfg.model_preset = "tiny".into();
+    cfg.total_steps = 2;
+    cfg.batch_tasks = 1;
+    cfg.repeat_times = 4;
+    cfg.max_new_tokens = 6;
+    cfg.seed = 23;
+    Some(cfg)
+}
+
+#[test]
+fn diversity_reward_through_embed_artifact() {
+    let Some(mut cfg) = base_cfg() else { return };
+    cfg.mode = "both".into();
+    // build the session first to get the generation engine for embeddings
+    let mut session = RftSession::build(cfg.clone(), None, None).unwrap();
+    let gen = Arc::clone(session.explorers[0].engine());
+    let processor: Arc<dyn ExperienceProcessor> =
+        Arc::new(DiversityRewardProcessor::new(gen, 0.5, 0.3, 10));
+    // interpose manually on the session's buffer
+    let shaped = trinity_rft::data::ShapingBuffer::new(Arc::clone(&session.buffer), processor);
+    // run a rollout through the explorer and shape it
+    let tasks = session.task_source.next_batch(1);
+    let outs = {
+        session.explorers[0].explore_batch(tasks).unwrap();
+        session.buffer.read(4, Duration::from_secs(5)).unwrap()
+    };
+    assert_eq!(outs.len(), 4);
+    shaped.write(outs).unwrap();
+    let shaped_out = session.buffer.read(4, Duration::from_secs(5)).unwrap();
+    for e in &shaped_out {
+        let d = e.meta_f64("diversity").unwrap();
+        assert!((0.0..=2.0).contains(&d), "diversity {d} out of range");
+        assert_eq!(e.meta_f64("diversity_weight"), Some(0.5));
+    }
+    // rollouts within one group should not all have identical diversity
+    // unless they are token-identical
+    let unique_tokens: std::collections::HashSet<Vec<i32>> =
+        shaped_out.iter().map(|e| e.tokens.clone()).collect();
+    if unique_tokens.len() > 1 {
+        let divs: Vec<f64> = shaped_out.iter().map(|e| e.meta_f64("diversity").unwrap()).collect();
+        let spread = divs.iter().cloned().fold(f64::MIN, f64::max)
+            - divs.iter().cloned().fold(f64::MAX, f64::min);
+        assert!(spread >= 0.0);
+    }
+}
+
+#[test]
+fn curriculum_source_drives_session() {
+    let Some(mut cfg) = base_cfg() else { return };
+    cfg.mode = "both".into();
+    cfg.total_steps = 2;
+    // curate: generate mixed difficulties, order easy->hard
+    let mut gen = MathTaskGen::new(5, "curr");
+    let raw: Vec<Task> = gen
+        .gen_batch(12, 1, 8)
+        .into_iter()
+        .map(|mt| {
+            let mut t = Task::new(&mt.id, "math", mt.to_payload());
+            t.difficulty = mt.difficulty as f64;
+            t.repeat_times = 4;
+            t
+        })
+        .collect();
+    let curated = TaskPipeline::easy_to_hard().run(raw).unwrap();
+    assert!(curated.windows(2).all(|w| w[0].difficulty <= w[1].difficulty));
+    let eval = curated[..4].to_vec();
+    let source: Arc<dyn TaskSource> = Arc::new(PrioritizedTaskSource::new(curated, eval));
+    let mut session = RftSession::build(cfg, Some(source), None).unwrap();
+    let report = session.run().unwrap();
+    assert_eq!(report.train_steps, 2);
+}
+
+#[test]
+fn human_annotation_to_dpo_training() {
+    let Some(mut cfg) = base_cfg() else { return };
+    cfg.mode = "train".into();
+    cfg.algorithm = "dpo".into();
+    cfg.hyper.tau_or_beta = 0.5;
+    cfg.total_steps = 1;
+    let mut session = RftSession::build(cfg, None, None).unwrap();
+
+    // 1. simulated annotators produce preferences
+    let items: Vec<AnnotationItem> = (0..2)
+        .map(|i| AnnotationItem {
+            prompt: format!("what is 2 + {i} ?"),
+            answer_a: (2 + i as i64).to_string(),
+            answer_b: "0".to_string(),
+            gold_answer: 2 + i as i64,
+        })
+        .collect();
+    let svc = AnnotationService::new(
+        AnnotatorConfig { mean_latency: Duration::from_millis(1), ..Default::default() },
+        2,
+        7,
+    );
+    let id = svc.post_batch(items.clone());
+    let results = svc.wait_for_batch(id, Duration::from_secs(5)).unwrap();
+    assert_eq!(results.len(), 2);
+
+    // 2. results -> DPO pairs -> buffer (tiny dpo artifact trains 2 pairs
+    //    = 4 experiences per step)
+    let formatter = Formatter { spec: Default::default(), tokenizer: Arc::clone(&session.tokenizer) };
+    let pairs = results_to_preference_pairs(&items, &results, &formatter).unwrap();
+    assert_eq!(pairs.len(), 4);
+    session.buffer.write(pairs).unwrap();
+
+    // 3. train-only DPO step consumes them
+    let report = session.run().unwrap();
+    assert_eq!(report.train_steps, 1);
+    let margin = report.trainer_metrics[0].get("margin").unwrap();
+    assert!(margin.is_finite());
+}

@@ -1,0 +1,168 @@
+//! End-to-end integration over the full trinity: every RFT mode running
+//! real PJRT rollouts + train steps on the tiny preset.
+//! Requires `make artifacts` (skips gracefully otherwise).
+
+use std::sync::Arc;
+
+use trinity_rft::coordinator::{RftConfig, RftSession};
+use trinity_rft::data::{ExperienceProcessor, QualityRewardProcessor};
+use trinity_rft::runtime::Manifest;
+
+fn base_cfg() -> Option<RftConfig> {
+    Manifest::load_default()?;
+    let mut cfg = RftConfig::default();
+    cfg.model_preset = "tiny".into();
+    cfg.total_steps = 3;
+    cfg.batch_tasks = 1;
+    cfg.repeat_times = 4; // matches tiny grpo batch of 4
+    cfg.max_new_tokens = 6;
+    cfg.hyper.lr = 1e-4;
+    cfg.explorer_threads = 2;
+    cfg.seed = 11;
+    Some(cfg)
+}
+
+#[test]
+fn synchronous_mode_runs_and_is_on_policy() {
+    let Some(mut cfg) = base_cfg() else { return };
+    cfg.mode = "both".into();
+    cfg.sync_interval = 1;
+    cfg.sync_offset = 0;
+    let mut session = RftSession::build(cfg, None, None).unwrap();
+    let report = session.run().unwrap();
+    assert_eq!(report.train_steps, 3);
+    assert_eq!(report.explore_batches, 3);
+    assert_eq!(report.sync_count, 3);
+    // strictly on-policy: the trainer's KL to the rollout policy is ~0 on
+    // the FIRST step (weights identical)
+    let kl0 = report.trainer_metrics[0].get("kl").unwrap();
+    assert!(kl0.abs() < 1e-3, "on-policy first-step KL should be ~0, got {kl0}");
+    // timeline has both rollout spans and sync points
+    assert!(report.timeline.iter().any(|e| e.kind == "rollout"));
+    assert!(report.timeline.iter().any(|e| e.kind == "weight_sync"));
+}
+
+#[test]
+fn sync_interval_reduces_sync_count() {
+    let Some(mut cfg) = base_cfg() else { return };
+    cfg.mode = "both".into();
+    cfg.total_steps = 4;
+    cfg.sync_interval = 2;
+    let mut session = RftSession::build(cfg, None, None).unwrap();
+    let report = session.run().unwrap();
+    assert_eq!(report.train_steps, 4);
+    assert_eq!(report.sync_count, 2);
+}
+
+#[test]
+fn one_step_offpolicy_overlaps_pipeline() {
+    let Some(mut cfg) = base_cfg() else { return };
+    cfg.mode = "both".into();
+    cfg.sync_interval = 1;
+    cfg.sync_offset = 1;
+    let mut session = RftSession::build(cfg, None, None).unwrap();
+    let report = session.run().unwrap();
+    assert_eq!(report.train_steps, 3);
+    assert_eq!(report.explore_batches, 3);
+}
+
+#[test]
+fn async_mode_with_multi_explorer() {
+    let Some(mut cfg) = base_cfg() else { return };
+    cfg.mode = "async".into();
+    cfg.explorer_count = 2;
+    cfg.sync_interval = 2;
+    cfg.total_steps = 3;
+    let mut session = RftSession::build(cfg, None, None).unwrap();
+    let report = session.run().unwrap();
+    assert_eq!(report.train_steps, 3);
+    assert!(report.explore_batches >= 1);
+    assert!(report.mode.contains("x2"));
+}
+
+#[test]
+fn dummy_learning_freezes_weights_across_modes() {
+    let Some(mut cfg) = base_cfg() else { return };
+    cfg.mode = "both".into();
+    cfg.dummy_learning = true;
+    cfg.sync_interval = 1;
+    let mut session = RftSession::build(cfg, None, None).unwrap();
+    let before = session.trainer.as_ref().unwrap().params().snapshot().unwrap();
+    let report = session.run().unwrap();
+    let after = session.trainer.as_ref().unwrap().params().snapshot().unwrap();
+    for (a, b) in before.iter().zip(&after) {
+        assert_eq!(a, b);
+    }
+    assert_eq!(report.train_steps, 3);
+}
+
+#[test]
+fn train_only_mode_on_prefilled_buffer() {
+    let Some(mut cfg) = base_cfg() else { return };
+    cfg.mode = "train".into();
+    cfg.algorithm = "sft".into();
+    cfg.total_steps = 2;
+    let mut session = RftSession::build(cfg, None, None).unwrap();
+    // pre-fill the buffer with expert experiences (offline SFT)
+    let formatter = trinity_rft::data::formatter::Formatter {
+        spec: Default::default(),
+        tokenizer: Arc::clone(&session.tokenizer),
+    };
+    let mut exps = vec![];
+    for i in 0..8 {
+        let raw = trinity_rft::util::json::Value::obj(vec![
+            ("question", trinity_rft::util::json::Value::str(format!("what is {i} + 1 ?"))),
+            ("answer", trinity_rft::util::json::Value::str((i + 1).to_string())),
+        ]);
+        exps.push(formatter.to_expert_experience(&raw).unwrap());
+    }
+    session.buffer.write(exps).unwrap();
+    let report = session.run().unwrap();
+    assert_eq!(report.train_steps, 2);
+    assert_eq!(report.explore_batches, 0);
+}
+
+#[test]
+fn bench_mode_reports_tiers() {
+    let Some(mut cfg) = base_cfg() else { return };
+    cfg.mode = "bench".into();
+    let session = RftSession::build(cfg, None, None).unwrap();
+    let reports = session.run_bench(&["math500s", "amcs"], 2, 2, 0.6).unwrap();
+    assert_eq!(reports.len(), 2);
+    for (tier, r) in &reports {
+        assert!(!tier.is_empty());
+        assert_eq!(r.tasks, 2);
+        assert_eq!(r.rollouts, 4);
+        assert!((0.0..=1.0).contains(&r.avg_reward));
+    }
+}
+
+#[test]
+fn quality_shaping_pipeline_changes_rewards() {
+    let Some(mut cfg) = base_cfg() else { return };
+    cfg.mode = "both".into();
+    cfg.total_steps = 2;
+    let processor: Arc<dyn ExperienceProcessor> = Arc::new(QualityRewardProcessor { weight: 1.0 });
+    let mut session = RftSession::build(cfg, None, Some(processor)).unwrap();
+    let report = session.run().unwrap();
+    assert_eq!(report.train_steps, 2);
+    // shaped rewards are no longer exactly {0, 1}: base + quality in [-.5,.5]
+    let rewards = report.reward_series();
+    assert!(rewards.iter().any(|r| r.fract().abs() > 1e-6), "rewards look unshaped: {rewards:?}");
+}
+
+#[test]
+fn eval_snapshots_collected_and_loadable() {
+    let Some(mut cfg) = base_cfg() else { return };
+    cfg.mode = "both".into();
+    cfg.total_steps = 4;
+    cfg.eval_every = 2;
+    let mut session = RftSession::build(cfg, None, None).unwrap();
+    let report = session.run().unwrap();
+    assert_eq!(report.snapshots.len(), 2);
+    assert_eq!(report.snapshots[0].0, 2);
+    assert_eq!(report.snapshots[1].0, 4);
+    // snapshots load back into the explorer for bench-over-checkpoints
+    session.load_explorer_weights(&report.snapshots[0].1, 100).unwrap();
+    assert_eq!(session.explorers[0].weight_version(), 100);
+}

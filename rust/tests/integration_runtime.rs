@@ -1,0 +1,286 @@
+//! Integration: rust PJRT runtime executing the real AOT artifacts.
+//!
+//! These tests require `make artifacts` (they skip gracefully otherwise)
+//! and cover the full L3<->L2 contract: logprob semantics, prefill/decode
+//! consistency, train-step state threading, dummy learning, and checkpoint
+//! round-trips through the engine.
+
+use trinity_rft::model::{ParamStore, WeightSync};
+use trinity_rft::runtime::{Manifest, ModelEngine, RuntimeClient, Tensor, TrainState};
+use trinity_rft::util::rng::Rng;
+
+fn engine() -> Option<(std::sync::Arc<RuntimeClient>, ModelEngine)> {
+    let manifest = Manifest::load_default()?;
+    let client = RuntimeClient::global();
+    let engine = ModelEngine::new(client.clone(), &manifest, "tiny").unwrap();
+    Some((client, engine))
+}
+
+fn random_tokens(rng: &mut Rng, b: usize, t: usize, vocab: usize) -> Tensor {
+    let data: Vec<i32> = (0..b * t).map(|_| rng.below(vocab as u64) as i32).collect();
+    Tensor::from_i32(vec![b, t], data)
+}
+
+fn log_softmax(logits: &[f32]) -> Vec<f32> {
+    let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse: f32 = logits.iter().map(|&x| (x - max).exp()).sum::<f32>().ln() + max;
+    logits.iter().map(|&x| x - lse).collect()
+}
+
+#[test]
+fn manifest_validates_against_model() {
+    let Some((_c, engine)) = engine() else { return };
+    engine.validate_manifest().unwrap();
+    assert!(engine.has_algorithm("grpo"));
+    assert!(engine.has_algorithm("opmd_simple"));
+}
+
+#[test]
+fn logprobs_semantics() {
+    let Some((_c, engine)) = engine() else { return };
+    let params = ParamStore::init(&engine.model, 1).unwrap();
+    let (b, t) = engine.seq_shape();
+    let mut rng = Rng::new(2);
+    let tokens = random_tokens(&mut rng, b, t, engine.model.vocab_size);
+    let (lp, ent) = engine.token_logprobs(&params, &tokens).unwrap();
+    assert_eq!(lp.shape(), &[b, t]);
+    assert_eq!(ent.shape(), &[b, t]);
+    let lp_data = lp.f32_data().unwrap();
+    // column 0 is defined as 0; all logprobs <= 0
+    for i in 0..b {
+        assert_eq!(lp_data[i * t], 0.0);
+    }
+    assert!(lp_data.iter().all(|&x| x <= 1e-5));
+    // entropy bounded by log(V)
+    let max_ent = (engine.model.vocab_size as f32).ln();
+    assert!(ent.f32_data().unwrap().iter().all(|&e| (-1e-4..=max_ent + 1e-3).contains(&e)));
+}
+
+#[test]
+fn prefill_decode_matches_logprobs() {
+    // The generation path (prefill + decode with KV cache) must produce the
+    // same conditional distribution as the full-sequence logprobs artifact.
+    let Some((_c, engine)) = engine() else { return };
+    let params = ParamStore::init(&engine.model, 3).unwrap();
+    let (b, t) = engine.seq_shape();
+    let (gb, gp, _cache) = engine.gen_shape();
+    assert_eq!(b, gb);
+    let mut rng = Rng::new(4);
+    let tokens = random_tokens(&mut rng, b, t, engine.model.vocab_size);
+    let (lp, _) = engine.token_logprobs(&params, &tokens).unwrap();
+
+    // prompts = first `plen` tokens of each row
+    let plen = gp.min(16);
+    let mut prompt = Tensor::zeros(trinity_rft::runtime::DType::I32, &[b, gp]);
+    if let Tensor::I32 { data, .. } = &mut prompt {
+        for i in 0..b {
+            for j in 0..plen {
+                data[i * gp + j] = tokens.row_i32(i).unwrap()[j];
+            }
+        }
+    }
+    let lens = Tensor::from_i32(vec![b], vec![plen as i32; b]);
+    let mut state = engine.prefill(&params, &prompt, &lens).unwrap();
+
+    // prefill last-logits predict token at index plen
+    for i in 0..b {
+        let ls = log_softmax(state.logits.row_f32(i).unwrap());
+        let target = tokens.row_i32(i).unwrap()[plen] as usize;
+        let expected = lp.row_f32(i).unwrap()[plen];
+        assert!(
+            (ls[target] - expected).abs() < 1e-3,
+            "prefill row {i}: {} vs {}",
+            ls[target],
+            expected
+        );
+    }
+
+    // decode 4 steps feeding the true tokens; logits must match lp columns
+    for s in 0..4usize {
+        let pos = plen + s;
+        let step_tokens =
+            Tensor::from_i32(vec![b], (0..b).map(|i| tokens.row_i32(i).unwrap()[pos]).collect());
+        let pos_t = Tensor::from_i32(vec![b], vec![pos as i32; b]);
+        let logits = engine.decode(&params, &mut state, &step_tokens, &pos_t).unwrap();
+        for i in 0..b {
+            let ls = log_softmax(logits.row_f32(i).unwrap());
+            let target = tokens.row_i32(i).unwrap()[pos + 1] as usize;
+            let expected = lp.row_f32(i).unwrap()[pos + 1];
+            assert!(
+                (ls[target] - expected).abs() < 1e-3,
+                "decode step {s} row {i}: {} vs {}",
+                ls[target],
+                expected
+            );
+        }
+    }
+}
+
+#[test]
+fn embed_is_normalized_and_mask_sensitive() {
+    let Some((_c, engine)) = engine() else { return };
+    let params = ParamStore::init(&engine.model, 5).unwrap();
+    let (b, t) = engine.seq_shape();
+    let mut rng = Rng::new(6);
+    let tokens = random_tokens(&mut rng, b, t, engine.model.vocab_size);
+    let full = Tensor::from_f32(vec![b, t], vec![1.0; b * t]);
+    let emb = engine.embed(&params, &tokens, &full).unwrap();
+    assert_eq!(emb.shape(), &[b, engine.model.d_model]);
+    for i in 0..b {
+        let row = emb.row_f32(i).unwrap();
+        let norm: f32 = row.iter().map(|x| x * x).sum::<f32>().sqrt();
+        assert!((norm - 1.0).abs() < 1e-4);
+    }
+    // half mask changes the embedding
+    let mut half = vec![1.0f32; b * t];
+    for i in 0..b {
+        for j in t / 2..t {
+            half[i * t + j] = 0.0;
+        }
+    }
+    let emb2 = engine.embed(&params, &tokens, &Tensor::from_f32(vec![b, t], half)).unwrap();
+    let d: f32 = emb
+        .f32_data()
+        .unwrap()
+        .iter()
+        .zip(emb2.f32_data().unwrap())
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0, f32::max);
+    assert!(d > 1e-4);
+}
+
+#[test]
+fn train_step_dummy_learning_freezes_params() {
+    let Some((_c, engine)) = engine() else { return };
+    let params = ParamStore::init(&engine.model, 7).unwrap();
+    let snap_before = params.snapshot().unwrap();
+    let mut state = TrainState::new(params).unwrap();
+    let (b, t, _) = engine.train_shape("grpo").unwrap();
+    let mut rng = Rng::new(8);
+    let tokens = random_tokens(&mut rng, b, t, engine.model.vocab_size);
+    let mut mask = vec![1.0f32; b * t];
+    for i in 0..b {
+        mask[i * t] = 0.0;
+    }
+    let mask = Tensor::from_f32(vec![b, t], mask);
+    let (lp, _) = engine.token_logprobs(&state.params, &tokens).unwrap();
+    let adv = Tensor::from_f32(vec![b], vec![1.0, -1.0, 0.5, -0.5]);
+    // hyper: lr=0 (dummy learning)
+    let hyper = [0.0, 0.9, 0.999, 1e-8, 0.2, 1.0, 0.1, 0.0];
+    let metrics = engine.train_step("grpo", &mut state, &hyper, &[&tokens, &mask, &adv, &lp]).unwrap();
+    assert!(metrics.iter().all(|(_, v)| v.is_finite()), "{metrics:?}");
+    let snap_after = state.params.snapshot().unwrap();
+    for (a, b) in snap_before.iter().zip(&snap_after) {
+        assert_eq!(a, b, "lr=0 must freeze params");
+    }
+    assert_eq!(state.step, 1);
+}
+
+#[test]
+fn train_step_sft_reduces_nll() {
+    let Some((_c, engine)) = engine() else { return };
+    let params = ParamStore::init(&engine.model, 9).unwrap();
+    let mut state = TrainState::new(params).unwrap();
+    let (b, t, _) = engine.train_shape("sft").unwrap();
+    let mut rng = Rng::new(10);
+    let tokens = random_tokens(&mut rng, b, t, engine.model.vocab_size);
+    let mut mask = vec![1.0f32; b * t];
+    for i in 0..b {
+        mask[i * t] = 0.0;
+    }
+    let mask = Tensor::from_f32(vec![b, t], mask);
+    let hyper = [5e-3, 0.9, 0.999, 1e-8, 0.2, 1.0, 0.1, 0.0];
+    let mut first_loss = f32::NAN;
+    let mut last_loss = f32::NAN;
+    for i in 0..5 {
+        let metrics = engine.train_step("sft", &mut state, &hyper, &[&tokens, &mask]).unwrap();
+        let loss = metrics.iter().find(|(n, _)| n == "loss").unwrap().1;
+        if i == 0 {
+            first_loss = loss;
+        }
+        last_loss = loss;
+    }
+    assert!(last_loss < first_loss, "SFT loss should fall: {first_loss} -> {last_loss}");
+    assert_eq!(state.step, 5);
+}
+
+#[test]
+fn grpo_raises_positively_advantaged_logprob() {
+    let Some((_c, engine)) = engine() else { return };
+    let params = ParamStore::init(&engine.model, 11).unwrap();
+    let (b, t, _) = engine.train_shape("grpo").unwrap();
+    let mut rng = Rng::new(12);
+    let tokens = random_tokens(&mut rng, b, t, engine.model.vocab_size);
+    let mut mask = vec![1.0f32; b * t];
+    for i in 0..b {
+        mask[i * t] = 0.0;
+    }
+    let mask = Tensor::from_f32(vec![b, t], mask);
+    let (lp0, _) = engine.token_logprobs(&params, &tokens).unwrap();
+    let seq_lp = |lp: &Tensor| -> Vec<f32> {
+        (0..b)
+            .map(|i| {
+                lp.row_f32(i)
+                    .unwrap()
+                    .iter()
+                    .zip(mask.row_f32(i).unwrap())
+                    .map(|(l, m)| l * m)
+                    .sum()
+            })
+            .collect()
+    };
+    let before = seq_lp(&lp0);
+    let mut state = TrainState::new(params).unwrap();
+    let adv = Tensor::from_f32(vec![b], vec![2.0, -2.0, 0.0, 0.0]);
+    let hyper = [5e-3, 0.9, 0.999, 1e-8, 0.2, 1.0, 0.1, 0.0];
+    engine.train_step("grpo", &mut state, &hyper, &[&tokens, &mask, &adv, &lp0]).unwrap();
+    let (lp1, _) = engine.token_logprobs(&state.params, &tokens).unwrap();
+    let after = seq_lp(&lp1);
+    assert!(after[0] > before[0], "+adv seq should rise: {} -> {}", before[0], after[0]);
+    assert!(after[1] < before[1], "-adv seq should fall: {} -> {}", before[1], after[1]);
+}
+
+#[test]
+fn weight_sync_roundtrip_through_engine() {
+    let Some((_c, engine)) = engine() else { return };
+    let trainer_params = ParamStore::init(&engine.model, 13).unwrap();
+    let mut explorer_params = ParamStore::init(&engine.model, 14).unwrap();
+    assert!(trainer_params.l2_distance(&explorer_params).unwrap() > 0.0);
+
+    let sync = trinity_rft::model::MemorySync::new();
+    sync.publish(1, 100, trainer_params.snapshot().unwrap()).unwrap();
+    let update = sync.fetch_if_newer(0).unwrap().unwrap();
+    explorer_params.load_snapshot(&update.weights, update.version).unwrap();
+    assert_eq!(trainer_params.l2_distance(&explorer_params).unwrap(), 0.0);
+
+    // both produce identical logprobs now
+    let (b, t) = engine.seq_shape();
+    let mut rng = Rng::new(15);
+    let tokens = random_tokens(&mut rng, b, t, engine.model.vocab_size);
+    let (lp_a, _) = engine.token_logprobs(&trainer_params, &tokens).unwrap();
+    let (lp_b, _) = engine.token_logprobs(&explorer_params, &tokens).unwrap();
+    assert_eq!(lp_a.f32_data().unwrap(), lp_b.f32_data().unwrap());
+}
+
+#[test]
+fn checkpoint_roundtrip_through_engine() {
+    let Some((_c, engine)) = engine() else { return };
+    let params = ParamStore::init(&engine.model, 16).unwrap();
+    let dir = std::env::temp_dir().join(format!("trft_it_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("tiny.ckpt");
+    let snap = params.snapshot().unwrap();
+    let leaves: Vec<(String, Vec<usize>, &[f32])> = engine
+        .model
+        .params
+        .iter()
+        .zip(&snap)
+        .map(|(p, w)| (p.name.clone(), p.shape.clone(), w.as_slice()))
+        .collect();
+    trinity_rft::model::save_checkpoint(&path, "tiny", 7, 3, &leaves).unwrap();
+    let ck = trinity_rft::model::load_checkpoint(&path).unwrap();
+    assert_eq!(ck.step, 7);
+    let restored = ParamStore::from_snapshot(&engine.model, &ck.weights()).unwrap();
+    assert_eq!(params.l2_distance(&restored).unwrap(), 0.0);
+    std::fs::remove_dir_all(&dir).unwrap();
+}
