@@ -61,7 +61,7 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = RftConfig::default();
     cfg.mode = "train".into();
     cfg.algorithm = "dpo".into();
-    cfg.hyper.tau_or_beta = 0.5;
+    cfg.dpo.beta = 0.5;
     cfg.hyper.lr = 5e-4;
     // tiny dpo artifact trains 2 pairs/step
     cfg.total_steps = (results.len() as u64 / 2).max(1);

@@ -1,43 +1,64 @@
-//! The MIX algorithm (paper §3.2, Fig. 8): online GRPO on rollout
-//! experiences + SFT on expert trajectories, in one training loop.
+//! A custom algorithm as a *registration*, not a trainer fork (paper
+//! §3.2, Fig. 8; DESIGN.md §4).
 //!
-//! Exactly the paper's three plug-in pieces, in Rust form:
-//!   * `MixSampleStrategy`  — batch = usual buffer + expert buffer
-//!   * the `mix` loss       — (1-mu) * GRPO + mu * SFT (an L2 artifact)
-//!   * the `mix` algorithm  — wired through TrainerConfig
+//! The composable algorithm API decomposes an RL algorithm into
+//! pluggable modules — advantage fn, grouping policy, loss spec, extra
+//! inputs, linked sample strategy.  Here we assemble `mix_boosted`, a
+//! MIX variant (online GRPO on rollouts + SFT on expert rows) with
+//! std-normalized advantages, in ~20 lines of spec assembly:
 //!
-//! The expert buffer is filled from formatter-converted gold QA pairs.
+//!   * `GroupBaseline { std_normalize: true }` — the advantage module
+//!   * `LossSpec::pg_clip_mix()`  — (1-mu) * GRPO + mu * SFT (the
+//!     compiled `mix` L2 artifact, reused under the custom name)
+//!   * `IsExpertFlag`             — extra per-row input for the loss
+//!   * `MixFactory`               — batch = usual buffer + expert buffer
+//!
+//! Nothing under `rust/src/trainer/` is modified: the registry entry IS
+//! the algorithm.  The expert buffer is filled from formatter-converted
+//! gold QA pairs and handed to the session via `BuildOpts`.
 
 use std::sync::Arc;
-use std::time::Duration;
 
-use trinity_rft::buffer::{ExperienceBuffer, MixSampleStrategy, QueueBuffer};
-use trinity_rft::coordinator::{MathTaskSource, RftConfig, RftSession, TaskSource};
+use trinity_rft::buffer::{ExperienceBuffer, MixFactory, QueueBuffer};
+use trinity_rft::coordinator::{BuildOpts, MathTaskSource, RftConfig, RftSession, TaskSource};
 use trinity_rft::data::formatter::{FormatSpec, Formatter};
 use trinity_rft::envs::math::MathTaskGen;
-use trinity_rft::model::ParamStore;
-use trinity_rft::trainer::{Trainer, TrainerConfig};
+use trinity_rft::tokenizer::Tokenizer;
+use trinity_rft::trainer::{
+    AlgorithmRegistry, AlgorithmSpec, GroupBaseline, GroupingPolicy, IsExpertFlag, LossSpec,
+};
 use trinity_rft::util::json::Value;
 
 fn main() -> anyhow::Result<()> {
     trinity_rft::util::logging::init_from_env();
     let steps: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(6);
 
-    // a standard session provides engine + explorer + rollout buffer
+    // --- the custom algorithm: one registration, zero trainer edits ---
+    AlgorithmRegistry::global().register(
+        AlgorithmSpec::new("mix_boosted", "mix") // reuse the compiled `mix` artifact
+            .advantage(GroupBaseline { std_normalize: true })
+            .grouping(GroupingPolicy::GroupBaseline)
+            .old_logprobs(true)
+            .loss(LossSpec::pg_clip_mix())
+            .extra(IsExpertFlag)
+            .sample(MixFactory)
+            .about("MIX with std-normalized group advantages (example-registered)"),
+    );
+
     let mut cfg = RftConfig::default();
     cfg.mode = "both".into();
-    cfg.algorithm = "mix".into();
+    cfg.algorithm = "mix_boosted".into();
     cfg.total_steps = steps;
     cfg.batch_tasks = 1;
     cfg.repeat_times = 3; // 3 rollouts + 1 expert = tiny batch of 4
     cfg.max_new_tokens = 6;
     cfg.hyper.lr = 5e-4;
-    cfg.hyper.mu = 0.25; // SFT weight on the expert slice
-    let mut session = RftSession::build(cfg.clone(), None, None)?;
+    cfg.mix.mu = 0.25; // SFT weight on the expert slice
+    cfg.mix.expert_fraction = 0.25; // 1 of 4 per batch
 
     // --- expert buffer: gold answers as high-quality trajectories ---
     let formatter =
-        Formatter { spec: FormatSpec::default(), tokenizer: Arc::clone(&session.tokenizer) };
+        Formatter { spec: FormatSpec::default(), tokenizer: Arc::new(Tokenizer::new()) };
     let expert_buffer = Arc::new(QueueBuffer::new(4096));
     let mut gen = MathTaskGen::new(99, "expert");
     let mut experts = vec![];
@@ -52,23 +73,18 @@ fn main() -> anyhow::Result<()> {
     let n_expert = experts.len();
     expert_buffer.write(experts)?;
 
-    // --- swap in the MIX sample strategy (the paper's MixSampleStrategy) ---
-    let strategy = Box::new(MixSampleStrategy {
-        usual: Arc::clone(&session.buffer),
-        expert: expert_buffer,
-        expert_fraction: 0.25, // 1 of 4 per batch
-        timeout: Duration::from_secs(600),
-    });
-    let mut tcfg = TrainerConfig::new("mix");
-    tcfg.algorithm.hyper = cfg.effective_hyper();
-    let params = ParamStore::init(&session.engine.model, cfg.seed)?;
-    // explorer must start from the same weights
-    session.load_explorer_weights(&params.snapshot()?, 0)?;
-    session.trainer = Some(Trainer::new(Arc::clone(&session.engine), params, strategy, tcfg)?);
-
-    println!("MIX: {} expert trajectories + online rollouts, mu=0.25", n_expert);
+    // the spec's MixFactory picks the expert buffer up from BuildOpts
     let source: Arc<dyn TaskSource> = Arc::new(MathTaskSource::new(7, 1, 1, 3));
-    session.task_source = source;
+    let mut session = RftSession::build_with(
+        cfg,
+        BuildOpts {
+            task_source: Some(source),
+            expert_buffer: Some(expert_buffer),
+            ..Default::default()
+        },
+    )?;
+
+    println!("mix_boosted: {} expert trajectories + online rollouts, mu=0.25", n_expert);
     let report = session.run()?;
 
     println!("\nstep  loss      grpo_loss  sft_loss  expert_frac");

@@ -190,6 +190,33 @@ impl Experience {
     }
 }
 
+/// Group-mean-baseline advantages over a borrowed slice (the hot-path
+/// form [`ExperienceBatch::group_advantages`] delegates to — advantage
+/// fns call this every train step without cloning the batch).
+pub fn group_advantages(exps: &[Experience], normalize_std: bool) -> Vec<f32> {
+    use std::collections::HashMap;
+    let mut sums: HashMap<u64, (f32, f32, u32)> = HashMap::new();
+    for e in exps {
+        let s = sums.entry(e.group).or_default();
+        s.0 += e.reward;
+        s.1 += e.reward * e.reward;
+        s.2 += 1;
+    }
+    exps.iter()
+        .map(|e| {
+            let (sum, sq, n) = sums[&e.group];
+            let n = n as f32;
+            let mean = sum / n;
+            let mut adv = e.reward - mean;
+            if normalize_std && n > 1.0 {
+                let var = (sq / n - mean * mean).max(0.0);
+                adv /= var.sqrt() + 1e-4;
+            }
+            adv
+        })
+        .collect()
+}
+
 /// A batch grouped for training (helper used by sample strategies).
 #[derive(Debug, Default)]
 pub struct ExperienceBatch {
@@ -200,28 +227,7 @@ impl ExperienceBatch {
     /// Group-mean-baseline advantages (GRPO): experiences sharing a group
     /// id get `r - mean(group rewards)`, optionally std-normalized.
     pub fn group_advantages(&self, normalize_std: bool) -> Vec<f32> {
-        use std::collections::HashMap;
-        let mut sums: HashMap<u64, (f32, f32, u32)> = HashMap::new();
-        for e in &self.experiences {
-            let s = sums.entry(e.group).or_default();
-            s.0 += e.reward;
-            s.1 += e.reward * e.reward;
-            s.2 += 1;
-        }
-        self.experiences
-            .iter()
-            .map(|e| {
-                let (sum, sq, n) = sums[&e.group];
-                let n = n as f32;
-                let mean = sum / n;
-                let mut adv = e.reward - mean;
-                if normalize_std && n > 1.0 {
-                    let var = (sq / n - mean * mean).max(0.0);
-                    adv /= var.sqrt() + 1e-4;
-                }
-                adv
-            })
-            .collect()
+        group_advantages(&self.experiences, normalize_std)
     }
 
     pub fn mean_reward(&self) -> f64 {

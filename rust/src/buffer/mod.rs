@@ -9,10 +9,13 @@ pub mod queue;
 pub mod reader;
 pub mod store;
 
-pub use experience::{Experience, ExperienceBatch, Source};
+pub use experience::{group_advantages, Experience, ExperienceBatch, Source};
 pub use priority::{PriorityBuffer, UtilityWeights};
 pub use queue::QueueBuffer;
-pub use reader::{FifoStrategy, MixSampleStrategy, RandomStrategy, SampleStrategy};
+pub use reader::{
+    FifoFactory, FifoStrategy, MixFactory, MixSampleStrategy, RandomStrategy, SampleStrategy,
+    SampleStrategyFactory, StrategyCtx,
+};
 pub use store::FileStore;
 
 use std::time::Duration;

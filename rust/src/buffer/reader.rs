@@ -20,6 +20,64 @@ pub trait SampleStrategy: Send + Sync {
     fn name(&self) -> &'static str;
 }
 
+/// Runtime resources available when a strategy is instantiated for a
+/// session (see [`SampleStrategyFactory`]).
+pub struct StrategyCtx {
+    /// The session's main rollout buffer.
+    pub buffer: Arc<dyn ExperienceBuffer>,
+    /// A second buffer of expert trajectories, when the session provides
+    /// one (`BuildOpts::expert_buffer`).
+    pub expert_buffer: Option<Arc<dyn ExperienceBuffer>>,
+    /// Expert share of each batch (`algorithm.mix.expert_fraction`).
+    pub expert_fraction: f64,
+    pub timeout: Duration,
+}
+
+/// How an algorithm spec links to its sample strategy: the spec declares
+/// a factory, the coordinator supplies the [`StrategyCtx`] at session
+/// build time.  This moves strategy selection out of ad-hoc call sites
+/// and into the algorithm definition (paper §3.2's linked
+/// SampleStrategy).
+pub trait SampleStrategyFactory: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn build(&self, ctx: &StrategyCtx) -> Result<Box<dyn SampleStrategy>>;
+}
+
+/// Plain FIFO consumption from the session buffer (the default).
+pub struct FifoFactory;
+
+impl SampleStrategyFactory for FifoFactory {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+    fn build(&self, ctx: &StrategyCtx) -> Result<Box<dyn SampleStrategy>> {
+        Ok(Box::new(FifoStrategy { buffer: Arc::clone(&ctx.buffer), timeout: ctx.timeout }))
+    }
+}
+
+/// Expert-mixing strategy for MIX-style algorithms: composes the usual
+/// buffer with the context's expert buffer.  Sessions without an expert
+/// buffer fall back to plain FIFO (every row then counts as a rollout,
+/// matching the seed behavior of running `mix` on one buffer).
+pub struct MixFactory;
+
+impl SampleStrategyFactory for MixFactory {
+    fn name(&self) -> &'static str {
+        "mix"
+    }
+    fn build(&self, ctx: &StrategyCtx) -> Result<Box<dyn SampleStrategy>> {
+        match &ctx.expert_buffer {
+            Some(expert) => Ok(Box::new(MixSampleStrategy {
+                usual: Arc::clone(&ctx.buffer),
+                expert: Arc::clone(expert),
+                expert_fraction: ctx.expert_fraction,
+                timeout: ctx.timeout,
+            })),
+            None => FifoFactory.build(ctx),
+        }
+    }
+}
+
 /// Plain FIFO consumption from one buffer (the default strategy).
 pub struct FifoStrategy {
     pub buffer: Arc<dyn ExperienceBuffer>,
@@ -126,6 +184,24 @@ mod tests {
         assert_eq!(experts, 2);
         // experts come from the expert buffer
         assert!(b.iter().filter(|e| e.source == Source::Expert).all(|e| e.task_id.starts_with('e')));
+    }
+
+    #[test]
+    fn factories_build_from_context() {
+        let ctx = StrategyCtx {
+            buffer: filled_queue(4, "u"),
+            expert_buffer: None,
+            expert_fraction: 0.25,
+            timeout: Duration::from_millis(20),
+        };
+        // mix without an expert buffer falls back to fifo
+        assert_eq!(MixFactory.build(&ctx).unwrap().name(), "fifo");
+        assert_eq!(FifoFactory.build(&ctx).unwrap().name(), "fifo");
+        let ctx = StrategyCtx { expert_buffer: Some(filled_queue(4, "e")), ..ctx };
+        let s = MixFactory.build(&ctx).unwrap();
+        assert_eq!(s.name(), "mix");
+        let b = s.sample(0, 4).unwrap();
+        assert_eq!(b.iter().filter(|e| e.source == Source::Expert).count(), 1);
     }
 
     #[test]

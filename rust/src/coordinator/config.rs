@@ -5,9 +5,50 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::trainer::HyperParams;
+use crate::trainer::{AlgorithmSpec, HyperParams, TauSlot};
 use crate::util::json::Value;
 use crate::util::yamlite;
+
+use super::modes::RftMode;
+
+/// Typed OPMD section (`algorithm.opmd.*`): the mirror-descent
+/// temperature, formerly overloaded into the shared tau/beta hyper slot.
+#[derive(Debug, Clone)]
+pub struct OpmdSection {
+    pub tau: f32,
+}
+
+impl Default for OpmdSection {
+    fn default() -> Self {
+        OpmdSection { tau: 1.0 }
+    }
+}
+
+/// Typed DPO section (`algorithm.dpo.*`).
+#[derive(Debug, Clone)]
+pub struct DpoSection {
+    pub beta: f32,
+}
+
+impl Default for DpoSection {
+    fn default() -> Self {
+        DpoSection { beta: 1.0 }
+    }
+}
+
+/// Typed MIX section (`algorithm.mix.*`): the SFT weight on expert rows
+/// and the expert share of each sampled batch.
+#[derive(Debug, Clone)]
+pub struct MixSection {
+    pub mu: f32,
+    pub expert_fraction: f64,
+}
+
+impl Default for MixSection {
+    fn default() -> Self {
+        MixSection { mu: 0.1, expert_fraction: 0.25 }
+    }
+}
 
 #[derive(Debug, Clone)]
 pub struct RftConfig {
@@ -15,9 +56,14 @@ pub struct RftConfig {
     pub mode: String,
     pub model_preset: String,
     pub seed: u64,
-    /// Algorithm name (grpo, ppo, sft, dpo, mix, opmd_*).
+    /// Registered algorithm name (see `trinity algorithms list`).
     pub algorithm: String,
+    /// Base optimizer/loss hypers.  The tau/beta and mu ABI slots are
+    /// filled from the typed sections below by [`RftConfig::effective_hyper`].
     pub hyper: HyperParams,
+    pub opmd: OpmdSection,
+    pub dpo: DpoSection,
+    pub mix: MixSection,
     pub adv_std_normalize: bool,
     /// Dummy learning: force lr = 0 (Tables 1-2 profiling).
     pub dummy_learning: bool,
@@ -69,6 +115,9 @@ impl Default for RftConfig {
             seed: 42,
             algorithm: "grpo".into(),
             hyper: HyperParams::default(),
+            opmd: OpmdSection::default(),
+            dpo: DpoSection::default(),
+            mix: MixSection::default(),
             adv_std_normalize: false,
             dummy_learning: false,
             total_steps: 10,
@@ -142,10 +191,24 @@ impl RftConfig {
         s("algorithm.name", &mut cfg.algorithm);
         f("algorithm.lr", &mut cfg.hyper.lr);
         f("algorithm.clip_eps", &mut cfg.hyper.clip_eps);
-        f("algorithm.tau", &mut cfg.hyper.tau_or_beta);
-        f("algorithm.beta", &mut cfg.hyper.tau_or_beta);
-        f("algorithm.mu", &mut cfg.hyper.mu);
         f("algorithm.kl_coef", &mut cfg.hyper.kl_coef);
+        // back-compat first: the seed's flat keys that overloaded the
+        // shared tau/beta and mu hyper slots still parse into the typed
+        // sections (and into the raw slot, for custom algorithms that
+        // declare TauSlot::Unused) — the typed sections below take
+        // precedence when both spellings are present
+        f("algorithm.tau", &mut cfg.opmd.tau);
+        f("algorithm.tau", &mut cfg.hyper.tau_or_beta);
+        f("algorithm.beta", &mut cfg.dpo.beta);
+        f("algorithm.beta", &mut cfg.hyper.tau_or_beta);
+        f("algorithm.mu", &mut cfg.mix.mu);
+        // typed per-algorithm sections
+        f("algorithm.opmd.tau", &mut cfg.opmd.tau);
+        f("algorithm.dpo.beta", &mut cfg.dpo.beta);
+        f("algorithm.mix.mu", &mut cfg.mix.mu);
+        if let Some(x) = v.path("algorithm.mix.expert_fraction").and_then(Value::as_f64) {
+            cfg.mix.expert_fraction = x;
+        }
         b("algorithm.adv_std_normalize", &mut cfg.adv_std_normalize);
         b("algorithm.dummy_learning", &mut cfg.dummy_learning);
 
@@ -194,17 +257,15 @@ impl RftConfig {
     }
 
     pub fn validate(&self) -> Result<()> {
-        match self.mode.as_str() {
-            "both" | "async" | "explore" | "train" | "bench" => {}
-            other => bail!("unknown mode '{other}'"),
-        }
+        // case-insensitive, lists valid modes on error
+        let mode = RftMode::parse(&self.mode)?;
         if self.sync_interval == 0 {
             bail!("sync.interval must be >= 1");
         }
         if self.explorer_count == 0 {
             bail!("explorer.count must be >= 1");
         }
-        if self.mode == "both" && self.explorer_count > 1 {
+        if mode == RftMode::Both && self.explorer_count > 1 {
             bail!("multi-explorer requires mode=async (paper §2.1.1)");
         }
         match self.workflow.as_str() {
@@ -214,10 +275,19 @@ impl RftConfig {
         Ok(())
     }
 
-    /// Effective hyper-parameters: dummy learning zeroes the lr, keeping
-    /// all compute identical (the paper's profiling methodology).
-    pub fn effective_hyper(&self) -> HyperParams {
+    /// Effective hyper-parameters for a resolved algorithm spec: the
+    /// typed per-algorithm sections fill the ABI slots the old config
+    /// overloaded (tau/beta via the spec's [`TauSlot`], mu from the MIX
+    /// section), and dummy learning zeroes the lr, keeping all compute
+    /// identical (the paper's profiling methodology).
+    pub fn effective_hyper(&self, spec: &AlgorithmSpec) -> HyperParams {
         let mut h = self.hyper.clone();
+        h.tau_or_beta = match spec.loss.tau_slot {
+            TauSlot::OpmdTau => self.opmd.tau,
+            TauSlot::DpoBeta => self.dpo.beta,
+            TauSlot::Unused => h.tau_or_beta,
+        };
+        h.mu = self.mix.mu;
         if self.dummy_learning {
             h.lr = 0.0;
         }
@@ -276,7 +346,8 @@ eval:
         assert_eq!(cfg.explorer_threads, 4);
         assert_eq!(cfg.eval_every, 5);
         assert!(cfg.dummy_learning);
-        assert_eq!(cfg.effective_hyper().lr, 0.0);
+        let spec = crate::trainer::AlgorithmRegistry::global().get(&cfg.algorithm).unwrap();
+        assert_eq!(cfg.effective_hyper(&spec).lr, 0.0);
     }
 
     #[test]
@@ -284,6 +355,53 @@ eval:
         let cfg = RftConfig::from_value(&yamlite::parse("mode: both\n").unwrap()).unwrap();
         assert_eq!(cfg.model_preset, "tiny");
         assert_eq!(cfg.sync_interval, 1);
+    }
+
+    #[test]
+    fn mode_parse_is_case_insensitive() {
+        let cfg = RftConfig::from_value(&yamlite::parse("mode: BOTH\n").unwrap()).unwrap();
+        assert_eq!(cfg.mode, "BOTH"); // preserved verbatim, parsed case-insensitively
+        assert!(RftConfig::from_value(&yamlite::parse("mode: Train\n").unwrap()).is_ok());
+    }
+
+    #[test]
+    fn typed_sections_fill_abi_slots_per_spec() {
+        let yaml = "\
+mode: train
+algorithm:
+  name: opmd_kimi
+  opmd:
+    tau: 0.7
+  dpo:
+    beta: 0.3
+  mix:
+    mu: 0.4
+    expert_fraction: 0.5
+";
+        let cfg = RftConfig::from_value(&yamlite::parse(yaml).unwrap()).unwrap();
+        assert!((cfg.opmd.tau - 0.7).abs() < 1e-6);
+        assert!((cfg.dpo.beta - 0.3).abs() < 1e-6);
+        assert!((cfg.mix.expert_fraction - 0.5).abs() < 1e-9);
+        let reg = crate::trainer::AlgorithmRegistry::global();
+        // the tau/beta slot is routed by the spec's TauSlot declaration
+        let h = cfg.effective_hyper(&reg.get("opmd_kimi").unwrap());
+        assert!((h.tau_or_beta - 0.7).abs() < 1e-6);
+        let h = cfg.effective_hyper(&reg.get("dpo").unwrap());
+        assert!((h.tau_or_beta - 0.3).abs() < 1e-6);
+        assert!((h.mu - 0.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn old_overloaded_keys_still_parse() {
+        // the seed's flat keys map into the typed sections
+        let yaml = "mode: train\nalgorithm:\n  name: dpo\n  beta: 0.5\n  tau: 2.0\n  mu: 0.3\n";
+        let cfg = RftConfig::from_value(&yamlite::parse(yaml).unwrap()).unwrap();
+        assert!((cfg.dpo.beta - 0.5).abs() < 1e-6);
+        assert!((cfg.opmd.tau - 2.0).abs() < 1e-6);
+        assert!((cfg.mix.mu - 0.3).abs() < 1e-6);
+        let reg = crate::trainer::AlgorithmRegistry::global();
+        assert!((cfg.effective_hyper(&reg.get("dpo").unwrap()).tau_or_beta - 0.5).abs() < 1e-6);
+        assert!((cfg.effective_hyper(&reg.get("opmd_simple").unwrap()).tau_or_beta - 2.0).abs() < 1e-6);
     }
 
     #[test]
@@ -295,5 +413,20 @@ eval:
             &yamlite::parse("mode: both\nexplorer:\n  count: 2\n").unwrap()
         )
         .is_err());
+        // the multi-explorer guard applies to the parsed mode, so case
+        // variants cannot sneak past it
+        assert!(RftConfig::from_value(
+            &yamlite::parse("mode: BOTH\nexplorer:\n  count: 2\n").unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn typed_sections_take_precedence_over_flat_keys() {
+        // mid-migration config carrying both spellings: the typed
+        // section wins
+        let yaml = "mode: train\nalgorithm:\n  name: opmd_kimi\n  tau: 2.0\n  opmd:\n    tau: 0.7\n";
+        let cfg = RftConfig::from_value(&yamlite::parse(yaml).unwrap()).unwrap();
+        assert!((cfg.opmd.tau - 0.7).abs() < 1e-6);
     }
 }

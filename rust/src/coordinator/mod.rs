@@ -7,7 +7,7 @@ pub mod modes;
 pub mod monitor;
 pub mod tasks;
 
-pub use config::RftConfig;
-pub use modes::{run_mode, ModeReport, RftMode, RftSession};
+pub use config::{DpoSection, MixSection, OpmdSection, RftConfig};
+pub use modes::{run_mode, BuildOpts, ModeReport, RftMode, RftSession};
 pub use monitor::Monitor;
 pub use tasks::{AlfworldTaskSource, MathTaskSource, PrioritizedTaskSource, TaskSource};

@@ -20,7 +20,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use crate::buffer::{ExperienceBuffer, FifoStrategy, QueueBuffer};
+use crate::buffer::{ExperienceBuffer, QueueBuffer, StrategyCtx};
 use crate::data::ShapingBuffer;
 use crate::exec::CancellationToken;
 use crate::explorer::{
@@ -30,7 +30,7 @@ use crate::explorer::{
 use crate::model::{CheckpointSync, MemorySync, ParamStore, WeightSync};
 use crate::runtime::{Manifest, ModelEngine, RuntimeClient};
 use crate::tokenizer::Tokenizer;
-use crate::trainer::{StepMetrics, Trainer, TrainerConfig};
+use crate::trainer::{AlgorithmRegistry, StepMetrics, Trainer, TrainerConfig};
 
 use super::config::RftConfig;
 use super::monitor::Monitor;
@@ -49,13 +49,14 @@ pub enum RftMode {
 }
 
 impl RftMode {
+    /// Case-insensitive mode lookup.
     pub fn parse(s: &str) -> Result<RftMode> {
-        Ok(match s {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
             "both" => RftMode::Both,
             "async" | "explore" => RftMode::Async,
             "train" => RftMode::TrainOnly,
             "bench" => RftMode::Bench,
-            other => bail!("unknown mode '{other}'"),
+            _ => bail!("unknown mode '{s}' (valid modes: both, async, explore, train, bench)"),
         })
     }
 }
@@ -128,6 +129,17 @@ pub struct RftSession {
     timeline: Arc<Mutex<Vec<TimelineEvent>>>,
 }
 
+/// Optional overrides for [`RftSession::build_with`]: data pipelines and
+/// custom-algorithm resources plug in here.
+#[derive(Default)]
+pub struct BuildOpts {
+    pub task_source: Option<Arc<dyn TaskSource>>,
+    pub processor: Option<Arc<dyn crate::data::ExperienceProcessor>>,
+    /// Expert-trajectory buffer for algorithms whose sample strategy
+    /// mixes a second source (MIX-family specs).
+    pub expert_buffer: Option<Arc<dyn ExperienceBuffer>>,
+}
+
 impl RftSession {
     /// Wire up a session from config.  `task_source` / `processor`
     /// override the defaults (data pipelines plug in here).
@@ -136,6 +148,12 @@ impl RftSession {
         task_source: Option<Arc<dyn TaskSource>>,
         processor: Option<Arc<dyn crate::data::ExperienceProcessor>>,
     ) -> Result<RftSession> {
+        Self::build_with(cfg, BuildOpts { task_source, processor, expert_buffer: None })
+    }
+
+    /// Wire up a session from config with the full override set.
+    pub fn build_with(cfg: RftConfig, opts: BuildOpts) -> Result<RftSession> {
+        let BuildOpts { task_source, processor, expert_buffer } = opts;
         let manifest = Arc::new(match &cfg.artifacts_dir {
             Some(d) => Manifest::load(d)?,
             None => Manifest::load_default().context("artifacts not built (run `make artifacts`)")?,
@@ -225,14 +243,18 @@ impl RftSession {
             },
         };
 
-        // trainer
-        let mut tcfg = TrainerConfig::new(&cfg.algorithm);
-        tcfg.algorithm.hyper = cfg.effective_hyper();
+        // trainer: resolve the algorithm spec from the registry; the
+        // spec links its own sample strategy (paper §3.2)
+        let spec = AlgorithmRegistry::global().get(&cfg.algorithm)?;
+        let mut tcfg = TrainerConfig::from_spec(Arc::clone(&spec));
+        tcfg.algorithm.hyper = cfg.effective_hyper(&spec);
         tcfg.algorithm.adv_std_normalize = cfg.adv_std_normalize;
-        let strategy = Box::new(FifoStrategy {
+        let strategy = spec.sample.build(&StrategyCtx {
             buffer: Arc::clone(&buffer),
+            expert_buffer,
+            expert_fraction: cfg.mix.expert_fraction,
             timeout: Duration::from_secs(600),
-        });
+        })?;
         let trainer = Trainer::new(Arc::clone(&engine), trainer_params, strategy, tcfg)?;
 
         Ok(RftSession {
@@ -665,5 +687,29 @@ impl RftSession {
             .context("trainer already consumed")?
             .load_weights(weights, 1, true)?;
         self.load_explorer_weights(weights, 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_is_case_insensitive() {
+        assert_eq!(RftMode::parse("both").unwrap(), RftMode::Both);
+        assert_eq!(RftMode::parse("BOTH").unwrap(), RftMode::Both);
+        assert_eq!(RftMode::parse(" Async ").unwrap(), RftMode::Async);
+        assert_eq!(RftMode::parse("Explore").unwrap(), RftMode::Async);
+        assert_eq!(RftMode::parse("TRAIN").unwrap(), RftMode::TrainOnly);
+        assert_eq!(RftMode::parse("Bench").unwrap(), RftMode::Bench);
+    }
+
+    #[test]
+    fn mode_parse_error_lists_valid_modes() {
+        let err = RftMode::parse("warp").unwrap_err().to_string();
+        assert!(err.contains("unknown mode 'warp'"), "{err}");
+        for valid in ["both", "async", "explore", "train", "bench"] {
+            assert!(err.contains(valid), "error should list '{valid}': {err}");
+        }
     }
 }

@@ -19,8 +19,11 @@
 //!   priority views, sampling strategies, delayed rewards.
 //! * [`explorer`] — workflows, workflow runners with timeout/retry/skip,
 //!   and the continuous-batching generation engine.
-//! * [`trainer`] — algorithm registry (GRPO/PPO/SFT/DPO/MIX/OPMD×3) and
-//!   the training loop.
+//! * [`trainer`] — the composable algorithm API: specs assembled from
+//!   advantage fns, loss specs, grouping policies and linked sample
+//!   strategies, registered in the global registry
+//!   (GRPO/PPO/SFT/DPO/MIX/OPMD×3 are all registrations; see
+//!   DESIGN.md §4), plus the algorithm-agnostic training loop.
 //! * [`coordinator`] — RFT modes, launcher, monitor, typed config.
 //! * [`data`] — task curation, experience shaping, agentic pipelines,
 //!   human-in-the-loop simulation, lineage.

@@ -2,9 +2,10 @@
 //! checkpoints, evaluate OPMD variants, or inspect artifacts.
 //!
 //! ```text
-//! trinity run   --config configs/gsm8k_grpo.yaml
-//! trinity bench --preset tiny --tiers math500s,amcs --tasks 16 --k 4
-//! trinity opmd  --steps 400 --group 8
+//! trinity run        --config configs/gsm8k_grpo.yaml
+//! trinity bench      --preset tiny --tiers math500s,amcs --tasks 16 --k 4
+//! trinity opmd       --steps 400 --group 8
+//! trinity algorithms list
 //! trinity info
 //! ```
 
@@ -14,6 +15,7 @@ use anyhow::Result;
 use trinity_rft::coordinator::{RftConfig, RftSession};
 use trinity_rft::envs::bandit::{run_learning, Bandit, OpmdVariant};
 use trinity_rft::runtime::Manifest;
+use trinity_rft::trainer::AlgorithmRegistry;
 use trinity_rft::util::cli::{arg, arg_default, flag, Cli, CliError};
 use trinity_rft::util::timeseries;
 
@@ -58,7 +60,43 @@ fn cli() -> Cli {
                 arg_default("iters", "iterations per artifact", "30"),
             ],
         )
+        .command(
+            "algorithms",
+            "list the algorithm registry (`trinity algorithms list`)",
+            vec![],
+        )
         .command("info", "show artifact manifest summary", vec![])
+}
+
+fn cmd_algorithms() -> Result<()> {
+    let registry = AlgorithmRegistry::global();
+    let specs = registry.specs();
+    println!("{} registered algorithms:\n", specs.len());
+    println!(
+        "{:<16} {:<14} {:<16} {:<16} {:<17} {:<16} {:<8} {}",
+        "name", "artifact", "advantage", "grouping", "pairing", "loss", "sampler", "tau slot"
+    );
+    for s in &specs {
+        println!(
+            "{:<16} {:<14} {:<16} {:<16} {:<17} {:<16} {:<8} {}",
+            s.name,
+            s.artifact,
+            s.advantage.name(),
+            s.grouping.as_str(),
+            s.pairing.as_str(),
+            s.loss.policy.as_str(),
+            s.sample.name(),
+            s.loss.tau_slot.as_str()
+        );
+        if !s.about.is_empty() {
+            println!("{:<16}   {}", "", s.about);
+        }
+    }
+    println!(
+        "\ncustom algorithms: AlgorithmRegistry::global().register(AlgorithmSpec::new(..)) — \
+         see examples/mix_algorithm.rs and DESIGN.md §4"
+    );
+    Ok(())
 }
 
 fn cmd_run(m: &trinity_rft::util::cli::Matches) -> Result<()> {
@@ -279,6 +317,7 @@ fn main() {
         "bench" => cmd_bench(&matches),
         "opmd" => cmd_opmd(&matches),
         "perf" => cmd_perf(&matches),
+        "algorithms" => cmd_algorithms(),
         "info" => cmd_info(),
         _ => unreachable!(),
     };

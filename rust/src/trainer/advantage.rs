@@ -1,0 +1,150 @@
+//! Advantage functions — the first pluggable module of an
+//! [`AlgorithmSpec`](super::spec::AlgorithmSpec) (paper §3.2).
+//!
+//! An advantage function turns a sampled batch into the per-sequence
+//! scalar the train artifact consumes as its advantage/reward input.
+//! Algorithms whose artifacts take no such input (SFT, DPO) use
+//! [`NoAdvantage`].  Custom algorithms implement [`AdvantageFn`] and
+//! register a spec — no trainer changes required.
+
+use crate::buffer::{group_advantages, Experience, Source};
+
+/// Per-sequence advantage/reward computation.
+///
+/// `std_normalize` is the config-level normalization override
+/// (`algorithm.adv_std_normalize`); it is only meaningful for
+/// group-baseline-style advantages and implementations are free to
+/// ignore it.
+pub trait AdvantageFn: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// The per-sequence scalars for the artifact's advantage/reward
+    /// input, or `None` if the algorithm's artifact takes no such input.
+    fn compute(&self, exps: &[Experience], std_normalize: bool) -> Option<Vec<f32>>;
+}
+
+/// The artifact takes no advantage/reward tensor (SFT, DPO).
+pub struct NoAdvantage;
+
+impl AdvantageFn for NoAdvantage {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+    fn compute(&self, _exps: &[Experience], _std_normalize: bool) -> Option<Vec<f32>> {
+        None
+    }
+}
+
+/// Group-mean-baseline advantages (GRPO): `r - mean(group rewards)`,
+/// optionally std-normalized.  The spec-level `std_normalize` is OR-ed
+/// with the config-level override.
+pub struct GroupBaseline {
+    pub std_normalize: bool,
+}
+
+impl AdvantageFn for GroupBaseline {
+    fn name(&self) -> &'static str {
+        "group_baseline"
+    }
+    fn compute(&self, exps: &[Experience], std_normalize: bool) -> Option<Vec<f32>> {
+        Some(group_advantages(exps, self.std_normalize || std_normalize))
+    }
+}
+
+/// Raw rewards passed straight through (OPMD family: the artifact's
+/// fused loss applies its own in-kernel group baseline over the
+/// `[b/k, k]` reshape, so the host must not pre-subtract anything).
+pub struct RawReward;
+
+impl AdvantageFn for RawReward {
+    fn name(&self) -> &'static str {
+        "raw_reward"
+    }
+    fn compute(&self, exps: &[Experience], _std_normalize: bool) -> Option<Vec<f32>> {
+        Some(exps.iter().map(|e| e.reward).collect())
+    }
+}
+
+/// Extra per-sequence input tensors appended after the standard
+/// tokens/mask/advantage/logprob block (e.g. MIX's `is_expert` flag).
+pub trait ExtraInputFn: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn compute(&self, exps: &[Experience]) -> Vec<f32>;
+}
+
+/// 1.0 for experiences from non-explorer sources (expert / synthetic /
+/// human trajectories) — the MIX loss routes these through its SFT term.
+pub struct IsExpertFlag;
+
+impl ExtraInputFn for IsExpertFlag {
+    fn name(&self) -> &'static str {
+        "is_expert"
+    }
+    fn compute(&self, exps: &[Experience]) -> Vec<f32> {
+        exps.iter()
+            .map(|e| {
+                if matches!(e.source, Source::Expert | Source::Synthetic | Source::Human) {
+                    1.0
+                } else {
+                    0.0
+                }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn exp(group: u64, reward: f32, source: Source) -> Experience {
+        let mut e = Experience::new(&format!("g{group}"), vec![1, 2, 3], 1, reward);
+        e.group = group;
+        e.source = source;
+        e
+    }
+
+    #[test]
+    fn group_baseline_subtracts_group_mean() {
+        let exps = vec![
+            exp(1, 1.0, Source::Explorer),
+            exp(1, 0.0, Source::Explorer),
+            exp(2, 0.5, Source::Explorer),
+            exp(2, 0.5, Source::Explorer),
+        ];
+        let adv = GroupBaseline { std_normalize: false }.compute(&exps, false).unwrap();
+        assert!((adv[0] - 0.5).abs() < 1e-6);
+        assert!((adv[1] + 0.5).abs() < 1e-6);
+        assert_eq!(adv[2], 0.0);
+    }
+
+    #[test]
+    fn config_override_turns_on_normalization() {
+        let exps = vec![exp(1, 1.0, Source::Explorer), exp(1, 0.0, Source::Explorer)];
+        let raw = GroupBaseline { std_normalize: false }.compute(&exps, false).unwrap();
+        let norm = GroupBaseline { std_normalize: false }.compute(&exps, true).unwrap();
+        assert!((raw[0] - 0.5).abs() < 1e-6);
+        assert!(norm[0] > raw[0], "std 0.5 divides the advantage up: {norm:?}");
+    }
+
+    #[test]
+    fn raw_reward_passes_through() {
+        let exps = vec![exp(1, 0.3, Source::Explorer), exp(1, 0.9, Source::Explorer)];
+        assert_eq!(RawReward.compute(&exps, true).unwrap(), vec![0.3, 0.9]);
+    }
+
+    #[test]
+    fn no_advantage_emits_nothing() {
+        assert!(NoAdvantage.compute(&[], false).is_none());
+    }
+
+    #[test]
+    fn is_expert_flags_non_explorer_sources() {
+        let exps = vec![
+            exp(1, 0.0, Source::Expert),
+            exp(1, 0.0, Source::Explorer),
+            exp(2, 0.0, Source::Synthetic),
+            exp(2, 0.0, Source::Human),
+        ];
+        assert_eq!(IsExpertFlag.compute(&exps), vec![1.0, 0.0, 1.0, 1.0]);
+    }
+}

@@ -1,0 +1,295 @@
+//! The generic batch builder: one structural pipeline driven entirely by
+//! the [`AlgorithmSpec`](super::spec::AlgorithmSpec) — no per-algorithm
+//! `match` dispatch.  Single-row algorithms pack
+//! `tokens, mask [, advantage] [, old_logprobs] [, extras...]`;
+//! preference-pair algorithms pack the chosen/rejected DPO layout.
+
+use anyhow::{bail, ensure, Result};
+
+use crate::buffer::Experience;
+use crate::runtime::Tensor;
+
+use super::spec::{AlgorithmConfig, Pairing};
+
+/// A built training batch: the artifact's data tensors plus builder
+/// diagnostics surfaced into `StepMetrics.named`.
+#[derive(Debug)]
+pub struct BuiltBatch {
+    pub tensors: Vec<Tensor>,
+    /// Sequences longer than the artifact's `t` bucket that were
+    /// truncated during packing (reported as `truncated_seqs`).
+    pub truncated_seqs: usize,
+}
+
+/// Pack tokens / per-token arrays into fixed [b, t] tensors, truncating
+/// long sequences and padding short ones.  Index 0's mask is forced to 0
+/// (the logprob convention: lp[:, 0] is undefined).  Returns the packed
+/// tensors plus the number of truncated sequences.
+fn pack(exps: &[Experience], b: usize, t: usize) -> (Tensor, Tensor, Tensor, usize) {
+    let mut tokens = vec![0i32; b * t];
+    let mut mask = vec![0f32; b * t];
+    let mut old_lp = vec![0f32; b * t];
+    let mut truncated = 0usize;
+    for (i, e) in exps.iter().enumerate().take(b) {
+        if e.tokens.len() > t {
+            truncated += 1;
+        }
+        let n = e.tokens.len().min(t);
+        for j in 0..n {
+            tokens[i * t + j] = e.tokens[j];
+            mask[i * t + j] = e.loss_mask[j];
+            old_lp[i * t + j] = e.logprobs[j];
+        }
+        mask[i * t] = 0.0;
+    }
+    (
+        Tensor::from_i32(vec![b, t], tokens),
+        Tensor::from_f32(vec![b, t], mask),
+        Tensor::from_f32(vec![b, t], old_lp),
+        truncated,
+    )
+}
+
+/// Sort experiences so same-group rollouts are contiguous and complete
+/// groups of size `k` (required by the OPMD artifacts' group reshape).
+fn order_groups(exps: &mut [Experience], k: usize) -> Result<()> {
+    ensure!(k >= 1, "group size must be >= 1");
+    exps.sort_by_key(|e| e.group);
+    ensure!(exps.len() % k == 0, "batch of {} not divisible by group size {k}", exps.len());
+    for chunk in exps.chunks(k) {
+        let g = chunk[0].group;
+        ensure!(
+            chunk.iter().all(|e| e.group == g),
+            "incomplete group {g}: complete-group batches need {k} rollouts per task"
+        );
+    }
+    Ok(())
+}
+
+/// Build the data tensor list for a configured algorithm from a sampled
+/// batch.  `(b, t, k)` is the train artifact's shape bucket.
+pub fn build_batch(
+    cfg: &AlgorithmConfig,
+    mut exps: Vec<Experience>,
+    b: usize,
+    t: usize,
+    k: usize,
+) -> Result<BuiltBatch> {
+    let spec = &cfg.spec;
+    let expected = spec.experiences_per_step(b);
+    ensure!(
+        exps.len() == expected,
+        "algorithm '{}' needs exactly {expected} experiences, got {}",
+        spec.name,
+        exps.len()
+    );
+    match spec.pairing {
+        Pairing::PreferencePairs => build_preference_batch(&exps, b, t),
+        Pairing::Single => {
+            if spec.grouping.requires_complete_groups() {
+                order_groups(&mut exps, k)?;
+            }
+            let adv = spec.advantage.compute(&exps, cfg.adv_std_normalize);
+            let (tokens, mask, old_lp, truncated_seqs) = pack(&exps, b, t);
+            let mut tensors = vec![tokens, mask];
+            if let Some(a) = adv {
+                ensure!(
+                    a.len() == b,
+                    "advantage fn '{}' produced {} values for batch of {b}",
+                    spec.advantage.name(),
+                    a.len()
+                );
+                tensors.push(Tensor::from_f32(vec![b], a));
+            }
+            if spec.old_logprobs {
+                tensors.push(old_lp);
+            }
+            for extra in &spec.extras {
+                let vals = extra.compute(&exps);
+                ensure!(
+                    vals.len() == b,
+                    "extra input '{}' produced {} values for batch of {b}",
+                    extra.name(),
+                    vals.len()
+                );
+                tensors.push(Tensor::from_f32(vec![b], vals));
+            }
+            Ok(BuiltBatch { tensors, truncated_seqs })
+        }
+    }
+}
+
+/// The DPO layout: chosen/rejected tokens + masks + rollout reference
+/// sequence log-probs, aligned by pair id.
+fn build_preference_batch(exps: &[Experience], b: usize, t: usize) -> Result<BuiltBatch> {
+    let mut chosen: Vec<&Experience> = vec![];
+    let mut rejected: Vec<&Experience> = vec![];
+    for e in exps {
+        match e.metadata.get("role").and_then(crate::util::json::Value::as_str) {
+            Some("chosen") => chosen.push(e),
+            Some("rejected") => rejected.push(e),
+            _ => bail!("preference-pair experiences need metadata.role chosen/rejected"),
+        }
+    }
+    ensure!(
+        chosen.len() == rejected.len() && chosen.len() == b,
+        "preference batch must be {b}/{b} chosen/rejected"
+    );
+    // align pairs by pair id
+    let pair_of = |e: &Experience| e.meta_f64("pair").unwrap_or(0.0) as u64;
+    chosen.sort_by_key(|e| pair_of(e));
+    rejected.sort_by_key(|e| pair_of(e));
+    for (c, r) in chosen.iter().zip(&rejected) {
+        ensure!(pair_of(c) == pair_of(r), "unmatched preference pair ids");
+    }
+    let cvec: Vec<Experience> = chosen.into_iter().cloned().collect();
+    let rvec: Vec<Experience> = rejected.into_iter().cloned().collect();
+    let (tok_c, mask_c, _, trunc_c) = pack(&cvec, b, t);
+    let (tok_r, mask_r, _, trunc_r) = pack(&rvec, b, t);
+    let ref_c: Vec<f32> = cvec.iter().map(Experience::rollout_seq_logprob).collect();
+    let ref_r: Vec<f32> = rvec.iter().map(Experience::rollout_seq_logprob).collect();
+    Ok(BuiltBatch {
+        tensors: vec![
+            tok_c,
+            mask_c,
+            tok_r,
+            mask_r,
+            Tensor::from_f32(vec![b], ref_c),
+            Tensor::from_f32(vec![b], ref_r),
+        ],
+        truncated_seqs: trunc_c + trunc_r,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Value;
+
+    fn exp(group: u64, reward: f32, tokens: Vec<i32>, plen: usize) -> Experience {
+        let mut e = Experience::new(&format!("g{group}"), tokens, plen, reward);
+        e.group = group;
+        e.logprobs.iter_mut().skip(plen).for_each(|l| *l = -1.0);
+        e
+    }
+
+    fn cfg(name: &str) -> AlgorithmConfig {
+        AlgorithmConfig::new(name).unwrap()
+    }
+
+    #[test]
+    fn grpo_batch_shapes_and_advantages() {
+        let exps = vec![
+            exp(1, 1.0, vec![1, 10, 11, 2], 2),
+            exp(1, 0.0, vec![1, 10, 12, 2], 2),
+            exp(2, 0.5, vec![1, 20, 2], 1),
+            exp(2, 0.5, vec![1, 21, 2], 1),
+        ];
+        let out = build_batch(&cfg("grpo"), exps, 4, 8, 1).unwrap().tensors;
+        assert_eq!(out.len(), 4);
+        assert_eq!(out[0].shape(), &[4, 8]);
+        let adv = out[2].f32_data().unwrap();
+        assert!((adv[0] - 0.5).abs() < 1e-6);
+        assert!((adv[1] + 0.5).abs() < 1e-6);
+        assert_eq!(adv[2], 0.0);
+        // padding masked out
+        let mask = out[1].f32_data().unwrap();
+        assert_eq!(mask[0], 0.0); // index 0 forced off
+        assert_eq!(mask[6], 0.0); // beyond sequence
+    }
+
+    #[test]
+    fn truncation_respects_bucket_and_is_counted() {
+        let long = exp(1, 1.0, (0..50).collect(), 3);
+        let built = build_batch(&cfg("sft"), vec![long], 1, 8, 1).unwrap();
+        assert_eq!(built.tensors[0].shape(), &[1, 8]);
+        assert_eq!(built.tensors[0].i32_data().unwrap()[7], 7);
+        assert_eq!(built.truncated_seqs, 1);
+        // a fitting sequence is not counted
+        let ok = build_batch(&cfg("sft"), vec![exp(1, 1.0, vec![1, 2, 3], 1)], 1, 8, 1).unwrap();
+        assert_eq!(ok.truncated_seqs, 0);
+    }
+
+    #[test]
+    fn opmd_requires_complete_groups() {
+        // groups of 2, interleaved order — must be sorted contiguous
+        let exps = vec![
+            exp(5, 1.0, vec![1, 2, 3], 1),
+            exp(9, 0.3, vec![1, 2, 3], 1),
+            exp(5, 0.0, vec![1, 2, 3], 1),
+            exp(9, 0.6, vec![1, 2, 3], 1),
+        ];
+        let out = build_batch(&cfg("opmd_simple"), exps, 4, 4, 2).unwrap().tensors;
+        let rewards = out[2].f32_data().unwrap();
+        // sorted by group: [5, 5, 9, 9]
+        assert_eq!(rewards, &[1.0, 0.0, 0.3, 0.6]);
+        // incomplete group errors
+        let bad = vec![
+            exp(1, 1.0, vec![1, 2], 1),
+            exp(1, 0.0, vec![1, 2], 1),
+            exp(2, 0.5, vec![1, 2], 1),
+            exp(3, 0.5, vec![1, 2], 1),
+        ];
+        assert!(build_batch(&cfg("opmd_simple"), bad, 4, 4, 2).is_err());
+    }
+
+    #[test]
+    fn mix_batch_flags_non_explorer_sources() {
+        use crate::buffer::Source;
+        let mut e1 = exp(1, 1.0, vec![1, 2, 3], 1);
+        let mut e2 = exp(1, 0.0, vec![1, 2, 3], 1);
+        e1.source = Source::Expert;
+        e2.source = Source::Explorer;
+        let mut e3 = exp(2, 0.0, vec![1, 2, 3], 1);
+        e3.source = Source::Synthetic;
+        let e4 = exp(2, 1.0, vec![1, 2, 3], 1);
+        let out = build_batch(&cfg("mix"), vec![e1, e2, e3, e4], 4, 4, 1).unwrap().tensors;
+        assert_eq!(out.len(), 5);
+        assert_eq!(out[4].f32_data().unwrap(), &[1.0, 0.0, 1.0, 0.0]);
+    }
+
+    #[test]
+    fn dpo_batch_pairs_by_id() {
+        let mk = |pair: u64, role: &str, reward: f32| {
+            let mut e = exp(pair, reward, vec![1, 5, 6, 2], 1);
+            e.set_meta("pair", Value::num(pair as f64));
+            e.set_meta("role", Value::str(role));
+            e
+        };
+        let exps =
+            vec![mk(2, "rejected", 0.0), mk(1, "chosen", 1.0), mk(2, "chosen", 1.0), mk(1, "rejected", 0.0)];
+        let out = build_batch(&cfg("dpo"), exps, 2, 8, 1).unwrap().tensors;
+        assert_eq!(out.len(), 6);
+        assert_eq!(out[0].shape(), &[2, 8]);
+        assert_eq!(out[4].shape(), &[2]);
+        // ref logprobs are masked rollout sums: 3 response tokens * -1.0
+        for v in out[4].f32_data().unwrap() {
+            assert!((*v + 3.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn wrong_batch_size_errors() {
+        assert!(build_batch(&cfg("grpo"), vec![exp(1, 0.0, vec![1, 2], 1)], 4, 8, 1).is_err());
+    }
+
+    #[test]
+    fn std_normalize_override_changes_grpo_advantages() {
+        let exps = || {
+            vec![
+                exp(1, 1.0, vec![1, 2, 3], 1),
+                exp(1, 0.0, vec![1, 2, 3], 1),
+                exp(2, 1.0, vec![1, 2, 3], 1),
+                exp(2, 0.0, vec![1, 2, 3], 1),
+            ]
+        };
+        let plain = build_batch(&cfg("grpo"), exps(), 4, 4, 1).unwrap().tensors;
+        let mut normalized_cfg = cfg("grpo");
+        normalized_cfg.adv_std_normalize = true;
+        let normed = build_batch(&normalized_cfg, exps(), 4, 4, 1).unwrap().tensors;
+        let a = plain[2].f32_data().unwrap();
+        let b = normed[2].f32_data().unwrap();
+        assert!((a[0] - 0.5).abs() < 1e-6);
+        assert!(b[0] > a[0], "normalized {b:?} vs plain {a:?}");
+    }
+}

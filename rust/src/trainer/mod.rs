@@ -1,8 +1,19 @@
-//! The trainer — learning side of the trinity: sample strategies feed
-//! batch builders, batch builders feed the fused train-step artifacts.
+//! The trainer — learning side of the trinity.  Algorithms are
+//! composable specs (advantage fn + loss + grouping + sample strategy)
+//! resolved through the [`AlgorithmRegistry`]; the batch builder and the
+//! training loop are algorithm-agnostic.  See DESIGN.md §4.
 
-pub mod algorithms;
+pub mod advantage;
+pub mod batch;
+pub mod registry;
+pub mod spec;
 pub mod trainer;
 
-pub use algorithms::{build_batch, AlgorithmConfig, HyperParams};
+pub use advantage::{AdvantageFn, ExtraInputFn, GroupBaseline, IsExpertFlag, NoAdvantage, RawReward};
+pub use batch::{build_batch, BuiltBatch};
+pub use registry::AlgorithmRegistry;
+pub use spec::{
+    AlgorithmConfig, AlgorithmSpec, GroupingPolicy, HyperParams, LossSpec, OpmdFlavor, Pairing,
+    PolicyLoss, TauSlot,
+};
 pub use trainer::{StepMetrics, Trainer, TrainerConfig};

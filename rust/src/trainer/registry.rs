@@ -1,0 +1,246 @@
+//! The global algorithm registry (paper §3.2's AlgorithmType table):
+//! every algorithm — the 8 builtins and any user-registered custom one —
+//! is an [`AlgorithmSpec`] keyed by name.  The trainer, the coordinator
+//! and the `trinity algorithms list` CLI all resolve algorithms here;
+//! nothing in `trainer/` dispatches on name strings.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use anyhow::{anyhow, Result};
+
+use crate::buffer::MixFactory;
+
+use super::advantage::{GroupBaseline, IsExpertFlag, RawReward};
+use super::spec::{AlgorithmSpec, GroupingPolicy, LossSpec, OpmdFlavor, Pairing};
+
+pub struct AlgorithmRegistry {
+    specs: RwLock<BTreeMap<String, Arc<AlgorithmSpec>>>,
+}
+
+impl AlgorithmRegistry {
+    /// An empty registry (tests); production code uses [`global`].
+    pub fn new() -> AlgorithmRegistry {
+        AlgorithmRegistry { specs: RwLock::new(BTreeMap::new()) }
+    }
+
+    /// A registry pre-populated with the 8 builtin algorithms.
+    pub fn with_builtins() -> AlgorithmRegistry {
+        let r = AlgorithmRegistry::new();
+        for spec in builtin_specs() {
+            r.register(spec);
+        }
+        r
+    }
+
+    /// The process-wide registry, seeded with the builtins.  Custom
+    /// algorithms register here before building a session:
+    ///
+    /// ```ignore
+    /// AlgorithmRegistry::global().register(
+    ///     AlgorithmSpec::new("my_alg", "grpo")
+    ///         .advantage(GroupBaseline { std_normalize: true })
+    ///         .grouping(GroupingPolicy::GroupBaseline)
+    ///         .old_logprobs(true)
+    ///         .loss(LossSpec::pg_clip()),
+    /// );
+    /// ```
+    pub fn global() -> &'static AlgorithmRegistry {
+        static GLOBAL: OnceLock<AlgorithmRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(AlgorithmRegistry::with_builtins)
+    }
+
+    /// Register a spec under its name.  Re-registering a name replaces
+    /// the previous spec (latest wins), so registration is idempotent.
+    pub fn register(&self, spec: AlgorithmSpec) -> Arc<AlgorithmSpec> {
+        let spec = Arc::new(spec);
+        self.specs.write().unwrap().insert(spec.name.clone(), Arc::clone(&spec));
+        spec
+    }
+
+    pub fn get(&self, name: &str) -> Result<Arc<AlgorithmSpec>> {
+        // one guard for lookup AND the error's name list: a second
+        // read() here could deadlock behind a queued writer
+        let specs = self.specs.read().unwrap();
+        match specs.get(name) {
+            Some(spec) => Ok(Arc::clone(spec)),
+            None => Err(anyhow!(
+                "unknown algorithm '{name}' — registered algorithms: [{}]; \
+                 register custom algorithms with AlgorithmRegistry::global().register(AlgorithmSpec::new(..))",
+                specs.keys().cloned().collect::<Vec<_>>().join(", ")
+            )),
+        }
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.specs.read().unwrap().contains_key(name)
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.specs.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Registered specs, sorted by name.
+    pub fn specs(&self) -> Vec<Arc<AlgorithmSpec>> {
+        self.specs.read().unwrap().values().cloned().collect()
+    }
+}
+
+impl Default for AlgorithmRegistry {
+    fn default() -> Self {
+        AlgorithmRegistry::new()
+    }
+}
+
+/// The 8 seed algorithms, re-expressed as declarative registrations.
+fn builtin_specs() -> Vec<AlgorithmSpec> {
+    let opmd = |name: &str, flavor: OpmdFlavor, about: &str| {
+        AlgorithmSpec::new(name, name)
+            .advantage(RawReward)
+            .grouping(GroupingPolicy::CompleteGroups)
+            .old_logprobs(true)
+            .loss(LossSpec::mirror_descent(flavor))
+            .about(about)
+    };
+    vec![
+        AlgorithmSpec::new("grpo", "grpo")
+            .advantage(GroupBaseline { std_normalize: false })
+            .grouping(GroupingPolicy::GroupBaseline)
+            .old_logprobs(true)
+            .loss(LossSpec::pg_clip())
+            .about("group-relative policy optimization: clipped PG on group-mean-baseline advantages"),
+        AlgorithmSpec::new("ppo", "ppo")
+            .advantage(GroupBaseline { std_normalize: false })
+            .grouping(GroupingPolicy::GroupBaseline)
+            .old_logprobs(true)
+            .loss(LossSpec::pg_clip())
+            .about("clipped PG with the shared group-baseline advantage estimator"),
+        AlgorithmSpec::new("sft", "sft")
+            .loss(LossSpec::nll())
+            .about("supervised fine-tuning: NLL on masked response tokens"),
+        AlgorithmSpec::new("dpo", "dpo")
+            .pairing(Pairing::PreferencePairs)
+            .loss(LossSpec::preference())
+            .about("direct preference optimization over chosen/rejected pairs (beta = algorithm.dpo.beta)"),
+        AlgorithmSpec::new("mix", "mix")
+            .advantage(GroupBaseline { std_normalize: false })
+            .grouping(GroupingPolicy::GroupBaseline)
+            .old_logprobs(true)
+            .loss(LossSpec::pg_clip_mix())
+            .extra(IsExpertFlag)
+            .sample(MixFactory)
+            .about("(1-mu)*GRPO on rollouts + mu*SFT on expert rows (paper §3.2, Fig. 8)"),
+        opmd(
+            "opmd_kimi",
+            OpmdFlavor::Kimi,
+            "online policy mirror descent, Kimi-style squared regression target",
+        ),
+        opmd("opmd_pairwise", OpmdFlavor::Pairwise, "OPMD with pairwise in-group reward differences"),
+        opmd("opmd_simple", OpmdFlavor::Simple, "OPMD with the plain group-softmax target (Appendix A)"),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::buffer::{Experience, Source};
+    use crate::coordinator::RftConfig;
+    use crate::trainer::{build_batch, AlgorithmConfig};
+    use crate::util::json::Value;
+    use crate::util::yamlite;
+
+    const BUILTINS: [&str; 8] =
+        ["grpo", "ppo", "sft", "dpo", "mix", "opmd_kimi", "opmd_pairwise", "opmd_simple"];
+
+    #[test]
+    fn all_builtins_registered() {
+        let reg = AlgorithmRegistry::global();
+        for name in BUILTINS {
+            assert!(reg.contains(name), "builtin '{name}' missing from registry");
+        }
+    }
+
+    #[test]
+    fn unknown_name_error_lists_registered_algorithms() {
+        let err = AlgorithmRegistry::global().get("nope").unwrap_err().to_string();
+        assert!(err.contains("unknown algorithm 'nope'"), "{err}");
+        assert!(err.contains("grpo"), "error should list registered names: {err}");
+        assert!(err.contains("register custom algorithms"), "{err}");
+    }
+
+    /// Synthesize a batch matching a spec's structural demands.
+    fn exps_for(spec: &crate::trainer::AlgorithmSpec, b: usize, k: usize) -> Vec<Experience> {
+        let n = spec.experiences_per_step(b);
+        (0..n)
+            .map(|i| {
+                let mut e = Experience::new(&format!("t{i}"), vec![1, 10 + i as i32, 2], 1, (i % 2) as f32);
+                e.group = (i / k) as u64;
+                if spec.pairing == crate::trainer::Pairing::PreferencePairs {
+                    e.set_meta("pair", Value::num((i / 2) as f64));
+                    e.set_meta("role", Value::str(if i % 2 == 0 { "chosen" } else { "rejected" }));
+                }
+                if i == 0 {
+                    e.source = Source::Expert;
+                }
+                e
+            })
+            .collect()
+    }
+
+    #[test]
+    fn every_builtin_roundtrips_config_parse_registry_lookup_batch_build() {
+        let (b, t, k) = (4, 8, 2);
+        for name in BUILTINS {
+            // config parse -> registry lookup
+            let yaml = format!("mode: train\nalgorithm:\n  name: {name}\n");
+            let cfg = RftConfig::from_value(&yamlite::parse(&yaml).unwrap()).unwrap();
+            assert_eq!(cfg.algorithm, name);
+            let spec = AlgorithmRegistry::global().get(&cfg.algorithm).unwrap();
+            assert_eq!(spec.name, name);
+            // batch build with a structurally valid synthetic batch
+            let exps = exps_for(&spec, b, k);
+            let built = build_batch(&AlgorithmConfig::from_spec(Arc::clone(&spec)), exps, b, t, k)
+                .unwrap_or_else(|e| panic!("batch build failed for '{name}': {e:#}"));
+            let has_adv = spec.advantage.compute(&exps_for(&spec, b, k), false).is_some();
+            let expected_tensors = match spec.pairing {
+                crate::trainer::Pairing::PreferencePairs => 6,
+                crate::trainer::Pairing::Single => {
+                    2 + has_adv as usize + spec.old_logprobs as usize + spec.extras.len()
+                }
+            };
+            assert_eq!(
+                built.tensors.len(),
+                expected_tensors,
+                "tensor arity for '{name}' (spec {spec:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn custom_registration_builds_batches_without_trainer_changes() {
+        // a new algorithm = advantage + grouping + loss + artifact reuse
+        AlgorithmRegistry::global().register(
+            AlgorithmSpec::new("unit_custom_pg", "grpo")
+                .advantage(GroupBaseline { std_normalize: true })
+                .grouping(GroupingPolicy::GroupBaseline)
+                .old_logprobs(true)
+                .loss(LossSpec::pg_clip())
+                .about("test-registered custom algorithm"),
+        );
+        let cfg = AlgorithmConfig::new("unit_custom_pg").unwrap();
+        assert_eq!(cfg.spec.artifact, "grpo");
+        let exps = exps_for(&cfg.spec, 4, 2);
+        let built = build_batch(&cfg, exps, 4, 8, 2).unwrap();
+        assert_eq!(built.tensors.len(), 4); // tokens, mask, adv, old_lp
+    }
+
+    #[test]
+    fn reregistration_replaces_latest_wins() {
+        let reg = AlgorithmRegistry::new();
+        reg.register(AlgorithmSpec::new("dup", "grpo").about("first"));
+        reg.register(AlgorithmSpec::new("dup", "sft").about("second"));
+        assert_eq!(reg.get("dup").unwrap().artifact, "sft");
+        assert_eq!(reg.names(), vec!["dup"]);
+    }
+}

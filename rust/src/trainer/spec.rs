@@ -1,0 +1,396 @@
+//! The composable algorithm API (paper §3.2): an RL algorithm is an
+//! [`AlgorithmSpec`] assembled from pluggable modules — an
+//! [`AdvantageFn`], a [`LossSpec`], a [`GroupingPolicy`], a batch
+//! [`Pairing`] layout, and a linked sample-strategy factory — instead of
+//! a `match` arm inside the trainer.  A new algorithm is a registration
+//! in the [`AlgorithmRegistry`](super::registry::AlgorithmRegistry),
+//! not a fork of the trainer (see `examples/mix_algorithm.rs`).
+
+use std::fmt;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::buffer::{FifoFactory, SampleStrategyFactory};
+
+use super::advantage::{AdvantageFn, ExtraInputFn, NoAdvantage};
+
+/// The 8 hyper slots of every train artifact (manifest `hyper_slots`).
+/// This is the artifact ABI: slot 5 is the shared tau/beta slot and slot
+/// 6 the MIX mu slot.  Configuration no longer overloads these directly
+/// — the typed per-algorithm config sections fill them through
+/// [`TauSlot`] (see `coordinator::config`).
+#[derive(Debug, Clone)]
+pub struct HyperParams {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub adam_eps: f32,
+    pub clip_eps: f32,
+    /// ABI slot 5: tau for OPMD, beta for DPO (see [`TauSlot`]).
+    pub tau_or_beta: f32,
+    /// ABI slot 6: MIX's SFT weight.
+    pub mu: f32,
+    pub kl_coef: f32,
+}
+
+impl Default for HyperParams {
+    fn default() -> Self {
+        HyperParams {
+            lr: 1e-4,
+            beta1: 0.9,
+            beta2: 0.999,
+            adam_eps: 1e-8,
+            clip_eps: 0.2,
+            tau_or_beta: 1.0,
+            mu: 0.1,
+            kl_coef: 0.0,
+        }
+    }
+}
+
+impl HyperParams {
+    pub fn to_vec(&self) -> Vec<f32> {
+        vec![
+            self.lr,
+            self.beta1,
+            self.beta2,
+            self.adam_eps,
+            self.clip_eps,
+            self.tau_or_beta,
+            self.mu,
+            self.kl_coef,
+        ]
+    }
+}
+
+/// Which typed config value fills the shared tau/beta ABI slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TauSlot {
+    /// `algorithm.opmd.tau` (KL-regularized mirror descent temperature).
+    OpmdTau,
+    /// `algorithm.dpo.beta` (preference sharpness).
+    DpoBeta,
+    /// The slot is unused; the raw `HyperParams` value passes through.
+    Unused,
+}
+
+impl TauSlot {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            TauSlot::OpmdTau => "opmd.tau",
+            TauSlot::DpoBeta => "dpo.beta",
+            TauSlot::Unused => "-",
+        }
+    }
+}
+
+/// The OPMD loss flavors of Appendix A.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpmdFlavor {
+    Kimi,
+    Pairwise,
+    Simple,
+}
+
+/// Which fused policy loss the train artifact implements.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PolicyLoss {
+    /// PPO-style clipped policy gradient (GRPO/PPO artifacts).
+    PgClip,
+    /// Clipped PG on rollouts + NLL on expert rows (the MIX loss).
+    PgClipExpertMix,
+    /// Plain negative log-likelihood (SFT).
+    Nll,
+    /// Pairwise preference loss over chosen/rejected (DPO).
+    Preference,
+    /// KL-regularized mirror descent over reward groups (OPMD family).
+    MirrorDescent(OpmdFlavor),
+}
+
+impl PolicyLoss {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PolicyLoss::PgClip => "pg_clip",
+            PolicyLoss::PgClipExpertMix => "pg_clip+sft_mix",
+            PolicyLoss::Nll => "nll",
+            PolicyLoss::Preference => "preference",
+            PolicyLoss::MirrorDescent(OpmdFlavor::Kimi) => "opmd_kimi",
+            PolicyLoss::MirrorDescent(OpmdFlavor::Pairwise) => "opmd_pairwise",
+            PolicyLoss::MirrorDescent(OpmdFlavor::Simple) => "opmd_simple",
+        }
+    }
+}
+
+/// The loss term of a spec: policy loss plus regularizer coefficients.
+///
+/// `kl_coef` seeds the artifact's KL slot default; `entropy_coef` is
+/// declarative for now (the current fused artifacts report entropy as a
+/// metric but bake no bonus) and is reserved for artifact regeneration.
+#[derive(Debug, Clone)]
+pub struct LossSpec {
+    pub policy: PolicyLoss,
+    pub tau_slot: TauSlot,
+    pub kl_coef: f32,
+    pub entropy_coef: f32,
+}
+
+impl LossSpec {
+    pub fn pg_clip() -> LossSpec {
+        LossSpec { policy: PolicyLoss::PgClip, tau_slot: TauSlot::Unused, kl_coef: 0.0, entropy_coef: 0.0 }
+    }
+    pub fn pg_clip_mix() -> LossSpec {
+        LossSpec {
+            policy: PolicyLoss::PgClipExpertMix,
+            tau_slot: TauSlot::Unused,
+            kl_coef: 0.0,
+            entropy_coef: 0.0,
+        }
+    }
+    pub fn nll() -> LossSpec {
+        LossSpec { policy: PolicyLoss::Nll, tau_slot: TauSlot::Unused, kl_coef: 0.0, entropy_coef: 0.0 }
+    }
+    pub fn preference() -> LossSpec {
+        LossSpec { policy: PolicyLoss::Preference, tau_slot: TauSlot::DpoBeta, kl_coef: 0.0, entropy_coef: 0.0 }
+    }
+    pub fn mirror_descent(flavor: OpmdFlavor) -> LossSpec {
+        LossSpec {
+            policy: PolicyLoss::MirrorDescent(flavor),
+            tau_slot: TauSlot::OpmdTau,
+            kl_coef: 0.0,
+            entropy_coef: 0.0,
+        }
+    }
+}
+
+/// What group structure the algorithm's batches require.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupingPolicy {
+    /// No group structure (SFT, DPO).
+    None,
+    /// Sequences carry group ids and advantages use a per-group
+    /// baseline, but incomplete groups are fine (GRPO/PPO/MIX).
+    GroupBaseline,
+    /// Batches must consist of contiguous, complete groups of the
+    /// artifact's group size `k` (the OPMD `[b/k, k]` reshape).
+    CompleteGroups,
+}
+
+impl GroupingPolicy {
+    /// Whether the algorithm interprets group ids at all.
+    pub fn is_group_based(&self) -> bool {
+        !matches!(self, GroupingPolicy::None)
+    }
+    /// Whether the batch builder must sort and verify complete groups.
+    pub fn requires_complete_groups(&self) -> bool {
+        matches!(self, GroupingPolicy::CompleteGroups)
+    }
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            GroupingPolicy::None => "none",
+            GroupingPolicy::GroupBaseline => "group_baseline",
+            GroupingPolicy::CompleteGroups => "complete_groups",
+        }
+    }
+}
+
+/// How experiences map onto artifact rows.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pairing {
+    /// One experience per artifact row.
+    Single,
+    /// Chosen/rejected preference pairs: a batch of `b` rows consumes
+    /// `2*b` experiences carrying `metadata.role` + `metadata.pair`.
+    PreferencePairs,
+}
+
+impl Pairing {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Pairing::Single => "single",
+            Pairing::PreferencePairs => "preference_pairs",
+        }
+    }
+}
+
+/// A complete algorithm: the declarative assembly of pluggable modules
+/// the trainer executes.  Specs are immutable once registered; runtime
+/// knobs live in [`AlgorithmConfig`].
+pub struct AlgorithmSpec {
+    /// Registry key (`algorithm.name` in configs).
+    pub name: String,
+    /// Train-artifact key in the AOT manifest.  Custom algorithms reuse
+    /// a compiled artifact (e.g. `"grpo"`) under their own name.
+    pub artifact: String,
+    pub advantage: Arc<dyn AdvantageFn>,
+    pub grouping: GroupingPolicy,
+    pub pairing: Pairing,
+    pub loss: LossSpec,
+    /// Whether the artifact consumes rollout (old-policy) log-probs.
+    pub old_logprobs: bool,
+    /// Extra per-sequence inputs appended after the standard block.
+    pub extras: Vec<Arc<dyn ExtraInputFn>>,
+    /// How the trainer pulls batches for this algorithm.
+    pub sample: Arc<dyn SampleStrategyFactory>,
+    /// One-line description for `trinity algorithms list`.
+    pub about: String,
+}
+
+impl fmt::Debug for AlgorithmSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("AlgorithmSpec")
+            .field("name", &self.name)
+            .field("artifact", &self.artifact)
+            .field("advantage", &self.advantage.name())
+            .field("grouping", &self.grouping)
+            .field("pairing", &self.pairing)
+            .field("loss", &self.loss)
+            .field("old_logprobs", &self.old_logprobs)
+            .field("extras", &self.extras.iter().map(|e| e.name()).collect::<Vec<_>>())
+            .field("sample", &self.sample.name())
+            .finish()
+    }
+}
+
+impl AlgorithmSpec {
+    /// A minimal spec: NLL loss, no advantage, no grouping, FIFO
+    /// sampling.  Builder methods refine it (see the registry's builtin
+    /// registrations and `examples/mix_algorithm.rs`).
+    pub fn new(name: &str, artifact: &str) -> AlgorithmSpec {
+        AlgorithmSpec {
+            name: name.to_string(),
+            artifact: artifact.to_string(),
+            advantage: Arc::new(NoAdvantage),
+            grouping: GroupingPolicy::None,
+            pairing: Pairing::Single,
+            loss: LossSpec::nll(),
+            old_logprobs: false,
+            extras: vec![],
+            sample: Arc::new(FifoFactory),
+            about: String::new(),
+        }
+    }
+
+    pub fn advantage(mut self, a: impl AdvantageFn + 'static) -> AlgorithmSpec {
+        self.advantage = Arc::new(a);
+        self
+    }
+    pub fn grouping(mut self, g: GroupingPolicy) -> AlgorithmSpec {
+        self.grouping = g;
+        self
+    }
+    pub fn pairing(mut self, p: Pairing) -> AlgorithmSpec {
+        self.pairing = p;
+        self
+    }
+    pub fn loss(mut self, l: LossSpec) -> AlgorithmSpec {
+        self.loss = l;
+        self
+    }
+    pub fn old_logprobs(mut self, on: bool) -> AlgorithmSpec {
+        self.old_logprobs = on;
+        self
+    }
+    pub fn extra(mut self, e: impl ExtraInputFn + 'static) -> AlgorithmSpec {
+        self.extras.push(Arc::new(e));
+        self
+    }
+    pub fn sample(mut self, s: impl SampleStrategyFactory + 'static) -> AlgorithmSpec {
+        self.sample = Arc::new(s);
+        self
+    }
+    pub fn about(mut self, text: &str) -> AlgorithmSpec {
+        self.about = text.to_string();
+        self
+    }
+
+    /// Experiences consumed per train step for an artifact batch of `b`.
+    pub fn experiences_per_step(&self, b: usize) -> usize {
+        match self.pairing {
+            Pairing::Single => b,
+            Pairing::PreferencePairs => 2 * b,
+        }
+    }
+
+    /// Default hyper-parameters seeded from the spec's declarative loss
+    /// coefficients.
+    pub fn default_hyper(&self) -> HyperParams {
+        HyperParams { kl_coef: self.loss.kl_coef, ..Default::default() }
+    }
+}
+
+/// Runtime configuration of a registered algorithm: the immutable spec
+/// plus the per-run knobs (hyper-parameters, normalization override).
+#[derive(Debug, Clone)]
+pub struct AlgorithmConfig {
+    pub spec: Arc<AlgorithmSpec>,
+    pub hyper: HyperParams,
+    /// Config-level override: std-normalize group advantages (GRPO
+    /// flavor).  Ignored by advantage functions without a baseline.
+    pub adv_std_normalize: bool,
+}
+
+impl AlgorithmConfig {
+    /// Look `name` up in the global registry.
+    pub fn new(name: &str) -> Result<AlgorithmConfig> {
+        Ok(Self::from_spec(super::registry::AlgorithmRegistry::global().get(name)?))
+    }
+
+    pub fn from_spec(spec: Arc<AlgorithmSpec>) -> AlgorithmConfig {
+        let hyper = spec.default_hyper();
+        AlgorithmConfig { spec, hyper, adv_std_normalize: false }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    /// Group-completeness requirements come from the spec's
+    /// [`GroupingPolicy`], not from name prefixes.
+    pub fn is_group_based(&self) -> bool {
+        self.spec.grouping.is_group_based()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hyper_vec_layout_matches_manifest() {
+        let h = HyperParams { lr: 0.5, ..Default::default() };
+        let v = h.to_vec();
+        assert_eq!(v.len(), 8);
+        assert_eq!(v[0], 0.5); // lr first (manifest hyper_slots[0])
+        assert_eq!(v[5], 1.0); // tau/beta slot
+    }
+
+    #[test]
+    fn grouping_policy_declares_requirements() {
+        assert!(!GroupingPolicy::None.is_group_based());
+        assert!(GroupingPolicy::GroupBaseline.is_group_based());
+        assert!(!GroupingPolicy::GroupBaseline.requires_complete_groups());
+        assert!(GroupingPolicy::CompleteGroups.requires_complete_groups());
+    }
+
+    #[test]
+    fn pairing_scales_experience_demand() {
+        let spec = AlgorithmSpec::new("x", "x").pairing(Pairing::PreferencePairs);
+        assert_eq!(spec.experiences_per_step(4), 8);
+        assert_eq!(AlgorithmSpec::new("y", "y").experiences_per_step(4), 4);
+    }
+
+    #[test]
+    fn grpo_declares_group_baseline_not_name_prefix() {
+        // the satellite fix: GRPO is group-based through its declared
+        // policy, OPMD through CompleteGroups — no `starts_with("opmd")`
+        let grpo = AlgorithmConfig::new("grpo").unwrap();
+        assert!(grpo.is_group_based());
+        assert!(!grpo.spec.grouping.requires_complete_groups());
+        let opmd = AlgorithmConfig::new("opmd_simple").unwrap();
+        assert!(opmd.is_group_based());
+        assert!(opmd.spec.grouping.requires_complete_groups());
+        let sft = AlgorithmConfig::new("sft").unwrap();
+        assert!(!sft.is_group_based());
+    }
+}

@@ -10,7 +10,8 @@ use crate::buffer::{ExperienceBatch, SampleStrategy};
 use crate::model::{ParamStore, WeightSync};
 use crate::runtime::{ModelEngine, TrainState};
 
-use super::algorithms::{build_batch, AlgorithmConfig};
+use super::batch::build_batch;
+use super::spec::{AlgorithmConfig, AlgorithmSpec};
 
 #[derive(Debug, Clone)]
 pub struct TrainerConfig {
@@ -20,8 +21,16 @@ pub struct TrainerConfig {
 }
 
 impl TrainerConfig {
-    pub fn new(alg: &str) -> TrainerConfig {
-        TrainerConfig { algorithm: AlgorithmConfig::new(alg), initial_version: 0 }
+    /// Resolve `alg` through the global [`AlgorithmRegistry`]
+    /// (errors on unregistered names).
+    ///
+    /// [`AlgorithmRegistry`]: super::registry::AlgorithmRegistry
+    pub fn new(alg: &str) -> Result<TrainerConfig> {
+        Ok(TrainerConfig { algorithm: AlgorithmConfig::new(alg)?, initial_version: 0 })
+    }
+
+    pub fn from_spec(spec: Arc<AlgorithmSpec>) -> TrainerConfig {
+        TrainerConfig { algorithm: AlgorithmConfig::from_spec(spec), initial_version: 0 }
     }
 }
 
@@ -83,11 +92,12 @@ impl Trainer {
     /// the strategy's policy), build tensors, execute the fused artifact.
     pub fn train_step(&mut self) -> Result<StepMetrics> {
         let alg = &self.config.algorithm;
-        let (b, t, k) = self.engine.train_shape(&alg.name)?;
+        let spec = Arc::clone(&alg.spec);
+        let (b, t, k) = self.engine.train_shape(&spec.artifact)?;
 
         let t0 = Instant::now();
-        // DPO consumes chosen+rejected pairs: 2x the artifact batch
-        let sample_n = if alg.name == "dpo" { 2 * b } else { b };
+        // preference-pair algorithms consume 2x the artifact batch
+        let sample_n = spec.experiences_per_step(b);
         let exps = self
             .strategy
             .sample(self.state.step + 1, sample_n)
@@ -98,13 +108,13 @@ impl Trainer {
         let mean_reward = batch_stats.mean_reward();
         let mean_response_len = batch_stats.mean_response_len();
 
-        let data = build_batch(alg, exps, b, t, k)?;
-        let data_refs: Vec<&crate::runtime::Tensor> = data.iter().collect();
+        let built = build_batch(alg, exps, b, t, k)?;
+        let data_refs: Vec<&crate::runtime::Tensor> = built.tensors.iter().collect();
 
         let t1 = Instant::now();
         let hyper = alg.hyper.to_vec();
-        let alg_name = alg.name.clone();
-        let named = self.engine.train_step(&alg_name, &mut self.state, &hyper, &data_refs)?;
+        let mut named = self.engine.train_step(&spec.artifact, &mut self.state, &hyper, &data_refs)?;
+        named.push(("truncated_seqs".to_string(), built.truncated_seqs as f32));
         // trainer "device utilization" = compute_s / wall (accounted by the
         // coordinator's monitor per synchronization window)
         let compute_s = t1.elapsed().as_secs_f64();

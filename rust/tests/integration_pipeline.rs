@@ -96,7 +96,7 @@ fn human_annotation_to_dpo_training() {
     let Some(mut cfg) = base_cfg() else { return };
     cfg.mode = "train".into();
     cfg.algorithm = "dpo".into();
-    cfg.hyper.tau_or_beta = 0.5;
+    cfg.dpo.beta = 0.5;
     cfg.total_steps = 1;
     let mut session = RftSession::build(cfg, None, None).unwrap();
 

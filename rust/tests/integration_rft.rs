@@ -123,6 +123,41 @@ fn train_only_mode_on_prefilled_buffer() {
 }
 
 #[test]
+fn custom_registered_algorithm_trains_end_to_end() {
+    use trinity_rft::trainer::{
+        AlgorithmRegistry, AlgorithmSpec, GroupBaseline, GroupingPolicy, LossSpec,
+    };
+    let Some(mut cfg) = base_cfg() else { return };
+    // a custom algorithm = one registration reusing the grpo artifact;
+    // no trainer/ source is touched
+    AlgorithmRegistry::global().register(
+        AlgorithmSpec::new("custom_grpo_e2e", "grpo")
+            .advantage(GroupBaseline { std_normalize: true })
+            .grouping(GroupingPolicy::GroupBaseline)
+            .old_logprobs(true)
+            .loss(LossSpec::pg_clip())
+            .about("externally registered GRPO variant"),
+    );
+    cfg.mode = "both".into();
+    cfg.algorithm = "custom_grpo_e2e".into();
+    cfg.total_steps = 2;
+    let mut session = RftSession::build(cfg, None, None).unwrap();
+    let report = session.run().unwrap();
+    assert_eq!(report.train_steps, 2);
+    // the batch-builder diagnostic threads through to step metrics
+    assert!(report.trainer_metrics[0].get("truncated_seqs").is_some());
+}
+
+#[test]
+fn unregistered_algorithm_fails_session_build_with_catalog() {
+    let Some(mut cfg) = base_cfg() else { return };
+    cfg.algorithm = "no_such_alg".into();
+    let err = format!("{:#}", RftSession::build(cfg, None, None).unwrap_err());
+    assert!(err.contains("unknown algorithm 'no_such_alg'"), "{err}");
+    assert!(err.contains("grpo"), "error should list the registry: {err}");
+}
+
+#[test]
 fn bench_mode_reports_tiers() {
     let Some(mut cfg) = base_cfg() else { return };
     cfg.mode = "bench".into();
