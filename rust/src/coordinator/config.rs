@@ -9,7 +9,7 @@ use crate::trainer::{AlgorithmSpec, HyperParams, TauSlot};
 use crate::util::json::Value;
 use crate::util::yamlite;
 
-use super::modes::RftMode;
+use super::policy::{resolve_policy, RftMode};
 
 /// Typed OPMD section (`algorithm.opmd.*`): the mirror-descent
 /// temperature, formerly overloaded into the shared tau/beta hyper slot.
@@ -50,10 +50,31 @@ impl Default for MixSection {
     }
 }
 
+/// Typed scheduler section (`scheduler.*`): explicit sync-policy
+/// selection and the bounded-staleness knob.  When `policy` is unset the
+/// top-level `mode` maps onto its builtin policy (the seed spelling).
+#[derive(Debug, Clone)]
+pub struct SchedulerSection {
+    /// Sync-policy name resolved through the `SyncPolicyRegistry`
+    /// (windowed | free | offline | bounded_staleness | custom).
+    pub policy: Option<String>,
+    /// `BoundedStaleness`: max publish-windows an explorer's weight
+    /// version may trail the rollout window it generates.
+    pub max_version_lag: u64,
+}
+
+impl Default for SchedulerSection {
+    fn default() -> Self {
+        SchedulerSection { policy: None, max_version_lag: 1 }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct RftConfig {
     /// both | async | explore | train | bench
     pub mode: String,
+    /// Typed scheduler/staleness keys (see [`SchedulerSection`]).
+    pub scheduler: SchedulerSection,
     pub model_preset: String,
     pub seed: u64,
     /// Registered algorithm name (see `trinity algorithms list`).
@@ -111,6 +132,7 @@ impl Default for RftConfig {
     fn default() -> Self {
         RftConfig {
             mode: "both".into(),
+            scheduler: SchedulerSection::default(),
             model_preset: "tiny".into(),
             seed: 42,
             algorithm: "grpo".into(),
@@ -213,12 +235,22 @@ impl RftConfig {
         b("algorithm.dummy_learning", &mut cfg.dummy_learning);
 
         u("train.total_steps", &mut cfg.total_steps);
+        // back-compat first: the seed's flat `mode` (above) and
+        // `sync.interval` / `sync.offset` keys still parse; the typed
+        // `[scheduler]` section below wins when both are present
         u("sync.interval", &mut cfg.sync_interval);
         u("sync.offset", &mut cfg.sync_offset);
         s("sync.method", &mut cfg.sync_method);
         if let Some(d) = v.path("sync.dir").and_then(Value::as_str) {
             cfg.sync_dir = Some(PathBuf::from(d));
         }
+        // typed scheduler section
+        if let Some(p) = v.path("scheduler.policy").and_then(Value::as_str) {
+            cfg.scheduler.policy = Some(p.to_string());
+        }
+        u("scheduler.interval", &mut cfg.sync_interval);
+        u("scheduler.offset", &mut cfg.sync_offset);
+        u("scheduler.max_version_lag", &mut cfg.scheduler.max_version_lag);
 
         us("explorer.count", &mut cfg.explorer_count);
         us("explorer.threads", &mut cfg.explorer_threads);
@@ -265,8 +297,17 @@ impl RftConfig {
         if self.explorer_count == 0 {
             bail!("explorer.count must be >= 1");
         }
-        if mode == RftMode::Both && self.explorer_count > 1 {
-            bail!("multi-explorer requires mode=async (paper §2.1.1)");
+        // resolve the sync policy now so bad `scheduler.policy` names
+        // fail at config time with the registry catalog; bench-mode
+        // sessions without an explicit policy never reach the scheduler
+        if mode != RftMode::Bench || self.scheduler.policy.is_some() {
+            let policy = resolve_policy(self)?;
+            if self.explorer_count > 1 && !policy.multi_explorer() {
+                bail!(
+                    "multi-explorer requires a free-running sync policy \
+                     (mode=async or scheduler.policy=free/bounded_staleness; paper §2.1.1)"
+                );
+            }
         }
         match self.workflow.as_str() {
             "math" | "alfworld" | "reflect_once" => {}
@@ -419,6 +460,67 @@ algorithm:
             &yamlite::parse("mode: BOTH\nexplorer:\n  count: 2\n").unwrap()
         )
         .is_err());
+    }
+
+    #[test]
+    fn scheduler_section_parses_policy_and_staleness() {
+        let yaml = "\
+mode: async
+scheduler:
+  policy: bounded_staleness
+  max_version_lag: 3
+sync:
+  interval: 2
+";
+        let cfg = RftConfig::from_value(&yamlite::parse(yaml).unwrap()).unwrap();
+        assert_eq!(cfg.scheduler.policy.as_deref(), Some("bounded_staleness"));
+        assert_eq!(cfg.scheduler.max_version_lag, 3);
+        let p = resolve_policy(&cfg).unwrap();
+        assert_eq!(p.label(1), "staleness(i=2,lag=3,x1)");
+    }
+
+    #[test]
+    fn scheduler_typed_keys_win_over_flat_sync_keys() {
+        // mid-migration config carrying both spellings: typed wins
+        let yaml = "\
+mode: both
+sync:
+  interval: 10
+  offset: 2
+scheduler:
+  interval: 4
+  offset: 0
+";
+        let cfg = RftConfig::from_value(&yamlite::parse(yaml).unwrap()).unwrap();
+        assert_eq!(cfg.sync_interval, 4);
+        assert_eq!(cfg.sync_offset, 0);
+    }
+
+    #[test]
+    fn unknown_scheduler_policy_fails_validation_with_catalog() {
+        let yaml = "mode: both\nscheduler:\n  policy: warp\n";
+        let err = RftConfig::from_value(&yamlite::parse(yaml).unwrap())
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("unknown sync policy 'warp'"), "{err}");
+        assert!(err.contains("bounded_staleness"), "error should list the registry: {err}");
+    }
+
+    #[test]
+    fn multi_explorer_allowed_under_free_running_policies() {
+        // seed rule: mode=both forbids multi-explorer...
+        let bad = "mode: both\nexplorer:\n  count: 2\n";
+        assert!(RftConfig::from_value(&yamlite::parse(bad).unwrap()).is_err());
+        // ...but free-running policies (async, bounded staleness) allow it
+        for yaml in [
+            "mode: async\nexplorer:\n  count: 2\n",
+            "mode: both\nscheduler:\n  policy: staleness\nexplorer:\n  count: 2\n",
+        ] {
+            assert!(
+                RftConfig::from_value(&yamlite::parse(yaml).unwrap()).is_ok(),
+                "should accept: {yaml}"
+            );
+        }
     }
 
     #[test]

@@ -1,13 +1,21 @@
-//! The coordinator: the paper's unified RFT modes (§2.1.1) over the
-//! explorer / buffer / trainer trinity, plus typed configuration, the
-//! monitor, and task sources.
+//! The coordinator: the paper's unified RFT modes (§2.1.1) as sync
+//! policies over ONE scheduler, plus typed configuration, run
+//! reporting, the monitor, and task sources.
 
 pub mod config;
 pub mod modes;
 pub mod monitor;
+pub mod policy;
+pub mod report;
+pub mod scheduler;
 pub mod tasks;
 
-pub use config::{DpoSection, MixSection, OpmdSection, RftConfig};
-pub use modes::{run_mode, BuildOpts, ModeReport, RftMode, RftSession};
+pub use config::{DpoSection, MixSection, OpmdSection, RftConfig, SchedulerSection};
 pub use monitor::Monitor;
+pub use policy::{
+    resolve_policy, BoundedStaleness, ExplorerPlan, Free, Offline, Progress, RftMode, SyncPolicy,
+    SyncPolicyFactory, SyncPolicyRegistry, Windowed,
+};
+pub use report::{ModeReport, RolloutRecord, RunRecorder, TimelineEvent};
+pub use scheduler::{run_mode, sft_warmup_snapshot, BuildOpts, RftSession};
 pub use tasks::{AlfworldTaskSource, MathTaskSource, PrioritizedTaskSource, TaskSource};

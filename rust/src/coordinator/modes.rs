@@ -1,715 +1,9 @@
-//! The unified RFT modes (paper §2.1.1, Fig. 4): synchronous (any
-//! `sync_interval`), one-step off-policy (`sync_offset >= 1`), fully
-//! asynchronous, multi-explorer asynchronous, bench, and train-only —
-//! all over the same explorer / buffer / trainer trinity, differing only
-//! in coordination.
-//!
-//! Coordination model for `mode=both` (sync / one-step off-policy): the
-//! explorer may start rollout batch `e` once the weight-sync window
-//! `floor((e - sync_offset) / sync_interval)` has been published by the
-//! trainer; the trainer trains whenever the buffer has a batch and
-//! publishes weights every `sync_interval` steps.  With interval=1 and
-//! offset=0 this degenerates to the strictly on-policy ping-pong with its
-//! pipeline bubbles; larger intervals/offsets open the pipeline exactly as
-//! in Fig. 4 (a)/(b).  `mode=async` drops the gating entirely: explorers
-//! free-run against the buffer's backpressure and pull weights whenever
-//! the trainer publishes (Fig. 4 (c)/(d)).
+//! Back-compat shim: the seed's three hand-rolled mode loops were
+//! unified into one scheduler (see [`scheduler`](super::scheduler)) with
+//! pluggable [`policy`](super::policy) values; reporting moved to
+//! [`report`](super::report).  This module only re-exports the moved
+//! names so existing `coordinator::modes::` paths keep compiling.
 
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::{Duration, Instant};
-
-use anyhow::{bail, Context, Result};
-
-use crate::buffer::{ExperienceBuffer, QueueBuffer, StrategyCtx};
-use crate::data::ShapingBuffer;
-use crate::exec::CancellationToken;
-use crate::explorer::{
-    EvalReport, Explorer, ExplorerConfig, GenerationEngine, RunnerConfig, SamplingArgs,
-    WorkflowRegistry,
-};
-use crate::model::{CheckpointSync, MemorySync, ParamStore, WeightSync};
-use crate::runtime::{Manifest, ModelEngine, RuntimeClient};
-use crate::tokenizer::Tokenizer;
-use crate::trainer::{AlgorithmRegistry, StepMetrics, Trainer, TrainerConfig};
-
-use super::config::RftConfig;
-use super::monitor::Monitor;
-use super::tasks::{AlfworldTaskSource, MathTaskSource, TaskSource};
-
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum RftMode {
-    /// Synchronous / one-step off-policy (explorer+trainer coordinated).
-    Both,
-    /// Fully asynchronous (incl. multi-explorer).
-    Async,
-    /// Trainer alone on an existing buffer (SFT/DPO/offline RL).
-    TrainOnly,
-    /// Evaluation of current/checkpointed weights.
-    Bench,
-}
-
-impl RftMode {
-    /// Case-insensitive mode lookup.
-    pub fn parse(s: &str) -> Result<RftMode> {
-        Ok(match s.trim().to_ascii_lowercase().as_str() {
-            "both" => RftMode::Both,
-            "async" | "explore" => RftMode::Async,
-            "train" => RftMode::TrainOnly,
-            "bench" => RftMode::Bench,
-            _ => bail!("unknown mode '{s}' (valid modes: both, async, explore, train, bench)"),
-        })
-    }
-}
-
-/// One span on the Fig.-4-style timeline.
-#[derive(Debug, Clone)]
-pub struct TimelineEvent {
-    pub role: String,
-    pub kind: String,
-    pub index: u64,
-    pub start_s: f64,
-    pub end_s: f64,
-}
-
-#[derive(Debug, Default)]
-pub struct ModeReport {
-    pub mode: String,
-    pub wall_s: f64,
-    pub train_steps: u64,
-    pub explore_batches: u64,
-    pub sync_count: u64,
-    /// Explorer worker-pool busy fraction, percent (GPU-util analog).
-    pub explorer_util: f64,
-    /// Trainer compute fraction of wall time, percent.
-    pub trainer_util: f64,
-    /// Combined PJRT busy fraction, percent (GPU-power analog).
-    pub device_busy: f64,
-    pub trainer_metrics: Vec<StepMetrics>,
-    pub timeline: Vec<TimelineEvent>,
-    /// (step, weights) snapshots taken every `eval_every` steps.
-    pub snapshots: Vec<(u64, Vec<Vec<f32>>)>,
-    pub final_eval: Option<EvalReport>,
-}
-
-impl ModeReport {
-    pub fn series(&self, metric: &str) -> Vec<f64> {
-        self.trainer_metrics
-            .iter()
-            .filter_map(|m| m.get(metric).map(|v| v as f64))
-            .collect()
-    }
-    pub fn reward_series(&self) -> Vec<f64> {
-        self.trainer_metrics.iter().map(|m| m.mean_reward).collect()
-    }
-    pub fn response_len_series(&self) -> Vec<f64> {
-        self.trainer_metrics.iter().map(|m| m.mean_response_len).collect()
-    }
-}
-
-struct CoordState {
-    synced_windows: u64,
-    explored_batches: u64,
-    failed: bool,
-}
-
-/// A fully wired RFT run (the launcher).
-pub struct RftSession {
-    pub cfg: RftConfig,
-    pub monitor: Arc<Monitor>,
-    pub tokenizer: Arc<Tokenizer>,
-    pub manifest: Arc<Manifest>,
-    pub client: Arc<RuntimeClient>,
-    pub engine: Arc<ModelEngine>,
-    pub buffer: Arc<dyn ExperienceBuffer>,
-    pub sync: Arc<dyn WeightSync>,
-    pub explorers: Vec<Arc<Explorer>>,
-    pub task_source: Arc<dyn TaskSource>,
-    pub trainer: Option<Trainer>,
-    origin: Instant,
-    timeline: Arc<Mutex<Vec<TimelineEvent>>>,
-}
-
-/// Optional overrides for [`RftSession::build_with`]: data pipelines and
-/// custom-algorithm resources plug in here.
-#[derive(Default)]
-pub struct BuildOpts {
-    pub task_source: Option<Arc<dyn TaskSource>>,
-    pub processor: Option<Arc<dyn crate::data::ExperienceProcessor>>,
-    /// Expert-trajectory buffer for algorithms whose sample strategy
-    /// mixes a second source (MIX-family specs).
-    pub expert_buffer: Option<Arc<dyn ExperienceBuffer>>,
-}
-
-impl RftSession {
-    /// Wire up a session from config.  `task_source` / `processor`
-    /// override the defaults (data pipelines plug in here).
-    pub fn build(
-        cfg: RftConfig,
-        task_source: Option<Arc<dyn TaskSource>>,
-        processor: Option<Arc<dyn crate::data::ExperienceProcessor>>,
-    ) -> Result<RftSession> {
-        Self::build_with(cfg, BuildOpts { task_source, processor, expert_buffer: None })
-    }
-
-    /// Wire up a session from config with the full override set.
-    pub fn build_with(cfg: RftConfig, opts: BuildOpts) -> Result<RftSession> {
-        let BuildOpts { task_source, processor, expert_buffer } = opts;
-        let manifest = Arc::new(match &cfg.artifacts_dir {
-            Some(d) => Manifest::load(d)?,
-            None => Manifest::load_default().context("artifacts not built (run `make artifacts`)")?,
-        });
-        let client = RuntimeClient::global();
-        let engine = Arc::new(ModelEngine::new(client.clone(), &manifest, &cfg.model_preset)?);
-        engine.validate_manifest()?;
-        engine.warmup()?;
-        let tokenizer = Arc::new(Tokenizer::new());
-        let monitor = Arc::new(Monitor::new(cfg.monitor_dir.clone())?);
-
-        // both sides start from identical weights
-        let trainer_params = ParamStore::init(&engine.model, cfg.seed)?;
-        let init_snapshot = trainer_params.snapshot()?;
-
-        // buffer (+ optional experience shaping stage)
-        let queue = Arc::new(QueueBuffer::new(cfg.buffer_capacity));
-        let base: Arc<dyn ExperienceBuffer> = queue;
-        let buffer: Arc<dyn ExperienceBuffer> = match processor {
-            Some(p) => Arc::new(ShapingBuffer::new(base, p)),
-            None => base,
-        };
-
-        // weight sync service
-        let sync: Arc<dyn WeightSync> = match cfg.sync_method.as_str() {
-            "memory" => Arc::new(MemorySync::new()),
-            "checkpoint" => {
-                let dir = cfg
-                    .sync_dir
-                    .clone()
-                    .unwrap_or_else(|| std::env::temp_dir().join("trft_sync"));
-                let names = engine
-                    .model
-                    .params
-                    .iter()
-                    .map(|p| (p.name.clone(), p.shape.clone()))
-                    .collect();
-                Arc::new(CheckpointSync::new(dir, &cfg.model_preset, names)?)
-            }
-            other => bail!("unknown sync method '{other}'"),
-        };
-
-        // explorers
-        let registry = Arc::new(WorkflowRegistry::with_builtins());
-        let sampling = SamplingArgs {
-            temperature: cfg.temperature,
-            top_k: cfg.top_k,
-            top_p: cfg.top_p,
-            max_new_tokens: cfg.max_new_tokens,
-            seed: cfg.seed,
-        };
-        let mut explorers = Vec::with_capacity(cfg.explorer_count);
-        for i in 0..cfg.explorer_count {
-            let params = ParamStore::from_snapshot(&engine.model, &init_snapshot)?;
-            let gen = Arc::new(GenerationEngine::new(Arc::clone(&engine), params));
-            let ex_cfg = ExplorerConfig {
-                runner: RunnerConfig {
-                    timeout: Duration::from_secs_f64(cfg.task_timeout_s),
-                    max_attempts: cfg.task_max_attempts,
-                    retry_delay: Duration::from_millis(20),
-                    seed: cfg.seed ^ (i as u64) << 8,
-                },
-                sampling: sampling.clone(),
-                threads: cfg.explorer_threads,
-            };
-            explorers.push(Arc::new(Explorer::new(
-                i,
-                gen,
-                Arc::clone(&registry),
-                Arc::clone(&tokenizer),
-                Arc::clone(&buffer),
-                ex_cfg,
-            )));
-        }
-
-        // task source
-        let task_source: Arc<dyn TaskSource> = match task_source {
-            Some(s) => s,
-            None => match cfg.workflow.as_str() {
-                "alfworld" => Arc::new(AlfworldTaskSource::new(cfg.seed, cfg.repeat_times)),
-                _ => Arc::new(MathTaskSource::new(
-                    cfg.seed,
-                    cfg.min_difficulty,
-                    cfg.max_difficulty,
-                    cfg.repeat_times,
-                )),
-            },
-        };
-
-        // trainer: resolve the algorithm spec from the registry; the
-        // spec links its own sample strategy (paper §3.2)
-        let spec = AlgorithmRegistry::global().get(&cfg.algorithm)?;
-        let mut tcfg = TrainerConfig::from_spec(Arc::clone(&spec));
-        tcfg.algorithm.hyper = cfg.effective_hyper(&spec);
-        tcfg.algorithm.adv_std_normalize = cfg.adv_std_normalize;
-        let strategy = spec.sample.build(&StrategyCtx {
-            buffer: Arc::clone(&buffer),
-            expert_buffer,
-            expert_fraction: cfg.mix.expert_fraction,
-            timeout: Duration::from_secs(600),
-        })?;
-        let trainer = Trainer::new(Arc::clone(&engine), trainer_params, strategy, tcfg)?;
-
-        Ok(RftSession {
-            cfg,
-            monitor,
-            tokenizer,
-            manifest,
-            client,
-            engine,
-            buffer,
-            sync,
-            explorers,
-            task_source,
-            trainer: Some(trainer),
-            origin: Instant::now(),
-            timeline: Arc::new(Mutex::new(vec![])),
-        })
-    }
-
-    fn record(&self, role: &str, kind: &str, index: u64, start: Instant, end: Instant) {
-        let origin = self.origin;
-        self.timeline.lock().unwrap().push(TimelineEvent {
-            role: role.to_string(),
-            kind: kind.to_string(),
-            index,
-            start_s: start.duration_since(origin).as_secs_f64(),
-            end_s: end.duration_since(origin).as_secs_f64(),
-        });
-    }
-
-    /// Dispatch on the configured mode.
-    pub fn run(&mut self) -> Result<ModeReport> {
-        match RftMode::parse(&self.cfg.mode)? {
-            RftMode::Both => self.run_both(),
-            RftMode::Async => self.run_async(),
-            RftMode::TrainOnly => self.run_train_only(),
-            RftMode::Bench => bail!("use run_bench(tiers) for bench mode"),
-        }
-    }
-
-    /// Synchronous family (Fig. 4 a/b): windowed gating between explorer
-    /// and trainer.
-    pub fn run_both(&mut self) -> Result<ModeReport> {
-        let cfg = self.cfg.clone();
-        let total = cfg.total_steps;
-        let interval = cfg.sync_interval;
-        let offset = cfg.sync_offset;
-        let mut trainer = self.trainer.take().context("trainer already consumed")?;
-        let explorer = Arc::clone(&self.explorers[0]);
-        let source = Arc::clone(&self.task_source);
-        let sync = Arc::clone(&self.sync);
-        let monitor = Arc::clone(&self.monitor);
-        let coord = Arc::new((
-            Mutex::new(CoordState { synced_windows: 0, explored_batches: 0, failed: false }),
-            Condvar::new(),
-        ));
-
-        explorer.reset_utilization();
-        let run_start = Instant::now();
-        let origin = self.origin;
-        let timeline = Arc::clone(&self.timeline);
-
-        // ---- explorer thread ----
-        let exp_coord = Arc::clone(&coord);
-        let exp_monitor = Arc::clone(&monitor);
-        let exp_timeline = Arc::clone(&timeline);
-        let explorer_handle = std::thread::Builder::new()
-            .name("explorer-loop".into())
-            .spawn(move || -> Result<()> {
-                for e in 0..total {
-                    let need_window = e.saturating_sub(offset) / interval;
-                    {
-                        let (lock, cvar) = &*exp_coord;
-                        let mut st = lock.lock().unwrap();
-                        while st.synced_windows < need_window && !st.failed {
-                            st = cvar.wait(st).unwrap();
-                        }
-                        if st.failed {
-                            return Ok(());
-                        }
-                    }
-                    explorer.sync_weights(&*sync)?;
-                    let t0 = Instant::now();
-                    let tasks = source.next_batch(cfg.batch_tasks);
-                    let stats = explorer.explore_batch(tasks)?;
-                    let t1 = Instant::now();
-                    exp_timeline.lock().unwrap().push(TimelineEvent {
-                        role: "explorer".into(),
-                        kind: "rollout".into(),
-                        index: e,
-                        start_s: t0.duration_since(origin).as_secs_f64(),
-                        end_s: t1.duration_since(origin).as_secs_f64(),
-                    });
-                    exp_monitor.log(
-                        "explorer",
-                        e,
-                        &[
-                            ("experiences".into(), stats.experiences as f64),
-                            ("skipped".into(), stats.skipped as f64),
-                            ("batch_s".into(), (t1 - t0).as_secs_f64()),
-                        ],
-                    );
-                    let (lock, cvar) = &*exp_coord;
-                    lock.lock().unwrap().explored_batches += 1;
-                    cvar.notify_all();
-                }
-                Ok(())
-            })
-            .expect("spawn explorer loop");
-
-        // ---- trainer loop (this thread) ----
-        let mut compute_total = 0.0;
-        let mut sync_count = 0u64;
-        let mut snapshots = vec![];
-        let mut train_err: Option<anyhow::Error> = None;
-        for t in 0..total {
-            let t0 = Instant::now();
-            let m = match trainer.train_step() {
-                Ok(m) => m,
-                Err(e) => {
-                    train_err = Some(e);
-                    let (lock, cvar) = &*coord;
-                    lock.lock().unwrap().failed = true;
-                    cvar.notify_all();
-                    break;
-                }
-            };
-            let t1 = Instant::now();
-            compute_total += m.compute_s;
-            self.record("trainer", "train", t, t0, t1);
-            let mut logs: Vec<(String, f64)> = vec![
-                ("reward".into(), m.mean_reward),
-                ("response_len".into(), m.mean_response_len),
-                ("sample_wait_s".into(), m.sample_wait_s),
-                ("compute_s".into(), m.compute_s),
-            ];
-            logs.extend(m.named.iter().map(|(n, v)| (n.clone(), *v as f64)));
-            monitor.log("trainer", m.step, &logs);
-
-            if (t + 1) % interval == 0 {
-                let s0 = Instant::now();
-                trainer.publish_weights(self.sync.as_ref())?;
-                sync_count += 1;
-                self.record("trainer", "weight_sync", sync_count, s0, Instant::now());
-                let (lock, cvar) = &*coord;
-                lock.lock().unwrap().synced_windows += 1;
-                cvar.notify_all();
-            }
-            if cfg.eval_every > 0 && (t + 1) % cfg.eval_every == 0 {
-                snapshots.push((t + 1, trainer.params().snapshot()?));
-            }
-        }
-
-        let explorer_result = explorer_handle.join().expect("explorer thread");
-        if let Some(e) = train_err {
-            return Err(e.context("trainer loop failed"));
-        }
-        explorer_result.context("explorer loop failed")?;
-
-        let wall = run_start.elapsed().as_secs_f64();
-        let report = ModeReport {
-            mode: format!("both(i={interval},o={offset})"),
-            wall_s: wall,
-            train_steps: trainer.step(),
-            explore_batches: coord.0.lock().unwrap().explored_batches,
-            sync_count,
-            explorer_util: self.explorers[0].utilization_percent(),
-            trainer_util: 100.0 * compute_total / wall,
-            device_busy: 100.0 * self.client.total_exec_seconds().min(wall) / wall,
-            trainer_metrics: trainer.history().to_vec(),
-            timeline: self.timeline.lock().unwrap().clone(),
-            snapshots,
-            final_eval: None,
-        };
-        self.trainer = Some(trainer);
-        Ok(report)
-    }
-
-    /// Fully asynchronous (Fig. 4 c) and multi-explorer (Fig. 4 d):
-    /// explorers free-run against buffer backpressure; the trainer
-    /// publishes weights every `sync_interval` steps and explorers pull at
-    /// their own pace.
-    pub fn run_async(&mut self) -> Result<ModeReport> {
-        let cfg = self.cfg.clone();
-        let total = cfg.total_steps;
-        let interval = cfg.sync_interval;
-        let mut trainer = self.trainer.take().context("trainer already consumed")?;
-        let monitor = Arc::clone(&self.monitor);
-        let cancel = CancellationToken::new();
-        let origin = self.origin;
-        let timeline = Arc::clone(&self.timeline);
-
-        let run_start = Instant::now();
-        let mut handles = vec![];
-        for explorer in &self.explorers {
-            explorer.reset_utilization();
-            let explorer = Arc::clone(explorer);
-            let source = Arc::clone(&self.task_source);
-            let sync = Arc::clone(&self.sync);
-            let cancel = cancel.clone();
-            let monitor = Arc::clone(&monitor);
-            let timeline = Arc::clone(&timeline);
-            let batch_tasks = cfg.batch_tasks;
-            handles.push(
-                std::thread::Builder::new()
-                    .name(format!("explorer-{}", explorer.id))
-                    .spawn(move || -> Result<u64> {
-                        let mut batches = 0u64;
-                        while !cancel.is_cancelled() {
-                            // staggered weight pulls: explorers sync whenever
-                            // something newer exists (their own pace)
-                            let _ = explorer.sync_weights(&*sync);
-                            let t0 = Instant::now();
-                            let tasks = source.next_batch(batch_tasks);
-                            match explorer.explore_batch(tasks) {
-                                Ok(stats) => {
-                                    let t1 = Instant::now();
-                                    timeline.lock().unwrap().push(TimelineEvent {
-                                        role: format!("explorer-{}", explorer.id),
-                                        kind: "rollout".into(),
-                                        index: batches,
-                                        start_s: t0.duration_since(origin).as_secs_f64(),
-                                        end_s: t1.duration_since(origin).as_secs_f64(),
-                                    });
-                                    monitor.log(
-                                        &format!("explorer-{}", explorer.id),
-                                        batches,
-                                        &[
-                                            ("experiences".into(), stats.experiences as f64),
-                                            ("weight_version".into(), explorer.weight_version() as f64),
-                                        ],
-                                    );
-                                    batches += 1;
-                                }
-                                Err(e) => {
-                                    if cancel.is_cancelled() {
-                                        break; // buffer closed at shutdown
-                                    }
-                                    crate::log_warn!("explorer", "batch failed: {e:#}");
-                                }
-                            }
-                        }
-                        Ok(batches)
-                    })
-                    .expect("spawn explorer"),
-            );
-        }
-
-        // trainer free-runs on this thread
-        let mut compute_total = 0.0;
-        let mut sync_count = 0u64;
-        let mut snapshots = vec![];
-        let mut result: Result<()> = Ok(());
-        for t in 0..total {
-            let t0 = Instant::now();
-            match trainer.train_step() {
-                Ok(m) => {
-                    compute_total += m.compute_s;
-                    self.record("trainer", "train", t, t0, Instant::now());
-                    let mut logs: Vec<(String, f64)> = vec![
-                        ("reward".into(), m.mean_reward),
-                        ("response_len".into(), m.mean_response_len),
-                        ("sample_wait_s".into(), m.sample_wait_s),
-                    ];
-                    logs.extend(m.named.iter().map(|(n, v)| (n.clone(), *v as f64)));
-                    monitor.log("trainer", m.step, &logs);
-                }
-                Err(e) => {
-                    result = Err(e.context("async trainer failed"));
-                    break;
-                }
-            }
-            if (t + 1) % interval == 0 {
-                trainer.publish_weights(&*sync_ref(&self.sync))?;
-                sync_count += 1;
-            }
-            if cfg.eval_every > 0 && (t + 1) % cfg.eval_every == 0 {
-                snapshots.push((t + 1, trainer.params().snapshot()?));
-            }
-        }
-
-        cancel.cancel();
-        self.buffer.close();
-        let mut explore_batches = 0;
-        for h in handles {
-            explore_batches += h.join().expect("explorer thread")?;
-        }
-        result?;
-
-        let wall = run_start.elapsed().as_secs_f64();
-        let report = ModeReport {
-            mode: format!("async(i={interval},x{})", cfg.explorer_count),
-            wall_s: wall,
-            train_steps: trainer.step(),
-            explore_batches,
-            sync_count,
-            explorer_util: self
-                .explorers
-                .iter()
-                .map(|e| e.utilization_percent())
-                .sum::<f64>()
-                / self.explorers.len() as f64,
-            trainer_util: 100.0 * compute_total / wall,
-            device_busy: 100.0 * self.client.total_exec_seconds().min(wall) / wall,
-            trainer_metrics: trainer.history().to_vec(),
-            timeline: self.timeline.lock().unwrap().clone(),
-            snapshots,
-            final_eval: None,
-        };
-        self.trainer = Some(trainer);
-        Ok(report)
-    }
-
-    /// Train-only mode (paper §2.1.1): offline SFT/DPO/off-policy RL on a
-    /// pre-filled buffer; no explorers launched.
-    pub fn run_train_only(&mut self) -> Result<ModeReport> {
-        let cfg = self.cfg.clone();
-        let mut trainer = self.trainer.take().context("trainer already consumed")?;
-        let monitor = Arc::clone(&self.monitor);
-        let run_start = Instant::now();
-        let mut compute_total = 0.0;
-        let mut snapshots = vec![];
-        for t in 0..cfg.total_steps {
-            let m = trainer.train_step().context("train-only step")?;
-            compute_total += m.compute_s;
-            let mut logs: Vec<(String, f64)> =
-                vec![("reward".into(), m.mean_reward), ("compute_s".into(), m.compute_s)];
-            logs.extend(m.named.iter().map(|(n, v)| (n.clone(), *v as f64)));
-            monitor.log("trainer", m.step, &logs);
-            if cfg.eval_every > 0 && (t + 1) % cfg.eval_every == 0 {
-                snapshots.push((t + 1, trainer.params().snapshot()?));
-            }
-        }
-        let wall = run_start.elapsed().as_secs_f64();
-        let report = ModeReport {
-            mode: "train".into(),
-            wall_s: wall,
-            train_steps: trainer.step(),
-            trainer_util: 100.0 * compute_total / wall,
-            device_busy: 100.0 * self.client.total_exec_seconds().min(wall) / wall,
-            trainer_metrics: trainer.history().to_vec(),
-            snapshots,
-            ..Default::default()
-        };
-        self.trainer = Some(trainer);
-        Ok(report)
-    }
-
-    /// Bench mode: evaluate the explorer's current weights (or a loaded
-    /// snapshot) on benchmark tiers; Avg@K per tier.
-    pub fn run_bench(
-        &self,
-        tiers: &[&str],
-        tasks_per_tier: usize,
-        repeat_times: usize,
-        temperature: f32,
-    ) -> Result<Vec<(String, EvalReport)>> {
-        let explorer = &self.explorers[0];
-        let mut out = Vec::with_capacity(tiers.len());
-        for tier in tiers {
-            let tasks =
-                super::tasks::benchmark_tasks(tier, tasks_per_tier, repeat_times, self.cfg.seed ^ 0xbe);
-            let report = explorer.evaluate(&tasks, temperature)?;
-            out.push((tier.to_string(), report));
-        }
-        Ok(out)
-    }
-
-    /// Load a weight snapshot into every explorer (bench over checkpoints).
-    pub fn load_explorer_weights(&self, weights: &[Vec<f32>], version: u64) -> Result<()> {
-        for e in &self.explorers {
-            e.engine().set_weights(weights, version)?;
-        }
-        Ok(())
-    }
-}
-
-fn sync_ref(s: &Arc<dyn WeightSync>) -> &dyn WeightSync {
-    s.as_ref()
-}
-
-/// Convenience entry point: build + run from a config.
-pub fn run_mode(cfg: RftConfig) -> Result<ModeReport> {
-    let mut session = RftSession::build(cfg, None, None)?;
-    session.run()
-}
-
-/// SFT warm-up producing a weight snapshot (the paper's
-/// `sft_warmup_dataset` pattern): a cold random model emits no valid
-/// answers, so GRPO's group rewards are all zero and carry no gradient;
-/// a short supervised phase on gold answers breaks the degeneracy.
-/// Learning benches and the e2e example start from this snapshot.
-pub fn sft_warmup_snapshot(preset: &str, seed: u64, steps: u64) -> Result<Vec<Vec<f32>>> {
-    use crate::data::formatter::{FormatSpec, Formatter};
-    use crate::envs::math::MathTaskGen;
-    use crate::util::json::Value;
-
-    let mut cfg = RftConfig::default();
-    cfg.mode = "train".into();
-    cfg.algorithm = "sft".into();
-    cfg.model_preset = preset.into();
-    cfg.total_steps = steps;
-    cfg.seed = seed;
-    cfg.hyper.lr = 2e-3;
-    let mut session = RftSession::build(cfg, None, None)?;
-    let formatter =
-        Formatter { spec: FormatSpec::default(), tokenizer: Arc::clone(&session.tokenizer) };
-    let (b, _, _) = session.engine.train_shape("sft")?;
-    let mut gen = MathTaskGen::new(seed ^ 0x5f7, "warmup");
-    let mut exps = Vec::with_capacity(steps as usize * b);
-    for _ in 0..(steps as usize * b) {
-        let t = gen.gen(1);
-        let raw = Value::obj(vec![
-            ("question", Value::str(t.question.clone())),
-            ("answer", Value::str(t.answer.to_string())),
-        ]);
-        exps.push(formatter.to_expert_experience(&raw)?);
-    }
-    session.buffer.write(exps)?;
-    session.run()?;
-    session.trainer.as_ref().unwrap().params().snapshot()
-}
-
-impl RftSession {
-    /// Start trainer AND all explorers from an externally produced weight
-    /// snapshot (e.g. [`sft_warmup_snapshot`]).
-    pub fn load_initial_weights(&mut self, weights: &[Vec<f32>]) -> Result<()> {
-        self.trainer
-            .as_mut()
-            .context("trainer already consumed")?
-            .load_weights(weights, 1, true)?;
-        self.load_explorer_weights(weights, 1)
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn mode_parse_is_case_insensitive() {
-        assert_eq!(RftMode::parse("both").unwrap(), RftMode::Both);
-        assert_eq!(RftMode::parse("BOTH").unwrap(), RftMode::Both);
-        assert_eq!(RftMode::parse(" Async ").unwrap(), RftMode::Async);
-        assert_eq!(RftMode::parse("Explore").unwrap(), RftMode::Async);
-        assert_eq!(RftMode::parse("TRAIN").unwrap(), RftMode::TrainOnly);
-        assert_eq!(RftMode::parse("Bench").unwrap(), RftMode::Bench);
-    }
-
-    #[test]
-    fn mode_parse_error_lists_valid_modes() {
-        let err = RftMode::parse("warp").unwrap_err().to_string();
-        assert!(err.contains("unknown mode 'warp'"), "{err}");
-        for valid in ["both", "async", "explore", "train", "bench"] {
-            assert!(err.contains(valid), "error should list '{valid}': {err}");
-        }
-    }
-}
+pub use super::policy::RftMode;
+pub use super::report::{ModeReport, TimelineEvent};
+pub use super::scheduler::{run_mode, sft_warmup_snapshot, BuildOpts, RftSession};

@@ -1,0 +1,511 @@
+//! Sync policies: the paper's unified RFT modes (§2.1.1, Fig. 4) as
+//! *policy parameterizations of one scheduler*, not separate loops.
+//!
+//! A [`SyncPolicy`] makes the three coordination decisions the old
+//! per-mode loops hard-coded:
+//!
+//! 1. **Explorer admission** — may an explorer start rollout batch `e`
+//!    given the observed run [`Progress`]?
+//! 2. **Weight-publish cadence** — does the trainer publish after its
+//!    `n`-th completed step?
+//! 3. **Shutdown shape** — via [`ExplorerPlan`]: a fixed per-explorer
+//!    batch budget (lockstep modes), free-running until the trainer
+//!    finishes (async modes), or no explorers at all (offline training).
+//!
+//! Builtins: [`Windowed`] reproduces `mode=both` (synchronous /
+//! one-step off-policy), [`Free`] reproduces `mode=async` including
+//! multi-explorer, [`Offline`] reproduces `mode=train`, and
+//! [`BoundedStaleness`] is the off-policyness control the UFT line of
+//! work motivates: explorers block once the rollout window they would
+//! generate leads the published weight version by more than
+//! `max_version_lag` windows.  Custom policies register in the
+//! [`SyncPolicyRegistry`] and are selected by `scheduler.policy` in
+//! config, mirroring the trainer's `AlgorithmRegistry`.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, OnceLock, RwLock};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::config::RftConfig;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RftMode {
+    /// Synchronous / one-step off-policy (explorer+trainer coordinated).
+    Both,
+    /// Fully asynchronous (incl. multi-explorer).
+    Async,
+    /// Trainer alone on an existing buffer (SFT/DPO/offline RL).
+    TrainOnly,
+    /// Evaluation of current/checkpointed weights.
+    Bench,
+}
+
+impl RftMode {
+    /// Case-insensitive mode lookup.
+    pub fn parse(s: &str) -> Result<RftMode> {
+        Ok(match s.trim().to_ascii_lowercase().as_str() {
+            "both" => RftMode::Both,
+            "async" | "explore" => RftMode::Async,
+            "train" => RftMode::TrainOnly,
+            "bench" => RftMode::Bench,
+            _ => bail!("unknown mode '{s}' (valid modes: both, async, explore, train, bench)"),
+        })
+    }
+}
+
+/// The run progress every coordination decision is made against — the
+/// scheduler updates one shared copy (in an `exec::WatchCell`) and
+/// policies only ever observe it.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Progress {
+    /// Completed trainer steps.
+    pub trainer_steps: u64,
+    /// Completed weight publishes (= the latest published version).
+    pub published_windows: u64,
+    /// Completed explorer batches, summed over explorers.
+    pub explored_batches: u64,
+}
+
+/// How a policy wants explorer drivers run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExplorerPlan {
+    /// No explorer drivers (offline training on a pre-filled buffer).
+    None,
+    /// Each explorer runs exactly this many batches, then exits.
+    Batches(u64),
+    /// Explorers free-run until the trainer finishes and cancels the run.
+    FreeRun,
+}
+
+/// One coordination pattern over the generic scheduler (see module docs).
+pub trait SyncPolicy: Send + Sync {
+    /// Report label, e.g. `both(i=2,o=0)`.
+    fn label(&self, explorer_count: usize) -> String;
+    /// Explorer launch/shutdown shape for a run of `total_steps`.
+    fn explorer_plan(&self, total_steps: u64) -> ExplorerPlan;
+    /// May an explorer start its rollout batch `batch` now?
+    fn admit(&self, batch: u64, progress: Progress) -> bool;
+    /// Publish weights after `steps_done` completed trainer steps?
+    fn publish_after(&self, steps_done: u64) -> bool;
+    /// Off-policyness accounting: how many publish-windows the weights
+    /// used for `batch` (version `weight_version`) trail the window the
+    /// batch belongs to.  0 for policies without a window structure.
+    fn version_lag(&self, batch: u64, weight_version: u64) -> u64 {
+        let _ = (batch, weight_version);
+        0
+    }
+    /// Whether several explorers may run under this policy (lockstep
+    /// admission assumes a single global batch stream).
+    fn multi_explorer(&self) -> bool {
+        true
+    }
+}
+
+/// Windowed gating (`mode=both`, Fig. 4 a/b): the explorer may start
+/// rollout batch `e` once weight-sync window
+/// `floor((e - offset) / interval)` has been published; the trainer
+/// publishes every `interval` steps.  `interval=1, offset=0` is the
+/// strictly on-policy ping-pong; larger values open the pipeline.
+#[derive(Debug, Clone, Copy)]
+pub struct Windowed {
+    pub interval: u64,
+    pub offset: u64,
+}
+
+impl SyncPolicy for Windowed {
+    fn label(&self, _explorer_count: usize) -> String {
+        format!("both(i={},o={})", self.interval, self.offset)
+    }
+    fn explorer_plan(&self, total_steps: u64) -> ExplorerPlan {
+        ExplorerPlan::Batches(total_steps)
+    }
+    fn admit(&self, batch: u64, progress: Progress) -> bool {
+        progress.published_windows >= batch.saturating_sub(self.offset) / self.interval
+    }
+    fn publish_after(&self, steps_done: u64) -> bool {
+        steps_done % self.interval == 0
+    }
+    fn version_lag(&self, batch: u64, weight_version: u64) -> u64 {
+        (batch / self.interval).saturating_sub(weight_version)
+    }
+    fn multi_explorer(&self) -> bool {
+        false
+    }
+}
+
+/// Free-running (`mode=async`, Fig. 4 c/d): no admission gating —
+/// explorers run against buffer backpressure and pull weights at their
+/// own pace; the trainer publishes every `interval` steps.
+#[derive(Debug, Clone, Copy)]
+pub struct Free {
+    pub interval: u64,
+}
+
+impl SyncPolicy for Free {
+    fn label(&self, explorer_count: usize) -> String {
+        format!("async(i={},x{explorer_count})", self.interval)
+    }
+    fn explorer_plan(&self, _total_steps: u64) -> ExplorerPlan {
+        ExplorerPlan::FreeRun
+    }
+    fn admit(&self, _batch: u64, _progress: Progress) -> bool {
+        true
+    }
+    fn publish_after(&self, steps_done: u64) -> bool {
+        steps_done % self.interval == 0
+    }
+    // version_lag: trait default (0) — free-running batches are not
+    // gated to publish windows, so a window-based lag would measure
+    // explorer throughput, not weight staleness
+}
+
+/// Offline training (`mode=train`): no explorers, no publishes — the
+/// trainer consumes a pre-filled buffer (SFT / DPO / offline RL).
+#[derive(Debug, Clone, Copy)]
+pub struct Offline;
+
+impl SyncPolicy for Offline {
+    fn label(&self, _explorer_count: usize) -> String {
+        "train".into()
+    }
+    fn explorer_plan(&self, _total_steps: u64) -> ExplorerPlan {
+        ExplorerPlan::None
+    }
+    fn admit(&self, _batch: u64, _progress: Progress) -> bool {
+        false
+    }
+    fn publish_after(&self, _steps_done: u64) -> bool {
+        false
+    }
+}
+
+/// Bounded staleness: free-running explorers with a hard off-policyness
+/// cap.  Rollout batch `e` belongs to weight window `e / interval`; the
+/// explorer may start it only while that window leads the published
+/// version by at most `max_version_lag` windows, and blocks otherwise
+/// until the trainer publishes.  `max_version_lag = 0` degenerates to
+/// windowed on-policy gating (with async shutdown); large values
+/// degenerate to [`Free`].
+#[derive(Debug, Clone, Copy)]
+pub struct BoundedStaleness {
+    pub interval: u64,
+    pub max_version_lag: u64,
+}
+
+impl SyncPolicy for BoundedStaleness {
+    fn label(&self, explorer_count: usize) -> String {
+        format!("staleness(i={},lag={},x{explorer_count})", self.interval, self.max_version_lag)
+    }
+    fn explorer_plan(&self, _total_steps: u64) -> ExplorerPlan {
+        ExplorerPlan::FreeRun
+    }
+    fn admit(&self, batch: u64, progress: Progress) -> bool {
+        batch / self.interval <= progress.published_windows + self.max_version_lag
+    }
+    fn publish_after(&self, steps_done: u64) -> bool {
+        steps_done % self.interval == 0
+    }
+    fn version_lag(&self, batch: u64, weight_version: u64) -> u64 {
+        (batch / self.interval).saturating_sub(weight_version)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// policy registry
+
+/// Builds a [`SyncPolicy`] from the run config.  Implemented for plain
+/// closures, so registration is one line.
+pub trait SyncPolicyFactory: Send + Sync {
+    fn build(&self, cfg: &RftConfig) -> Result<Arc<dyn SyncPolicy>>;
+}
+
+impl<F> SyncPolicyFactory for F
+where
+    F: Fn(&RftConfig) -> Result<Arc<dyn SyncPolicy>> + Send + Sync,
+{
+    fn build(&self, cfg: &RftConfig) -> Result<Arc<dyn SyncPolicy>> {
+        self(cfg)
+    }
+}
+
+/// The sync-policy registry (mirrors `AlgorithmRegistry` /
+/// `WeightSyncRegistry`): `scheduler.policy` names resolve here.
+/// Lookup is case-insensitive; unknown names fail with the catalog.
+pub struct SyncPolicyRegistry {
+    factories: RwLock<BTreeMap<String, Arc<dyn SyncPolicyFactory>>>,
+}
+
+impl SyncPolicyRegistry {
+    /// An empty registry (tests); production code uses [`global`](Self::global).
+    pub fn new() -> SyncPolicyRegistry {
+        SyncPolicyRegistry { factories: RwLock::new(BTreeMap::new()) }
+    }
+
+    /// A registry pre-populated with the builtin policies and their
+    /// mode-name aliases.
+    pub fn with_builtins() -> SyncPolicyRegistry {
+        let r = SyncPolicyRegistry::new();
+        let windowed = |cfg: &RftConfig| -> Result<Arc<dyn SyncPolicy>> {
+            Ok(Arc::new(Windowed { interval: cfg.sync_interval, offset: cfg.sync_offset }))
+        };
+        let free = |cfg: &RftConfig| -> Result<Arc<dyn SyncPolicy>> {
+            Ok(Arc::new(Free { interval: cfg.sync_interval }))
+        };
+        let offline =
+            |_cfg: &RftConfig| -> Result<Arc<dyn SyncPolicy>> { Ok(Arc::new(Offline)) };
+        let bounded = |cfg: &RftConfig| -> Result<Arc<dyn SyncPolicy>> {
+            Ok(Arc::new(BoundedStaleness {
+                interval: cfg.sync_interval,
+                max_version_lag: cfg.scheduler.max_version_lag,
+            }))
+        };
+        r.register("windowed", windowed);
+        r.register("both", windowed);
+        r.register("free", free);
+        r.register("async", free);
+        r.register("offline", offline);
+        r.register("train", offline);
+        r.register("bounded_staleness", bounded);
+        r.register("staleness", bounded);
+        r
+    }
+
+    /// The process-wide registry.  Custom policies register here before
+    /// building a session and are selected with `scheduler.policy`:
+    ///
+    /// ```ignore
+    /// SyncPolicyRegistry::global().register("every_other", |cfg: &RftConfig| {
+    ///     Ok(Arc::new(Windowed { interval: 2 * cfg.sync_interval, offset: 1 })
+    ///         as Arc<dyn SyncPolicy>)
+    /// });
+    /// ```
+    pub fn global() -> &'static SyncPolicyRegistry {
+        static GLOBAL: OnceLock<SyncPolicyRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(SyncPolicyRegistry::with_builtins)
+    }
+
+    /// Register a factory under `name` (stored lowercased; latest wins).
+    pub fn register(&self, name: &str, factory: impl SyncPolicyFactory + 'static) {
+        self.factories
+            .write()
+            .unwrap()
+            .insert(name.trim().to_ascii_lowercase(), Arc::new(factory));
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.factories.read().unwrap().contains_key(&name.trim().to_ascii_lowercase())
+    }
+
+    /// Registered policy names (incl. aliases), sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.factories.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Resolve `name` (case-insensitive) and build the policy.
+    pub fn build(&self, name: &str, cfg: &RftConfig) -> Result<Arc<dyn SyncPolicy>> {
+        // one guard for lookup AND the error's name list (see
+        // AlgorithmRegistry::get for the deadlock rationale)
+        let factories = self.factories.read().unwrap();
+        match factories.get(&name.trim().to_ascii_lowercase()) {
+            Some(f) => f.build(cfg),
+            None => Err(anyhow!(
+                "unknown sync policy '{name}' — registered policies: [{}]; \
+                 register custom policies with SyncPolicyRegistry::global().register(..)",
+                factories.keys().cloned().collect::<Vec<_>>().join(", ")
+            )),
+        }
+    }
+}
+
+impl Default for SyncPolicyRegistry {
+    fn default() -> Self {
+        SyncPolicyRegistry::new()
+    }
+}
+
+/// Resolve the sync policy for a config: an explicit `scheduler.policy`
+/// wins; otherwise the `mode` maps onto its builtin policy.
+pub fn resolve_policy(cfg: &RftConfig) -> Result<Arc<dyn SyncPolicy>> {
+    if let Some(name) = &cfg.scheduler.policy {
+        return SyncPolicyRegistry::global().build(name, cfg);
+    }
+    let name = match RftMode::parse(&cfg.mode)? {
+        RftMode::Both => "windowed",
+        RftMode::Async => "free",
+        RftMode::TrainOnly => "offline",
+        RftMode::Bench => bail!("bench mode is not a scheduler run (use run_bench(tiers))"),
+    };
+    SyncPolicyRegistry::global().build(name, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_parse_is_case_insensitive() {
+        assert_eq!(RftMode::parse("both").unwrap(), RftMode::Both);
+        assert_eq!(RftMode::parse("BOTH").unwrap(), RftMode::Both);
+        assert_eq!(RftMode::parse(" Async ").unwrap(), RftMode::Async);
+        assert_eq!(RftMode::parse("Explore").unwrap(), RftMode::Async);
+        assert_eq!(RftMode::parse("TRAIN").unwrap(), RftMode::TrainOnly);
+        assert_eq!(RftMode::parse("Bench").unwrap(), RftMode::Bench);
+    }
+
+    #[test]
+    fn mode_parse_error_lists_valid_modes() {
+        let err = RftMode::parse("warp").unwrap_err().to_string();
+        assert!(err.contains("unknown mode 'warp'"), "{err}");
+        for valid in ["both", "async", "explore", "train", "bench"] {
+            assert!(err.contains(valid), "error should list '{valid}': {err}");
+        }
+    }
+
+    fn at(published_windows: u64) -> Progress {
+        Progress { published_windows, ..Default::default() }
+    }
+
+    #[test]
+    fn windowed_interval1_offset0_is_strict_ping_pong() {
+        let p = Windowed { interval: 1, offset: 0 };
+        // batch e never admitted before window e is published
+        for e in 0..20u64 {
+            assert!(!p.admit(e + 1, at(e)), "batch {} admitted at {} windows", e + 1, e);
+            assert!(p.admit(e, at(e)));
+        }
+        assert!(p.admit(0, at(0))); // first batch needs nothing
+        assert!(p.publish_after(1) && p.publish_after(2)); // publish every step
+        assert_eq!(p.explorer_plan(7), ExplorerPlan::Batches(7));
+        assert!(!p.multi_explorer());
+    }
+
+    #[test]
+    fn windowed_offset_and_interval_open_the_pipeline() {
+        // one-step off-policy: batch e needs window e-1
+        let p = Windowed { interval: 1, offset: 1 };
+        assert!(p.admit(1, at(0)) && p.admit(2, at(1)));
+        assert!(!p.admit(2, at(0)));
+        // interval=2: batches 0..=1 need nothing, 2..=3 need one window
+        let p = Windowed { interval: 2, offset: 0 };
+        assert!(p.admit(1, at(0)));
+        assert!(!p.admit(2, at(0)) && p.admit(3, at(1)));
+        assert!(!p.publish_after(1) && p.publish_after(2) && !p.publish_after(3));
+    }
+
+    #[test]
+    fn free_admits_everything_and_free_runs() {
+        let p = Free { interval: 2 };
+        for e in 0..100 {
+            assert!(p.admit(e, at(0)));
+        }
+        assert_eq!(p.explorer_plan(5), ExplorerPlan::FreeRun);
+        assert!(p.multi_explorer());
+        assert!(p.label(2).contains("x2"));
+    }
+
+    #[test]
+    fn offline_spawns_no_explorers_and_never_publishes() {
+        let p = Offline;
+        assert_eq!(p.explorer_plan(9), ExplorerPlan::None);
+        assert!(!p.publish_after(1) && !p.publish_after(100));
+        assert_eq!(p.label(1), "train");
+    }
+
+    #[test]
+    fn bounded_staleness_admission_implies_lag_bound() {
+        // exhaustive check: whenever a batch is admitted, the window it
+        // belongs to leads the published version by at most max_lag —
+        // so the post-pull weight-version lag cannot exceed max_lag
+        for interval in [1u64, 2, 5] {
+            for max_lag in [0u64, 1, 3] {
+                let p = BoundedStaleness { interval, max_version_lag: max_lag };
+                for batch in 0..60u64 {
+                    for published in 0..30u64 {
+                        if p.admit(batch, at(published)) {
+                            // the explorer pulls before rolling out, so its
+                            // version is at least `published`
+                            assert!(
+                                p.version_lag(batch, published) <= max_lag,
+                                "i={interval} lag={max_lag} batch={batch} pub={published}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bounded_staleness_zero_lag_matches_windowed_gating() {
+        let b = BoundedStaleness { interval: 2, max_version_lag: 0 };
+        let w = Windowed { interval: 2, offset: 0 };
+        for batch in 0..40u64 {
+            for published in 0..20u64 {
+                assert_eq!(b.admit(batch, at(published)), w.admit(batch, at(published)));
+            }
+        }
+        // but shutdown stays async-shaped
+        assert_eq!(b.explorer_plan(5), ExplorerPlan::FreeRun);
+    }
+
+    #[test]
+    fn bounded_staleness_blocks_then_unblocks_on_publish() {
+        let p = BoundedStaleness { interval: 1, max_version_lag: 1 };
+        assert!(p.admit(0, at(0)) && p.admit(1, at(0)));
+        assert!(!p.admit(2, at(0)), "lead of 2 windows must block at max_lag=1");
+        assert!(p.admit(2, at(1)), "a publish lifts the block");
+    }
+
+    #[test]
+    fn registry_resolves_modes_and_aliases() {
+        let cfg = RftConfig { sync_interval: 3, sync_offset: 1, ..Default::default() };
+        let reg = SyncPolicyRegistry::global();
+        assert_eq!(reg.build("windowed", &cfg).unwrap().label(1), "both(i=3,o=1)");
+        assert_eq!(reg.build("BOTH", &cfg).unwrap().label(1), "both(i=3,o=1)");
+        assert_eq!(reg.build("Async", &cfg).unwrap().label(2), "async(i=3,x2)");
+        assert_eq!(reg.build("train", &cfg).unwrap().label(1), "train");
+        assert!(reg.build("Staleness", &cfg).unwrap().label(1).contains("lag=1"));
+    }
+
+    #[test]
+    fn registry_unknown_policy_lists_catalog() {
+        let cfg = RftConfig::default();
+        let err = SyncPolicyRegistry::global().build("warp", &cfg).unwrap_err().to_string();
+        assert!(err.contains("unknown sync policy 'warp'"), "{err}");
+        for name in ["windowed", "free", "offline", "bounded_staleness"] {
+            assert!(err.contains(name), "error should list '{name}': {err}");
+        }
+    }
+
+    #[test]
+    fn custom_policy_registers_and_resolves_through_config() {
+        SyncPolicyRegistry::global().register(
+            "unit_custom_policy",
+            |cfg: &RftConfig| -> Result<Arc<dyn SyncPolicy>> {
+                Ok(Arc::new(Windowed { interval: cfg.sync_interval * 2, offset: 1 }))
+            },
+        );
+        let mut cfg = RftConfig::default();
+        cfg.scheduler.policy = Some("Unit_Custom_Policy".into());
+        cfg.sync_interval = 2;
+        let p = resolve_policy(&cfg).unwrap();
+        assert_eq!(p.label(1), "both(i=4,o=1)");
+    }
+
+    #[test]
+    fn resolve_policy_maps_modes_and_rejects_bench() {
+        let mut cfg = RftConfig::default();
+        cfg.mode = "both".into();
+        assert!(resolve_policy(&cfg).unwrap().label(1).starts_with("both"));
+        cfg.mode = "async".into();
+        assert!(resolve_policy(&cfg).unwrap().label(1).starts_with("async"));
+        cfg.mode = "train".into();
+        assert_eq!(resolve_policy(&cfg).unwrap().label(1), "train");
+        cfg.mode = "bench".into();
+        assert!(resolve_policy(&cfg).unwrap_err().to_string().contains("run_bench"));
+        // explicit policy overrides the mode mapping
+        cfg.scheduler.policy = Some("bounded_staleness".into());
+        assert!(resolve_policy(&cfg).unwrap().label(1).starts_with("staleness"));
+    }
+}

@@ -1,0 +1,264 @@
+//! Run reporting: the Fig.-4-style timeline, the per-run [`ModeReport`],
+//! and the [`RunRecorder`] that consolidates what the three seed mode
+//! loops each plumbed by hand — monitor logging, timeline events, eval
+//! snapshots, and utilization accounting.  Every policy goes through the
+//! same recorder, so async runs no longer drop trainer `compute_s` from
+//! the logs or weight-sync spans from the timeline.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::explorer::{EvalReport, RunnerStats};
+use crate::trainer::{StepMetrics, Trainer};
+
+use super::monitor::Monitor;
+
+/// One span on the Fig.-4-style timeline.
+#[derive(Debug, Clone)]
+pub struct TimelineEvent {
+    pub role: String,
+    pub kind: String,
+    pub index: u64,
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+#[derive(Debug, Default)]
+pub struct ModeReport {
+    pub mode: String,
+    pub wall_s: f64,
+    pub train_steps: u64,
+    pub explore_batches: u64,
+    pub sync_count: u64,
+    /// Explorer worker-pool busy fraction, percent (GPU-util analog).
+    pub explorer_util: f64,
+    /// Trainer compute fraction of wall time, percent.
+    pub trainer_util: f64,
+    /// Combined PJRT busy fraction, percent (GPU-power analog).
+    pub device_busy: f64,
+    /// Largest observed explorer weight-version lag, in publish windows
+    /// (the off-policyness a `BoundedStaleness` policy bounds).
+    pub max_version_lag: u64,
+    pub trainer_metrics: Vec<StepMetrics>,
+    pub timeline: Vec<TimelineEvent>,
+    /// (step, weights) snapshots taken every `eval_every` steps.
+    pub snapshots: Vec<(u64, Vec<Vec<f32>>)>,
+    pub final_eval: Option<EvalReport>,
+}
+
+impl ModeReport {
+    pub fn series(&self, metric: &str) -> Vec<f64> {
+        self.trainer_metrics
+            .iter()
+            .filter_map(|m| m.get(metric).map(|v| v as f64))
+            .collect()
+    }
+    pub fn reward_series(&self) -> Vec<f64> {
+        self.trainer_metrics.iter().map(|m| m.mean_reward).collect()
+    }
+    pub fn response_len_series(&self) -> Vec<f64> {
+        self.trainer_metrics.iter().map(|m| m.mean_response_len).collect()
+    }
+}
+
+/// One completed rollout batch, as reported by an explorer driver.
+pub struct RolloutRecord<'a> {
+    pub role: &'a str,
+    pub batch: u64,
+    pub stats: &'a RunnerStats,
+    /// Weight version the batch was generated with (post-pull).
+    pub weight_version: u64,
+    /// Publish-windows this version trails the batch's window.
+    pub version_lag: u64,
+}
+
+/// Per-run event sink shared by the trainer driver and all explorer
+/// drivers; [`RunRecorder::finish`] assembles the [`ModeReport`].
+pub struct RunRecorder {
+    monitor: Arc<Monitor>,
+    /// Session origin, so timelines stay monotonic across `run()` calls.
+    origin: Instant,
+    run_start: Instant,
+    timeline: Mutex<Vec<TimelineEvent>>,
+    snapshots: Mutex<Vec<(u64, Vec<Vec<f32>>)>>,
+    compute_total: Mutex<f64>,
+    sync_count: AtomicU64,
+    max_version_lag: AtomicU64,
+}
+
+impl RunRecorder {
+    pub fn new(monitor: Arc<Monitor>, origin: Instant) -> RunRecorder {
+        RunRecorder {
+            monitor,
+            origin,
+            run_start: Instant::now(),
+            timeline: Mutex::new(vec![]),
+            snapshots: Mutex::new(vec![]),
+            compute_total: Mutex::new(0.0),
+            sync_count: AtomicU64::new(0),
+            max_version_lag: AtomicU64::new(0),
+        }
+    }
+
+    fn span(&self, role: &str, kind: &str, index: u64, start: Instant, end: Instant) {
+        self.timeline.lock().unwrap().push(TimelineEvent {
+            role: role.to_string(),
+            kind: kind.to_string(),
+            index,
+            start_s: start.duration_since(self.origin).as_secs_f64(),
+            end_s: end.duration_since(self.origin).as_secs_f64(),
+        });
+    }
+
+    /// One completed trainer step: timeline span + the uniform monitor
+    /// field set (every policy logs the same keys).
+    pub fn trainer_step(&self, index: u64, m: &StepMetrics, start: Instant, end: Instant) {
+        self.span("trainer", "train", index, start, end);
+        *self.compute_total.lock().unwrap() += m.compute_s;
+        let mut logs: Vec<(String, f64)> = vec![
+            ("reward".into(), m.mean_reward),
+            ("response_len".into(), m.mean_response_len),
+            ("sample_wait_s".into(), m.sample_wait_s),
+            ("compute_s".into(), m.compute_s),
+        ];
+        logs.extend(m.named.iter().map(|(n, v)| (n.clone(), *v as f64)));
+        self.monitor.log("trainer", m.step, &logs);
+    }
+
+    /// One completed weight publish; returns the running sync count.
+    pub fn weight_sync(&self, start: Instant, end: Instant) -> u64 {
+        let count = self.sync_count.fetch_add(1, Ordering::SeqCst) + 1;
+        self.span("trainer", "weight_sync", count, start, end);
+        count
+    }
+
+    /// One completed explorer rollout batch, with the weight version it
+    /// ran at and its version lag in publish windows.
+    pub fn rollout(&self, rec: &RolloutRecord<'_>, start: Instant, end: Instant) {
+        self.span(rec.role, "rollout", rec.batch, start, end);
+        self.max_version_lag.fetch_max(rec.version_lag, Ordering::SeqCst);
+        self.monitor.log(
+            rec.role,
+            rec.batch,
+            &[
+                ("experiences".into(), rec.stats.experiences as f64),
+                ("skipped".into(), rec.stats.skipped as f64),
+                ("batch_s".into(), (end - start).as_secs_f64()),
+                ("weight_version".into(), rec.weight_version as f64),
+                ("version_lag".into(), rec.version_lag as f64),
+            ],
+        );
+    }
+
+    pub fn snapshot(&self, step: u64, weights: Vec<Vec<f32>>) {
+        self.snapshots.lock().unwrap().push((step, weights));
+    }
+
+    pub fn sync_count(&self) -> u64 {
+        self.sync_count.load(Ordering::SeqCst)
+    }
+
+    /// Assemble the report.  `device_exec_seconds` is the PJRT busy time
+    /// over the run (clamped to wall for the busy fraction).
+    pub fn finish(
+        self,
+        label: String,
+        trainer: &Trainer,
+        explore_batches: u64,
+        explorer_util: f64,
+        device_exec_seconds: f64,
+    ) -> ModeReport {
+        let wall = self.run_start.elapsed().as_secs_f64();
+        ModeReport {
+            mode: label,
+            wall_s: wall,
+            train_steps: trainer.step(),
+            explore_batches,
+            sync_count: self.sync_count.load(Ordering::SeqCst),
+            explorer_util,
+            trainer_util: 100.0 * *self.compute_total.lock().unwrap() / wall,
+            device_busy: 100.0 * device_exec_seconds.min(wall) / wall,
+            max_version_lag: self.max_version_lag.load(Ordering::SeqCst),
+            trainer_metrics: trainer.history().to_vec(),
+            timeline: self.timeline.into_inner().unwrap(),
+            snapshots: self.snapshots.into_inner().unwrap(),
+            final_eval: None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn recorder_accumulates_spans_and_lag() {
+        let rec = RunRecorder::new(Arc::new(Monitor::in_memory()), Instant::now());
+        let t0 = Instant::now();
+        std::thread::sleep(Duration::from_millis(5));
+        let t1 = Instant::now();
+        let stats = RunnerStats { completed: 1, experiences: 4, ..Default::default() };
+        rec.rollout(
+            &RolloutRecord {
+                role: "explorer-0",
+                batch: 0,
+                stats: &stats,
+                weight_version: 1,
+                version_lag: 2,
+            },
+            t0,
+            t1,
+        );
+        rec.rollout(
+            &RolloutRecord {
+                role: "explorer-1",
+                batch: 0,
+                stats: &stats,
+                weight_version: 2,
+                version_lag: 1,
+            },
+            t0,
+            t1,
+        );
+        assert_eq!(rec.weight_sync(t0, t1), 1);
+        assert_eq!(rec.weight_sync(t0, t1), 2);
+        assert_eq!(rec.sync_count(), 2);
+        rec.snapshot(2, vec![vec![1.0]]);
+        assert_eq!(rec.max_version_lag.load(Ordering::SeqCst), 2);
+        let events = rec.timeline.lock().unwrap().clone();
+        assert_eq!(events.len(), 4);
+        assert!(events.iter().all(|e| e.end_s >= e.start_s));
+        assert!(events.iter().any(|e| e.kind == "weight_sync" && e.role == "trainer"));
+    }
+
+    #[test]
+    fn recorder_monitor_gets_uniform_rollout_fields() {
+        let monitor = Arc::new(Monitor::in_memory());
+        let rec = RunRecorder::new(Arc::clone(&monitor), Instant::now());
+        let now = Instant::now();
+        let stats = RunnerStats::default();
+        rec.rollout(
+            &RolloutRecord {
+                role: "explorer-0",
+                batch: 3,
+                stats: &stats,
+                weight_version: 5,
+                version_lag: 0,
+            },
+            now,
+            now,
+        );
+        for key in
+            ["experiences", "skipped", "batch_s", "weight_version", "version_lag"]
+        {
+            assert_eq!(
+                monitor.series(&format!("explorer-0/{key}")).len(),
+                1,
+                "missing rollout field {key}"
+            );
+        }
+        assert_eq!(monitor.series_values("explorer-0/weight_version"), vec![5.0]);
+    }
+}

@@ -1,0 +1,480 @@
+//! The unified RFT-core scheduler (paper §2.1.1, Fig. 4): ONE
+//! coordination engine behind every mode.  The seed's three hand-rolled
+//! loops (`run_both` / `run_async` / `run_train_only`) are gone — a
+//! single generic trainer driver plus N generic explorer drivers run on
+//! `exec` primitives (thread pool, watch cell, cancellation token), and
+//! a [`SyncPolicy`] decides explorer admission, weight-publish cadence,
+//! and shutdown shape.  `both` / `async` / `train` are just policy
+//! values ([`Windowed`](super::policy::Windowed) /
+//! [`Free`](super::policy::Free) / [`Offline`](super::policy::Offline)),
+//! and [`BoundedStaleness`](super::policy::BoundedStaleness) adds the
+//! off-policyness control as a first-class mode.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::buffer::{ExperienceBuffer, QueueBuffer, StrategyCtx};
+use crate::data::ShapingBuffer;
+use crate::exec::{CancellationToken, Promise, ThreadPool, WatchCell};
+use crate::explorer::{
+    EvalReport, Explorer, ExplorerConfig, GenerationEngine, RunnerConfig, SamplingArgs,
+    WorkflowRegistry,
+};
+use crate::model::{ParamStore, SyncCtx, WeightSync, WeightSyncRegistry};
+use crate::runtime::{Manifest, ModelEngine, RuntimeClient};
+use crate::tokenizer::Tokenizer;
+use crate::trainer::{AlgorithmRegistry, Trainer, TrainerConfig};
+
+use super::config::RftConfig;
+use super::monitor::Monitor;
+use super::policy::{resolve_policy, ExplorerPlan, Progress, SyncPolicy};
+use super::report::{ModeReport, RolloutRecord, RunRecorder};
+use super::tasks::{AlfworldTaskSource, MathTaskSource, TaskSource};
+
+/// Shared run state: the policy-visible [`Progress`] plus the failure
+/// flag that releases blocked explorer drivers.
+#[derive(Default)]
+struct RunState {
+    progress: Progress,
+    failed: bool,
+}
+
+/// Everything one explorer driver needs; the driver itself is the single
+/// generic explorer loop (there are no per-mode copies).
+struct ExplorerDriver {
+    explorer: Arc<Explorer>,
+    source: Arc<dyn TaskSource>,
+    sync: Arc<dyn WeightSync>,
+    policy: Arc<dyn SyncPolicy>,
+    recorder: Arc<RunRecorder>,
+    state: Arc<WatchCell<RunState>>,
+    cancel: CancellationToken,
+    batch_tasks: usize,
+    plan: ExplorerPlan,
+    role: String,
+}
+
+impl ExplorerDriver {
+    /// The generic explorer loop: admission-gate, pull weights, roll out
+    /// one batch, record, repeat.  With a fixed batch budget errors are
+    /// fatal (lockstep modes); free-running drivers warn and continue,
+    /// and exit when the trainer cancels the run.
+    fn run(self) -> Result<u64> {
+        let budget = match self.plan {
+            ExplorerPlan::None => return Ok(0),
+            ExplorerPlan::Batches(n) => Some(n),
+            ExplorerPlan::FreeRun => None,
+        };
+        let mut batches = 0u64;
+        loop {
+            if let Some(limit) = budget {
+                if batches >= limit {
+                    break;
+                }
+            }
+            // block until the policy admits this batch (or the run ends)
+            let admitted = self.state.wait_until(|st| {
+                if self.cancel.is_cancelled() || st.failed {
+                    return Some(false);
+                }
+                self.policy.admit(batches, st.progress).then_some(true)
+            });
+            if !admitted {
+                break;
+            }
+            if let Err(e) = self.explorer.sync_weights(&*self.sync) {
+                if self.cancel.is_cancelled() {
+                    break;
+                }
+                if budget.is_some() {
+                    return Err(e.context("weight pull failed"));
+                }
+                crate::log_warn!("scheduler", "{}: weight pull failed: {e:#}", self.role);
+            }
+            let version = self.explorer.weight_version();
+            let lag = self.policy.version_lag(batches, version);
+            let t0 = Instant::now();
+            let tasks = self.source.next_batch(self.batch_tasks);
+            match self.explorer.explore_batch(tasks) {
+                Ok(stats) => {
+                    let rec = RolloutRecord {
+                        role: &self.role,
+                        batch: batches,
+                        stats: &stats,
+                        weight_version: version,
+                        version_lag: lag,
+                    };
+                    self.recorder.rollout(&rec, t0, Instant::now());
+                    batches += 1;
+                    self.state.update(|st| st.progress.explored_batches += 1);
+                }
+                Err(e) => {
+                    if self.cancel.is_cancelled() {
+                        break; // buffer closed at shutdown
+                    }
+                    if budget.is_some() {
+                        return Err(e);
+                    }
+                    crate::log_warn!("scheduler", "{}: batch failed: {e:#}", self.role);
+                }
+            }
+        }
+        Ok(batches)
+    }
+}
+
+/// A fully wired RFT run (the launcher).
+pub struct RftSession {
+    pub cfg: RftConfig,
+    pub monitor: Arc<Monitor>,
+    pub tokenizer: Arc<Tokenizer>,
+    pub manifest: Arc<Manifest>,
+    pub client: Arc<RuntimeClient>,
+    pub engine: Arc<ModelEngine>,
+    pub buffer: Arc<dyn ExperienceBuffer>,
+    pub sync: Arc<dyn WeightSync>,
+    pub explorers: Vec<Arc<Explorer>>,
+    pub task_source: Arc<dyn TaskSource>,
+    pub trainer: Option<Trainer>,
+    origin: Instant,
+}
+
+/// Optional overrides for [`RftSession::build_with`]: data pipelines and
+/// custom-algorithm resources plug in here.
+#[derive(Default)]
+pub struct BuildOpts {
+    pub task_source: Option<Arc<dyn TaskSource>>,
+    pub processor: Option<Arc<dyn crate::data::ExperienceProcessor>>,
+    /// Expert-trajectory buffer for algorithms whose sample strategy
+    /// mixes a second source (MIX-family specs).
+    pub expert_buffer: Option<Arc<dyn ExperienceBuffer>>,
+}
+
+impl RftSession {
+    /// Wire up a session from config.  `task_source` / `processor`
+    /// override the defaults (data pipelines plug in here).
+    pub fn build(
+        cfg: RftConfig,
+        task_source: Option<Arc<dyn TaskSource>>,
+        processor: Option<Arc<dyn crate::data::ExperienceProcessor>>,
+    ) -> Result<RftSession> {
+        Self::build_with(cfg, BuildOpts { task_source, processor, expert_buffer: None })
+    }
+
+    /// Wire up a session from config with the full override set.
+    pub fn build_with(cfg: RftConfig, opts: BuildOpts) -> Result<RftSession> {
+        let BuildOpts { task_source, processor, expert_buffer } = opts;
+        let manifest = Arc::new(match &cfg.artifacts_dir {
+            Some(d) => Manifest::load(d)?,
+            None => Manifest::load_default().context("artifacts not built (run `make artifacts`)")?,
+        });
+        let client = RuntimeClient::global();
+        let engine = Arc::new(ModelEngine::new(client.clone(), &manifest, &cfg.model_preset)?);
+        engine.validate_manifest()?;
+        engine.warmup()?;
+        let tokenizer = Arc::new(Tokenizer::new());
+        let monitor = Arc::new(Monitor::new(cfg.monitor_dir.clone())?);
+
+        // both sides start from identical weights
+        let trainer_params = ParamStore::init(&engine.model, cfg.seed)?;
+        let init_snapshot = trainer_params.snapshot()?;
+
+        // buffer (+ optional experience shaping stage)
+        let queue = Arc::new(QueueBuffer::new(cfg.buffer_capacity));
+        let base: Arc<dyn ExperienceBuffer> = queue;
+        let buffer: Arc<dyn ExperienceBuffer> = match processor {
+            Some(p) => Arc::new(ShapingBuffer::new(base, p)),
+            None => base,
+        };
+
+        // weight sync service: `sync.method` resolves through the
+        // factory registry (case-insensitive, catalog on error)
+        let sync = WeightSyncRegistry::global().build(
+            &cfg.sync_method,
+            &SyncCtx {
+                dir: cfg.sync_dir.clone(),
+                preset: cfg.model_preset.clone(),
+                leaf_names: engine
+                    .model
+                    .params
+                    .iter()
+                    .map(|p| (p.name.clone(), p.shape.clone()))
+                    .collect(),
+            },
+        )?;
+
+        // explorers
+        let registry = Arc::new(WorkflowRegistry::with_builtins());
+        let sampling = SamplingArgs {
+            temperature: cfg.temperature,
+            top_k: cfg.top_k,
+            top_p: cfg.top_p,
+            max_new_tokens: cfg.max_new_tokens,
+            seed: cfg.seed,
+        };
+        let mut explorers = Vec::with_capacity(cfg.explorer_count);
+        for i in 0..cfg.explorer_count {
+            let params = ParamStore::from_snapshot(&engine.model, &init_snapshot)?;
+            let gen = Arc::new(GenerationEngine::new(Arc::clone(&engine), params));
+            let ex_cfg = ExplorerConfig {
+                runner: RunnerConfig {
+                    timeout: Duration::from_secs_f64(cfg.task_timeout_s),
+                    max_attempts: cfg.task_max_attempts,
+                    retry_delay: Duration::from_millis(20),
+                    seed: cfg.seed ^ (i as u64) << 8,
+                },
+                sampling: sampling.clone(),
+                threads: cfg.explorer_threads,
+            };
+            explorers.push(Arc::new(Explorer::new(
+                i,
+                gen,
+                Arc::clone(&registry),
+                Arc::clone(&tokenizer),
+                Arc::clone(&buffer),
+                ex_cfg,
+            )));
+        }
+
+        // task source
+        let task_source: Arc<dyn TaskSource> = match task_source {
+            Some(s) => s,
+            None => match cfg.workflow.as_str() {
+                "alfworld" => Arc::new(AlfworldTaskSource::new(cfg.seed, cfg.repeat_times)),
+                _ => Arc::new(MathTaskSource::new(
+                    cfg.seed,
+                    cfg.min_difficulty,
+                    cfg.max_difficulty,
+                    cfg.repeat_times,
+                )),
+            },
+        };
+
+        // trainer: resolve the algorithm spec from the registry; the
+        // spec links its own sample strategy (paper §3.2)
+        let spec = AlgorithmRegistry::global().get(&cfg.algorithm)?;
+        let mut tcfg = TrainerConfig::from_spec(Arc::clone(&spec));
+        tcfg.algorithm.hyper = cfg.effective_hyper(&spec);
+        tcfg.algorithm.adv_std_normalize = cfg.adv_std_normalize;
+        let strategy = spec.sample.build(&StrategyCtx {
+            buffer: Arc::clone(&buffer),
+            expert_buffer,
+            expert_fraction: cfg.mix.expert_fraction,
+            timeout: Duration::from_secs(600),
+        })?;
+        let trainer = Trainer::new(Arc::clone(&engine), trainer_params, strategy, tcfg)?;
+
+        Ok(RftSession {
+            cfg,
+            monitor,
+            tokenizer,
+            manifest,
+            client,
+            engine,
+            buffer,
+            sync,
+            explorers,
+            task_source,
+            trainer: Some(trainer),
+            origin: Instant::now(),
+        })
+    }
+
+    /// Run under the config-resolved sync policy (`scheduler.policy`,
+    /// falling back to the `mode` mapping).
+    pub fn run(&mut self) -> Result<ModeReport> {
+        // bench mode without an explicit policy fails resolution with
+        // the run_bench hint
+        let policy = resolve_policy(&self.cfg)?;
+        self.run_policy(policy)
+    }
+
+    /// THE scheduler: the one trainer-step loop and (via
+    /// [`ExplorerDriver::run`]) the one explorer loop in the system.
+    /// Every coordination pattern is a [`SyncPolicy`] value.
+    pub fn run_policy(&mut self, policy: Arc<dyn SyncPolicy>) -> Result<ModeReport> {
+        let cfg = self.cfg.clone();
+        let mut trainer = self.trainer.take().context("trainer already consumed")?;
+        let plan = policy.explorer_plan(cfg.total_steps);
+        let launched: &[Arc<Explorer>] = match plan {
+            ExplorerPlan::None => &[],
+            _ => &self.explorers,
+        };
+        for explorer in launched {
+            explorer.reset_utilization();
+        }
+
+        let recorder = Arc::new(RunRecorder::new(Arc::clone(&self.monitor), self.origin));
+        let state = Arc::new(WatchCell::new(RunState::default()));
+        let cancel = CancellationToken::new();
+
+        // ---- explorer drivers (scheduler pool, one worker each) ----
+        let mut pool: Option<ThreadPool> = None;
+        let mut promises: Vec<Promise<Result<u64>>> = vec![];
+        if !launched.is_empty() {
+            let p = ThreadPool::new("scheduler", launched.len());
+            for explorer in launched {
+                let driver = ExplorerDriver {
+                    explorer: Arc::clone(explorer),
+                    source: Arc::clone(&self.task_source),
+                    sync: Arc::clone(&self.sync),
+                    policy: Arc::clone(&policy),
+                    recorder: Arc::clone(&recorder),
+                    state: Arc::clone(&state),
+                    cancel: cancel.clone(),
+                    batch_tasks: cfg.batch_tasks,
+                    plan,
+                    role: format!("explorer-{}", explorer.id),
+                };
+                promises.push(p.submit(move || driver.run()));
+            }
+            pool = Some(p);
+        }
+
+        // ---- trainer driver (this thread) ----
+        let mut drive = || -> Result<()> {
+            for t in 0..cfg.total_steps {
+                let t0 = Instant::now();
+                let m = trainer.train_step()?;
+                recorder.trainer_step(t, &m, t0, Instant::now());
+                if policy.publish_after(t + 1) {
+                    let s0 = Instant::now();
+                    trainer.publish_weights(self.sync.as_ref())?;
+                    recorder.weight_sync(s0, Instant::now());
+                    state.update(|st| st.progress.published_windows += 1);
+                }
+                state.update(|st| st.progress.trainer_steps += 1);
+                if cfg.eval_every > 0 && (t + 1) % cfg.eval_every == 0 {
+                    recorder.snapshot(t + 1, trainer.params().snapshot()?);
+                }
+            }
+            Ok(())
+        };
+        let train_result = drive();
+
+        // ---- shutdown ----
+        // Free-running explorers are cancelled and unblocked (a closed
+        // buffer fails in-flight writes); budgeted explorers finish
+        // their remaining batches — every window they can wait on is
+        // already published.  The state update wakes admission waiters
+        // either way (and releases them all on trainer failure).
+        if plan == ExplorerPlan::FreeRun {
+            cancel.cancel();
+            self.buffer.close();
+        }
+        state.update(|st| st.failed |= train_result.is_err());
+
+        let mut explore_batches = 0u64;
+        let mut explorer_err: Option<anyhow::Error> = None;
+        for p in promises {
+            match p.wait() {
+                Ok(Ok(n)) => explore_batches += n,
+                Ok(Err(e)) => explorer_err = Some(e),
+                Err(e) => explorer_err = Some(anyhow!(e)),
+            }
+        }
+        drop(pool);
+        train_result.context("trainer loop failed")?;
+        if let Some(e) = explorer_err {
+            return Err(e.context("explorer loop failed"));
+        }
+
+        let explorer_util = match launched.len() {
+            0 => 0.0,
+            n => launched.iter().map(|e| e.utilization_percent()).sum::<f64>() / n as f64,
+        };
+        let report = Arc::try_unwrap(recorder)
+            .map_err(|_| anyhow!("recorder still shared after drivers joined"))?
+            .finish(
+                policy.label(self.explorers.len()),
+                &trainer,
+                explore_batches,
+                explorer_util,
+                self.client.total_exec_seconds(),
+            );
+        self.trainer = Some(trainer);
+        Ok(report)
+    }
+
+    /// Bench mode: evaluate the explorer's current weights (or a loaded
+    /// snapshot) on benchmark tiers; Avg@K per tier.
+    pub fn run_bench(
+        &self,
+        tiers: &[&str],
+        tasks_per_tier: usize,
+        repeat_times: usize,
+        temperature: f32,
+    ) -> Result<Vec<(String, EvalReport)>> {
+        let explorer = &self.explorers[0];
+        let mut out = Vec::with_capacity(tiers.len());
+        for tier in tiers {
+            let tasks =
+                super::tasks::benchmark_tasks(tier, tasks_per_tier, repeat_times, self.cfg.seed ^ 0xbe);
+            let report = explorer.evaluate(&tasks, temperature)?;
+            out.push((tier.to_string(), report));
+        }
+        Ok(out)
+    }
+
+    /// Load a weight snapshot into every explorer (bench over checkpoints).
+    pub fn load_explorer_weights(&self, weights: &[Vec<f32>], version: u64) -> Result<()> {
+        for e in &self.explorers {
+            e.engine().set_weights(weights, version)?;
+        }
+        Ok(())
+    }
+
+    /// Start trainer AND all explorers from an externally produced weight
+    /// snapshot (e.g. [`sft_warmup_snapshot`]).
+    pub fn load_initial_weights(&mut self, weights: &[Vec<f32>]) -> Result<()> {
+        self.trainer
+            .as_mut()
+            .context("trainer already consumed")?
+            .load_weights(weights, 1, true)?;
+        self.load_explorer_weights(weights, 1)
+    }
+}
+
+/// Convenience entry point: build + run from a config.
+pub fn run_mode(cfg: RftConfig) -> Result<ModeReport> {
+    let mut session = RftSession::build(cfg, None, None)?;
+    session.run()
+}
+
+/// SFT warm-up producing a weight snapshot (the paper's
+/// `sft_warmup_dataset` pattern): a cold random model emits no valid
+/// answers, so GRPO's group rewards are all zero and carry no gradient;
+/// a short supervised phase on gold answers breaks the degeneracy.
+/// Learning benches and the e2e example start from this snapshot.
+pub fn sft_warmup_snapshot(preset: &str, seed: u64, steps: u64) -> Result<Vec<Vec<f32>>> {
+    use crate::data::formatter::{FormatSpec, Formatter};
+    use crate::envs::math::MathTaskGen;
+    use crate::util::json::Value;
+
+    let mut cfg = RftConfig::default();
+    cfg.mode = "train".into();
+    cfg.algorithm = "sft".into();
+    cfg.model_preset = preset.into();
+    cfg.total_steps = steps;
+    cfg.seed = seed;
+    cfg.hyper.lr = 2e-3;
+    let mut session = RftSession::build(cfg, None, None)?;
+    let formatter =
+        Formatter { spec: FormatSpec::default(), tokenizer: Arc::clone(&session.tokenizer) };
+    let (b, _, _) = session.engine.train_shape("sft")?;
+    let mut gen = MathTaskGen::new(seed ^ 0x5f7, "warmup");
+    let mut exps = Vec::with_capacity(steps as usize * b);
+    for _ in 0..(steps as usize * b) {
+        let t = gen.gen(1);
+        let raw = Value::obj(vec![
+            ("question", Value::str(t.question.clone())),
+            ("answer", Value::str(t.answer.to_string())),
+        ]);
+        exps.push(formatter.to_expert_experience(&raw)?);
+    }
+    session.buffer.write(exps)?;
+    session.run()?;
+    session.trainer.as_ref().unwrap().params().snapshot()
+}

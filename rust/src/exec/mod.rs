@@ -1,15 +1,18 @@
 //! Threaded async-lite executor (the offline registry has no tokio).
 //!
 //! The explorer's workflow runners, the trainer loop and the coordinator
-//! modes are built on these primitives: a panic-containing thread pool,
-//! promises with timed waits, cancellation tokens, bounded MPMC channels
-//! with backpressure, and retry/deadline helpers.
+//! scheduler are built on these primitives: a panic-containing thread
+//! pool, promises with timed waits, cancellation tokens, bounded MPMC
+//! channels with backpressure, watchable state cells, and retry/deadline
+//! helpers.
 
 pub mod channel;
 pub mod future;
 pub mod pool;
 pub mod timer;
+pub mod watch;
 
 pub use channel::{bounded, Receiver, RecvError, SendError, Sender};
 pub use future::{CancellationToken, Promise, TaskError};
 pub use pool::ThreadPool;
+pub use watch::WatchCell;

@@ -1,0 +1,151 @@
+//! `WatchCell`: a shared state cell with predicate waiting — the
+//! executor's replacement for hand-rolled `Mutex` + `Condvar` pairs.
+//!
+//! The coordinator's scheduler keeps its run progress (train steps,
+//! published weight windows, explored batches) in one `WatchCell`;
+//! explorer drivers block in [`WatchCell::wait_until`] until their sync
+//! policy admits the next batch, and every state mutation through
+//! [`WatchCell::update`] wakes all waiters to re-evaluate.
+
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+pub struct WatchCell<T> {
+    state: Mutex<T>,
+    cvar: Condvar,
+}
+
+impl<T> WatchCell<T> {
+    pub fn new(initial: T) -> WatchCell<T> {
+        WatchCell { state: Mutex::new(initial), cvar: Condvar::new() }
+    }
+
+    /// Mutate the state and wake every waiter to re-check its predicate.
+    pub fn update<R>(&self, f: impl FnOnce(&mut T) -> R) -> R {
+        let mut guard = self.state.lock().unwrap();
+        let out = f(&mut guard);
+        drop(guard);
+        self.cvar.notify_all();
+        out
+    }
+
+    /// Observe the state without mutating it.
+    pub fn read<R>(&self, f: impl FnOnce(&T) -> R) -> R {
+        f(&self.state.lock().unwrap())
+    }
+
+    /// Wake all waiters without a state change (e.g. after flipping an
+    /// external cancellation token the predicates consult).
+    pub fn notify_all(&self) {
+        self.cvar.notify_all();
+    }
+
+    /// Block until `pred` returns `Some(decision)`, re-evaluating after
+    /// every [`update`](Self::update) / [`notify_all`](Self::notify_all).
+    pub fn wait_until<R>(&self, mut pred: impl FnMut(&T) -> Option<R>) -> R {
+        let mut guard = self.state.lock().unwrap();
+        loop {
+            if let Some(out) = pred(&guard) {
+                return out;
+            }
+            guard = self.cvar.wait(guard).unwrap();
+        }
+    }
+
+    /// [`wait_until`](Self::wait_until) with a deadline; `None` on timeout.
+    pub fn wait_until_timeout<R>(
+        &self,
+        timeout: Duration,
+        mut pred: impl FnMut(&T) -> Option<R>,
+    ) -> Option<R> {
+        let deadline = Instant::now() + timeout;
+        let mut guard = self.state.lock().unwrap();
+        loop {
+            if let Some(out) = pred(&guard) {
+                return Some(out);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g, res) = self.cvar.wait_timeout(guard, deadline - now).unwrap();
+            guard = g;
+            if res.timed_out() {
+                return pred(&guard);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn update_wakes_waiter() {
+        let cell = Arc::new(WatchCell::new(0u64));
+        let c2 = Arc::clone(&cell);
+        let h = std::thread::spawn(move || c2.wait_until(|v| (*v >= 3).then_some(*v)));
+        for i in 1..=3 {
+            std::thread::sleep(Duration::from_millis(10));
+            cell.update(|v| *v = i);
+        }
+        assert_eq!(h.join().unwrap(), 3);
+    }
+
+    #[test]
+    fn wait_returns_decision_value() {
+        let cell = WatchCell::new(vec![1, 2, 3]);
+        let sum: i32 = cell.wait_until(|v| Some(v.iter().sum()));
+        assert_eq!(sum, 6);
+    }
+
+    #[test]
+    fn timeout_expires_without_update() {
+        let cell = WatchCell::new(false);
+        let start = Instant::now();
+        let out = cell.wait_until_timeout(Duration::from_millis(30), |v| v.then_some(()));
+        assert!(out.is_none());
+        assert!(start.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn notify_all_reevaluates_external_condition() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let cell = Arc::new(WatchCell::new(()));
+        let flag = Arc::new(AtomicBool::new(false));
+        let (c2, f2) = (Arc::clone(&cell), Arc::clone(&flag));
+        let h = std::thread::spawn(move || {
+            c2.wait_until(|_| f2.load(Ordering::SeqCst).then_some(()));
+        });
+        std::thread::sleep(Duration::from_millis(10));
+        flag.store(true, Ordering::SeqCst);
+        cell.notify_all();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn concurrent_updates_all_observed() {
+        let cell = Arc::new(WatchCell::new(0u64));
+        let writers: Vec<_> = (0..4)
+            .map(|_| {
+                let c = Arc::clone(&cell);
+                std::thread::spawn(move || {
+                    for _ in 0..100 {
+                        c.update(|v| *v += 1);
+                    }
+                })
+            })
+            .collect();
+        let reader = {
+            let c = Arc::clone(&cell);
+            std::thread::spawn(move || c.wait_until(|v| (*v == 400).then_some(*v)))
+        };
+        for w in writers {
+            w.join().unwrap();
+        }
+        assert_eq!(reader.join().unwrap(), 400);
+        assert_eq!(cell.read(|v| *v), 400);
+    }
+}

@@ -24,7 +24,9 @@
 //!   strategies, registered in the global registry
 //!   (GRPO/PPO/SFT/DPO/MIX/OPMD×3 are all registrations; see
 //!   DESIGN.md §4), plus the algorithm-agnostic training loop.
-//! * [`coordinator`] — RFT modes, launcher, monitor, typed config.
+//! * [`coordinator`] — the unified RFT scheduler with pluggable sync
+//!   policies (windowed / free / offline / bounded-staleness), launcher,
+//!   run reports, monitor, typed config.
 //! * [`data`] — task curation, experience shaping, agentic pipelines,
 //!   human-in-the-loop simulation, lineage.
 //! * [`envs`] — synthetic verifiable-math tasks (GSM8K stand-in),

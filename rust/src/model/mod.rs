@@ -8,4 +8,7 @@ pub mod sync;
 
 pub use checkpoint::{load_checkpoint, save_checkpoint, Checkpoint};
 pub use params::ParamStore;
-pub use sync::{CheckpointSync, MemorySync, WeightSync, WeightUpdate};
+pub use sync::{
+    CheckpointSync, MemorySync, SyncCtx, WeightSync, WeightSyncFactory, WeightSyncRegistry,
+    WeightUpdate,
+};

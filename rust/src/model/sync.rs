@@ -12,10 +12,11 @@
 //! version at different moments (the multi-explorer mode's 24/7-service
 //! property relies on this).
 
+use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 
 use super::checkpoint::{load_checkpoint, save_checkpoint};
 
@@ -34,6 +35,114 @@ pub trait WeightSync: Send + Sync {
     fn fetch_if_newer(&self, current_version: u64) -> Result<Option<WeightUpdate>>;
     /// Latest published version (0 = nothing published).
     fn latest_version(&self) -> u64;
+}
+
+// ---------------------------------------------------------------------------
+// sync-method factory registry
+
+/// Everything a sync-method factory may need at session build time.
+pub struct SyncCtx {
+    /// `sync.dir` from config, if any (checkpoint-style methods).
+    pub dir: Option<PathBuf>,
+    pub preset: String,
+    /// Parameter leaf names + shapes, in pytree flattening order.
+    pub leaf_names: Vec<(String, Vec<usize>)>,
+}
+
+/// Builds a [`WeightSync`] service from a [`SyncCtx`].  Implemented for
+/// plain closures, so registration is one line.
+pub trait WeightSyncFactory: Send + Sync {
+    fn build(&self, ctx: &SyncCtx) -> Result<Arc<dyn WeightSync>>;
+}
+
+impl<F> WeightSyncFactory for F
+where
+    F: Fn(&SyncCtx) -> Result<Arc<dyn WeightSync>> + Send + Sync,
+{
+    fn build(&self, ctx: &SyncCtx) -> Result<Arc<dyn WeightSync>> {
+        self(ctx)
+    }
+}
+
+/// The sync-method registry (mirrors the trainer's `AlgorithmRegistry`):
+/// `sync.method` names resolve here instead of through string dispatch in
+/// the session builder.  Lookup is case-insensitive and unknown names
+/// fail with the full method catalog.
+pub struct WeightSyncRegistry {
+    factories: RwLock<BTreeMap<String, Arc<dyn WeightSyncFactory>>>,
+}
+
+impl WeightSyncRegistry {
+    /// An empty registry (tests); production code uses [`global`](Self::global).
+    pub fn new() -> WeightSyncRegistry {
+        WeightSyncRegistry { factories: RwLock::new(BTreeMap::new()) }
+    }
+
+    /// A registry pre-populated with the builtin methods
+    /// (`memory`, `checkpoint`).
+    pub fn with_builtins() -> WeightSyncRegistry {
+        let r = WeightSyncRegistry::new();
+        r.register("memory", |_ctx: &SyncCtx| -> Result<Arc<dyn WeightSync>> {
+            Ok(Arc::new(MemorySync::new()))
+        });
+        r.register("checkpoint", |ctx: &SyncCtx| -> Result<Arc<dyn WeightSync>> {
+            let dir =
+                ctx.dir.clone().unwrap_or_else(|| std::env::temp_dir().join("trft_sync"));
+            Ok(Arc::new(CheckpointSync::new(dir, &ctx.preset, ctx.leaf_names.clone())?))
+        });
+        r
+    }
+
+    /// The process-wide registry.  Custom sync methods register here
+    /// before building a session:
+    ///
+    /// ```ignore
+    /// WeightSyncRegistry::global().register("my_rdma", |ctx: &SyncCtx| {
+    ///     Ok(Arc::new(MyRdmaSync::new(ctx)?) as Arc<dyn WeightSync>)
+    /// });
+    /// ```
+    pub fn global() -> &'static WeightSyncRegistry {
+        static GLOBAL: OnceLock<WeightSyncRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(WeightSyncRegistry::with_builtins)
+    }
+
+    /// Register a factory under `name` (stored lowercased; latest wins).
+    pub fn register(&self, name: &str, factory: impl WeightSyncFactory + 'static) {
+        self.factories
+            .write()
+            .unwrap()
+            .insert(name.trim().to_ascii_lowercase(), Arc::new(factory));
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.factories.read().unwrap().contains_key(&name.trim().to_ascii_lowercase())
+    }
+
+    /// Registered method names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.factories.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Resolve `name` (case-insensitive) and build the service.
+    pub fn build(&self, name: &str, ctx: &SyncCtx) -> Result<Arc<dyn WeightSync>> {
+        // one guard for lookup AND the error's name list (see
+        // AlgorithmRegistry::get for the deadlock rationale)
+        let factories = self.factories.read().unwrap();
+        match factories.get(&name.trim().to_ascii_lowercase()) {
+            Some(f) => f.build(ctx),
+            None => Err(anyhow!(
+                "unknown sync method '{name}' — registered methods: [{}]; \
+                 register custom methods with WeightSyncRegistry::global().register(..)",
+                factories.keys().cloned().collect::<Vec<_>>().join(", ")
+            )),
+        }
+    }
+}
+
+impl Default for WeightSyncRegistry {
+    fn default() -> Self {
+        WeightSyncRegistry::new()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -234,6 +343,54 @@ mod tests {
         // fetch still works after rotation
         assert!(s.fetch_if_newer(0).unwrap().is_some());
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn registry_resolves_builtins_case_insensitively() {
+        let reg = WeightSyncRegistry::global();
+        assert_eq!(reg.names(), vec!["checkpoint", "memory"]);
+        let ctx = SyncCtx { dir: None, preset: "tiny".into(), leaf_names: vec![] };
+        for name in ["memory", "MEMORY", " Memory "] {
+            let s = reg.build(name, &ctx).unwrap();
+            assert_eq!(s.latest_version(), 0);
+        }
+    }
+
+    #[test]
+    fn registry_unknown_method_lists_catalog() {
+        let ctx = SyncCtx { dir: None, preset: "tiny".into(), leaf_names: vec![] };
+        let err =
+            WeightSyncRegistry::global().build("warp", &ctx).unwrap_err().to_string();
+        assert!(err.contains("unknown sync method 'warp'"), "{err}");
+        for method in ["memory", "checkpoint"] {
+            assert!(err.contains(method), "error should list '{method}': {err}");
+        }
+    }
+
+    #[test]
+    fn registry_accepts_custom_factories() {
+        let reg = WeightSyncRegistry::new();
+        reg.register("shared", |_ctx: &SyncCtx| -> Result<Arc<dyn WeightSync>> {
+            Ok(Arc::new(MemorySync::new()))
+        });
+        let ctx = SyncCtx { dir: None, preset: "tiny".into(), leaf_names: vec![] };
+        let s = reg.build("Shared", &ctx).unwrap();
+        s.publish(1, 1, weights(1.0)).unwrap();
+        assert_eq!(s.latest_version(), 1);
+        assert!(reg.build("memory", &ctx).is_err()); // builtins not inherited
+    }
+
+    #[test]
+    fn registry_checkpoint_builds_with_default_dir() {
+        let ctx = SyncCtx {
+            dir: Some(std::env::temp_dir().join(format!("trft_reg_{}", std::process::id()))),
+            preset: "tiny".into(),
+            leaf_names: vec![("a".to_string(), vec![4])],
+        };
+        let s = WeightSyncRegistry::global().build("Checkpoint", &ctx).unwrap();
+        s.publish(1, 5, vec![vec![1.0; 4]]).unwrap();
+        assert_eq!(s.latest_version(), 1);
+        std::fs::remove_dir_all(ctx.dir.unwrap()).unwrap();
     }
 
     #[test]

@@ -120,6 +120,8 @@ fn train_only_mode_on_prefilled_buffer() {
     let report = session.run().unwrap();
     assert_eq!(report.train_steps, 2);
     assert_eq!(report.explore_batches, 0);
+    assert_eq!(report.sync_count, 0); // offline policy never publishes
+    assert_eq!(report.mode, "train");
 }
 
 #[test]

@@ -1,0 +1,143 @@
+//! Scheduler-level integration: mode equivalence under the unified
+//! engine.  Windowed{1,0} enforces the strict on-policy ping-pong,
+//! Offline matches the seed's train-only behavior on a pre-filled
+//! buffer, BoundedStaleness caps explorer weight-version lag, and async
+//! runs now record weight-sync spans and trainer compute_s (the seed
+//! `run_async` dropped both).  Requires `make artifacts` (skips
+//! gracefully otherwise).
+
+use std::sync::Arc;
+
+use trinity_rft::coordinator::{RftConfig, RftSession, SyncPolicy, Windowed};
+use trinity_rft::runtime::Manifest;
+
+fn base_cfg() -> Option<RftConfig> {
+    Manifest::load_default()?;
+    let mut cfg = RftConfig::default();
+    cfg.model_preset = "tiny".into();
+    cfg.total_steps = 3;
+    cfg.batch_tasks = 1;
+    cfg.repeat_times = 4; // matches tiny grpo batch of 4
+    cfg.max_new_tokens = 6;
+    cfg.hyper.lr = 1e-4;
+    cfg.explorer_threads = 2;
+    cfg.seed = 31;
+    Some(cfg)
+}
+
+#[test]
+fn windowed_ping_pong_never_starts_batch_before_its_window() {
+    let Some(mut cfg) = base_cfg() else { return };
+    cfg.mode = "both".into();
+    cfg.sync_interval = 1;
+    cfg.sync_offset = 0;
+    cfg.total_steps = 4;
+    let mut session = RftSession::build(cfg, None, None).unwrap();
+    let report = session.run().unwrap();
+    assert_eq!(report.explore_batches, 4);
+    assert_eq!(report.sync_count, 4);
+    // strict on-policy: rollout batch e starts only after weight window
+    // e is published (weight_sync indices are 1-based publish counts)
+    for rollout in report.timeline.iter().filter(|e| e.kind == "rollout") {
+        if rollout.index == 0 {
+            continue; // first batch needs no window
+        }
+        let window = report
+            .timeline
+            .iter()
+            .find(|e| e.kind == "weight_sync" && e.index == rollout.index)
+            .unwrap_or_else(|| panic!("no weight_sync #{}", rollout.index));
+        assert!(
+            window.end_s <= rollout.start_s,
+            "batch {} started at {:.6}s before window {} published at {:.6}s",
+            rollout.index,
+            rollout.start_s,
+            rollout.index,
+            window.end_s
+        );
+    }
+    // ping-pong weights are never stale
+    assert_eq!(report.max_version_lag, 0);
+}
+
+#[test]
+fn offline_policy_matches_seed_train_only_on_prefilled_buffer() {
+    let Some(mut cfg) = base_cfg() else { return };
+    cfg.mode = "train".into();
+    cfg.algorithm = "sft".into();
+    cfg.total_steps = 2;
+    let mut session = RftSession::build(cfg, None, None).unwrap();
+    let formatter = trinity_rft::data::formatter::Formatter {
+        spec: Default::default(),
+        tokenizer: Arc::clone(&session.tokenizer),
+    };
+    let mut exps = vec![];
+    for i in 0..8 {
+        let raw = trinity_rft::util::json::Value::obj(vec![
+            ("question", trinity_rft::util::json::Value::str(format!("what is {i} + 2 ?"))),
+            ("answer", trinity_rft::util::json::Value::str((i + 2).to_string())),
+        ]);
+        exps.push(formatter.to_expert_experience(&raw).unwrap());
+    }
+    session.buffer.write(exps).unwrap();
+    let report = session.run().unwrap();
+    // seed `train` mode shape: steps consumed, no explorers, no syncs
+    assert_eq!(report.mode, "train");
+    assert_eq!(report.train_steps, 2);
+    assert_eq!(report.explore_batches, 0);
+    assert_eq!(report.sync_count, 0);
+    assert!(report.timeline.iter().all(|e| e.role == "trainer"));
+    assert_eq!(report.trainer_metrics.len(), 2);
+}
+
+#[test]
+fn bounded_staleness_caps_explorer_version_lag() {
+    let Some(mut cfg) = base_cfg() else { return };
+    cfg.mode = "async".into();
+    cfg.scheduler.policy = Some("bounded_staleness".into());
+    cfg.scheduler.max_version_lag = 1;
+    cfg.sync_interval = 1;
+    cfg.total_steps = 4;
+    let mut session = RftSession::build(cfg, None, None).unwrap();
+    let report = session.run().unwrap();
+    assert!(report.mode.starts_with("staleness"), "{}", report.mode);
+    assert_eq!(report.train_steps, 4);
+    assert!(report.explore_batches >= 1);
+    assert!(
+        report.max_version_lag <= 1,
+        "version lag {} exceeded max_version_lag=1",
+        report.max_version_lag
+    );
+}
+
+#[test]
+fn async_runs_record_weight_sync_spans_and_compute_s() {
+    let Some(mut cfg) = base_cfg() else { return };
+    cfg.mode = "async".into();
+    cfg.sync_interval = 2;
+    cfg.total_steps = 4;
+    let mut session = RftSession::build(cfg, None, None).unwrap();
+    let report = session.run().unwrap();
+    // the seed's run_async recorded neither of these
+    assert_eq!(
+        report.timeline.iter().filter(|e| e.kind == "weight_sync").count() as u64,
+        report.sync_count
+    );
+    assert_eq!(report.sync_count, 2);
+    assert_eq!(session.monitor.series("trainer/compute_s").len(), 4);
+    // and rollouts log their off-policyness
+    assert!(!session.monitor.series("explorer-0/version_lag").is_empty());
+}
+
+#[test]
+fn explicit_policy_object_bypasses_config_resolution() {
+    let Some(mut cfg) = base_cfg() else { return };
+    cfg.mode = "both".into();
+    cfg.total_steps = 4;
+    let mut session = RftSession::build(cfg, None, None).unwrap();
+    let policy: Arc<dyn SyncPolicy> = Arc::new(Windowed { interval: 2, offset: 0 });
+    let report = session.run_policy(policy).unwrap();
+    assert_eq!(report.mode, "both(i=2,o=0)");
+    assert_eq!(report.sync_count, 2);
+    assert_eq!(report.explore_batches, 4);
+}
