@@ -61,11 +61,93 @@ pub struct SchedulerSection {
     /// `BoundedStaleness`: max publish-windows an explorer's weight
     /// version may trail the rollout window it generates.
     pub max_version_lag: u64,
+    /// Keep only the newest N published checkpoints on the sync path;
+    /// 0 (the default) keeps everything — rotation is opt-in because
+    /// bench-over-checkpoints workflows read intermediate versions.
+    /// No-op for non-durable sync methods.
+    pub keep_checkpoints: usize,
+    /// Hash-partition the task stream across explorers so multi-explorer
+    /// runs stop duplicating curriculum order.
+    pub shard_tasks: bool,
 }
 
 impl Default for SchedulerSection {
     fn default() -> Self {
-        SchedulerSection { policy: None, max_version_lag: 1 }
+        SchedulerSection {
+            policy: None,
+            max_version_lag: 1,
+            keep_checkpoints: 0,
+            shard_tasks: true,
+        }
+    }
+}
+
+/// Typed rollout-service section (`service.*`): when enabled, explorers
+/// share a replica pool behind the in-process rollout service instead of
+/// holding direct engine handles (paper §2.2; DESIGN.md §6).
+#[derive(Debug, Clone)]
+pub struct ServiceSection {
+    pub enabled: bool,
+    /// Engine replicas behind the service.
+    pub replicas: usize,
+    /// Max rows per shared session (0 = the engine's native batch).
+    pub max_batch: usize,
+    /// Microbatch admission window, milliseconds.
+    pub admission_window_ms: u64,
+    /// Tokens sampled between continuous-batching refill checks.
+    pub refill_chunk: usize,
+    /// Per-request deadline, seconds.
+    pub timeout_s: f64,
+    /// Attempts per request across replicas (1 = no retry).
+    pub max_attempts: usize,
+    /// Backoff before a failed request re-routes, milliseconds.
+    pub retry_backoff_ms: u64,
+    /// Consecutive failures that quarantine a replica.
+    pub breaker_failures: usize,
+    /// Quarantine cooldown before a health probe, seconds.
+    pub quarantine_s: f64,
+}
+
+impl Default for ServiceSection {
+    /// Knob defaults come from `service::ServiceConfig::default()` —
+    /// ONE source of truth for YAML-configured and programmatic users.
+    fn default() -> Self {
+        let d = crate::service::ServiceConfig::default();
+        ServiceSection {
+            enabled: false,
+            replicas: 1,
+            max_batch: d.max_batch,
+            admission_window_ms: d.admission_window.as_millis() as u64,
+            refill_chunk: d.refill_chunk,
+            timeout_s: d.request_timeout.as_secs_f64(),
+            max_attempts: d.max_attempts,
+            retry_backoff_ms: d.retry_backoff.as_millis() as u64,
+            breaker_failures: d.breaker_failures as usize,
+            quarantine_s: d.quarantine.as_secs_f64(),
+        }
+    }
+}
+
+impl ServiceSection {
+    /// Bad values survive the conversion (clamped only as far as needed
+    /// to avoid `Duration::from_secs_f64` panics on negative/non-finite
+    /// or astronomically large inputs) so `ServiceConfig::validate`
+    /// rejects them loudly instead of silently correcting the config.
+    pub fn to_service_config(&self) -> crate::service::ServiceConfig {
+        let secs = |v: f64| {
+            let v = if v.is_finite() { v.clamp(0.0, 1e9) } else { 0.0 };
+            std::time::Duration::from_secs_f64(v)
+        };
+        crate::service::ServiceConfig {
+            max_batch: self.max_batch,
+            admission_window: std::time::Duration::from_millis(self.admission_window_ms),
+            refill_chunk: self.refill_chunk,
+            request_timeout: secs(self.timeout_s),
+            max_attempts: self.max_attempts,
+            retry_backoff: std::time::Duration::from_millis(self.retry_backoff_ms),
+            breaker_failures: self.breaker_failures.min(u32::MAX as usize) as u32,
+            quarantine: secs(self.quarantine_s),
+        }
     }
 }
 
@@ -75,6 +157,8 @@ pub struct RftConfig {
     pub mode: String,
     /// Typed scheduler/staleness keys (see [`SchedulerSection`]).
     pub scheduler: SchedulerSection,
+    /// Typed rollout-service keys (see [`ServiceSection`]).
+    pub service: ServiceSection,
     pub model_preset: String,
     pub seed: u64,
     /// Registered algorithm name (see `trinity algorithms list`).
@@ -133,6 +217,7 @@ impl Default for RftConfig {
         RftConfig {
             mode: "both".into(),
             scheduler: SchedulerSection::default(),
+            service: ServiceSection::default(),
             model_preset: "tiny".into(),
             seed: 42,
             algorithm: "grpo".into(),
@@ -251,6 +336,24 @@ impl RftConfig {
         u("scheduler.interval", &mut cfg.sync_interval);
         u("scheduler.offset", &mut cfg.sync_offset);
         u("scheduler.max_version_lag", &mut cfg.scheduler.max_version_lag);
+        us("scheduler.keep_checkpoints", &mut cfg.scheduler.keep_checkpoints);
+        b("scheduler.shard_tasks", &mut cfg.scheduler.shard_tasks);
+
+        // typed rollout-service section
+        b("service.enabled", &mut cfg.service.enabled);
+        us("service.replicas", &mut cfg.service.replicas);
+        us("service.max_batch", &mut cfg.service.max_batch);
+        u("service.admission_window_ms", &mut cfg.service.admission_window_ms);
+        us("service.refill_chunk", &mut cfg.service.refill_chunk);
+        if let Some(x) = v.path("service.timeout_s").and_then(Value::as_f64) {
+            cfg.service.timeout_s = x;
+        }
+        us("service.max_attempts", &mut cfg.service.max_attempts);
+        u("service.retry_backoff_ms", &mut cfg.service.retry_backoff_ms);
+        us("service.breaker_failures", &mut cfg.service.breaker_failures);
+        if let Some(x) = v.path("service.quarantine_s").and_then(Value::as_f64) {
+            cfg.service.quarantine_s = x;
+        }
 
         us("explorer.count", &mut cfg.explorer_count);
         us("explorer.threads", &mut cfg.explorer_threads);
@@ -312,6 +415,16 @@ impl RftConfig {
         match self.workflow.as_str() {
             "math" | "alfworld" | "reflect_once" => {}
             other => bail!("unknown workflow '{other}'"),
+        }
+        if self.service.enabled {
+            if self.service.replicas == 0 {
+                bail!("service.replicas must be >= 1");
+            }
+            if !self.service.timeout_s.is_finite() || !self.service.quarantine_s.is_finite() {
+                bail!("service.timeout_s / service.quarantine_s must be finite");
+            }
+            // surface bad knobs at config time, not at session build
+            self.service.to_service_config().validate()?;
         }
         Ok(())
     }
@@ -521,6 +634,65 @@ scheduler:
                 "should accept: {yaml}"
             );
         }
+    }
+
+    #[test]
+    fn service_section_parses_and_validates() {
+        let yaml = "\
+mode: both
+service:
+  enabled: true
+  replicas: 3
+  max_batch: 4
+  admission_window_ms: 5
+  refill_chunk: 2
+  timeout_s: 9.5
+  max_attempts: 4
+  retry_backoff_ms: 7
+  breaker_failures: 2
+  quarantine_s: 0.25
+";
+        let cfg = RftConfig::from_value(&yamlite::parse(yaml).unwrap()).unwrap();
+        assert!(cfg.service.enabled);
+        assert_eq!(cfg.service.replicas, 3);
+        assert_eq!(cfg.service.max_batch, 4);
+        let sc = cfg.service.to_service_config();
+        assert_eq!(sc.admission_window, std::time::Duration::from_millis(5));
+        assert_eq!(sc.refill_chunk, 2);
+        assert!((sc.request_timeout.as_secs_f64() - 9.5).abs() < 1e-9);
+        assert_eq!((sc.max_attempts, sc.breaker_failures), (4, 2));
+        assert!((sc.quarantine.as_secs_f64() - 0.25).abs() < 1e-9);
+        // defaults: service off, sane knobs
+        let off = RftConfig::from_value(&yamlite::parse("mode: both\n").unwrap()).unwrap();
+        assert!(!off.service.enabled);
+        assert_eq!(off.service.replicas, 1);
+        // bad knobs fail at config time
+        let bad = "mode: both\nservice:\n  enabled: true\n  replicas: 0\n";
+        assert!(RftConfig::from_value(&yamlite::parse(bad).unwrap()).is_err());
+        let bad = "mode: both\nservice:\n  enabled: true\n  max_attempts: 0\n";
+        assert!(RftConfig::from_value(&yamlite::parse(bad).unwrap()).is_err());
+        let bad = "mode: both\nservice:\n  enabled: true\n  breaker_failures: 0\n";
+        assert!(RftConfig::from_value(&yamlite::parse(bad).unwrap()).is_err());
+        let bad = "mode: both\nservice:\n  enabled: true\n  timeout_s: 0\n";
+        assert!(RftConfig::from_value(&yamlite::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn scheduler_rotation_and_sharding_knobs_parse() {
+        let yaml = "\
+mode: async
+scheduler:
+  keep_checkpoints: 2
+  shard_tasks: false
+";
+        let cfg = RftConfig::from_value(&yamlite::parse(yaml).unwrap()).unwrap();
+        assert_eq!(cfg.scheduler.keep_checkpoints, 2);
+        assert!(!cfg.scheduler.shard_tasks);
+        // rotation stays opt-in: the default must never delete
+        // checkpoints that bench-over-checkpoints workflows read
+        let d = RftConfig::default();
+        assert_eq!(d.scheduler.keep_checkpoints, 0);
+        assert!(d.scheduler.shard_tasks);
     }
 
     #[test]

@@ -10,7 +10,7 @@ pub mod report;
 pub mod scheduler;
 pub mod tasks;
 
-pub use config::{DpoSection, MixSection, OpmdSection, RftConfig, SchedulerSection};
+pub use config::{DpoSection, MixSection, OpmdSection, RftConfig, SchedulerSection, ServiceSection};
 pub use monitor::Monitor;
 pub use policy::{
     resolve_policy, BoundedStaleness, ExplorerPlan, Free, Offline, Progress, RftMode, SyncPolicy,
@@ -18,4 +18,6 @@ pub use policy::{
 };
 pub use report::{ModeReport, RolloutRecord, RunRecorder, TimelineEvent};
 pub use scheduler::{run_mode, sft_warmup_snapshot, BuildOpts, RftSession};
-pub use tasks::{AlfworldTaskSource, MathTaskSource, PrioritizedTaskSource, TaskSource};
+pub use tasks::{
+    AlfworldTaskSource, MathTaskSource, PrioritizedTaskSource, ShardedTaskSource, TaskSource,
+};

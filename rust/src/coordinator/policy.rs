@@ -22,10 +22,11 @@
 //! [`SyncPolicyRegistry`] and are selected by `scheduler.policy` in
 //! config, mirroring the trainer's `AlgorithmRegistry`.
 
-use std::collections::BTreeMap;
-use std::sync::{Arc, OnceLock, RwLock};
+use std::sync::{Arc, OnceLock};
 
-use anyhow::{anyhow, bail, Result};
+use anyhow::{bail, Result};
+
+use crate::util::Registry;
 
 use super::config::RftConfig;
 
@@ -233,13 +234,20 @@ where
 /// `WeightSyncRegistry`): `scheduler.policy` names resolve here.
 /// Lookup is case-insensitive; unknown names fail with the catalog.
 pub struct SyncPolicyRegistry {
-    factories: RwLock<BTreeMap<String, Arc<dyn SyncPolicyFactory>>>,
+    factories: Registry<Arc<dyn SyncPolicyFactory>>,
 }
 
 impl SyncPolicyRegistry {
     /// An empty registry (tests); production code uses [`global`](Self::global).
     pub fn new() -> SyncPolicyRegistry {
-        SyncPolicyRegistry { factories: RwLock::new(BTreeMap::new()) }
+        SyncPolicyRegistry {
+            factories: Registry::new(
+                "sync policy",
+                "policies",
+                "register custom policies with SyncPolicyRegistry::global().register(..)",
+                true,
+            ),
+        }
     }
 
     /// A registry pre-populated with the builtin policies and their
@@ -287,34 +295,21 @@ impl SyncPolicyRegistry {
 
     /// Register a factory under `name` (stored lowercased; latest wins).
     pub fn register(&self, name: &str, factory: impl SyncPolicyFactory + 'static) {
-        self.factories
-            .write()
-            .unwrap()
-            .insert(name.trim().to_ascii_lowercase(), Arc::new(factory));
+        self.factories.insert(name, Arc::new(factory));
     }
 
     pub fn contains(&self, name: &str) -> bool {
-        self.factories.read().unwrap().contains_key(&name.trim().to_ascii_lowercase())
+        self.factories.contains(name)
     }
 
     /// Registered policy names (incl. aliases), sorted.
     pub fn names(&self) -> Vec<String> {
-        self.factories.read().unwrap().keys().cloned().collect()
+        self.factories.names()
     }
 
     /// Resolve `name` (case-insensitive) and build the policy.
     pub fn build(&self, name: &str, cfg: &RftConfig) -> Result<Arc<dyn SyncPolicy>> {
-        // one guard for lookup AND the error's name list (see
-        // AlgorithmRegistry::get for the deadlock rationale)
-        let factories = self.factories.read().unwrap();
-        match factories.get(&name.trim().to_ascii_lowercase()) {
-            Some(f) => f.build(cfg),
-            None => Err(anyhow!(
-                "unknown sync policy '{name}' — registered policies: [{}]; \
-                 register custom policies with SyncPolicyRegistry::global().register(..)",
-                factories.keys().cloned().collect::<Vec<_>>().join(", ")
-            )),
-        }
+        self.factories.lookup(name)?.build(cfg)
     }
 }
 

@@ -10,6 +10,7 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::explorer::{EvalReport, RunnerStats};
+use crate::service::ServiceSnapshot;
 use crate::trainer::{StepMetrics, Trainer};
 
 use super::monitor::Monitor;
@@ -45,6 +46,8 @@ pub struct ModeReport {
     /// (step, weights) snapshots taken every `eval_every` steps.
     pub snapshots: Vec<(u64, Vec<Vec<f32>>)>,
     pub final_eval: Option<EvalReport>,
+    /// End-of-run rollout-service telemetry (service-backed runs only).
+    pub service: Option<ServiceSnapshot>,
 }
 
 impl ModeReport {
@@ -155,6 +158,12 @@ impl RunRecorder {
         self.snapshots.lock().unwrap().push((step, weights));
     }
 
+    /// Log rollout-service telemetry under the "service" role (the
+    /// scheduler calls this at publish boundaries and at run end).
+    pub fn service(&self, step: u64, snap: &ServiceSnapshot) {
+        self.monitor.log("service", step, &snap.monitor_fields());
+    }
+
     pub fn sync_count(&self) -> u64 {
         self.sync_count.load(Ordering::SeqCst)
     }
@@ -184,6 +193,7 @@ impl RunRecorder {
             timeline: self.timeline.into_inner().unwrap(),
             snapshots: self.snapshots.into_inner().unwrap(),
             final_eval: None,
+            service: None,
         }
     }
 }
@@ -231,6 +241,16 @@ mod tests {
         assert_eq!(events.len(), 4);
         assert!(events.iter().all(|e| e.end_s >= e.start_s));
         assert!(events.iter().any(|e| e.kind == "weight_sync" && e.role == "trainer"));
+    }
+
+    #[test]
+    fn recorder_logs_service_snapshots_under_service_role() {
+        let monitor = Arc::new(Monitor::in_memory());
+        let rec = RunRecorder::new(Arc::clone(&monitor), Instant::now());
+        let snap = ServiceSnapshot { sessions: 2, rows: 6, ..Default::default() };
+        rec.service(1, &snap);
+        assert_eq!(monitor.series_values("service/occupancy"), vec![3.0]);
+        assert_eq!(monitor.series("service/queued").len(), 1);
     }
 
     #[test]

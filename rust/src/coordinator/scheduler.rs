@@ -19,11 +19,12 @@ use crate::buffer::{ExperienceBuffer, QueueBuffer, StrategyCtx};
 use crate::data::ShapingBuffer;
 use crate::exec::{CancellationToken, Promise, ThreadPool, WatchCell};
 use crate::explorer::{
-    EvalReport, Explorer, ExplorerConfig, GenerationEngine, RunnerConfig, SamplingArgs,
-    WorkflowRegistry,
+    EvalReport, Explorer, ExplorerConfig, GenerationEngine, RolloutEndpoint, RunnerConfig,
+    SamplingArgs, WorkflowRegistry,
 };
 use crate::model::{ParamStore, SyncCtx, WeightSync, WeightSyncRegistry};
 use crate::runtime::{Manifest, ModelEngine, RuntimeClient};
+use crate::service::RolloutService;
 use crate::tokenizer::Tokenizer;
 use crate::trainer::{AlgorithmRegistry, Trainer, TrainerConfig};
 
@@ -31,7 +32,7 @@ use super::config::RftConfig;
 use super::monitor::Monitor;
 use super::policy::{resolve_policy, ExplorerPlan, Progress, SyncPolicy};
 use super::report::{ModeReport, RolloutRecord, RunRecorder};
-use super::tasks::{AlfworldTaskSource, MathTaskSource, TaskSource};
+use super::tasks::{AlfworldTaskSource, MathTaskSource, ShardedTaskSource, TaskSource};
 
 /// Shared run state: the policy-visible [`Progress`] plus the failure
 /// flag that releases blocked explorer drivers.
@@ -136,6 +137,9 @@ pub struct RftSession {
     pub buffer: Arc<dyn ExperienceBuffer>,
     pub sync: Arc<dyn WeightSync>,
     pub explorers: Vec<Arc<Explorer>>,
+    /// The shared rollout service when `service.enabled` — explorers
+    /// then hold service handles instead of direct engine handles.
+    pub service: Option<Arc<RolloutService>>,
     pub task_source: Arc<dyn TaskSource>,
     pub trainer: Option<Trainer>,
     origin: Instant,
@@ -214,28 +218,56 @@ impl RftSession {
             max_new_tokens: cfg.max_new_tokens,
             seed: cfg.seed,
         };
+        let ex_cfg = |i: usize| ExplorerConfig {
+            runner: RunnerConfig {
+                timeout: Duration::from_secs_f64(cfg.task_timeout_s),
+                max_attempts: cfg.task_max_attempts,
+                retry_delay: Duration::from_millis(20),
+                seed: cfg.seed ^ (i as u64) << 8,
+            },
+            sampling: sampling.clone(),
+            threads: cfg.explorer_threads,
+        };
         let mut explorers = Vec::with_capacity(cfg.explorer_count);
-        for i in 0..cfg.explorer_count {
-            let params = ParamStore::from_snapshot(&engine.model, &init_snapshot)?;
-            let gen = Arc::new(GenerationEngine::new(Arc::clone(&engine), params));
-            let ex_cfg = ExplorerConfig {
-                runner: RunnerConfig {
-                    timeout: Duration::from_secs_f64(cfg.task_timeout_s),
-                    max_attempts: cfg.task_max_attempts,
-                    retry_delay: Duration::from_millis(20),
-                    seed: cfg.seed ^ (i as u64) << 8,
-                },
-                sampling: sampling.clone(),
-                threads: cfg.explorer_threads,
-            };
-            explorers.push(Arc::new(Explorer::new(
-                i,
-                gen,
-                Arc::clone(&registry),
-                Arc::clone(&tokenizer),
-                Arc::clone(&buffer),
-                ex_cfg,
-            )));
+        let mut service = None;
+        if cfg.service.enabled {
+            // the rollout service tier (paper §2.2): a replica pool of
+            // engines shared by every explorer; each replica owns its
+            // own ParamStore so weight publishes roll one replica at a
+            // time without stopping traffic
+            let mut engines = Vec::with_capacity(cfg.service.replicas);
+            for _ in 0..cfg.service.replicas {
+                let params = ParamStore::from_snapshot(&engine.model, &init_snapshot)?;
+                engines.push(Arc::new(GenerationEngine::new(Arc::clone(&engine), params)));
+            }
+            let svc = Arc::new(RolloutService::over_engines(
+                engines,
+                cfg.service.to_service_config(),
+            )?);
+            for i in 0..cfg.explorer_count {
+                explorers.push(Arc::new(Explorer::with_endpoint(
+                    i,
+                    Arc::clone(&svc),
+                    Arc::clone(&registry),
+                    Arc::clone(&tokenizer),
+                    Arc::clone(&buffer),
+                    ex_cfg(i),
+                )));
+            }
+            service = Some(svc);
+        } else {
+            for i in 0..cfg.explorer_count {
+                let params = ParamStore::from_snapshot(&engine.model, &init_snapshot)?;
+                let gen = Arc::new(GenerationEngine::new(Arc::clone(&engine), params));
+                explorers.push(Arc::new(Explorer::new(
+                    i,
+                    gen,
+                    Arc::clone(&registry),
+                    Arc::clone(&tokenizer),
+                    Arc::clone(&buffer),
+                    ex_cfg(i),
+                )));
+            }
         }
 
         // task source
@@ -276,6 +308,7 @@ impl RftSession {
             buffer,
             sync,
             explorers,
+            service,
             task_source,
             trainer: Some(trainer),
             origin: Instant::now(),
@@ -315,10 +348,20 @@ impl RftSession {
         let mut promises: Vec<Promise<Result<u64>>> = vec![];
         if !launched.is_empty() {
             let p = ThreadPool::new("scheduler", launched.len());
-            for explorer in launched {
+            // multi-explorer runs hash-partition the shared task stream
+            // so explorers stop duplicating curriculum order; shards
+            // route tasks owned by their peers (see ShardRouter for the
+            // bounded-pending semantics)
+            let shards = (launched.len() > 1 && cfg.scheduler.shard_tasks)
+                .then(|| ShardedTaskSource::partition(Arc::clone(&self.task_source), launched.len()));
+            for (shard, explorer) in launched.iter().enumerate() {
+                let source: Arc<dyn TaskSource> = match &shards {
+                    Some(s) => Arc::clone(&s[shard]) as Arc<dyn TaskSource>,
+                    None => Arc::clone(&self.task_source),
+                };
                 let driver = ExplorerDriver {
                     explorer: Arc::clone(explorer),
-                    source: Arc::clone(&self.task_source),
+                    source,
                     sync: Arc::clone(&self.sync),
                     policy: Arc::clone(&policy),
                     recorder: Arc::clone(&recorder),
@@ -342,8 +385,16 @@ impl RftSession {
                 if policy.publish_after(t + 1) {
                     let s0 = Instant::now();
                     trainer.publish_weights(self.sync.as_ref())?;
+                    // keep-N rotation so long async runs stop filling
+                    // the sync dir (no-op for non-durable methods)
+                    if cfg.scheduler.keep_checkpoints > 0 {
+                        self.sync.rotate(cfg.scheduler.keep_checkpoints)?;
+                    }
                     recorder.weight_sync(s0, Instant::now());
                     state.update(|st| st.progress.published_windows += 1);
+                    if let Some(svc) = &self.service {
+                        recorder.service(t + 1, &svc.snapshot());
+                    }
                 }
                 state.update(|st| st.progress.trainer_steps += 1);
                 if cfg.eval_every > 0 && (t + 1) % cfg.eval_every == 0 {
@@ -385,15 +436,20 @@ impl RftSession {
             0 => 0.0,
             n => launched.iter().map(|e| e.utilization_percent()).sum::<f64>() / n as f64,
         };
-        let report = Arc::try_unwrap(recorder)
-            .map_err(|_| anyhow!("recorder still shared after drivers joined"))?
-            .finish(
-                policy.label(self.explorers.len()),
-                &trainer,
-                explore_batches,
-                explorer_util,
-                self.client.total_exec_seconds(),
-            );
+        let recorder = Arc::try_unwrap(recorder)
+            .map_err(|_| anyhow!("recorder still shared after drivers joined"))?;
+        // final service telemetry rides on the report only — publish
+        // boundaries already logged the monitor series, and logging the
+        // same step twice would duplicate points
+        let final_service = self.service.as_ref().map(|svc| svc.snapshot());
+        let mut report = recorder.finish(
+            policy.label(self.explorers.len()),
+            &trainer,
+            explore_batches,
+            explorer_util,
+            self.client.total_exec_seconds(),
+        );
+        report.service = final_service;
         self.trainer = Some(trainer);
         Ok(report)
     }
@@ -419,9 +475,14 @@ impl RftSession {
     }
 
     /// Load a weight snapshot into every explorer (bench over checkpoints).
+    /// Service-backed explorers share the replica pool, so one pass over
+    /// the pool covers them all.
     pub fn load_explorer_weights(&self, weights: &[Vec<f32>], version: u64) -> Result<()> {
+        if let Some(svc) = &self.service {
+            return svc.set_weights(weights, version);
+        }
         for e in &self.explorers {
-            e.engine().set_weights(weights, version)?;
+            e.set_weights(weights, version)?;
         }
         Ok(())
     }

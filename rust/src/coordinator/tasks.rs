@@ -1,9 +1,11 @@
 //! Task sources: where the explorer's work comes from.  The default
 //! sources wrap the synthetic envs; `PrioritizedTaskSource` serves a
 //! pre-curated, priority-ordered task set produced by the data pipeline
-//! (curriculum learning, Fig. 10).
+//! (curriculum learning, Fig. 10); `ShardedTaskSource` hash-partitions a
+//! shared stream across explorers so multi-explorer runs stop
+//! duplicating curriculum order.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::envs::math::MathTaskGen;
 use crate::explorer::Task;
@@ -163,6 +165,107 @@ impl TaskSource for PrioritizedTaskSource {
     }
 }
 
+/// Shared state behind one partition of a task stream: the inner source
+/// plus a per-shard pending queue.  Whichever shard pulls from the
+/// inner source *routes* tasks it does not own to the owner's pending
+/// queue, so every task id is handled by exactly one explorer and each
+/// shard sees the underlying stream's order.  Routing is lossless up to
+/// [`SHARD_PENDING_CAP`] queued tasks per shard; past that (a stalled or
+/// much slower explorer) the oldest routed task is dropped with a debug
+/// log — cycling/curated sources re-serve it a cycle later.
+struct ShardRouter {
+    inner: Arc<dyn TaskSource>,
+    pending: Vec<Mutex<std::collections::VecDeque<Task>>>,
+    count: u64,
+}
+
+/// A slow shard's pending queue is capped; overflow drops the oldest
+/// routed task (cycling/curated sources re-serve it a cycle later).
+const SHARD_PENDING_CAP: usize = 1024;
+
+/// Shard `index` of a [`ShardRouter`] partition — build the full set
+/// with [`ShardedTaskSource::partition`].
+pub struct ShardedTaskSource {
+    router: Arc<ShardRouter>,
+    index: u64,
+}
+
+impl ShardedTaskSource {
+    /// Hash-partition `inner` into `count` shards (one per explorer).
+    pub fn partition(inner: Arc<dyn TaskSource>, count: usize) -> Vec<Arc<ShardedTaskSource>> {
+        assert!(count >= 1, "need at least one shard");
+        let router = Arc::new(ShardRouter {
+            inner,
+            pending: (0..count).map(|_| Mutex::new(std::collections::VecDeque::new())).collect(),
+            count: count as u64,
+        });
+        (0..count)
+            .map(|index| {
+                Arc::new(ShardedTaskSource { router: Arc::clone(&router), index: index as u64 })
+            })
+            .collect()
+    }
+
+    pub fn index(&self) -> usize {
+        self.index as usize
+    }
+
+    fn owner(&self, task: &Task) -> u64 {
+        task.group_id() % self.router.count
+    }
+}
+
+impl TaskSource for ShardedTaskSource {
+    fn next_batch(&self, n: usize) -> Vec<Task> {
+        let mut out = Vec::with_capacity(n);
+        // first serve what other shards already routed here
+        {
+            let mut mine = self.router.pending[self.index as usize].lock().unwrap();
+            while out.len() < n {
+                match mine.pop_front() {
+                    Some(t) => out.push(t),
+                    None => break,
+                }
+            }
+        }
+        // then pull from the shared stream, routing misses to their
+        // owners; bounded so a degenerate stream (every id on another
+        // shard) yields a short batch instead of spinning
+        let max_pulls = 16 * n.max(1) * self.router.count as usize;
+        let mut pulled = 0usize;
+        while out.len() < n && pulled < max_pulls {
+            let chunk = self.router.inner.next_batch(n.max(1));
+            if chunk.is_empty() {
+                break;
+            }
+            pulled += chunk.len();
+            for task in chunk {
+                let owner = self.owner(&task);
+                if owner == self.index && out.len() < n {
+                    out.push(task);
+                } else {
+                    let mut q = self.router.pending[owner as usize].lock().unwrap();
+                    if q.len() >= SHARD_PENDING_CAP {
+                        let dropped = q.pop_front();
+                        crate::log_debug!(
+                            "tasks",
+                            "shard {owner} pending full; dropping oldest routed task {:?}",
+                            dropped.map(|t| t.id)
+                        );
+                    }
+                    q.push_back(task);
+                }
+            }
+        }
+        out
+    }
+
+    /// Evaluation is not sharded: every explorer scores the same set.
+    fn eval_batch(&self, n: usize) -> Vec<Task> {
+        self.router.inner.eval_batch(n)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -203,6 +306,70 @@ mod tests {
         let b = s.next_batch(5);
         let ids: Vec<&str> = b.iter().map(|t| t.id.as_str()).collect();
         assert_eq!(ids, vec!["p0", "p1", "p2", "p0", "p1"]);
+    }
+
+    #[test]
+    fn shards_partition_the_stream_without_duplication() {
+        // one shared generator, three shards pulling from it in turn
+        let inner: Arc<dyn TaskSource> = Arc::new(MathTaskSource::new(5, 1, 3, 2));
+        let shards = ShardedTaskSource::partition(inner, 3);
+        let mut seen: Vec<String> = vec![];
+        for shard in &shards {
+            for t in shard.next_batch(6) {
+                assert_eq!(
+                    t.group_id() % 3,
+                    shard.index() as u64,
+                    "task served by the wrong shard"
+                );
+                seen.push(t.id.clone());
+            }
+        }
+        let mut uniq = seen.clone();
+        uniq.sort();
+        uniq.dedup();
+        assert_eq!(uniq.len(), seen.len(), "a task id appeared on two shards");
+        assert!(seen.len() >= 12, "shards should fill their batches: {}", seen.len());
+    }
+
+    #[test]
+    fn routed_tasks_are_kept_for_their_owner_not_discarded() {
+        // a fixed curated list: shard A's pulls must leave shard B's
+        // tasks queued for B, preserving curriculum coverage
+        let tasks: Vec<Task> = (0..8)
+            .map(|i| Task::new(&format!("cur{i}"), "math", Value::Object(vec![])))
+            .collect();
+        let owned_by = |t: &Task| (t.group_id() % 2) as usize;
+        let expect_b: Vec<String> =
+            tasks.iter().filter(|t| owned_by(t) == 1).map(|t| t.id.clone()).collect();
+        let inner: Arc<dyn TaskSource> = Arc::new(PrioritizedTaskSource::new(tasks, vec![]));
+        let shards = ShardedTaskSource::partition(inner, 2);
+        // shard 0 pulls first and routes shard 1's tasks to its pending
+        let a = shards[0].next_batch(4);
+        assert!(a.iter().all(|t| owned_by(t) == 0));
+        // shard 1 then receives every one of its tasks, in stream order
+        let b = shards[1].next_batch(expect_b.len());
+        let b_ids: Vec<String> = b.iter().map(|t| t.id.clone()).collect();
+        assert_eq!(
+            b_ids[..expect_b.len().min(b_ids.len())],
+            expect_b[..],
+            "routed tasks must reach their owner in order"
+        );
+    }
+
+    #[test]
+    fn degenerate_shard_returns_short_batch_instead_of_spinning() {
+        // a single repeated task id hashes to exactly one shard; the
+        // other shard must give up after bounded pulls
+        let only = Task::new("solo", "math", Value::Object(vec![]));
+        let inner: Arc<dyn TaskSource> =
+            Arc::new(PrioritizedTaskSource::new(vec![only.clone()], vec![only.clone()]));
+        let owner = (only.group_id() % 2) as usize;
+        let shards = ShardedTaskSource::partition(inner, 2);
+        assert!(shards[1 - owner].next_batch(3).is_empty());
+        // the owner drains its routed pending plus fresh pulls
+        assert_eq!(shards[owner].next_batch(3).len(), 3);
+        // eval passes through un-sharded
+        assert_eq!(shards[1 - owner].eval_batch(1).len(), 1);
     }
 
     #[test]

@@ -15,7 +15,7 @@ use crate::model::WeightSync;
 use crate::tokenizer::Tokenizer;
 use crate::util::json::Value;
 
-use super::generation::{GenerationEngine, RolloutModel, SamplingArgs};
+use super::generation::{GenerationEngine, RolloutEndpoint, RolloutModel, SamplingArgs};
 use super::runner::{RunnerConfig, RunnerEvent, RunnerStats, WorkflowRunner};
 use super::workflow::{Task, WorkflowRegistry};
 
@@ -39,7 +39,15 @@ impl Default for ExplorerConfig {
 
 pub struct Explorer {
     pub id: usize,
-    engine: Arc<GenerationEngine>,
+    /// The model tier this explorer rolls out against: either a direct
+    /// [`GenerationEngine`] handle (seed wiring) or a shared
+    /// `service::RolloutService` handle (the paper's model service).
+    endpoint: Arc<dyn RolloutEndpoint>,
+    /// Same object as `endpoint`, pre-coerced for the runner's
+    /// `Arc<dyn RolloutModel>` parameter.
+    model: Arc<dyn RolloutModel>,
+    /// Set only when the endpoint IS a direct engine handle.
+    engine: Option<Arc<GenerationEngine>>,
     runner: WorkflowRunner,
     registry: Arc<WorkflowRegistry>,
     tokenizer: Arc<Tokenizer>,
@@ -69,13 +77,50 @@ impl Explorer {
         buffer: Arc<dyn ExperienceBuffer>,
         config: ExplorerConfig,
     ) -> Explorer {
-        let pool = Arc::new(ThreadPool::new(&format!("explorer-{id}"), config.threads));
-        let runner = WorkflowRunner::new(Arc::clone(&pool), config.runner.clone());
-        Explorer { id, engine, runner, registry, tokenizer, buffer, config, batches_done: AtomicU64::new(0), pool }
+        let mut explorer = Self::with_endpoint(id, Arc::clone(&engine), registry, tokenizer, buffer, config);
+        explorer.engine = Some(engine);
+        explorer
     }
 
+    /// An explorer over any [`RolloutEndpoint`] — notably a shared
+    /// rollout-service handle, so N explorers can serve rollouts from
+    /// one replica pool.
+    pub fn with_endpoint<M: RolloutEndpoint + 'static>(
+        id: usize,
+        endpoint: Arc<M>,
+        registry: Arc<WorkflowRegistry>,
+        tokenizer: Arc<Tokenizer>,
+        buffer: Arc<dyn ExperienceBuffer>,
+        config: ExplorerConfig,
+    ) -> Explorer {
+        let pool = Arc::new(ThreadPool::new(&format!("explorer-{id}"), config.threads));
+        let runner = WorkflowRunner::new(Arc::clone(&pool), config.runner.clone());
+        let model: Arc<dyn RolloutModel> = Arc::clone(&endpoint) as Arc<dyn RolloutModel>;
+        Explorer {
+            id,
+            endpoint,
+            model,
+            engine: None,
+            runner,
+            registry,
+            tokenizer,
+            buffer,
+            config,
+            batches_done: AtomicU64::new(0),
+            pool,
+        }
+    }
+
+    /// The direct engine handle (panics for service-backed explorers —
+    /// use [`endpoint`](Self::endpoint) there).
     pub fn engine(&self) -> &Arc<GenerationEngine> {
-        &self.engine
+        self.engine
+            .as_ref()
+            .expect("explorer is service-backed; use Explorer::endpoint() instead of engine()")
+    }
+
+    pub fn endpoint(&self) -> &Arc<dyn RolloutEndpoint> {
+        &self.endpoint
     }
 
     pub fn pool(&self) -> &Arc<ThreadPool> {
@@ -83,7 +128,7 @@ impl Explorer {
     }
 
     pub fn weight_version(&self) -> u64 {
-        self.engine.params_version()
+        self.endpoint.weight_version()
     }
 
     /// Explore one batch of tasks, streaming experiences into the buffer
@@ -92,7 +137,7 @@ impl Explorer {
         let rx = self.runner.run_streaming(
             tasks,
             Arc::clone(&self.registry),
-            self.engine.clone() as Arc<dyn RolloutModel>,
+            Arc::clone(&self.model),
             Arc::clone(&self.tokenizer),
             self.config.sampling.clone(),
         );
@@ -123,9 +168,16 @@ impl Explorer {
         self.batches_done.load(Ordering::SeqCst)
     }
 
-    /// Pull newer weights if published (returns true when updated).
+    /// Pull newer weights if published (returns true when updated).  A
+    /// service-backed explorer rolls the pull across the replica pool.
     pub fn sync_weights(&self, sync: &dyn WeightSync) -> Result<bool> {
-        self.engine.try_sync(sync)
+        self.endpoint.sync_weights(sync)
+    }
+
+    /// Overwrite the endpoint's weights (initial load / bench over
+    /// checkpoints).
+    pub fn set_weights(&self, weights: &[Vec<f32>], version: u64) -> Result<()> {
+        self.endpoint.set_weights(weights, version)
     }
 
     /// Bench mode (paper §2.1.1): evaluate the current weights on a task
@@ -146,7 +198,7 @@ impl Explorer {
                 .and_then(|s| s.parse().ok())
                 .unwrap_or(0);
             let prompt = self.tokenizer.encode_prompt(question);
-            let outs = self.engine.chat(&prompt, task.repeat_times.max(1), &sampling)?;
+            let outs = self.model.chat(&prompt, task.repeat_times.max(1), &sampling)?;
             let mut any_correct = false;
             for out in &outs {
                 let resp = self.tokenizer.decode_response(&out.tokens, out.prompt_len);

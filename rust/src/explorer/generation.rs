@@ -54,6 +54,17 @@ pub trait RolloutModel: Send + Sync {
     fn weight_version(&self) -> u64;
 }
 
+/// What the explorer needs from its model tier beyond [`RolloutModel`]:
+/// the weight lifecycle.  Implemented by a direct [`GenerationEngine`]
+/// handle (the seed wiring), by the rollout service's replica pool
+/// (`service::RolloutService`), and by [`MockModel`] for tests.
+pub trait RolloutEndpoint: RolloutModel {
+    /// Pull newer weights from the sync service if published.
+    fn sync_weights(&self, sync: &dyn WeightSync) -> Result<bool>;
+    /// Overwrite weights directly (initial load / bench over checkpoints).
+    fn set_weights(&self, weights: &[Vec<f32>], version: u64) -> Result<()>;
+}
+
 /// An in-flight generation batch (KV caches + per-row cursors).
 pub struct Session {
     state: GenerationState,
@@ -72,6 +83,16 @@ pub struct Session {
 impl Session {
     pub fn remaining_budget(&self, row: usize) -> usize {
         self.cache_len.saturating_sub(self.pos[row])
+    }
+
+    pub fn rows(&self) -> usize {
+        self.pos.len()
+    }
+
+    /// Re-seed one row's sampling RNG (the rollout service gives every
+    /// request its own seed even when requests share a session).
+    pub fn seed_row(&mut self, row: usize, seed: u64) {
+        self.rngs[row] = Rng::with_stream(seed, 0x5eed ^ row as u64);
     }
 
     pub fn output(&self, row: usize, prompt_len: usize, finished: bool) -> GenOutput {
@@ -188,6 +209,11 @@ impl GenerationEngine {
             return Ok(());
         }
         for (row, toks) in row_tokens.iter().enumerate() {
+            // rows with no input only re-write their last position; the
+            // overflow check applies to rows actually receiving tokens
+            if toks.is_empty() {
+                continue;
+            }
             ensure!(
                 session.pos[row] + toks.len() < session.cache_len,
                 "row {row} overflows cache ({} + {})",
@@ -220,6 +246,39 @@ impl GenerationEngine {
             self.engine.decode(&guard, &mut session.state, &tok_t, &pos_t)?;
         }
         Ok(())
+    }
+
+    /// Continuous-batching slot refill: reset `row` to serve a fresh
+    /// prompt mid-session while the other rows keep their caches.  The
+    /// new prompt streams through the decode path at positions starting
+    /// from 0 — sound because decode masks attention to cache positions
+    /// `<= pos` and overwrites position `pos` before attending, so the
+    /// retired request's stale K/V beyond the new prompt is never
+    /// observed (see `decode_step` in `python/compile/model.py`).
+    pub fn restart_row(
+        &self,
+        session: &mut Session,
+        row: usize,
+        prompt: &[i32],
+        seed: u64,
+    ) -> Result<()> {
+        ensure!(row < session.pos.len(), "row {row} out of range");
+        ensure!(!prompt.is_empty(), "prompt must be non-empty");
+        ensure!(
+            prompt.len() + 1 < session.cache_len,
+            "prompt ({} tokens) overflows cache ({})",
+            prompt.len(),
+            session.cache_len
+        );
+        session.pos[row] = 0;
+        session.tokens[row].clear();
+        session.logprobs[row].clear();
+        session.loss_mask[row].clear();
+        session.active[row] = true;
+        session.seed_row(row, seed);
+        let mut rows: Vec<Vec<i32>> = vec![Vec::new(); session.pos.len()];
+        rows[row] = prompt.to_vec();
+        self.feed(session, &rows)
     }
 
     /// Sample up to `max_new` tokens per active row, stopping rows at EOS.
@@ -344,6 +403,16 @@ impl RolloutModel for GenerationEngine {
     }
 }
 
+impl RolloutEndpoint for GenerationEngine {
+    fn sync_weights(&self, sync: &dyn WeightSync) -> Result<bool> {
+        self.try_sync(sync)
+    }
+
+    fn set_weights(&self, weights: &[Vec<f32>], version: u64) -> Result<()> {
+        GenerationEngine::set_weights(self, weights, version)
+    }
+}
+
 fn log_softmax_at(logits: &[f32], idx: usize) -> f32 {
     let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
     let lse: f32 = logits.iter().map(|&x| (x - max).exp()).sum::<f32>().ln() + max;
@@ -354,10 +423,12 @@ fn log_softmax_at(logits: &[f32], idx: usize) -> f32 {
 // Mock model for unit tests of runners/pipelines (no PJRT involved).
 
 /// Scripted rollout model: configurable latency, failure rate and response
-/// text; used by runner/coordinator unit tests and failure injection.
+/// text; used by runner/coordinator/service unit tests and failure
+/// injection.  `fail_rate` is settable at runtime so circuit-breaker
+/// tests can break a replica and then heal it.
 pub struct MockModel {
     pub latency: std::time::Duration,
-    pub fail_rate: f64,
+    fail_rate: std::sync::atomic::AtomicU64,
     pub respond: Box<dyn Fn(&[i32], &mut Rng) -> Vec<i32> + Send + Sync>,
     rng: std::sync::Mutex<Rng>,
     version: std::sync::atomic::AtomicU64,
@@ -367,7 +438,7 @@ impl MockModel {
     pub fn new(seed: u64, latency: std::time::Duration, fail_rate: f64) -> MockModel {
         MockModel {
             latency,
-            fail_rate,
+            fail_rate: std::sync::atomic::AtomicU64::new(fail_rate.to_bits()),
             respond: Box::new(|_, rng| {
                 let n = 1 + rng.below(4) as usize;
                 let mut out: Vec<i32> = (0..n).map(|_| 100 + rng.below(20) as i32).collect();
@@ -387,6 +458,16 @@ impl MockModel {
     pub fn set_version(&self, v: u64) {
         self.version.store(v, std::sync::atomic::Ordering::SeqCst);
     }
+
+    pub fn fail_rate(&self) -> f64 {
+        f64::from_bits(self.fail_rate.load(std::sync::atomic::Ordering::SeqCst))
+    }
+
+    /// Change the injected failure probability (quarantine-recovery tests
+    /// break a replica, then heal it mid-run).
+    pub fn set_fail_rate(&self, rate: f64) {
+        self.fail_rate.store(rate.to_bits(), std::sync::atomic::Ordering::SeqCst);
+    }
 }
 
 impl RolloutModel for MockModel {
@@ -394,8 +475,9 @@ impl RolloutModel for MockModel {
         if !self.latency.is_zero() {
             std::thread::sleep(self.latency);
         }
+        let fail_rate = self.fail_rate();
         let mut rng = self.rng.lock().unwrap();
-        if self.fail_rate > 0.0 && rng.bool(self.fail_rate) {
+        if fail_rate > 0.0 && rng.bool(fail_rate) {
             anyhow::bail!("mock model transient failure");
         }
         let mut outs = Vec::with_capacity(n);
@@ -418,6 +500,25 @@ impl RolloutModel for MockModel {
 
     fn weight_version(&self) -> u64 {
         self.version.load(std::sync::atomic::Ordering::SeqCst)
+    }
+}
+
+impl RolloutEndpoint for MockModel {
+    /// Version-only sync: the mock has no real weights, but tracking the
+    /// published version lets service/scheduler tests observe rolling
+    /// updates across replicas.
+    fn sync_weights(&self, sync: &dyn WeightSync) -> Result<bool> {
+        let latest = sync.latest_version();
+        if latest > self.weight_version() {
+            self.set_version(latest);
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    fn set_weights(&self, _weights: &[Vec<f32>], version: u64) -> Result<()> {
+        self.set_version(version);
+        Ok(())
     }
 }
 

@@ -16,6 +16,8 @@ pub mod runner;
 pub mod workflow;
 
 pub use explorer::{EvalReport, Explorer, ExplorerConfig};
-pub use generation::{GenOutput, GenerationEngine, MockModel, RolloutModel, SamplingArgs, Session};
+pub use generation::{
+    GenOutput, GenerationEngine, MockModel, RolloutEndpoint, RolloutModel, SamplingArgs, Session,
+};
 pub use runner::{RunnerConfig, RunnerStats, WorkflowRunner};
 pub use workflow::{Task, Workflow, WorkflowCtx, WorkflowRegistry};

@@ -2,6 +2,11 @@
 //! the paper's §2.2 fault tolerance — per-task timeout, bounded retry,
 //! skip-on-failure — and *streaming* completion so stragglers never block
 //! already-finished experiences from reaching the buffer.
+//!
+//! Runners are model-agnostic clients: the `Arc<dyn RolloutModel>` they
+//! take is either a direct engine handle or a `service::ServiceHandle`,
+//! in which case concurrent runners' requests coalesce into shared
+//! engine batches behind the rollout service's microbatcher.
 
 use std::sync::Arc;
 use std::time::Duration;

@@ -19,6 +19,10 @@
 //!   priority views, sampling strategies, delayed rewards.
 //! * [`explorer`] — workflows, workflow runners with timeout/retry/skip,
 //!   and the continuous-batching generation engine.
+//! * [`service`] — the rollout service tier between runners and engines:
+//!   microbatching with continuous slot refill, a replica pool with
+//!   least-loaded routing and rolling weight updates, deadlines, bounded
+//!   retry, and circuit-breaker quarantine (DESIGN.md §6).
 //! * [`trainer`] — the composable algorithm API: specs assembled from
 //!   advantage fns, loss specs, grouping policies and linked sample
 //!   strategies, registered in the global registry
@@ -41,6 +45,7 @@ pub mod exec;
 pub mod explorer;
 pub mod model;
 pub mod runtime;
+pub mod service;
 pub mod tokenizer;
 pub mod trainer;
 pub mod util;

@@ -135,6 +135,20 @@ fn cmd_run(m: &trinity_rft::util::cli::Matches) -> Result<()> {
     println!("explorer util   {:.1}%", report.explorer_util);
     println!("trainer util    {:.1}%", report.trainer_util);
     println!("device busy     {:.1}%", report.device_busy);
+    if let Some(svc) = &report.service {
+        println!(
+            "service         {} replicas, occupancy {:.2}, queue wait {:.1}ms, \
+             {} completed / {} retried / {} expired / {} failed, {} quarantined",
+            svc.replicas.len(),
+            svc.occupancy(),
+            svc.mean_queue_wait_s * 1e3,
+            svc.completed,
+            svc.retried,
+            svc.expired,
+            svc.failed,
+            svc.quarantined()
+        );
+    }
     let rewards = report.reward_series();
     if !rewards.is_empty() {
         let s = timeseries::summarize(&rewards);

@@ -12,11 +12,12 @@
 //! version at different moments (the multi-explorer mode's 24/7-service
 //! property relies on this).
 
-use std::collections::BTreeMap;
 use std::path::PathBuf;
-use std::sync::{Arc, Condvar, Mutex, OnceLock, RwLock};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{Context, Result};
+
+use crate::util::Registry;
 
 use super::checkpoint::{load_checkpoint, save_checkpoint};
 
@@ -35,6 +36,13 @@ pub trait WeightSync: Send + Sync {
     fn fetch_if_newer(&self, current_version: u64) -> Result<Option<WeightUpdate>>;
     /// Latest published version (0 = nothing published).
     fn latest_version(&self) -> u64;
+    /// Drop published versions older than the newest `keep` (the trainer
+    /// driver calls this after each publish when `scheduler.keep_checkpoints`
+    /// is set).  No-op for methods without durable storage.
+    fn rotate(&self, keep: usize) -> Result<()> {
+        let _ = keep;
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -69,13 +77,20 @@ where
 /// the session builder.  Lookup is case-insensitive and unknown names
 /// fail with the full method catalog.
 pub struct WeightSyncRegistry {
-    factories: RwLock<BTreeMap<String, Arc<dyn WeightSyncFactory>>>,
+    factories: Registry<Arc<dyn WeightSyncFactory>>,
 }
 
 impl WeightSyncRegistry {
     /// An empty registry (tests); production code uses [`global`](Self::global).
     pub fn new() -> WeightSyncRegistry {
-        WeightSyncRegistry { factories: RwLock::new(BTreeMap::new()) }
+        WeightSyncRegistry {
+            factories: Registry::new(
+                "sync method",
+                "methods",
+                "register custom methods with WeightSyncRegistry::global().register(..)",
+                true,
+            ),
+        }
     }
 
     /// A registry pre-populated with the builtin methods
@@ -108,34 +123,21 @@ impl WeightSyncRegistry {
 
     /// Register a factory under `name` (stored lowercased; latest wins).
     pub fn register(&self, name: &str, factory: impl WeightSyncFactory + 'static) {
-        self.factories
-            .write()
-            .unwrap()
-            .insert(name.trim().to_ascii_lowercase(), Arc::new(factory));
+        self.factories.insert(name, Arc::new(factory));
     }
 
     pub fn contains(&self, name: &str) -> bool {
-        self.factories.read().unwrap().contains_key(&name.trim().to_ascii_lowercase())
+        self.factories.contains(name)
     }
 
     /// Registered method names, sorted.
     pub fn names(&self) -> Vec<String> {
-        self.factories.read().unwrap().keys().cloned().collect()
+        self.factories.names()
     }
 
     /// Resolve `name` (case-insensitive) and build the service.
     pub fn build(&self, name: &str, ctx: &SyncCtx) -> Result<Arc<dyn WeightSync>> {
-        // one guard for lookup AND the error's name list (see
-        // AlgorithmRegistry::get for the deadlock rationale)
-        let factories = self.factories.read().unwrap();
-        match factories.get(&name.trim().to_ascii_lowercase()) {
-            Some(f) => f.build(ctx),
-            None => Err(anyhow!(
-                "unknown sync method '{name}' — registered methods: [{}]; \
-                 register custom methods with WeightSyncRegistry::global().register(..)",
-                factories.keys().cloned().collect::<Vec<_>>().join(", ")
-            )),
-        }
+        self.factories.lookup(name)?.build(ctx)
     }
 }
 
@@ -204,7 +206,13 @@ impl WeightSync for MemorySync {
     fn fetch_if_newer(&self, current_version: u64) -> Result<Option<WeightUpdate>> {
         let (lock, _) = &*self.state;
         let guard = lock.lock().unwrap();
-        Ok(guard.latest.clone().filter(|u| u.version > current_version))
+        // check the version BEFORE cloning: the common already-current
+        // probe must not pay a full-weight copy (replica pools probe on
+        // every admitted batch)
+        Ok(match &guard.latest {
+            Some(u) if u.version > current_version => Some(u.clone()),
+            _ => None,
+        })
     }
 
     fn latest_version(&self) -> u64 {
@@ -274,20 +282,36 @@ impl WeightSync for CheckpointSync {
     }
 
     fn fetch_if_newer(&self, current_version: u64) -> Result<Option<WeightUpdate>> {
-        let latest = self.read_latest();
-        if latest <= current_version {
-            return Ok(None);
+        // LATEST-read and file-load race against keep-N rotation: a
+        // version read here can be rotated away before the load.  The
+        // newest checkpoint always survives rotation, so re-reading
+        // LATEST and retrying converges.
+        let mut last_err = None;
+        for _ in 0..3 {
+            let latest = self.read_latest();
+            if latest <= current_version {
+                return Ok(None);
+            }
+            match load_checkpoint(self.ckpt_path(latest)) {
+                Ok(ck) => {
+                    return Ok(Some(WeightUpdate {
+                        version: ck.weight_version,
+                        step: ck.step,
+                        weights: ck.weights(),
+                    }))
+                }
+                Err(e) => last_err = Some(e),
+            }
         }
-        let ck = load_checkpoint(self.ckpt_path(latest))?;
-        Ok(Some(WeightUpdate {
-            version: ck.weight_version,
-            step: ck.step,
-            weights: ck.weights(),
-        }))
+        Err(last_err.unwrap().context("checkpoint vanished beneath fetch (rotation race)"))
     }
 
     fn latest_version(&self) -> u64 {
         self.read_latest()
+    }
+
+    fn rotate(&self, keep: usize) -> Result<()> {
+        CheckpointSync::rotate(self, keep)
     }
 }
 
@@ -391,6 +415,27 @@ mod tests {
         s.publish(1, 5, vec![vec![1.0; 4]]).unwrap();
         assert_eq!(s.latest_version(), 1);
         std::fs::remove_dir_all(ctx.dir.unwrap()).unwrap();
+    }
+
+    #[test]
+    fn rotate_dispatches_through_the_trait_object() {
+        // memory sync: rotation is a no-op
+        let mem: Arc<dyn WeightSync> = Arc::new(MemorySync::new());
+        mem.publish(1, 1, weights(1.0)).unwrap();
+        mem.rotate(1).unwrap();
+        assert_eq!(mem.latest_version(), 1);
+        // checkpoint sync: the trait call reaches the inherent rotation
+        let dir = std::env::temp_dir().join(format!("trft_rot_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let names = vec![("a".to_string(), vec![4]), ("b".to_string(), vec![2])];
+        let ck: Arc<dyn WeightSync> = Arc::new(CheckpointSync::new(&dir, "tiny", names).unwrap());
+        for v in 1..=3 {
+            ck.publish(v, v, weights(v as f32)).unwrap();
+        }
+        ck.rotate(1).unwrap();
+        assert!(!dir.join("weights_v1.ckpt").exists());
+        assert!(dir.join("weights_v3.ckpt").exists());
+        std::fs::remove_dir_all(&dir).unwrap();
     }
 
     #[test]

@@ -1,0 +1,559 @@
+//! The microbatcher: per-replica request queues, admission-window
+//! coalescing, and the worker loop that turns independent `chat` calls
+//! into shared engine sessions.
+//!
+//! Each replica owns one worker thread.  The worker pops the first
+//! queued request, waits up to the admission window for co-travellers
+//! with the same sampling parameters, then serves the batch as ONE
+//! shared session — refilling freed slots from the queue mid-session
+//! (continuous batching).  Deadlines are enforced at pop time, failures
+//! feed the replica's circuit breaker, and a newly quarantined replica
+//! drains its queue to healthy peers.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::exec::future::Completer;
+use crate::explorer::generation::{GenOutput, SamplingArgs};
+
+use super::replica::{ReplicaState, ServeCtl};
+use super::telemetry::ServiceMetrics;
+use super::ServiceConfig;
+
+/// One row request: a single completion of one prompt.  `chat(n)` fans
+/// out into n row jobs that may land on different replicas/sessions.
+pub struct RowJob {
+    pub prompt: Vec<i32>,
+    pub args: SamplingArgs,
+    pub enqueued: Instant,
+    pub deadline: Instant,
+    /// Failed attempts so far (bounded by `service.max_attempts`).
+    pub attempts: usize,
+    pub completer: Completer<Result<GenOutput>>,
+}
+
+impl RowJob {
+    pub fn batch_key(&self) -> SampleKey {
+        SampleKey::of(&self.args)
+    }
+
+    pub fn expired(&self, now: Instant) -> bool {
+        now >= self.deadline
+    }
+}
+
+/// Sampling parameters a shared session must agree on (per-row budgets
+/// and seeds may differ; temperature/top-k/top-p may not).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SampleKey {
+    temperature_bits: u32,
+    top_k: usize,
+    top_p_bits: u32,
+}
+
+impl SampleKey {
+    pub fn of(args: &SamplingArgs) -> SampleKey {
+        SampleKey {
+            temperature_bits: args.temperature.to_bits(),
+            top_k: args.top_k,
+            top_p_bits: args.top_p.to_bits(),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// request queue
+
+struct QueueState {
+    jobs: VecDeque<RowJob>,
+    closed: bool,
+}
+
+/// A replica's request queue (condvar-based, like `exec::channel` but
+/// with key-matching pops for sampling-compatible admission).
+pub struct RequestQueue {
+    state: Mutex<QueueState>,
+    cvar: Condvar,
+}
+
+impl Default for RequestQueue {
+    fn default() -> Self {
+        RequestQueue::new()
+    }
+}
+
+impl RequestQueue {
+    pub fn new() -> RequestQueue {
+        RequestQueue {
+            state: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
+            cvar: Condvar::new(),
+        }
+    }
+
+    /// Enqueue; hands the job back if the queue is closed (shutdown).
+    pub fn push(&self, job: RowJob) -> std::result::Result<(), RowJob> {
+        let mut st = self.state.lock().unwrap();
+        if st.closed {
+            return Err(job);
+        }
+        st.jobs.push_back(job);
+        drop(st);
+        self.cvar.notify_all();
+        Ok(())
+    }
+
+    pub fn len(&self) -> usize {
+        self.state.lock().unwrap().jobs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Blocking pop of the front job (any key), bounded by `timeout`.
+    pub fn pop_timeout(&self, timeout: Duration) -> Option<RowJob> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(job) = st.jobs.pop_front() {
+                return Some(job);
+            }
+            if st.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self.cvar.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Non-blocking: remove the first job whose sampling key matches.
+    pub fn try_pop_matching(&self, key: &SampleKey) -> Option<RowJob> {
+        let mut st = self.state.lock().unwrap();
+        let pos = st.jobs.iter().position(|j| j.batch_key() == *key)?;
+        st.jobs.remove(pos)
+    }
+
+    /// Key-matching pop that waits until `deadline` for a match (the
+    /// admission window).
+    pub fn pop_matching_until(&self, key: &SampleKey, deadline: Instant) -> Option<RowJob> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(pos) = st.jobs.iter().position(|j| j.batch_key() == *key) {
+                return st.jobs.remove(pos);
+            }
+            if st.closed {
+                return None;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (guard, _) = self.cvar.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Remove everything (quarantine drain / shutdown).
+    pub fn drain(&self) -> Vec<RowJob> {
+        let mut st = self.state.lock().unwrap();
+        st.jobs.drain(..).collect()
+    }
+
+    /// Close the queue and hand back what was still waiting.
+    pub fn close(&self) -> Vec<RowJob> {
+        let mut st = self.state.lock().unwrap();
+        st.closed = true;
+        let left = st.jobs.drain(..).collect();
+        drop(st);
+        self.cvar.notify_all();
+        left
+    }
+}
+
+// ---------------------------------------------------------------------------
+// routing
+
+/// Least-loaded routing over ready replicas.  When every replica is
+/// quarantined the job still lands somewhere: the replica whose health
+/// probe is due soonest (requests are never dropped by the router).
+pub fn route_job(
+    replicas: &[Arc<ReplicaState>],
+    job: RowJob,
+    exclude: Option<usize>,
+    metrics: &ServiceMetrics,
+) {
+    let now = Instant::now();
+    let pick = replicas
+        .iter()
+        .filter(|r| Some(r.id) != exclude && r.ready())
+        .min_by_key(|r| (r.load(), r.id))
+        .or_else(|| {
+            // only the excluded replica is healthy — better it than none
+            replicas.iter().filter(|r| r.ready()).min_by_key(|r| (r.load(), r.id))
+        })
+        .or_else(|| {
+            replicas.iter().min_by_key(|r| (r.probe_eta_ms(now), r.load(), r.id))
+        });
+    match pick {
+        Some(r) => {
+            if let Err(job) = r.queue.push(job) {
+                fail_now(job, "rollout service shut down", metrics);
+            }
+        }
+        None => fail_now(job, "rollout service has no replicas", metrics),
+    }
+}
+
+/// Complete a job with a terminal error.
+fn fail_now(job: RowJob, why: &str, metrics: &ServiceMetrics) {
+    metrics.failed.fetch_add(1, Ordering::SeqCst);
+    job.completer.complete(Err(anyhow!("{why}")));
+}
+
+/// Complete a job whose deadline passed while it was queued.
+pub(super) fn expire_job(job: RowJob, metrics: &ServiceMetrics) {
+    metrics.expired.fetch_add(1, Ordering::SeqCst);
+    let waited = job.enqueued.elapsed();
+    job.completer
+        .complete(Err(anyhow!("request deadline exceeded after {waited:?} in queue")));
+}
+
+// ---------------------------------------------------------------------------
+// the worker
+
+pub struct WorkerSetup {
+    pub replica: Arc<ReplicaState>,
+    /// All replicas (for retry re-routing and quarantine drains).
+    pub peers: Vec<Arc<ReplicaState>>,
+    pub cfg: ServiceConfig,
+    pub metrics: Arc<ServiceMetrics>,
+    pub shutdown: Arc<AtomicBool>,
+}
+
+/// Session-scoped [`ServeCtl`]: claims refills from the replica's queue,
+/// completes finished rows, and collects failures for the post-session
+/// retry pass.
+struct WorkerCtl<'a> {
+    replica: &'a ReplicaState,
+    key: SampleKey,
+    metrics: &'a ServiceMetrics,
+    /// Refills left before the session must end.  Bounds session
+    /// lifetime so a steady stream of same-key traffic cannot starve a
+    /// queued request with a different sampling key (which can only be
+    /// popped — and deadline-checked — between sessions).
+    refill_budget: usize,
+    /// Concurrent-row cap (`service.max_batch`): idle-slot filling must
+    /// not grow a session past the configured occupancy.
+    max_inflight: usize,
+    failed: Vec<(RowJob, anyhow::Error)>,
+}
+
+impl ServeCtl for WorkerCtl<'_> {
+    fn refill(&mut self) -> Option<RowJob> {
+        loop {
+            if self.refill_budget == 0
+                || self.replica.inflight.load(Ordering::SeqCst) >= self.max_inflight
+            {
+                return None;
+            }
+            let job = self.replica.queue.try_pop_matching(&self.key)?;
+            let now = Instant::now();
+            if job.expired(now) {
+                expire_job(job, self.metrics);
+                continue;
+            }
+            self.metrics.note_queue_wait(now - job.enqueued);
+            self.metrics.rows.fetch_add(1, Ordering::SeqCst);
+            self.metrics.refills.fetch_add(1, Ordering::SeqCst);
+            self.replica.inflight.fetch_add(1, Ordering::SeqCst);
+            self.refill_budget -= 1;
+            return Some(job);
+        }
+    }
+
+    fn done(&mut self, job: RowJob, out: GenOutput) {
+        self.replica.inflight.fetch_sub(1, Ordering::SeqCst);
+        self.replica.rows_served.fetch_add(1, Ordering::SeqCst);
+        self.replica.breaker.lock().unwrap().record_success();
+        self.metrics.completed.fetch_add(1, Ordering::SeqCst);
+        job.completer.complete(Ok(out));
+    }
+
+    fn fail(&mut self, job: RowJob, err: anyhow::Error) -> bool {
+        self.replica.inflight.fetch_sub(1, Ordering::SeqCst);
+        self.replica.failures.fetch_add(1, Ordering::SeqCst);
+        let mut breaker = self.replica.breaker.lock().unwrap();
+        if breaker.record_failure(Instant::now()) {
+            self.replica.quarantines.fetch_add(1, Ordering::SeqCst);
+            crate::log_warn!(
+                "service",
+                "replica {} quarantined after consecutive failures: {err:#}",
+                self.replica.id
+            );
+        }
+        let open = breaker.is_open();
+        drop(breaker);
+        self.failed.push((job, err));
+        !open
+    }
+}
+
+/// The per-replica serving loop.  Runs until shutdown with an empty
+/// queue; a quarantined replica parks here until its probe heals it.
+pub fn run_worker(setup: WorkerSetup) {
+    let WorkerSetup { replica, peers, cfg, metrics, shutdown } = setup;
+    const PARK: Duration = Duration::from_millis(20);
+    loop {
+        // -- circuit breaker gate ------------------------------------
+        let probe_wait = {
+            let breaker = replica.breaker.lock().unwrap();
+            breaker.time_to_probe(Instant::now())
+        };
+        if let Some(wait) = probe_wait {
+            if shutdown.load(Ordering::SeqCst) {
+                for job in replica.queue.drain() {
+                    fail_now(job, "rollout service shut down", &metrics);
+                }
+                break;
+            }
+            // quarantined replicas still honor deadlines and hand their
+            // queued traffic to healthy peers
+            sweep_quarantined_queue(&replica, &peers, &metrics);
+            if wait > Duration::ZERO {
+                std::thread::sleep(wait.min(PARK));
+                continue;
+            }
+            metrics.probes.fetch_add(1, Ordering::SeqCst);
+            match replica.engine.probe() {
+                Ok(()) => {
+                    replica.breaker.lock().unwrap().close();
+                    crate::log_info!("service", "replica {} recovered (probe ok)", replica.id);
+                }
+                Err(e) => {
+                    replica.breaker.lock().unwrap().reopen(Instant::now());
+                    crate::log_debug!("service", "replica {} probe failed: {e:#}", replica.id);
+                }
+            }
+            continue;
+        }
+
+        // -- admission: first request opens the batching window ------
+        let Some(first) = replica.queue.pop_timeout(PARK) else {
+            if shutdown.load(Ordering::SeqCst) && replica.queue.is_empty() {
+                break;
+            }
+            continue;
+        };
+        let now = Instant::now();
+        if first.expired(now) {
+            expire_job(first, &metrics);
+            continue;
+        }
+        metrics.note_queue_wait(now - first.enqueued);
+        let key = first.batch_key();
+        let native = replica.engine.max_batch();
+        let max_batch = if cfg.max_batch > 0 { cfg.max_batch.min(native) } else { native };
+        let mut batch = vec![first];
+        let admit_deadline = now + cfg.admission_window;
+        while batch.len() < max_batch {
+            match replica.queue.pop_matching_until(&key, admit_deadline) {
+                Some(job) if job.expired(Instant::now()) => expire_job(job, &metrics),
+                Some(job) => {
+                    metrics.note_queue_wait(job.enqueued.elapsed());
+                    batch.push(job);
+                }
+                None => break,
+            }
+        }
+
+        // -- one shared session --------------------------------------
+        let claimed = batch.len();
+        replica.inflight.fetch_add(claimed, Ordering::SeqCst);
+        metrics.sessions.fetch_add(1, Ordering::SeqCst);
+        metrics.rows.fetch_add(claimed as u64, Ordering::SeqCst);
+        let mut ctl = WorkerCtl {
+            replica: &replica,
+            key,
+            metrics: &metrics,
+            refill_budget: 16 * max_batch.max(1),
+            max_inflight: max_batch.max(1),
+            failed: vec![],
+        };
+        let serve_result = replica.engine.serve(&mut batch, &mut ctl);
+        let mut failed = std::mem::take(&mut ctl.failed);
+
+        // claimed jobs the backend handed back are never dropped: an
+        // engine-level Err burns an attempt (the session they were in
+        // failed); an early Ok-abort (breaker opened on other rows'
+        // failures) re-routes them without costing an attempt
+        let mut stranded: Vec<RowJob> = vec![];
+        match &serve_result {
+            Ok(()) => {
+                for job in batch.drain(..) {
+                    replica.inflight.fetch_sub(1, Ordering::SeqCst);
+                    stranded.push(job);
+                }
+            }
+            Err(e) => {
+                replica.failures.fetch_add(1, Ordering::SeqCst);
+                let mut breaker = replica.breaker.lock().unwrap();
+                if breaker.record_failure(Instant::now()) {
+                    replica.quarantines.fetch_add(1, Ordering::SeqCst);
+                    crate::log_warn!("service", "replica {} quarantined: {e:#}", replica.id);
+                }
+                drop(breaker);
+                for job in batch.drain(..) {
+                    replica.inflight.fetch_sub(1, Ordering::SeqCst);
+                    failed.push((job, anyhow!("engine failure: {e:#}")));
+                }
+            }
+        }
+
+        // -- bounded retry with backoff ------------------------------
+        // Deliberate pacing: the backoff parks THIS worker, so a
+        // replica that just produced failures cools down briefly before
+        // admitting its next session, while the retried jobs land on
+        // peers (self only as a fallback).  Healthy traffic queued here
+        // waits at most one backoff (default 10ms).
+        if !failed.is_empty() {
+            std::thread::sleep(cfg.retry_backoff);
+        }
+        for (mut job, err) in failed {
+            job.attempts += 1;
+            if job.attempts >= cfg.max_attempts {
+                metrics.failed.fetch_add(1, Ordering::SeqCst);
+                job.completer.complete(Err(err.context(format!(
+                    "request failed after {} attempts",
+                    job.attempts
+                ))));
+            } else {
+                metrics.retried.fetch_add(1, Ordering::SeqCst);
+                // a fresh enqueue: queue-wait telemetry measures time
+                // since the job last entered a queue, not since birth
+                job.enqueued = Instant::now();
+                route_job(&peers, job, Some(replica.id), &metrics);
+            }
+        }
+        for mut job in stranded {
+            metrics.rerouted.fetch_add(1, Ordering::SeqCst);
+            job.enqueued = Instant::now();
+            route_job(&peers, job, Some(replica.id), &metrics);
+        }
+    }
+}
+
+/// While a replica is quarantined its worker parks in the breaker gate,
+/// so its queue must be swept from there: overdue jobs expire on time,
+/// the rest migrate to healthy peers — or stay queued when no peer is
+/// ready (the all-quarantined fallback keeps them until a probe heals
+/// someone or their deadline fires).
+fn sweep_quarantined_queue(
+    replica: &Arc<ReplicaState>,
+    peers: &[Arc<ReplicaState>],
+    metrics: &ServiceMetrics,
+) {
+    if replica.queue.is_empty() {
+        return;
+    }
+    let peer_ready = peers.iter().any(|p| p.id != replica.id && p.ready());
+    let now = Instant::now();
+    for job in replica.queue.drain() {
+        if job.expired(now) {
+            expire_job(job, metrics);
+        } else if peer_ready {
+            metrics.rerouted.fetch_add(1, Ordering::SeqCst);
+            route_job(peers, job, Some(replica.id), metrics);
+        } else if let Err(job) = replica.queue.push(job) {
+            fail_now(job, "rollout service shut down", metrics);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::Promise;
+
+    fn job(temp: f32, ttl: Duration) -> (RowJob, Promise<Result<GenOutput>>) {
+        let (completer, promise) = Promise::pair();
+        let now = Instant::now();
+        let j = RowJob {
+            prompt: vec![1, 2],
+            args: SamplingArgs { temperature: temp, ..Default::default() },
+            enqueued: now,
+            deadline: now + ttl,
+            attempts: 0,
+            completer,
+        };
+        (j, promise)
+    }
+
+    #[test]
+    fn queue_pops_fifo_and_matches_keys() {
+        let q = RequestQueue::new();
+        let (a, _pa) = job(1.0, Duration::from_secs(5));
+        let (b, _pb) = job(0.5, Duration::from_secs(5));
+        let (c, _pc) = job(1.0, Duration::from_secs(5));
+        let key_hot = a.batch_key();
+        q.push(a).map_err(|_| ()).unwrap();
+        q.push(b).map_err(|_| ()).unwrap();
+        q.push(c).map_err(|_| ()).unwrap();
+        assert_eq!(q.len(), 3);
+        // matching pop skips the non-matching middle job
+        let first = q.try_pop_matching(&key_hot).unwrap();
+        assert_eq!(first.batch_key(), key_hot);
+        let second = q.try_pop_matching(&key_hot).unwrap();
+        assert_eq!(second.batch_key(), key_hot);
+        assert!(q.try_pop_matching(&key_hot).is_none());
+        assert_eq!(q.len(), 1); // the 0.5-temperature job remains
+    }
+
+    #[test]
+    fn pop_matching_waits_for_a_late_match() {
+        let q = Arc::new(RequestQueue::new());
+        let (probe, _p) = job(1.0, Duration::from_secs(5));
+        let key = probe.batch_key();
+        drop(probe);
+        let q2 = Arc::clone(&q);
+        let h = std::thread::spawn(move || {
+            q2.pop_matching_until(&key, Instant::now() + Duration::from_millis(500))
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        let (late, _pl) = job(1.0, Duration::from_secs(5));
+        q.push(late).map_err(|_| ()).unwrap();
+        assert!(h.join().unwrap().is_some());
+    }
+
+    #[test]
+    fn close_hands_back_waiters_and_rejects_pushes() {
+        let q = RequestQueue::new();
+        let (a, _pa) = job(1.0, Duration::from_secs(5));
+        q.push(a).map_err(|_| ()).unwrap();
+        let left = q.close();
+        assert_eq!(left.len(), 1);
+        let (b, pb) = job(1.0, Duration::from_secs(5));
+        assert!(q.push(b).is_err());
+        drop(pb);
+        assert!(q.pop_timeout(Duration::from_millis(5)).is_none());
+    }
+
+    #[test]
+    fn expired_jobs_complete_with_deadline_error() {
+        let metrics = ServiceMetrics::new();
+        let (j, p) = job(1.0, Duration::ZERO);
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(j.expired(Instant::now()));
+        expire_job(j, &metrics);
+        assert_eq!(metrics.expired.load(Ordering::SeqCst), 1);
+        let err = p.wait().unwrap().unwrap_err().to_string();
+        assert!(err.contains("deadline exceeded"), "{err}");
+    }
+}

@@ -1,0 +1,83 @@
+//! The rollout service (paper §2.2): the in-process model-serving tier
+//! between workflow runners and the generation engine.  Runners no
+//! longer hold an engine — they hold a [`ServiceHandle`] and call it
+//! like clients of a vLLM deployment, which buys three properties the
+//! direct-handle wiring could not express:
+//!
+//! * **Microbatching** ([`batcher`]): concurrent `chat` requests are
+//!   coalesced under an admission window into shared engine sessions,
+//!   and a finished row's slot is refilled from the queue mid-session
+//!   (continuous batching) instead of waiting for the whole batch.
+//! * **Replica pool** ([`replica`], [`service`]): N engines behind
+//!   least-loaded routing with per-replica weight-version tracking, so
+//!   weight publishes roll across replicas without stopping traffic.
+//! * **Robustness** : per-request deadlines, bounded retry with backoff,
+//!   and a circuit breaker that quarantines a replica after K
+//!   consecutive failures — quarantined replicas drain their queued
+//!   traffic to healthy peers and are probed back to health.
+//!
+//! [`telemetry`] exposes queue wait, batch occupancy, in-flight depth
+//! and per-replica throughput, flowing into the coordinator's
+//! `Monitor`/`RunRecorder` (DESIGN.md §6).
+
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+
+pub mod batcher;
+pub mod replica;
+pub mod service;
+pub mod telemetry;
+
+pub use batcher::{RequestQueue, RowJob, SampleKey};
+pub use replica::{Breaker, EngineReplica, ModelReplica, ReplicaEngine, ReplicaState, ServeCtl};
+pub use service::{RolloutService, ServiceHandle};
+pub use telemetry::{ReplicaSnapshot, ServiceMetrics, ServiceSnapshot};
+
+/// Service tuning knobs (the typed `[service]` config section parses
+/// into this; see `coordinator::config::ServiceSection`).
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// Max rows per shared session; 0 = the backend's native batch size.
+    pub max_batch: usize,
+    /// How long the first request of a batch waits for co-travellers.
+    pub admission_window: Duration,
+    /// Tokens sampled between continuous-batching refill checks.
+    pub refill_chunk: usize,
+    /// Per-request deadline: queued requests past it complete with an
+    /// error instead of occupying a slot.
+    pub request_timeout: Duration,
+    /// Attempts per request across replicas (1 = no retry).
+    pub max_attempts: usize,
+    /// Backoff before a failed request is re-routed.
+    pub retry_backoff: Duration,
+    /// Consecutive failures that quarantine a replica.
+    pub breaker_failures: u32,
+    /// Quarantine cooldown before a health probe.
+    pub quarantine: Duration,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            max_batch: 0,
+            admission_window: Duration::from_millis(2),
+            refill_chunk: 4,
+            request_timeout: Duration::from_secs(120),
+            max_attempts: 3,
+            retry_backoff: Duration::from_millis(10),
+            breaker_failures: 3,
+            quarantine: Duration::from_millis(500),
+        }
+    }
+}
+
+impl ServiceConfig {
+    pub fn validate(&self) -> Result<()> {
+        ensure!(self.max_attempts >= 1, "service.max_attempts must be >= 1");
+        ensure!(self.refill_chunk >= 1, "service.refill_chunk must be >= 1");
+        ensure!(self.breaker_failures >= 1, "service.breaker_failures must be >= 1");
+        ensure!(self.request_timeout > Duration::ZERO, "service.timeout_s must be > 0");
+        Ok(())
+    }
+}

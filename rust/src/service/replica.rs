@@ -1,0 +1,533 @@
+//! Replicas: the engines behind the rollout service, each wrapped with a
+//! circuit breaker, load accounting, and its own request queue.
+//!
+//! A [`ReplicaEngine`] serves one *shared session* at a time: it claims
+//! the initial rows, keeps pulling more through [`ServeCtl::refill`]
+//! (continuous batching), and hands every claimed row back through
+//! `done`/`fail`.  Two implementations:
+//!
+//! * [`EngineReplica`] — the real path over `GenerationEngine`: chunked
+//!   sampling with mid-session slot restart through the decode path.
+//! * [`ModelReplica`] — any `RolloutEndpoint` (notably `MockModel`), the
+//!   stand-in for an external engine; used by tests and benches.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::explorer::generation::{GenOutput, GenerationEngine, RolloutEndpoint, SamplingArgs};
+use crate::model::WeightSync;
+use crate::tokenizer::BOS;
+
+use super::batcher::{RequestQueue, RowJob};
+use super::telemetry::ReplicaSnapshot;
+
+// ---------------------------------------------------------------------------
+// circuit breaker
+
+/// Per-replica circuit breaker: `threshold` consecutive failures open it
+/// for `quarantine`; a due probe either closes it or re-opens it.
+#[derive(Debug)]
+pub struct Breaker {
+    threshold: u32,
+    quarantine: Duration,
+    consecutive: u32,
+    open_until: Option<Instant>,
+}
+
+impl Breaker {
+    pub fn new(threshold: u32, quarantine: Duration) -> Breaker {
+        Breaker { threshold: threshold.max(1), quarantine, consecutive: 0, open_until: None }
+    }
+
+    pub fn is_open(&self) -> bool {
+        self.open_until.is_some()
+    }
+
+    /// While open: time left before the next health probe (zero = due).
+    pub fn time_to_probe(&self, now: Instant) -> Option<Duration> {
+        self.open_until.map(|until| until.saturating_duration_since(now))
+    }
+
+    /// An in-flight row succeeded: reset the failure streak.  Does NOT
+    /// close an open breaker — only a health probe ([`close`](Self::close))
+    /// ends a quarantine, so intermittent failures can't flap the
+    /// replica back into rotation.
+    pub fn record_success(&mut self) {
+        self.consecutive = 0;
+    }
+
+    /// A health probe succeeded: close the breaker.
+    pub fn close(&mut self) {
+        self.consecutive = 0;
+        self.open_until = None;
+    }
+
+    /// Count one failure; returns true when this failure newly opened
+    /// the breaker.
+    pub fn record_failure(&mut self, now: Instant) -> bool {
+        self.consecutive += 1;
+        if self.open_until.is_none() && self.consecutive >= self.threshold {
+            self.open_until = Some(now + self.quarantine);
+            return true;
+        }
+        false
+    }
+
+    /// A probe failed: stay quarantined for another cooldown.
+    pub fn reopen(&mut self, now: Instant) {
+        self.open_until = Some(now + self.quarantine);
+    }
+
+    /// Quarantine for an explicit duration — the poisoned-worker path
+    /// uses this to park a replica whose thread died.
+    pub fn quarantine_for(&mut self, now: Instant, cooldown: Duration) {
+        self.open_until = Some(now + cooldown);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the serving contract
+
+/// Callbacks a [`ReplicaEngine`] uses while serving one shared session.
+pub trait ServeCtl {
+    /// Pull another queued request compatible with this session, if any
+    /// (the continuous-batching refill source).
+    fn refill(&mut self) -> Option<RowJob>;
+    /// Deliver a finished row.
+    fn done(&mut self, job: RowJob, out: GenOutput);
+    /// Report a per-row failure.  Returns false when the session should
+    /// abort (circuit breaker tripped): stop claiming work and return.
+    fn fail(&mut self, job: RowJob, err: anyhow::Error) -> bool;
+}
+
+/// One engine behind the service.
+pub trait ReplicaEngine: Send + Sync {
+    /// Max rows a shared session can hold.
+    fn max_batch(&self) -> usize;
+    fn weight_version(&self) -> u64;
+    fn sync_weights(&self, sync: &dyn WeightSync) -> Result<bool>;
+    fn set_weights(&self, weights: &[Vec<f32>], version: u64) -> Result<()>;
+    /// Serve one shared session: the initial `rows` plus whatever
+    /// [`ServeCtl::refill`] yields mid-session.  Every claimed row is
+    /// handed back through `ctl`; on an engine-level error un-served
+    /// jobs are put back into `rows` for the caller to retry.
+    fn serve(&self, rows: &mut Vec<RowJob>, ctl: &mut dyn ServeCtl) -> Result<()>;
+    /// Cheap health check used to close the circuit breaker.
+    fn probe(&self) -> Result<()>;
+}
+
+// ---------------------------------------------------------------------------
+// real engine replica (continuous batching over KV-cache sessions)
+
+/// Continuous batching over one `GenerationEngine`.
+///
+/// Weight-consistency trade-off: sampling releases the replica's
+/// ParamStore read lock between `refill_chunk`-token chunks, so a
+/// rolling weight sync landing mid-session can switch a row's policy
+/// version between chunks.  Lockstep policies are unaffected (explorers
+/// are blocked in admission while the trainer publishes); free-running
+/// policies already tolerate intra-batch staleness, and the service
+/// reports the conservative *minimum* replica version per batch.  Raise
+/// `service.refill_chunk` toward `max_new_tokens` to approach the
+/// direct-handle behavior (one lock span per rollout) at the cost of
+/// coarser slot refill.
+pub struct EngineReplica {
+    engine: Arc<GenerationEngine>,
+    /// Tokens sampled between refill checks.
+    refill_chunk: usize,
+}
+
+impl EngineReplica {
+    pub fn new(engine: Arc<GenerationEngine>, refill_chunk: usize) -> EngineReplica {
+        EngineReplica { engine, refill_chunk: refill_chunk.max(1) }
+    }
+
+    /// Deliver row `r`'s output, then refill the freed slot from the
+    /// queue (continuous batching).
+    fn retire_row(
+        &self,
+        session: &mut crate::explorer::Session,
+        slots: &mut [Option<RowJob>],
+        plen: &mut [usize],
+        r: usize,
+        finished: bool,
+        cache: usize,
+        aborted: &mut bool,
+        ctl: &mut dyn ServeCtl,
+    ) {
+        let out = session.output(r, plen[r], finished);
+        let job = slots[r].take().expect("retire_row on empty slot");
+        ctl.done(job, out);
+        self.fill_slot(session, slots, plen, r, cache, aborted, ctl);
+    }
+
+    /// Claim a queued request into the empty slot `r` (used both when a
+    /// row retires and for idle padding rows, so bursty arrivals after
+    /// session start don't wait for a retirement).  Sets `aborted` when
+    /// a restart failure trips the breaker; no further fills happen
+    /// after that, but rows already in flight keep serving.
+    fn fill_slot(
+        &self,
+        session: &mut crate::explorer::Session,
+        slots: &mut [Option<RowJob>],
+        plen: &mut [usize],
+        r: usize,
+        cache: usize,
+        aborted: &mut bool,
+        ctl: &mut dyn ServeCtl,
+    ) {
+        if *aborted {
+            return;
+        }
+        if let Some(next) = ctl.refill() {
+            let max = cache.saturating_sub(2);
+            let p: Vec<i32> = if next.prompt.len() > max {
+                next.prompt[..max].to_vec()
+            } else {
+                next.prompt.clone()
+            };
+            let seed = next.args.seed;
+            match self.engine.restart_row(session, r, &p, seed) {
+                Ok(()) => {
+                    plen[r] = p.len();
+                    slots[r] = Some(next);
+                }
+                Err(e) => {
+                    if !ctl.fail(next, e) {
+                        *aborted = true;
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl ReplicaEngine for EngineReplica {
+    fn max_batch(&self) -> usize {
+        self.engine.engine().gen_shape().0
+    }
+
+    fn weight_version(&self) -> u64 {
+        self.engine.params_version()
+    }
+
+    fn sync_weights(&self, sync: &dyn WeightSync) -> Result<bool> {
+        self.engine.try_sync(sync)
+    }
+
+    fn set_weights(&self, weights: &[Vec<f32>], version: u64) -> Result<()> {
+        self.engine.set_weights(weights, version)
+    }
+
+    fn serve(&self, rows: &mut Vec<RowJob>, ctl: &mut dyn ServeCtl) -> Result<()> {
+        let (b, tp, cache) = self.engine.engine().gen_shape();
+        let count = rows.len().min(b);
+        ensure!(count > 0, "empty service session");
+        let clamp = |p: &[i32]| -> Vec<i32> {
+            let max = cache.saturating_sub(2);
+            if p.len() > max {
+                p[..max].to_vec()
+            } else {
+                p.to_vec()
+            }
+        };
+        // prompts longer than the prefill bucket stream their tail
+        // through the decode path, exactly like `generate()`
+        let clamped: Vec<Vec<i32>> = rows.iter().take(count).map(|j| clamp(&j.prompt)).collect();
+        let heads: Vec<Vec<i32>> = clamped.iter().map(|p| p[..p.len().min(tp)].to_vec()).collect();
+        let base_seed = rows[0].args.seed;
+        let mut session = self.engine.start_session(&heads, base_seed)?;
+        let nrows = session.rows();
+        let tails: Vec<Vec<i32>> = (0..nrows)
+            .map(|r| {
+                if r < clamped.len() && clamped[r].len() > tp {
+                    clamped[r][tp..].to_vec()
+                } else {
+                    Vec::new()
+                }
+            })
+            .collect();
+        if tails.iter().any(|t| !t.is_empty()) {
+            self.engine.feed(&mut session, &tails)?;
+        }
+        // session established: claim the jobs (every claimed job must be
+        // handed back through ctl or returned via `rows` on error)
+        let mut slots: Vec<Option<RowJob>> = rows.drain(..count).map(Some).collect();
+        slots.resize_with(nrows, || None);
+        let mut plen = vec![0usize; nrows];
+        let template = slots[0].as_ref().map(|j| j.args.clone()).unwrap_or_default();
+        for (r, slot) in slots.iter().enumerate() {
+            if let Some(job) = slot {
+                plen[r] = clamped[r].len();
+                session.seed_row(r, job.args.seed);
+            }
+        }
+        let mut aborted = false;
+        loop {
+            // fill idle padding slots from the queue first: requests
+            // arriving after session start join the running session
+            // instead of waiting for a retirement (ctl enforces the
+            // configured occupancy cap)
+            for r in 0..nrows {
+                if slots[r].is_none() {
+                    self.fill_slot(&mut session, &mut slots, &mut plen, r, cache, &mut aborted, ctl);
+                }
+            }
+            // rows still wanting tokens, and the chunk that overshoots none
+            let mut live = vec![false; nrows];
+            let mut chunk = self.refill_chunk;
+            for (r, slot) in slots.iter().enumerate() {
+                if let Some(job) = slot {
+                    let generated = session.tokens[r].len().saturating_sub(plen[r]);
+                    let remaining = job.args.max_new_tokens.saturating_sub(generated);
+                    if remaining > 0 && session.remaining_budget(r) > 0 {
+                        live[r] = true;
+                        chunk = chunk.min(remaining);
+                    }
+                }
+            }
+            // retire occupied slots that want no more tokens (zero
+            // token budget, exhausted cache): every claimed job is
+            // handed back through ctl, never dropped
+            let mut retired = false;
+            for r in 0..nrows {
+                if slots[r].is_some() && !live[r] {
+                    self.retire_row(&mut session, &mut slots, &mut plen, r, false, cache, &mut aborted, ctl);
+                    retired = true;
+                }
+            }
+            if retired {
+                continue; // freshly refilled slots re-enter the scan
+            }
+            if !live.contains(&true) {
+                break;
+            }
+            let step_args = SamplingArgs { max_new_tokens: chunk, ..template.clone() };
+            let finished = match self.engine.sample(&mut session, &step_args, &live) {
+                Ok(f) => f,
+                Err(e) => {
+                    // engine-level failure: hand in-flight jobs back for retry
+                    rows.extend(slots.iter_mut().filter_map(Option::take));
+                    return Err(e);
+                }
+            };
+            for r in 0..nrows {
+                if !live[r] {
+                    continue;
+                }
+                let generated = session.tokens[r].len().saturating_sub(plen[r]);
+                let row_done = {
+                    let job = slots[r].as_ref().unwrap();
+                    finished[r]
+                        || generated >= job.args.max_new_tokens
+                        || session.remaining_budget(r) == 0
+                };
+                if row_done {
+                    // continuous batching: deliver + refill mid-session
+                    self.retire_row(
+                        &mut session,
+                        &mut slots,
+                        &mut plen,
+                        r,
+                        finished[r],
+                        cache,
+                        &mut aborted,
+                        ctl,
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn probe(&self) -> Result<()> {
+        let args = SamplingArgs { max_new_tokens: 1, ..SamplingArgs::default() };
+        self.engine.generate(&[vec![BOS]], &args).map(|_| ())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// endpoint-backed replica (mock / external engine stand-in)
+
+pub struct ModelReplica {
+    model: Arc<dyn RolloutEndpoint>,
+    max_batch: usize,
+}
+
+impl ModelReplica {
+    pub fn new(model: Arc<dyn RolloutEndpoint>, max_batch: usize) -> ModelReplica {
+        ModelReplica { model, max_batch: max_batch.max(1) }
+    }
+}
+
+impl ReplicaEngine for ModelReplica {
+    fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    fn weight_version(&self) -> u64 {
+        self.model.weight_version()
+    }
+
+    fn sync_weights(&self, sync: &dyn WeightSync) -> Result<bool> {
+        self.model.sync_weights(sync)
+    }
+
+    fn set_weights(&self, weights: &[Vec<f32>], version: u64) -> Result<()> {
+        self.model.set_weights(weights, version)
+    }
+
+    fn serve(&self, rows: &mut Vec<RowJob>, ctl: &mut dyn ServeCtl) -> Result<()> {
+        loop {
+            let job = if rows.is_empty() {
+                match ctl.refill() {
+                    Some(j) => j,
+                    None => break,
+                }
+            } else {
+                rows.remove(0)
+            };
+            match self.model.chat(&job.prompt, 1, &job.args) {
+                Ok(mut outs) if !outs.is_empty() => ctl.done(job, outs.remove(0)),
+                Ok(_) => {
+                    if !ctl.fail(job, anyhow!("backend returned no output")) {
+                        break;
+                    }
+                }
+                Err(e) => {
+                    if !ctl.fail(job, e) {
+                        break;
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn probe(&self) -> Result<()> {
+        let args = SamplingArgs { max_new_tokens: 1, ..SamplingArgs::default() };
+        self.model.chat(&[BOS], 1, &args).map(|_| ())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// replica state (engine + queue + breaker + accounting)
+
+pub struct ReplicaState {
+    pub id: usize,
+    pub engine: Arc<dyn ReplicaEngine>,
+    pub queue: RequestQueue,
+    pub breaker: Mutex<Breaker>,
+    /// Rows currently inside this replica's session.
+    pub inflight: AtomicUsize,
+    pub rows_served: AtomicU64,
+    pub failures: AtomicU64,
+    pub quarantines: AtomicU64,
+}
+
+impl ReplicaState {
+    pub fn new(id: usize, engine: Arc<dyn ReplicaEngine>, breaker: Breaker) -> ReplicaState {
+        ReplicaState {
+            id,
+            engine,
+            queue: RequestQueue::new(),
+            breaker: Mutex::new(breaker),
+            inflight: AtomicUsize::new(0),
+            rows_served: AtomicU64::new(0),
+            failures: AtomicU64::new(0),
+            quarantines: AtomicU64::new(0),
+        }
+    }
+
+    /// Routing load: queued + in-session rows.
+    pub fn load(&self) -> usize {
+        self.queue.len() + self.inflight.load(Ordering::SeqCst)
+    }
+
+    /// Accepting routed traffic (breaker closed)?
+    pub fn ready(&self) -> bool {
+        !self.breaker.lock().unwrap().is_open()
+    }
+
+    /// Milliseconds until this replica's next probe (0 if ready) — the
+    /// all-quarantined routing fallback prefers the soonest recovery.
+    pub fn probe_eta_ms(&self, now: Instant) -> u64 {
+        self.breaker
+            .lock()
+            .unwrap()
+            .time_to_probe(now)
+            .map(|d| d.as_millis() as u64)
+            .unwrap_or(0)
+    }
+
+    pub fn snapshot(&self) -> ReplicaSnapshot {
+        ReplicaSnapshot {
+            id: self.id,
+            rows: self.rows_served.load(Ordering::SeqCst),
+            failures: self.failures.load(Ordering::SeqCst),
+            quarantines: self.quarantines.load(Ordering::SeqCst),
+            quarantined: !self.ready(),
+            weight_version: self.engine.weight_version(),
+            queued: self.queue.len(),
+            inflight: self.inflight.load(Ordering::SeqCst),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breaker_opens_after_threshold_and_probes_back() {
+        let mut b = Breaker::new(3, Duration::from_millis(50));
+        let t0 = Instant::now();
+        assert!(!b.record_failure(t0));
+        assert!(!b.record_failure(t0));
+        assert!(!b.is_open());
+        assert!(b.record_failure(t0), "third consecutive failure opens");
+        assert!(b.is_open());
+        // further failures while open do not re-report "newly opened"
+        assert!(!b.record_failure(t0));
+        // cooldown counts down to a due probe
+        assert!(b.time_to_probe(t0).unwrap() > Duration::ZERO);
+        assert_eq!(b.time_to_probe(t0 + Duration::from_millis(60)), Some(Duration::ZERO));
+        // an in-flight success resets the streak but does NOT close an
+        // open breaker (only a probe may, so quarantine can't flap)
+        b.record_success();
+        assert!(b.is_open());
+        // failed probe re-opens, successful probe closes
+        b.reopen(t0 + Duration::from_millis(60));
+        assert!(b.time_to_probe(t0 + Duration::from_millis(61)).unwrap() > Duration::ZERO);
+        b.close();
+        assert!(!b.is_open());
+    }
+
+    #[test]
+    fn breaker_success_resets_the_streak() {
+        let mut b = Breaker::new(2, Duration::from_millis(10));
+        let now = Instant::now();
+        assert!(!b.record_failure(now));
+        b.record_success();
+        assert!(!b.record_failure(now), "streak was reset");
+        assert!(b.record_failure(now));
+    }
+
+    #[test]
+    fn replica_state_load_and_snapshot() {
+        use crate::explorer::generation::MockModel;
+        let model: Arc<dyn RolloutEndpoint> =
+            Arc::new(MockModel::new(1, Duration::ZERO, 0.0));
+        let engine: Arc<dyn ReplicaEngine> = Arc::new(ModelReplica::new(model, 4));
+        let r = ReplicaState::new(7, engine, Breaker::new(2, Duration::from_millis(10)));
+        assert_eq!(r.load(), 0);
+        assert!(r.ready());
+        r.inflight.fetch_add(3, Ordering::SeqCst);
+        assert_eq!(r.load(), 3);
+        let snap = r.snapshot();
+        assert_eq!((snap.id, snap.inflight, snap.quarantined), (7, 3, false));
+    }
+}

@@ -1,0 +1,371 @@
+//! [`RolloutService`]: the client-facing tier.  Implements
+//! [`RolloutModel`] so workflow runners hold a [`ServiceHandle`] exactly
+//! where they used to hold an engine, and [`RolloutEndpoint`] so the
+//! scheduler's weight publishes roll across the replica pool.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure, Result};
+
+use crate::exec::Promise;
+use crate::explorer::generation::{
+    GenOutput, GenerationEngine, RolloutEndpoint, RolloutModel, SamplingArgs,
+};
+use crate::model::WeightSync;
+
+use super::batcher::{route_job, run_worker, RowJob, WorkerSetup};
+use super::replica::{Breaker, EngineReplica, ModelReplica, ReplicaEngine, ReplicaState};
+use super::telemetry::{ServiceMetrics, ServiceSnapshot};
+use super::ServiceConfig;
+
+/// What a workflow runner holds: a shared handle on the service.
+pub type ServiceHandle = Arc<RolloutService>;
+
+pub struct RolloutService {
+    cfg: ServiceConfig,
+    replicas: Vec<Arc<ReplicaState>>,
+    metrics: Arc<ServiceMetrics>,
+    shutdown: Arc<AtomicBool>,
+    workers: Mutex<Vec<JoinHandle<()>>>,
+}
+
+impl RolloutService {
+    /// Build over explicit replica engines; spawns one worker per replica.
+    pub fn new(engines: Vec<Arc<dyn ReplicaEngine>>, cfg: ServiceConfig) -> Result<RolloutService> {
+        ensure!(!engines.is_empty(), "rollout service needs at least one replica");
+        cfg.validate()?;
+        let metrics = Arc::new(ServiceMetrics::new());
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let replicas: Vec<Arc<ReplicaState>> = engines
+            .into_iter()
+            .enumerate()
+            .map(|(id, engine)| {
+                Arc::new(ReplicaState::new(
+                    id,
+                    engine,
+                    Breaker::new(cfg.breaker_failures, cfg.quarantine),
+                ))
+            })
+            .collect();
+        let mut workers = Vec::with_capacity(replicas.len());
+        for replica in &replicas {
+            let setup = WorkerSetup {
+                replica: Arc::clone(replica),
+                peers: replicas.clone(),
+                cfg: cfg.clone(),
+                metrics: Arc::clone(&metrics),
+                shutdown: Arc::clone(&shutdown),
+            };
+            let poisoned_replica = Arc::clone(replica);
+            let poisoned_metrics = Arc::clone(&metrics);
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("rollout-svc-{}", replica.id))
+                    .spawn(move || {
+                        let caught = std::panic::catch_unwind(
+                            std::panic::AssertUnwindSafe(|| run_worker(setup)),
+                        );
+                        if caught.is_err() {
+                            // a dead worker must not wedge the service:
+                            // park the replica out of rotation, reject
+                            // its queue so routed work errors instead of
+                            // hanging (in-flight completers were dropped
+                            // by the unwind -> callers see worker-lost)
+                            crate::log_warn!(
+                                "service",
+                                "replica {} worker panicked; replica poisoned",
+                                poisoned_replica.id
+                            );
+                            poisoned_replica
+                                .breaker
+                                .lock()
+                                .unwrap_or_else(|p| p.into_inner())
+                                .quarantine_for(
+                                    std::time::Instant::now(),
+                                    std::time::Duration::from_secs(365 * 86_400),
+                                );
+                            for job in poisoned_replica.queue.close() {
+                                poisoned_metrics.failed.fetch_add(1, Ordering::SeqCst);
+                                job.completer.complete(Err(anyhow!(
+                                    "replica worker died while this request was queued"
+                                )));
+                            }
+                        }
+                    })
+                    .expect("spawn service worker"),
+            );
+        }
+        Ok(RolloutService { cfg, replicas, metrics, shutdown, workers: Mutex::new(workers) })
+    }
+
+    /// A pool of generation-engine replicas (the production wiring).
+    pub fn over_engines(
+        engines: Vec<Arc<GenerationEngine>>,
+        cfg: ServiceConfig,
+    ) -> Result<RolloutService> {
+        let refill_chunk = cfg.refill_chunk;
+        let replicas = engines
+            .into_iter()
+            .map(|e| Arc::new(EngineReplica::new(e, refill_chunk)) as Arc<dyn ReplicaEngine>)
+            .collect();
+        Self::new(replicas, cfg)
+    }
+
+    /// A pool over plain endpoints (mock engines in tests and benches).
+    pub fn over_models(
+        models: Vec<Arc<dyn RolloutEndpoint>>,
+        cfg: ServiceConfig,
+    ) -> Result<RolloutService> {
+        let max_batch = if cfg.max_batch > 0 { cfg.max_batch } else { 8 };
+        let replicas = models
+            .into_iter()
+            .map(|m| Arc::new(ModelReplica::new(m, max_batch)) as Arc<dyn ReplicaEngine>)
+            .collect();
+        Self::new(replicas, cfg)
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    pub fn metrics(&self) -> &ServiceMetrics {
+        &self.metrics
+    }
+
+    /// Point-in-time telemetry (flows into `Monitor`/`ModeReport`).
+    pub fn snapshot(&self) -> ServiceSnapshot {
+        let replicas: Vec<_> = self.replicas.iter().map(|r| r.snapshot()).collect();
+        let m = &self.metrics;
+        ServiceSnapshot {
+            submitted: m.submitted.load(Ordering::SeqCst),
+            completed: m.completed.load(Ordering::SeqCst),
+            failed: m.failed.load(Ordering::SeqCst),
+            expired: m.expired.load(Ordering::SeqCst),
+            retried: m.retried.load(Ordering::SeqCst),
+            rerouted: m.rerouted.load(Ordering::SeqCst),
+            sessions: m.sessions.load(Ordering::SeqCst),
+            rows: m.rows.load(Ordering::SeqCst),
+            refills: m.refills.load(Ordering::SeqCst),
+            probes: m.probes.load(Ordering::SeqCst),
+            mean_queue_wait_s: m.mean_queue_wait_s(),
+            queued: replicas.iter().map(|r| r.queued).sum(),
+            inflight: replicas.iter().map(|r| r.inflight).sum(),
+            replicas,
+        }
+    }
+
+    /// Stop accepting work, fail queued requests, join the workers.
+    /// Idempotent; also runs on drop.
+    pub fn shutdown(&self) {
+        if self.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        for replica in &self.replicas {
+            for job in replica.queue.close() {
+                self.metrics.failed.fetch_add(1, Ordering::SeqCst);
+                job.completer.complete(Err(anyhow!("rollout service shut down")));
+            }
+        }
+        let workers = std::mem::take(&mut *self.workers.lock().unwrap());
+        for w in workers {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for RolloutService {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl RolloutModel for RolloutService {
+    /// Fan `n` completions out as independent row requests: rows are
+    /// routed least-loaded and coalesced with *other* tasks' rows into
+    /// shared sessions — this is where cross-runner batching happens.
+    fn chat(&self, prompt: &[i32], n: usize, args: &SamplingArgs) -> Result<Vec<GenOutput>> {
+        ensure!(n > 0, "chat needs n >= 1");
+        ensure!(!self.shutdown.load(Ordering::SeqCst), "rollout service shut down");
+        let now = Instant::now();
+        let deadline = now + self.cfg.request_timeout;
+        let mut promises = Vec::with_capacity(n);
+        for i in 0..n {
+            let (completer, promise) = Promise::pair();
+            let mut row_args = args.clone();
+            // every row samples an independent stream even when rows of
+            // one task land in the same session
+            row_args.seed = args.seed.wrapping_add((i as u64).wrapping_mul(0x9e3779b97f4a7c15));
+            let job = RowJob {
+                prompt: prompt.to_vec(),
+                args: row_args,
+                enqueued: now,
+                deadline,
+                attempts: 0,
+                completer,
+            };
+            self.metrics.submitted.fetch_add(1, Ordering::SeqCst);
+            route_job(&self.replicas, job, None, &self.metrics);
+            promises.push(promise);
+        }
+        let mut outs = Vec::with_capacity(n);
+        let mut first_err: Option<anyhow::Error> = None;
+        for promise in promises {
+            match promise.wait() {
+                Ok(Ok(out)) => outs.push(out),
+                Ok(Err(e)) => {
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(e) => {
+                    if first_err.is_none() {
+                        first_err = Some(anyhow!("service worker lost: {e}"));
+                    }
+                }
+            }
+        }
+        match first_err {
+            Some(e) => Err(e.context("rollout service request failed")),
+            None => Ok(outs),
+        }
+    }
+
+    /// The weakest replica version: what every routed request is
+    /// guaranteed to be served with *at least*.
+    fn weight_version(&self) -> u64 {
+        self.replicas.iter().map(|r| r.engine.weight_version()).min().unwrap_or(0)
+    }
+}
+
+impl RolloutEndpoint for RolloutService {
+    /// Rolling weight update: replicas pull one at a time while the
+    /// others keep serving.  Succeeds if any replica synced; fails only
+    /// when every replica failed.
+    fn sync_weights(&self, sync: &dyn WeightSync) -> Result<bool> {
+        // every explorer driver probes before every batch; skip the
+        // replica walk entirely when the whole pool is already current
+        if sync.latest_version() <= self.weight_version() {
+            return Ok(false);
+        }
+        let mut updated = false;
+        let mut failures = 0usize;
+        let mut last_err: Option<anyhow::Error> = None;
+        for replica in &self.replicas {
+            match replica.engine.sync_weights(sync) {
+                Ok(true) => updated = true,
+                Ok(false) => {}
+                Err(e) => {
+                    failures += 1;
+                    crate::log_warn!(
+                        "service",
+                        "replica {} weight pull failed: {e:#}",
+                        replica.id
+                    );
+                    last_err = Some(e);
+                }
+            }
+        }
+        if failures == self.replicas.len() {
+            if let Some(e) = last_err {
+                return Err(e.context("every replica failed to pull weights"));
+            }
+        }
+        Ok(updated)
+    }
+
+    fn set_weights(&self, weights: &[Vec<f32>], version: u64) -> Result<()> {
+        for replica in &self.replicas {
+            replica.engine.set_weights(weights, version)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::explorer::generation::MockModel;
+    use crate::model::MemorySync;
+    use std::time::Duration;
+
+    fn service(models: Vec<MockModel>, cfg: ServiceConfig) -> RolloutService {
+        let endpoints: Vec<Arc<dyn RolloutEndpoint>> =
+            models.into_iter().map(|m| Arc::new(m) as Arc<dyn RolloutEndpoint>).collect();
+        RolloutService::over_models(endpoints, cfg).unwrap()
+    }
+
+    #[test]
+    fn chat_roundtrips_through_a_replica() {
+        let svc = service(vec![MockModel::new(1, Duration::ZERO, 0.0)], ServiceConfig::default());
+        let outs = svc.chat(&[1, 10, 11], 3, &SamplingArgs::default()).unwrap();
+        assert_eq!(outs.len(), 3);
+        for o in &outs {
+            assert_eq!(o.prompt_len, 3);
+            assert!(o.finished);
+        }
+        let snap = svc.snapshot();
+        assert_eq!(snap.completed, 3);
+        assert_eq!(snap.submitted, 3);
+        assert!(snap.sessions >= 1);
+    }
+
+    #[test]
+    fn retry_rescues_transient_failures() {
+        let mut cfg = ServiceConfig::default();
+        cfg.max_attempts = 20;
+        cfg.retry_backoff = Duration::from_millis(1);
+        // threshold high enough that the breaker stays closed
+        cfg.breaker_failures = 1000;
+        let svc = service(vec![MockModel::new(2, Duration::ZERO, 0.5)], cfg);
+        let outs = svc.chat(&[1, 5], 4, &SamplingArgs::default()).unwrap();
+        assert_eq!(outs.len(), 4);
+        let snap = svc.snapshot();
+        assert!(snap.retried > 0, "expected retries under fail_rate=0.5: {snap:?}");
+        assert_eq!(snap.failed, 0);
+    }
+
+    #[test]
+    fn exhausted_attempts_surface_the_error() {
+        let mut cfg = ServiceConfig::default();
+        cfg.max_attempts = 2;
+        cfg.retry_backoff = Duration::from_millis(1);
+        cfg.breaker_failures = 1000;
+        cfg.quarantine = Duration::from_millis(5);
+        let svc = service(vec![MockModel::new(3, Duration::ZERO, 1.0)], cfg);
+        let err = svc.chat(&[1], 1, &SamplingArgs::default()).unwrap_err().to_string();
+        assert!(err.contains("rollout service request failed"), "{err}");
+        let snap = svc.snapshot();
+        assert_eq!(snap.failed, 1);
+        assert_eq!(snap.retried, 1); // attempt 1 retried, attempt 2 terminal
+    }
+
+    #[test]
+    fn weight_version_is_min_across_replicas_and_sync_rolls() {
+        let a = MockModel::new(4, Duration::ZERO, 0.0);
+        let b = MockModel::new(5, Duration::ZERO, 0.0);
+        b.set_version(3);
+        let svc = service(vec![a, b], ServiceConfig::default());
+        assert_eq!(svc.weight_version(), 0);
+        let sync = MemorySync::new();
+        sync.publish(5, 50, vec![vec![0.0]]).unwrap();
+        assert!(svc.sync_weights(&sync).unwrap());
+        assert_eq!(svc.weight_version(), 5);
+        let snap = svc.snapshot();
+        assert!(snap.replicas.iter().all(|r| r.weight_version == 5));
+    }
+
+    #[test]
+    fn shutdown_is_idempotent_and_rejects_new_work() {
+        let svc = service(vec![MockModel::new(6, Duration::ZERO, 0.0)], ServiceConfig::default());
+        svc.shutdown();
+        svc.shutdown();
+        assert!(svc.chat(&[1], 1, &SamplingArgs::default()).is_err());
+    }
+}

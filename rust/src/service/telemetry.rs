@@ -1,0 +1,160 @@
+//! Service telemetry: lock-free counters updated on the serving path,
+//! snapshotted into the coordinator's `Monitor` at publish boundaries
+//! and attached to the final `ModeReport`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Fleet-wide counters (per-replica counters live on `ReplicaState`).
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    /// Row requests accepted by `chat` (a `chat(n)` submits n rows).
+    pub submitted: AtomicU64,
+    /// Rows completed successfully.
+    pub completed: AtomicU64,
+    /// Rows that exhausted their retry budget.
+    pub failed: AtomicU64,
+    /// Rows dropped at pop time because their deadline had passed.
+    pub expired: AtomicU64,
+    /// Failed attempts that were re-queued for another try.
+    pub retried: AtomicU64,
+    /// Rows migrated off a quarantined replica without burning an
+    /// attempt (queued sweeps + session-abort strands).
+    pub rerouted: AtomicU64,
+    /// Shared engine sessions (the "engine calls" coalescing divides).
+    pub sessions: AtomicU64,
+    /// Rows claimed into sessions, including mid-session refills.
+    pub rows: AtomicU64,
+    /// Rows that entered a session through a continuous-batching refill.
+    pub refills: AtomicU64,
+    /// Health probes sent to quarantined replicas.
+    pub probes: AtomicU64,
+    queue_wait_ns: AtomicU64,
+    dequeued: AtomicU64,
+}
+
+impl ServiceMetrics {
+    pub fn new() -> ServiceMetrics {
+        ServiceMetrics::default()
+    }
+
+    /// Record how long a row sat queued before being claimed.
+    pub fn note_queue_wait(&self, wait: Duration) {
+        self.queue_wait_ns.fetch_add(wait.as_nanos() as u64, Ordering::Relaxed);
+        self.dequeued.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn mean_queue_wait_s(&self) -> f64 {
+        let n = self.dequeued.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.queue_wait_ns.load(Ordering::Relaxed) as f64 / 1e9 / n as f64
+    }
+}
+
+/// Point-in-time view of one replica.
+#[derive(Debug, Clone, Default)]
+pub struct ReplicaSnapshot {
+    pub id: usize,
+    /// Rows this replica completed.
+    pub rows: u64,
+    pub failures: u64,
+    /// Times the circuit breaker opened on this replica.
+    pub quarantines: u64,
+    /// Currently quarantined?
+    pub quarantined: bool,
+    pub weight_version: u64,
+    pub queued: usize,
+    pub inflight: usize,
+}
+
+/// Point-in-time view of the whole service (attached to `ModeReport`).
+#[derive(Debug, Clone, Default)]
+pub struct ServiceSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub expired: u64,
+    pub retried: u64,
+    pub rerouted: u64,
+    pub sessions: u64,
+    pub rows: u64,
+    pub refills: u64,
+    pub probes: u64,
+    pub mean_queue_wait_s: f64,
+    pub queued: usize,
+    pub inflight: usize,
+    pub replicas: Vec<ReplicaSnapshot>,
+}
+
+impl ServiceSnapshot {
+    /// Mean rows per shared engine session — the microbatcher's
+    /// coalescing factor (> 1 means requests actually shared sessions).
+    pub fn occupancy(&self) -> f64 {
+        if self.sessions == 0 {
+            0.0
+        } else {
+            self.rows as f64 / self.sessions as f64
+        }
+    }
+
+    pub fn quarantined(&self) -> usize {
+        self.replicas.iter().filter(|r| r.quarantined).count()
+    }
+
+    /// Uniform monitor field set (role "service").
+    pub fn monitor_fields(&self) -> Vec<(String, f64)> {
+        let mut fields = vec![
+            ("occupancy".to_string(), self.occupancy()),
+            ("queue_wait_s".to_string(), self.mean_queue_wait_s),
+            ("queued".to_string(), self.queued as f64),
+            ("inflight".to_string(), self.inflight as f64),
+            ("sessions".to_string(), self.sessions as f64),
+            ("completed".to_string(), self.completed as f64),
+            ("failed".to_string(), self.failed as f64),
+            ("expired".to_string(), self.expired as f64),
+            ("retried".to_string(), self.retried as f64),
+            ("quarantined".to_string(), self.quarantined() as f64),
+        ];
+        for r in &self.replicas {
+            fields.push((format!("replica{}_rows", r.id), r.rows as f64));
+            fields.push((format!("replica{}_version", r.id), r.weight_version as f64));
+        }
+        fields
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_is_rows_per_session() {
+        let mut s = ServiceSnapshot::default();
+        assert_eq!(s.occupancy(), 0.0);
+        s.sessions = 4;
+        s.rows = 10;
+        assert!((s.occupancy() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queue_wait_mean() {
+        let m = ServiceMetrics::new();
+        assert_eq!(m.mean_queue_wait_s(), 0.0);
+        m.note_queue_wait(Duration::from_millis(10));
+        m.note_queue_wait(Duration::from_millis(30));
+        assert!((m.mean_queue_wait_s() - 0.020).abs() < 1e-6);
+    }
+
+    #[test]
+    fn monitor_fields_cover_replicas() {
+        let snap = ServiceSnapshot {
+            replicas: vec![ReplicaSnapshot { id: 0, ..Default::default() }, ReplicaSnapshot { id: 1, ..Default::default() }],
+            ..Default::default()
+        };
+        let fields = snap.monitor_fields();
+        assert!(fields.iter().any(|(n, _)| n == "occupancy"));
+        assert!(fields.iter().any(|(n, _)| n == "replica1_rows"));
+    }
+}

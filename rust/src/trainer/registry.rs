@@ -4,24 +4,34 @@
 //! and the `trinity algorithms list` CLI all resolve algorithms here;
 //! nothing in `trainer/` dispatches on name strings.
 
-use std::collections::BTreeMap;
-use std::sync::{Arc, OnceLock, RwLock};
+use std::sync::{Arc, OnceLock};
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::buffer::MixFactory;
+use crate::util::Registry;
 
 use super::advantage::{GroupBaseline, IsExpertFlag, RawReward};
 use super::spec::{AlgorithmSpec, GroupingPolicy, LossSpec, OpmdFlavor, Pairing};
 
 pub struct AlgorithmRegistry {
-    specs: RwLock<BTreeMap<String, Arc<AlgorithmSpec>>>,
+    specs: Registry<Arc<AlgorithmSpec>>,
 }
 
 impl AlgorithmRegistry {
     /// An empty registry (tests); production code uses [`global`].
     pub fn new() -> AlgorithmRegistry {
-        AlgorithmRegistry { specs: RwLock::new(BTreeMap::new()) }
+        AlgorithmRegistry {
+            // algorithm names are case-sensitive identifiers (they key
+            // artifact lookup), so no case folding here
+            specs: Registry::new(
+                "algorithm",
+                "algorithms",
+                "register custom algorithms with \
+                 AlgorithmRegistry::global().register(AlgorithmSpec::new(..))",
+                false,
+            ),
+        }
     }
 
     /// A registry pre-populated with the 8 builtin algorithms.
@@ -54,36 +64,26 @@ impl AlgorithmRegistry {
     /// the previous spec (latest wins), so registration is idempotent.
     pub fn register(&self, spec: AlgorithmSpec) -> Arc<AlgorithmSpec> {
         let spec = Arc::new(spec);
-        self.specs.write().unwrap().insert(spec.name.clone(), Arc::clone(&spec));
+        self.specs.insert(spec.name.as_str(), Arc::clone(&spec));
         spec
     }
 
     pub fn get(&self, name: &str) -> Result<Arc<AlgorithmSpec>> {
-        // one guard for lookup AND the error's name list: a second
-        // read() here could deadlock behind a queued writer
-        let specs = self.specs.read().unwrap();
-        match specs.get(name) {
-            Some(spec) => Ok(Arc::clone(spec)),
-            None => Err(anyhow!(
-                "unknown algorithm '{name}' — registered algorithms: [{}]; \
-                 register custom algorithms with AlgorithmRegistry::global().register(AlgorithmSpec::new(..))",
-                specs.keys().cloned().collect::<Vec<_>>().join(", ")
-            )),
-        }
+        self.specs.lookup(name)
     }
 
     pub fn contains(&self, name: &str) -> bool {
-        self.specs.read().unwrap().contains_key(name)
+        self.specs.contains(name)
     }
 
     /// Registered names, sorted.
     pub fn names(&self) -> Vec<String> {
-        self.specs.read().unwrap().keys().cloned().collect()
+        self.specs.names()
     }
 
     /// Registered specs, sorted by name.
     pub fn specs(&self) -> Vec<Arc<AlgorithmSpec>> {
-        self.specs.read().unwrap().values().cloned().collect()
+        self.specs.values()
     }
 }
 

@@ -5,6 +5,9 @@ pub mod benchkit;
 pub mod cli;
 pub mod json;
 pub mod logging;
+pub mod registry;
 pub mod rng;
 pub mod timeseries;
 pub mod yamlite;
+
+pub use registry::Registry;

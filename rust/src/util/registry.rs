@@ -1,0 +1,122 @@
+//! Generic registry substrate: the one RwLock'd BTreeMap + catalog-error
+//! pattern that `AlgorithmRegistry`, `WeightSyncRegistry` and
+//! `SyncPolicyRegistry` used to each hand-roll.  A wrapper owns a
+//! `Registry<T>` and keeps its domain-specific API (typed `register`,
+//! `build`, `get`); the substrate owns storage, optional case folding,
+//! and the "unknown name → full catalog + how-to-register hint" error.
+
+use std::collections::BTreeMap;
+use std::sync::RwLock;
+
+use anyhow::{anyhow, Result};
+
+pub struct Registry<T: Clone> {
+    /// Singular noun for errors ("algorithm", "sync method", ...).
+    noun: &'static str,
+    /// Plural used in the catalog clause ("algorithms", "methods", ...).
+    plural: &'static str,
+    /// Trailing hint telling the user how to register a custom entry.
+    hint: &'static str,
+    /// Fold keys to trimmed lowercase (name lookup case-insensitive).
+    fold_case: bool,
+    entries: RwLock<BTreeMap<String, T>>,
+}
+
+impl<T: Clone> Registry<T> {
+    pub fn new(
+        noun: &'static str,
+        plural: &'static str,
+        hint: &'static str,
+        fold_case: bool,
+    ) -> Registry<T> {
+        Registry { noun, plural, hint, fold_case, entries: RwLock::new(BTreeMap::new()) }
+    }
+
+    fn key(&self, name: &str) -> String {
+        if self.fold_case {
+            name.trim().to_ascii_lowercase()
+        } else {
+            name.to_string()
+        }
+    }
+
+    /// Insert under `name` (latest wins, so registration is idempotent).
+    pub fn insert(&self, name: &str, value: T) {
+        self.entries.write().unwrap().insert(self.key(name), value);
+    }
+
+    /// Resolve `name`, or fail with the full catalog and the register hint.
+    pub fn lookup(&self, name: &str) -> Result<T> {
+        // one guard for lookup AND the error's name list: a second read()
+        // here could deadlock behind a queued writer
+        let entries = self.entries.read().unwrap();
+        match entries.get(&self.key(name)) {
+            Some(v) => Ok(v.clone()),
+            None => Err(anyhow!(
+                "unknown {} '{name}' — registered {}: [{}]; {}",
+                self.noun,
+                self.plural,
+                entries.keys().cloned().collect::<Vec<_>>().join(", "),
+                self.hint
+            )),
+        }
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.entries.read().unwrap().contains_key(&self.key(name))
+    }
+
+    /// Registered names, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.entries.read().unwrap().keys().cloned().collect()
+    }
+
+    /// Registered values, sorted by name.
+    pub fn values(&self) -> Vec<T> {
+        self.entries.read().unwrap().values().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg(fold: bool) -> Registry<u32> {
+        Registry::new("widget", "widgets", "register custom widgets with Widgets::register(..)", fold)
+    }
+
+    #[test]
+    fn insert_lookup_latest_wins() {
+        let r = reg(false);
+        r.insert("a", 1);
+        r.insert("b", 2);
+        r.insert("a", 3);
+        assert_eq!(r.lookup("a").unwrap(), 3);
+        assert_eq!(r.names(), vec!["a", "b"]);
+        assert_eq!(r.values(), vec![3, 2]);
+        assert!(r.contains("b") && !r.contains("c"));
+    }
+
+    #[test]
+    fn case_folding_is_opt_in() {
+        let folded = reg(true);
+        folded.insert("Alpha", 1);
+        assert_eq!(folded.lookup(" ALPHA ").unwrap(), 1);
+        assert_eq!(folded.names(), vec!["alpha"]);
+        let exact = reg(false);
+        exact.insert("Alpha", 1);
+        assert!(exact.lookup("alpha").is_err());
+        assert_eq!(exact.lookup("Alpha").unwrap(), 1);
+    }
+
+    #[test]
+    fn unknown_name_error_lists_catalog_and_hint() {
+        let r = reg(false);
+        r.insert("a", 1);
+        r.insert("b", 2);
+        let err = r.lookup("zzz").unwrap_err().to_string();
+        assert!(err.contains("unknown widget 'zzz'"), "{err}");
+        assert!(err.contains("registered widgets: [a, b]"), "{err}");
+        assert!(err.contains("register custom widgets"), "{err}");
+    }
+}

@@ -1,0 +1,238 @@
+//! Rollout-service integration: the ISSUE-4 acceptance surface.
+//!
+//! * microbatching — requests from >= 8 concurrent workflow runners
+//!   coalesce into shared engine sessions (mean occupancy > 1, fewer
+//!   engine calls than rows),
+//! * robustness — deadline expiry, retry-then-succeed, circuit-breaker
+//!   quarantine draining traffic to healthy replicas and probing back,
+//! * scheduler wiring — a service-backed `RftSession` end to end
+//!   (artifact-gated; skips without `make artifacts`).
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use trinity_rft::coordinator::{RftConfig, RftSession};
+use trinity_rft::exec::ThreadPool;
+use trinity_rft::explorer::{
+    MockModel, RolloutEndpoint, RolloutModel, RunnerConfig, SamplingArgs, Task, WorkflowRegistry,
+    WorkflowRunner,
+};
+use trinity_rft::model::{MemorySync, WeightSync};
+use trinity_rft::runtime::Manifest;
+use trinity_rft::service::{RolloutService, ServiceConfig};
+use trinity_rft::tokenizer::Tokenizer;
+use trinity_rft::util::json::Value;
+
+fn math_tasks(n: usize, repeat: usize) -> Vec<Task> {
+    (0..n)
+        .map(|i| {
+            let mut t = Task::new(
+                &format!("t{i}"),
+                "math",
+                Value::obj(vec![
+                    ("question", Value::str(format!("what is {i} + 4 ?"))),
+                    ("answer", Value::str((i + 4).to_string())),
+                ]),
+            );
+            t.repeat_times = repeat;
+            t
+        })
+        .collect()
+}
+
+fn service_over(models: Vec<MockModel>, cfg: ServiceConfig) -> Arc<RolloutService> {
+    let endpoints: Vec<Arc<dyn RolloutEndpoint>> =
+        models.into_iter().map(|m| Arc::new(m) as Arc<dyn RolloutEndpoint>).collect();
+    Arc::new(RolloutService::over_models(endpoints, cfg).unwrap())
+}
+
+#[test]
+fn microbatcher_coalesces_requests_from_concurrent_runners() {
+    // 8 runner threads x 8 tasks x 2 rollouts = 16 row requests arriving
+    // together; the admission window must fuse them into shared sessions
+    let mut cfg = ServiceConfig::default();
+    cfg.max_batch = 16;
+    cfg.admission_window = Duration::from_millis(25);
+    let svc = service_over(vec![MockModel::new(1, Duration::from_millis(5), 0.0)], cfg);
+
+    let pool = Arc::new(ThreadPool::new("svc-runners", 8));
+    let runner = WorkflowRunner::new(
+        pool,
+        RunnerConfig {
+            timeout: Duration::from_secs(10),
+            max_attempts: 1,
+            retry_delay: Duration::ZERO,
+            seed: 3,
+        },
+    );
+    let (exps, stats) = runner.run_collect(
+        math_tasks(8, 2),
+        Arc::new(WorkflowRegistry::with_builtins()),
+        Arc::clone(&svc) as Arc<dyn RolloutModel>,
+        Arc::new(Tokenizer::new()),
+        SamplingArgs::default(),
+    );
+    assert_eq!(stats.completed, 8, "{stats:?}");
+    assert_eq!(exps.len(), 16);
+
+    let snap = svc.snapshot();
+    assert_eq!(snap.completed, 16);
+    assert!(
+        snap.occupancy() > 1.0,
+        "requests never shared a session: occupancy {:.2} over {} sessions",
+        snap.occupancy(),
+        snap.sessions
+    );
+    assert!(
+        snap.sessions < 16,
+        "expected fewer engine sessions than the 16 rows, got {}",
+        snap.sessions
+    );
+    // coalescing across DIFFERENT tasks implies fewer sessions than tasks
+    assert!(snap.sessions < 8, "expected < 8 sessions for 8 tasks, got {}", snap.sessions);
+}
+
+#[test]
+fn deadline_expiry_fails_queued_requests_without_stalling_served_ones() {
+    let mut cfg = ServiceConfig::default();
+    cfg.max_batch = 1; // no coalescing: the second request must queue
+    cfg.admission_window = Duration::ZERO;
+    cfg.request_timeout = Duration::from_millis(15);
+    cfg.max_attempts = 1;
+    let svc = service_over(vec![MockModel::new(2, Duration::from_millis(60), 0.0)], cfg);
+
+    let first = {
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || svc.chat(&[1, 2], 1, &SamplingArgs::default()))
+    };
+    // let the worker claim the first request, then queue a second that
+    // can only be popped after its deadline
+    std::thread::sleep(Duration::from_millis(10));
+    let second = svc.chat(&[1, 3], 1, &SamplingArgs::default());
+
+    assert!(first.join().unwrap().is_ok(), "in-flight request must not be expired");
+    let err = second.unwrap_err();
+    let chain = format!("{err:#}"); // full context chain
+    assert!(chain.contains("deadline exceeded"), "unexpected error: {chain}");
+    let snap = svc.snapshot();
+    assert_eq!(snap.expired, 1, "{snap:?}");
+    assert_eq!(snap.completed, 1);
+}
+
+#[test]
+fn transient_failures_retry_until_success() {
+    let mut cfg = ServiceConfig::default();
+    cfg.max_attempts = 20;
+    cfg.retry_backoff = Duration::from_millis(1);
+    cfg.breaker_failures = 10_000; // keep the breaker out of this test
+    let svc = service_over(vec![MockModel::new(4, Duration::ZERO, 0.5)], cfg);
+    for i in 0..6 {
+        let outs = svc.chat(&[1, 10 + i], 2, &SamplingArgs::default()).unwrap();
+        assert_eq!(outs.len(), 2);
+    }
+    let snap = svc.snapshot();
+    assert_eq!(snap.completed, 12);
+    assert_eq!(snap.failed, 0);
+    assert!(snap.retried > 0, "fail_rate=0.5 must have triggered retries: {snap:?}");
+}
+
+#[test]
+fn quarantined_replica_drains_to_healthy_peer_and_probes_back() {
+    let broken = Arc::new(MockModel::new(5, Duration::ZERO, 1.0));
+    let healthy = Arc::new(MockModel::new(6, Duration::from_millis(1), 0.0));
+    let mut cfg = ServiceConfig::default();
+    cfg.breaker_failures = 2;
+    cfg.quarantine = Duration::from_millis(40);
+    cfg.max_attempts = 6;
+    cfg.retry_backoff = Duration::from_millis(1);
+    let endpoints: Vec<Arc<dyn RolloutEndpoint>> = vec![
+        Arc::clone(&broken) as Arc<dyn RolloutEndpoint>,
+        Arc::clone(&healthy) as Arc<dyn RolloutEndpoint>,
+    ];
+    let svc = Arc::new(RolloutService::over_models(endpoints, cfg).unwrap());
+
+    // phase 1: replica 0 fails everything -> quarantine opens, its
+    // traffic drains to replica 1, and no task-level request is lost
+    for i in 0..10 {
+        let outs = svc.chat(&[1, 20 + i], 2, &SamplingArgs::default()).unwrap();
+        assert_eq!(outs.len(), 2, "in-flight work must survive the quarantine");
+    }
+    let snap = svc.snapshot();
+    assert_eq!(snap.completed, 20);
+    assert_eq!(snap.failed, 0, "{snap:?}");
+    assert!(snap.replicas[0].quarantines >= 1, "breaker never opened: {snap:?}");
+    assert!(
+        snap.replicas[1].rows >= 18,
+        "healthy replica should have absorbed the traffic: {snap:?}"
+    );
+    assert_eq!(snap.replicas[0].rows, 0);
+
+    // phase 2: heal replica 0; the health probe must close the breaker
+    // and traffic must flow to it again
+    broken.set_fail_rate(0.0);
+    let recovered_by = Instant::now() + Duration::from_secs(5);
+    loop {
+        let snap = svc.snapshot();
+        if !snap.replicas[0].quarantined {
+            break;
+        }
+        assert!(Instant::now() < recovered_by, "replica never recovered: {snap:?}");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    for i in 0..10 {
+        svc.chat(&[1, 40 + i], 2, &SamplingArgs::default()).unwrap();
+    }
+    let snap = svc.snapshot();
+    assert!(snap.probes >= 1, "{snap:?}");
+    assert!(
+        snap.replicas[0].rows > 0,
+        "recovered replica should serve traffic again: {snap:?}"
+    );
+}
+
+#[test]
+fn rolling_weight_sync_and_min_version_accounting() {
+    let a = MockModel::new(7, Duration::ZERO, 0.0);
+    let b = MockModel::new(8, Duration::ZERO, 0.0);
+    let svc = service_over(vec![a, b], ServiceConfig::default());
+    let sync = MemorySync::new();
+    assert_eq!(svc.weight_version(), 0);
+    sync.publish(3, 30, vec![vec![1.0]]).unwrap();
+    assert!(svc.sync_weights(&sync).unwrap());
+    assert_eq!(svc.weight_version(), 3);
+    let snap = svc.snapshot();
+    assert!(snap.replicas.iter().all(|r| r.weight_version == 3), "{snap:?}");
+}
+
+// ---------------------------------------------------------------------------
+// artifact-gated: the full scheduler wiring over real engines
+
+#[test]
+fn service_backed_session_runs_end_to_end() {
+    if Manifest::load_default().is_none() {
+        return; // no artifacts in this environment
+    }
+    let mut cfg = RftConfig::default();
+    cfg.mode = "both".into();
+    cfg.model_preset = "tiny".into();
+    cfg.total_steps = 2;
+    cfg.batch_tasks = 1;
+    cfg.repeat_times = 4;
+    cfg.max_new_tokens = 6;
+    cfg.explorer_threads = 2;
+    cfg.seed = 17;
+    cfg.service.enabled = true;
+    cfg.service.replicas = 2;
+    cfg.service.admission_window_ms = 5;
+    let mut session = RftSession::build(cfg, None, None).unwrap();
+    assert!(session.service.is_some());
+    let report = session.run().unwrap();
+    assert_eq!(report.train_steps, 2);
+    assert!(report.explore_batches >= 1);
+    let snap = report.service.expect("service snapshot attached to the report");
+    assert!(snap.completed > 0, "{snap:?}");
+    assert_eq!(snap.replicas.len(), 2);
+    assert!(snap.occupancy() >= 1.0);
+    // telemetry reached the monitor under the service role
+    assert!(!session.monitor.series("service/occupancy").is_empty());
+}
