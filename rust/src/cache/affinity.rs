@@ -1,0 +1,138 @@
+//! Affinity routing: send a follow-up turn to the replica that holds
+//! its KV prefix — unless that replica is quarantined, serving stale
+//! weights, or meaningfully more loaded than its peers, in which case
+//! the request falls back cleanly to the normal least-loaded path (a
+//! cold prefill is always correct; affinity is only ever a speedup).
+
+/// A routing-time view of one replica (decoupled from service types so
+/// the decision is unit-testable).
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaView {
+    pub id: usize,
+    /// Queued + in-session rows (the least-loaded routing metric).
+    pub load: usize,
+    /// Circuit breaker closed?
+    pub ready: bool,
+    /// Current weight version of the replica.
+    pub version: u64,
+}
+
+/// Why an affinity candidate was rejected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fallback {
+    /// Matched prefix shorter than `min_prefix`: not worth pinning.
+    ShortPrefix,
+    /// The prefix-holding replica is quarantined.
+    Quarantined,
+    /// The prefix was produced under different weights than the replica
+    /// now serves; resuming it would be incorrect.
+    Stale,
+    /// The replica is too far above the least-loaded peer.
+    Overloaded,
+    /// The replica is no longer in the pool.
+    Unknown,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Route {
+    /// Pin the request to this replica.
+    Affinity(usize),
+    /// Use the normal least-loaded path.
+    Cold(Fallback),
+}
+
+/// The affinity-vs-least-loaded tradeoff knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct AffinityPolicy {
+    /// Minimum matched prefix tokens before affinity beats least-loaded.
+    pub min_prefix: usize,
+    /// Affinity wins while the preferred replica's load is within this
+    /// margin of the least-loaded ready peer.
+    pub overload_margin: usize,
+}
+
+impl AffinityPolicy {
+    /// Decide where a request whose prompt matched `matched` prefix
+    /// tokens (held by `preferred`, produced under `version`) should go.
+    pub fn decide(
+        &self,
+        matched: usize,
+        version: u64,
+        preferred: usize,
+        replicas: &[ReplicaView],
+    ) -> Route {
+        if matched < self.min_prefix.max(1) {
+            return Route::Cold(Fallback::ShortPrefix);
+        }
+        let Some(p) = replicas.iter().find(|r| r.id == preferred) else {
+            return Route::Cold(Fallback::Unknown);
+        };
+        if !p.ready {
+            return Route::Cold(Fallback::Quarantined);
+        }
+        if p.version != version {
+            return Route::Cold(Fallback::Stale);
+        }
+        let min_ready = replicas.iter().filter(|r| r.ready).map(|r| r.load).min().unwrap_or(0);
+        if p.load > min_ready + self.overload_margin {
+            return Route::Cold(Fallback::Overloaded);
+        }
+        Route::Affinity(p.id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(loads: &[(usize, bool)]) -> Vec<ReplicaView> {
+        loads
+            .iter()
+            .enumerate()
+            .map(|(id, &(load, ready))| ReplicaView { id, load, ready, version: 1 })
+            .collect()
+    }
+
+    const POLICY: AffinityPolicy = AffinityPolicy { min_prefix: 4, overload_margin: 8 };
+
+    #[test]
+    fn affinity_wins_within_margin() {
+        let replicas = pool(&[(10, true), (4, true)]);
+        assert_eq!(POLICY.decide(16, 1, 0, &replicas), Route::Affinity(0));
+    }
+
+    #[test]
+    fn short_prefixes_stay_least_loaded() {
+        let replicas = pool(&[(0, true), (0, true)]);
+        assert_eq!(POLICY.decide(3, 1, 0, &replicas), Route::Cold(Fallback::ShortPrefix));
+        assert_eq!(POLICY.decide(4, 1, 0, &replicas), Route::Affinity(0));
+    }
+
+    #[test]
+    fn quarantined_replica_falls_back() {
+        let replicas = pool(&[(0, false), (5, true)]);
+        assert_eq!(POLICY.decide(16, 1, 0, &replicas), Route::Cold(Fallback::Quarantined));
+    }
+
+    #[test]
+    fn overload_beyond_margin_falls_back() {
+        let replicas = pool(&[(13, true), (4, true)]);
+        assert_eq!(POLICY.decide(16, 1, 0, &replicas), Route::Cold(Fallback::Overloaded));
+        // exactly at the margin still pins
+        let replicas = pool(&[(12, true), (4, true)]);
+        assert_eq!(POLICY.decide(16, 1, 0, &replicas), Route::Affinity(0));
+    }
+
+    #[test]
+    fn stale_prefix_falls_back() {
+        let mut replicas = pool(&[(0, true)]);
+        replicas[0].version = 2;
+        assert_eq!(POLICY.decide(16, 1, 0, &replicas), Route::Cold(Fallback::Stale));
+    }
+
+    #[test]
+    fn unknown_replica_falls_back() {
+        let replicas = pool(&[(0, true)]);
+        assert_eq!(POLICY.decide(16, 1, 9, &replicas), Route::Cold(Fallback::Unknown));
+    }
+}

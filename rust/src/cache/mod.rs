@@ -1,0 +1,370 @@
+//! Prefix-reuse cache (paper §2.2's avoid-recomputation optimization,
+//! service-side): the layer between the rollout service and the
+//! generation engines that stops multi-turn workflows from re-prefilling
+//! their whole growing transcript on every turn.
+//!
+//! Three parts (DESIGN.md §7):
+//!
+//! * [`trie`] — a token-level radix prefix trie indexing which replica
+//!   holds a live KV prefix for which served transcript, with
+//!   ref-counted nodes, LRU eviction under a token budget, and
+//!   weight-version tagging (entries are invalidated when a new policy
+//!   version is published).
+//! * [`sessions`] — the parked-session store: live engine sessions kept
+//!   alive between the turns of one workflow episode under TTL leases
+//!   and capacity bounds; a follow-up turn claims its parked row and the
+//!   engine extends it with only the delta tokens through the masked
+//!   decode path.
+//! * [`affinity`] — the routing decision: a follow-up turn goes to the
+//!   replica holding its prefix unless that replica is quarantined,
+//!   stale, or overloaded, in which case the request falls back cleanly
+//!   to least-loaded routing and a cold prefill.
+//!
+//! Workflows opt in by threading an episode session key through
+//! `SamplingArgs` (`WorkflowCtx::chat_turn`); untagged requests bypass
+//! every cache path.  [`PrefixIndex`] is the service-wide handle tying
+//! the three parts together and owning the telemetry.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use anyhow::{ensure, Result};
+
+pub mod affinity;
+pub mod sessions;
+pub mod trie;
+
+pub use affinity::{AffinityPolicy, Fallback, ReplicaView, Route};
+pub use sessions::{ParkedSession, RowLease, SessionPark};
+pub use trie::{PrefixMatch, PrefixTrie};
+
+/// Prefix-reuse tuning knobs (the `service.cache_*` config keys parse
+/// into this; see `coordinator::config::ServiceSection`).
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    pub enabled: bool,
+    /// Parked engine sessions kept alive per replica (each pins one
+    /// batch worth of KV memory); 0 disables parking but keeps the
+    /// prefix index and affinity routing.
+    pub max_parked: usize,
+    /// Lease TTL on parked sessions.
+    pub park_ttl: Duration,
+    /// Token budget of the prefix trie (0 = unbounded).
+    pub trie_tokens: usize,
+    /// Minimum matched prefix before affinity beats least-loaded.
+    pub min_prefix: usize,
+    /// Load margin within which affinity wins (see [`AffinityPolicy`]).
+    pub overload_margin: usize,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            enabled: true,
+            max_parked: 2,
+            park_ttl: Duration::from_secs(120),
+            trie_tokens: 1 << 16,
+            min_prefix: 4,
+            overload_margin: 8,
+        }
+    }
+}
+
+impl CacheConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        ensure!(self.min_prefix >= 1, "service.cache_min_prefix must be >= 1");
+        ensure!(self.park_ttl > Duration::ZERO, "service.cache_ttl_s must be > 0");
+        Ok(())
+    }
+}
+
+/// Lock-free cache counters, snapshotted into service telemetry.
+#[derive(Debug, Default)]
+pub struct CacheMetrics {
+    /// Session-tagged prompts that consulted the prefix index.
+    pub lookups: AtomicU64,
+    /// Lookups that matched a reusable prefix AND routed with affinity.
+    pub hits: AtomicU64,
+    /// Lookups with no usable prefix (none stored, too short, stale).
+    pub misses: AtomicU64,
+    /// Prefix tokens the index matched on hits (routing-level reuse).
+    pub reused_tokens: AtomicU64,
+    /// Prompt tokens that skipped re-prefill through an actual parked-
+    /// session resume (engine-level; subset of `reused_tokens`).
+    pub saved_prefill_tokens: AtomicU64,
+    /// Parked-session resumes performed by engine replicas.
+    pub resumed: AtomicU64,
+    /// Sessions parked for a future turn.
+    pub parked: AtomicU64,
+    /// Parked sessions evicted by the capacity bound.
+    pub park_evicted: AtomicU64,
+    /// Parked sessions dropped by TTL expiry.
+    pub park_expired: AtomicU64,
+    /// Trie entries evicted by the token budget.
+    pub trie_evictions: AtomicU64,
+    /// Entries/sessions dropped because a newer weight version published.
+    pub invalidations: AtomicU64,
+    /// Matched prefixes that fell back cold (quarantined / overloaded
+    /// holder); the request is still served, just without reuse.
+    pub affinity_fallbacks: AtomicU64,
+}
+
+/// Point-in-time cache telemetry (rides on `ServiceSnapshot`).
+#[derive(Debug, Clone, Default)]
+pub struct CacheSnapshot {
+    pub lookups: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub reused_tokens: u64,
+    pub saved_prefill_tokens: u64,
+    pub resumed: u64,
+    pub parked: u64,
+    pub park_evicted: u64,
+    pub park_expired: u64,
+    pub trie_evictions: u64,
+    pub invalidations: u64,
+    pub affinity_fallbacks: u64,
+    pub trie_entries: usize,
+    pub trie_tokens: usize,
+}
+
+impl CacheSnapshot {
+    /// Fraction of session-tagged lookups that reused a prefix.
+    pub fn hit_rate(&self) -> f64 {
+        if self.lookups == 0 {
+            0.0
+        } else {
+            self.hits as f64 / self.lookups as f64
+        }
+    }
+
+    /// Uniform monitor field set (merged into the "service" role).
+    pub fn monitor_fields(&self) -> Vec<(String, f64)> {
+        vec![
+            ("cache_hit_rate".to_string(), self.hit_rate()),
+            ("cache_reused_tokens".to_string(), self.reused_tokens as f64),
+            ("cache_saved_prefill_tokens".to_string(), self.saved_prefill_tokens as f64),
+            ("cache_resumed".to_string(), self.resumed as f64),
+            ("cache_parked".to_string(), self.parked as f64),
+            ("cache_evictions".to_string(), (self.trie_evictions + self.park_evicted) as f64),
+            ("cache_invalidations".to_string(), self.invalidations as f64),
+            ("cache_fallbacks".to_string(), self.affinity_fallbacks as f64),
+            ("cache_entries".to_string(), self.trie_entries as f64),
+        ]
+    }
+}
+
+/// The service-wide prefix index: trie + affinity policy + telemetry.
+/// Shared between the router (`RolloutService::chat`), the per-replica
+/// workers (entry admission on completion, parked-session accounting)
+/// and the weight-sync path (invalidation-on-publish).
+pub struct PrefixIndex {
+    cfg: CacheConfig,
+    trie: Mutex<PrefixTrie>,
+    policy: AffinityPolicy,
+    pub metrics: CacheMetrics,
+}
+
+impl PrefixIndex {
+    pub fn new(cfg: CacheConfig) -> PrefixIndex {
+        let policy =
+            AffinityPolicy { min_prefix: cfg.min_prefix, overload_margin: cfg.overload_margin };
+        let trie = Mutex::new(PrefixTrie::new(cfg.trie_tokens));
+        PrefixIndex { cfg, trie, policy, metrics: CacheMetrics::default() }
+    }
+
+    pub fn config(&self) -> &CacheConfig {
+        &self.cfg
+    }
+
+    /// Routing decision for a session-tagged prompt: `Some(replica)`
+    /// pins the request to its prefix holder, `None` means the normal
+    /// least-loaded path (miss or clean fallback).
+    pub fn route(&self, prompt: &[i32], replicas: &[ReplicaView]) -> Option<usize> {
+        self.metrics.lookups.fetch_add(1, Ordering::Relaxed);
+        let mut trie = self.trie.lock().unwrap();
+        let Some(m) = trie.lookup(prompt) else {
+            self.metrics.misses.fetch_add(1, Ordering::Relaxed);
+            return None;
+        };
+        match self.policy.decide(m.len, m.version, m.replica, replicas) {
+            Route::Affinity(id) => {
+                self.metrics.hits.fetch_add(1, Ordering::Relaxed);
+                self.metrics.reused_tokens.fetch_add(m.len as u64, Ordering::Relaxed);
+                Some(id)
+            }
+            Route::Cold(Fallback::ShortPrefix) => {
+                self.metrics.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            Route::Cold(Fallback::Stale) | Route::Cold(Fallback::Unknown) => {
+                // the stored prefix can never be reused: drop it now
+                trie.remove(&prompt[..m.len]);
+                self.metrics.invalidations.fetch_add(1, Ordering::Relaxed);
+                self.metrics.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+            Route::Cold(_) => {
+                // quarantined / overloaded holder: the prefix stays (the
+                // replica may heal), the request goes cold
+                self.metrics.affinity_fallbacks.fetch_add(1, Ordering::Relaxed);
+                self.metrics.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Record a served transcript as a reusable prefix on `replica`.
+    pub fn admit(&self, tokens: &[i32], replica: usize, version: u64) {
+        let mut trie = self.trie.lock().unwrap();
+        trie.insert(tokens, replica, version);
+        let evicted = trie.enforce_budget();
+        if evicted > 0 {
+            self.metrics.trie_evictions.fetch_add(evicted as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Invalidation-on-publish: drop every prefix produced under a
+    /// weight version older than `version`.
+    pub fn invalidate_below(&self, version: u64) {
+        let n = self.trie.lock().unwrap().invalidate_below(version);
+        if n > 0 {
+            self.metrics.invalidations.fetch_add(n as u64, Ordering::Relaxed);
+        }
+    }
+
+    // -- parked-session accounting (engine replicas report here) ------
+
+    pub fn note_resumed(&self, saved_tokens: usize) {
+        self.metrics.resumed.fetch_add(1, Ordering::Relaxed);
+        self.metrics.saved_prefill_tokens.fetch_add(saved_tokens as u64, Ordering::Relaxed);
+    }
+
+    pub fn note_parked(&self, evicted: usize) {
+        self.metrics.parked.fetch_add(1, Ordering::Relaxed);
+        if evicted > 0 {
+            self.metrics.park_evicted.fetch_add(evicted as u64, Ordering::Relaxed);
+        }
+    }
+
+    pub fn note_park_expired(&self, expired: usize) {
+        if expired > 0 {
+            self.metrics.park_expired.fetch_add(expired as u64, Ordering::Relaxed);
+        }
+    }
+
+    pub fn note_park_invalidated(&self, dropped: usize) {
+        if dropped > 0 {
+            self.metrics.invalidations.fetch_add(dropped as u64, Ordering::Relaxed);
+        }
+    }
+
+    pub fn snapshot(&self) -> CacheSnapshot {
+        let (trie_entries, trie_tokens) = {
+            let trie = self.trie.lock().unwrap();
+            (trie.entries(), trie.stored_tokens())
+        };
+        let m = &self.metrics;
+        let load = |a: &AtomicU64| a.load(Ordering::Relaxed);
+        CacheSnapshot {
+            lookups: load(&m.lookups),
+            hits: load(&m.hits),
+            misses: load(&m.misses),
+            reused_tokens: load(&m.reused_tokens),
+            saved_prefill_tokens: load(&m.saved_prefill_tokens),
+            resumed: load(&m.resumed),
+            parked: load(&m.parked),
+            park_evicted: load(&m.park_evicted),
+            park_expired: load(&m.park_expired),
+            trie_evictions: load(&m.trie_evictions),
+            invalidations: load(&m.invalidations),
+            affinity_fallbacks: load(&m.affinity_fallbacks),
+            trie_entries,
+            trie_tokens,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn views(n: usize) -> Vec<ReplicaView> {
+        (0..n).map(|id| ReplicaView { id, load: 0, ready: true, version: 0 }).collect()
+    }
+
+    #[test]
+    fn route_miss_then_admit_then_hit() {
+        let idx = PrefixIndex::new(CacheConfig { min_prefix: 2, ..Default::default() });
+        let prompt = vec![1, 2, 3, 4];
+        assert_eq!(idx.route(&prompt, &views(2)), None);
+        idx.admit(&prompt, 1, 0);
+        let mut next = prompt.clone();
+        next.extend([5, 6]);
+        assert_eq!(idx.route(&next, &views(2)), Some(1));
+        let snap = idx.snapshot();
+        assert_eq!((snap.lookups, snap.hits, snap.misses), (2, 1, 1));
+        assert_eq!(snap.reused_tokens, 4);
+        assert!(snap.hit_rate() > 0.49 && snap.hit_rate() < 0.51);
+    }
+
+    #[test]
+    fn stale_entries_are_dropped_at_lookup() {
+        let idx = PrefixIndex::new(CacheConfig { min_prefix: 2, ..Default::default() });
+        idx.admit(&[1, 2, 3], 0, 0);
+        // replica now serves version 5: the stored prefix is stale
+        let replicas = vec![ReplicaView { id: 0, load: 0, ready: true, version: 5 }];
+        assert_eq!(idx.route(&[1, 2, 3, 4], &replicas), None);
+        let snap = idx.snapshot();
+        assert_eq!(snap.invalidations, 1);
+        assert_eq!(snap.trie_entries, 0, "stale entry removed");
+    }
+
+    #[test]
+    fn quarantined_holder_falls_back_but_keeps_entry() {
+        let idx = PrefixIndex::new(CacheConfig { min_prefix: 2, ..Default::default() });
+        idx.admit(&[1, 2, 3], 0, 0);
+        let mut replicas = views(2);
+        replicas[0].ready = false;
+        assert_eq!(idx.route(&[1, 2, 3, 4], &replicas), None);
+        let snap = idx.snapshot();
+        assert_eq!(snap.affinity_fallbacks, 1);
+        assert_eq!(snap.trie_entries, 1, "entry kept for when the holder heals");
+        // holder heals: affinity resumes
+        assert_eq!(idx.route(&[1, 2, 3, 4], &views(2)), Some(0));
+    }
+
+    #[test]
+    fn invalidate_below_clears_published_over_versions() {
+        let idx = PrefixIndex::new(CacheConfig::default());
+        idx.admit(&[1, 2, 3, 4], 0, 1);
+        idx.admit(&[5, 6, 7, 8], 0, 2);
+        idx.invalidate_below(2);
+        let snap = idx.snapshot();
+        assert_eq!(snap.trie_entries, 1);
+        assert_eq!(snap.invalidations, 1);
+    }
+
+    #[test]
+    fn budget_evictions_surface_in_metrics() {
+        let idx = PrefixIndex::new(CacheConfig { trie_tokens: 4, ..Default::default() });
+        idx.admit(&[1, 2, 3, 4], 0, 0);
+        idx.admit(&[5, 6, 7, 8], 0, 0);
+        let snap = idx.snapshot();
+        assert!(snap.trie_evictions >= 1, "{snap:?}");
+        assert!(snap.trie_tokens <= 4);
+    }
+
+    #[test]
+    fn monitor_fields_cover_the_headline_counters() {
+        let idx = PrefixIndex::new(CacheConfig::default());
+        let fields = idx.snapshot().monitor_fields();
+        for key in ["cache_hit_rate", "cache_saved_prefill_tokens", "cache_parked"] {
+            assert!(fields.iter().any(|(n, _)| n == key), "missing {key}");
+        }
+    }
+}

@@ -1,0 +1,205 @@
+//! Parked-session store: keeps live engine sessions (KV caches + row
+//! cursors) alive between the turns of multi-turn workflow episodes.
+//!
+//! A replica parks the whole batch session at the end of a serve, with a
+//! [`RowLease`] per row naming the episode key and the transcript whose
+//! KV the row holds.  A follow-up turn whose prompt extends a leased
+//! transcript *claims* the session and resumes it by feeding only the
+//! delta tokens through the masked decode path, skipping the re-prefill
+//! of the shared prefix.  Leases expire after a TTL, the store is
+//! capacity-bounded (a parked session pins real KV memory), and parked
+//! state is invalidated when a newer weight version is published — a
+//! resumed KV must have been produced by exactly the weights that will
+//! continue it.
+//!
+//! The store is generic over the session payload so the lease/TTL/
+//! capacity machinery is unit-testable without a runtime.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+/// One row's parked episode: the session key the workflow threads
+/// through its turns and the transcript whose KV the row holds.
+#[derive(Debug, Clone)]
+pub struct RowLease {
+    pub key: u64,
+    pub transcript: Vec<i32>,
+}
+
+impl RowLease {
+    /// Does `prompt` continue this lease's transcript (and leave room
+    /// to sample at least one token within `cache_len`)?  THE resume
+    /// predicate: claim-time and placement-time checks both call it.
+    pub fn resumes(&self, key: u64, prompt: &[i32], cache_len: usize) -> bool {
+        self.key == key
+            && prompt.len() + 1 < cache_len
+            && prompt.len() >= self.transcript.len()
+            && prompt[..self.transcript.len()] == self.transcript[..]
+    }
+}
+
+/// A parked engine session: payload + per-row leases + lease expiry.
+pub struct ParkedSession<S> {
+    pub state: S,
+    /// Weight version every byte of this session's KV was produced
+    /// under (sessions spanning a mid-run sync are never parked).
+    pub version: u64,
+    pub rows: Vec<Option<RowLease>>,
+    pub expires: Instant,
+}
+
+impl<S> ParkedSession<S> {
+    /// Does `prompt` continue row `r`'s leased transcript?  Delegates
+    /// to [`RowLease::resumes`].
+    pub fn row_resumes(&self, r: usize, key: u64, prompt: &[i32], cache_len: usize) -> bool {
+        self.rows[r].as_ref().is_some_and(|l| l.resumes(key, prompt, cache_len))
+    }
+}
+
+/// Capacity-bounded, TTL-leased MRU store of parked sessions.
+pub struct SessionPark<S> {
+    capacity: usize,
+    ttl: Duration,
+    parked: VecDeque<ParkedSession<S>>,
+}
+
+impl<S> SessionPark<S> {
+    pub fn new(capacity: usize, ttl: Duration) -> SessionPark<S> {
+        SessionPark { capacity, ttl, parked: VecDeque::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.parked.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.parked.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Drop sessions whose lease expired; returns how many.
+    pub fn sweep(&mut self, now: Instant) -> usize {
+        let before = self.parked.len();
+        self.parked.retain(|p| p.expires > now);
+        before - self.parked.len()
+    }
+
+    /// Park a session under a fresh lease.  Returns how many sessions
+    /// were evicted to respect the capacity bound (including this one,
+    /// immediately, when capacity is 0).
+    pub fn park(
+        &mut self,
+        state: S,
+        version: u64,
+        rows: Vec<Option<RowLease>>,
+        now: Instant,
+    ) -> usize {
+        self.parked.push_front(ParkedSession { state, version, rows, expires: now + self.ttl });
+        let mut evicted = 0;
+        while self.parked.len() > self.capacity {
+            self.parked.pop_back();
+            evicted += 1;
+        }
+        evicted
+    }
+
+    /// Remove and return the most recently parked session satisfying
+    /// `pred` (a claimed session is owned by the caller; park it again
+    /// after the turn).
+    pub fn claim(&mut self, pred: impl Fn(&ParkedSession<S>) -> bool) -> Option<ParkedSession<S>> {
+        let pos = self.parked.iter().position(pred)?;
+        self.parked.remove(pos)
+    }
+
+    /// Drop parked sessions whose weights are older than `version`
+    /// (invalidation-on-publish); returns how many.
+    pub fn invalidate_below(&mut self, version: u64) -> usize {
+        let before = self.parked.len();
+        self.parked.retain(|p| p.version >= version);
+        before - self.parked.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lease(key: u64, transcript: &[i32]) -> Option<RowLease> {
+        Some(RowLease { key, transcript: transcript.to_vec() })
+    }
+
+    #[test]
+    fn park_claim_roundtrip_and_prefix_check() {
+        let mut park: SessionPark<u32> = SessionPark::new(2, Duration::from_secs(60));
+        let now = Instant::now();
+        assert_eq!(park.park(7, 1, vec![lease(42, &[1, 2, 3]), None], now), 0);
+        let claimed = park
+            .claim(|p| p.version == 1 && p.row_resumes(0, 42, &[1, 2, 3, 4], 64))
+            .expect("claimable");
+        assert_eq!(claimed.state, 7);
+        assert!(park.is_empty(), "claim removes the session");
+        // wrong key / diverging prompt / short prompt never resume
+        assert!(!claimed.row_resumes(0, 43, &[1, 2, 3, 4], 64));
+        assert!(!claimed.row_resumes(0, 42, &[1, 9, 3, 4], 64));
+        assert!(!claimed.row_resumes(0, 42, &[1, 2], 64));
+        assert!(!claimed.row_resumes(1, 42, &[1, 2, 3, 4], 64), "unleased row");
+        // a prompt that cannot fit the cache falls back cold
+        assert!(!claimed.row_resumes(0, 42, &[1, 2, 3, 4], 4));
+        // exact-transcript prompt (turn retry) resumes with empty delta
+        assert!(claimed.row_resumes(0, 42, &[1, 2, 3], 64));
+    }
+
+    #[test]
+    fn capacity_evicts_oldest_first() {
+        let mut park: SessionPark<u32> = SessionPark::new(2, Duration::from_secs(60));
+        let now = Instant::now();
+        assert_eq!(park.park(1, 1, vec![lease(1, &[1])], now), 0);
+        assert_eq!(park.park(2, 1, vec![lease(2, &[2])], now), 0);
+        assert_eq!(park.park(3, 1, vec![lease(3, &[3])], now), 1);
+        assert_eq!(park.len(), 2);
+        assert!(park.claim(|p| p.row_resumes(0, 1, &[1, 9], 64)).is_none(), "oldest evicted");
+        assert!(park.claim(|p| p.row_resumes(0, 3, &[3, 9], 64)).is_some());
+    }
+
+    #[test]
+    fn zero_capacity_never_parks() {
+        let mut park: SessionPark<u32> = SessionPark::new(0, Duration::from_secs(60));
+        assert_eq!(park.park(1, 1, vec![], Instant::now()), 1);
+        assert!(park.is_empty());
+    }
+
+    #[test]
+    fn leases_expire_on_sweep() {
+        let mut park: SessionPark<u32> = SessionPark::new(4, Duration::from_millis(5));
+        let now = Instant::now();
+        park.park(1, 1, vec![lease(1, &[1])], now);
+        assert_eq!(park.sweep(now), 0, "fresh lease survives");
+        assert_eq!(park.sweep(now + Duration::from_millis(10)), 1);
+        assert!(park.is_empty());
+    }
+
+    #[test]
+    fn invalidate_below_drops_stale_weights() {
+        let mut park: SessionPark<u32> = SessionPark::new(4, Duration::from_secs(60));
+        let now = Instant::now();
+        park.park(1, 1, vec![], now);
+        park.park(2, 2, vec![], now);
+        park.park(3, 3, vec![], now);
+        assert_eq!(park.invalidate_below(3), 2);
+        assert_eq!(park.len(), 1);
+        assert!(park.claim(|p| p.version == 3).is_some());
+    }
+
+    #[test]
+    fn claim_prefers_most_recent() {
+        let mut park: SessionPark<u32> = SessionPark::new(4, Duration::from_secs(60));
+        let now = Instant::now();
+        park.park(1, 1, vec![lease(9, &[1])], now);
+        park.park(2, 1, vec![lease(9, &[1])], now);
+        let got = park.claim(|p| p.row_resumes(0, 9, &[1, 2], 64)).unwrap();
+        assert_eq!(got.state, 2, "MRU order");
+    }
+}

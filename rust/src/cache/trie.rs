@@ -1,0 +1,459 @@
+//! Token-level radix prefix trie: the service-wide index of which
+//! replica holds a live KV prefix for which token sequence.
+//!
+//! Entries are full served transcripts (prompt + generated tokens),
+//! inserted when a session-tagged row completes and looked up by the
+//! next turn's prompt: the longest stored sequence that is a *prefix*
+//! of the prompt names the replica whose parked session can be resumed
+//! by feeding only the delta tokens.  Edges are path-compressed, nodes
+//! are ref-counted (shared prefixes survive until every sequence using
+//! them is gone), entries are tagged with the weight version that
+//! produced their KV (stale versions are invalidated on publish), and
+//! a token budget is enforced by least-recently-touched eviction.
+
+use std::collections::HashMap;
+
+/// Result of a longest-prefix lookup.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefixMatch {
+    /// Matched prefix length in tokens (a full stored sequence).
+    pub len: usize,
+    /// Replica whose parked session holds this prefix.
+    pub replica: usize,
+    /// Weight version the prefix KV was produced under.
+    pub version: u64,
+}
+
+#[derive(Debug)]
+struct Entry {
+    replica: usize,
+    version: u64,
+    /// Logical-clock timestamp of the last insert/lookup touch (LRU).
+    touched: u64,
+}
+
+#[derive(Debug)]
+struct Node {
+    /// Compressed edge label from the parent (empty at the root).
+    edge: Vec<i32>,
+    parent: usize,
+    /// Children keyed by the first token of their edge.
+    children: HashMap<i32, usize>,
+    entry: Option<Entry>,
+    /// Entries at or below this node; a node is pruned at zero.
+    refs: usize,
+}
+
+pub struct PrefixTrie {
+    nodes: Vec<Node>,
+    free: Vec<usize>,
+    /// Max stored tokens (sum of edge labels); 0 = unbounded.
+    budget: usize,
+    stored_tokens: usize,
+    entries: usize,
+    clock: u64,
+}
+
+const ROOT: usize = 0;
+
+impl PrefixTrie {
+    pub fn new(budget: usize) -> PrefixTrie {
+        PrefixTrie {
+            nodes: vec![Node {
+                edge: Vec::new(),
+                parent: ROOT,
+                children: HashMap::new(),
+                entry: None,
+                refs: 0,
+            }],
+            free: Vec::new(),
+            budget,
+            stored_tokens: 0,
+            entries: 0,
+            clock: 0,
+        }
+    }
+
+    pub fn entries(&self) -> usize {
+        self.entries
+    }
+
+    pub fn stored_tokens(&self) -> usize {
+        self.stored_tokens
+    }
+
+    fn alloc(&mut self, node: Node) -> usize {
+        match self.free.pop() {
+            Some(id) => {
+                self.nodes[id] = node;
+                id
+            }
+            None => {
+                self.nodes.push(node);
+                self.nodes.len() - 1
+            }
+        }
+    }
+
+    fn tick(&mut self) -> u64 {
+        self.clock += 1;
+        self.clock
+    }
+
+    /// Insert (or refresh) `tokens` as a stored sequence held by
+    /// `replica` under weight `version`.  Returns the number of tokens
+    /// newly stored (0 when the path already existed).
+    pub fn insert(&mut self, tokens: &[i32], replica: usize, version: u64) -> usize {
+        if tokens.is_empty() {
+            return 0;
+        }
+        let now = self.tick();
+        let mut node = ROOT;
+        let mut i = 0usize;
+        let mut added = 0usize;
+        while i < tokens.len() {
+            let first = tokens[i];
+            match self.nodes[node].children.get(&first).copied() {
+                None => {
+                    // no child on this token: hang the whole remainder here
+                    let rest = tokens[i..].to_vec();
+                    added += rest.len();
+                    self.stored_tokens += rest.len();
+                    let child = self.alloc(Node {
+                        edge: rest,
+                        parent: node,
+                        children: HashMap::new(),
+                        entry: None,
+                        refs: 0,
+                    });
+                    self.nodes[node].children.insert(first, child);
+                    node = child;
+                    i = tokens.len();
+                }
+                Some(child) => {
+                    let common = {
+                        let edge = &self.nodes[child].edge;
+                        let max = edge.len().min(tokens.len() - i);
+                        let mut k = 0;
+                        while k < max && edge[k] == tokens[i + k] {
+                            k += 1;
+                        }
+                        k
+                    };
+                    if common == self.nodes[child].edge.len() {
+                        // full edge matched: descend
+                        node = child;
+                        i += common;
+                    } else {
+                        // split the edge at `common`: mid takes the head,
+                        // the old child keeps the tail
+                        let tail = self.nodes[child].edge.split_off(common);
+                        let head = std::mem::take(&mut self.nodes[child].edge);
+                        let child_refs = self.nodes[child].refs;
+                        let mid = self.alloc(Node {
+                            edge: head,
+                            parent: node,
+                            children: HashMap::new(),
+                            entry: None,
+                            refs: child_refs,
+                        });
+                        self.nodes[child].edge = tail;
+                        self.nodes[child].parent = mid;
+                        let tail_first = self.nodes[child].edge[0];
+                        self.nodes[mid].children.insert(tail_first, child);
+                        self.nodes[node].children.insert(first, mid);
+                        node = mid;
+                        i += common;
+                        // the loop continues: either i == tokens.len()
+                        // (entry lands on mid) or a fresh branch hangs
+                        // off mid on the next iteration
+                    }
+                }
+            }
+        }
+        // place / refresh the entry at `node`
+        if let Some(e) = &mut self.nodes[node].entry {
+            e.replica = replica;
+            e.version = version;
+            e.touched = now;
+        } else {
+            self.nodes[node].entry = Some(Entry { replica, version, touched: now });
+            self.entries += 1;
+            // new entry: bump refs on the whole path (node up to root)
+            let mut n = node;
+            loop {
+                self.nodes[n].refs += 1;
+                if n == ROOT {
+                    break;
+                }
+                n = self.nodes[n].parent;
+            }
+        }
+        added
+    }
+
+    /// Longest stored sequence that is a prefix of `tokens`; touches the
+    /// match for LRU purposes.
+    pub fn lookup(&mut self, tokens: &[i32]) -> Option<PrefixMatch> {
+        let mut node = ROOT;
+        let mut i = 0usize;
+        let mut best: Option<(usize, usize)> = None; // (node, len)
+        if self.nodes[ROOT].entry.is_some() {
+            best = Some((ROOT, 0));
+        }
+        while i < tokens.len() {
+            let Some(&child) = self.nodes[node].children.get(&tokens[i]) else {
+                break;
+            };
+            let edge = &self.nodes[child].edge;
+            if tokens.len() - i < edge.len() || edge[..] != tokens[i..i + edge.len()] {
+                // query ends inside the edge or diverges: the stored
+                // sequences below are longer than / different from the
+                // query, so they cannot be resumed as its prefix
+                break;
+            }
+            i += edge.len();
+            node = child;
+            if self.nodes[node].entry.is_some() {
+                best = Some((node, i));
+            }
+        }
+        let (node, len) = best?;
+        let now = self.tick();
+        let e = self.nodes[node].entry.as_mut().expect("best carries an entry");
+        e.touched = now;
+        Some(PrefixMatch { len, replica: e.replica, version: e.version })
+    }
+
+    /// Locate the node holding an entry for exactly `tokens`.
+    fn find_exact(&self, tokens: &[i32]) -> Option<usize> {
+        let mut node = ROOT;
+        let mut i = 0usize;
+        while i < tokens.len() {
+            let &child = self.nodes[node].children.get(&tokens[i])?;
+            let edge = &self.nodes[child].edge;
+            if tokens.len() - i < edge.len() || edge[..] != tokens[i..i + edge.len()] {
+                return None;
+            }
+            i += edge.len();
+            node = child;
+        }
+        self.nodes[node].entry.as_ref().map(|_| node)
+    }
+
+    /// Remove the entry stored for exactly `tokens` (prefix entries of
+    /// other sequences survive through their ref counts).
+    pub fn remove(&mut self, tokens: &[i32]) -> bool {
+        match self.find_exact(tokens) {
+            Some(node) => {
+                self.remove_entry_at(node);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop the entry at `node`, release refs along its path, and prune
+    /// nodes that no longer back any entry.
+    fn remove_entry_at(&mut self, node: usize) {
+        if self.nodes[node].entry.take().is_none() {
+            return;
+        }
+        self.entries -= 1;
+        let mut n = node;
+        loop {
+            self.nodes[n].refs -= 1;
+            if n == ROOT {
+                break;
+            }
+            n = self.nodes[n].parent;
+        }
+        // prune upward from the entry's node: zero-ref nodes back no
+        // entries below, so they have no children left either (the
+        // children check is defensive)
+        let mut n = node;
+        while n != ROOT && self.nodes[n].refs == 0 && self.nodes[n].children.is_empty() {
+            let parent = self.nodes[n].parent;
+            let first = self.nodes[n].edge[0];
+            self.nodes[parent].children.remove(&first);
+            self.stored_tokens -= self.nodes[n].edge.len();
+            self.nodes[n].edge = Vec::new();
+            self.nodes[n].children = HashMap::new();
+            self.free.push(n);
+            n = parent;
+        }
+    }
+
+    /// Evict the least-recently-touched entry.  Returns false when empty.
+    pub fn evict_lru(&mut self) -> bool {
+        let mut victim: Option<(usize, u64)> = None;
+        for (id, node) in self.nodes.iter().enumerate() {
+            if let Some(e) = &node.entry {
+                let older = match victim {
+                    Some((_, t)) => e.touched < t,
+                    None => true,
+                };
+                if older {
+                    victim = Some((id, e.touched));
+                }
+            }
+        }
+        match victim {
+            Some((id, _)) => {
+                self.remove_entry_at(id);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Evict LRU entries until the stored-token budget is respected;
+    /// returns how many entries were evicted.
+    pub fn enforce_budget(&mut self) -> usize {
+        if self.budget == 0 {
+            return 0;
+        }
+        let mut evicted = 0;
+        while self.stored_tokens > self.budget && self.evict_lru() {
+            evicted += 1;
+        }
+        evicted
+    }
+
+    /// Drop every entry produced under a weight version older than
+    /// `version` (invalidation-on-publish); returns how many.
+    pub fn invalidate_below(&mut self, version: u64) -> usize {
+        let stale: Vec<usize> = self
+            .nodes
+            .iter()
+            .enumerate()
+            .filter_map(|(id, n)| match &n.entry {
+                Some(e) if e.version < version => Some(id),
+                _ => None,
+            })
+            .collect();
+        let count = stale.len();
+        for id in stale {
+            self.remove_entry_at(id);
+        }
+        count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_and_longest_prefix_lookup() {
+        let mut t = PrefixTrie::new(0);
+        assert_eq!(t.insert(&[1, 2, 3], 0, 1), 3);
+        assert_eq!(t.insert(&[1, 2, 3, 4, 5], 1, 1), 2);
+        assert_eq!(t.entries(), 2);
+        assert_eq!(t.stored_tokens(), 5);
+        // query extending the longest entry matches the whole sequence
+        let m = t.lookup(&[1, 2, 3, 4, 5, 6, 7]).unwrap();
+        assert_eq!((m.len, m.replica), (5, 1));
+        // query ending between entries matches the shorter one
+        let m = t.lookup(&[1, 2, 3, 4]).unwrap();
+        assert_eq!((m.len, m.replica), (3, 0));
+        // diverging query still reuses the stored prefix entry
+        let m = t.lookup(&[1, 2, 3, 9]).unwrap();
+        assert_eq!(m.len, 3);
+        // no entry is a prefix of this
+        assert!(t.lookup(&[2, 2, 2]).is_none());
+        assert!(t.lookup(&[1, 2]).is_none(), "mid-edge is not a stored sequence");
+    }
+
+    #[test]
+    fn edge_split_preserves_both_sequences() {
+        let mut t = PrefixTrie::new(0);
+        t.insert(&[1, 2, 3, 4], 0, 1);
+        // shares [1, 2] then diverges: splits the compressed edge
+        t.insert(&[1, 2, 9], 1, 1);
+        assert_eq!(t.stored_tokens(), 5, "shared prefix stored once");
+        assert_eq!(t.lookup(&[1, 2, 3, 4, 5]).unwrap().len, 4);
+        assert_eq!(t.lookup(&[1, 2, 9, 9]).unwrap().replica, 1);
+        // an entry exactly at the split point
+        t.insert(&[1, 2], 2, 1);
+        assert_eq!(t.lookup(&[1, 2, 8]).unwrap().replica, 2);
+        assert_eq!(t.stored_tokens(), 5);
+        assert_eq!(t.entries(), 3);
+    }
+
+    #[test]
+    fn reinsert_refreshes_in_place() {
+        let mut t = PrefixTrie::new(0);
+        t.insert(&[1, 2, 3], 0, 1);
+        assert_eq!(t.insert(&[1, 2, 3], 4, 2), 0);
+        assert_eq!(t.entries(), 1);
+        let m = t.lookup(&[1, 2, 3]).unwrap();
+        assert_eq!((m.replica, m.version), (4, 2));
+    }
+
+    #[test]
+    fn remove_prunes_but_keeps_shared_prefixes() {
+        let mut t = PrefixTrie::new(0);
+        t.insert(&[1, 2, 3], 0, 1);
+        t.insert(&[1, 2, 3, 4, 5], 0, 1);
+        assert!(t.remove(&[1, 2, 3, 4, 5]));
+        assert!(!t.remove(&[1, 2, 3, 4, 5]), "already gone");
+        assert_eq!(t.entries(), 1);
+        assert_eq!(t.stored_tokens(), 3, "suffix pruned, shared prefix kept");
+        assert_eq!(t.lookup(&[1, 2, 3, 4, 5]).unwrap().len, 3);
+        assert!(t.remove(&[1, 2, 3]));
+        assert_eq!((t.entries(), t.stored_tokens()), (0, 0));
+    }
+
+    #[test]
+    fn lru_eviction_respects_lookup_touches() {
+        let mut t = PrefixTrie::new(0);
+        t.insert(&[1, 1], 0, 1);
+        t.insert(&[2, 2], 0, 1);
+        t.insert(&[3, 3], 0, 1);
+        // touch the oldest so it becomes the newest
+        assert!(t.lookup(&[1, 1]).is_some());
+        assert!(t.evict_lru());
+        assert!(t.lookup(&[2, 2]).is_none(), "second-oldest evicted first");
+        assert!(t.lookup(&[1, 1]).is_some());
+        assert!(t.lookup(&[3, 3]).is_some());
+    }
+
+    #[test]
+    fn budget_enforcement_evicts_to_fit() {
+        let mut t = PrefixTrie::new(4);
+        t.insert(&[1, 1], 0, 1);
+        t.insert(&[2, 2], 0, 1);
+        assert_eq!(t.enforce_budget(), 0);
+        t.insert(&[3, 3], 0, 1);
+        let evicted = t.enforce_budget();
+        assert!(evicted >= 1, "over budget must evict");
+        assert!(t.stored_tokens() <= 4);
+        assert!(t.lookup(&[1, 1]).is_none(), "LRU entry evicted first");
+    }
+
+    #[test]
+    fn invalidate_below_drops_stale_versions() {
+        let mut t = PrefixTrie::new(0);
+        t.insert(&[1, 1], 0, 1);
+        t.insert(&[2, 2], 0, 2);
+        t.insert(&[3, 3], 0, 3);
+        assert_eq!(t.invalidate_below(3), 2);
+        assert!(t.lookup(&[1, 1]).is_none());
+        assert!(t.lookup(&[2, 2]).is_none());
+        assert!(t.lookup(&[3, 3]).is_some());
+        assert_eq!(t.entries(), 1);
+    }
+
+    #[test]
+    fn freed_nodes_are_recycled() {
+        let mut t = PrefixTrie::new(0);
+        for round in 0..5 {
+            t.insert(&[round, 1, 2, 3], 0, 1);
+            assert!(t.remove(&[round, 1, 2, 3]));
+        }
+        // one root + at most one recycled chain survives
+        assert!(t.nodes.len() <= 3, "arena grew without reuse: {}", t.nodes.len());
+        assert_eq!(t.stored_tokens(), 0);
+    }
+}

@@ -69,6 +69,10 @@ pub struct SchedulerSection {
     /// Hash-partition the task stream across explorers so multi-explorer
     /// runs stop duplicating curriculum order.
     pub shard_tasks: bool,
+    /// Buffer-pressure admission cap for free-running policies: an
+    /// explorer blocks while the ready buffer depth is at or above this
+    /// (0 = uncapped, the seed behavior of blocking writes only).
+    pub max_buffer_depth: u64,
 }
 
 impl Default for SchedulerSection {
@@ -78,6 +82,7 @@ impl Default for SchedulerSection {
             max_version_lag: 1,
             keep_checkpoints: 0,
             shard_tasks: true,
+            max_buffer_depth: 0,
         }
     }
 }
@@ -106,6 +111,21 @@ pub struct ServiceSection {
     pub breaker_failures: usize,
     /// Quarantine cooldown before a health probe, seconds.
     pub quarantine_s: f64,
+    /// Prefix-reuse cache for session-tagged multi-turn workflows
+    /// (DESIGN.md §7): radix prefix index + parked KV sessions +
+    /// affinity routing.
+    pub cache_enabled: bool,
+    /// Parked KV sessions kept alive per replica (0 = trie/affinity
+    /// only, no parking).
+    pub cache_max_parked: usize,
+    /// Lease TTL on parked sessions, seconds.
+    pub cache_ttl_s: f64,
+    /// Minimum matched prefix tokens before affinity beats least-loaded.
+    pub cache_min_prefix: usize,
+    /// Token budget of the prefix trie (0 = unbounded).
+    pub cache_trie_tokens: usize,
+    /// Load margin within which affinity wins over least-loaded.
+    pub cache_overload_margin: usize,
 }
 
 impl Default for ServiceSection {
@@ -124,6 +144,12 @@ impl Default for ServiceSection {
             retry_backoff_ms: d.retry_backoff.as_millis() as u64,
             breaker_failures: d.breaker_failures as usize,
             quarantine_s: d.quarantine.as_secs_f64(),
+            cache_enabled: d.cache.enabled,
+            cache_max_parked: d.cache.max_parked,
+            cache_ttl_s: d.cache.park_ttl.as_secs_f64(),
+            cache_min_prefix: d.cache.min_prefix,
+            cache_trie_tokens: d.cache.trie_tokens,
+            cache_overload_margin: d.cache.overload_margin,
         }
     }
 }
@@ -147,6 +173,14 @@ impl ServiceSection {
             retry_backoff: std::time::Duration::from_millis(self.retry_backoff_ms),
             breaker_failures: self.breaker_failures.min(u32::MAX as usize) as u32,
             quarantine: secs(self.quarantine_s),
+            cache: crate::cache::CacheConfig {
+                enabled: self.cache_enabled,
+                max_parked: self.cache_max_parked,
+                park_ttl: secs(self.cache_ttl_s),
+                trie_tokens: self.cache_trie_tokens,
+                min_prefix: self.cache_min_prefix,
+                overload_margin: self.cache_overload_margin,
+            },
         }
     }
 }
@@ -338,6 +372,7 @@ impl RftConfig {
         u("scheduler.max_version_lag", &mut cfg.scheduler.max_version_lag);
         us("scheduler.keep_checkpoints", &mut cfg.scheduler.keep_checkpoints);
         b("scheduler.shard_tasks", &mut cfg.scheduler.shard_tasks);
+        u("scheduler.max_buffer_depth", &mut cfg.scheduler.max_buffer_depth);
 
         // typed rollout-service section
         b("service.enabled", &mut cfg.service.enabled);
@@ -354,6 +389,14 @@ impl RftConfig {
         if let Some(x) = v.path("service.quarantine_s").and_then(Value::as_f64) {
             cfg.service.quarantine_s = x;
         }
+        b("service.cache_enabled", &mut cfg.service.cache_enabled);
+        us("service.cache_max_parked", &mut cfg.service.cache_max_parked);
+        if let Some(x) = v.path("service.cache_ttl_s").and_then(Value::as_f64) {
+            cfg.service.cache_ttl_s = x;
+        }
+        us("service.cache_min_prefix", &mut cfg.service.cache_min_prefix);
+        us("service.cache_trie_tokens", &mut cfg.service.cache_trie_tokens);
+        us("service.cache_overload_margin", &mut cfg.service.cache_overload_margin);
 
         us("explorer.count", &mut cfg.explorer_count);
         us("explorer.threads", &mut cfg.explorer_threads);
@@ -420,8 +463,11 @@ impl RftConfig {
             if self.service.replicas == 0 {
                 bail!("service.replicas must be >= 1");
             }
-            if !self.service.timeout_s.is_finite() || !self.service.quarantine_s.is_finite() {
-                bail!("service.timeout_s / service.quarantine_s must be finite");
+            if !self.service.timeout_s.is_finite()
+                || !self.service.quarantine_s.is_finite()
+                || !self.service.cache_ttl_s.is_finite()
+            {
+                bail!("service timeout_s / quarantine_s / cache_ttl_s must be finite");
             }
             // surface bad knobs at config time, not at session build
             self.service.to_service_config().validate()?;
@@ -675,6 +721,55 @@ service:
         assert!(RftConfig::from_value(&yamlite::parse(bad).unwrap()).is_err());
         let bad = "mode: both\nservice:\n  enabled: true\n  timeout_s: 0\n";
         assert!(RftConfig::from_value(&yamlite::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn service_cache_section_parses_and_validates() {
+        let yaml = "\
+mode: both
+service:
+  enabled: true
+  cache_enabled: true
+  cache_max_parked: 3
+  cache_ttl_s: 45.5
+  cache_min_prefix: 6
+  cache_trie_tokens: 1024
+  cache_overload_margin: 2
+";
+        let cfg = RftConfig::from_value(&yamlite::parse(yaml).unwrap()).unwrap();
+        let sc = cfg.service.to_service_config();
+        assert!(sc.cache.enabled);
+        assert_eq!(sc.cache.max_parked, 3);
+        assert!((sc.cache.park_ttl.as_secs_f64() - 45.5).abs() < 1e-9);
+        assert_eq!((sc.cache.min_prefix, sc.cache.trie_tokens), (6, 1024));
+        assert_eq!(sc.cache.overload_margin, 2);
+        // defaults: cache on with sane knobs, off switch honored
+        let d = RftConfig::default();
+        assert!(d.service.cache_enabled);
+        assert!(d.service.cache_max_parked >= 1);
+        let off = "mode: both\nservice:\n  enabled: true\n  cache_enabled: false\n";
+        let cfg = RftConfig::from_value(&yamlite::parse(off).unwrap()).unwrap();
+        assert!(!cfg.service.to_service_config().cache.enabled);
+        // bad knobs fail at config time
+        let bad = "mode: both\nservice:\n  enabled: true\n  cache_min_prefix: 0\n";
+        assert!(RftConfig::from_value(&yamlite::parse(bad).unwrap()).is_err());
+        let bad = "mode: both\nservice:\n  enabled: true\n  cache_ttl_s: 0\n";
+        assert!(RftConfig::from_value(&yamlite::parse(bad).unwrap()).is_err());
+    }
+
+    #[test]
+    fn scheduler_buffer_pressure_knob_parses_into_free_policy() {
+        let yaml = "\
+mode: async
+scheduler:
+  max_buffer_depth: 64
+";
+        let cfg = RftConfig::from_value(&yamlite::parse(yaml).unwrap()).unwrap();
+        assert_eq!(cfg.scheduler.max_buffer_depth, 64);
+        let p = resolve_policy(&cfg).unwrap();
+        assert!(p.label(1).contains("buf<64"), "{}", p.label(1));
+        // default stays uncapped (the seed behavior)
+        assert_eq!(RftConfig::default().scheduler.max_buffer_depth, 0);
     }
 
     #[test]

@@ -66,6 +66,10 @@ pub struct Progress {
     pub published_windows: u64,
     /// Completed explorer batches, summed over explorers.
     pub explored_batches: u64,
+    /// Ready experiences sitting in the buffer (refreshed by both
+    /// drivers), so policies can throttle explorers on buffer pressure
+    /// instead of relying on blocking writes.
+    pub buffer_depth: u64,
 }
 
 /// How a policy wants explorer drivers run.
@@ -135,23 +139,33 @@ impl SyncPolicy for Windowed {
     }
 }
 
-/// Free-running (`mode=async`, Fig. 4 c/d): no admission gating —
-/// explorers run against buffer backpressure and pull weights at their
-/// own pace; the trainer publishes every `interval` steps.
+/// Free-running (`mode=async`, Fig. 4 c/d): no window gating —
+/// explorers run at their own pace and pull weights asynchronously; the
+/// trainer publishes every `interval` steps.  `max_buffer > 0` adds
+/// buffer-pressure admission: an explorer blocks while the ready buffer
+/// depth is at or above the cap, so rollout capacity throttles on
+/// consumption lag instead of wedging inside a blocking write
+/// (`scheduler.max_buffer_depth`).
 #[derive(Debug, Clone, Copy)]
 pub struct Free {
     pub interval: u64,
+    /// Admission cap on `Progress::buffer_depth`; 0 = uncapped.
+    pub max_buffer: u64,
 }
 
 impl SyncPolicy for Free {
     fn label(&self, explorer_count: usize) -> String {
-        format!("async(i={},x{explorer_count})", self.interval)
+        if self.max_buffer > 0 {
+            format!("async(i={},buf<{},x{explorer_count})", self.interval, self.max_buffer)
+        } else {
+            format!("async(i={},x{explorer_count})", self.interval)
+        }
     }
     fn explorer_plan(&self, _total_steps: u64) -> ExplorerPlan {
         ExplorerPlan::FreeRun
     }
-    fn admit(&self, _batch: u64, _progress: Progress) -> bool {
-        true
+    fn admit(&self, _batch: u64, progress: Progress) -> bool {
+        self.max_buffer == 0 || progress.buffer_depth < self.max_buffer
     }
     fn publish_after(&self, steps_done: u64) -> bool {
         steps_done % self.interval == 0
@@ -258,7 +272,10 @@ impl SyncPolicyRegistry {
             Ok(Arc::new(Windowed { interval: cfg.sync_interval, offset: cfg.sync_offset }))
         };
         let free = |cfg: &RftConfig| -> Result<Arc<dyn SyncPolicy>> {
-            Ok(Arc::new(Free { interval: cfg.sync_interval }))
+            Ok(Arc::new(Free {
+                interval: cfg.sync_interval,
+                max_buffer: cfg.scheduler.max_buffer_depth,
+            }))
         };
         let offline =
             |_cfg: &RftConfig| -> Result<Arc<dyn SyncPolicy>> { Ok(Arc::new(Offline)) };
@@ -390,13 +407,26 @@ mod tests {
 
     #[test]
     fn free_admits_everything_and_free_runs() {
-        let p = Free { interval: 2 };
+        let p = Free { interval: 2, max_buffer: 0 };
         for e in 0..100 {
             assert!(p.admit(e, at(0)));
         }
         assert_eq!(p.explorer_plan(5), ExplorerPlan::FreeRun);
         assert!(p.multi_explorer());
         assert!(p.label(2).contains("x2"));
+    }
+
+    #[test]
+    fn free_throttles_on_buffer_pressure() {
+        let p = Free { interval: 1, max_buffer: 8 };
+        let shallow = Progress { buffer_depth: 7, ..Default::default() };
+        let full = Progress { buffer_depth: 8, ..Default::default() };
+        assert!(p.admit(0, shallow));
+        assert!(!p.admit(0, full), "at the cap the explorer must block");
+        assert!(!p.admit(0, Progress { buffer_depth: 50, ..Default::default() }));
+        // draining below the cap re-admits
+        assert!(p.admit(1, shallow));
+        assert!(p.label(2).contains("buf<8"), "{}", p.label(2));
     }
 
     #[test]

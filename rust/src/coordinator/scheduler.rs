@@ -109,7 +109,11 @@ impl ExplorerDriver {
                     };
                     self.recorder.rollout(&rec, t0, Instant::now());
                     batches += 1;
-                    self.state.update(|st| st.progress.explored_batches += 1);
+                    let depth = self.explorer.buffer_depth() as u64;
+                    self.state.update(|st| {
+                        st.progress.explored_batches += 1;
+                        st.progress.buffer_depth = depth;
+                    });
                 }
                 Err(e) => {
                     if self.cancel.is_cancelled() {
@@ -217,6 +221,7 @@ impl RftSession {
             top_p: cfg.top_p,
             max_new_tokens: cfg.max_new_tokens,
             seed: cfg.seed,
+            session: None,
         };
         let ex_cfg = |i: usize| ExplorerConfig {
             runner: RunnerConfig {
@@ -396,7 +401,15 @@ impl RftSession {
                         recorder.service(t + 1, &svc.snapshot());
                     }
                 }
-                state.update(|st| st.progress.trainer_steps += 1);
+                // refresh the policy-visible buffer depth every step:
+                // consumption (this train step) relieves the pressure
+                // buffer-gated policies admit against, and the update
+                // wakes blocked admission waiters
+                let depth = self.buffer.ready_len() as u64;
+                state.update(|st| {
+                    st.progress.trainer_steps += 1;
+                    st.progress.buffer_depth = depth;
+                });
                 if cfg.eval_every > 0 && (t + 1) % cfg.eval_every == 0 {
                     recorder.snapshot(t + 1, trainer.params().snapshot()?);
                 }

@@ -168,6 +168,13 @@ impl Explorer {
         self.batches_done.load(Ordering::SeqCst)
     }
 
+    /// Ready depth of the shared experience buffer — feeds the
+    /// scheduler's `Progress` so buffer-pressure-aware sync policies can
+    /// throttle admission instead of relying on blocking writes.
+    pub fn buffer_depth(&self) -> usize {
+        self.buffer.ready_len()
+    }
+
     /// Pull newer weights if published (returns true when updated).  A
     /// service-backed explorer rolls the pull across the replica pool.
     pub fn sync_weights(&self, sync: &dyn WeightSync) -> Result<bool> {

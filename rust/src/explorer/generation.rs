@@ -25,11 +25,23 @@ pub struct SamplingArgs {
     pub top_p: f32,
     pub max_new_tokens: usize,
     pub seed: u64,
+    /// Episode session key for the prefix-reuse cache: follow-up turns
+    /// that share a key can resume a parked KV session on the replica
+    /// that served the prefix (service-side; direct engine handles and
+    /// mocks ignore it, so tagging never changes untagged behavior).
+    pub session: Option<u64>,
 }
 
 impl Default for SamplingArgs {
     fn default() -> Self {
-        SamplingArgs { temperature: 1.0, top_k: 0, top_p: 1.0, max_new_tokens: 16, seed: 0 }
+        SamplingArgs {
+            temperature: 1.0,
+            top_k: 0,
+            top_p: 1.0,
+            max_new_tokens: 16,
+            seed: 0,
+            session: None,
+        }
     }
 }
 
@@ -44,6 +56,10 @@ pub struct GenOutput {
     pub loss_mask: Vec<f32>,
     /// True if the sequence ended with EOS (vs budget exhaustion).
     pub finished: bool,
+    /// Exact weight version that served this output, captured at
+    /// session/chunk boundaries — stays true even when a rolling sync
+    /// lands mid-session (the cache invalidates off the same stamp).
+    pub version: u64,
 }
 
 /// The interface workflows talk to (the paper's ModelWrapper).
@@ -78,6 +94,9 @@ pub struct Session {
     pub active: Vec<bool>,
     rngs: Vec<Rng>,
     cache_len: usize,
+    /// Weight version that last wrote each row's KV (stamped at every
+    /// prefill/feed/sample boundary while the params lock is held).
+    versions: Vec<u64>,
 }
 
 impl Session {
@@ -87,6 +106,24 @@ impl Session {
 
     pub fn rows(&self) -> usize {
         self.pos.len()
+    }
+
+    /// Weight version that last served this row (exact, per chunk).
+    pub fn row_version(&self, row: usize) -> u64 {
+        self.versions[row]
+    }
+
+    /// Re-base a row as a fresh request continuing its transcript: every
+    /// token accumulated so far becomes prompt context (logprob 0, loss
+    /// mask 0), exactly what a cold re-chat of the transcript would
+    /// produce.  Used by the parked-session resume path.
+    pub fn rebase_row(&mut self, row: usize) {
+        for v in self.logprobs[row].iter_mut() {
+            *v = 0.0;
+        }
+        for v in self.loss_mask[row].iter_mut() {
+            *v = 0.0;
+        }
     }
 
     /// Re-seed one row's sampling RNG (the rollout service gives every
@@ -102,6 +139,7 @@ impl Session {
             logprobs: self.logprobs[row].clone(),
             loss_mask: self.loss_mask[row].clone(),
             finished,
+            version: self.versions[row],
         }
     }
 }
@@ -177,6 +215,7 @@ impl GenerationEngine {
         }
         let lens_t = Tensor::from_i32(vec![b], lens.clone());
         let guard = self.params.read().unwrap();
+        let version = guard.version();
         let state = self.engine.prefill(&guard, &tokens, &lens_t)?;
         drop(guard);
         let pos: Vec<usize> = lens.iter().map(|&l| l as usize).collect();
@@ -195,6 +234,7 @@ impl GenerationEngine {
             active,
             rngs,
             cache_len: cache,
+            versions: vec![version; b],
         })
     }
 
@@ -222,6 +262,12 @@ impl GenerationEngine {
             );
         }
         let guard = self.params.read().unwrap();
+        let version = guard.version();
+        for (row, toks) in row_tokens.iter().enumerate() {
+            if !toks.is_empty() {
+                session.versions[row] = version;
+            }
+        }
         for step in 0..max_len {
             let mut step_tokens = Vec::with_capacity(b);
             let mut step_pos = Vec::with_capacity(b);
@@ -281,6 +327,36 @@ impl GenerationEngine {
         self.feed(session, &rows)
     }
 
+    /// Parked-session resume: extend row `row` — whose KV already holds
+    /// a previous turn's transcript — with the new turn's `delta` tokens
+    /// through the masked decode path, the same mechanism that makes
+    /// [`restart_row`](Self::restart_row) sound.  The row's accumulated
+    /// transcript is re-based as prompt context (logprob/mask zeroed)
+    /// and its sampler re-seeded, so the continuation is byte-identical
+    /// to a cold re-chat of `transcript + delta` under the same weights:
+    /// the prefix KV was written by the same prefill/decode sequence a
+    /// cold start would replay, and only the re-prefill is skipped.
+    pub fn extend_row(
+        &self,
+        session: &mut Session,
+        row: usize,
+        delta: &[i32],
+        seed: u64,
+    ) -> Result<()> {
+        ensure!(row < session.pos.len(), "row {row} out of range");
+        session.rebase_row(row);
+        session.active[row] = true;
+        session.seed_row(row, seed);
+        if delta.is_empty() {
+            // turn retry with an identical transcript: the cache already
+            // holds everything; the row's logits are its last token's
+            return Ok(());
+        }
+        let mut rows: Vec<Vec<i32>> = vec![Vec::new(); session.pos.len()];
+        rows[row] = delta.to_vec();
+        self.feed(session, &rows)
+    }
+
     /// Sample up to `max_new` tokens per active row, stopping rows at EOS.
     /// Returns which rows finished with EOS.
     pub fn sample(
@@ -294,6 +370,15 @@ impl GenerationEngine {
         let mut live: Vec<bool> = rows.to_vec();
         let mut finished = vec![false; b];
         let guard = self.params.read().unwrap();
+        // chunk-boundary version stamp: the lock is held for the whole
+        // call, so every token this call samples is served by exactly
+        // this version
+        let version = guard.version();
+        for (row, &on) in rows.iter().enumerate() {
+            if on {
+                session.versions[row] = version;
+            }
+        }
         for _ in 0..args.max_new_tokens {
             if !live.iter().any(|&l| l) {
                 break;
@@ -493,7 +578,14 @@ impl RolloutModel for MockModel {
                 logprobs.push(-1.0 - rng.uniform() as f32);
                 mask.push(1.0);
             }
-            outs.push(GenOutput { tokens, prompt_len: plen, logprobs, loss_mask: mask, finished });
+            outs.push(GenOutput {
+                tokens,
+                prompt_len: plen,
+                logprobs,
+                loss_mask: mask,
+                finished,
+                version: self.weight_version(),
+            });
         }
         Ok(outs)
     }

@@ -20,4 +20,7 @@ pub use generation::{
     GenOutput, GenerationEngine, MockModel, RolloutEndpoint, RolloutModel, SamplingArgs, Session,
 };
 pub use runner::{RunnerConfig, RunnerStats, WorkflowRunner};
-pub use workflow::{Task, Workflow, WorkflowCtx, WorkflowRegistry};
+pub use workflow::{
+    AlfworldWorkflow, MathWorkflow, ReflectOnceWorkflow, Task, Workflow, WorkflowCtx,
+    WorkflowRegistry,
+};

@@ -59,6 +59,20 @@ pub struct WorkflowCtx<'a> {
 }
 
 impl<'a> WorkflowCtx<'a> {
+    /// Turn-aware chat entry point for multi-turn workflows: tags the
+    /// request with an episode session key so the service-side
+    /// prefix-reuse cache can route the turn to the replica holding the
+    /// episode's KV prefix and resume its parked session instead of
+    /// re-prefilling the whole transcript (paper §2.2).  Endpoints
+    /// without a cache (direct engine handles, mocks) ignore the tag,
+    /// so opting in never changes untagged behavior.
+    pub fn chat_turn(&self, session_key: u64, prompt: &[i32]) -> Result<GenOutput> {
+        let args = SamplingArgs { session: Some(session_key), ..self.sampling.clone() };
+        let mut outs = self.model.chat(prompt, 1, &args)?;
+        anyhow::ensure!(!outs.is_empty(), "model returned no output for turn");
+        Ok(outs.remove(0))
+    }
+
     /// Turn a single-turn GenOutput into an Experience.
     pub fn experience_from_output(&self, out: &GenOutput, reward: f32) -> Experience {
         let mut e = Experience {
@@ -72,7 +86,10 @@ impl<'a> WorkflowCtx<'a> {
             reward,
             ready: true,
             source: Source::Explorer,
-            model_version: self.model.weight_version(),
+            // the exact serving version stamped on the output, not the
+            // endpoint's current version (a rolling sync can land
+            // between generation and here)
+            model_version: out.version,
             parent_id: None,
             utility: 0.0,
             reuse_count: 0,
@@ -193,17 +210,33 @@ impl Workflow for AlfworldWorkflow {
             if rollout > 0 {
                 env.reset();
             }
-            experiences.push(self.run_episode(ctx, &mut env)?);
+            experiences.push(self.run_episode(ctx, &mut env, rollout)?);
         }
         Ok(experiences)
     }
 }
 
 impl AlfworldWorkflow {
+    /// Stable per-episode session key: unique across tasks, rollouts and
+    /// sampling seeds, stable across the turns of one episode — the
+    /// handle the prefix-reuse cache parks and resumes KV sessions by.
+    fn episode_key(ctx: &WorkflowCtx, rollout: usize) -> u64 {
+        ctx.task
+            .group_id()
+            .rotate_left(13)
+            .wrapping_add(ctx.sampling.seed)
+            .wrapping_add((rollout as u64).wrapping_mul(0x9e3779b97f4a7c15))
+    }
+
     /// `process_messages_to_experience`: the whole episode becomes ONE
     /// packed sequence; observation tokens are masked out, action tokens
     /// are trained on.
-    fn run_episode(&self, ctx: &mut WorkflowCtx, env: &mut AlfworldEnv) -> Result<Experience> {
+    fn run_episode(
+        &self,
+        ctx: &mut WorkflowCtx,
+        env: &mut AlfworldEnv,
+        rollout: usize,
+    ) -> Result<Experience> {
         let tok = ctx.tokenizer;
         let goal = env.goal_text();
         let first_obs = env.observe();
@@ -219,11 +252,16 @@ impl AlfworldWorkflow {
         let mut done = false;
         // per-turn response budget
         let budget = ctx.sampling.max_new_tokens.max(4);
+        // the episode's session key: every turn carries it so the
+        // service can reuse the previous turn's KV instead of
+        // re-prefilling the growing transcript
+        let session_key = Self::episode_key(ctx, rollout);
+        let mut served_version = ctx.model.weight_version();
 
         for _round in 0..self.max_env_steps {
             // the model continues the packed sequence
-            let outs = ctx.model.chat(&tokens, 1, &ctx.sampling)?;
-            let out = &outs[0];
+            let out = ctx.chat_turn(session_key, &tokens)?;
+            served_version = out.version;
             // splice the response (tokens after the current prefix)
             let resp_start = out.prompt_len;
             let resp_tokens = &out.tokens[resp_start..];
@@ -262,7 +300,8 @@ impl AlfworldWorkflow {
             reward: final_reward,
             ready: true,
             source: Source::Explorer,
-            model_version: ctx.model.weight_version(),
+            // last turn's exact serving stamp (see GenOutput::version)
+            model_version: served_version,
             parent_id: None,
             utility: 0.0,
             reuse_count: 0,

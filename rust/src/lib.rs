@@ -23,6 +23,10 @@
 //!   microbatching with continuous slot refill, a replica pool with
 //!   least-loaded routing and rolling weight updates, deadlines, bounded
 //!   retry, and circuit-breaker quarantine (DESIGN.md §6).
+//! * [`cache`] — the prefix-reuse cache under the service: a radix
+//!   prefix trie, parked KV sessions resumed across the turns of one
+//!   workflow episode, and affinity routing to the replica holding the
+//!   prefix (DESIGN.md §7).
 //! * [`trainer`] — the composable algorithm API: specs assembled from
 //!   advantage fns, loss specs, grouping policies and linked sample
 //!   strategies, registered in the global registry
@@ -38,6 +42,7 @@
 //! * [`tokenizer`] — the deterministic tokenizer shared by all tasks.
 
 pub mod buffer;
+pub mod cache;
 pub mod coordinator;
 pub mod data;
 pub mod envs;

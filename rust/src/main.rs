@@ -148,6 +148,18 @@ fn cmd_run(m: &trinity_rft::util::cli::Matches) -> Result<()> {
             svc.failed,
             svc.quarantined()
         );
+        if let Some(cache) = &svc.cache {
+            println!(
+                "cache           hit rate {:.0}%, {} prefix tokens reused, \
+                 {} prefill tokens saved, {} parked / {} resumed, {} evictions",
+                100.0 * cache.hit_rate(),
+                cache.reused_tokens,
+                cache.saved_prefill_tokens,
+                cache.parked,
+                cache.resumed,
+                cache.trie_evictions + cache.park_evicted
+            );
+        }
     }
     let rewards = report.reward_series();
     if !rewards.is_empty() {

@@ -17,6 +17,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::cache::PrefixIndex;
 use crate::exec::future::Completer;
 use crate::explorer::generation::{GenOutput, SamplingArgs};
 
@@ -181,15 +182,30 @@ impl RequestQueue {
 // ---------------------------------------------------------------------------
 // routing
 
-/// Least-loaded routing over ready replicas.  When every replica is
-/// quarantined the job still lands somewhere: the replica whose health
-/// probe is due soonest (requests are never dropped by the router).
+/// Least-loaded routing over ready replicas, with an optional affinity
+/// override: `preferred` (the replica holding the request's KV prefix,
+/// pre-vetted by the affinity policy) wins while it is still ready.
+/// When every replica is quarantined the job still lands somewhere: the
+/// replica whose health probe is due soonest (requests are never
+/// dropped by the router).
 pub fn route_job(
     replicas: &[Arc<ReplicaState>],
     job: RowJob,
     exclude: Option<usize>,
     metrics: &ServiceMetrics,
+    preferred: Option<usize>,
 ) {
+    if let Some(p) = preferred {
+        let holder = replicas.iter().find(|r| r.id == p && Some(r.id) != exclude && r.ready());
+        if let Some(r) = holder {
+            if let Err(job) = r.queue.push(job) {
+                fail_now(job, "rollout service shut down", metrics);
+            }
+            return;
+        }
+        // the holder went unready between decision and push: fall
+        // through to the normal cold path
+    }
     let now = Instant::now();
     let pick = replicas
         .iter()
@@ -235,6 +251,9 @@ pub struct WorkerSetup {
     pub peers: Vec<Arc<ReplicaState>>,
     pub cfg: ServiceConfig,
     pub metrics: Arc<ServiceMetrics>,
+    /// The service-wide prefix index, when the cache is enabled:
+    /// completed session-tagged rows are admitted as reusable prefixes.
+    pub cache: Option<Arc<PrefixIndex>>,
     pub shutdown: Arc<AtomicBool>,
 }
 
@@ -245,6 +264,7 @@ struct WorkerCtl<'a> {
     replica: &'a ReplicaState,
     key: SampleKey,
     metrics: &'a ServiceMetrics,
+    cache: Option<&'a Arc<PrefixIndex>>,
     /// Refills left before the session must end.  Bounds session
     /// lifetime so a steady stream of same-key traffic cannot starve a
     /// queued request with a different sampling key (which can only be
@@ -284,6 +304,14 @@ impl ServeCtl for WorkerCtl<'_> {
         self.replica.rows_served.fetch_add(1, Ordering::SeqCst);
         self.replica.breaker.lock().unwrap().record_success();
         self.metrics.completed.fetch_add(1, Ordering::SeqCst);
+        // a session-tagged transcript is a reusable prefix for the
+        // episode's next turn: index it under this replica and the
+        // exact weight version that served it
+        if job.args.session.is_some() {
+            if let Some(cache) = self.cache {
+                cache.admit(&out.tokens, self.replica.id, out.version);
+            }
+        }
         job.completer.complete(Ok(out));
     }
 
@@ -309,7 +337,7 @@ impl ServeCtl for WorkerCtl<'_> {
 /// The per-replica serving loop.  Runs until shutdown with an empty
 /// queue; a quarantined replica parks here until its probe heals it.
 pub fn run_worker(setup: WorkerSetup) {
-    let WorkerSetup { replica, peers, cfg, metrics, shutdown } = setup;
+    let WorkerSetup { replica, peers, cfg, metrics, cache, shutdown } = setup;
     const PARK: Duration = Duration::from_millis(20);
     loop {
         // -- circuit breaker gate ------------------------------------
@@ -383,6 +411,7 @@ pub fn run_worker(setup: WorkerSetup) {
             replica: &replica,
             key,
             metrics: &metrics,
+            cache: cache.as_ref(),
             refill_budget: 16 * max_batch.max(1),
             max_inflight: max_batch.max(1),
             failed: vec![],
@@ -439,13 +468,13 @@ pub fn run_worker(setup: WorkerSetup) {
                 // a fresh enqueue: queue-wait telemetry measures time
                 // since the job last entered a queue, not since birth
                 job.enqueued = Instant::now();
-                route_job(&peers, job, Some(replica.id), &metrics);
+                route_job(&peers, job, Some(replica.id), &metrics, None);
             }
         }
         for mut job in stranded {
             metrics.rerouted.fetch_add(1, Ordering::SeqCst);
             job.enqueued = Instant::now();
-            route_job(&peers, job, Some(replica.id), &metrics);
+            route_job(&peers, job, Some(replica.id), &metrics, None);
         }
     }
 }
@@ -470,7 +499,7 @@ fn sweep_quarantined_queue(
             expire_job(job, metrics);
         } else if peer_ready {
             metrics.rerouted.fetch_add(1, Ordering::SeqCst);
-            route_job(peers, job, Some(replica.id), metrics);
+            route_job(peers, job, Some(replica.id), metrics, None);
         } else if let Err(job) = replica.queue.push(job) {
             fail_now(job, "rollout service shut down", metrics);
         }

@@ -19,6 +19,11 @@
 //! [`telemetry`] exposes queue wait, batch occupancy, in-flight depth
 //! and per-replica throughput, flowing into the coordinator's
 //! `Monitor`/`RunRecorder` (DESIGN.md §6).
+//!
+//! Session-tagged requests additionally flow through the prefix-reuse
+//! cache (`crate::cache`, DESIGN.md §7): follow-up turns of a multi-turn
+//! episode route to the replica holding their KV prefix and resume its
+//! parked session instead of re-prefilling the transcript.
 
 use std::time::Duration;
 
@@ -55,6 +60,8 @@ pub struct ServiceConfig {
     pub breaker_failures: u32,
     /// Quarantine cooldown before a health probe.
     pub quarantine: Duration,
+    /// Prefix-reuse cache knobs (`service.cache_*` config keys).
+    pub cache: crate::cache::CacheConfig,
 }
 
 impl Default for ServiceConfig {
@@ -68,6 +75,7 @@ impl Default for ServiceConfig {
             retry_backoff: Duration::from_millis(10),
             breaker_failures: 3,
             quarantine: Duration::from_millis(500),
+            cache: crate::cache::CacheConfig::default(),
         }
     }
 }
@@ -78,6 +86,7 @@ impl ServiceConfig {
         ensure!(self.refill_chunk >= 1, "service.refill_chunk must be >= 1");
         ensure!(self.breaker_failures >= 1, "service.breaker_failures must be >= 1");
         ensure!(self.request_timeout > Duration::ZERO, "service.timeout_s must be > 0");
+        self.cache.validate()?;
         Ok(())
     }
 }

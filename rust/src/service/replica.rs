@@ -11,13 +11,16 @@
 //! * [`ModelReplica`] — any `RolloutEndpoint` (notably `MockModel`), the
 //!   stand-in for an external engine; used by tests and benches.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Result};
 
+use crate::cache::{ParkedSession, PrefixIndex, RowLease, SessionPark};
 use crate::explorer::generation::{GenOutput, GenerationEngine, RolloutEndpoint, SamplingArgs};
+use crate::explorer::Session;
 use crate::model::WeightSync;
 use crate::tokenizer::BOS;
 
@@ -117,6 +120,10 @@ pub trait ReplicaEngine: Send + Sync {
     fn serve(&self, rows: &mut Vec<RowJob>, ctl: &mut dyn ServeCtl) -> Result<()>;
     /// Cheap health check used to close the circuit breaker.
     fn probe(&self) -> Result<()>;
+    /// Parked KV sessions held for episode resumes (0 when uncached).
+    fn parked(&self) -> usize {
+        0
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -138,20 +145,72 @@ pub struct EngineReplica {
     engine: Arc<GenerationEngine>,
     /// Tokens sampled between refill checks.
     refill_chunk: usize,
+    /// Prefix-reuse wiring: the service-wide index (routing + telemetry)
+    /// and this replica's parked KV sessions.  `None` = cache off.
+    cache: Option<Arc<PrefixIndex>>,
+    park: Mutex<SessionPark<Session>>,
+}
+
+/// A session established for serving, warm or cold: the engine state,
+/// the claimed jobs by row, per-row prompt lengths, and the session
+/// tags each row starts with (pre-seeded by a warm resume with leases
+/// that survived the claim untouched, so co-parked episodes re-park).
+struct SessionSetup {
+    session: Session,
+    slots: Vec<Option<RowJob>>,
+    plen: Vec<usize>,
+    tags: Vec<Option<u64>>,
 }
 
 impl EngineReplica {
     pub fn new(engine: Arc<GenerationEngine>, refill_chunk: usize) -> EngineReplica {
-        EngineReplica { engine, refill_chunk: refill_chunk.max(1) }
+        Self::with_cache(engine, refill_chunk, None)
+    }
+
+    /// A replica participating in the prefix-reuse cache: it parks live
+    /// KV sessions between the turns of session-tagged episodes and
+    /// resumes them by feeding only the new turn's delta tokens.
+    pub fn with_cache(
+        engine: Arc<GenerationEngine>,
+        refill_chunk: usize,
+        cache: Option<Arc<PrefixIndex>>,
+    ) -> EngineReplica {
+        let (capacity, ttl) = match &cache {
+            Some(c) if c.config().enabled => (c.config().max_parked, c.config().park_ttl),
+            _ => (0, Duration::from_secs(1)),
+        };
+        EngineReplica {
+            engine,
+            refill_chunk: refill_chunk.max(1),
+            cache,
+            park: Mutex::new(SessionPark::new(capacity, ttl)),
+        }
+    }
+
+    /// Parked sessions currently held (telemetry).
+    pub fn parked_len(&self) -> usize {
+        self.park.lock().unwrap().len()
+    }
+
+    /// Drop parked sessions whose weights predate the current version
+    /// (invalidation-on-publish: a parked KV must be continued by
+    /// exactly the weights that produced it).
+    fn invalidate_parked(&self) {
+        let version = self.engine.params_version();
+        let dropped = self.park.lock().unwrap().invalidate_below(version);
+        if let Some(cache) = &self.cache {
+            cache.note_park_invalidated(dropped);
+        }
     }
 
     /// Deliver row `r`'s output, then refill the freed slot from the
     /// queue (continuous batching).
     fn retire_row(
         &self,
-        session: &mut crate::explorer::Session,
+        session: &mut Session,
         slots: &mut [Option<RowJob>],
         plen: &mut [usize],
+        tags: &mut [Option<u64>],
         r: usize,
         finished: bool,
         cache: usize,
@@ -160,8 +219,11 @@ impl EngineReplica {
     ) {
         let out = session.output(r, plen[r], finished);
         let job = slots[r].take().expect("retire_row on empty slot");
+        // the retired episode owns this row's KV until someone refills
+        // the slot (see fill_slot, which clears the tag)
+        tags[r] = job.args.session;
         ctl.done(job, out);
-        self.fill_slot(session, slots, plen, r, cache, aborted, ctl);
+        self.fill_slot(session, slots, plen, tags, r, cache, aborted, ctl);
     }
 
     /// Claim a queued request into the empty slot `r` (used both when a
@@ -171,9 +233,10 @@ impl EngineReplica {
     /// after that, but rows already in flight keep serving.
     fn fill_slot(
         &self,
-        session: &mut crate::explorer::Session,
+        session: &mut Session,
         slots: &mut [Option<RowJob>],
         plen: &mut [usize],
+        tags: &mut [Option<u64>],
         r: usize,
         cache: usize,
         aborted: &mut bool,
@@ -183,6 +246,8 @@ impl EngineReplica {
             return;
         }
         if let Some(next) = ctl.refill() {
+            // restarting the row clobbers whatever episode KV it held
+            tags[r] = None;
             let max = cache.saturating_sub(2);
             let p: Vec<i32> = if next.prompt.len() > max {
                 next.prompt[..max].to_vec()
@@ -203,29 +268,16 @@ impl EngineReplica {
             }
         }
     }
-}
 
-impl ReplicaEngine for EngineReplica {
-    fn max_batch(&self) -> usize {
-        self.engine.engine().gen_shape().0
-    }
-
-    fn weight_version(&self) -> u64 {
-        self.engine.params_version()
-    }
-
-    fn sync_weights(&self, sync: &dyn WeightSync) -> Result<bool> {
-        self.engine.try_sync(sync)
-    }
-
-    fn set_weights(&self, weights: &[Vec<f32>], version: u64) -> Result<()> {
-        self.engine.set_weights(weights, version)
-    }
-
-    fn serve(&self, rows: &mut Vec<RowJob>, ctl: &mut dyn ServeCtl) -> Result<()> {
-        let (b, tp, cache) = self.engine.engine().gen_shape();
-        let count = rows.len().min(b);
-        ensure!(count > 0, "empty service session");
+    /// Cold session establishment: prefill the batch heads, stream the
+    /// tails through the decode path (the pre-cache serve() behavior).
+    fn cold_start(
+        &self,
+        rows: &mut Vec<RowJob>,
+        count: usize,
+        tp: usize,
+        cache: usize,
+    ) -> Result<SessionSetup> {
         let clamp = |p: &[i32]| -> Vec<i32> {
             let max = cache.saturating_sub(2);
             if p.len() > max {
@@ -258,13 +310,205 @@ impl ReplicaEngine for EngineReplica {
         let mut slots: Vec<Option<RowJob>> = rows.drain(..count).map(Some).collect();
         slots.resize_with(nrows, || None);
         let mut plen = vec![0usize; nrows];
-        let template = slots[0].as_ref().map(|j| j.args.clone()).unwrap_or_default();
         for (r, slot) in slots.iter().enumerate() {
             if let Some(job) = slot {
                 plen[r] = clamped[r].len();
                 session.seed_row(r, job.args.seed);
             }
         }
+        let tags = vec![None; nrows];
+        Ok(SessionSetup { session, slots, plen, tags })
+    }
+
+    /// Warm session establishment: claim a parked session one of the
+    /// batch jobs continues (same weights, transcript a prefix of the
+    /// prompt) and extend the matching rows with only their delta
+    /// tokens; unmatched jobs stream into free rows through the decode
+    /// path.  `None` = nothing reusable, take the cold path.  On an
+    /// engine-level error every claimed job is handed back via `rows`
+    /// (the serve() retry contract).
+    fn try_resume(
+        &self,
+        rows: &mut Vec<RowJob>,
+        count: usize,
+        cache_len: usize,
+        version: u64,
+    ) -> Result<Option<SessionSetup>> {
+        let Some(cache) = &self.cache else { return Ok(None) };
+        if !cache.config().enabled {
+            return Ok(None);
+        }
+        let claimed = {
+            let mut park = self.park.lock().unwrap();
+            cache.note_park_expired(park.sweep(Instant::now()));
+            park.claim(|p| {
+                p.version == version
+                    && rows.iter().take(count).any(|job| {
+                        job.args.session.is_some_and(|key| {
+                            (0..p.rows.len())
+                                .any(|r| p.row_resumes(r, key, &job.prompt, cache_len))
+                        })
+                    })
+            })
+        };
+        let Some(parked) = claimed else { return Ok(None) };
+        let ParkedSession { state: mut session, rows: leases, .. } = parked;
+        let nrows = session.rows();
+        let mut slots: Vec<Option<RowJob>> = std::iter::repeat_with(|| None).take(nrows).collect();
+        let mut plen = vec![0usize; nrows];
+        let mut used = vec![false; nrows];
+        let mut batch: VecDeque<RowJob> = rows.drain(..count).collect();
+        let mut pending: VecDeque<RowJob> = VecDeque::new();
+        while let Some(job) = batch.pop_front() {
+            let hit = job.args.session.and_then(|key| {
+                (0..nrows).find(|&r| {
+                    !used[r]
+                        && leases[r]
+                            .as_ref()
+                            .is_some_and(|l| l.resumes(key, &job.prompt, cache_len))
+                })
+            });
+            match hit {
+                Some(r) => {
+                    let reused = leases[r].as_ref().map(|l| l.transcript.len()).unwrap_or(0);
+                    let delta = &job.prompt[reused..];
+                    match self.engine.extend_row(&mut session, r, delta, job.args.seed) {
+                        Ok(()) => {
+                            cache.note_resumed(reused);
+                            used[r] = true;
+                            plen[r] = job.prompt.len();
+                            slots[r] = Some(job);
+                        }
+                        Err(e) => {
+                            rows.extend(slots.iter_mut().filter_map(Option::take));
+                            rows.push(job);
+                            rows.extend(pending);
+                            rows.extend(batch);
+                            return Err(e);
+                        }
+                    }
+                }
+                None => pending.push_back(job),
+            }
+        }
+        // unmatched jobs stream into free rows through the decode path
+        // (rows still holding unclaimed leases are clobbered last, so a
+        // second episode parked in this session survives when there is
+        // room)
+        let mut free: Vec<usize> = (0..nrows).filter(|&r| !used[r]).collect();
+        free.sort_by_key(|&r| leases[r].is_some());
+        let mut free = free.into_iter();
+        while let Some(job) = pending.pop_front() {
+            let r = free.next().expect("batch jobs never exceed session rows");
+            let max = cache_len.saturating_sub(2);
+            let p: Vec<i32> = if job.prompt.len() > max {
+                job.prompt[..max].to_vec()
+            } else {
+                job.prompt.clone()
+            };
+            match self.engine.restart_row(&mut session, r, &p, job.args.seed) {
+                Ok(()) => {
+                    plen[r] = p.len();
+                    slots[r] = Some(job);
+                }
+                Err(e) => {
+                    rows.extend(slots.iter_mut().filter_map(Option::take));
+                    rows.push(job);
+                    rows.extend(pending);
+                    return Err(e);
+                }
+            }
+        }
+        // leases that survived the claim untouched (their episodes did
+        // not turn this batch, and no job clobbered their row) carry
+        // over, so park_after re-files them and a co-parked episode's
+        // next turn still resumes
+        let mut tags: Vec<Option<u64>> = vec![None; nrows];
+        for (r, tag) in tags.iter_mut().enumerate() {
+            if slots[r].is_none() {
+                *tag = leases[r].as_ref().map(|l| l.key);
+            }
+        }
+        Ok(Some(SessionSetup { session, slots, plen, tags }))
+    }
+
+    /// Park the finished session for the episodes' next turns.  Skipped
+    /// when no row served a session-tagged job, when parking is off, or
+    /// when a rolling sync landed mid-session (mixed-version KV must
+    /// never be resumed).
+    fn park_after(&self, session: Session, tags: &[Option<u64>], version: u64) {
+        let Some(cache) = &self.cache else { return };
+        let cfg = cache.config();
+        if !cfg.enabled || cfg.max_parked == 0 {
+            return;
+        }
+        if self.engine.params_version() != version {
+            return;
+        }
+        let leases: Vec<Option<RowLease>> = tags
+            .iter()
+            .enumerate()
+            .map(|(r, tag)| {
+                tag.and_then(|key| {
+                    // per-row serving stamp (GenOutput::version source):
+                    // the same stamp the trie invalidates off
+                    (session.row_version(r) == version)
+                        .then(|| RowLease { key, transcript: session.tokens[r].clone() })
+                })
+            })
+            .collect();
+        if leases.iter().all(Option::is_none) {
+            return;
+        }
+        let now = Instant::now();
+        let mut park = self.park.lock().unwrap();
+        cache.note_park_expired(park.sweep(now));
+        let evicted = park.park(session, version, leases, now);
+        cache.note_parked(evicted);
+    }
+}
+
+impl ReplicaEngine for EngineReplica {
+    fn max_batch(&self) -> usize {
+        self.engine.engine().gen_shape().0
+    }
+
+    fn weight_version(&self) -> u64 {
+        self.engine.params_version()
+    }
+
+    fn sync_weights(&self, sync: &dyn WeightSync) -> Result<bool> {
+        let updated = self.engine.try_sync(sync)?;
+        if updated {
+            // a new policy version invalidates every parked KV session
+            self.invalidate_parked();
+        }
+        Ok(updated)
+    }
+
+    fn set_weights(&self, weights: &[Vec<f32>], version: u64) -> Result<()> {
+        self.engine.set_weights(weights, version)?;
+        self.invalidate_parked();
+        Ok(())
+    }
+
+    fn serve(&self, rows: &mut Vec<RowJob>, ctl: &mut dyn ServeCtl) -> Result<()> {
+        let (b, tp, cache) = self.engine.engine().gen_shape();
+        let count = rows.len().min(b);
+        ensure!(count > 0, "empty service session");
+        let version = self.engine.params_version();
+        // establish the session: resume a parked one when a batch job
+        // continues a leased transcript under the current weights, else
+        // prefill a fresh one
+        let setup = match self.try_resume(rows, count, cache, version)? {
+            Some(parts) => parts,
+            None => self.cold_start(rows, count, tp, cache)?,
+        };
+        // `tags`: which episode's KV each row holds once its job retires
+        // — the leases park_after() files for the episodes' next turns
+        let SessionSetup { mut session, mut slots, mut plen, mut tags } = setup;
+        let nrows = session.rows();
+        let template = slots.iter().flatten().next().map(|j| j.args.clone()).unwrap_or_default();
         let mut aborted = false;
         loop {
             // fill idle padding slots from the queue first: requests
@@ -273,7 +517,16 @@ impl ReplicaEngine for EngineReplica {
             // configured occupancy cap)
             for r in 0..nrows {
                 if slots[r].is_none() {
-                    self.fill_slot(&mut session, &mut slots, &mut plen, r, cache, &mut aborted, ctl);
+                    self.fill_slot(
+                        &mut session,
+                        &mut slots,
+                        &mut plen,
+                        &mut tags,
+                        r,
+                        cache,
+                        &mut aborted,
+                        ctl,
+                    );
                 }
             }
             // rows still wanting tokens, and the chunk that overshoots none
@@ -295,7 +548,17 @@ impl ReplicaEngine for EngineReplica {
             let mut retired = false;
             for r in 0..nrows {
                 if slots[r].is_some() && !live[r] {
-                    self.retire_row(&mut session, &mut slots, &mut plen, r, false, cache, &mut aborted, ctl);
+                    self.retire_row(
+                        &mut session,
+                        &mut slots,
+                        &mut plen,
+                        &mut tags,
+                        r,
+                        false,
+                        cache,
+                        &mut aborted,
+                        ctl,
+                    );
                     retired = true;
                 }
             }
@@ -331,6 +594,7 @@ impl ReplicaEngine for EngineReplica {
                         &mut session,
                         &mut slots,
                         &mut plen,
+                        &mut tags,
                         r,
                         finished[r],
                         cache,
@@ -340,12 +604,18 @@ impl ReplicaEngine for EngineReplica {
                 }
             }
         }
+        // keep the KV alive for the episodes' next turns
+        self.park_after(session, &tags, version);
         Ok(())
     }
 
     fn probe(&self) -> Result<()> {
         let args = SamplingArgs { max_new_tokens: 1, ..SamplingArgs::default() };
         self.engine.generate(&[vec![BOS]], &args).map(|_| ())
+    }
+
+    fn parked(&self) -> usize {
+        self.parked_len()
     }
 }
 
@@ -473,6 +743,7 @@ impl ReplicaState {
             weight_version: self.engine.weight_version(),
             queued: self.queue.len(),
             inflight: self.inflight.load(Ordering::SeqCst),
+            parked: self.engine.parked(),
         }
     }
 }

@@ -10,6 +10,7 @@ use std::time::Instant;
 
 use anyhow::{anyhow, ensure, Result};
 
+use crate::cache::{PrefixIndex, ReplicaView};
 use crate::exec::Promise;
 use crate::explorer::generation::{
     GenOutput, GenerationEngine, RolloutEndpoint, RolloutModel, SamplingArgs,
@@ -28,6 +29,10 @@ pub struct RolloutService {
     cfg: ServiceConfig,
     replicas: Vec<Arc<ReplicaState>>,
     metrics: Arc<ServiceMetrics>,
+    /// The prefix-reuse cache index (None when disabled): affinity
+    /// routing in `chat`, entry admission in the workers, invalidation
+    /// on the weight paths.
+    prefix: Option<Arc<PrefixIndex>>,
     shutdown: Arc<AtomicBool>,
     workers: Mutex<Vec<JoinHandle<()>>>,
 }
@@ -35,6 +40,21 @@ pub struct RolloutService {
 impl RolloutService {
     /// Build over explicit replica engines; spawns one worker per replica.
     pub fn new(engines: Vec<Arc<dyn ReplicaEngine>>, cfg: ServiceConfig) -> Result<RolloutService> {
+        let prefix = Self::build_index(&cfg);
+        Self::with_index(engines, cfg, prefix)
+    }
+
+    /// The service-wide prefix index for a config (shared with the
+    /// engine replicas so parked-session accounting lands in one place).
+    fn build_index(cfg: &ServiceConfig) -> Option<Arc<PrefixIndex>> {
+        cfg.cache.enabled.then(|| Arc::new(PrefixIndex::new(cfg.cache.clone())))
+    }
+
+    fn with_index(
+        engines: Vec<Arc<dyn ReplicaEngine>>,
+        cfg: ServiceConfig,
+        prefix: Option<Arc<PrefixIndex>>,
+    ) -> Result<RolloutService> {
         ensure!(!engines.is_empty(), "rollout service needs at least one replica");
         cfg.validate()?;
         let metrics = Arc::new(ServiceMetrics::new());
@@ -57,6 +77,7 @@ impl RolloutService {
                 peers: replicas.clone(),
                 cfg: cfg.clone(),
                 metrics: Arc::clone(&metrics),
+                cache: prefix.clone(),
                 shutdown: Arc::clone(&shutdown),
             };
             let poisoned_replica = Arc::clone(replica);
@@ -98,20 +119,34 @@ impl RolloutService {
                     .expect("spawn service worker"),
             );
         }
-        Ok(RolloutService { cfg, replicas, metrics, shutdown, workers: Mutex::new(workers) })
+        Ok(RolloutService {
+            cfg,
+            replicas,
+            metrics,
+            prefix,
+            shutdown,
+            workers: Mutex::new(workers),
+        })
     }
 
     /// A pool of generation-engine replicas (the production wiring).
+    /// Each replica shares the service's prefix index so session-tagged
+    /// turns park and resume real KV sessions on the replica that
+    /// served their prefix.
     pub fn over_engines(
         engines: Vec<Arc<GenerationEngine>>,
         cfg: ServiceConfig,
     ) -> Result<RolloutService> {
         let refill_chunk = cfg.refill_chunk;
+        let prefix = Self::build_index(&cfg);
         let replicas = engines
             .into_iter()
-            .map(|e| Arc::new(EngineReplica::new(e, refill_chunk)) as Arc<dyn ReplicaEngine>)
+            .map(|e| {
+                Arc::new(EngineReplica::with_cache(e, refill_chunk, prefix.clone()))
+                    as Arc<dyn ReplicaEngine>
+            })
             .collect();
-        Self::new(replicas, cfg)
+        Self::with_index(replicas, cfg, prefix)
     }
 
     /// A pool over plain endpoints (mock engines in tests and benches).
@@ -139,6 +174,12 @@ impl RolloutService {
         &self.metrics
     }
 
+    /// The prefix-reuse index, when the cache is enabled (tests and
+    /// benches read hit/reuse telemetry through it).
+    pub fn prefix_index(&self) -> Option<&Arc<PrefixIndex>> {
+        self.prefix.as_ref()
+    }
+
     /// Point-in-time telemetry (flows into `Monitor`/`ModeReport`).
     pub fn snapshot(&self) -> ServiceSnapshot {
         let replicas: Vec<_> = self.replicas.iter().map(|r| r.snapshot()).collect();
@@ -158,6 +199,7 @@ impl RolloutService {
             queued: replicas.iter().map(|r| r.queued).sum(),
             inflight: replicas.iter().map(|r| r.inflight).sum(),
             replicas,
+            cache: self.prefix.as_ref().map(|p| p.snapshot()),
         }
     }
 
@@ -193,6 +235,26 @@ impl RolloutModel for RolloutService {
     fn chat(&self, prompt: &[i32], n: usize, args: &SamplingArgs) -> Result<Vec<GenOutput>> {
         ensure!(n > 0, "chat needs n >= 1");
         ensure!(!self.shutdown.load(Ordering::SeqCst), "rollout service shut down");
+        // session-tagged follow-up turns prefer the replica holding
+        // their KV prefix — unless it is quarantined, stale or
+        // overloaded, in which case this is None and the rows take the
+        // normal least-loaded path (cold prefill, always correct)
+        let preferred = match (&self.prefix, args.session) {
+            (Some(idx), Some(_)) => {
+                let views: Vec<ReplicaView> = self
+                    .replicas
+                    .iter()
+                    .map(|r| ReplicaView {
+                        id: r.id,
+                        load: r.load(),
+                        ready: r.ready(),
+                        version: r.engine.weight_version(),
+                    })
+                    .collect();
+                idx.route(prompt, &views)
+            }
+            _ => None,
+        };
         let now = Instant::now();
         let deadline = now + self.cfg.request_timeout;
         let mut promises = Vec::with_capacity(n);
@@ -211,7 +273,7 @@ impl RolloutModel for RolloutService {
                 completer,
             };
             self.metrics.submitted.fetch_add(1, Ordering::SeqCst);
-            route_job(&self.replicas, job, None, &self.metrics);
+            route_job(&self.replicas, job, None, &self.metrics, preferred);
             promises.push(promise);
         }
         let mut outs = Vec::with_capacity(n);
@@ -277,12 +339,23 @@ impl RolloutEndpoint for RolloutService {
                 return Err(e.context("every replica failed to pull weights"));
             }
         }
+        if updated {
+            // invalidation-on-publish: prefixes older than the weakest
+            // replica can never be resumed again (per-replica staleness
+            // is additionally caught at lookup time)
+            if let Some(prefix) = &self.prefix {
+                prefix.invalidate_below(self.weight_version());
+            }
+        }
         Ok(updated)
     }
 
     fn set_weights(&self, weights: &[Vec<f32>], version: u64) -> Result<()> {
         for replica in &self.replicas {
             replica.engine.set_weights(weights, version)?;
+        }
+        if let Some(prefix) = &self.prefix {
+            prefix.invalidate_below(version);
         }
         Ok(())
     }
@@ -359,6 +432,34 @@ mod tests {
         assert_eq!(svc.weight_version(), 5);
         let snap = svc.snapshot();
         assert!(snap.replicas.iter().all(|r| r.weight_version == 5));
+    }
+
+    #[test]
+    fn session_tagged_turns_hit_the_prefix_index() {
+        let svc = service(vec![MockModel::new(9, Duration::ZERO, 0.0)], ServiceConfig::default());
+        let args = SamplingArgs { session: Some(77), ..Default::default() };
+        let turn1 = svc.chat(&[1, 10, 11, 12], 1, &args).unwrap().remove(0);
+        // the next turn extends the full served transcript
+        let mut prompt = turn1.tokens.clone();
+        prompt.extend([13, 14]);
+        svc.chat(&prompt, 1, &args).unwrap();
+        let cache = svc.snapshot().cache.expect("cache enabled by default");
+        assert_eq!(cache.lookups, 2);
+        assert!(cache.hits >= 1, "turn 2 must reuse turn 1's prefix: {cache:?}");
+        assert!(cache.reused_tokens >= turn1.tokens.len() as u64, "{cache:?}");
+        // untagged traffic bypasses the cache entirely
+        svc.chat(&[1, 2], 1, &SamplingArgs::default()).unwrap();
+        assert_eq!(svc.snapshot().cache.unwrap().lookups, 2);
+    }
+
+    #[test]
+    fn cache_disabled_service_reports_no_cache_telemetry() {
+        let mut cfg = ServiceConfig::default();
+        cfg.cache.enabled = false;
+        let svc = service(vec![MockModel::new(10, Duration::ZERO, 0.0)], cfg);
+        let args = SamplingArgs { session: Some(5), ..Default::default() };
+        svc.chat(&[1, 2, 3], 1, &args).unwrap();
+        assert!(svc.snapshot().cache.is_none());
     }
 
     #[test]

@@ -67,6 +67,8 @@ pub struct ReplicaSnapshot {
     pub weight_version: u64,
     pub queued: usize,
     pub inflight: usize,
+    /// Parked KV sessions held for episode resumes.
+    pub parked: usize,
 }
 
 /// Point-in-time view of the whole service (attached to `ModeReport`).
@@ -86,6 +88,8 @@ pub struct ServiceSnapshot {
     pub queued: usize,
     pub inflight: usize,
     pub replicas: Vec<ReplicaSnapshot>,
+    /// Prefix-reuse cache telemetry (present when the cache is enabled).
+    pub cache: Option<crate::cache::CacheSnapshot>,
 }
 
 impl ServiceSnapshot {
@@ -120,6 +124,9 @@ impl ServiceSnapshot {
         for r in &self.replicas {
             fields.push((format!("replica{}_rows", r.id), r.rows as f64));
             fields.push((format!("replica{}_version", r.id), r.weight_version as f64));
+        }
+        if let Some(cache) = &self.cache {
+            fields.extend(cache.monitor_fields());
         }
         fields
     }

@@ -1,0 +1,220 @@
+//! Prefix-reuse cache integration: the ISSUE-5 acceptance surface.
+//!
+//! * correctness — a multi-turn ALFWorld-style episode produces
+//!   byte-identical experiences with the cache on vs. off (the cache is
+//!   a pure speedup, never a behavior change),
+//! * reuse — the prefix index reports hits from turn 2 onward,
+//! * pressure — trie eviction under a tiny token budget keeps outputs
+//!   identical, and a quarantined affinity replica falls back cleanly
+//!   to a cold serve on a healthy peer,
+//! * engine resume — artifact-gated: a real `GenerationEngine` replica
+//!   parks and resumes KV sessions with byte-identical outputs and
+//!   nonzero prefill tokens saved.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use trinity_rft::buffer::Experience;
+use trinity_rft::explorer::{
+    AlfworldWorkflow, MockModel, RolloutEndpoint, RolloutModel, SamplingArgs, Task, Workflow,
+    WorkflowCtx,
+};
+use trinity_rft::model::ParamStore;
+use trinity_rft::runtime::{Manifest, ModelEngine, RuntimeClient};
+use trinity_rft::service::{RolloutService, ServiceConfig};
+use trinity_rft::tokenizer::{Tokenizer, EOS};
+use trinity_rft::util::json::Value;
+use trinity_rft::util::rng::Rng;
+
+/// A mock whose response is a pure function of the prompt, so two
+/// identical call sequences produce byte-identical outputs.
+fn deterministic_mock(seed: u64) -> MockModel {
+    let tok = Tokenizer::new();
+    let look = tok.encode("look");
+    MockModel::new(seed, Duration::ZERO, 0.0).with_response(move |_prompt, _rng| {
+        let mut r = look.clone();
+        r.push(EOS);
+        r
+    })
+}
+
+fn alfworld_task(seed: i64, repeat: usize) -> Task {
+    let mut t = Task::new("cache-ep", "alfworld", Value::obj(vec![("seed", Value::int(seed))]));
+    t.repeat_times = repeat;
+    t
+}
+
+/// Run the multi-turn workflow against a service handle, single-file
+/// (no runner pool), so the request order is deterministic.
+fn run_episodes(svc: &Arc<RolloutService>, seed: i64, repeat: usize) -> Vec<Experience> {
+    let tok = Tokenizer::new();
+    let task = alfworld_task(seed, repeat);
+    let sampling = SamplingArgs { max_new_tokens: 8, ..Default::default() };
+    let model: &dyn RolloutModel = svc.as_ref();
+    let mut ctx = WorkflowCtx { model, tokenizer: &tok, task: &task, sampling, rng: Rng::new(7) };
+    let wf =
+        AlfworldWorkflow { max_env_steps: 3, env_init_cost: Duration::ZERO, max_seq_tokens: 200 };
+    wf.run(&mut ctx).unwrap()
+}
+
+fn service_with(cfg: ServiceConfig, models: Vec<Arc<MockModel>>) -> Arc<RolloutService> {
+    let endpoints: Vec<Arc<dyn RolloutEndpoint>> =
+        models.into_iter().map(|m| m as Arc<dyn RolloutEndpoint>).collect();
+    Arc::new(RolloutService::over_models(endpoints, cfg).unwrap())
+}
+
+fn assert_identical(a: &[Experience], b: &[Experience]) {
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(b) {
+        assert_eq!(x.tokens, y.tokens, "token streams diverged");
+        assert_eq!(x.logprobs, y.logprobs, "logprobs diverged");
+        assert_eq!(x.loss_mask, y.loss_mask, "loss masks diverged");
+        assert_eq!(x.prompt_len, y.prompt_len);
+        assert_eq!(x.reward, y.reward);
+    }
+}
+
+#[test]
+fn multi_turn_episode_byte_identical_cache_on_vs_off_with_hits_from_turn_2() {
+    let mut on = ServiceConfig::default();
+    on.cache.enabled = true;
+    let mut off = ServiceConfig::default();
+    off.cache.enabled = false;
+
+    let svc_on = service_with(on, vec![Arc::new(deterministic_mock(3))]);
+    let svc_off = service_with(off, vec![Arc::new(deterministic_mock(3))]);
+
+    let exps_on = run_episodes(&svc_on, 5, 2);
+    let exps_off = run_episodes(&svc_off, 5, 2);
+    assert_identical(&exps_on, &exps_off);
+
+    // 2 episodes x 3 turns: every turn after the first of each episode
+    // extends the episode's served transcript, so it must hit
+    let cache = svc_on.snapshot().cache.expect("cache enabled");
+    assert_eq!(cache.lookups, 6, "{cache:?}");
+    assert!(cache.hits >= 2, "no reuse from turn 2: {cache:?}");
+    assert!(cache.reused_tokens > 0, "{cache:?}");
+    assert!(
+        cache.hits + cache.misses == cache.lookups,
+        "hit/miss accounting drifted: {cache:?}"
+    );
+    assert!(svc_off.snapshot().cache.is_none());
+}
+
+#[test]
+fn trie_eviction_under_pressure_keeps_outputs_identical() {
+    // a trie budget smaller than any transcript: every admit evicts,
+    // every lookup misses — pure pressure, zero behavior change
+    let mut tiny = ServiceConfig::default();
+    tiny.cache.trie_tokens = 4;
+    let mut off = ServiceConfig::default();
+    off.cache.enabled = false;
+
+    let svc_tiny = service_with(tiny, vec![Arc::new(deterministic_mock(4))]);
+    let svc_off = service_with(off, vec![Arc::new(deterministic_mock(4))]);
+
+    let exps_tiny = run_episodes(&svc_tiny, 9, 2);
+    let exps_off = run_episodes(&svc_off, 9, 2);
+    assert_identical(&exps_tiny, &exps_off);
+
+    let cache = svc_tiny.snapshot().cache.unwrap();
+    assert!(cache.trie_evictions >= 1, "budget pressure must evict: {cache:?}");
+    assert!(cache.trie_tokens <= 4, "{cache:?}");
+}
+
+#[test]
+fn quarantined_affinity_replica_falls_back_to_cold_serve_on_peer() {
+    let broken = Arc::new(MockModel::new(11, Duration::ZERO, 0.0));
+    let healthy = Arc::new(MockModel::new(12, Duration::from_millis(1), 0.0));
+    let mut cfg = ServiceConfig::default();
+    cfg.breaker_failures = 2;
+    cfg.quarantine = Duration::from_secs(30); // stays dark for the test
+    cfg.max_attempts = 5;
+    cfg.retry_backoff = Duration::from_millis(1);
+    cfg.cache.min_prefix = 2;
+    let svc = service_with(cfg, vec![Arc::clone(&broken), Arc::clone(&healthy)]);
+
+    // turn 1: both replicas idle, least-loaded ties break to replica 0,
+    // which becomes the episode's prefix holder
+    let args = SamplingArgs { session: Some(404), ..Default::default() };
+    let turn1 = svc.chat(&[1, 30, 31, 32], 1, &args).unwrap().remove(0);
+
+    // break replica 0 until its breaker opens
+    broken.set_fail_rate(1.0);
+    for i in 0..2 {
+        svc.chat(&[1, 90 + i], 1, &SamplingArgs::default()).unwrap();
+    }
+    let snap = svc.snapshot();
+    assert!(snap.replicas[0].quarantined, "breaker never opened: {snap:?}");
+
+    // turn 2 extends the transcript held by the quarantined replica: the
+    // affinity router must fall back cleanly to a cold serve on the peer
+    let mut prompt = turn1.tokens.clone();
+    prompt.extend([33, 34]);
+    let turn2 = svc.chat(&prompt, 1, &args).unwrap().remove(0);
+    assert!(turn2.tokens.len() > prompt.len(), "fallback turn must still generate");
+
+    let cache = svc.snapshot().cache.unwrap();
+    assert!(cache.affinity_fallbacks >= 1, "{cache:?}");
+    let snap = svc.snapshot();
+    assert_eq!(snap.failed, 0, "fallback must not fail requests: {snap:?}");
+    assert!(snap.replicas[1].rows >= 3, "peer should have absorbed the turn: {snap:?}");
+}
+
+// ---------------------------------------------------------------------------
+// artifact-gated: real KV resume over GenerationEngine replicas
+
+fn engine_service(cache_on: bool, seed: u64) -> anyhow::Result<Arc<RolloutService>> {
+    let manifest = Manifest::load_default().expect("caller checks artifacts");
+    let client = RuntimeClient::global();
+    let engine = Arc::new(ModelEngine::new(client, &manifest, "tiny")?);
+    engine.warmup()?;
+    let params = ParamStore::init(&engine.model, seed)?;
+    let gen = Arc::new(trinity_rft::explorer::GenerationEngine::new(engine, params));
+    let mut cfg = ServiceConfig::default();
+    cfg.cache.enabled = cache_on;
+    cfg.cache.min_prefix = 2;
+    Ok(Arc::new(RolloutService::over_engines(vec![gen], cfg)?))
+}
+
+#[test]
+fn engine_resume_is_byte_identical_and_saves_prefill() {
+    if Manifest::load_default().is_none() {
+        return; // no artifacts in this environment
+    }
+    let warm = engine_service(true, 21).unwrap();
+    let cold = engine_service(false, 21).unwrap();
+    let tok = Tokenizer::new();
+    let obs: Vec<Vec<i32>> = ["north", "door", "key"].iter().map(|o| tok.encode(o)).collect();
+
+    let args = SamplingArgs {
+        max_new_tokens: 4,
+        temperature: 1.0,
+        seed: 99,
+        session: Some(777),
+        ..Default::default()
+    };
+    let mut warm_prompt = tok.encode_prompt("find the key");
+    let mut cold_prompt = warm_prompt.clone();
+    for turn in 0..3 {
+        let w = warm.chat(&warm_prompt, 1, &args).unwrap().remove(0);
+        let c = cold.chat(&cold_prompt, 1, &args).unwrap().remove(0);
+        assert_eq!(w.tokens, c.tokens, "turn {turn} tokens diverged");
+        assert_eq!(w.prompt_len, c.prompt_len, "turn {turn}");
+        for (lw, lc) in w.logprobs.iter().zip(&c.logprobs) {
+            assert!((lw - lc).abs() < 1e-4, "turn {turn} logprobs diverged: {lw} vs {lc}");
+        }
+        assert_eq!(w.loss_mask, c.loss_mask, "turn {turn}");
+        warm_prompt = w.tokens.clone();
+        warm_prompt.extend(&obs[turn]);
+        cold_prompt = c.tokens.clone();
+        cold_prompt.extend(&obs[turn]);
+    }
+
+    let cache = warm.snapshot().cache.expect("cache enabled");
+    assert!(cache.resumed >= 1, "turn 2+ must resume a parked session: {cache:?}");
+    assert!(cache.saved_prefill_tokens > 0, "{cache:?}");
+    assert!(cache.parked >= 1, "{cache:?}");
+    assert!(cache.hits >= 1, "{cache:?}");
+    assert!(cold.snapshot().cache.is_none());
+}
