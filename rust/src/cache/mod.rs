@@ -185,35 +185,47 @@ impl PrefixIndex {
     /// pins the request to its prefix holder, `None` means the normal
     /// least-loaded path (miss or clean fallback).
     pub fn route(&self, prompt: &[i32], replicas: &[ReplicaView]) -> Option<usize> {
+        self.route_scored(prompt, replicas).0
+    }
+
+    /// [`route`](Self::route) plus the matched prefix length: how many
+    /// transcript tokens the affinity hit reuses (0 on any cold route).
+    /// The service stamps the score onto the row job so replicas can
+    /// emit resume-vs-cold-prefill spans.
+    pub fn route_scored(
+        &self,
+        prompt: &[i32],
+        replicas: &[ReplicaView],
+    ) -> (Option<usize>, usize) {
         self.metrics.lookups.fetch_add(1, Ordering::Relaxed);
         let mut trie = self.trie.lock().unwrap();
         let Some(m) = trie.lookup(prompt) else {
             self.metrics.misses.fetch_add(1, Ordering::Relaxed);
-            return None;
+            return (None, 0);
         };
         match self.policy.decide(m.len, m.version, m.replica, replicas) {
             Route::Affinity(id) => {
                 self.metrics.hits.fetch_add(1, Ordering::Relaxed);
                 self.metrics.reused_tokens.fetch_add(m.len as u64, Ordering::Relaxed);
-                Some(id)
+                (Some(id), m.len)
             }
             Route::Cold(Fallback::ShortPrefix) => {
                 self.metrics.misses.fetch_add(1, Ordering::Relaxed);
-                None
+                (None, 0)
             }
             Route::Cold(Fallback::Stale) | Route::Cold(Fallback::Unknown) => {
                 // the stored prefix can never be reused: drop it now
                 trie.remove(&prompt[..m.len]);
                 self.metrics.invalidations.fetch_add(1, Ordering::Relaxed);
                 self.metrics.misses.fetch_add(1, Ordering::Relaxed);
-                None
+                (None, 0)
             }
             Route::Cold(_) => {
                 // quarantined / overloaded holder: the prefix stays (the
                 // replica may heal), the request goes cold
                 self.metrics.affinity_fallbacks.fetch_add(1, Ordering::Relaxed);
                 self.metrics.misses.fetch_add(1, Ordering::Relaxed);
-                None
+                (None, 0)
             }
         }
     }

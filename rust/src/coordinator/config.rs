@@ -185,6 +185,51 @@ impl ServiceSection {
     }
 }
 
+/// Typed observability section (`observability.*`): the tracing and
+/// metrics plane (DESIGN.md §8).  Off by default — when disabled no
+/// recorder or telemetry hub is built and runs behave byte-identically.
+#[derive(Debug, Clone)]
+pub struct ObservabilitySection {
+    pub enabled: bool,
+    /// Span ring capacity (rounded up to a power of two).
+    pub ring_capacity: usize,
+    /// Telemetry-hub sampling cadence, seconds.
+    pub sample_every_s: f64,
+    /// Where `trace.json` is written (default: the monitor dir).
+    pub trace_path: Option<String>,
+}
+
+impl Default for ObservabilitySection {
+    /// Knob defaults come from `obs::ObsConfig::default()` — one source
+    /// of truth for YAML-configured and programmatic users.
+    fn default() -> Self {
+        let d = crate::obs::ObsConfig::default();
+        ObservabilitySection {
+            enabled: d.enabled,
+            ring_capacity: d.ring_capacity,
+            sample_every_s: d.sample_every.as_secs_f64(),
+            trace_path: None,
+        }
+    }
+}
+
+impl ObservabilitySection {
+    /// Clamped only as far as needed to avoid `Duration::from_secs_f64`
+    /// panics; `ObsConfig::validate` rejects bad values loudly.
+    pub fn to_obs_config(&self) -> crate::obs::ObsConfig {
+        let secs = |v: f64| {
+            let v = if v.is_finite() { v.clamp(0.0, 1e9) } else { 0.0 };
+            std::time::Duration::from_secs_f64(v)
+        };
+        crate::obs::ObsConfig {
+            enabled: self.enabled,
+            ring_capacity: self.ring_capacity,
+            sample_every: secs(self.sample_every_s),
+            trace_path: self.trace_path.as_ref().map(PathBuf::from),
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct RftConfig {
     /// both | async | explore | train | bench
@@ -193,6 +238,8 @@ pub struct RftConfig {
     pub scheduler: SchedulerSection,
     /// Typed rollout-service keys (see [`ServiceSection`]).
     pub service: ServiceSection,
+    /// Typed observability keys (see [`ObservabilitySection`]).
+    pub observability: ObservabilitySection,
     pub model_preset: String,
     pub seed: u64,
     /// Registered algorithm name (see `trinity algorithms list`).
@@ -252,6 +299,7 @@ impl Default for RftConfig {
             mode: "both".into(),
             scheduler: SchedulerSection::default(),
             service: ServiceSection::default(),
+            observability: ObservabilitySection::default(),
             model_preset: "tiny".into(),
             seed: 42,
             algorithm: "grpo".into(),
@@ -398,6 +446,16 @@ impl RftConfig {
         us("service.cache_trie_tokens", &mut cfg.service.cache_trie_tokens);
         us("service.cache_overload_margin", &mut cfg.service.cache_overload_margin);
 
+        // typed observability section
+        b("observability.enabled", &mut cfg.observability.enabled);
+        us("observability.ring_capacity", &mut cfg.observability.ring_capacity);
+        if let Some(x) = v.path("observability.sample_every_s").and_then(Value::as_f64) {
+            cfg.observability.sample_every_s = x;
+        }
+        if let Some(p) = v.path("observability.trace_path").and_then(Value::as_str) {
+            cfg.observability.trace_path = Some(p.to_string());
+        }
+
         us("explorer.count", &mut cfg.explorer_count);
         us("explorer.threads", &mut cfg.explorer_threads);
         us("explorer.batch_tasks", &mut cfg.batch_tasks);
@@ -471,6 +529,12 @@ impl RftConfig {
             }
             // surface bad knobs at config time, not at session build
             self.service.to_service_config().validate()?;
+        }
+        if self.observability.enabled {
+            if !self.observability.sample_every_s.is_finite() {
+                bail!("observability.sample_every_s must be finite");
+            }
+            self.observability.to_obs_config().validate()?;
         }
         Ok(())
     }
@@ -788,6 +852,34 @@ scheduler:
         let d = RftConfig::default();
         assert_eq!(d.scheduler.keep_checkpoints, 0);
         assert!(d.scheduler.shard_tasks);
+    }
+
+    #[test]
+    fn observability_section_parses_and_validates() {
+        let yaml = "\
+mode: both
+observability:
+  enabled: true
+  ring_capacity: 2048
+  sample_every_s: 0.5
+  trace_path: /tmp/t/trace.json
+";
+        let cfg = RftConfig::from_value(&yamlite::parse(yaml).unwrap()).unwrap();
+        assert!(cfg.observability.enabled);
+        let oc = cfg.observability.to_obs_config();
+        assert_eq!(oc.ring_capacity, 2048);
+        assert!((oc.sample_every.as_secs_f64() - 0.5).abs() < 1e-9);
+        assert_eq!(oc.trace_path.as_deref(), Some(std::path::Path::new("/tmp/t/trace.json")));
+        // defaults: off, zero overhead
+        let off = RftConfig::from_value(&yamlite::parse("mode: both\n").unwrap()).unwrap();
+        assert!(!off.observability.enabled);
+        // bad knobs fail at config time (only when enabled)
+        let bad = "mode: both\nobservability:\n  enabled: true\n  ring_capacity: 0\n";
+        assert!(RftConfig::from_value(&yamlite::parse(bad).unwrap()).is_err());
+        let bad = "mode: both\nobservability:\n  enabled: true\n  sample_every_s: 0\n";
+        assert!(RftConfig::from_value(&yamlite::parse(bad).unwrap()).is_err());
+        let ok = "mode: both\nobservability:\n  ring_capacity: 0\n"; // disabled: not validated
+        assert!(RftConfig::from_value(&yamlite::parse(ok).unwrap()).is_ok());
     }
 
     #[test]

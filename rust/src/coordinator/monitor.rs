@@ -1,11 +1,15 @@
 //! The monitor (paper §2.4, Fig. 6): per-step metric streams to JSONL +
 //! CSV, qualitative rollout-example capture, and console progress — the
-//! WandB/TensorBoard stand-in.
+//! WandB/TensorBoard stand-in.  JSONL rows carry a `ts` wall-clock
+//! field; write failures are counted (and warned about once) instead of
+//! silently discarded, and CSV flushes go through a temp-file rename so
+//! readers never observe a half-written file.
 
 use std::collections::BTreeMap;
 use std::io::Write;
 use std::path::PathBuf;
 use std::sync::Mutex;
+use std::time::{SystemTime, UNIX_EPOCH};
 
 use anyhow::{Context, Result};
 
@@ -15,6 +19,33 @@ struct Inner {
     jsonl: Option<std::fs::File>,
     series: BTreeMap<String, Vec<(u64, f64)>>,
     examples: Vec<(u64, String)>,
+    /// JSONL rows lost to write errors (disk full, closed fd, ...).
+    dropped: u64,
+    /// Whether the one-time drop warning already fired.
+    warned: bool,
+}
+
+impl Inner {
+    /// Write one JSONL row, counting (and warning once about) failures
+    /// instead of discarding them.
+    fn write_row(&mut self, row: Value) {
+        let Some(f) = &mut self.jsonl else { return };
+        if writeln!(f, "{}", row.to_string_compact()).is_err() {
+            self.dropped += 1;
+            if !self.warned {
+                self.warned = true;
+                crate::log_warn!(
+                    "monitor",
+                    "metrics.jsonl write failed; further drops counted silently"
+                );
+            }
+        }
+    }
+}
+
+/// Seconds since the Unix epoch (the `ts` field on every JSONL row).
+fn wall_clock_s() -> f64 {
+    SystemTime::now().duration_since(UNIX_EPOCH).map(|d| d.as_secs_f64()).unwrap_or(0.0)
 }
 
 pub struct Monitor {
@@ -36,7 +67,13 @@ impl Monitor {
         };
         Ok(Monitor {
             out_dir,
-            inner: Mutex::new(Inner { jsonl, series: BTreeMap::new(), examples: vec![] }),
+            inner: Mutex::new(Inner {
+                jsonl,
+                series: BTreeMap::new(),
+                examples: vec![],
+                dropped: 0,
+                warned: false,
+            }),
             console_every: 10,
         })
     }
@@ -52,13 +89,14 @@ impl Monitor {
         for (name, v) in metrics {
             inner.series.entry(format!("{role}/{name}")).or_default().push((step, *v));
         }
-        if let Some(f) = &mut inner.jsonl {
+        if inner.jsonl.is_some() {
             let mut pairs = vec![
                 ("role".to_string(), Value::str(role)),
                 ("step".to_string(), Value::num(step as f64)),
+                ("ts".to_string(), Value::num(wall_clock_s())),
             ];
             pairs.extend(metrics.iter().map(|(n, v)| (n.clone(), Value::num(*v))));
-            let _ = writeln!(f, "{}", Value::Object(pairs).to_string_compact());
+            inner.write_row(Value::Object(pairs));
         }
         if step % self.console_every == 0 && !metrics.is_empty() {
             let shown: Vec<String> =
@@ -72,13 +110,14 @@ impl Monitor {
     pub fn log_example(&self, step: u64, text: &str) {
         let mut inner = self.inner.lock().unwrap();
         inner.examples.push((step, text.to_string()));
-        if let Some(f) = &mut inner.jsonl {
+        if inner.jsonl.is_some() {
             let v = Value::obj(vec![
                 ("role", Value::str("example")),
                 ("step", Value::num(step as f64)),
+                ("ts", Value::num(wall_clock_s())),
                 ("text", Value::str(text)),
             ]);
-            let _ = writeln!(f, "{}", v.to_string_compact());
+            inner.write_row(v);
         }
     }
 
@@ -99,17 +138,32 @@ impl Monitor {
         self.inner.lock().unwrap().examples.clone()
     }
 
+    /// JSONL rows lost to write errors so far.
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
     /// Write every series as CSV under the out dir (one file per role).
+    /// Each file lands via temp-file + rename, so a concurrent reader
+    /// sees either the previous flush or the new one — never a torn
+    /// write.
     pub fn flush_csv(&self) -> Result<()> {
         let Some(dir) = &self.out_dir else { return Ok(()) };
         let inner = self.inner.lock().unwrap();
         for (key, points) in &inner.series {
             let fname = format!("{}.csv", key.replace('/', "_"));
-            let mut f = std::fs::File::create(dir.join(fname))?;
-            writeln!(f, "step,value")?;
-            for (s, v) in points {
-                writeln!(f, "{s},{v}")?;
+            let dest = dir.join(&fname);
+            let tmp = dir.join(format!("{fname}.tmp"));
+            {
+                let mut f = std::fs::File::create(&tmp)
+                    .with_context(|| format!("creating {tmp:?}"))?;
+                writeln!(f, "step,value")?;
+                for (s, v) in points {
+                    writeln!(f, "{s},{v}")?;
+                }
             }
+            std::fs::rename(&tmp, &dest)
+                .with_context(|| format!("renaming {tmp:?} -> {dest:?}"))?;
         }
         Ok(())
     }
@@ -128,6 +182,7 @@ mod tests {
         assert_eq!(m.series("trainer/loss"), vec![(1, 0.5), (2, 0.4)]);
         assert_eq!(m.series_values("explorer-0/reward"), vec![0.2]);
         assert_eq!(m.keys().len(), 3);
+        assert_eq!(m.dropped(), 0);
     }
 
     #[test]
@@ -140,10 +195,50 @@ mod tests {
         m.flush_csv().unwrap();
         let jsonl = std::fs::read_to_string(dir.join("metrics.jsonl")).unwrap();
         assert!(jsonl.lines().count() == 2);
-        assert!(Value::parse(jsonl.lines().next().unwrap()).is_ok());
+        for line in jsonl.lines() {
+            let row = Value::parse(line).unwrap();
+            let ts = row.get("ts").and_then(Value::as_f64).unwrap();
+            assert!(ts > 1.0e9, "ts should be epoch seconds, got {ts}");
+        }
         let csv = std::fs::read_to_string(dir.join("trainer_loss.csv")).unwrap();
         assert!(csv.contains("1,1"));
+        assert!(
+            !dir.join("trainer_loss.csv.tmp").exists(),
+            "temp file must be renamed away"
+        );
+        assert_eq!(m.dropped(), 0);
         std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn flush_csv_replaces_previous_file_atomically() {
+        let dir = std::env::temp_dir().join(format!("trft_mon_atomic_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let m = Monitor::new(Some(dir.clone())).unwrap();
+        m.log("trainer", 1, &[("loss".into(), 1.0)]);
+        m.flush_csv().unwrap();
+        m.log("trainer", 2, &[("loss".into(), 0.5)]);
+        m.flush_csv().unwrap();
+        let csv = std::fs::read_to_string(dir.join("trainer_loss.csv")).unwrap();
+        assert_eq!(csv, "step,value\n1,1\n2,0.5\n");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn write_errors_are_counted_not_swallowed() {
+        let m = Monitor::in_memory();
+        {
+            // simulate a dead sink: a read-only handle fails writeln
+            let mut inner = m.inner.lock().unwrap();
+            let path = std::env::temp_dir().join(format!("trft_mon_ro_{}", std::process::id()));
+            std::fs::write(&path, b"").unwrap();
+            inner.jsonl = Some(std::fs::File::open(&path).unwrap());
+        }
+        m.log("trainer", 1, &[("loss".into(), 1.0)]);
+        m.log("trainer", 2, &[("loss".into(), 0.9)]);
+        assert_eq!(m.dropped(), 2);
+        // series still accumulate in memory despite the dead sink
+        assert_eq!(m.series("trainer/loss").len(), 2);
     }
 
     #[test]

@@ -105,6 +105,14 @@ pub trait SyncPolicy: Send + Sync {
     fn multi_explorer(&self) -> bool {
         true
     }
+    /// Called once at session start when observability is enabled: the
+    /// policy may keep the [`TelemetryHub`](crate::obs::TelemetryHub)
+    /// and read live service/cache/buffer gauges inside `admit` —
+    /// adaptive control beyond the publish-boundary `Progress` counters
+    /// (ROADMAP item 2).  The default ignores it.
+    fn connect_telemetry(&self, hub: &std::sync::Arc<crate::obs::TelemetryHub>) {
+        let _ = hub;
+    }
 }
 
 /// Windowed gating (`mode=both`, Fig. 4 a/b): the explorer may start
@@ -516,6 +524,56 @@ mod tests {
         cfg.sync_interval = 2;
         let p = resolve_policy(&cfg).unwrap();
         assert_eq!(p.label(1), "both(i=4,o=1)");
+    }
+
+    #[test]
+    fn policy_reads_live_gauges_through_telemetry_hub() {
+        use crate::obs::{Gauges, TelemetryHub};
+        use std::time::Duration;
+
+        /// Buffer-pressure admission driven by the *live* hub gauge
+        /// instead of the publish-boundary `Progress` counter.
+        struct HubGated {
+            hub: OnceLock<Arc<TelemetryHub>>,
+        }
+        impl SyncPolicy for HubGated {
+            fn label(&self, _n: usize) -> String {
+                "hub_gated".into()
+            }
+            fn explorer_plan(&self, total_steps: u64) -> ExplorerPlan {
+                ExplorerPlan::Batches(total_steps)
+            }
+            fn admit(&self, _batch: u64, _progress: Progress) -> bool {
+                match self.hub.get() {
+                    Some(hub) => hub.gauges().buffer_depth < 8.0,
+                    None => true,
+                }
+            }
+            fn publish_after(&self, _steps_done: u64) -> bool {
+                true
+            }
+            fn connect_telemetry(&self, hub: &Arc<TelemetryHub>) {
+                let _ = self.hub.set(Arc::clone(hub));
+            }
+        }
+
+        let policy = HubGated { hub: OnceLock::new() };
+        let hub = Arc::new(TelemetryHub::new(Duration::from_millis(1)));
+        assert!(policy.admit(0, Progress::default()), "unconnected policy admits");
+
+        policy.connect_telemetry(&hub);
+        hub.publish(Gauges { buffer_depth: 12.0, occupancy: 0.5, ..Default::default() });
+        assert!(!policy.admit(0, Progress::default()), "live gauge blocks admission");
+        assert_eq!(hub.samples(), 1, "publish counted");
+        assert_eq!(hub.gauges().occupancy, 0.5);
+
+        hub.publish(Gauges { buffer_depth: 3.0, ..Default::default() });
+        assert!(policy.admit(0, Progress::default()), "drained buffer re-admits");
+
+        // The default trait impl is a no-op: builtins stay gauge-blind.
+        let w = Windowed { interval: 1, offset: 0 };
+        w.connect_telemetry(&hub);
+        assert!(w.admit(0, at(0)));
     }
 
     #[test]

@@ -5,11 +5,13 @@
 //! same recorder, so async runs no longer drop trainer `compute_s` from
 //! the logs or weight-sync spans from the timeline.
 
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use crate::explorer::{EvalReport, RunnerStats};
+use crate::obs::{HistSnapshot, Histogram, Span, SpanKind, SpanRecorder, NO_REPLICA};
 use crate::service::ServiceSnapshot;
 use crate::trainer::{StepMetrics, Trainer};
 
@@ -47,7 +49,15 @@ pub struct ModeReport {
     pub snapshots: Vec<(u64, Vec<Vec<f32>>)>,
     pub final_eval: Option<EvalReport>,
     /// End-of-run rollout-service telemetry (service-backed runs only).
+    /// Carries queue-wait / rollout / prefill latency histograms, so
+    /// `report.service.unwrap().queue_wait.p50_p95_p99()` gives tails.
     pub service: Option<ServiceSnapshot>,
+    /// Trainer-side sample-wait latency distribution (seconds the
+    /// trainer blocked on the buffer per step).
+    pub sample_wait: HistSnapshot,
+    /// Where the Chrome trace-event file was written, when observability
+    /// was enabled and the run exported one.
+    pub trace_path: Option<PathBuf>,
 }
 
 impl ModeReport {
@@ -88,10 +98,25 @@ pub struct RunRecorder {
     compute_total: Mutex<f64>,
     sync_count: AtomicU64,
     max_version_lag: AtomicU64,
+    /// Trainer sample-wait distribution (p50/p95/p99 in the report).
+    sample_wait: Histogram,
+    /// Episode span sink; weight syncs land here as `weight_sync` spans
+    /// so the exported trace shows the stall alongside rollout activity.
+    obs: Option<Arc<SpanRecorder>>,
 }
 
 impl RunRecorder {
     pub fn new(monitor: Arc<Monitor>, origin: Instant) -> RunRecorder {
+        Self::with_observer(monitor, origin, None)
+    }
+
+    /// A recorder that additionally mirrors weight syncs into the span
+    /// recorder (observability enabled).
+    pub fn with_observer(
+        monitor: Arc<Monitor>,
+        origin: Instant,
+        obs: Option<Arc<SpanRecorder>>,
+    ) -> RunRecorder {
         RunRecorder {
             monitor,
             origin,
@@ -101,6 +126,8 @@ impl RunRecorder {
             compute_total: Mutex::new(0.0),
             sync_count: AtomicU64::new(0),
             max_version_lag: AtomicU64::new(0),
+            sample_wait: Histogram::new(),
+            obs,
         }
     }
 
@@ -119,6 +146,7 @@ impl RunRecorder {
     pub fn trainer_step(&self, index: u64, m: &StepMetrics, start: Instant, end: Instant) {
         self.span("trainer", "train", index, start, end);
         *self.compute_total.lock().unwrap() += m.compute_s;
+        self.sample_wait.observe(m.sample_wait_s);
         let mut logs: Vec<(String, f64)> = vec![
             ("reward".into(), m.mean_reward),
             ("response_len".into(), m.mean_response_len),
@@ -133,6 +161,16 @@ impl RunRecorder {
     pub fn weight_sync(&self, start: Instant, end: Instant) -> u64 {
         let count = self.sync_count.fetch_add(1, Ordering::SeqCst) + 1;
         self.span("trainer", "weight_sync", count, start, end);
+        if let Some(o) = &self.obs {
+            o.record(Span {
+                trace: 0,
+                kind: SpanKind::SyncStall,
+                replica: NO_REPLICA,
+                start_us: o.rel_us(start),
+                dur_us: end.saturating_duration_since(start).as_micros() as u64,
+                detail: count,
+            });
+        }
         count
     }
 
@@ -194,6 +232,8 @@ impl RunRecorder {
             snapshots: self.snapshots.into_inner().unwrap(),
             final_eval: None,
             service: None,
+            sample_wait: self.sample_wait.snapshot(),
+            trace_path: None,
         }
     }
 }
@@ -251,6 +291,124 @@ mod tests {
         rec.service(1, &snap);
         assert_eq!(monitor.series_values("service/occupancy"), vec![3.0]);
         assert_eq!(monitor.series("service/queued").len(), 1);
+    }
+
+    #[test]
+    fn timeline_stays_monotonic_across_consecutive_runs() {
+        // The session reuses one origin across `run()` calls, so a later
+        // run's recorder must place its spans after the earlier run's.
+        let origin = Instant::now();
+        let monitor = Arc::new(Monitor::in_memory());
+        let stats = RunnerStats::default();
+        let record = |rec: &RunRecorder| {
+            let t0 = Instant::now();
+            std::thread::sleep(Duration::from_millis(2));
+            let t1 = Instant::now();
+            rec.rollout(
+                &RolloutRecord {
+                    role: "explorer-0",
+                    batch: 0,
+                    stats: &stats,
+                    weight_version: 0,
+                    version_lag: 0,
+                },
+                t0,
+                t1,
+            );
+            rec.weight_sync(t0, t1);
+            rec.timeline.lock().unwrap().clone()
+        };
+        let first = record(&RunRecorder::new(Arc::clone(&monitor), origin));
+        std::thread::sleep(Duration::from_millis(2));
+        let second = record(&RunRecorder::new(Arc::clone(&monitor), origin));
+        let first_end = first.iter().map(|e| e.end_s).fold(0.0, f64::max);
+        for e in first.iter().chain(second.iter()) {
+            assert!(e.start_s >= 0.0 && e.end_s >= e.start_s, "span ordered: {e:?}");
+        }
+        for e in &second {
+            assert!(
+                e.start_s >= first_end,
+                "second run span at {} precedes first run end {first_end}",
+                e.start_s
+            );
+        }
+    }
+
+    #[test]
+    fn weight_sync_mirrors_into_span_recorder() {
+        let spans = Arc::new(SpanRecorder::new(16));
+        let rec = RunRecorder::with_observer(
+            Arc::new(Monitor::in_memory()),
+            Instant::now(),
+            Some(Arc::clone(&spans)),
+        );
+        let t0 = Instant::now();
+        std::thread::sleep(Duration::from_millis(2));
+        rec.weight_sync(t0, Instant::now());
+        let drained = spans.drain();
+        assert_eq!(drained.len(), 1);
+        assert_eq!(drained[0].kind, SpanKind::SyncStall);
+        assert_eq!(drained[0].replica, NO_REPLICA);
+        assert_eq!(drained[0].detail, 1, "detail carries the sync count");
+        assert!(drained[0].dur_us >= 1_000, "sleep visible: {}", drained[0].dur_us);
+    }
+
+    #[test]
+    fn trainer_step_feeds_sample_wait_histogram() {
+        let rec = RunRecorder::new(Arc::new(Monitor::in_memory()), Instant::now());
+        let now = Instant::now();
+        for (i, wait) in [0.010, 0.020, 0.040].iter().enumerate() {
+            let m = StepMetrics {
+                step: i as u64 + 1,
+                named: vec![],
+                mean_reward: 0.0,
+                mean_response_len: 0.0,
+                sample_wait_s: *wait,
+                compute_s: 0.001,
+            };
+            rec.trainer_step(m.step, &m, now, now);
+        }
+        let snap = rec.sample_wait.snapshot();
+        assert_eq!(snap.count, 3);
+        assert!((snap.sum_s - 0.070).abs() < 1e-9);
+        let (p50, _p95, p99) = snap.p50_p95_p99();
+        assert!(p50 > 0.0 && p99 >= p50);
+    }
+
+    #[test]
+    fn service_and_cache_telemetry_survive_into_mode_report() {
+        // Mimics the scheduler's `report.service = Some(svc.snapshot())`
+        // hand-off: histogram tails and cache counters stay readable on
+        // the final report.
+        let metrics = crate::service::ServiceMetrics::new();
+        for ms in [5u64, 10, 20, 40] {
+            metrics.note_queue_wait(Duration::from_millis(ms));
+            metrics.note_rollout(Duration::from_millis(ms * 3));
+        }
+        let mut snap = ServiceSnapshot {
+            sessions: 2,
+            rows: 6,
+            queue_wait: metrics.queue_wait.snapshot(),
+            rollout: metrics.rollout.snapshot(),
+            ..Default::default()
+        };
+        snap.cache = Some(crate::cache::CacheSnapshot {
+            lookups: 10,
+            hits: 7,
+            misses: 3,
+            parked: 2,
+            ..Default::default()
+        });
+        let report = ModeReport { service: Some(snap), ..Default::default() };
+        let svc = report.service.as_ref().unwrap();
+        let (p50, p95, p99) = svc.queue_wait.p50_p95_p99();
+        assert!(p50 > 0.0 && p95 >= p50 && p99 >= p95, "{p50} {p95} {p99}");
+        assert_eq!(svc.rollout.count, 4);
+        let cache = svc.cache.as_ref().unwrap();
+        assert!((cache.hit_rate() - 0.7).abs() < 1e-12);
+        assert_eq!(cache.parked, 2);
+        assert_eq!(report.sample_wait.count, 0, "no trainer steps recorded");
+        assert!(report.trace_path.is_none());
     }
 
     #[test]

@@ -23,6 +23,7 @@ use crate::explorer::{
     SamplingArgs, WorkflowRegistry,
 };
 use crate::model::{ParamStore, SyncCtx, WeightSync, WeightSyncRegistry};
+use crate::obs::{write_trace, Gauges, SpanRecorder, TelemetryHub};
 use crate::runtime::{Manifest, ModelEngine, RuntimeClient};
 use crate::service::RolloutService;
 use crate::tokenizer::Tokenizer;
@@ -146,6 +147,14 @@ pub struct RftSession {
     pub service: Option<Arc<RolloutService>>,
     pub task_source: Arc<dyn TaskSource>,
     pub trainer: Option<Trainer>,
+    /// Per-episode span sink when `observability.enabled` — threaded
+    /// into the service, replicas, engine, and run recorder; drained
+    /// into a Chrome trace-event file at the end of each run.
+    pub observer: Option<Arc<SpanRecorder>>,
+    /// Live gauge hub when `observability.enabled` — the scheduler
+    /// publishes samples on the configured cadence and policies read
+    /// them via [`SyncPolicy::connect_telemetry`].
+    pub telemetry: Option<Arc<TelemetryHub>>,
     origin: Instant,
 }
 
@@ -185,6 +194,21 @@ impl RftSession {
         let tokenizer = Arc::new(Tokenizer::new());
         let monitor = Arc::new(Monitor::new(cfg.monitor_dir.clone())?);
 
+        // observability plane (DESIGN.md §8): one span recorder + one
+        // gauge hub per session when enabled, nothing at all otherwise
+        let obs_cfg = cfg.observability.to_obs_config();
+        let (observer, telemetry) = if obs_cfg.enabled {
+            (
+                Some(Arc::new(SpanRecorder::new(obs_cfg.ring_capacity))),
+                Some(Arc::new(TelemetryHub::new(obs_cfg.sample_every))),
+            )
+        } else {
+            (None, None)
+        };
+        if let Some(spans) = &observer {
+            engine.set_observer(Arc::clone(spans));
+        }
+
         // both sides start from identical weights
         let trainer_params = ParamStore::init(&engine.model, cfg.seed)?;
         let init_snapshot = trainer_params.snapshot()?;
@@ -222,6 +246,7 @@ impl RftSession {
             max_new_tokens: cfg.max_new_tokens,
             seed: cfg.seed,
             session: None,
+            trace: 0,
         };
         let ex_cfg = |i: usize| ExplorerConfig {
             runner: RunnerConfig {
@@ -245,9 +270,10 @@ impl RftSession {
                 let params = ParamStore::from_snapshot(&engine.model, &init_snapshot)?;
                 engines.push(Arc::new(GenerationEngine::new(Arc::clone(&engine), params)));
             }
-            let svc = Arc::new(RolloutService::over_engines(
+            let svc = Arc::new(RolloutService::over_engines_obs(
                 engines,
                 cfg.service.to_service_config(),
+                observer.clone(),
             )?);
             for i in 0..cfg.explorer_count {
                 explorers.push(Arc::new(Explorer::with_endpoint(
@@ -316,6 +342,8 @@ impl RftSession {
             service,
             task_source,
             trainer: Some(trainer),
+            observer,
+            telemetry,
             origin: Instant::now(),
         })
     }
@@ -344,9 +372,41 @@ impl RftSession {
             explorer.reset_utilization();
         }
 
-        let recorder = Arc::new(RunRecorder::new(Arc::clone(&self.monitor), self.origin));
+        let recorder = Arc::new(RunRecorder::with_observer(
+            Arc::clone(&self.monitor),
+            self.origin,
+            self.observer.clone(),
+        ));
         let state = Arc::new(WatchCell::new(RunState::default()));
         let cancel = CancellationToken::new();
+
+        // hand the live gauge hub to the policy (no-op default) and
+        // prepare the cadence-gated publisher the trainer loop drives
+        if let Some(hub) = &self.telemetry {
+            policy.connect_telemetry(hub);
+        }
+        let publish_gauges = |depth: u64| {
+            let Some(hub) = &self.telemetry else { return };
+            if !hub.due(Instant::now()) {
+                return;
+            }
+            let mut g = Gauges { buffer_depth: depth as f64, ..Default::default() };
+            if let Some(svc) = &self.service {
+                let s = svc.snapshot();
+                g.queued = s.queued as f64;
+                g.inflight = s.inflight as f64;
+                g.occupancy = s.occupancy();
+                g.quarantined = s.quarantined() as f64;
+                g.queue_wait_p95_s = s.queue_wait.percentile(0.95);
+                g.weight_version =
+                    s.replicas.iter().map(|r| r.weight_version).min().unwrap_or(0) as f64;
+                if let Some(c) = &s.cache {
+                    g.cache_hit_rate = c.hit_rate();
+                    g.parked = c.parked as f64;
+                }
+            }
+            hub.publish(g);
+        };
 
         // ---- explorer drivers (scheduler pool, one worker each) ----
         let mut pool: Option<ThreadPool> = None;
@@ -410,6 +470,7 @@ impl RftSession {
                     st.progress.trainer_steps += 1;
                     st.progress.buffer_depth = depth;
                 });
+                publish_gauges(depth);
                 if cfg.eval_every > 0 && (t + 1) % cfg.eval_every == 0 {
                     recorder.snapshot(t + 1, trainer.params().snapshot()?);
                 }
@@ -463,6 +524,24 @@ impl RftSession {
             self.client.total_exec_seconds(),
         );
         report.service = final_service;
+        // drain the span ring into a Chrome trace-event file (viewable
+        // in chrome://tracing / Perfetto, summarized by `trinity trace`)
+        if let Some(spans) = &self.observer {
+            let drained = spans.drain();
+            let dest = cfg
+                .observability
+                .to_obs_config()
+                .trace_path
+                .or_else(|| cfg.monitor_dir.as_ref().map(|d| d.join("trace.json")));
+            if let Some(dest) = dest {
+                match write_trace(&dest, &drained) {
+                    Ok(()) => report.trace_path = Some(dest),
+                    Err(e) => {
+                        crate::log_warn!("scheduler", "trace export to {dest:?} failed: {e:#}")
+                    }
+                }
+            }
+        }
         self.trainer = Some(trainer);
         Ok(report)
     }

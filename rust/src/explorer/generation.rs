@@ -30,6 +30,10 @@ pub struct SamplingArgs {
     /// that served the prefix (service-side; direct engine handles and
     /// mocks ignore it, so tagging never changes untagged behavior).
     pub session: Option<u64>,
+    /// Episode trace id for span recording (0 = untraced).  Sampling
+    /// never reads it; the service stamps it onto row jobs so every
+    /// span of one episode shares a timeline.
+    pub trace: u64,
 }
 
 impl Default for SamplingArgs {
@@ -41,6 +45,7 @@ impl Default for SamplingArgs {
             max_new_tokens: 16,
             seed: 0,
             session: None,
+            trace: 0,
         }
     }
 }

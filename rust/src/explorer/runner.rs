@@ -110,6 +110,15 @@ impl WorkflowRunner {
                                 ^ (i as u64) << 20
                                 ^ (attempt as u64) << 40
                                 ^ sampling.seed,
+                            // single-turn episodes get a per-task trace
+                            // id (| 1 keeps it nonzero); multi-turn
+                            // workflows override it with their session
+                            // key inside chat_turn
+                            trace: if sampling.trace == 0 {
+                                task.group_id().wrapping_add(i as u64) | 1
+                            } else {
+                                sampling.trace
+                            },
                             ..sampling.clone()
                         },
                         rng: Rng::with_stream(cfg.seed.wrapping_add(i as u64), attempt as u64 | 1),

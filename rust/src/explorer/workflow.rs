@@ -67,7 +67,14 @@ impl<'a> WorkflowCtx<'a> {
     /// without a cache (direct engine handles, mocks) ignore the tag,
     /// so opting in never changes untagged behavior.
     pub fn chat_turn(&self, session_key: u64, prompt: &[i32]) -> Result<GenOutput> {
-        let args = SamplingArgs { session: Some(session_key), ..self.sampling.clone() };
+        // the session key doubles as the episode's trace id: every span
+        // of this episode (across turns, replicas and retries) shares
+        // one timeline when observability is on
+        let args = SamplingArgs {
+            session: Some(session_key),
+            trace: session_key,
+            ..self.sampling.clone()
+        };
         let mut outs = self.model.chat(prompt, 1, &args)?;
         anyhow::ensure!(!outs.is_empty(), "model returned no output for turn");
         Ok(outs.remove(0))

@@ -27,6 +27,9 @@
 //!   prefix trie, parked KV sessions resumed across the turns of one
 //!   workflow episode, and affinity routing to the replica holding the
 //!   prefix (DESIGN.md §7).
+//! * [`obs`] — the observability plane: lock-free span recorder with
+//!   per-episode trace IDs, fixed-bucket latency histograms, the
+//!   readable telemetry hub, and Chrome-trace export (DESIGN.md §8).
 //! * [`trainer`] — the composable algorithm API: specs assembled from
 //!   advantage fns, loss specs, grouping policies and linked sample
 //!   strategies, registered in the global registry
@@ -49,6 +52,7 @@ pub mod envs;
 pub mod exec;
 pub mod explorer;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod service;
 pub mod tokenizer;

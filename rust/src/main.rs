@@ -5,6 +5,7 @@
 //! trinity run        --config configs/gsm8k_grpo.yaml
 //! trinity bench      --preset tiny --tiers math500s,amcs --tasks 16 --k 4
 //! trinity opmd       --steps 400 --group 8
+//! trinity trace      --file runs/demo/trace.json
 //! trinity algorithms list
 //! trinity info
 //! ```
@@ -59,6 +60,12 @@ fn cli() -> Cli {
                 arg_default("preset", "model preset", "tiny"),
                 arg_default("iters", "iterations per artifact", "30"),
             ],
+        )
+        .command(
+            "trace",
+            "summarize a trace.json written by a run with [observability] enabled \
+             (open the same file in chrome://tracing or Perfetto for the visual timeline)",
+            vec![arg("file", "path to the trace.json to summarize")],
         )
         .command(
             "algorithms",
@@ -148,6 +155,24 @@ fn cmd_run(m: &trinity_rft::util::cli::Matches) -> Result<()> {
             svc.failed,
             svc.quarantined()
         );
+        if svc.queue_wait.count > 0 {
+            let (p50, p95, p99) = svc.queue_wait.p50_p95_p99();
+            println!(
+                "queue wait      p50 {:.1}ms / p95 {:.1}ms / p99 {:.1}ms",
+                p50 * 1e3,
+                p95 * 1e3,
+                p99 * 1e3
+            );
+        }
+        if svc.rollout.count > 0 {
+            let (p50, p95, p99) = svc.rollout.p50_p95_p99();
+            println!(
+                "rollout latency p50 {:.1}ms / p95 {:.1}ms / p99 {:.1}ms",
+                p50 * 1e3,
+                p95 * 1e3,
+                p99 * 1e3
+            );
+        }
         if let Some(cache) = &svc.cache {
             println!(
                 "cache           hit rate {:.0}%, {} prefix tokens reused, \
@@ -161,12 +186,34 @@ fn cmd_run(m: &trinity_rft::util::cli::Matches) -> Result<()> {
             );
         }
     }
+    if report.sample_wait.count > 0 {
+        let (p50, p95, p99) = report.sample_wait.p50_p95_p99();
+        println!(
+            "sample wait     p50 {:.1}ms / p95 {:.1}ms / p99 {:.1}ms",
+            p50 * 1e3,
+            p95 * 1e3,
+            p99 * 1e3
+        );
+    }
+    if let Some(path) = &report.trace_path {
+        println!("trace           {} (inspect with `trinity trace --file {0}`)", path.display());
+    }
     let rewards = report.reward_series();
     if !rewards.is_empty() {
         let s = timeseries::summarize(&rewards);
         println!("reward          {}", timeseries::fmt_mean_std(&s));
     }
     session.monitor.flush_csv()?;
+    Ok(())
+}
+
+fn cmd_trace(m: &trinity_rft::util::cli::Matches) -> Result<()> {
+    use trinity_rft::obs::{load_trace, summarize_trace};
+    let path = m
+        .get("file")
+        .ok_or_else(|| anyhow::anyhow!("--file <trace.json> required (see `trinity run` with [observability] enabled)"))?;
+    let doc = load_trace(std::path::Path::new(&path))?;
+    print!("{}", summarize_trace(&doc)?);
     Ok(())
 }
 
@@ -340,6 +387,7 @@ fn main() {
     };
     let result = match matches.command.as_str() {
         "run" => cmd_run(&matches),
+        "trace" => cmd_trace(&matches),
         "bench" => cmd_bench(&matches),
         "opmd" => cmd_opmd(&matches),
         "perf" => cmd_perf(&matches),

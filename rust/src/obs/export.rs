@@ -1,0 +1,224 @@
+//! Trace export (DESIGN.md §8): Chrome trace-event JSON plus the text
+//! summary behind `trinity trace`.
+//!
+//! The export maps the span model onto the trace-event format that
+//! `chrome://tracing` and Perfetto load directly:
+//!
+//! * **pid** is the lane — 0 = coordinator, `1 + replica` = a serving
+//!   replica, [`DEVICE_LANE`] = the PJRT device;
+//! * **tid** is the episode trace id, so one episode reads as one row
+//!   per lane: queue wait → prefill/resume → decode per turn;
+//! * complete events (`ph: "X"`) carry `ts`/`dur` in microseconds and
+//!   the span's kind-specific `detail` in `args`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Value;
+
+use super::span::{Span, SpanKind, NO_REPLICA};
+
+/// The pid under which device-lane spans render.
+pub const DEVICE_LANE: u64 = 999;
+
+fn lane(span: &Span) -> u64 {
+    match span.kind {
+        SpanKind::DevicePrefill | SpanKind::DeviceDecode | SpanKind::DeviceTrain => DEVICE_LANE,
+        _ if span.replica == NO_REPLICA => 0,
+        _ => 1 + span.replica as u64,
+    }
+}
+
+fn lane_name(pid: u64) -> String {
+    match pid {
+        0 => "coordinator".to_string(),
+        DEVICE_LANE => "device".to_string(),
+        n => format!("replica-{}", n - 1),
+    }
+}
+
+fn category(kind: SpanKind) -> &'static str {
+    match kind {
+        SpanKind::QueueWait | SpanKind::Retry | SpanKind::Reroute => "service",
+        SpanKind::Prefill | SpanKind::Resume | SpanKind::Decode => "replica",
+        SpanKind::SyncStall => "sync",
+        SpanKind::DevicePrefill | SpanKind::DeviceDecode | SpanKind::DeviceTrain => "device",
+    }
+}
+
+/// Render spans as a Chrome trace-event JSON document.
+pub fn chrome_trace(spans: &[Span]) -> Value {
+    let mut events = Vec::with_capacity(spans.len() + 4);
+    let mut lanes: Vec<u64> = spans.iter().map(lane).collect();
+    lanes.sort_unstable();
+    lanes.dedup();
+    for pid in lanes {
+        events.push(Value::obj(vec![
+            ("ph", Value::str("M")),
+            ("name", Value::str("process_name")),
+            ("pid", Value::int(pid as i64)),
+            ("args", Value::obj(vec![("name", Value::str(lane_name(pid)))])),
+        ]));
+    }
+    for s in spans {
+        events.push(Value::obj(vec![
+            ("name", Value::str(s.kind.as_str())),
+            ("cat", Value::str(category(s.kind))),
+            ("ph", Value::str("X")),
+            ("ts", Value::int(s.start_us as i64)),
+            ("dur", Value::int(s.dur_us as i64)),
+            ("pid", Value::int(lane(s) as i64)),
+            ("tid", Value::int(s.trace as i64)),
+            ("args", Value::obj(vec![
+                ("detail", Value::int(s.detail as i64)),
+                ("replica", Value::int(s.replica as i64)),
+            ])),
+        ]));
+    }
+    Value::obj(vec![("traceEvents", Value::arr(events))])
+}
+
+/// Write `trace.json` for chrome://tracing / Perfetto.
+pub fn write_trace(path: &Path, spans: &[Span]) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+        }
+    }
+    std::fs::write(path, chrome_trace(spans).to_string_pretty())
+        .with_context(|| format!("writing trace to {path:?}"))
+}
+
+/// Load a trace file previously written by [`write_trace`].
+pub fn load_trace(path: &Path) -> Result<Value> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("reading trace {path:?}"))?;
+    Value::parse(&text).with_context(|| format!("parsing trace {path:?}"))
+}
+
+/// Summarize a trace document: per-kind counts and total/mean duration,
+/// plus the episode count — the body of `trinity trace`.
+pub fn summarize_trace(doc: &Value) -> Result<String> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(Value::as_array)
+        .context("not a trace: missing traceEvents")?;
+    // name -> (count, total_us, max_us)
+    let mut kinds: Vec<(String, u64, u64, u64)> = vec![];
+    let mut episodes: Vec<i64> = vec![];
+    let mut span_events = 0u64;
+    for e in events {
+        if e.get("ph").and_then(Value::as_str) != Some("X") {
+            continue;
+        }
+        span_events += 1;
+        let name = e.get("name").and_then(Value::as_str).unwrap_or("?").to_string();
+        let dur = e.get("dur").and_then(Value::as_i64).unwrap_or(0).max(0) as u64;
+        let tid = e.get("tid").and_then(Value::as_i64).unwrap_or(0);
+        if tid != 0 {
+            episodes.push(tid);
+        }
+        match kinds.iter_mut().find(|(n, ..)| *n == name) {
+            Some((_, c, total, max)) => {
+                *c += 1;
+                *total += dur;
+                *max = (*max).max(dur);
+            }
+            None => kinds.push((name, 1, dur, dur)),
+        }
+    }
+    episodes.sort_unstable();
+    episodes.dedup();
+    kinds.sort_by(|a, b| b.2.cmp(&a.2));
+    let mut out = format!(
+        "{span_events} spans across {} episode(s)\n\n{:<16} {:>8} {:>12} {:>10} {:>10}\n",
+        episodes.len(),
+        "kind",
+        "count",
+        "total (ms)",
+        "mean (ms)",
+        "max (ms)"
+    );
+    for (name, count, total, max) in &kinds {
+        out.push_str(&format!(
+            "{:<16} {:>8} {:>12.3} {:>10.3} {:>10.3}\n",
+            name,
+            count,
+            *total as f64 / 1e3,
+            *total as f64 / 1e3 / *count as f64,
+            *max as f64 / 1e3,
+        ));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spans() -> Vec<Span> {
+        vec![
+            Span { trace: 7, kind: SpanKind::QueueWait, replica: 0, start_us: 0, dur_us: 50, detail: 0 },
+            Span { trace: 7, kind: SpanKind::Prefill, replica: 0, start_us: 50, dur_us: 200, detail: 12 },
+            Span { trace: 7, kind: SpanKind::Decode, replica: 0, start_us: 250, dur_us: 400, detail: 8 },
+            Span { trace: 9, kind: SpanKind::Resume, replica: 1, start_us: 300, dur_us: 20, detail: 30 },
+            Span { trace: 0, kind: SpanKind::SyncStall, replica: NO_REPLICA, start_us: 100, dur_us: 90, detail: 0 },
+            Span { trace: 0, kind: SpanKind::DeviceDecode, replica: NO_REPLICA, start_us: 260, dur_us: 10, detail: 0 },
+        ]
+    }
+
+    #[test]
+    fn chrome_trace_shape_and_lanes() {
+        let doc = chrome_trace(&spans());
+        let events = doc.get("traceEvents").and_then(Value::as_array).unwrap();
+        let metas: Vec<_> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Value::as_str) == Some("M"))
+            .collect();
+        // coordinator + replica-0 + replica-1 + device lanes
+        assert_eq!(metas.len(), 4);
+        let xs: Vec<_> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Value::as_str) == Some("X"))
+            .collect();
+        assert_eq!(xs.len(), 6);
+        for e in &xs {
+            assert!(e.get("ts").and_then(Value::as_i64).is_some());
+            assert!(e.get("dur").and_then(Value::as_i64).is_some());
+            assert!(e.get("pid").and_then(Value::as_i64).is_some());
+            assert!(e.get("tid").and_then(Value::as_i64).is_some());
+        }
+        // lanes: sync stall on the coordinator, decode on replica-0,
+        // resume on replica-1, device decode on the device lane
+        let pid_of = |name: &str| {
+            xs.iter()
+                .find(|e| e.get("name").and_then(Value::as_str) == Some(name))
+                .and_then(|e| e.get("pid"))
+                .and_then(Value::as_i64)
+                .unwrap()
+        };
+        assert_eq!(pid_of("weight_sync"), 0);
+        assert_eq!(pid_of("decode"), 1);
+        assert_eq!(pid_of("resume"), 2);
+        assert_eq!(pid_of("device_decode"), DEVICE_LANE as i64);
+    }
+
+    #[test]
+    fn write_load_summarize_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("trft_trace_{}", std::process::id()));
+        let path = dir.join("trace.json");
+        write_trace(&path, &spans()).unwrap();
+        let doc = load_trace(&path).unwrap();
+        let summary = summarize_trace(&doc).unwrap();
+        assert!(summary.contains("6 spans across 2 episode(s)"), "{summary}");
+        assert!(summary.contains("decode"), "{summary}");
+        assert!(summary.contains("queue_wait"), "{summary}");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn summarize_rejects_non_traces() {
+        assert!(summarize_trace(&Value::obj(vec![("x", Value::int(1))])).is_err());
+    }
+}

@@ -1,0 +1,220 @@
+//! Fixed-bucket latency histograms (DESIGN.md §8): lock-free to
+//! observe, mergeable to aggregate, and cheap to snapshot.
+//!
+//! Buckets are log-spaced powers of two starting at 1µs: bucket `i`
+//! holds observations in `(2^(i-1)µs, 2^i µs]` (bucket 0 covers
+//! everything at or below 1µs, the last bucket is open-ended at ~36
+//! minutes).  Fixed log-spaced buckets keep `observe` to one atomic add,
+//! make snapshots mergeable across replicas/runs by plain addition, and
+//! bound the percentile error to the ×2 bucket width — the standard
+//! trade for serving telemetry, replacing the mean-only accounting that
+//! hid tail latency.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bucket count: 32 buckets × powers of two from 1µs ≈ 36-minute ceiling.
+/// (Also the largest array length with a derived `Default`.)
+pub const BUCKETS: usize = 32;
+
+const US_PER_SEC: f64 = 1e6;
+
+/// Upper bound of bucket `i`, in seconds.
+fn bucket_upper_s(i: usize) -> f64 {
+    (1u64 << i) as f64 / US_PER_SEC
+}
+
+fn bucket_of(secs: f64) -> usize {
+    if secs.is_nan() || secs <= 0.0 {
+        return 0;
+    }
+    let us = (secs * US_PER_SEC).ceil() as u64;
+    (64 - us.max(1).leading_zeros() as usize - 1 + if us.is_power_of_two() { 0 } else { 1 })
+        .min(BUCKETS - 1)
+}
+
+/// Live histogram: atomic bucket counters + count + sum.
+#[derive(Debug, Default)]
+pub struct Histogram {
+    counts: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram::default()
+    }
+
+    /// Record one observation in seconds (negatives clamp to bucket 0).
+    pub fn observe(&self, secs: f64) {
+        self.counts[bucket_of(secs)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_us.fetch_add((secs.max(0.0) * US_PER_SEC) as u64, Ordering::Relaxed);
+    }
+
+    pub fn observe_duration(&self, d: std::time::Duration) {
+        self.observe(d.as_secs_f64());
+    }
+
+    pub fn snapshot(&self) -> HistSnapshot {
+        let mut counts = [0u64; BUCKETS];
+        for (out, c) in counts.iter_mut().zip(self.counts.iter()) {
+            *out = c.load(Ordering::Relaxed);
+        }
+        HistSnapshot {
+            counts,
+            count: self.count.load(Ordering::Relaxed),
+            sum_s: self.sum_us.load(Ordering::Relaxed) as f64 / US_PER_SEC,
+        }
+    }
+}
+
+/// Immutable histogram state: mergeable by addition, queryable for
+/// percentiles.  Rides inside `ServiceSnapshot` and `ModeReport`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct HistSnapshot {
+    pub counts: [u64; BUCKETS],
+    pub count: u64,
+    pub sum_s: f64,
+}
+
+impl HistSnapshot {
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_s / self.count as f64
+        }
+    }
+
+    /// The `q`-quantile (`0.0..=1.0`) in seconds, linearly interpolated
+    /// within the containing bucket; 0 when empty.
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (q.clamp(0.0, 1.0) * self.count as f64).max(1.0);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c == 0 {
+                continue;
+            }
+            if seen as f64 + c as f64 >= rank {
+                let lower = if i == 0 { 0.0 } else { bucket_upper_s(i - 1) };
+                let frac = (rank - seen as f64) / c as f64;
+                return lower + frac * (bucket_upper_s(i) - lower);
+            }
+            seen += c;
+        }
+        bucket_upper_s(BUCKETS - 1)
+    }
+
+    /// Accumulate another snapshot (replica/run aggregation).
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_s += other.sum_s;
+    }
+
+    /// The (p50, p95, p99) triple every report line prints.
+    pub fn p50_p95_p99(&self) -> (f64, f64, f64) {
+        (self.percentile(0.50), self.percentile(0.95), self.percentile(0.99))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_log_spaced_and_clamped() {
+        assert_eq!(bucket_of(0.0), 0);
+        assert_eq!(bucket_of(-1.0), 0);
+        assert_eq!(bucket_of(1e-6), 0); // exactly 1µs
+        assert_eq!(bucket_of(1.5e-6), 1);
+        assert_eq!(bucket_of(2e-6), 1);
+        assert_eq!(bucket_of(3e-6), 2);
+        assert_eq!(bucket_of(1e9), BUCKETS - 1); // open-ended top
+        // monotone in the observation
+        let mut last = 0;
+        for exp in 0..40 {
+            let b = bucket_of(1e-6 * 2f64.powi(exp));
+            assert!(b >= last);
+            last = b;
+        }
+    }
+
+    #[test]
+    fn observe_count_sum_mean() {
+        let h = Histogram::new();
+        h.observe(0.010);
+        h.observe(0.030);
+        let s = h.snapshot();
+        assert_eq!(s.count, 2);
+        assert!((s.mean() - 0.020).abs() < 1e-6, "{}", s.mean());
+        assert!(!s.is_empty());
+        assert!(HistSnapshot::default().is_empty());
+        assert_eq!(HistSnapshot::default().percentile(0.5), 0.0);
+    }
+
+    #[test]
+    fn percentiles_bracket_the_data() {
+        let h = Histogram::new();
+        for _ in 0..95 {
+            h.observe(0.001);
+        }
+        for _ in 0..5 {
+            h.observe(0.500);
+        }
+        let s = h.snapshot();
+        let p50 = s.percentile(0.50);
+        let p99 = s.percentile(0.99);
+        // p50 lands in the ~1ms bucket, p99 in the ~500ms bucket
+        assert!(p50 > 0.0004 && p50 < 0.002, "p50={p50}");
+        assert!(p99 > 0.25 && p99 <= 0.55, "p99={p99}");
+        assert!(s.percentile(0.0) <= p50 && p50 <= p99);
+        assert!(p99 <= s.percentile(1.0));
+    }
+
+    #[test]
+    fn merge_is_addition() {
+        let a = Histogram::new();
+        let b = Histogram::new();
+        for _ in 0..10 {
+            a.observe(0.002);
+            b.observe(0.200);
+        }
+        let mut m = a.snapshot();
+        m.merge(&b.snapshot());
+        assert_eq!(m.count, 20);
+        assert!((m.sum_s - (10.0 * 0.002 + 10.0 * 0.200)).abs() < 1e-3);
+        // the merged p95 reflects the slow half
+        assert!(m.percentile(0.95) > 0.1, "{}", m.percentile(0.95));
+        let (p50, p95, p99) = m.p50_p95_p99();
+        assert!(p50 <= p95 && p95 <= p99);
+    }
+
+    #[test]
+    fn concurrent_observes_all_land() {
+        let h = std::sync::Arc::new(Histogram::new());
+        let mut handles = vec![];
+        for _ in 0..4 {
+            let h = std::sync::Arc::clone(&h);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000 {
+                    h.observe(1e-5 * (i % 7 + 1) as f64);
+                }
+            }));
+        }
+        for hd in handles {
+            hd.join().unwrap();
+        }
+        assert_eq!(h.snapshot().count, 4000);
+    }
+}

@@ -1,0 +1,197 @@
+//! The telemetry hub (DESIGN.md §8): live service/cache/buffer gauges
+//! made *readable* by `SyncPolicy` and the scheduler.
+//!
+//! Before this, serving telemetry was write-only — counters snapshotted
+//! at publish boundaries, invisible to admission decisions.  The
+//! [`TelemetryHub`] closes the loop: the scheduler publishes a
+//! [`Gauges`] sample on a cadence (see [`TelemetryHub::due`]), and any
+//! policy holding the hub reads the latest sample lock-free from its
+//! `admit` / `publish_after` hooks.  Gauges are stored as f64 bit
+//! patterns in atomics, so readers never block a publisher.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// One gauge sample: the live control-plane view a policy can act on.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Gauges {
+    /// Seconds since the hub was created when this sample was taken.
+    pub at_s: f64,
+    /// Requests waiting in service queues.
+    pub queued: f64,
+    /// Requests being served right now.
+    pub inflight: f64,
+    /// Rows per session (continuous-batching packing efficiency).
+    pub occupancy: f64,
+    /// Quarantined replicas.
+    pub quarantined: f64,
+    /// Queue-wait p95, seconds (tail pressure, not the mean).
+    pub queue_wait_p95_s: f64,
+    /// Prefix-cache hit rate in `[0, 1]` (0 when the cache is off).
+    pub cache_hit_rate: f64,
+    /// Parked KV sessions across replicas.
+    pub parked: f64,
+    /// Ready experiences sitting in the buffer.
+    pub buffer_depth: f64,
+    /// Minimum weight version across serving replicas.
+    pub weight_version: f64,
+}
+
+macro_rules! gauge_fields {
+    ($($field:ident),* $(,)?) => {
+        /// Lock-free gauge store: one atomic f64 cell per field.
+        #[derive(Debug)]
+        struct Cells {
+            $($field: AtomicU64,)*
+        }
+
+        impl Cells {
+            fn new() -> Cells {
+                Cells { $($field: AtomicU64::new(0),)* }
+            }
+            fn store(&self, g: &Gauges) {
+                $(self.$field.store(g.$field.to_bits(), Ordering::Relaxed);)*
+            }
+            fn load(&self) -> Gauges {
+                Gauges { $($field: f64::from_bits(self.$field.load(Ordering::Relaxed)),)* }
+            }
+        }
+    };
+}
+
+gauge_fields!(
+    at_s,
+    queued,
+    inflight,
+    occupancy,
+    quarantined,
+    queue_wait_p95_s,
+    cache_hit_rate,
+    parked,
+    buffer_depth,
+    weight_version,
+);
+
+pub struct TelemetryHub {
+    origin: Instant,
+    cadence_us: u64,
+    /// Origin-relative µs of the last `due` grant; `u64::MAX` = never.
+    last_sample_us: AtomicU64,
+    samples: AtomicU64,
+    cells: Cells,
+}
+
+impl TelemetryHub {
+    /// A hub whose [`due`](Self::due) gate opens every `sample_every`.
+    pub fn new(sample_every: Duration) -> TelemetryHub {
+        TelemetryHub {
+            origin: Instant::now(),
+            cadence_us: sample_every.as_micros().max(1) as u64,
+            last_sample_us: AtomicU64::new(u64::MAX),
+            samples: AtomicU64::new(0),
+            cells: Cells::new(),
+        }
+    }
+
+    /// Publish a gauge sample (any thread; readers never block).
+    /// `at_s` is stamped by the hub.
+    pub fn publish(&self, mut g: Gauges) {
+        g.at_s = self.origin.elapsed().as_secs_f64();
+        self.cells.store(&g);
+        self.samples.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// The latest published sample (all zeros before the first publish).
+    pub fn gauges(&self) -> Gauges {
+        self.cells.load()
+    }
+
+    /// Samples published so far.
+    pub fn samples(&self) -> u64 {
+        self.samples.load(Ordering::Relaxed)
+    }
+
+    /// Cadence gate: returns true at most once per `sample_every`,
+    /// racing callers resolved by CAS — exactly one wins each window.
+    /// The first call always passes.
+    pub fn due(&self, now: Instant) -> bool {
+        let rel = now.saturating_duration_since(self.origin).as_micros() as u64;
+        loop {
+            let last = self.last_sample_us.load(Ordering::Relaxed);
+            if last != u64::MAX && rel < last.saturating_add(self.cadence_us) {
+                return false;
+            }
+            if self
+                .last_sample_us
+                .compare_exchange(last, rel, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                return true;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn publish_then_read_roundtrips() {
+        let hub = TelemetryHub::new(Duration::from_millis(100));
+        assert_eq!(hub.gauges(), Gauges::default());
+        assert_eq!(hub.samples(), 0);
+        hub.publish(Gauges {
+            queued: 7.0,
+            inflight: 3.0,
+            cache_hit_rate: 0.5,
+            queue_wait_p95_s: 0.02,
+            ..Default::default()
+        });
+        let g = hub.gauges();
+        assert_eq!(g.queued, 7.0);
+        assert_eq!(g.inflight, 3.0);
+        assert_eq!(g.cache_hit_rate, 0.5);
+        assert!((g.queue_wait_p95_s - 0.02).abs() < 1e-12);
+        assert!(g.at_s >= 0.0);
+        assert_eq!(hub.samples(), 1);
+    }
+
+    #[test]
+    fn due_gates_on_cadence() {
+        let hub = TelemetryHub::new(Duration::from_secs(3600));
+        let now = Instant::now();
+        assert!(hub.due(now), "first sample always due");
+        assert!(!hub.due(now), "same instant gated");
+        assert!(!hub.due(now + Duration::from_secs(1)), "inside the window");
+        assert!(hub.due(now + Duration::from_secs(7200)), "past the window");
+    }
+
+    #[test]
+    fn due_fast_cadence_reopens() {
+        let hub = TelemetryHub::new(Duration::from_micros(1));
+        let now = Instant::now();
+        assert!(hub.due(now));
+        assert!(hub.due(now + Duration::from_millis(5)));
+    }
+
+    #[test]
+    fn concurrent_readers_see_a_consistent_latest_write() {
+        let hub = std::sync::Arc::new(TelemetryHub::new(Duration::from_millis(1)));
+        let w = {
+            let hub = std::sync::Arc::clone(&hub);
+            std::thread::spawn(move || {
+                for i in 0..2000u64 {
+                    hub.publish(Gauges { queued: i as f64, ..Default::default() });
+                }
+            })
+        };
+        for _ in 0..2000 {
+            let g = hub.gauges();
+            assert!(g.queued >= 0.0 && g.queued < 2000.0);
+        }
+        w.join().unwrap();
+        assert_eq!(hub.gauges().queued, 1999.0);
+        assert_eq!(hub.samples(), 2000);
+    }
+}

@@ -1,0 +1,95 @@
+//! Observability plane (DESIGN.md §8): end-to-end tracing and metrics
+//! for the layered serving stack.
+//!
+//! Three read paths over one write path:
+//!
+//! * [`span`] — the lock-free [`SpanRecorder`]: per-episode trace IDs
+//!   threaded from `WorkflowCtx::chat_turn` through `SamplingArgs` →
+//!   service jobs → replica serve/resume → engine prefill/decode, so a
+//!   run can answer "where did this episode's latency go?".
+//! * [`hist`] — fixed-bucket latency [`Histogram`]s (p50/p95/p99,
+//!   mergeable) replacing mean-only accounting for queue wait, rollout
+//!   latency, sample wait and per-turn prefill.
+//! * [`hub`] — the [`TelemetryHub`]: live gauges sampled on a cadence
+//!   and readable by `SyncPolicy` / the scheduler (the adaptive-control
+//!   prerequisite from ROADMAP item 2).
+//! * [`export`] — Chrome trace-event JSON (`trace.json` for
+//!   chrome://tracing / Perfetto) and the `trinity trace` summary.
+//!
+//! The whole plane is config-gated behind `[observability]`
+//! ([`ObsConfig`]); when disabled no recorder exists, spans cost one
+//! `Option` check, and existing runs behave byte-identically.
+
+pub mod export;
+pub mod hist;
+pub mod hub;
+pub mod span;
+
+pub use export::{chrome_trace, load_trace, summarize_trace, write_trace, DEVICE_LANE};
+pub use hist::{HistSnapshot, Histogram, BUCKETS};
+pub use hub::{Gauges, TelemetryHub};
+pub use span::{Span, SpanKind, SpanRecorder, NO_REPLICA};
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+/// Typed `[observability]` knobs (`ObservabilitySection` in the run
+/// config converts into this).
+#[derive(Debug, Clone)]
+pub struct ObsConfig {
+    /// Master switch: off = no recorder, no hub, zero overhead.
+    pub enabled: bool,
+    /// Span ring capacity (rounded up to a power of two).
+    pub ring_capacity: usize,
+    /// Telemetry-hub sampling cadence.
+    pub sample_every: Duration,
+    /// Where to write `trace.json`; defaults to the monitor dir.
+    pub trace_path: Option<PathBuf>,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            enabled: false,
+            ring_capacity: 1 << 16,
+            sample_every: Duration::from_millis(250),
+            trace_path: None,
+        }
+    }
+}
+
+impl ObsConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        if self.ring_capacity == 0 {
+            bail!("observability.ring_capacity must be >= 1");
+        }
+        if self.sample_every.is_zero() {
+            bail!("observability.sample_every_s must be > 0");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_off_and_validate() {
+        let d = ObsConfig::default();
+        assert!(!d.enabled);
+        assert!(d.validate().is_ok());
+        let mut on = ObsConfig { enabled: true, ..Default::default() };
+        assert!(on.validate().is_ok());
+        on.ring_capacity = 0;
+        assert!(on.validate().is_err());
+        on.ring_capacity = 1024;
+        on.sample_every = Duration::ZERO;
+        assert!(on.validate().is_err());
+    }
+}

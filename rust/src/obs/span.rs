@@ -1,0 +1,299 @@
+//! Lock-free span recorder: the tracing substrate (DESIGN.md §8).
+//!
+//! A [`SpanRecorder`] is a bounded power-of-two ring of atomic slots.
+//! Writers claim a ticket with one `fetch_add` and publish the span's
+//! fields with relaxed stores followed by a release store of the
+//! sequence word — no locks, no allocation, no syscalls on the record
+//! path, so it is safe to call from inside the service workers and the
+//! engine hot loop.  The ring overwrites oldest-first under pressure
+//! (tracing is telemetry, not an audit log); [`SpanRecorder::drain`] at
+//! quiescence returns the surviving spans sorted by start time.
+//!
+//! Every span carries the episode **trace id** threaded from
+//! `WorkflowCtx::chat_turn` through `SamplingArgs` into service jobs, so
+//! an exported trace reconstructs each episode end-to-end: queue wait →
+//! cold prefill or cache resume → decode, plus retries, reroutes and
+//! weight-sync stalls.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::time::Instant;
+
+/// Lane marker for spans not tied to a replica (coordinator, device).
+pub const NO_REPLICA: u32 = u32::MAX;
+
+/// What a span measures.  The discriminants are stable: they are packed
+/// into the ring's atomic words and decoded on drain.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum SpanKind {
+    /// Request sat in the service queue (enqueue → claim).
+    QueueWait = 1,
+    /// Cold prefill of a prompt (no reusable prefix).
+    Prefill = 2,
+    /// Parked-session resume: only the prompt delta was prefilled
+    /// (`detail` = prefix tokens reused).
+    Resume = 3,
+    /// Token generation for one request (`detail` = tokens generated).
+    Decode = 4,
+    /// A failed attempt re-queued on the same worker pass
+    /// (`detail` = attempt number).
+    Retry = 5,
+    /// A job pushed to a peer replica's queue (`detail` = target replica).
+    Reroute = 6,
+    /// Trainer-side weight publish (the stall explorers sync against).
+    SyncStall = 7,
+    /// Device-lane prefill execution inside `ModelEngine`.
+    DevicePrefill = 8,
+    /// Device-lane decode step inside `ModelEngine`.
+    DeviceDecode = 9,
+    /// Device-lane train step inside `ModelEngine`.
+    DeviceTrain = 10,
+}
+
+impl SpanKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SpanKind::QueueWait => "queue_wait",
+            SpanKind::Prefill => "prefill",
+            SpanKind::Resume => "resume",
+            SpanKind::Decode => "decode",
+            SpanKind::Retry => "retry",
+            SpanKind::Reroute => "reroute",
+            SpanKind::SyncStall => "weight_sync",
+            SpanKind::DevicePrefill => "device_prefill",
+            SpanKind::DeviceDecode => "device_decode",
+            SpanKind::DeviceTrain => "device_train",
+        }
+    }
+
+    fn from_u8(v: u8) -> Option<SpanKind> {
+        Some(match v {
+            1 => SpanKind::QueueWait,
+            2 => SpanKind::Prefill,
+            3 => SpanKind::Resume,
+            4 => SpanKind::Decode,
+            5 => SpanKind::Retry,
+            6 => SpanKind::Reroute,
+            7 => SpanKind::SyncStall,
+            8 => SpanKind::DevicePrefill,
+            9 => SpanKind::DeviceDecode,
+            10 => SpanKind::DeviceTrain,
+            _ => return None,
+        })
+    }
+}
+
+/// One recorded interval.  `trace` is the episode id (0 = untraced
+/// plumbing such as device-lane spans); times are microseconds relative
+/// to the recorder's origin.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub trace: u64,
+    pub kind: SpanKind,
+    /// Replica lane, or [`NO_REPLICA`] for coordinator/device spans.
+    pub replica: u32,
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// Kind-specific payload (tokens reused/generated, attempt, target).
+    pub detail: u64,
+}
+
+/// One ring slot: `seq` (0 = empty, else ticket+1) plus the span words.
+/// The writer stores the payload relaxed and publishes with a release
+/// store of `seq`; a quiescent drain reads everything back consistently.
+struct Slot {
+    seq: AtomicU64,
+    trace: AtomicU64,
+    kind_replica: AtomicU64,
+    start_us: AtomicU64,
+    dur_us: AtomicU64,
+    detail: AtomicU64,
+}
+
+impl Slot {
+    fn empty() -> Slot {
+        Slot {
+            seq: AtomicU64::new(0),
+            trace: AtomicU64::new(0),
+            kind_replica: AtomicU64::new(0),
+            start_us: AtomicU64::new(0),
+            dur_us: AtomicU64::new(0),
+            detail: AtomicU64::new(0),
+        }
+    }
+}
+
+pub struct SpanRecorder {
+    origin: Instant,
+    mask: usize,
+    head: AtomicUsize,
+    slots: Box<[Slot]>,
+}
+
+impl SpanRecorder {
+    /// A recorder holding up to `capacity` spans (rounded up to a power
+    /// of two, minimum 64); oldest spans are overwritten under pressure.
+    pub fn new(capacity: usize) -> SpanRecorder {
+        let cap = capacity.max(64).next_power_of_two();
+        SpanRecorder {
+            origin: Instant::now(),
+            mask: cap - 1,
+            head: AtomicUsize::new(0),
+            slots: (0..cap).map(|_| Slot::empty()).collect(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.mask + 1
+    }
+
+    /// Microseconds elapsed since the recorder's origin.
+    pub fn now_us(&self) -> u64 {
+        self.origin.elapsed().as_micros() as u64
+    }
+
+    /// `t` as microseconds relative to the origin (0 if `t` predates it).
+    pub fn rel_us(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.origin).as_micros() as u64
+    }
+
+    /// Record one span (lock-free; overwrites the oldest under pressure).
+    pub fn record(&self, span: Span) {
+        let ticket = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[ticket & self.mask];
+        slot.trace.store(span.trace, Ordering::Relaxed);
+        slot.kind_replica
+            .store(((span.kind as u64) << 32) | span.replica as u64, Ordering::Relaxed);
+        slot.start_us.store(span.start_us, Ordering::Relaxed);
+        slot.dur_us.store(span.dur_us, Ordering::Relaxed);
+        slot.detail.store(span.detail, Ordering::Relaxed);
+        slot.seq.store(ticket as u64 + 1, Ordering::Release);
+    }
+
+    /// Record a closed interval `[start_us, now]`.
+    pub fn close(&self, trace: u64, kind: SpanKind, replica: u32, start_us: u64, detail: u64) {
+        let dur_us = self.now_us().saturating_sub(start_us);
+        self.record(Span { trace, kind, replica, start_us, dur_us, detail });
+    }
+
+    /// Record a zero-duration marker at the current time.
+    pub fn mark(&self, trace: u64, kind: SpanKind, replica: u32, detail: u64) {
+        self.record(Span { trace, kind, replica, start_us: self.now_us(), dur_us: 0, detail });
+    }
+
+    /// Spans recorded over the recorder's lifetime (including any later
+    /// overwritten).
+    pub fn recorded(&self) -> u64 {
+        self.head.load(Ordering::Relaxed) as u64
+    }
+
+    /// Spans lost to ring overwrites so far.
+    pub fn overwritten(&self) -> u64 {
+        (self.head.load(Ordering::Relaxed).saturating_sub(self.capacity())) as u64
+    }
+
+    /// Snapshot the surviving spans, sorted by start time.  Meant for
+    /// quiescent points (run end); a concurrent writer can tear an
+    /// in-flight slot, which at worst yields one garbled span, never UB.
+    pub fn drain(&self) -> Vec<Span> {
+        let mut out = Vec::with_capacity(self.capacity().min(self.recorded() as usize));
+        for slot in self.slots.iter() {
+            if slot.seq.load(Ordering::Acquire) == 0 {
+                continue;
+            }
+            let kr = slot.kind_replica.load(Ordering::Relaxed);
+            let Some(kind) = SpanKind::from_u8((kr >> 32) as u8) else { continue };
+            out.push(Span {
+                trace: slot.trace.load(Ordering::Relaxed),
+                kind,
+                replica: kr as u32,
+                start_us: slot.start_us.load(Ordering::Relaxed),
+                dur_us: slot.dur_us.load(Ordering::Relaxed),
+                detail: slot.detail.load(Ordering::Relaxed),
+            });
+        }
+        out.sort_by_key(|s| (s.start_us, s.trace));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn span(trace: u64, start_us: u64) -> Span {
+        Span { trace, kind: SpanKind::Decode, replica: 0, start_us, dur_us: 5, detail: 2 }
+    }
+
+    #[test]
+    fn record_and_drain_roundtrip_sorted() {
+        let r = SpanRecorder::new(64);
+        r.record(span(2, 30));
+        r.record(span(1, 10));
+        r.mark(3, SpanKind::Prefill, 1, 7);
+        let spans = r.drain();
+        assert_eq!(spans.len(), 3);
+        assert_eq!(spans[0].trace, 1);
+        assert_eq!(spans[1].trace, 2);
+        assert!(spans.windows(2).all(|w| w[0].start_us <= w[1].start_us));
+        let mark = spans.iter().find(|s| s.kind == SpanKind::Prefill).unwrap();
+        assert_eq!((mark.dur_us, mark.detail, mark.replica), (0, 7, 1));
+        assert_eq!(r.recorded(), 3);
+        assert_eq!(r.overwritten(), 0);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_under_pressure() {
+        let r = SpanRecorder::new(64); // min capacity
+        for i in 0..100u64 {
+            r.record(span(i, i));
+        }
+        let spans = r.drain();
+        assert_eq!(spans.len(), 64);
+        assert_eq!(r.recorded(), 100);
+        assert_eq!(r.overwritten(), 36);
+        // the survivors are the newest 64
+        assert!(spans.iter().all(|s| s.trace >= 36));
+    }
+
+    #[test]
+    fn close_measures_elapsed() {
+        let r = SpanRecorder::new(64);
+        let t0 = r.now_us();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        r.close(9, SpanKind::QueueWait, NO_REPLICA, t0, 0);
+        let s = r.drain().remove(0);
+        assert!(s.dur_us >= 1_000, "expected >= 1ms, got {}us", s.dur_us);
+        assert_eq!(s.replica, NO_REPLICA);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing_within_capacity() {
+        let r = Arc::new(SpanRecorder::new(4096));
+        let mut handles = vec![];
+        for t in 0..4u64 {
+            let r = Arc::clone(&r);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..512u64 {
+                    r.record(span(t * 1000 + i, i));
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(r.recorded(), 2048);
+        assert_eq!(r.drain().len(), 2048);
+        assert_eq!(r.overwritten(), 0);
+    }
+
+    #[test]
+    fn rel_us_saturates_before_origin() {
+        let earlier = Instant::now();
+        std::thread::sleep(std::time::Duration::from_millis(1));
+        let r = SpanRecorder::new(64);
+        assert_eq!(r.rel_us(earlier), 0);
+        assert!(r.rel_us(Instant::now()) <= r.now_us());
+    }
+}

@@ -6,11 +6,13 @@
 //! through the sync service.
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, OnceLock};
+use std::time::Instant;
 
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::model::params::ParamStore;
+use crate::obs::{Span, SpanKind, SpanRecorder, NO_REPLICA};
 
 use super::artifact::{ArtifactInfo, Manifest, ModelInfo, Role};
 use super::client::RuntimeClient;
@@ -26,6 +28,9 @@ pub struct ModelEngine {
     decode: ArtifactInfo,
     embed: ArtifactInfo,
     train: HashMap<String, ArtifactInfo>,
+    /// Device-lane span recorder (set once by the scheduler when
+    /// observability is on; untraced executions cost one `get()`).
+    obs: OnceLock<Arc<SpanRecorder>>,
 }
 
 /// KV-cache state for one generation batch; the cache literals are fed
@@ -96,7 +101,27 @@ impl ModelEngine {
             embed: manifest.find(preset, "embed", None)?.clone(),
             train,
             model,
+            obs: OnceLock::new(),
         })
+    }
+
+    /// Attach the span recorder: device prefill/decode/train executions
+    /// show up on the trace's device lane.  First call wins.
+    pub fn set_observer(&self, spans: Arc<SpanRecorder>) {
+        let _ = self.obs.set(spans);
+    }
+
+    fn device_span(&self, kind: SpanKind, started: Instant, detail: u64) {
+        if let Some(o) = self.obs.get() {
+            o.record(Span {
+                trace: 0,
+                kind,
+                replica: NO_REPLICA,
+                start_us: o.rel_us(started),
+                dur_us: started.elapsed().as_micros() as u64,
+                detail,
+            });
+        }
     }
 
     /// Compile all artifacts up front (excluded from step timings).
@@ -201,7 +226,9 @@ impl ModelEngine {
 
     /// Prompt prefill: returns last-position logits + populated KV cache.
     pub fn prefill(&self, params: &ParamStore, tokens: &Tensor, lens: &Tensor) -> Result<GenerationState> {
+        let t = Instant::now();
         let mut out = self.run_with_params(&self.prefill, params, &[tokens, lens])?;
+        self.device_span(SpanKind::DevicePrefill, t, self.prefill.batch as u64);
         ensure!(out.len() == 3, "prefill returns 3 outputs");
         let v_cache = out.pop().unwrap();
         let k_cache = out.pop().unwrap();
@@ -234,7 +261,9 @@ impl ModelEngine {
         args.push(&state.v_cache);
         args.push(&tok_lit);
         args.push(&pos_lit);
+        let t = Instant::now();
         let mut out = self.client.execute(&self.decode, &args)?;
+        self.device_span(SpanKind::DeviceDecode, t, state.batch as u64);
         ensure!(out.len() == 3, "decode returns 3 outputs");
         state.v_cache = out.pop().unwrap();
         state.k_cache = out.pop().unwrap();
@@ -270,7 +299,9 @@ impl ModelEngine {
         args.push(&hyper_lit);
         args.extend(data_lits.iter());
 
+        let t = Instant::now();
         let mut out = self.client.execute(&info, &args)?;
+        self.device_span(SpanKind::DeviceTrain, t, state.step);
         ensure!(out.len() == 3 * n + 1, "train step output arity");
         let metrics_lit = out.pop().unwrap();
         let v: Vec<xla::Literal> = out.split_off(2 * n);

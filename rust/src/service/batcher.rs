@@ -20,6 +20,7 @@ use anyhow::{anyhow, Result};
 use crate::cache::PrefixIndex;
 use crate::exec::future::Completer;
 use crate::explorer::generation::{GenOutput, SamplingArgs};
+use crate::obs::{Span, SpanKind, SpanRecorder};
 
 use super::replica::{ReplicaState, ServeCtl};
 use super::telemetry::ServiceMetrics;
@@ -34,6 +35,12 @@ pub struct RowJob {
     pub deadline: Instant,
     /// Failed attempts so far (bounded by `service.max_attempts`).
     pub attempts: usize,
+    /// Episode trace id threaded from `SamplingArgs` (0 = untraced);
+    /// every span this job produces carries it.
+    pub trace: u64,
+    /// Prefix tokens the router matched for this request (0 = cold) —
+    /// how mock-path replicas tell a resume from a cold prefill.
+    pub reused: u32,
     pub completer: Completer<Result<GenOutput>>,
 }
 
@@ -242,6 +249,30 @@ pub(super) fn expire_job(job: RowJob, metrics: &ServiceMetrics) {
         .complete(Err(anyhow!("request deadline exceeded after {waited:?} in queue")));
 }
 
+/// Record one job's queued-to-claimed wait: always into the metrics
+/// histogram, and as a QueueWait span on the claiming replica when
+/// tracing is enabled.
+fn note_claimed(
+    job: &RowJob,
+    now: Instant,
+    replica_id: usize,
+    metrics: &ServiceMetrics,
+    obs: Option<&Arc<SpanRecorder>>,
+) {
+    let wait = now.saturating_duration_since(job.enqueued);
+    metrics.note_queue_wait(wait);
+    if let Some(o) = obs {
+        o.record(Span {
+            trace: job.trace,
+            kind: SpanKind::QueueWait,
+            replica: replica_id as u32,
+            start_us: o.rel_us(job.enqueued),
+            dur_us: wait.as_micros() as u64,
+            detail: job.attempts as u64,
+        });
+    }
+}
+
 // ---------------------------------------------------------------------------
 // the worker
 
@@ -254,6 +285,8 @@ pub struct WorkerSetup {
     /// The service-wide prefix index, when the cache is enabled:
     /// completed session-tagged rows are admitted as reusable prefixes.
     pub cache: Option<Arc<PrefixIndex>>,
+    /// Span recorder, when observability is enabled.
+    pub obs: Option<Arc<SpanRecorder>>,
     pub shutdown: Arc<AtomicBool>,
 }
 
@@ -265,6 +298,7 @@ struct WorkerCtl<'a> {
     key: SampleKey,
     metrics: &'a ServiceMetrics,
     cache: Option<&'a Arc<PrefixIndex>>,
+    obs: Option<&'a Arc<SpanRecorder>>,
     /// Refills left before the session must end.  Bounds session
     /// lifetime so a steady stream of same-key traffic cannot starve a
     /// queued request with a different sampling key (which can only be
@@ -290,7 +324,7 @@ impl ServeCtl for WorkerCtl<'_> {
                 expire_job(job, self.metrics);
                 continue;
             }
-            self.metrics.note_queue_wait(now - job.enqueued);
+            note_claimed(&job, now, self.replica.id, self.metrics, self.obs);
             self.metrics.rows.fetch_add(1, Ordering::SeqCst);
             self.metrics.refills.fetch_add(1, Ordering::SeqCst);
             self.replica.inflight.fetch_add(1, Ordering::SeqCst);
@@ -337,7 +371,7 @@ impl ServeCtl for WorkerCtl<'_> {
 /// The per-replica serving loop.  Runs until shutdown with an empty
 /// queue; a quarantined replica parks here until its probe heals it.
 pub fn run_worker(setup: WorkerSetup) {
-    let WorkerSetup { replica, peers, cfg, metrics, cache, shutdown } = setup;
+    let WorkerSetup { replica, peers, cfg, metrics, cache, obs, shutdown } = setup;
     const PARK: Duration = Duration::from_millis(20);
     loop {
         // -- circuit breaker gate ------------------------------------
@@ -354,7 +388,7 @@ pub fn run_worker(setup: WorkerSetup) {
             }
             // quarantined replicas still honor deadlines and hand their
             // queued traffic to healthy peers
-            sweep_quarantined_queue(&replica, &peers, &metrics);
+            sweep_quarantined_queue(&replica, &peers, &metrics, obs.as_ref());
             if wait > Duration::ZERO {
                 std::thread::sleep(wait.min(PARK));
                 continue;
@@ -385,7 +419,7 @@ pub fn run_worker(setup: WorkerSetup) {
             expire_job(first, &metrics);
             continue;
         }
-        metrics.note_queue_wait(now - first.enqueued);
+        note_claimed(&first, now, replica.id, &metrics, obs.as_ref());
         let key = first.batch_key();
         let native = replica.engine.max_batch();
         let max_batch = if cfg.max_batch > 0 { cfg.max_batch.min(native) } else { native };
@@ -395,7 +429,7 @@ pub fn run_worker(setup: WorkerSetup) {
             match replica.queue.pop_matching_until(&key, admit_deadline) {
                 Some(job) if job.expired(Instant::now()) => expire_job(job, &metrics),
                 Some(job) => {
-                    metrics.note_queue_wait(job.enqueued.elapsed());
+                    note_claimed(&job, Instant::now(), replica.id, &metrics, obs.as_ref());
                     batch.push(job);
                 }
                 None => break,
@@ -412,6 +446,7 @@ pub fn run_worker(setup: WorkerSetup) {
             key,
             metrics: &metrics,
             cache: cache.as_ref(),
+            obs: obs.as_ref(),
             refill_budget: 16 * max_batch.max(1),
             max_inflight: max_batch.max(1),
             failed: vec![],
@@ -465,6 +500,9 @@ pub fn run_worker(setup: WorkerSetup) {
                 ))));
             } else {
                 metrics.retried.fetch_add(1, Ordering::SeqCst);
+                if let Some(o) = &obs {
+                    o.mark(job.trace, SpanKind::Retry, replica.id as u32, job.attempts as u64);
+                }
                 // a fresh enqueue: queue-wait telemetry measures time
                 // since the job last entered a queue, not since birth
                 job.enqueued = Instant::now();
@@ -473,6 +511,9 @@ pub fn run_worker(setup: WorkerSetup) {
         }
         for mut job in stranded {
             metrics.rerouted.fetch_add(1, Ordering::SeqCst);
+            if let Some(o) = &obs {
+                o.mark(job.trace, SpanKind::Reroute, replica.id as u32, 0);
+            }
             job.enqueued = Instant::now();
             route_job(&peers, job, Some(replica.id), &metrics, None);
         }
@@ -488,6 +529,7 @@ fn sweep_quarantined_queue(
     replica: &Arc<ReplicaState>,
     peers: &[Arc<ReplicaState>],
     metrics: &ServiceMetrics,
+    obs: Option<&Arc<SpanRecorder>>,
 ) {
     if replica.queue.is_empty() {
         return;
@@ -499,6 +541,9 @@ fn sweep_quarantined_queue(
             expire_job(job, metrics);
         } else if peer_ready {
             metrics.rerouted.fetch_add(1, Ordering::SeqCst);
+            if let Some(o) = obs {
+                o.mark(job.trace, SpanKind::Reroute, replica.id as u32, 0);
+            }
             route_job(peers, job, Some(replica.id), metrics, None);
         } else if let Err(job) = replica.queue.push(job) {
             fail_now(job, "rollout service shut down", metrics);
@@ -520,6 +565,8 @@ mod tests {
             enqueued: now,
             deadline: now + ttl,
             attempts: 0,
+            trace: 0,
+            reused: 0,
             completer,
         };
         (j, promise)

@@ -35,7 +35,9 @@ pub mod service;
 pub mod telemetry;
 
 pub use batcher::{RequestQueue, RowJob, SampleKey};
-pub use replica::{Breaker, EngineReplica, ModelReplica, ReplicaEngine, ReplicaState, ServeCtl};
+pub use replica::{
+    Breaker, EngineReplica, ModelReplica, ReplicaEngine, ReplicaObs, ReplicaState, ServeCtl,
+};
 pub use service::{RolloutService, ServiceHandle};
 pub use telemetry::{ReplicaSnapshot, ServiceMetrics, ServiceSnapshot};
 

@@ -22,10 +22,21 @@ use crate::cache::{ParkedSession, PrefixIndex, RowLease, SessionPark};
 use crate::explorer::generation::{GenOutput, GenerationEngine, RolloutEndpoint, SamplingArgs};
 use crate::explorer::Session;
 use crate::model::WeightSync;
+use crate::obs::{Span, SpanKind, SpanRecorder};
 use crate::tokenizer::BOS;
 
 use super::batcher::{RequestQueue, RowJob};
-use super::telemetry::ReplicaSnapshot;
+use super::telemetry::{ReplicaSnapshot, ServiceMetrics};
+
+/// Tracing handle a replica stamps its spans with: the replica's id in
+/// the trace's lane model, the shared span ring, and the fleet metrics
+/// (for the cold-prefill histogram).  Absent when observability is off.
+#[derive(Clone)]
+pub struct ReplicaObs {
+    pub id: u32,
+    pub spans: Arc<SpanRecorder>,
+    pub metrics: Arc<ServiceMetrics>,
+}
 
 // ---------------------------------------------------------------------------
 // circuit breaker
@@ -149,6 +160,8 @@ pub struct EngineReplica {
     /// and this replica's parked KV sessions.  `None` = cache off.
     cache: Option<Arc<PrefixIndex>>,
     park: Mutex<SessionPark<Session>>,
+    /// Span tracing, when observability is enabled.
+    obs: Option<ReplicaObs>,
 }
 
 /// A session established for serving, warm or cold: the engine state,
@@ -160,6 +173,8 @@ struct SessionSetup {
     slots: Vec<Option<RowJob>>,
     plen: Vec<usize>,
     tags: Vec<Option<u64>>,
+    /// Per-row decode-span start (recorder-relative µs; 0 = untraced).
+    t0: Vec<u64>,
 }
 
 impl EngineReplica {
@@ -184,7 +199,19 @@ impl EngineReplica {
             refill_chunk: refill_chunk.max(1),
             cache,
             park: Mutex::new(SessionPark::new(capacity, ttl)),
+            obs: None,
         }
+    }
+
+    /// Attach span tracing (builder; observability enabled).
+    pub fn with_obs(mut self, obs: ReplicaObs) -> EngineReplica {
+        self.obs = Some(obs);
+        self
+    }
+
+    /// Recorder-relative "now" for decode-span starts (0 when untraced).
+    fn span_now(&self) -> u64 {
+        self.obs.as_ref().map(|o| o.spans.now_us()).unwrap_or(0)
     }
 
     /// Parked sessions currently held (telemetry).
@@ -211,6 +238,7 @@ impl EngineReplica {
         slots: &mut [Option<RowJob>],
         plen: &mut [usize],
         tags: &mut [Option<u64>],
+        t0: &mut [u64],
         r: usize,
         finished: bool,
         cache: usize,
@@ -219,11 +247,22 @@ impl EngineReplica {
     ) {
         let out = session.output(r, plen[r], finished);
         let job = slots[r].take().expect("retire_row on empty slot");
+        if let Some(o) = &self.obs {
+            let now = o.spans.now_us();
+            o.spans.record(Span {
+                trace: job.trace,
+                kind: SpanKind::Decode,
+                replica: o.id,
+                start_us: t0[r],
+                dur_us: now.saturating_sub(t0[r]),
+                detail: session.tokens[r].len().saturating_sub(plen[r]) as u64,
+            });
+        }
         // the retired episode owns this row's KV until someone refills
         // the slot (see fill_slot, which clears the tag)
         tags[r] = job.args.session;
         ctl.done(job, out);
-        self.fill_slot(session, slots, plen, tags, r, cache, aborted, ctl);
+        self.fill_slot(session, slots, plen, tags, t0, r, cache, aborted, ctl);
     }
 
     /// Claim a queued request into the empty slot `r` (used both when a
@@ -237,6 +276,7 @@ impl EngineReplica {
         slots: &mut [Option<RowJob>],
         plen: &mut [usize],
         tags: &mut [Option<u64>],
+        t0: &mut [u64],
         r: usize,
         cache: usize,
         aborted: &mut bool,
@@ -255,10 +295,23 @@ impl EngineReplica {
                 next.prompt.clone()
             };
             let seed = next.args.seed;
+            let t = Instant::now();
             match self.engine.restart_row(session, r, &p, seed) {
                 Ok(()) => {
+                    if let Some(o) = &self.obs {
+                        o.metrics.note_prefill(t.elapsed());
+                        o.spans.record(Span {
+                            trace: next.trace,
+                            kind: SpanKind::Prefill,
+                            replica: o.id,
+                            start_us: o.spans.rel_us(t),
+                            dur_us: t.elapsed().as_micros() as u64,
+                            detail: p.len() as u64,
+                        });
+                    }
                     plen[r] = p.len();
                     slots[r] = Some(next);
+                    t0[r] = self.span_now();
                 }
                 Err(e) => {
                     if !ctl.fail(next, e) {
@@ -278,6 +331,7 @@ impl EngineReplica {
         tp: usize,
         cache: usize,
     ) -> Result<SessionSetup> {
+        let t_prefill = Instant::now();
         let clamp = |p: &[i32]| -> Vec<i32> {
             let max = cache.saturating_sub(2);
             if p.len() > max {
@@ -305,6 +359,7 @@ impl EngineReplica {
         if tails.iter().any(|t| !t.is_empty()) {
             self.engine.feed(&mut session, &tails)?;
         }
+        let prefill_took = t_prefill.elapsed();
         // session established: claim the jobs (every claimed job must be
         // handed back through ctl or returned via `rows` on error)
         let mut slots: Vec<Option<RowJob>> = rows.drain(..count).map(Some).collect();
@@ -316,8 +371,25 @@ impl EngineReplica {
                 session.seed_row(r, job.args.seed);
             }
         }
+        if let Some(o) = &self.obs {
+            // one shared prefill; each claimed episode gets its own span
+            // so its timeline stays self-contained
+            o.metrics.note_prefill(prefill_took);
+            let start = o.spans.rel_us(t_prefill);
+            for job in slots.iter().flatten() {
+                o.spans.record(Span {
+                    trace: job.trace,
+                    kind: SpanKind::Prefill,
+                    replica: o.id,
+                    start_us: start,
+                    dur_us: prefill_took.as_micros() as u64,
+                    detail: job.prompt.len() as u64,
+                });
+            }
+        }
         let tags = vec![None; nrows];
-        Ok(SessionSetup { session, slots, plen, tags })
+        let t0 = vec![self.span_now(); nrows];
+        Ok(SessionSetup { session, slots, plen, tags, t0 })
     }
 
     /// Warm session establishment: claim a parked session one of the
@@ -372,9 +444,20 @@ impl EngineReplica {
                 Some(r) => {
                     let reused = leases[r].as_ref().map(|l| l.transcript.len()).unwrap_or(0);
                     let delta = &job.prompt[reused..];
+                    let t = Instant::now();
                     match self.engine.extend_row(&mut session, r, delta, job.args.seed) {
                         Ok(()) => {
                             cache.note_resumed(reused);
+                            if let Some(o) = &self.obs {
+                                o.spans.record(Span {
+                                    trace: job.trace,
+                                    kind: SpanKind::Resume,
+                                    replica: o.id,
+                                    start_us: o.spans.rel_us(t),
+                                    dur_us: t.elapsed().as_micros() as u64,
+                                    detail: reused as u64,
+                                });
+                            }
                             used[r] = true;
                             plen[r] = job.prompt.len();
                             slots[r] = Some(job);
@@ -406,8 +489,20 @@ impl EngineReplica {
             } else {
                 job.prompt.clone()
             };
+            let t = Instant::now();
             match self.engine.restart_row(&mut session, r, &p, job.args.seed) {
                 Ok(()) => {
+                    if let Some(o) = &self.obs {
+                        o.metrics.note_prefill(t.elapsed());
+                        o.spans.record(Span {
+                            trace: job.trace,
+                            kind: SpanKind::Prefill,
+                            replica: o.id,
+                            start_us: o.spans.rel_us(t),
+                            dur_us: t.elapsed().as_micros() as u64,
+                            detail: p.len() as u64,
+                        });
+                    }
                     plen[r] = p.len();
                     slots[r] = Some(job);
                 }
@@ -429,7 +524,8 @@ impl EngineReplica {
                 *tag = leases[r].as_ref().map(|l| l.key);
             }
         }
-        Ok(Some(SessionSetup { session, slots, plen, tags }))
+        let t0 = vec![self.span_now(); nrows];
+        Ok(Some(SessionSetup { session, slots, plen, tags, t0 }))
     }
 
     /// Park the finished session for the episodes' next turns.  Skipped
@@ -506,7 +602,7 @@ impl ReplicaEngine for EngineReplica {
         };
         // `tags`: which episode's KV each row holds once its job retires
         // — the leases park_after() files for the episodes' next turns
-        let SessionSetup { mut session, mut slots, mut plen, mut tags } = setup;
+        let SessionSetup { mut session, mut slots, mut plen, mut tags, mut t0 } = setup;
         let nrows = session.rows();
         let template = slots.iter().flatten().next().map(|j| j.args.clone()).unwrap_or_default();
         let mut aborted = false;
@@ -522,6 +618,7 @@ impl ReplicaEngine for EngineReplica {
                         &mut slots,
                         &mut plen,
                         &mut tags,
+                        &mut t0,
                         r,
                         cache,
                         &mut aborted,
@@ -553,6 +650,7 @@ impl ReplicaEngine for EngineReplica {
                         &mut slots,
                         &mut plen,
                         &mut tags,
+                        &mut t0,
                         r,
                         false,
                         cache,
@@ -595,6 +693,7 @@ impl ReplicaEngine for EngineReplica {
                         &mut slots,
                         &mut plen,
                         &mut tags,
+                        &mut t0,
                         r,
                         finished[r],
                         cache,
@@ -625,11 +724,18 @@ impl ReplicaEngine for EngineReplica {
 pub struct ModelReplica {
     model: Arc<dyn RolloutEndpoint>,
     max_batch: usize,
+    obs: Option<ReplicaObs>,
 }
 
 impl ModelReplica {
     pub fn new(model: Arc<dyn RolloutEndpoint>, max_batch: usize) -> ModelReplica {
-        ModelReplica { model, max_batch: max_batch.max(1) }
+        ModelReplica { model, max_batch: max_batch.max(1), obs: None }
+    }
+
+    /// Attach span tracing (builder; observability enabled).
+    pub fn with_obs(mut self, obs: ReplicaObs) -> ModelReplica {
+        self.obs = Some(obs);
+        self
     }
 }
 
@@ -660,8 +766,39 @@ impl ReplicaEngine for ModelReplica {
             } else {
                 rows.remove(0)
             };
+            let t = Instant::now();
             match self.model.chat(&job.prompt, 1, &job.args) {
-                Ok(mut outs) if !outs.is_empty() => ctl.done(job, outs.remove(0)),
+                Ok(mut outs) if !outs.is_empty() => {
+                    if let Some(o) = &self.obs {
+                        // the endpoint call is opaque, so the timeline
+                        // marks resume-vs-cold at the call start (the
+                        // router's prefix match decides which) and books
+                        // the whole call as the decode span
+                        let start = o.spans.rel_us(t);
+                        let (kind, detail) = if job.reused > 0 {
+                            (SpanKind::Resume, job.reused as u64)
+                        } else {
+                            (SpanKind::Prefill, job.prompt.len() as u64)
+                        };
+                        o.spans.record(Span {
+                            trace: job.trace,
+                            kind,
+                            replica: o.id,
+                            start_us: start,
+                            dur_us: 0,
+                            detail,
+                        });
+                        o.spans.record(Span {
+                            trace: job.trace,
+                            kind: SpanKind::Decode,
+                            replica: o.id,
+                            start_us: start,
+                            dur_us: t.elapsed().as_micros() as u64,
+                            detail: outs[0].tokens.len().saturating_sub(job.prompt.len()) as u64,
+                        });
+                    }
+                    ctl.done(job, outs.remove(0))
+                }
                 Ok(_) => {
                     if !ctl.fail(job, anyhow!("backend returned no output")) {
                         break;

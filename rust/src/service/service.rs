@@ -16,9 +16,12 @@ use crate::explorer::generation::{
     GenOutput, GenerationEngine, RolloutEndpoint, RolloutModel, SamplingArgs,
 };
 use crate::model::WeightSync;
+use crate::obs::SpanRecorder;
 
 use super::batcher::{route_job, run_worker, RowJob, WorkerSetup};
-use super::replica::{Breaker, EngineReplica, ModelReplica, ReplicaEngine, ReplicaState};
+use super::replica::{
+    Breaker, EngineReplica, ModelReplica, ReplicaEngine, ReplicaObs, ReplicaState,
+};
 use super::telemetry::{ServiceMetrics, ServiceSnapshot};
 use super::ServiceConfig;
 
@@ -33,6 +36,8 @@ pub struct RolloutService {
     /// routing in `chat`, entry admission in the workers, invalidation
     /// on the weight paths.
     prefix: Option<Arc<PrefixIndex>>,
+    /// Span recorder threaded into workers and replicas (None = off).
+    obs: Option<Arc<SpanRecorder>>,
     shutdown: Arc<AtomicBool>,
     workers: Mutex<Vec<JoinHandle<()>>>,
 }
@@ -41,7 +46,7 @@ impl RolloutService {
     /// Build over explicit replica engines; spawns one worker per replica.
     pub fn new(engines: Vec<Arc<dyn ReplicaEngine>>, cfg: ServiceConfig) -> Result<RolloutService> {
         let prefix = Self::build_index(&cfg);
-        Self::with_index(engines, cfg, prefix)
+        Self::assemble(engines, cfg, prefix, Arc::new(ServiceMetrics::new()), None)
     }
 
     /// The service-wide prefix index for a config (shared with the
@@ -50,14 +55,15 @@ impl RolloutService {
         cfg.cache.enabled.then(|| Arc::new(PrefixIndex::new(cfg.cache.clone())))
     }
 
-    fn with_index(
+    fn assemble(
         engines: Vec<Arc<dyn ReplicaEngine>>,
         cfg: ServiceConfig,
         prefix: Option<Arc<PrefixIndex>>,
+        metrics: Arc<ServiceMetrics>,
+        obs: Option<Arc<SpanRecorder>>,
     ) -> Result<RolloutService> {
         ensure!(!engines.is_empty(), "rollout service needs at least one replica");
         cfg.validate()?;
-        let metrics = Arc::new(ServiceMetrics::new());
         let shutdown = Arc::new(AtomicBool::new(false));
         let replicas: Vec<Arc<ReplicaState>> = engines
             .into_iter()
@@ -78,6 +84,7 @@ impl RolloutService {
                 cfg: cfg.clone(),
                 metrics: Arc::clone(&metrics),
                 cache: prefix.clone(),
+                obs: obs.clone(),
                 shutdown: Arc::clone(&shutdown),
             };
             let poisoned_replica = Arc::clone(replica);
@@ -124,6 +131,7 @@ impl RolloutService {
             replicas,
             metrics,
             prefix,
+            obs,
             shutdown,
             workers: Mutex::new(workers),
         })
@@ -137,16 +145,35 @@ impl RolloutService {
         engines: Vec<Arc<GenerationEngine>>,
         cfg: ServiceConfig,
     ) -> Result<RolloutService> {
+        Self::over_engines_obs(engines, cfg, None)
+    }
+
+    /// [`over_engines`](Self::over_engines) with span tracing attached:
+    /// every replica stamps prefill/resume/decode spans into `obs`.
+    pub fn over_engines_obs(
+        engines: Vec<Arc<GenerationEngine>>,
+        cfg: ServiceConfig,
+        obs: Option<Arc<SpanRecorder>>,
+    ) -> Result<RolloutService> {
         let refill_chunk = cfg.refill_chunk;
         let prefix = Self::build_index(&cfg);
+        let metrics = Arc::new(ServiceMetrics::new());
         let replicas = engines
             .into_iter()
-            .map(|e| {
-                Arc::new(EngineReplica::with_cache(e, refill_chunk, prefix.clone()))
-                    as Arc<dyn ReplicaEngine>
+            .enumerate()
+            .map(|(id, e)| {
+                let mut replica = EngineReplica::with_cache(e, refill_chunk, prefix.clone());
+                if let Some(spans) = &obs {
+                    replica = replica.with_obs(ReplicaObs {
+                        id: id as u32,
+                        spans: Arc::clone(spans),
+                        metrics: Arc::clone(&metrics),
+                    });
+                }
+                Arc::new(replica) as Arc<dyn ReplicaEngine>
             })
             .collect();
-        Self::with_index(replicas, cfg, prefix)
+        Self::assemble(replicas, cfg, prefix, metrics, obs)
     }
 
     /// A pool over plain endpoints (mock engines in tests and benches).
@@ -154,12 +181,39 @@ impl RolloutService {
         models: Vec<Arc<dyn RolloutEndpoint>>,
         cfg: ServiceConfig,
     ) -> Result<RolloutService> {
+        Self::over_models_obs(models, cfg, None)
+    }
+
+    /// [`over_models`](Self::over_models) with span tracing attached.
+    pub fn over_models_obs(
+        models: Vec<Arc<dyn RolloutEndpoint>>,
+        cfg: ServiceConfig,
+        obs: Option<Arc<SpanRecorder>>,
+    ) -> Result<RolloutService> {
         let max_batch = if cfg.max_batch > 0 { cfg.max_batch } else { 8 };
+        let prefix = Self::build_index(&cfg);
+        let metrics = Arc::new(ServiceMetrics::new());
         let replicas = models
             .into_iter()
-            .map(|m| Arc::new(ModelReplica::new(m, max_batch)) as Arc<dyn ReplicaEngine>)
+            .enumerate()
+            .map(|(id, m)| {
+                let mut replica = ModelReplica::new(m, max_batch);
+                if let Some(spans) = &obs {
+                    replica = replica.with_obs(ReplicaObs {
+                        id: id as u32,
+                        spans: Arc::clone(spans),
+                        metrics: Arc::clone(&metrics),
+                    });
+                }
+                Arc::new(replica) as Arc<dyn ReplicaEngine>
+            })
             .collect();
-        Self::new(replicas, cfg)
+        Self::assemble(replicas, cfg, prefix, metrics, obs)
+    }
+
+    /// The span recorder, when observability is enabled.
+    pub fn observer(&self) -> Option<&Arc<SpanRecorder>> {
+        self.obs.as_ref()
     }
 
     pub fn config(&self) -> &ServiceConfig {
@@ -196,6 +250,9 @@ impl RolloutService {
             refills: m.refills.load(Ordering::SeqCst),
             probes: m.probes.load(Ordering::SeqCst),
             mean_queue_wait_s: m.mean_queue_wait_s(),
+            queue_wait: m.queue_wait.snapshot(),
+            rollout: m.rollout.snapshot(),
+            prefill: m.prefill.snapshot(),
             queued: replicas.iter().map(|r| r.queued).sum(),
             inflight: replicas.iter().map(|r| r.inflight).sum(),
             replicas,
@@ -239,7 +296,7 @@ impl RolloutModel for RolloutService {
         // their KV prefix — unless it is quarantined, stale or
         // overloaded, in which case this is None and the rows take the
         // normal least-loaded path (cold prefill, always correct)
-        let preferred = match (&self.prefix, args.session) {
+        let (preferred, reused) = match (&self.prefix, args.session) {
             (Some(idx), Some(_)) => {
                 let views: Vec<ReplicaView> = self
                     .replicas
@@ -251,9 +308,9 @@ impl RolloutModel for RolloutService {
                         version: r.engine.weight_version(),
                     })
                     .collect();
-                idx.route(prompt, &views)
+                idx.route_scored(prompt, &views)
             }
-            _ => None,
+            _ => (None, 0),
         };
         let now = Instant::now();
         let deadline = now + self.cfg.request_timeout;
@@ -270,6 +327,8 @@ impl RolloutModel for RolloutService {
                 enqueued: now,
                 deadline,
                 attempts: 0,
+                trace: args.trace,
+                reused: reused as u32,
                 completer,
             };
             self.metrics.submitted.fetch_add(1, Ordering::SeqCst);
@@ -293,6 +352,7 @@ impl RolloutModel for RolloutService {
                 }
             }
         }
+        self.metrics.note_rollout(now.elapsed());
         match first_err {
             Some(e) => Err(e.context("rollout service request failed")),
             None => Ok(outs),

@@ -1,9 +1,15 @@
-//! Service telemetry: lock-free counters updated on the serving path,
-//! snapshotted into the coordinator's `Monitor` at publish boundaries
-//! and attached to the final `ModeReport`.
+//! Service telemetry: lock-free counters and latency histograms updated
+//! on the serving path, snapshotted into the coordinator's `Monitor` at
+//! publish boundaries and attached to the final `ModeReport`.
+//!
+//! Latencies are full [`Histogram`]s (DESIGN.md §8), not means: queue
+//! wait, end-to-end rollout latency, and per-turn prefill each report
+//! p50/p95/p99, and snapshots merge across runs by addition.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
+
+use crate::obs::{HistSnapshot, Histogram};
 
 /// Fleet-wide counters (per-replica counters live on `ReplicaState`).
 #[derive(Debug, Default)]
@@ -29,8 +35,12 @@ pub struct ServiceMetrics {
     pub refills: AtomicU64,
     /// Health probes sent to quarantined replicas.
     pub probes: AtomicU64,
-    queue_wait_ns: AtomicU64,
-    dequeued: AtomicU64,
+    /// Queued-to-claimed latency per row.
+    pub queue_wait: Histogram,
+    /// Submit-to-complete latency per `chat` call (all rows settled).
+    pub rollout: Histogram,
+    /// Cold per-turn prefill latency (engine replicas; resumes skip it).
+    pub prefill: Histogram,
 }
 
 impl ServiceMetrics {
@@ -40,16 +50,21 @@ impl ServiceMetrics {
 
     /// Record how long a row sat queued before being claimed.
     pub fn note_queue_wait(&self, wait: Duration) {
-        self.queue_wait_ns.fetch_add(wait.as_nanos() as u64, Ordering::Relaxed);
-        self.dequeued.fetch_add(1, Ordering::Relaxed);
+        self.queue_wait.observe_duration(wait);
+    }
+
+    /// Record one `chat` call's end-to-end latency.
+    pub fn note_rollout(&self, elapsed: Duration) {
+        self.rollout.observe_duration(elapsed);
+    }
+
+    /// Record one cold prefill.
+    pub fn note_prefill(&self, elapsed: Duration) {
+        self.prefill.observe_duration(elapsed);
     }
 
     pub fn mean_queue_wait_s(&self) -> f64 {
-        let n = self.dequeued.load(Ordering::Relaxed);
-        if n == 0 {
-            return 0.0;
-        }
-        self.queue_wait_ns.load(Ordering::Relaxed) as f64 / 1e9 / n as f64
+        self.queue_wait.snapshot().mean()
     }
 }
 
@@ -85,6 +100,12 @@ pub struct ServiceSnapshot {
     pub refills: u64,
     pub probes: u64,
     pub mean_queue_wait_s: f64,
+    /// Queue-wait latency distribution (p50/p95/p99 via `percentile`).
+    pub queue_wait: HistSnapshot,
+    /// End-to-end rollout latency distribution per `chat` call.
+    pub rollout: HistSnapshot,
+    /// Cold per-turn prefill latency distribution (engine replicas).
+    pub prefill: HistSnapshot,
     pub queued: usize,
     pub inflight: usize,
     pub replicas: Vec<ReplicaSnapshot>,
@@ -121,6 +142,14 @@ impl ServiceSnapshot {
             ("retried".to_string(), self.retried as f64),
             ("quarantined".to_string(), self.quarantined() as f64),
         ];
+        for (name, hist) in
+            [("queue_wait", &self.queue_wait), ("rollout", &self.rollout), ("prefill", &self.prefill)]
+        {
+            let (p50, p95, p99) = hist.p50_p95_p99();
+            fields.push((format!("{name}_p50_s"), p50));
+            fields.push((format!("{name}_p95_s"), p95));
+            fields.push((format!("{name}_p99_s"), p99));
+        }
         for r in &self.replicas {
             fields.push((format!("replica{}_rows", r.id), r.rows as f64));
             fields.push((format!("replica{}_version", r.id), r.weight_version as f64));
@@ -146,22 +175,47 @@ mod tests {
     }
 
     #[test]
-    fn queue_wait_mean() {
+    fn queue_wait_histogram_mean_and_percentiles() {
         let m = ServiceMetrics::new();
         assert_eq!(m.mean_queue_wait_s(), 0.0);
         m.note_queue_wait(Duration::from_millis(10));
         m.note_queue_wait(Duration::from_millis(30));
-        assert!((m.mean_queue_wait_s() - 0.020).abs() < 1e-6);
+        // the histogram mean tracks the exact mean to within rounding
+        assert!((m.mean_queue_wait_s() - 0.020).abs() < 1e-4, "{}", m.mean_queue_wait_s());
+        let snap = m.queue_wait.snapshot();
+        assert_eq!(snap.count, 2);
+        assert!(snap.percentile(0.95) >= snap.percentile(0.50));
     }
 
     #[test]
-    fn monitor_fields_cover_replicas() {
+    fn rollout_and_prefill_histograms_record() {
+        let m = ServiceMetrics::new();
+        m.note_rollout(Duration::from_millis(50));
+        m.note_prefill(Duration::from_millis(5));
+        assert_eq!(m.rollout.snapshot().count, 1);
+        assert_eq!(m.prefill.snapshot().count, 1);
+        assert!(m.rollout.snapshot().percentile(0.5) > 0.01);
+    }
+
+    #[test]
+    fn monitor_fields_cover_replicas_and_percentiles() {
+        let m = ServiceMetrics::new();
+        m.note_queue_wait(Duration::from_millis(10));
+        m.note_rollout(Duration::from_millis(80));
         let snap = ServiceSnapshot {
+            queue_wait: m.queue_wait.snapshot(),
+            rollout: m.rollout.snapshot(),
             replicas: vec![ReplicaSnapshot { id: 0, ..Default::default() }, ReplicaSnapshot { id: 1, ..Default::default() }],
             ..Default::default()
         };
         let fields = snap.monitor_fields();
         assert!(fields.iter().any(|(n, _)| n == "occupancy"));
         assert!(fields.iter().any(|(n, _)| n == "replica1_rows"));
+        for key in ["queue_wait_p50_s", "queue_wait_p95_s", "queue_wait_p99_s", "rollout_p95_s", "prefill_p99_s"]
+        {
+            assert!(fields.iter().any(|(n, _)| n == key), "missing {key}");
+        }
+        let p95 = fields.iter().find(|(n, _)| n == "rollout_p95_s").unwrap().1;
+        assert!(p95 > 0.01, "{p95}");
     }
 }

@@ -13,6 +13,8 @@ pub enum Level {
     Info = 1,
     Warn = 2,
     Error = 3,
+    /// Suppress all log output (`TRINITY_LOG=off`).
+    Off = 4,
 }
 
 static LEVEL: AtomicU8 = AtomicU8::new(1);
@@ -22,12 +24,23 @@ pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
+/// Resolve `TRINITY_LOG` to a level.  Unset means the Info default;
+/// `info` and `off` are accepted explicitly; anything else falls back
+/// to Info with a one-line warning (instead of being silently eaten).
 pub fn init_from_env() {
     let level = match std::env::var("TRINITY_LOG").as_deref() {
         Ok("debug") => Level::Debug,
+        Ok("info") => Level::Info,
         Ok("warn") => Level::Warn,
         Ok("error") => Level::Error,
-        _ => Level::Info,
+        Ok("off") => Level::Off,
+        Ok(other) => {
+            eprintln!(
+                "[trinity] unrecognized TRINITY_LOG={other:?} (expected debug|info|warn|error|off); using info"
+            );
+            Level::Info
+        }
+        Err(_) => Level::Info,
     };
     set_level(level);
     START.get_or_init(Instant::now);
@@ -47,6 +60,7 @@ pub fn log(level: Level, target: &str, msg: std::fmt::Arguments) {
         Level::Info => "INFO ",
         Level::Warn => "WARN ",
         Level::Error => "ERROR",
+        Level::Off => return, // never a message level
     };
     eprintln!("[{:>9.3}s {} {}] {}", elapsed.as_secs_f64(), tag, target, msg);
 }
@@ -83,6 +97,8 @@ macro_rules! log_error {
 mod tests {
     use super::*;
 
+    // One test, not several: LEVEL is process-global and the harness
+    // runs tests concurrently.
     #[test]
     fn level_gating() {
         set_level(Level::Warn);
@@ -90,6 +106,11 @@ mod tests {
         assert!(!enabled(Level::Info));
         assert!(enabled(Level::Warn));
         assert!(enabled(Level::Error));
+        set_level(Level::Off);
+        assert!(!enabled(Level::Debug));
+        assert!(!enabled(Level::Info));
+        assert!(!enabled(Level::Warn));
+        assert!(!enabled(Level::Error));
         set_level(Level::Info);
     }
 }

@@ -1,0 +1,166 @@
+//! Observability integration: the ISSUE-6 acceptance surface.
+//!
+//! * reconstruction — a mock multi-turn service run with tracing enabled
+//!   yields a `trace.json` from which each episode reads end-to-end:
+//!   queue wait → prefill/resume marker → decode, per turn, with
+//!   cache-hit turns showing resume markers instead of cold prefills;
+//! * percentiles — the service snapshot carries queue-wait and rollout
+//!   latency histograms with usable p50/p95/p99;
+//! * disabled — without a span recorder the run produces byte-identical
+//!   experiences and zero spans (observability is a pure read).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use trinity_rft::buffer::Experience;
+use trinity_rft::explorer::{
+    AlfworldWorkflow, MockModel, RolloutEndpoint, RolloutModel, SamplingArgs, Task, Workflow,
+    WorkflowCtx,
+};
+use trinity_rft::obs::{load_trace, summarize_trace, write_trace, Span, SpanKind, SpanRecorder};
+use trinity_rft::service::{RolloutService, ServiceConfig};
+use trinity_rft::tokenizer::{Tokenizer, EOS};
+use trinity_rft::util::json::Value;
+use trinity_rft::util::rng::Rng;
+
+/// A mock whose response is a pure function of the prompt, so two
+/// identical call sequences produce byte-identical outputs.
+fn deterministic_mock(seed: u64) -> MockModel {
+    let tok = Tokenizer::new();
+    let look = tok.encode("look");
+    MockModel::new(seed, Duration::ZERO, 0.0).with_response(move |_prompt, _rng| {
+        let mut r = look.clone();
+        r.push(EOS);
+        r
+    })
+}
+
+fn alfworld_task(seed: i64, repeat: usize) -> Task {
+    let mut t = Task::new("obs-ep", "alfworld", Value::obj(vec![("seed", Value::int(seed))]));
+    t.repeat_times = repeat;
+    t
+}
+
+/// Run the multi-turn workflow against a service handle, single-file,
+/// so the request order is deterministic.
+fn run_episodes(svc: &Arc<RolloutService>, seed: i64, repeat: usize) -> Vec<Experience> {
+    let tok = Tokenizer::new();
+    let task = alfworld_task(seed, repeat);
+    let sampling = SamplingArgs { max_new_tokens: 8, ..Default::default() };
+    let model: &dyn RolloutModel = svc.as_ref();
+    let mut ctx = WorkflowCtx { model, tokenizer: &tok, task: &task, sampling, rng: Rng::new(7) };
+    let wf =
+        AlfworldWorkflow { max_env_steps: 3, env_init_cost: Duration::ZERO, max_seq_tokens: 200 };
+    wf.run(&mut ctx).unwrap()
+}
+
+fn traced_service(recorder: &Arc<SpanRecorder>, seed: u64) -> Arc<RolloutService> {
+    let mut cfg = ServiceConfig::default();
+    cfg.cache.enabled = true;
+    let endpoints: Vec<Arc<dyn RolloutEndpoint>> = vec![Arc::new(deterministic_mock(seed))];
+    Arc::new(
+        RolloutService::over_models_obs(endpoints, cfg, Some(Arc::clone(recorder))).unwrap(),
+    )
+}
+
+fn spans_of<'a>(spans: &'a [Span], trace: u64) -> Vec<&'a Span> {
+    spans.iter().filter(|s| s.trace == trace).collect()
+}
+
+#[test]
+fn multi_turn_trace_reconstructs_each_episode_end_to_end() {
+    let recorder = Arc::new(SpanRecorder::new(1 << 12));
+    let svc = traced_service(&recorder, 3);
+
+    // 2 episodes x 3 turns through the session-keyed chat path
+    let exps = run_episodes(&svc, 5, 2);
+    assert!(!exps.is_empty());
+
+    let spans = recorder.drain();
+    let mut traces: Vec<u64> = spans.iter().map(|s| s.trace).filter(|&t| t != 0).collect();
+    traces.sort_unstable();
+    traces.dedup();
+    assert_eq!(traces.len(), 2, "one trace id per episode: {traces:?}");
+
+    for &trace in &traces {
+        let ep = spans_of(&spans, trace);
+        let count = |kind: SpanKind| ep.iter().filter(|s| s.kind == kind).count();
+        // every turn queues once and decodes once
+        assert_eq!(count(SpanKind::QueueWait), 3, "trace {trace}: {ep:?}");
+        assert_eq!(count(SpanKind::Decode), 3, "trace {trace}: {ep:?}");
+        // every turn serves exactly once — cold (prefill) or via the
+        // prefix cache (resume); turn 1 is always cold and later turns
+        // extend the served transcript, so resumes must appear
+        assert_eq!(
+            count(SpanKind::Prefill) + count(SpanKind::Resume),
+            3,
+            "trace {trace}: {ep:?}"
+        );
+        assert!(count(SpanKind::Prefill) >= 1, "turn 1 is cold: {ep:?}");
+        assert!(count(SpanKind::Resume) >= 1, "cache-hit turns must resume: {ep:?}");
+        // drain() orders by start time: the episode must begin with its
+        // queue wait and every prefill/resume marker must precede the
+        // decode it belongs to
+        assert_eq!(ep[0].kind, SpanKind::QueueWait, "trace {trace}: {ep:?}");
+        let first_decode =
+            ep.iter().position(|s| s.kind == SpanKind::Decode).expect("decode span");
+        let first_serve = ep
+            .iter()
+            .position(|s| matches!(s.kind, SpanKind::Prefill | SpanKind::Resume))
+            .expect("serve marker");
+        assert!(first_serve < first_decode, "trace {trace}: {ep:?}");
+        // resume markers carry the reused-prefix length
+        assert!(
+            ep.iter().filter(|s| s.kind == SpanKind::Resume).all(|s| s.detail > 0),
+            "resume detail must carry reused tokens: {ep:?}"
+        );
+    }
+
+    // the exported file round-trips and summarizes both episodes
+    let dir = std::env::temp_dir().join(format!("trft_obs_{}", std::process::id()));
+    let path = dir.join("trace.json");
+    write_trace(&path, &spans).unwrap();
+    let summary = summarize_trace(&load_trace(&path).unwrap()).unwrap();
+    assert!(summary.contains("2 episode(s)"), "{summary}");
+    for kind in ["queue_wait", "prefill", "resume", "decode"] {
+        assert!(summary.contains(kind), "missing {kind} in:\n{summary}");
+    }
+    std::fs::remove_dir_all(&dir).unwrap();
+
+    // latency histograms ride the same run: both distributions have one
+    // observation per row and usable tail percentiles
+    let snap = svc.snapshot();
+    assert_eq!(snap.queue_wait.count, 6, "{snap:?}");
+    assert_eq!(snap.rollout.count, 6, "{snap:?}");
+    let (p50, p95, p99) = snap.rollout.p50_p95_p99();
+    assert!(p50 > 0.0 && p95 >= p50 && p99 >= p95, "{p50} {p95} {p99}");
+}
+
+#[test]
+fn disabled_observability_is_byte_identical_with_zero_spans() {
+    let recorder = Arc::new(SpanRecorder::new(1 << 12));
+    let traced = traced_service(&recorder, 11);
+
+    let mut cfg = ServiceConfig::default();
+    cfg.cache.enabled = true;
+    let endpoints: Vec<Arc<dyn RolloutEndpoint>> = vec![Arc::new(deterministic_mock(11))];
+    let plain = Arc::new(RolloutService::over_models(endpoints, cfg).unwrap());
+    assert!(plain.observer().is_none());
+
+    let exps_traced = run_episodes(&traced, 9, 2);
+    let exps_plain = run_episodes(&plain, 9, 2);
+    assert_eq!(exps_traced.len(), exps_plain.len());
+    for (x, y) in exps_traced.iter().zip(&exps_plain) {
+        assert_eq!(x.tokens, y.tokens, "token streams diverged");
+        assert_eq!(x.logprobs, y.logprobs, "logprobs diverged");
+        assert_eq!(x.loss_mask, y.loss_mask, "loss masks diverged");
+        assert_eq!(x.prompt_len, y.prompt_len);
+        assert_eq!(x.reward, y.reward);
+    }
+
+    // tracing observed the run; the plain service recorded nothing at all
+    assert!(recorder.recorded() > 0);
+    let fresh = SpanRecorder::new(64);
+    assert_eq!(fresh.recorded(), 0);
+    assert!(fresh.drain().is_empty());
+}
