@@ -28,6 +28,9 @@ fn base_cfg(steps: u64) -> RftConfig {
     cfg.hyper.lr = 1e-3;
     cfg.adv_std_normalize = true;
     cfg.seed = 29;
+    // the diversity processor embeds through a direct engine handle;
+    // keep baseline and shaped runs on the same (direct) rollout path
+    cfg.service.enabled = false;
     cfg
 }
 

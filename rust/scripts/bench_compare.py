@@ -1,0 +1,100 @@
+#!/usr/bin/env python3
+"""Compare a fresh micro-bench merge against the checked-in baseline.
+
+Usage: bench_compare.py BASELINE.json CURRENT.json
+
+Both files are the merged documents the bench-baseline CI job assembles:
+{"commit", "scale", "benches": {<bench file>: [rows...]}} where each row
+carries a "bench" case label plus numeric metrics.  Rows are matched by
+(bench file, case label, ordinal), so reordering cases within a label is
+a baseline refresh, not a silent mismatch.
+
+Report-only by design: drifts beyond the soft threshold print GitHub
+warning annotations but the exit code is always 0 — the numbers come
+from shared CI runners, so a hard gate would flake.  Refresh the
+baseline by committing the BENCH_baseline artifact of a trusted run as
+rust/BENCH_baseline.json.
+"""
+
+import json
+import sys
+from collections import defaultdict
+
+# metric direction: a drop in these is a regression...
+HIGHER_IS_BETTER = {
+    "tasks_per_s",
+    "occupancy",
+    "hit_rate",
+    "prefill_reduction",
+    "prefill_reduction_total",
+    "reused",
+    "completed",
+}
+# ...while growth in these is
+LOWER_IS_BETTER = {"wall_s"}
+SOFT_THRESHOLD = 0.25  # fraction of the baseline value
+
+
+def cases(doc):
+    """(bench file, case label, ordinal) -> row."""
+    out = {}
+    for name, rows in sorted(doc.get("benches", {}).items()):
+        seen = defaultdict(int)
+        for row in rows:
+            label = row.get("bench", "?")
+            out[(name, label, seen[label])] = row
+            seen[label] += 1
+    return out
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(__doc__)
+        return 0
+    with open(sys.argv[1]) as f:
+        base = json.load(f)
+    with open(sys.argv[2]) as f:
+        cur = json.load(f)
+
+    if base.get("scale") != cur.get("scale"):
+        print(
+            f"baseline scale {base.get('scale')!r} != current {cur.get('scale')!r}; "
+            "numbers are not comparable — refresh the baseline"
+        )
+        return 0
+
+    base_cases, cur_cases = cases(base), cases(cur)
+    if not set(base_cases) & set(cur_cases):
+        print(
+            "baseline has no comparable cases — seed it by committing the "
+            "BENCH_baseline CI artifact as rust/BENCH_baseline.json"
+        )
+        return 0
+
+    drifts = 0
+    for key in sorted(set(base_cases) & set(cur_cases)):
+        b_row, c_row = base_cases[key], cur_cases[key]
+        for metric in sorted(set(b_row) & set(c_row)):
+            if metric not in HIGHER_IS_BETTER and metric not in LOWER_IS_BETTER:
+                continue
+            b, c = b_row[metric], c_row[metric]
+            if not isinstance(b, (int, float)) or not isinstance(c, (int, float)):
+                continue
+            delta = (c - b) / b if b else (1.0 if c else 0.0)
+            worse = -delta if metric in HIGHER_IS_BETTER else delta
+            name = "/".join(str(k) for k in key) + f" {metric}"
+            print(f"  {name:<48} {b:>10.3f} -> {c:>10.3f}  ({delta:+.1%})")
+            if worse > SOFT_THRESHOLD:
+                drifts += 1
+                print(
+                    f"::warning title=bench drift::{name} regressed {worse:.0%} "
+                    f"(soft threshold {SOFT_THRESHOLD:.0%}, report-only)"
+                )
+    for key in sorted(set(base_cases) - set(cur_cases)):
+        print(f"  note: baseline case {key} missing from current run")
+    print(f"{drifts} metric(s) beyond the {SOFT_THRESHOLD:.0%} soft threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

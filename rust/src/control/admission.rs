@@ -1,0 +1,193 @@
+//! Admission controller: a pressure-driven gate on explorer batch
+//! launches.
+//!
+//! Pressure is the **max** of four normalized components (any one
+//! saturated resource should throttle, a "utility" read of the gauges
+//! rather than `Free`'s raw `buffer_depth` threshold):
+//!
+//! * queue-wait p95 over `wait_hi_s`,
+//! * queued requests over `queue_hi` per *healthy* replica,
+//! * quarantined fraction of the pool over `quarantine_hi`,
+//! * buffer depth over `scheduler.max_buffer_depth` (when capped).
+//!
+//! The gate closes after `hold_ticks` consecutive samples at pressure
+//! ≥ 1.0 and reopens after `hold_ticks` consecutive samples at
+//! ≤ `release` — asymmetric thresholds (the hysteresis band) so a
+//! pressure hovering near the band cannot flap the gate every sample.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+use crate::obs::Gauges;
+
+use super::{ControlConfig, ControlContext, Controller, ControllerId, Decision};
+
+pub struct AdmissionController {
+    wait_hi_s: f64,
+    queue_hi: f64,
+    quarantine_hi: f64,
+    release: f64,
+    hold_ticks: u64,
+    replicas: f64,
+    max_buffer_depth: f64,
+    open: AtomicBool,
+    streak: AtomicU64,
+    /// Last computed pressure, f64 bits (for snapshots).
+    pressure_bits: AtomicU64,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: &ControlConfig, ctx: &ControlContext) -> AdmissionController {
+        AdmissionController {
+            wait_hi_s: cfg.wait_hi_s,
+            queue_hi: cfg.queue_hi,
+            quarantine_hi: cfg.quarantine_hi,
+            release: cfg.release,
+            hold_ticks: cfg.hold_ticks.max(1),
+            replicas: ctx.replicas.max(1) as f64,
+            max_buffer_depth: ctx.max_buffer_depth as f64,
+            open: AtomicBool::new(true),
+            streak: AtomicU64::new(0),
+            pressure_bits: AtomicU64::new(0),
+        }
+    }
+
+    /// Normalized serving pressure for one sample (1.0 = at band).
+    pub fn pressure_of(&self, g: &Gauges) -> f64 {
+        let healthy = (self.replicas - g.quarantined).max(1.0);
+        let wait = g.queue_wait_p95_s / self.wait_hi_s;
+        let depth = g.queued / (self.queue_hi * healthy);
+        let quarantine = (g.quarantined / self.replicas) / self.quarantine_hi;
+        let buffer = if self.max_buffer_depth > 0.0 {
+            g.buffer_depth / self.max_buffer_depth
+        } else {
+            0.0
+        };
+        wait.max(depth).max(quarantine).max(buffer)
+    }
+
+    /// Whether batch launches are currently admitted.
+    pub fn open(&self) -> bool {
+        self.open.load(Ordering::Relaxed)
+    }
+
+    /// The pressure computed on the last step.
+    pub fn pressure(&self) -> f64 {
+        f64::from_bits(self.pressure_bits.load(Ordering::Relaxed))
+    }
+}
+
+impl Controller for AdmissionController {
+    fn id(&self) -> ControllerId {
+        ControllerId::Admission
+    }
+
+    fn bounds(&self) -> (f64, f64) {
+        (0.0, 1.0)
+    }
+
+    fn output(&self) -> f64 {
+        if self.open() {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    fn step(&self, g: &Gauges) -> Option<Decision> {
+        let pressure = self.pressure_of(g);
+        self.pressure_bits.store(pressure.to_bits(), Ordering::Relaxed);
+        let open = self.open();
+        let out_of_band = if open { pressure >= 1.0 } else { pressure <= self.release };
+        if !out_of_band {
+            self.streak.store(0, Ordering::Relaxed);
+            return None;
+        }
+        let streak = self.streak.fetch_add(1, Ordering::Relaxed) + 1;
+        if streak < self.hold_ticks {
+            return None;
+        }
+        self.streak.store(0, Ordering::Relaxed);
+        self.open.store(!open, Ordering::Relaxed);
+        Some(Decision {
+            controller: ControllerId::Admission,
+            at_s: g.at_s,
+            from: if open { 1.0 } else { 0.0 },
+            to: if open { 0.0 } else { 1.0 },
+            cause: if open { "pressure over band" } else { "pressure released" },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn controller(hold: u64, max_buffer: u64) -> AdmissionController {
+        let cfg = ControlConfig { hold_ticks: hold, ..Default::default() };
+        let ctx = ControlContext {
+            replicas: 4,
+            session_rows: 8,
+            repeat_times: 2,
+            explorer_count: 1,
+            batch_tasks: 4,
+            max_buffer_depth: max_buffer,
+        };
+        AdmissionController::new(&cfg, &ctx)
+    }
+
+    #[test]
+    fn pressure_is_the_max_normalized_component() {
+        let c = controller(1, 100);
+        // defaults: wait_hi 0.25s, queue_hi 4/healthy, quarantine_hi 0.5
+        let g = Gauges {
+            queue_wait_p95_s: 0.125, // 0.5 of band
+            queued: 8.0,             // 8 / (4*3 healthy) = 0.667
+            quarantined: 1.0,        // (1/4)/0.5 = 0.5
+            buffer_depth: 90.0,      // 0.9 of the cap -> the max
+            ..Default::default()
+        };
+        let p = c.pressure_of(&g);
+        assert!((p - 0.9).abs() < 1e-9, "expected buffer component to win, got {p}");
+        // uncapped buffer contributes nothing
+        let c2 = controller(1, 0);
+        assert!(c2.pressure_of(&g) < 0.7);
+    }
+
+    #[test]
+    fn hysteresis_requires_hold_ticks_and_release_band() {
+        let c = controller(2, 0);
+        let hot = Gauges { queue_wait_p95_s: 1.0, ..Default::default() }; // pressure 4.0
+        let warm = Gauges { queue_wait_p95_s: 0.2, ..Default::default() }; // pressure 0.8
+        let cool = Gauges { queue_wait_p95_s: 0.05, ..Default::default() }; // pressure 0.2
+
+        assert!(c.step(&hot).is_none(), "one hot sample is not enough");
+        let d = c.step(&hot).expect("second consecutive hot sample closes");
+        assert_eq!((d.from, d.to), (1.0, 0.0));
+        assert!(!c.open());
+
+        // 0.8 is under the close band but above release (0.7): the gate
+        // must stay closed — that is the hysteresis band
+        assert!(c.step(&warm).is_none());
+        assert!(c.step(&warm).is_none());
+        assert!(!c.open(), "pressure inside the hysteresis band must not reopen");
+
+        // a hot sample between cool ones resets the release streak
+        assert!(c.step(&cool).is_none());
+        assert!(c.step(&hot).is_none());
+        assert!(c.step(&cool).is_none());
+        let d = c.step(&cool).expect("two consecutive cool samples reopen");
+        assert_eq!((d.from, d.to), (0.0, 1.0));
+        assert!(c.open());
+        assert_eq!(d.cause, "pressure released");
+    }
+
+    #[test]
+    fn output_reflects_the_gate_within_bounds() {
+        let c = controller(1, 0);
+        assert_eq!(c.output(), 1.0);
+        let (lo, hi) = c.bounds();
+        assert!(lo <= c.output() && c.output() <= hi);
+        c.step(&Gauges { queue_wait_p95_s: 9.0, ..Default::default() });
+        assert_eq!(c.output(), 0.0);
+    }
+}

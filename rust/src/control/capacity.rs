@@ -1,0 +1,198 @@
+//! Capacity controller: steers per-driver batch-task counts to live
+//! replica capacity.
+//!
+//! The target is derived from the gauges: `healthy_replicas ×
+//! session_rows × capacity_headroom` rows of rollout work in flight,
+//! divided by the rows one batch launch produces (`repeat_times ×
+//! explorer_count` per batch task).  Movement is AIMD-shaped and
+//! damped: after `hold_ticks` consecutive samples wanting the same
+//! direction, the output grows by **+1** (additive probe into spare
+//! capacity) or shrinks **toward the target by halving** (multiplicative
+//! retreat when replicas quarantine or the pool shrinks), clamped to
+//! `[min_batch_tasks, max_batch_tasks]`.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::obs::Gauges;
+
+use super::{ControlConfig, ControlContext, Controller, ControllerId, Decision};
+
+pub struct CapacityController {
+    headroom: f64,
+    hold_ticks: u64,
+    replicas: f64,
+    session_rows: f64,
+    rows_per_task: f64,
+    min: u64,
+    max: u64,
+    tasks: AtomicU64,
+    streak_up: AtomicU64,
+    streak_down: AtomicU64,
+}
+
+impl CapacityController {
+    pub fn new(cfg: &ControlConfig, ctx: &ControlContext) -> CapacityController {
+        let max = if cfg.max_batch_tasks == 0 { ctx.batch_tasks } else { cfg.max_batch_tasks }
+            .max(1) as u64;
+        let min = (cfg.min_batch_tasks as u64).clamp(1, max);
+        CapacityController {
+            headroom: cfg.capacity_headroom,
+            hold_ticks: cfg.hold_ticks.max(1),
+            replicas: ctx.replicas.max(1) as f64,
+            session_rows: ctx.session_rows.max(1) as f64,
+            rows_per_task: (ctx.repeat_times.max(1) * ctx.explorer_count.max(1)) as f64,
+            min,
+            max,
+            tasks: AtomicU64::new((ctx.batch_tasks as u64).clamp(min, max)),
+            streak_up: AtomicU64::new(0),
+            streak_down: AtomicU64::new(0),
+        }
+    }
+
+    /// The current per-driver batch-task output.
+    pub fn tasks(&self) -> usize {
+        self.tasks.load(Ordering::Relaxed) as usize
+    }
+
+    /// The batch-task count live capacity asks for (clamped).
+    fn desired(&self, g: &Gauges) -> u64 {
+        let healthy = (self.replicas - g.quarantined).max(0.0);
+        let target_rows = healthy * self.session_rows * self.headroom;
+        ((target_rows / self.rows_per_task).ceil() as u64).clamp(self.min, self.max)
+    }
+}
+
+impl Controller for CapacityController {
+    fn id(&self) -> ControllerId {
+        ControllerId::Capacity
+    }
+
+    fn bounds(&self) -> (f64, f64) {
+        (self.min as f64, self.max as f64)
+    }
+
+    fn output(&self) -> f64 {
+        self.tasks() as f64
+    }
+
+    fn step(&self, g: &Gauges) -> Option<Decision> {
+        let cur = self.tasks.load(Ordering::Relaxed);
+        let desired = self.desired(g);
+        let next = if desired > cur {
+            self.streak_down.store(0, Ordering::Relaxed);
+            if self.streak_up.fetch_add(1, Ordering::Relaxed) + 1 < self.hold_ticks {
+                return None;
+            }
+            cur + 1 // additive probe upward
+        } else if desired < cur {
+            self.streak_up.store(0, Ordering::Relaxed);
+            if self.streak_down.fetch_add(1, Ordering::Relaxed) + 1 < self.hold_ticks {
+                return None;
+            }
+            (cur / 2).max(desired) // multiplicative retreat, not past target
+        } else {
+            self.streak_up.store(0, Ordering::Relaxed);
+            self.streak_down.store(0, Ordering::Relaxed);
+            return None;
+        };
+        self.streak_up.store(0, Ordering::Relaxed);
+        self.streak_down.store(0, Ordering::Relaxed);
+        let next = next.clamp(self.min, self.max);
+        if next == cur {
+            return None;
+        }
+        self.tasks.store(next, Ordering::Relaxed);
+        Some(Decision {
+            controller: ControllerId::Capacity,
+            at_s: g.at_s,
+            from: cur as f64,
+            to: next as f64,
+            cause: if next > cur { "replica capacity up" } else { "replica capacity down" },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn controller(batch_tasks: usize, max_batch_tasks: usize) -> CapacityController {
+        let cfg = ControlConfig {
+            hold_ticks: 1,
+            max_batch_tasks,
+            capacity_headroom: 1.0,
+            ..Default::default()
+        };
+        let ctx = ControlContext {
+            replicas: 2,
+            session_rows: 8,
+            repeat_times: 4,
+            explorer_count: 1,
+            batch_tasks,
+            max_buffer_depth: 0,
+        };
+        CapacityController::new(&cfg, &ctx)
+    }
+
+    #[test]
+    fn starts_at_the_configured_count_within_bounds() {
+        let c = controller(3, 0);
+        assert_eq!(c.tasks(), 3);
+        assert_eq!(c.bounds(), (1.0, 3.0)); // max_batch_tasks=0 -> batch_tasks cap
+        let wide = controller(3, 16);
+        assert_eq!(wide.bounds(), (1.0, 16.0));
+    }
+
+    #[test]
+    fn probes_up_additively_toward_healthy_capacity() {
+        // 2 healthy replicas * 8 rows * 1.0 headroom / 4 rows-per-task = 4
+        let c = controller(1, 16);
+        let g = Gauges::default();
+        let d = c.step(&g).expect("under target must move up");
+        assert_eq!((d.from, d.to), (1.0, 2.0));
+        c.step(&g);
+        c.step(&g);
+        assert_eq!(c.tasks(), 4, "one step per sample, +1 each");
+        assert!(c.step(&g).is_none(), "at target: no movement");
+    }
+
+    #[test]
+    fn retreats_multiplicatively_on_quarantine() {
+        let c = controller(8, 16);
+        // both replicas quarantined -> desired clamps to min (1)
+        let dead = Gauges { quarantined: 2.0, ..Default::default() };
+        let d = c.step(&dead).expect("over target must retreat");
+        assert_eq!((d.from, d.to), (8.0, 4.0), "halving, not -1");
+        assert_eq!(d.cause, "replica capacity down");
+        c.step(&dead);
+        c.step(&dead);
+        assert_eq!(c.tasks(), 1);
+        // one replica back -> desired = 1*8/4 = 2: additive recovery
+        let half = Gauges { quarantined: 1.0, ..Default::default() };
+        let d = c.step(&half).expect("capacity returned");
+        assert_eq!((d.from, d.to), (1.0, 2.0));
+        assert_eq!(d.cause, "replica capacity up");
+    }
+
+    #[test]
+    fn hold_ticks_damp_direction_changes() {
+        let cfg = ControlConfig { hold_ticks: 3, max_batch_tasks: 16, ..Default::default() };
+        let ctx = ControlContext {
+            replicas: 2,
+            session_rows: 8,
+            repeat_times: 4,
+            explorer_count: 1,
+            batch_tasks: 1,
+            max_buffer_depth: 0,
+        };
+        let c = CapacityController::new(&cfg, &ctx);
+        let g = Gauges::default();
+        assert!(c.step(&g).is_none());
+        assert!(c.step(&g).is_none());
+        assert!(c.step(&g).is_some(), "third consecutive sample moves");
+        // a down-wanting sample resets the up streak
+        assert!(c.step(&g).is_none());
+        assert!(c.step(&Gauges { quarantined: 2.0, ..Default::default() }).is_none());
+        assert!(c.step(&g).is_none(), "streak restarted after direction flip");
+    }
+}

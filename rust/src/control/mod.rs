@@ -1,0 +1,600 @@
+//! Adaptive control plane (DESIGN.md §9): feedback controllers that
+//! close the loop between the observability plane and run-time policy.
+//!
+//! PR 6 made serving telemetry *readable* — [`TelemetryHub`] publishes
+//! live gauges on a cadence.  This module adds the controllers that act
+//! on them, replacing three hand-tuned knobs with closed loops:
+//!
+//! * **staleness** — `AdaptiveStaleness` (a registered `SyncPolicy`,
+//!   `policy = "adaptive"`) widens/narrows the effective version-lag
+//!   window AIMD-style from the trainer's `sample_wait` p95 measured
+//!   against rollout latency, clamped to `[0, max_version_lag]`;
+//! * **admission** — throttles explorer batch launches when serving
+//!   pressure (queue-wait p95, queue depth, quarantined replicas,
+//!   buffer depth) crosses configured bands;
+//! * **capacity** — adapts per-driver batch-task counts to live healthy
+//!   replica capacity.
+//!
+//! All three implement the shared [`Controller`] trait: outputs are
+//! **bounded** (clamped to [`Controller::bounds`]) and **hysteresis
+//! damped** (a controller acts only after `hold_ticks` consecutive
+//! out-of-band gauge samples, and never more than once per sample), so
+//! a noisy gauge cannot make the plane thrash.  Every output change is
+//! appended to the [`DecisionLog`], mirrored as a
+//! `SpanKind::ControlDecision` mark when tracing is on, logged under
+//! the `control` monitor role at publish boundaries, and summarized on
+//! the `trinity run` report line.
+//!
+//! Staleness of the *signal* is handled explicitly: if the latest gauge
+//! sample is older than `max_gauge_age_s`, controllers hold their last
+//! output instead of acting on dead data (warn-once per stale episode;
+//! see [`TelemetryHub::age_s`]).
+//!
+//! Everything is gated behind the `[control]` config section and off by
+//! default: with it absent no [`ControlPlane`] is built and every run
+//! behaves byte-identically to the uncontrolled scheduler.
+
+pub mod admission;
+pub mod capacity;
+pub mod staleness;
+
+pub use admission::AdmissionController;
+pub use capacity::CapacityController;
+pub use staleness::{AdaptiveStaleness, StalenessCore};
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{bail, Result};
+
+use crate::log_warn;
+use crate::obs::{Gauges, SpanKind, SpanRecorder, TelemetryHub, NO_REPLICA};
+
+/// Typed `[control]` knobs (`ControlSection` in the run config converts
+/// into this).  Band semantics:
+///
+/// * staleness: widen when `sample_wait_p95 > staleness_hi * rollout_p95`,
+///   narrow when it drops under `staleness_lo * rollout_p95`; waits under
+///   `staleness_floor_s` never count as starvation.
+/// * admission: close the gate when normalized pressure reaches 1.0,
+///   reopen when it falls to `release`.
+/// * capacity: steer per-driver batch tasks toward
+///   `healthy_replicas * session_rows * capacity_headroom` rows.
+#[derive(Debug, Clone)]
+pub struct ControlConfig {
+    /// Master switch: off = no plane, byte-identical scheduling.
+    pub enabled: bool,
+    /// Hold controller outputs when the latest gauge sample is older.
+    pub max_gauge_age_s: f64,
+    /// Decisions retained for the report (total count is unbounded).
+    pub log_capacity: usize,
+    /// Consecutive out-of-band samples required before any output moves.
+    pub hold_ticks: u64,
+    /// Starvation band: widen staleness above this fraction of rollout p95.
+    pub staleness_hi: f64,
+    /// Comfort band: narrow staleness below this fraction of rollout p95.
+    pub staleness_lo: f64,
+    /// Absolute sample-wait floor treated as noise, seconds.
+    pub staleness_floor_s: f64,
+    /// Queue-wait p95 mapping to pressure 1.0, seconds.
+    pub wait_hi_s: f64,
+    /// Queued requests per healthy replica mapping to pressure 1.0.
+    pub queue_hi: f64,
+    /// Quarantined fraction of the pool mapping to pressure 1.0.
+    pub quarantine_hi: f64,
+    /// Pressure level at which a closed admission gate reopens.
+    pub release: f64,
+    /// Rows of headroom (× live capacity) the capacity controller targets.
+    pub capacity_headroom: f64,
+    /// Lower clamp for per-driver batch tasks.
+    pub min_batch_tasks: usize,
+    /// Upper clamp for per-driver batch tasks (0 = the configured
+    /// `batch_tasks`).
+    pub max_batch_tasks: usize,
+}
+
+impl Default for ControlConfig {
+    fn default() -> Self {
+        ControlConfig {
+            enabled: false,
+            max_gauge_age_s: 2.0,
+            log_capacity: 256,
+            hold_ticks: 2,
+            staleness_hi: 0.5,
+            staleness_lo: 0.1,
+            staleness_floor_s: 0.005,
+            wait_hi_s: 0.25,
+            queue_hi: 4.0,
+            quarantine_hi: 0.5,
+            release: 0.7,
+            capacity_headroom: 2.0,
+            min_batch_tasks: 1,
+            max_batch_tasks: 0,
+        }
+    }
+}
+
+impl ControlConfig {
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        if self.max_gauge_age_s <= 0.0 {
+            bail!("control.max_gauge_age_s must be > 0");
+        }
+        if self.log_capacity == 0 {
+            bail!("control.log_capacity must be >= 1");
+        }
+        if self.hold_ticks == 0 {
+            bail!("control.hold_ticks must be >= 1");
+        }
+        if self.staleness_hi <= self.staleness_lo || self.staleness_lo < 0.0 {
+            bail!(
+                "control.staleness bands must satisfy 0 <= lo < hi (got lo={}, hi={})",
+                self.staleness_lo,
+                self.staleness_hi
+            );
+        }
+        if self.staleness_floor_s < 0.0 {
+            bail!("control.staleness_floor_s must be >= 0");
+        }
+        if self.wait_hi_s <= 0.0 || self.queue_hi <= 0.0 {
+            bail!("control.wait_hi_s and control.queue_hi must be > 0");
+        }
+        if self.quarantine_hi <= 0.0 || self.quarantine_hi > 1.0 {
+            bail!("control.quarantine_hi must be in (0, 1]");
+        }
+        if self.release <= 0.0 || self.release >= 1.0 {
+            bail!("control.release must be in (0, 1)");
+        }
+        if self.capacity_headroom <= 0.0 {
+            bail!("control.capacity_headroom must be > 0");
+        }
+        if self.min_batch_tasks == 0 {
+            bail!("control.min_batch_tasks must be >= 1");
+        }
+        if self.max_batch_tasks != 0 && self.max_batch_tasks < self.min_batch_tasks {
+            bail!("control.max_batch_tasks must be 0 or >= control.min_batch_tasks");
+        }
+        Ok(())
+    }
+}
+
+/// Which controller produced a [`Decision`].  Discriminants are stable:
+/// they are packed into `ControlDecision` span details.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum ControllerId {
+    Staleness = 1,
+    Admission = 2,
+    Capacity = 3,
+}
+
+impl ControllerId {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ControllerId::Staleness => "staleness",
+            ControllerId::Admission => "admission",
+            ControllerId::Capacity => "capacity",
+        }
+    }
+}
+
+/// One output change: which controller moved, from what to what, and why.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Decision {
+    pub controller: ControllerId,
+    /// Gauge timestamp the controller acted on (hub-relative seconds).
+    pub at_s: f64,
+    pub from: f64,
+    pub to: f64,
+    pub cause: &'static str,
+}
+
+impl Decision {
+    /// Span payload: controller id in the high 32 bits, the new output
+    /// (rounded, clamped at 0) in the low 32.
+    pub fn detail(&self) -> u64 {
+        ((self.controller as u64) << 32) | (self.to.max(0.0).round() as u64 & 0xffff_ffff)
+    }
+}
+
+/// A feedback controller with a bounded, hysteresis-damped output.
+///
+/// `step` is called by the [`ControlPlane`] at most once per fresh gauge
+/// sample; implementations keep their own out-of-band streak counters
+/// and return a [`Decision`] only when the output actually moved.
+pub trait Controller: Send + Sync {
+    fn id(&self) -> ControllerId;
+    /// Inclusive `[lo, hi]` output clamp; `output` never leaves it.
+    fn bounds(&self) -> (f64, f64);
+    /// The current (last) output.
+    fn output(&self) -> f64;
+    /// One damped control step over a fresh gauge sample.
+    fn step(&self, g: &Gauges) -> Option<Decision>;
+}
+
+/// Bounded ring of recent [`Decision`]s plus a lifetime count; every
+/// push is mirrored as a `ControlDecision` span mark when tracing is on.
+pub struct DecisionLog {
+    cap: usize,
+    recent: Mutex<VecDeque<Decision>>,
+    total: AtomicU64,
+    obs: Option<Arc<SpanRecorder>>,
+}
+
+impl DecisionLog {
+    pub fn new(cap: usize, obs: Option<Arc<SpanRecorder>>) -> DecisionLog {
+        DecisionLog {
+            cap: cap.max(1),
+            recent: Mutex::new(VecDeque::new()),
+            total: AtomicU64::new(0),
+            obs,
+        }
+    }
+
+    pub fn push(&self, d: Decision) {
+        self.total.fetch_add(1, Ordering::Relaxed);
+        if let Some(obs) = &self.obs {
+            obs.mark(0, SpanKind::ControlDecision, NO_REPLICA, d.detail());
+        }
+        let mut recent = self.recent.lock().unwrap();
+        if recent.len() == self.cap {
+            recent.pop_front();
+        }
+        recent.push_back(d);
+    }
+
+    /// Decisions pushed over the log's lifetime (including evicted ones).
+    pub fn total(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+
+    /// The retained tail, oldest first.
+    pub fn recent(&self) -> Vec<Decision> {
+        self.recent.lock().unwrap().iter().copied().collect()
+    }
+}
+
+/// Static run shape the controllers steer within (replica pool size,
+/// rows per engine session, configured batch/task fan-out).
+#[derive(Debug, Clone, Copy)]
+pub struct ControlContext {
+    /// Serving replicas in the pool.
+    pub replicas: usize,
+    /// Rows one engine session can pack (service `max_batch`, or the
+    /// engine's native generation batch when unlimited).
+    pub session_rows: usize,
+    /// Rollouts per task (`repeat_times`).
+    pub repeat_times: usize,
+    /// Concurrent explorer drivers.
+    pub explorer_count: usize,
+    /// Configured per-driver batch tasks (the capacity controller's
+    /// starting point and default upper clamp).
+    pub batch_tasks: usize,
+    /// `scheduler.max_buffer_depth` (0 = uncapped); feeds admission
+    /// pressure so the gate subsumes `Free`'s raw depth check.
+    pub max_buffer_depth: u64,
+}
+
+/// Everything a run's controllers share: the gauge feed, the decision
+/// log, and the three controller instances.
+///
+/// The plane steps controllers lazily from its read paths
+/// ([`ControlPlane::admit`] / [`ControlPlane::batch_tasks`]): a CAS on
+/// the gauge tick guarantees each fresh sample is processed exactly
+/// once no matter how many explorer drivers are polling.
+pub struct ControlPlane {
+    cfg: ControlConfig,
+    hub: Arc<TelemetryHub>,
+    log: DecisionLog,
+    admission: AdmissionController,
+    capacity: CapacityController,
+    staleness: OnceLock<Arc<dyn Controller>>,
+    last_tick: AtomicU64,
+    stale_holds: AtomicU64,
+    stale: AtomicBool,
+}
+
+impl ControlPlane {
+    pub fn new(
+        cfg: ControlConfig,
+        ctx: ControlContext,
+        hub: Arc<TelemetryHub>,
+        obs: Option<Arc<SpanRecorder>>,
+    ) -> Arc<ControlPlane> {
+        Arc::new(ControlPlane {
+            log: DecisionLog::new(cfg.log_capacity, obs),
+            admission: AdmissionController::new(&cfg, &ctx),
+            capacity: CapacityController::new(&cfg, &ctx),
+            staleness: OnceLock::new(),
+            last_tick: AtomicU64::new(0),
+            stale_holds: AtomicU64::new(0),
+            stale: AtomicBool::new(false),
+            cfg,
+            hub,
+        })
+    }
+
+    pub fn config(&self) -> &ControlConfig {
+        &self.cfg
+    }
+
+    pub fn hub(&self) -> &Arc<TelemetryHub> {
+        &self.hub
+    }
+
+    pub fn decisions(&self) -> &DecisionLog {
+        &self.log
+    }
+
+    /// Register the staleness controller (called by
+    /// `AdaptiveStaleness::connect_control`; at most one per plane).
+    pub fn adopt_staleness(&self, c: Arc<dyn Controller>) {
+        let _ = self.staleness.set(c);
+    }
+
+    /// Step every controller over the latest gauge sample, at most once
+    /// per publish tick.  Returns without acting when the sample is
+    /// stale (holding the last outputs) or already processed.
+    pub fn tick(&self) {
+        let g = self.hub.gauges();
+        let tick = g.tick as u64;
+        if tick == 0 {
+            return; // nothing published yet
+        }
+        let age = self.hub.age_s();
+        if age > self.cfg.max_gauge_age_s {
+            // hold last outputs; warn once per stale episode
+            if !self.stale.swap(true, Ordering::Relaxed) {
+                self.stale_holds.fetch_add(1, Ordering::Relaxed);
+                log_warn!(
+                    "control",
+                    "gauges stale ({age:.1}s > {:.1}s): holding controller outputs",
+                    self.cfg.max_gauge_age_s
+                );
+            }
+            return;
+        }
+        self.stale.store(false, Ordering::Relaxed);
+        let last = self.last_tick.load(Ordering::Relaxed);
+        if tick <= last
+            || self
+                .last_tick
+                .compare_exchange(last, tick, Ordering::Relaxed, Ordering::Relaxed)
+                .is_err()
+        {
+            return; // sample already processed (or a racer won it)
+        }
+        if let Some(d) = self.admission.step(&g) {
+            self.log.push(d);
+        }
+        if let Some(d) = self.capacity.step(&g) {
+            self.log.push(d);
+        }
+        if let Some(c) = self.staleness.get() {
+            if let Some(d) = c.step(&g) {
+                self.log.push(d);
+            }
+        }
+    }
+
+    /// Admission gate for explorer drivers: `false` = serving pressure
+    /// is over band, hold the next batch launch.
+    pub fn admit(&self) -> bool {
+        self.tick();
+        self.admission.open()
+    }
+
+    /// Per-driver batch-task count steered to live replica capacity.
+    pub fn batch_tasks(&self) -> usize {
+        self.tick();
+        self.capacity.tasks()
+    }
+
+    /// Times controllers entered a stale-gauge hold.
+    pub fn stale_holds(&self) -> u64 {
+        self.stale_holds.load(Ordering::Relaxed)
+    }
+
+    pub fn snapshot(&self) -> ControlSnapshot {
+        ControlSnapshot {
+            decisions: self.log.total(),
+            stale_holds: self.stale_holds(),
+            admission_open: self.admission.open(),
+            pressure: self.admission.pressure(),
+            batch_tasks: self.capacity.tasks(),
+            staleness_lag: self.staleness.get().map(|c| c.output().round() as u64),
+            recent: self.log.recent(),
+        }
+    }
+}
+
+/// Point-in-time controller state; rides in `ModeReport.control` and
+/// feeds the monitor's `control/...` series.
+#[derive(Debug, Clone)]
+pub struct ControlSnapshot {
+    /// Output changes over the run.
+    pub decisions: u64,
+    /// Stale-gauge hold episodes.
+    pub stale_holds: u64,
+    /// Whether explorer batch launches are currently admitted.
+    pub admission_open: bool,
+    /// Last normalized serving pressure (1.0 = at band).
+    pub pressure: f64,
+    /// Current per-driver batch-task output.
+    pub batch_tasks: usize,
+    /// Current staleness window, when an adaptive policy is registered.
+    pub staleness_lag: Option<u64>,
+    /// Retained decision tail, oldest first.
+    pub recent: Vec<Decision>,
+}
+
+impl ControlSnapshot {
+    /// Flat `(key, value)` series for the monitor's `control` role.
+    pub fn monitor_fields(&self) -> Vec<(String, f64)> {
+        let mut out = vec![
+            ("control/decisions".to_string(), self.decisions as f64),
+            ("control/admission_open".to_string(), if self.admission_open { 1.0 } else { 0.0 }),
+            ("control/pressure".to_string(), self.pressure),
+            ("control/batch_tasks".to_string(), self.batch_tasks as f64),
+            ("control/stale_holds".to_string(), self.stale_holds as f64),
+        ];
+        if let Some(lag) = self.staleness_lag {
+            out.push(("control/staleness_lag".to_string(), lag as f64));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn ctx() -> ControlContext {
+        ControlContext {
+            replicas: 2,
+            session_rows: 4,
+            repeat_times: 2,
+            explorer_count: 1,
+            batch_tasks: 4,
+            max_buffer_depth: 0,
+        }
+    }
+
+    fn enabled_cfg() -> ControlConfig {
+        ControlConfig { enabled: true, ..Default::default() }
+    }
+
+    #[test]
+    fn config_defaults_off_and_validation_bands() {
+        let d = ControlConfig::default();
+        assert!(!d.enabled);
+        assert!(d.validate().is_ok());
+        let mut on = enabled_cfg();
+        assert!(on.validate().is_ok());
+        on.staleness_lo = 0.9; // lo >= hi
+        assert!(on.validate().is_err());
+        let mut on = enabled_cfg();
+        on.release = 1.0;
+        assert!(on.validate().is_err());
+        let mut on = enabled_cfg();
+        on.hold_ticks = 0;
+        assert!(on.validate().is_err());
+        let mut on = enabled_cfg();
+        on.max_batch_tasks = 1;
+        on.min_batch_tasks = 2;
+        assert!(on.validate().is_err());
+        let mut on = enabled_cfg();
+        on.quarantine_hi = 1.5;
+        assert!(on.validate().is_err());
+    }
+
+    #[test]
+    fn decision_log_bounds_retention_and_counts_all() {
+        let log = DecisionLog::new(2, None);
+        for i in 0..5 {
+            log.push(Decision {
+                controller: ControllerId::Capacity,
+                at_s: i as f64,
+                from: i as f64,
+                to: i as f64 + 1.0,
+                cause: "test",
+            });
+        }
+        assert_eq!(log.total(), 5);
+        let recent = log.recent();
+        assert_eq!(recent.len(), 2);
+        assert_eq!(recent[0].at_s, 3.0);
+        assert_eq!(recent[1].at_s, 4.0);
+    }
+
+    #[test]
+    fn decision_detail_packs_controller_and_value() {
+        let d = Decision {
+            controller: ControllerId::Staleness,
+            at_s: 0.0,
+            from: 1.0,
+            to: 3.0,
+            cause: "widen",
+        };
+        assert_eq!(d.detail(), (1u64 << 32) | 3);
+    }
+
+    #[test]
+    fn decision_log_mirrors_to_control_spans() {
+        let rec = Arc::new(SpanRecorder::new(64));
+        let log = DecisionLog::new(8, Some(Arc::clone(&rec)));
+        log.push(Decision {
+            controller: ControllerId::Admission,
+            at_s: 0.0,
+            from: 1.0,
+            to: 0.0,
+            cause: "pressure over band",
+        });
+        let spans = rec.drain();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].kind, SpanKind::ControlDecision);
+        assert_eq!(spans[0].detail >> 32, ControllerId::Admission as u64);
+    }
+
+    #[test]
+    fn plane_processes_each_tick_once_and_holds_on_stale() {
+        let hub = Arc::new(TelemetryHub::new(Duration::from_micros(1)));
+        let mut cfg = enabled_cfg();
+        cfg.hold_ticks = 1;
+        cfg.max_gauge_age_s = 0.5;
+        let plane = ControlPlane::new(cfg, ctx(), Arc::clone(&hub), None);
+
+        // no publish yet: reads return defaults without stepping
+        assert!(plane.admit());
+        assert_eq!(plane.batch_tasks(), 4);
+        assert_eq!(plane.snapshot().decisions, 0);
+
+        // a heavily over-band sample closes admission after hold_ticks=1
+        hub.publish(Gauges { queue_wait_p95_s: 10.0, ..Default::default() });
+        assert!(!plane.admit(), "over-band pressure must close the gate");
+        let after_close = plane.snapshot().decisions;
+        // same sample again: no double-step, output held
+        assert!(!plane.admit());
+        assert_eq!(plane.snapshot().decisions, after_close);
+
+        // recovery sample reopens
+        hub.publish(Gauges::default());
+        assert!(plane.admit(), "calm pressure must reopen the gate");
+        assert!(plane.snapshot().decisions > after_close);
+        assert_eq!(plane.stale_holds(), 0);
+
+        // let a fresh over-band sample age past max_gauge_age_s: the
+        // plane holds and records one stale episode no matter how often
+        // it is polled
+        hub.publish(Gauges { queue_wait_p95_s: 10.0, ..Default::default() });
+        std::thread::sleep(Duration::from_millis(600));
+        let before = plane.snapshot().decisions;
+        assert!(plane.admit(), "stale over-band sample must NOT close the gate");
+        assert!(plane.admit());
+        assert_eq!(plane.snapshot().decisions, before, "no decisions on stale gauges");
+        assert_eq!(plane.stale_holds(), 1, "warn/hold once per stale episode");
+    }
+
+    #[test]
+    fn snapshot_monitor_fields_cover_every_output() {
+        let hub = Arc::new(TelemetryHub::new(Duration::from_micros(1)));
+        let plane = ControlPlane::new(enabled_cfg(), ctx(), hub, None);
+        let fields = plane.snapshot().monitor_fields();
+        let keys: Vec<&str> = fields.iter().map(|(k, _)| k.as_str()).collect();
+        for k in [
+            "control/decisions",
+            "control/admission_open",
+            "control/pressure",
+            "control/batch_tasks",
+            "control/stale_holds",
+        ] {
+            assert!(keys.contains(&k), "missing {k} in {keys:?}");
+        }
+        // no staleness controller adopted -> no lag series
+        assert!(!keys.contains(&"control/staleness_lag"));
+    }
+}

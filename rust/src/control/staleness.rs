@@ -1,0 +1,296 @@
+//! Adaptive staleness: `BoundedStaleness` whose version-lag window is a
+//! controller output instead of a hand-tuned constant.
+//!
+//! The signal is the trainer's starvation ratio — `sample_wait` p95
+//! measured against rollout latency p95 (both published as gauges).  A
+//! trainer that waits a large fraction of a rollout per step is starved
+//! by the admission gate; one that never waits is paying off-policyness
+//! for nothing.  The window moves AIMD-style between those bands:
+//!
+//! * **widen +1** (additive) after `hold_ticks` consecutive samples
+//!   with `wait_p95 > staleness_hi × rollout_p95` — starvation earns
+//!   staleness one window at a time;
+//! * **narrow ÷2** (multiplicative) after `hold_ticks` consecutive
+//!   samples with `wait_p95 < staleness_lo × rollout_p95` — comfort
+//!   gives staleness back quickly, biasing the run on-policy;
+//! * waits under `staleness_floor_s` never count as starvation, so
+//!   µs-scale scheduling noise cannot widen the window.
+//!
+//! The output is clamped to `[0, max_version_lag]`: the static cap
+//! becomes the *ceiling* the controller works under.  When `[control]`
+//! is disabled the window pins at that ceiling and the policy is
+//! byte-identical to `BoundedStaleness { max_version_lag }`; when
+//! enabled it slow-starts at `min(1, max_version_lag)` and earns the
+//! rest from evidence.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::coordinator::config::RftConfig;
+use crate::coordinator::policy::{ExplorerPlan, Progress, SyncPolicy};
+use crate::obs::Gauges;
+
+use super::{ControlConfig, ControlPlane, Controller, ControllerId, Decision};
+
+/// The controller half of [`AdaptiveStaleness`]: owns the live lag and
+/// is stepped by the [`ControlPlane`] once per fresh gauge sample.
+pub struct StalenessCore {
+    max_lag: u64,
+    hi: f64,
+    lo: f64,
+    floor_s: f64,
+    hold_ticks: u64,
+    lag: AtomicU64,
+    streak_widen: AtomicU64,
+    streak_narrow: AtomicU64,
+}
+
+impl StalenessCore {
+    pub fn new(max_lag: u64, ctl: &ControlConfig) -> StalenessCore {
+        StalenessCore {
+            max_lag,
+            hi: ctl.staleness_hi,
+            lo: ctl.staleness_lo,
+            floor_s: ctl.staleness_floor_s,
+            hold_ticks: ctl.hold_ticks.max(1),
+            // uncontrolled default: pin at the ceiling (= BoundedStaleness)
+            lag: AtomicU64::new(max_lag),
+            streak_widen: AtomicU64::new(0),
+            streak_narrow: AtomicU64::new(0),
+        }
+    }
+
+    /// The live version-lag window.
+    pub fn lag(&self) -> u64 {
+        self.lag.load(Ordering::Relaxed)
+    }
+
+    /// Switch from the pinned ceiling to closed-loop control: slow-start
+    /// at one window and earn the rest from observed starvation.
+    pub fn enable(&self) {
+        self.lag.store(1.min(self.max_lag), Ordering::Relaxed);
+    }
+}
+
+impl Controller for StalenessCore {
+    fn id(&self) -> ControllerId {
+        ControllerId::Staleness
+    }
+
+    fn bounds(&self) -> (f64, f64) {
+        (0.0, self.max_lag as f64)
+    }
+
+    fn output(&self) -> f64 {
+        self.lag() as f64
+    }
+
+    fn step(&self, g: &Gauges) -> Option<Decision> {
+        let wait = g.sample_wait_p95_s;
+        // reference scale: one rollout, floored so a near-idle service
+        // cannot make the bands degenerate
+        let reference = g.rollout_p95_s.max(self.floor_s);
+        let cur = self.lag.load(Ordering::Relaxed);
+        let next = if wait > (self.hi * reference).max(self.floor_s) {
+            self.streak_narrow.store(0, Ordering::Relaxed);
+            if self.streak_widen.fetch_add(1, Ordering::Relaxed) + 1 < self.hold_ticks {
+                return None;
+            }
+            cur.saturating_add(1).min(self.max_lag) // additive widen
+        } else if wait < self.lo * reference {
+            self.streak_widen.store(0, Ordering::Relaxed);
+            if self.streak_narrow.fetch_add(1, Ordering::Relaxed) + 1 < self.hold_ticks {
+                return None;
+            }
+            cur / 2 // multiplicative narrow
+        } else {
+            self.streak_widen.store(0, Ordering::Relaxed);
+            self.streak_narrow.store(0, Ordering::Relaxed);
+            return None;
+        };
+        self.streak_widen.store(0, Ordering::Relaxed);
+        self.streak_narrow.store(0, Ordering::Relaxed);
+        if next == cur {
+            return None;
+        }
+        self.lag.store(next, Ordering::Relaxed);
+        Some(Decision {
+            controller: ControllerId::Staleness,
+            at_s: g.at_s,
+            from: cur as f64,
+            to: next as f64,
+            cause: if next > cur { "trainer starved: widen" } else { "trainer fed: narrow" },
+        })
+    }
+}
+
+/// The registered `SyncPolicy` (`scheduler.policy = "adaptive"`):
+/// [`BoundedStaleness`](crate::coordinator::BoundedStaleness) admission
+/// over the [`StalenessCore`]'s live window.
+pub struct AdaptiveStaleness {
+    interval: u64,
+    core: Arc<StalenessCore>,
+}
+
+impl AdaptiveStaleness {
+    pub fn from_cfg(cfg: &RftConfig) -> AdaptiveStaleness {
+        AdaptiveStaleness {
+            interval: cfg.sync_interval.max(1),
+            core: Arc::new(StalenessCore::new(
+                cfg.scheduler.max_version_lag,
+                &cfg.control.to_control_config(),
+            )),
+        }
+    }
+
+    /// The controller half (tests and the plane hold it directly).
+    pub fn core(&self) -> &Arc<StalenessCore> {
+        &self.core
+    }
+}
+
+impl SyncPolicy for AdaptiveStaleness {
+    fn label(&self, explorer_count: usize) -> String {
+        format!(
+            "adaptive(i={},lag<={},x{explorer_count})",
+            self.interval,
+            self.core.max_lag
+        )
+    }
+    fn explorer_plan(&self, _total_steps: u64) -> ExplorerPlan {
+        ExplorerPlan::FreeRun
+    }
+    fn admit(&self, batch: u64, progress: Progress) -> bool {
+        batch / self.interval <= progress.published_windows + self.core.lag()
+    }
+    fn publish_after(&self, steps_done: u64) -> bool {
+        steps_done % self.interval == 0
+    }
+    fn version_lag(&self, batch: u64, weight_version: u64) -> u64 {
+        (batch / self.interval).saturating_sub(weight_version)
+    }
+    fn connect_control(&self, plane: &Arc<ControlPlane>) {
+        self.core.enable();
+        plane.adopt_staleness(Arc::clone(&self.core) as Arc<dyn Controller>);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::resolve_policy;
+
+    fn core(max_lag: u64, hold: u64) -> StalenessCore {
+        let ctl = ControlConfig {
+            hold_ticks: hold,
+            staleness_hi: 0.5,
+            staleness_lo: 0.1,
+            staleness_floor_s: 0.005,
+            ..Default::default()
+        };
+        StalenessCore::new(max_lag, &ctl)
+    }
+
+    fn sample(wait: f64, rollout: f64) -> Gauges {
+        Gauges { sample_wait_p95_s: wait, rollout_p95_s: rollout, ..Default::default() }
+    }
+
+    #[test]
+    fn disabled_core_pins_at_the_ceiling() {
+        let c = core(3, 1);
+        assert_eq!(c.lag(), 3, "uncontrolled = BoundedStaleness(max_version_lag)");
+        c.enable();
+        assert_eq!(c.lag(), 1, "enabled control slow-starts at one window");
+        assert_eq!(core(0, 1).lag(), 0, "ceiling 0 stays 0");
+    }
+
+    #[test]
+    fn widens_additively_under_starvation_and_clamps() {
+        let c = core(3, 1);
+        c.enable();
+        let starved = sample(2.0, 1.0); // wait = 2x rollout >> hi band
+        let d = c.step(&starved).expect("starvation widens");
+        assert_eq!((d.from, d.to), (1.0, 2.0));
+        assert_eq!(d.cause, "trainer starved: widen");
+        c.step(&starved);
+        assert_eq!(c.lag(), 3);
+        assert!(c.step(&starved).is_none(), "clamped at max_version_lag");
+        assert_eq!(c.lag(), 3);
+        assert_eq!(c.bounds(), (0.0, 3.0));
+    }
+
+    #[test]
+    fn narrows_multiplicatively_when_comfortable() {
+        let c = core(8, 1);
+        // pinned at 8; comfort: wait far under lo * rollout
+        let comfy = sample(0.01, 1.0);
+        let d = c.step(&comfy).expect("comfort narrows");
+        assert_eq!((d.from, d.to), (8.0, 4.0), "halving, not -1");
+        assert_eq!(d.cause, "trainer fed: narrow");
+        c.step(&comfy);
+        c.step(&comfy);
+        c.step(&comfy);
+        assert_eq!(c.lag(), 0, "8 -> 4 -> 2 -> 1 -> 0");
+        assert!(c.step(&comfy).is_none());
+    }
+
+    #[test]
+    fn in_band_and_sub_floor_waits_hold_the_window() {
+        let c = core(8, 1);
+        c.enable();
+        // between lo and hi: hold
+        assert!(c.step(&sample(0.3, 1.0)).is_none());
+        assert_eq!(c.lag(), 1);
+        // over hi ratio but under the absolute floor: scheduling noise,
+        // must not widen
+        assert!(c.step(&sample(0.004, 0.001)).is_none());
+        assert_eq!(c.lag(), 1);
+    }
+
+    #[test]
+    fn hold_ticks_require_consecutive_evidence() {
+        let c = core(4, 2);
+        c.enable();
+        let starved = sample(2.0, 1.0);
+        let in_band = sample(0.3, 1.0);
+        assert!(c.step(&starved).is_none(), "first out-of-band sample held");
+        assert!(c.step(&in_band).is_none(), "in-band resets the streak");
+        assert!(c.step(&starved).is_none());
+        assert!(c.step(&starved).is_some(), "second consecutive sample acts");
+        assert_eq!(c.lag(), 2);
+    }
+
+    #[test]
+    fn adaptive_policy_admission_tracks_the_live_window() {
+        let mut cfg = RftConfig::default();
+        cfg.sync_interval = 1;
+        cfg.scheduler.max_version_lag = 4;
+        let p = AdaptiveStaleness::from_cfg(&cfg);
+        let at = |published_windows| Progress { published_windows, ..Default::default() };
+        // uncontrolled: behaves as BoundedStaleness(4)
+        assert!(p.admit(4, at(0)));
+        assert!(!p.admit(5, at(0)));
+        assert_eq!(p.version_lag(6, 2), 4);
+        // enabled: slow-start at 1
+        p.core().enable();
+        assert!(p.admit(1, at(0)));
+        assert!(!p.admit(2, at(0)), "window shrank to the slow-start lag");
+        // widening reopens admission without a publish
+        p.core().step(&sample(2.0, 1.0));
+        p.core().step(&sample(2.0, 1.0));
+        assert!(p.admit(3, at(0)));
+        assert!(p.label(2).contains("adaptive(i=1,lag<=4,x2)"), "{}", p.label(2));
+        assert_eq!(p.explorer_plan(9), ExplorerPlan::FreeRun);
+        assert!(p.publish_after(1) && p.publish_after(2));
+    }
+
+    #[test]
+    fn adaptive_registers_in_the_policy_registry() {
+        let mut cfg = RftConfig::default();
+        cfg.scheduler.policy = Some("Adaptive".into());
+        cfg.sync_interval = 2;
+        cfg.scheduler.max_version_lag = 3;
+        let p = resolve_policy(&cfg).unwrap();
+        assert_eq!(p.label(1), "adaptive(i=2,lag<=3,x1)");
+    }
+}

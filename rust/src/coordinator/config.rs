@@ -90,6 +90,11 @@ impl Default for SchedulerSection {
 /// Typed rollout-service section (`service.*`): when enabled, explorers
 /// share a replica pool behind the in-process rollout service instead of
 /// holding direct engine handles (paper §2.2; DESIGN.md §6).
+///
+/// On by default: the single-replica service is the standard rollout
+/// path (rollout output is byte-identical to direct engine handles —
+/// see `integration_service.rs`); `enabled: false` opts back into
+/// direct handles for runs that need `Explorer::engine`.
 #[derive(Debug, Clone)]
 pub struct ServiceSection {
     pub enabled: bool,
@@ -134,7 +139,7 @@ impl Default for ServiceSection {
     fn default() -> Self {
         let d = crate::service::ServiceConfig::default();
         ServiceSection {
-            enabled: false,
+            enabled: true,
             replicas: 1,
             max_batch: d.max_batch,
             admission_window_ms: d.admission_window.as_millis() as u64,
@@ -230,6 +235,87 @@ impl ObservabilitySection {
     }
 }
 
+/// Typed control section (`control.*`): the adaptive control plane over
+/// the telemetry gauges (DESIGN.md §9).  Off by default — when disabled
+/// no `ControlPlane` is built and scheduling is byte-identical.
+#[derive(Debug, Clone)]
+pub struct ControlSection {
+    pub enabled: bool,
+    /// Hold controller outputs when the latest gauge sample is older.
+    pub max_gauge_age_s: f64,
+    /// Decisions retained for the run report.
+    pub log_capacity: usize,
+    /// Consecutive out-of-band samples before any output moves.
+    pub hold_ticks: u64,
+    /// Widen staleness above this fraction of rollout p95.
+    pub staleness_hi: f64,
+    /// Narrow staleness below this fraction of rollout p95.
+    pub staleness_lo: f64,
+    /// Sample waits under this are noise, never starvation (seconds).
+    pub staleness_floor_s: f64,
+    /// Queue-wait p95 mapping to admission pressure 1.0 (seconds).
+    pub wait_hi_s: f64,
+    /// Queued requests per healthy replica mapping to pressure 1.0.
+    pub queue_hi: f64,
+    /// Quarantined pool fraction mapping to pressure 1.0.
+    pub quarantine_hi: f64,
+    /// Pressure at which a closed admission gate reopens.
+    pub release: f64,
+    /// Rows of headroom (× live capacity) the capacity controller targets.
+    pub capacity_headroom: f64,
+    /// Lower clamp for per-driver batch tasks.
+    pub min_batch_tasks: usize,
+    /// Upper clamp for per-driver batch tasks (0 = configured `batch_tasks`).
+    pub max_batch_tasks: usize,
+}
+
+impl Default for ControlSection {
+    /// Knob defaults come from `control::ControlConfig::default()` — one
+    /// source of truth for YAML-configured and programmatic users.
+    fn default() -> Self {
+        let d = crate::control::ControlConfig::default();
+        ControlSection {
+            enabled: d.enabled,
+            max_gauge_age_s: d.max_gauge_age_s,
+            log_capacity: d.log_capacity,
+            hold_ticks: d.hold_ticks,
+            staleness_hi: d.staleness_hi,
+            staleness_lo: d.staleness_lo,
+            staleness_floor_s: d.staleness_floor_s,
+            wait_hi_s: d.wait_hi_s,
+            queue_hi: d.queue_hi,
+            quarantine_hi: d.quarantine_hi,
+            release: d.release,
+            capacity_headroom: d.capacity_headroom,
+            min_batch_tasks: d.min_batch_tasks,
+            max_batch_tasks: d.max_batch_tasks,
+        }
+    }
+}
+
+impl ControlSection {
+    /// Bad values survive the conversion so `ControlConfig::validate`
+    /// rejects them loudly instead of silently correcting the config.
+    pub fn to_control_config(&self) -> crate::control::ControlConfig {
+        crate::control::ControlConfig {
+            enabled: self.enabled,
+            max_gauge_age_s: self.max_gauge_age_s,
+            log_capacity: self.log_capacity,
+            hold_ticks: self.hold_ticks,
+            staleness_hi: self.staleness_hi,
+            staleness_lo: self.staleness_lo,
+            staleness_floor_s: self.staleness_floor_s,
+            wait_hi_s: self.wait_hi_s,
+            queue_hi: self.queue_hi,
+            quarantine_hi: self.quarantine_hi,
+            release: self.release,
+            capacity_headroom: self.capacity_headroom,
+            min_batch_tasks: self.min_batch_tasks,
+            max_batch_tasks: self.max_batch_tasks,
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct RftConfig {
     /// both | async | explore | train | bench
@@ -240,6 +326,8 @@ pub struct RftConfig {
     pub service: ServiceSection,
     /// Typed observability keys (see [`ObservabilitySection`]).
     pub observability: ObservabilitySection,
+    /// Typed control-plane keys (see [`ControlSection`]).
+    pub control: ControlSection,
     pub model_preset: String,
     pub seed: u64,
     /// Registered algorithm name (see `trinity algorithms list`).
@@ -300,6 +388,7 @@ impl Default for RftConfig {
             scheduler: SchedulerSection::default(),
             service: ServiceSection::default(),
             observability: ObservabilitySection::default(),
+            control: ControlSection::default(),
             model_preset: "tiny".into(),
             seed: 42,
             algorithm: "grpo".into(),
@@ -456,6 +545,29 @@ impl RftConfig {
             cfg.observability.trace_path = Some(p.to_string());
         }
 
+        // typed control-plane section
+        b("control.enabled", &mut cfg.control.enabled);
+        us("control.log_capacity", &mut cfg.control.log_capacity);
+        u("control.hold_ticks", &mut cfg.control.hold_ticks);
+        us("control.min_batch_tasks", &mut cfg.control.min_batch_tasks);
+        us("control.max_batch_tasks", &mut cfg.control.max_batch_tasks);
+        {
+            let g = |key: &str, out: &mut f64| {
+                if let Some(x) = v.path(key).and_then(Value::as_f64) {
+                    *out = x;
+                }
+            };
+            g("control.max_gauge_age_s", &mut cfg.control.max_gauge_age_s);
+            g("control.staleness_hi", &mut cfg.control.staleness_hi);
+            g("control.staleness_lo", &mut cfg.control.staleness_lo);
+            g("control.staleness_floor_s", &mut cfg.control.staleness_floor_s);
+            g("control.wait_hi_s", &mut cfg.control.wait_hi_s);
+            g("control.queue_hi", &mut cfg.control.queue_hi);
+            g("control.quarantine_hi", &mut cfg.control.quarantine_hi);
+            g("control.release", &mut cfg.control.release);
+            g("control.capacity_headroom", &mut cfg.control.capacity_headroom);
+        }
+
         us("explorer.count", &mut cfg.explorer_count);
         us("explorer.threads", &mut cfg.explorer_threads);
         us("explorer.batch_tasks", &mut cfg.batch_tasks);
@@ -536,6 +648,8 @@ impl RftConfig {
             }
             self.observability.to_obs_config().validate()?;
         }
+        // no-op when [control] is absent/disabled
+        self.control.to_control_config().validate()?;
         Ok(())
     }
 
@@ -772,10 +886,15 @@ service:
         assert!((sc.request_timeout.as_secs_f64() - 9.5).abs() < 1e-9);
         assert_eq!((sc.max_attempts, sc.breaker_failures), (4, 2));
         assert!((sc.quarantine.as_secs_f64() - 0.25).abs() < 1e-9);
-        // defaults: service off, sane knobs
-        let off = RftConfig::from_value(&yamlite::parse("mode: both\n").unwrap()).unwrap();
+        // defaults: single-replica service ON (the standard rollout
+        // path), opt-out honored
+        let d = RftConfig::from_value(&yamlite::parse("mode: both\n").unwrap()).unwrap();
+        assert!(d.service.enabled);
+        assert_eq!(d.service.replicas, 1);
+        let off =
+            RftConfig::from_value(&yamlite::parse("mode: both\nservice:\n  enabled: false\n").unwrap())
+                .unwrap();
         assert!(!off.service.enabled);
-        assert_eq!(off.service.replicas, 1);
         // bad knobs fail at config time
         let bad = "mode: both\nservice:\n  enabled: true\n  replicas: 0\n";
         assert!(RftConfig::from_value(&yamlite::parse(bad).unwrap()).is_err());
@@ -889,5 +1008,68 @@ observability:
         let yaml = "mode: train\nalgorithm:\n  name: opmd_kimi\n  tau: 2.0\n  opmd:\n    tau: 0.7\n";
         let cfg = RftConfig::from_value(&yamlite::parse(yaml).unwrap()).unwrap();
         assert!((cfg.opmd.tau - 0.7).abs() < 1e-6);
+    }
+
+    #[test]
+    fn control_section_parses_and_validates() {
+        let yaml = "\
+mode: both
+control:
+  enabled: true
+  max_gauge_age_s: 5.0
+  hold_ticks: 3
+  staleness_hi: 0.6
+  staleness_lo: 0.2
+  wait_hi_s: 0.5
+  queue_hi: 8
+  quarantine_hi: 0.25
+  release: 0.5
+  capacity_headroom: 1.5
+  min_batch_tasks: 2
+  max_batch_tasks: 12
+";
+        let cfg = RftConfig::from_value(&yamlite::parse(yaml).unwrap()).unwrap();
+        assert!(cfg.control.enabled);
+        let cc = cfg.control.to_control_config();
+        assert!((cc.max_gauge_age_s - 5.0).abs() < 1e-9);
+        assert_eq!(cc.hold_ticks, 3);
+        assert!((cc.staleness_hi - 0.6).abs() < 1e-9);
+        assert!((cc.staleness_lo - 0.2).abs() < 1e-9);
+        assert!((cc.wait_hi_s - 0.5).abs() < 1e-9);
+        assert!((cc.queue_hi - 8.0).abs() < 1e-9);
+        assert!((cc.quarantine_hi - 0.25).abs() < 1e-9);
+        assert!((cc.release - 0.5).abs() < 1e-9);
+        assert!((cc.capacity_headroom - 1.5).abs() < 1e-9);
+        assert_eq!((cc.min_batch_tasks, cc.max_batch_tasks), (2, 12));
+        // defaults: control off, zero behavioral delta
+        let off = RftConfig::from_value(&yamlite::parse("mode: both\n").unwrap()).unwrap();
+        assert!(!off.control.enabled);
+        // bad bands fail at config time (only when enabled)
+        let bad = "mode: both\ncontrol:\n  enabled: true\n  release: 1.5\n";
+        assert!(RftConfig::from_value(&yamlite::parse(bad).unwrap()).is_err());
+        let bad = "mode: both\ncontrol:\n  enabled: true\n  staleness_lo: 0.9\n";
+        assert!(RftConfig::from_value(&yamlite::parse(bad).unwrap()).is_err());
+        let bad = "mode: both\ncontrol:\n  enabled: true\n  hold_ticks: 0\n";
+        assert!(RftConfig::from_value(&yamlite::parse(bad).unwrap()).is_err());
+        let ok = "mode: both\ncontrol:\n  release: 1.5\n"; // disabled: not validated
+        assert!(RftConfig::from_value(&yamlite::parse(ok).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn adaptive_policy_resolves_from_config() {
+        let yaml = "\
+mode: async
+scheduler:
+  policy: adaptive
+  max_version_lag: 3
+sync:
+  interval: 2
+control:
+  enabled: true
+";
+        let cfg = RftConfig::from_value(&yamlite::parse(yaml).unwrap()).unwrap();
+        let p = resolve_policy(&cfg).unwrap();
+        assert_eq!(p.label(1), "adaptive(i=2,lag<=3,x1)");
+        assert!(p.multi_explorer(), "adaptive is free-running");
     }
 }

@@ -10,7 +10,10 @@ pub mod report;
 pub mod scheduler;
 pub mod tasks;
 
-pub use config::{DpoSection, MixSection, OpmdSection, RftConfig, SchedulerSection, ServiceSection};
+pub use config::{
+    ControlSection, DpoSection, MixSection, ObservabilitySection, OpmdSection, RftConfig,
+    SchedulerSection, ServiceSection,
+};
 pub use monitor::Monitor;
 pub use policy::{
     resolve_policy, BoundedStaleness, ExplorerPlan, Free, Offline, Progress, RftMode, SyncPolicy,

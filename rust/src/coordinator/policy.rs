@@ -113,6 +113,15 @@ pub trait SyncPolicy: Send + Sync {
     fn connect_telemetry(&self, hub: &std::sync::Arc<crate::obs::TelemetryHub>) {
         let _ = hub;
     }
+    /// Called once at session start when the `[control]` plane is
+    /// enabled: a controller-backed policy (e.g. `"adaptive"`) registers
+    /// its controller with the [`ControlPlane`](crate::control::ControlPlane)
+    /// so the plane steps it on fresh gauge samples and its decisions
+    /// land in the shared log.  The default ignores it, so plain
+    /// policies run unchanged under an enabled plane.
+    fn connect_control(&self, plane: &std::sync::Arc<crate::control::ControlPlane>) {
+        let _ = plane;
+    }
 }
 
 /// Windowed gating (`mode=both`, Fig. 4 a/b): the explorer may start
@@ -293,6 +302,9 @@ impl SyncPolicyRegistry {
                 max_version_lag: cfg.scheduler.max_version_lag,
             }))
         };
+        let adaptive = |cfg: &RftConfig| -> Result<Arc<dyn SyncPolicy>> {
+            Ok(Arc::new(crate::control::AdaptiveStaleness::from_cfg(cfg)))
+        };
         r.register("windowed", windowed);
         r.register("both", windowed);
         r.register("free", free);
@@ -301,6 +313,7 @@ impl SyncPolicyRegistry {
         r.register("train", offline);
         r.register("bounded_staleness", bounded);
         r.register("staleness", bounded);
+        r.register("adaptive", adaptive);
         r
     }
 

@@ -55,6 +55,9 @@ pub struct ModeReport {
     /// Trainer-side sample-wait latency distribution (seconds the
     /// trainer blocked on the buffer per step).
     pub sample_wait: HistSnapshot,
+    /// End-of-run control-plane state (`[control]` enabled runs only):
+    /// decision counts and the live outputs of every controller.
+    pub control: Option<crate::control::ControlSnapshot>,
     /// Where the Chrome trace-event file was written, when observability
     /// was enabled and the run exported one.
     pub trace_path: Option<PathBuf>,
@@ -202,6 +205,18 @@ impl RunRecorder {
         self.monitor.log("service", step, &snap.monitor_fields());
     }
 
+    /// Log control-plane state under the "control" role (the scheduler
+    /// calls this at publish boundaries and at run end).
+    pub fn control(&self, step: u64, snap: &crate::control::ControlSnapshot) {
+        self.monitor.log("control", step, &snap.monitor_fields());
+    }
+
+    /// Trainer sample-wait p95 so far, seconds (the staleness
+    /// controller's starvation signal; gauge `sample_wait_p95_s`).
+    pub fn sample_wait_p95(&self) -> f64 {
+        self.sample_wait.snapshot().percentile(0.95)
+    }
+
     pub fn sync_count(&self) -> u64 {
         self.sync_count.load(Ordering::SeqCst)
     }
@@ -233,6 +248,7 @@ impl RunRecorder {
             final_eval: None,
             service: None,
             sample_wait: self.sample_wait.snapshot(),
+            control: None,
             trace_path: None,
         }
     }
@@ -291,6 +307,45 @@ mod tests {
         rec.service(1, &snap);
         assert_eq!(monitor.series_values("service/occupancy"), vec![3.0]);
         assert_eq!(monitor.series("service/queued").len(), 1);
+    }
+
+    #[test]
+    fn recorder_logs_control_snapshots_under_control_role() {
+        let monitor = Arc::new(Monitor::in_memory());
+        let rec = RunRecorder::new(Arc::clone(&monitor), Instant::now());
+        let snap = crate::control::ControlSnapshot {
+            decisions: 3,
+            stale_holds: 0,
+            admission_open: true,
+            pressure: 0.4,
+            batch_tasks: 2,
+            staleness_lag: Some(1),
+            recent: vec![],
+        };
+        rec.control(7, &snap);
+        assert_eq!(monitor.series_values("control/decisions"), vec![3.0]);
+        assert_eq!(monitor.series_values("control/admission_open"), vec![1.0]);
+        assert_eq!(monitor.series_values("control/staleness_lag"), vec![1.0]);
+    }
+
+    #[test]
+    fn sample_wait_p95_tracks_the_live_histogram() {
+        let rec = RunRecorder::new(Arc::new(Monitor::in_memory()), Instant::now());
+        assert_eq!(rec.sample_wait_p95(), 0.0, "empty histogram reads 0");
+        let now = Instant::now();
+        for (i, wait) in [0.010, 0.010, 0.010, 0.200].iter().enumerate() {
+            let m = StepMetrics {
+                step: i as u64 + 1,
+                named: vec![],
+                mean_reward: 0.0,
+                mean_response_len: 0.0,
+                sample_wait_s: *wait,
+                compute_s: 0.0,
+            };
+            rec.trainer_step(m.step, &m, now, now);
+        }
+        let p95 = rec.sample_wait_p95();
+        assert!(p95 > 0.05, "p95 must see the slow tail, got {p95}");
     }
 
     #[test]

@@ -16,6 +16,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Context, Result};
 
 use crate::buffer::{ExperienceBuffer, QueueBuffer, StrategyCtx};
+use crate::control::{ControlContext, ControlPlane};
 use crate::data::ShapingBuffer;
 use crate::exec::{CancellationToken, Promise, ThreadPool, WatchCell};
 use crate::explorer::{
@@ -54,6 +55,10 @@ struct ExplorerDriver {
     state: Arc<WatchCell<RunState>>,
     cancel: CancellationToken,
     batch_tasks: usize,
+    /// Control plane when `[control]` is enabled: the admission gate
+    /// joins the policy's `admit`, and per-batch task counts come from
+    /// the capacity controller instead of the static `batch_tasks`.
+    control: Option<Arc<ControlPlane>>,
     plan: ExplorerPlan,
     role: String,
 }
@@ -76,12 +81,26 @@ impl ExplorerDriver {
                     break;
                 }
             }
-            // block until the policy admits this batch (or the run ends)
+            // block until the policy admits this batch (or the run
+            // ends); free-running drivers additionally hold while the
+            // control plane's admission gate reports over-band serving
+            // pressure (budgeted plans stay policy-only — their last
+            // batches may outlive the trainer's gauge feed)
             let admitted = self.state.wait_until(|st| {
                 if self.cancel.is_cancelled() || st.failed {
                     return Some(false);
                 }
-                self.policy.admit(batches, st.progress).then_some(true)
+                if !self.policy.admit(batches, st.progress) {
+                    return None;
+                }
+                if budget.is_none() {
+                    if let Some(plane) = &self.control {
+                        if !plane.admit() {
+                            return None;
+                        }
+                    }
+                }
+                Some(true)
             });
             if !admitted {
                 break;
@@ -98,7 +117,11 @@ impl ExplorerDriver {
             let version = self.explorer.weight_version();
             let lag = self.policy.version_lag(batches, version);
             let t0 = Instant::now();
-            let tasks = self.source.next_batch(self.batch_tasks);
+            let batch_tasks = match &self.control {
+                Some(plane) => plane.batch_tasks(),
+                None => self.batch_tasks,
+            };
+            let tasks = self.source.next_batch(batch_tasks);
             match self.explorer.explore_batch(tasks) {
                 Ok(stats) => {
                     let rec = RolloutRecord {
@@ -195,16 +218,13 @@ impl RftSession {
         let monitor = Arc::new(Monitor::new(cfg.monitor_dir.clone())?);
 
         // observability plane (DESIGN.md §8): one span recorder + one
-        // gauge hub per session when enabled, nothing at all otherwise
+        // gauge hub per session when enabled, nothing at all otherwise.
+        // The control plane (DESIGN.md §9) feeds off the same gauge hub,
+        // so `[control]` alone also brings the hub up (without spans).
         let obs_cfg = cfg.observability.to_obs_config();
-        let (observer, telemetry) = if obs_cfg.enabled {
-            (
-                Some(Arc::new(SpanRecorder::new(obs_cfg.ring_capacity))),
-                Some(Arc::new(TelemetryHub::new(obs_cfg.sample_every))),
-            )
-        } else {
-            (None, None)
-        };
+        let observer = obs_cfg.enabled.then(|| Arc::new(SpanRecorder::new(obs_cfg.ring_capacity)));
+        let telemetry = (obs_cfg.enabled || cfg.control.enabled)
+            .then(|| Arc::new(TelemetryHub::new(obs_cfg.sample_every)));
         if let Some(spans) = &observer {
             engine.set_observer(Arc::clone(spans));
         }
@@ -385,12 +405,49 @@ impl RftSession {
         if let Some(hub) = &self.telemetry {
             policy.connect_telemetry(hub);
         }
+
+        // the adaptive control plane ([control]; DESIGN.md §9):
+        // controllers step off the gauge hub lazily from the explorer
+        // drivers' read paths, so no extra thread is spawned
+        let control = match &self.telemetry {
+            Some(hub) if cfg.control.enabled => {
+                let ctx = ControlContext {
+                    replicas: if cfg.service.enabled {
+                        cfg.service.replicas
+                    } else {
+                        self.explorers.len().max(1)
+                    },
+                    session_rows: if cfg.service.enabled && cfg.service.max_batch > 0 {
+                        cfg.service.max_batch
+                    } else {
+                        self.engine.gen_shape().0
+                    },
+                    repeat_times: cfg.repeat_times,
+                    explorer_count: cfg.explorer_count,
+                    batch_tasks: cfg.batch_tasks,
+                    max_buffer_depth: cfg.scheduler.max_buffer_depth,
+                };
+                let plane = ControlPlane::new(
+                    cfg.control.to_control_config(),
+                    ctx,
+                    Arc::clone(hub),
+                    self.observer.clone(),
+                );
+                // an adaptive policy hands its staleness controller to
+                // the plane here (no-op default for static policies)
+                policy.connect_control(&plane);
+                Some(plane)
+            }
+            _ => None,
+        };
+
         let publish_gauges = |depth: u64| {
             let Some(hub) = &self.telemetry else { return };
             if !hub.due(Instant::now()) {
                 return;
             }
             let mut g = Gauges { buffer_depth: depth as f64, ..Default::default() };
+            g.sample_wait_p95_s = recorder.sample_wait_p95();
             if let Some(svc) = &self.service {
                 let s = svc.snapshot();
                 g.queued = s.queued as f64;
@@ -398,6 +455,7 @@ impl RftSession {
                 g.occupancy = s.occupancy();
                 g.quarantined = s.quarantined() as f64;
                 g.queue_wait_p95_s = s.queue_wait.percentile(0.95);
+                g.rollout_p95_s = s.rollout.percentile(0.95);
                 g.weight_version =
                     s.replicas.iter().map(|r| r.weight_version).min().unwrap_or(0) as f64;
                 if let Some(c) = &s.cache {
@@ -433,6 +491,7 @@ impl RftSession {
                     state: Arc::clone(&state),
                     cancel: cancel.clone(),
                     batch_tasks: cfg.batch_tasks,
+                    control: control.clone(),
                     plan,
                     role: format!("explorer-{}", explorer.id),
                 };
@@ -459,6 +518,9 @@ impl RftSession {
                     state.update(|st| st.progress.published_windows += 1);
                     if let Some(svc) = &self.service {
                         recorder.service(t + 1, &svc.snapshot());
+                    }
+                    if let Some(plane) = &control {
+                        recorder.control(t + 1, &plane.snapshot());
                     }
                 }
                 // refresh the policy-visible buffer depth every step:
@@ -524,6 +586,7 @@ impl RftSession {
             self.client.total_exec_seconds(),
         );
         report.service = final_service;
+        report.control = control.as_ref().map(|plane| plane.snapshot());
         // drain the span ring into a Chrome trace-event file (viewable
         // in chrome://tracing / Perfetto, summarized by `trinity trace`)
         if let Some(spans) = &self.observer {

@@ -30,6 +30,10 @@
 //! * [`obs`] — the observability plane: lock-free span recorder with
 //!   per-episode trace IDs, fixed-bucket latency histograms, the
 //!   readable telemetry hub, and Chrome-trace export (DESIGN.md §8).
+//! * [`control`] — the adaptive control plane over those gauges:
+//!   bounded, hysteresis-damped controllers for staleness (the
+//!   `"adaptive"` sync policy), explorer admission, and per-driver
+//!   batch capacity, with a shared decision log (DESIGN.md §9).
 //! * [`trainer`] — the composable algorithm API: specs assembled from
 //!   advantage fns, loss specs, grouping policies and linked sample
 //!   strategies, registered in the global registry
@@ -46,6 +50,7 @@
 
 pub mod buffer;
 pub mod cache;
+pub mod control;
 pub mod coordinator;
 pub mod data;
 pub mod envs;

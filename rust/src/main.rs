@@ -24,7 +24,10 @@ fn cli() -> Cli {
     Cli::new("trinity", "Trinity-RFT reproduction — unified RFT over Rust + JAX + Pallas")
         .command(
             "run",
-            "run an RFT process from a YAML config",
+            "run an RFT process from a YAML config and print the run report \
+             ([control] runs append a `control` summary line: decision count, \
+             admission gate + pressure, live batch tasks, staleness lag, and \
+             the last three controller decisions)",
             vec![
                 arg("config", "path to YAML config"),
                 arg("mode", "override mode (both|async|train|bench)"),
@@ -194,6 +197,35 @@ fn cmd_run(m: &trinity_rft::util::cli::Matches) -> Result<()> {
             p95 * 1e3,
             p99 * 1e3
         );
+    }
+    if let Some(ctl) = &report.control {
+        let lag = match ctl.staleness_lag {
+            Some(l) => format!(", staleness lag {l}"),
+            None => String::new(),
+        };
+        println!(
+            "control         {} decisions, admission {} (pressure {:.2}), \
+             batch tasks {}{}{}",
+            ctl.decisions,
+            if ctl.admission_open { "open" } else { "closed" },
+            ctl.pressure,
+            ctl.batch_tasks,
+            lag,
+            if ctl.stale_holds > 0 {
+                format!(", {} stale-gauge holds", ctl.stale_holds)
+            } else {
+                String::new()
+            }
+        );
+        for d in ctl.recent.iter().rev().take(3).rev() {
+            println!(
+                "  {:>9}  {} -> {}  ({})",
+                d.controller.as_str(),
+                d.from,
+                d.to,
+                d.cause
+            );
+        }
     }
     if let Some(path) = &report.trace_path {
         println!("trace           {} (inspect with `trinity trace --file {0}`)", path.display());

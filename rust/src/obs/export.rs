@@ -44,6 +44,7 @@ fn category(kind: SpanKind) -> &'static str {
         SpanKind::Prefill | SpanKind::Resume | SpanKind::Decode => "replica",
         SpanKind::SyncStall => "sync",
         SpanKind::DevicePrefill | SpanKind::DeviceDecode | SpanKind::DeviceTrain => "device",
+        SpanKind::ControlDecision => "control",
     }
 }
 

@@ -15,6 +15,9 @@ use std::time::{Duration, Instant};
 /// One gauge sample: the live control-plane view a policy can act on.
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct Gauges {
+    /// Monotonic publish tick (1 for the first sample).  Controllers
+    /// compare ticks to act at most once per fresh sample.
+    pub tick: f64,
     /// Seconds since the hub was created when this sample was taken.
     pub at_s: f64,
     /// Requests waiting in service queues.
@@ -35,6 +38,10 @@ pub struct Gauges {
     pub buffer_depth: f64,
     /// Minimum weight version across serving replicas.
     pub weight_version: f64,
+    /// Trainer sample-wait p95, seconds (starvation signal).
+    pub sample_wait_p95_s: f64,
+    /// End-to-end rollout latency p95, seconds.
+    pub rollout_p95_s: f64,
 }
 
 macro_rules! gauge_fields {
@@ -60,6 +67,7 @@ macro_rules! gauge_fields {
 }
 
 gauge_fields!(
+    tick,
     at_s,
     queued,
     inflight,
@@ -70,6 +78,8 @@ gauge_fields!(
     parked,
     buffer_depth,
     weight_version,
+    sample_wait_p95_s,
+    rollout_p95_s,
 );
 
 pub struct TelemetryHub {
@@ -94,11 +104,11 @@ impl TelemetryHub {
     }
 
     /// Publish a gauge sample (any thread; readers never block).
-    /// `at_s` is stamped by the hub.
+    /// `at_s` and the monotonic `tick` are stamped by the hub.
     pub fn publish(&self, mut g: Gauges) {
         g.at_s = self.origin.elapsed().as_secs_f64();
+        g.tick = (self.samples.fetch_add(1, Ordering::Relaxed) + 1) as f64;
         self.cells.store(&g);
-        self.samples.fetch_add(1, Ordering::Relaxed);
     }
 
     /// The latest published sample (all zeros before the first publish).
@@ -109,6 +119,17 @@ impl TelemetryHub {
     /// Samples published so far.
     pub fn samples(&self) -> u64 {
         self.samples.load(Ordering::Relaxed)
+    }
+
+    /// Age of the latest sample in seconds; `f64::INFINITY` before the
+    /// first publish.  Controllers treat an old sample as *stale* and
+    /// hold their last output instead of acting on dead data.
+    pub fn age_s(&self) -> f64 {
+        let g = self.cells.load();
+        if g.tick == 0.0 {
+            return f64::INFINITY;
+        }
+        (self.origin.elapsed().as_secs_f64() - g.at_s).max(0.0)
     }
 
     /// Cadence gate: returns true at most once per `sample_every`,
@@ -155,6 +176,19 @@ mod tests {
         assert!((g.queue_wait_p95_s - 0.02).abs() < 1e-12);
         assert!(g.at_s >= 0.0);
         assert_eq!(hub.samples(), 1);
+        assert_eq!(g.tick, 1.0);
+    }
+
+    #[test]
+    fn tick_is_monotonic_and_age_tracks_the_latest_sample() {
+        let hub = TelemetryHub::new(Duration::from_millis(1));
+        assert_eq!(hub.age_s(), f64::INFINITY, "no sample yet");
+        hub.publish(Gauges::default());
+        hub.publish(Gauges { queued: 1.0, ..Default::default() });
+        let g = hub.gauges();
+        assert_eq!(g.tick, 2.0);
+        assert!(hub.age_s().is_finite());
+        assert!(hub.age_s() < 60.0);
     }
 
     #[test]

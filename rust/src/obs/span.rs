@@ -48,6 +48,9 @@ pub enum SpanKind {
     DeviceDecode = 9,
     /// Device-lane train step inside `ModelEngine`.
     DeviceTrain = 10,
+    /// A control-plane controller changed its output (`detail` packs
+    /// controller id and new value; see `control::Decision::detail`).
+    ControlDecision = 11,
 }
 
 impl SpanKind {
@@ -63,6 +66,7 @@ impl SpanKind {
             SpanKind::DevicePrefill => "device_prefill",
             SpanKind::DeviceDecode => "device_decode",
             SpanKind::DeviceTrain => "device_train",
+            SpanKind::ControlDecision => "control_decision",
         }
     }
 
@@ -78,6 +82,7 @@ impl SpanKind {
             8 => SpanKind::DevicePrefill,
             9 => SpanKind::DeviceDecode,
             10 => SpanKind::DeviceTrain,
+            11 => SpanKind::ControlDecision,
             _ => return None,
         })
     }

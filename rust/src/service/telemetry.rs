@@ -128,6 +128,12 @@ impl ServiceSnapshot {
         self.replicas.iter().filter(|r| r.quarantined).count()
     }
 
+    /// Replicas currently serving (the pool minus quarantined) — the
+    /// live-capacity denominator the control plane steers against.
+    pub fn healthy(&self) -> usize {
+        self.replicas.len() - self.quarantined()
+    }
+
     /// Uniform monitor field set (role "service").
     pub fn monitor_fields(&self) -> Vec<(String, f64)> {
         let mut fields = vec![
@@ -172,6 +178,19 @@ mod tests {
         s.sessions = 4;
         s.rows = 10;
         assert!((s.occupancy() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn healthy_counts_the_pool_minus_quarantined() {
+        let mut s = ServiceSnapshot::default();
+        assert_eq!(s.healthy(), 0);
+        s.replicas = vec![
+            ReplicaSnapshot { id: 0, ..Default::default() },
+            ReplicaSnapshot { id: 1, quarantined: true, ..Default::default() },
+            ReplicaSnapshot { id: 2, ..Default::default() },
+        ];
+        assert_eq!(s.quarantined(), 1);
+        assert_eq!(s.healthy(), 2);
     }
 
     #[test]

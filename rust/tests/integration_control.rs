@@ -1,0 +1,269 @@
+//! Control-plane integration: the ISSUE-7 acceptance surface.
+//!
+//! * long-tail benchmark — a discrete-event co-simulation of trainer and
+//!   gated explorer under a long-tail rollout workload (every 16th
+//!   rollout is 12x slower) drives the *real* policy admission formulas
+//!   and the *real* `StalenessCore`: `adaptive` must admit at least as
+//!   many batches as the best static `BoundedStaleness` setting, finish
+//!   no later, and hold the trainer's sample-wait p95 inside the
+//!   `staleness_hi` band — which every narrower static setting violates;
+//! * equivalence — an uncontrolled `AdaptiveStaleness` is decision-
+//!   identical to `BoundedStaleness` over a sweep of (interval, lag,
+//!   batch, progress) points;
+//! * disabled — a session run with `[control]` absent builds no plane,
+//!   reports no control snapshot, and exports zero control spans.
+//!
+//! The simulation uses only exact binary fractions (0.5 / 1.0 / 6.0) so
+//! every quantity below is bit-exact, not tolerance-compared.
+
+use trinity_rft::control::{AdaptiveStaleness, Controller, StalenessCore};
+use trinity_rft::coordinator::{BoundedStaleness, Progress, RftConfig, RftSession, SyncPolicy};
+use trinity_rft::obs::Gauges;
+use trinity_rft::runtime::Manifest;
+
+/// Nearest-rank p95 over raw samples (the sim's stand-in for the run's
+/// cumulative histograms).
+fn p95(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((0.95 * s.len() as f64).ceil() as usize).max(1) - 1;
+    s[idx]
+}
+
+struct SimOut {
+    /// Batches the gate admitted over the trainer's run.
+    admitted: u64,
+    /// Per-step seconds the trainer blocked waiting for its batch.
+    waits: Vec<f64>,
+    rollout_p95: f64,
+    /// Simulated time at which the trainer finished.
+    elapsed: f64,
+}
+
+/// Discrete-event co-simulation: one explorer producing batches through
+/// `policy.admit` (interval 1), one trainer consuming a batch per 1.0s
+/// step and publishing after each.  Batch `k` takes 6.0s every 16th
+/// rollout (long tail), 0.5s otherwise — mean 0.84s, so the run is
+/// trainer-bound *except* when a tail rollout lands with too little
+/// admitted runway.  `on_publish` sees the cumulative wait/rollout
+/// samples at each publish boundary, exactly where the real scheduler
+/// publishes gauges.
+fn simulate(
+    policy: &dyn SyncPolicy,
+    steps: u64,
+    mut on_publish: impl FnMut(&[f64], &[f64], f64),
+) -> SimOut {
+    let lat = |k: u64| if k % 16 == 0 { 6.0 } else { 0.5 };
+    let (mut e_free, mut gate_time, mut t_free) = (0.0f64, 0.0f64, 0.0f64);
+    let mut batch_done: Vec<f64> = Vec::new();
+    let mut rollouts: Vec<f64> = Vec::new();
+    let mut waits: Vec<f64> = Vec::new();
+    let (mut published, mut k, mut s) = (0u64, 0u64, 0u64);
+    while s < steps {
+        let progress = Progress { published_windows: published, ..Default::default() };
+        if policy.admit(k, progress) {
+            // explorer: runs whenever the gate is open; a batch blocked
+            // on the gate starts at the publish that opened it
+            let start = e_free.max(gate_time);
+            let l = lat(k);
+            e_free = start + l;
+            batch_done.push(e_free);
+            rollouts.push(l);
+            k += 1;
+        } else {
+            // explorer gate-blocked: the trainer takes its next step
+            let ready = batch_done[s as usize];
+            waits.push((ready - t_free).max(0.0));
+            t_free = t_free.max(ready) + 1.0;
+            published += 1;
+            gate_time = t_free;
+            s += 1;
+            on_publish(&waits, &rollouts, t_free);
+        }
+    }
+    SimOut { admitted: k, waits, rollout_p95: p95(&rollouts), elapsed: t_free }
+}
+
+fn adaptive_cfg(max_lag: u64) -> RftConfig {
+    let mut cfg = RftConfig::default();
+    cfg.sync_interval = 1;
+    cfg.scheduler.max_version_lag = max_lag;
+    cfg.control.staleness_hi = 0.5;
+    // narrowing off: the benchmark probes how fast starvation evidence
+    // *earns* staleness, not the comfort give-back
+    cfg.control.staleness_lo = 0.0;
+    cfg.control.staleness_floor_s = 0.005;
+    cfg.control.hold_ticks = 2;
+    cfg
+}
+
+#[test]
+fn adaptive_matches_best_static_staleness_and_holds_the_wait_band() {
+    const STEPS: u64 = 96;
+    let tail_of = |waits: &[f64]| p95(&waits[(STEPS / 2) as usize..]);
+
+    // static sweep: BoundedStaleness at every lag up to the ceiling
+    let mut statics = Vec::new();
+    for lag in [0u64, 1, 2, 4] {
+        let p = BoundedStaleness { interval: 1, max_version_lag: lag };
+        let out = simulate(&p, STEPS, |_, _, _| {});
+        assert_eq!(out.rollout_p95, 6.0, "long tail dominates the rollout p95");
+        statics.push((lag, out));
+    }
+
+    // adaptive: slow-starts at lag 1, earns the rest from starvation
+    let p = AdaptiveStaleness::from_cfg(&adaptive_cfg(4));
+    p.core().enable();
+    let core = std::sync::Arc::clone(p.core());
+    let mut decisions: Vec<(f64, f64)> = Vec::new();
+    let out = simulate(&p, STEPS, |waits, rollouts, at_s| {
+        let g = Gauges {
+            sample_wait_p95_s: p95(waits),
+            rollout_p95_s: p95(rollouts),
+            at_s,
+            ..Default::default()
+        };
+        if let Some(d) = core.step(&g) {
+            decisions.push((d.from, d.to));
+        }
+    });
+    assert_eq!(out.rollout_p95, 6.0);
+    let band = 0.5 * out.rollout_p95; // staleness_hi x rollout p95
+
+    // band: after the transient, the trainer's wait p95 sits inside it
+    assert!(
+        tail_of(&out.waits) <= band,
+        "adaptive tail wait p95 {} above band {band}",
+        tail_of(&out.waits)
+    );
+    // throughput: >= every static setting on admitted batches, and the
+    // trainer finishes no later — so rollout throughput (admitted over
+    // elapsed) is >= the best static's
+    for (lag, st) in &statics {
+        assert!(
+            out.admitted >= st.admitted && out.elapsed <= st.elapsed,
+            "adaptive ({} batches in {}s) worse than static lag {lag} ({} in {}s)",
+            out.admitted,
+            out.elapsed,
+            st.admitted,
+            st.elapsed
+        );
+        if *lag < 4 {
+            assert!(out.admitted > st.admitted, "must beat every narrower static");
+            // ...and every narrower static violates the band: the
+            // static knob cannot have both throughput and the band
+            assert!(tail_of(&st.waits) > band, "static lag {lag} unexpectedly in band");
+        }
+    }
+    assert_eq!(out.admitted, STEPS + 4, "ends at the full runway of the earned window");
+
+    // the window was earned through the AIMD widen path, one at a time
+    assert_eq!(decisions, vec![(1.0, 2.0), (2.0, 3.0), (3.0, 4.0)]);
+    assert_eq!(core.lag(), 4, "converged to the ceiling with narrowing off");
+}
+
+#[test]
+fn uncontrolled_adaptive_is_decision_identical_to_bounded_staleness() {
+    for interval in [1u64, 2, 3] {
+        for max_lag in [0u64, 1, 3] {
+            let mut cfg = RftConfig::default();
+            cfg.sync_interval = interval;
+            cfg.scheduler.max_version_lag = max_lag;
+            let adaptive = AdaptiveStaleness::from_cfg(&cfg); // no enable(): pinned
+            let fixed = BoundedStaleness { interval, max_version_lag: max_lag };
+            assert_eq!(adaptive.explorer_plan(9), fixed.explorer_plan(9));
+            assert_eq!(adaptive.multi_explorer(), fixed.multi_explorer());
+            for batch in 0..60u64 {
+                for published in 0..20u64 {
+                    let pr = Progress { published_windows: published, ..Default::default() };
+                    assert_eq!(
+                        adaptive.admit(batch, pr),
+                        fixed.admit(batch, pr),
+                        "admit diverged at i={interval} lag={max_lag} b={batch} w={published}"
+                    );
+                }
+                for version in 0..10u64 {
+                    assert_eq!(
+                        adaptive.version_lag(batch, version),
+                        fixed.version_lag(batch, version)
+                    );
+                }
+            }
+            for steps in 1..=12u64 {
+                assert_eq!(adaptive.publish_after(steps), fixed.publish_after(steps));
+            }
+        }
+    }
+}
+
+#[test]
+fn stale_gauges_hold_the_last_output() {
+    // a core stepped on starved gauges widens; the plane-level stale
+    // gate is exercised in control::tests — here the core itself must
+    // be pure (same inputs, same outputs) so holds are sound
+    let cfg = adaptive_cfg(4);
+    let core = StalenessCore::new(4, &cfg.control.to_control_config());
+    core.enable();
+    let starved =
+        Gauges { sample_wait_p95_s: 4.0, rollout_p95_s: 6.0, at_s: 1.0, ..Default::default() };
+    assert!(core.step(&starved).is_none(), "hold_ticks=2: first sample held");
+    assert!(core.step(&starved).is_some());
+    let lag = core.lag();
+    // no new gauge sample -> no step -> output holds by construction
+    assert_eq!(core.lag(), lag);
+}
+
+fn artifact_cfg() -> Option<RftConfig> {
+    Manifest::load_default()?;
+    let mut cfg = RftConfig::default();
+    cfg.model_preset = "tiny".into();
+    cfg.mode = "both".into();
+    cfg.total_steps = 2;
+    cfg.batch_tasks = 1;
+    cfg.repeat_times = 4;
+    cfg.max_new_tokens = 6;
+    cfg.seed = 31;
+    Some(cfg)
+}
+
+#[test]
+fn disabled_control_reports_no_plane_and_exports_no_control_spans() {
+    let Some(mut cfg) = artifact_cfg() else { return };
+    let dir = std::env::temp_dir().join(format!("trft_ctl_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    cfg.observability.enabled = true;
+    cfg.observability.trace_path = Some(dir.join("trace.json").to_string_lossy().into_owned());
+    assert!(!cfg.control.enabled, "[control] must default off");
+
+    let mut session = RftSession::build(cfg, None, None).unwrap();
+    let report = session.run().unwrap();
+    assert_eq!(report.train_steps, 2);
+    assert!(report.control.is_none(), "no [control] -> no plane, no snapshot");
+    let trace = std::fs::read_to_string(report.trace_path.expect("trace exported")).unwrap();
+    assert!(
+        !trace.contains("control_decision"),
+        "disabled control must emit zero control spans"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn adaptive_session_with_control_enabled_reports_a_snapshot() {
+    let Some(mut cfg) = artifact_cfg() else { return };
+    cfg.scheduler.policy = Some("adaptive".into());
+    cfg.scheduler.max_version_lag = 2;
+    cfg.control.enabled = true;
+
+    let mut session = RftSession::build(cfg, None, None).unwrap();
+    let report = session.run().unwrap();
+    assert_eq!(report.train_steps, 2);
+    assert!(report.mode.contains("adaptive"), "policy label: {}", report.mode);
+    let ctl = report.control.expect("[control] enabled -> snapshot on the report");
+    assert!(ctl.admission_open, "nothing pressures a 2-step tiny-scale run");
+    assert!(ctl.batch_tasks >= 1);
+    let lag = ctl.staleness_lag.expect("adaptive core adopted by the plane");
+    assert!(lag <= session.cfg.scheduler.max_version_lag, "lag clamped to the ceiling");
+}

@@ -32,6 +32,9 @@ fn base_cfg() -> Option<RftConfig> {
 fn diversity_reward_through_embed_artifact() {
     let Some(mut cfg) = base_cfg() else { return };
     cfg.mode = "both".into();
+    // the diversity processor embeds through a direct engine handle,
+    // so opt out of the (default-on) rollout service
+    cfg.service.enabled = false;
     // build the session first to get the generation engine for embeddings
     let mut session = RftSession::build(cfg.clone(), None, None).unwrap();
     let gen = Arc::clone(session.explorers[0].engine());

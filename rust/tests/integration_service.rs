@@ -11,17 +11,19 @@
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use trinity_rft::buffer::Experience;
 use trinity_rft::coordinator::{RftConfig, RftSession};
 use trinity_rft::exec::ThreadPool;
 use trinity_rft::explorer::{
-    MockModel, RolloutEndpoint, RolloutModel, RunnerConfig, SamplingArgs, Task, WorkflowRegistry,
-    WorkflowRunner,
+    AlfworldWorkflow, MockModel, RolloutEndpoint, RolloutModel, RunnerConfig, SamplingArgs, Task,
+    Workflow, WorkflowCtx, WorkflowRegistry, WorkflowRunner,
 };
 use trinity_rft::model::{MemorySync, WeightSync};
 use trinity_rft::runtime::Manifest;
 use trinity_rft::service::{RolloutService, ServiceConfig};
-use trinity_rft::tokenizer::Tokenizer;
+use trinity_rft::tokenizer::{Tokenizer, EOS};
 use trinity_rft::util::json::Value;
+use trinity_rft::util::rng::Rng;
 
 fn math_tasks(n: usize, repeat: usize) -> Vec<Task> {
     (0..n)
@@ -44,6 +46,53 @@ fn service_over(models: Vec<MockModel>, cfg: ServiceConfig) -> Arc<RolloutServic
     let endpoints: Vec<Arc<dyn RolloutEndpoint>> =
         models.into_iter().map(|m| Arc::new(m) as Arc<dyn RolloutEndpoint>).collect();
     Arc::new(RolloutService::over_models(endpoints, cfg).unwrap())
+}
+
+/// A mock whose response is a pure function of the prompt, so identical
+/// call sequences are byte-identical regardless of the serving path.
+fn deterministic_mock(seed: u64) -> MockModel {
+    let tok = Tokenizer::new();
+    let look = tok.encode("look");
+    MockModel::new(seed, Duration::ZERO, 0.0).with_response(move |_prompt, _rng| {
+        let mut r = look.clone();
+        r.push(EOS);
+        r
+    })
+}
+
+/// Multi-turn episodes against any model handle, single-file, so the
+/// request order is deterministic across serving paths.
+fn episodes_via(model: &dyn RolloutModel, seed: i64, repeat: usize) -> Vec<Experience> {
+    let tok = Tokenizer::new();
+    let mut task = Task::new("eq-ep", "alfworld", Value::obj(vec![("seed", Value::int(seed))]));
+    task.repeat_times = repeat;
+    let sampling = SamplingArgs { max_new_tokens: 8, ..Default::default() };
+    let mut ctx = WorkflowCtx { model, tokenizer: &tok, task: &task, sampling, rng: Rng::new(7) };
+    let wf =
+        AlfworldWorkflow { max_env_steps: 3, env_init_cost: Duration::ZERO, max_seq_tokens: 200 };
+    wf.run(&mut ctx).unwrap()
+}
+
+#[test]
+fn single_replica_service_is_byte_identical_to_direct_handles() {
+    // `service.enabled` now defaults on, folding the direct-handle
+    // wiring into the single-replica service — which must therefore be
+    // a pure routing layer: same model, same episodes, same bytes
+    let direct = deterministic_mock(21);
+    let direct_exps = episodes_via(&direct, 13, 2);
+
+    let svc = service_over(vec![deterministic_mock(21)], ServiceConfig::default());
+    let svc_exps = episodes_via(svc.as_ref(), 13, 2);
+
+    assert_eq!(direct_exps.len(), svc_exps.len());
+    assert!(!direct_exps.is_empty());
+    for (x, y) in direct_exps.iter().zip(&svc_exps) {
+        assert_eq!(x.tokens, y.tokens, "token streams diverged");
+        assert_eq!(x.logprobs, y.logprobs, "logprobs diverged");
+        assert_eq!(x.loss_mask, y.loss_mask, "loss masks diverged");
+        assert_eq!(x.prompt_len, y.prompt_len);
+        assert_eq!(x.reward, y.reward);
+    }
 }
 
 #[test]
