@@ -1,0 +1,237 @@
+//! Micro-bench: the zero-copy weight distribution plane in isolation
+//! (simulated consumers; no PJRT) — two questions:
+//!
+//! 1. publish -> all-replicas-current latency vs replica count: the old
+//!    path cloned the full weight set once per consumer before applying
+//!    it; the shared-snapshot path fetches one `Arc` for the whole pool
+//!    and each replica copies each leaf at most once (into its local
+//!    store, standing in for the literal rebuild),
+//! 2. apply cost vs dirty-leaf fraction: consumers diff per-leaf content
+//!    fingerprints against what they last applied and rebuild only the
+//!    leaves that changed, so a publish that touches K of N leaves costs
+//!    K leaf rebuilds — and an identical republish costs zero.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use trinity_rft::exec::ThreadPool;
+use trinity_rft::model::{fingerprint_f32, MemorySync, WeightSnapshot, WeightSync};
+use trinity_rft::util::benchkit::{scaled, write_json, Table};
+use trinity_rft::util::json::Value;
+
+const LEAVES: usize = 24;
+
+/// A stand-in weight consumer: local leaf storage (the "device"
+/// literals), last-applied fingerprints, and a copied-bytes meter.
+struct SimReplica {
+    leaves: Vec<Vec<f32>>,
+    applied: Vec<u64>,
+    version: u64,
+    copied_bytes: u64,
+}
+
+impl SimReplica {
+    fn new(elems: usize) -> SimReplica {
+        SimReplica {
+            leaves: vec![vec![0.0; elems]; LEAVES],
+            applied: vec![0; LEAVES],
+            version: 0,
+            copied_bytes: 0,
+        }
+    }
+
+    /// Legacy consumer: materialize a private copy of the full weight
+    /// set (the old per-consumer fetch clone), then rebuild every leaf.
+    fn apply_cloned(&mut self, snap: &WeightSnapshot, version: u64) {
+        let fetched = snap.to_weights();
+        self.copied_bytes += 4 * snap.total_elements() as u64;
+        for (dst, src) in self.leaves.iter_mut().zip(&fetched) {
+            dst.copy_from_slice(src);
+        }
+        self.copied_bytes += 4 * snap.total_elements() as u64;
+        self.version = version;
+    }
+
+    /// Zero-copy consumer: borrow the shared snapshot and rebuild only
+    /// the leaves whose fingerprints differ from the last apply.
+    fn apply_shared(&mut self, snap: &WeightSnapshot, version: u64) -> usize {
+        let mut rebuilt = 0;
+        for i in 0..snap.leaf_count() {
+            if self.applied[i] != snap.fingerprint(i) {
+                self.leaves[i].copy_from_slice(snap.leaf(i));
+                self.applied[i] = snap.fingerprint(i);
+                self.copied_bytes += 4 * snap.leaf(i).len() as u64;
+                rebuilt += 1;
+            }
+        }
+        self.version = version;
+        rebuilt
+    }
+}
+
+/// Change the first `frac` of the leaves (one element is enough to
+/// change a content fingerprint; copy cost per dirty leaf is the same
+/// either way).
+fn perturb(weights: &mut [Vec<f32>], round: usize, frac: f64) {
+    let dirty = ((LEAVES as f64 * frac).round() as usize).min(LEAVES);
+    for leaf in weights.iter_mut().take(dirty) {
+        leaf[0] += 1.0 + round as f32 * 0.5;
+    }
+}
+
+/// Publish-side reuse (what `ParamStore::to_snapshot` does): share the
+/// previous snapshot's buffer for every leaf whose fingerprint matches.
+fn publish_reused(weights: &[Vec<f32>], prev: Option<&WeightSnapshot>) -> Arc<WeightSnapshot> {
+    let leaves = weights
+        .iter()
+        .enumerate()
+        .map(|(i, w)| {
+            let fp = fingerprint_f32(w);
+            match prev {
+                Some(p) if p.leaf_count() == weights.len() && p.fingerprint(i) == fp => {
+                    Arc::clone(p.leaf_arc(i))
+                }
+                _ => Arc::new(w.clone()),
+            }
+        })
+        .collect();
+    Arc::new(WeightSnapshot::from_leaves(leaves))
+}
+
+fn main() -> anyhow::Result<()> {
+    let elems = scaled(32_768);
+    let rounds = scaled(8).max(2);
+    let mut rows_json = vec![];
+
+    // -- 1. publish -> all-replicas-current vs replica count ----------
+    let mut table = Table::new(
+        "publish -> all replicas current (all leaves dirty each round)",
+        &["replicas", "mode", "wall/round", "MB copied"],
+    );
+    for &replicas in &[1usize, 2, 4, 8] {
+        for shared in [false, true] {
+            let pool = ThreadPool::new("bench-sync", replicas);
+            let sync = MemorySync::new();
+            let mut weights: Vec<Vec<f32>> = vec![vec![0.1; elems]; LEAVES];
+            let mut fleet: Vec<SimReplica> =
+                (0..replicas).map(|_| SimReplica::new(elems)).collect();
+            let mut prev: Option<Arc<WeightSnapshot>> = None;
+            let t0 = Instant::now();
+            for round in 0..rounds {
+                perturb(&mut weights, round, 1.0);
+                let snap = publish_reused(&weights, prev.as_deref());
+                sync.publish(round as u64 + 1, round as u64, Arc::clone(&snap))?;
+                prev = Some(snap);
+                // the pool fetches ONCE; replicas apply concurrently
+                let update = sync.fetch_if_newer(round as u64).unwrap().unwrap();
+                let mut promises = vec![];
+                for mut r in fleet.drain(..) {
+                    let u = update.clone();
+                    promises.push(pool.submit(move || {
+                        if shared {
+                            r.apply_shared(&u.snapshot, u.version);
+                        } else {
+                            r.apply_cloned(&u.snapshot, u.version);
+                        }
+                        r
+                    }));
+                }
+                fleet = promises.into_iter().map(|p| p.wait().unwrap()).collect();
+            }
+            let wall_s = t0.elapsed().as_secs_f64() / rounds as f64;
+            let mb =
+                fleet.iter().map(|r| r.copied_bytes).sum::<u64>() as f64 / (1024.0 * 1024.0);
+            let mode = if shared { "shared-arc" } else { "clone-per-consumer" };
+            table.row(vec![
+                replicas.to_string(),
+                mode.to_string(),
+                format!("{:.2}ms", wall_s * 1e3),
+                format!("{mb:.1}"),
+            ]);
+            rows_json.push(Value::obj(vec![
+                ("bench", Value::str("publish_latency")),
+                ("replicas", Value::num(replicas as f64)),
+                ("mode", Value::str(mode)),
+                ("wall_s", Value::num(wall_s)),
+                ("mb_copied", Value::num(mb)),
+            ]));
+        }
+    }
+    table.print();
+
+    // -- 2. delta apply vs dirty-leaf fraction ------------------------
+    let replicas = 4usize;
+    let mut table = Table::new(
+        "delta apply vs dirty-leaf fraction (4 replicas, shared snapshots)",
+        &["dirty", "wall/round", "MB copied", "rebuilt/replica/round"],
+    );
+    for &frac in &[0.0f64, 0.25, 0.5, 1.0] {
+        let pool = ThreadPool::new("bench-sync", replicas);
+        let sync = MemorySync::new();
+        let mut weights: Vec<Vec<f32>> = vec![vec![0.2; elems]; LEAVES];
+        let mut fleet: Vec<SimReplica> = (0..replicas).map(|_| SimReplica::new(elems)).collect();
+        // prime: first apply is all-dirty for everyone; excluded from
+        // the timed window and the copy meter
+        let prime = publish_reused(&weights, None);
+        sync.publish(1, 0, Arc::clone(&prime))?;
+        let update = sync.fetch_if_newer(0)?.unwrap();
+        for r in &mut fleet {
+            r.apply_shared(&update.snapshot, update.version);
+        }
+        let primed_bytes: u64 = fleet.iter().map(|r| r.copied_bytes).sum();
+        let mut prev = Some(prime);
+        let mut rebuilt_total = 0usize;
+        let t0 = Instant::now();
+        for round in 0..rounds {
+            perturb(&mut weights, round + 1, frac);
+            let snap = publish_reused(&weights, prev.as_deref());
+            sync.publish(round as u64 + 2, round as u64 + 1, Arc::clone(&snap))?;
+            prev = Some(snap);
+            let update = sync.fetch_if_newer(round as u64 + 1)?.unwrap();
+            let mut promises = vec![];
+            for mut r in fleet.drain(..) {
+                let u = update.clone();
+                promises.push(pool.submit(move || {
+                    let rebuilt = r.apply_shared(&u.snapshot, u.version);
+                    (r, rebuilt)
+                }));
+            }
+            fleet = promises
+                .into_iter()
+                .map(|p| {
+                    let (r, rebuilt) = p.wait().unwrap();
+                    rebuilt_total += rebuilt;
+                    r
+                })
+                .collect();
+        }
+        let wall_s = t0.elapsed().as_secs_f64() / rounds as f64;
+        let mb = (fleet.iter().map(|r| r.copied_bytes).sum::<u64>() - primed_bytes) as f64
+            / (1024.0 * 1024.0);
+        let rebuilt_per = rebuilt_total as f64 / (replicas * rounds) as f64;
+        table.row(vec![
+            format!("{:.0}%", frac * 100.0),
+            format!("{:.2}ms", wall_s * 1e3),
+            format!("{mb:.1}"),
+            format!("{rebuilt_per:.1}/{LEAVES}"),
+        ]);
+        rows_json.push(Value::obj(vec![
+            ("bench", Value::str("dirty_apply")),
+            ("dirty_frac", Value::num(frac)),
+            ("wall_s", Value::num(wall_s)),
+            ("mb_copied", Value::num(mb)),
+            ("rebuilt", Value::num(rebuilt_per)),
+        ]));
+    }
+    table.print();
+
+    write_json("micro_sync", &Value::arr(rows_json));
+    println!(
+        "\nexpectations: shared-arc beats clone-per-consumer at every\n\
+         replica count (it copies half the bytes and skips the private\n\
+         fetch clone), with the gap widening as replicas grow; the\n\
+         dirty-fraction sweep scales MB-copied linearly with the\n\
+         fraction, and an identical republish (0%) copies ~nothing."
+    );
+    Ok(())
+}

@@ -1,7 +1,9 @@
 #!/usr/bin/env python3
 """Compare a fresh micro-bench merge against the checked-in baseline.
 
-Usage: bench_compare.py BASELINE.json CURRENT.json
+Usage:
+  bench_compare.py BASELINE.json CURRENT.json
+  bench_compare.py --emit-baseline ARTIFACT.json [OUT.json]
 
 Both files are the merged documents the bench-baseline CI job assembles:
 {"commit", "scale", "benches": {<bench file>: [rows...]}} where each row
@@ -12,8 +14,9 @@ a baseline refresh, not a silent mismatch.
 Report-only by design: drifts beyond the soft threshold print GitHub
 warning annotations but the exit code is always 0 — the numbers come
 from shared CI runners, so a hard gate would flake.  Refresh the
-baseline by committing the BENCH_baseline artifact of a trusted run as
-rust/BENCH_baseline.json.
+baseline with `--emit-baseline`: it takes the BENCH_baseline artifact of
+a trusted run and writes a ready-to-commit rust/BENCH_baseline.json
+(normalized key order, comparable metrics only).
 """
 
 import json
@@ -31,7 +34,7 @@ HIGHER_IS_BETTER = {
     "completed",
 }
 # ...while growth in these is
-LOWER_IS_BETTER = {"wall_s"}
+LOWER_IS_BETTER = {"wall_s", "mb_copied"}
 SOFT_THRESHOLD = 0.25  # fraction of the baseline value
 
 
@@ -47,7 +50,44 @@ def cases(doc):
     return out
 
 
+def emit_baseline(artifact_path, out_path):
+    """Normalize a CI BENCH_baseline artifact into a committable baseline.
+
+    Keeps the case labels plus the directional metrics the comparator
+    reads (and any non-numeric discriminator fields, which document what
+    the row measured); drops everything else so baseline diffs stay
+    reviewable.
+    """
+    with open(artifact_path) as f:
+        doc = json.load(f)
+    benches = {}
+    for name, rows in sorted(doc.get("benches", {}).items()):
+        kept = []
+        for row in rows:
+            slim = {}
+            for key, value in row.items():
+                directional = key in HIGHER_IS_BETTER or key in LOWER_IS_BETTER
+                if key == "bench" or directional or not isinstance(value, (int, float)):
+                    slim[key] = value
+            kept.append(slim)
+        benches[name] = kept
+    baseline = {
+        "commit": doc.get("commit", "unknown"),
+        "scale": doc.get("scale", "1.0"),
+        "benches": benches,
+    }
+    with open(out_path, "w") as f:
+        json.dump(baseline, f, indent=2, sort_keys=False)
+        f.write("\n")
+    n_rows = sum(len(rows) for rows in benches.values())
+    print(f"wrote {out_path}: {len(benches)} bench file(s), {n_rows} row(s)")
+    return 0
+
+
 def main():
+    if len(sys.argv) >= 3 and sys.argv[1] == "--emit-baseline":
+        out = sys.argv[3] if len(sys.argv) > 3 else "BENCH_baseline.json"
+        return emit_baseline(sys.argv[2], out)
     if len(sys.argv) != 3:
         print(__doc__)
         return 0
@@ -67,7 +107,8 @@ def main():
     if not set(base_cases) & set(cur_cases):
         print(
             "baseline has no comparable cases — seed it by committing the "
-            "BENCH_baseline CI artifact as rust/BENCH_baseline.json"
+            "BENCH_baseline CI artifact as rust/BENCH_baseline.json "
+            "(bench_compare.py --emit-baseline <artifact> normalizes it)"
         )
         return 0
 

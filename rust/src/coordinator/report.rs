@@ -13,7 +13,7 @@ use std::time::Instant;
 use crate::explorer::{EvalReport, RunnerStats};
 use crate::obs::{HistSnapshot, Histogram, Span, SpanKind, SpanRecorder, NO_REPLICA};
 use crate::service::ServiceSnapshot;
-use crate::trainer::{StepMetrics, Trainer};
+use crate::trainer::{PublishStats, StepMetrics, Trainer};
 
 use super::monitor::Monitor;
 
@@ -177,6 +177,24 @@ impl RunRecorder {
         count
     }
 
+    /// One completed weight publish with its [`PublishStats`]: the
+    /// timeline/span bookkeeping of [`weight_sync`](Self::weight_sync)
+    /// plus the snapshot-reuse telemetry (total vs reused leaves, trainer
+    /// stall) under the "trainer" role.
+    pub fn weight_publish(&self, start: Instant, end: Instant, stats: &PublishStats) -> u64 {
+        let count = self.weight_sync(start, end);
+        self.monitor.log(
+            "trainer",
+            stats.version,
+            &[
+                ("publish_total_leaves".into(), stats.total_leaves as f64),
+                ("publish_reused_leaves".into(), stats.reused_leaves as f64),
+                ("publish_stall_s".into(), stats.stall_s),
+            ],
+        );
+        count
+    }
+
     /// One completed explorer rollout batch, with the weight version it
     /// ran at and its version lag in publish windows.
     pub fn rollout(&self, rec: &RolloutRecord<'_>, start: Instant, end: Instant) {
@@ -297,6 +315,20 @@ mod tests {
         assert_eq!(events.len(), 4);
         assert!(events.iter().all(|e| e.end_s >= e.start_s));
         assert!(events.iter().any(|e| e.kind == "weight_sync" && e.role == "trainer"));
+    }
+
+    #[test]
+    fn weight_publish_logs_reuse_telemetry() {
+        let monitor = Arc::new(Monitor::in_memory());
+        let rec = RunRecorder::new(Arc::clone(&monitor), Instant::now());
+        let t0 = Instant::now();
+        let stats =
+            PublishStats { version: 3, total_leaves: 8, reused_leaves: 6, stall_s: 0.01 };
+        assert_eq!(rec.weight_publish(t0, Instant::now(), &stats), 1);
+        assert_eq!(rec.sync_count(), 1, "weight_publish counts as a sync");
+        assert_eq!(monitor.series_values("trainer/publish_total_leaves"), vec![8.0]);
+        assert_eq!(monitor.series_values("trainer/publish_reused_leaves"), vec![6.0]);
+        assert_eq!(monitor.series("trainer/publish_stall_s").len(), 1);
     }
 
     #[test]

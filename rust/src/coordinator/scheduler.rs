@@ -23,7 +23,7 @@ use crate::explorer::{
     EvalReport, Explorer, ExplorerConfig, GenerationEngine, RolloutEndpoint, RunnerConfig,
     SamplingArgs, WorkflowRegistry,
 };
-use crate::model::{ParamStore, SyncCtx, WeightSync, WeightSyncRegistry};
+use crate::model::{ParamStore, SyncCtx, WeightSnapshot, WeightSync, WeightSyncRegistry};
 use crate::obs::{write_trace, Gauges, SpanRecorder, TelemetryHub};
 use crate::runtime::{Manifest, ModelEngine, RuntimeClient};
 use crate::service::RolloutService;
@@ -508,13 +508,13 @@ impl RftSession {
                 recorder.trainer_step(t, &m, t0, Instant::now());
                 if policy.publish_after(t + 1) {
                     let s0 = Instant::now();
-                    trainer.publish_weights(self.sync.as_ref())?;
+                    let publish = trainer.publish_weights(self.sync.as_ref())?;
                     // keep-N rotation so long async runs stop filling
                     // the sync dir (no-op for non-durable methods)
                     if cfg.scheduler.keep_checkpoints > 0 {
                         self.sync.rotate(cfg.scheduler.keep_checkpoints)?;
                     }
-                    recorder.weight_sync(s0, Instant::now());
+                    recorder.weight_publish(s0, Instant::now(), &publish);
                     state.update(|st| st.progress.published_windows += 1);
                     if let Some(svc) = &self.service {
                         recorder.service(t + 1, &svc.snapshot());
@@ -632,14 +632,20 @@ impl RftSession {
     /// Load a weight snapshot into every explorer (bench over checkpoints).
     /// Service-backed explorers share the replica pool, so one pass over
     /// the pool covers them all.
-    pub fn load_explorer_weights(&self, weights: &[Vec<f32>], version: u64) -> Result<()> {
+    pub fn load_explorer_snapshot(&self, snapshot: &WeightSnapshot, version: u64) -> Result<()> {
         if let Some(svc) = &self.service {
-            return svc.set_weights(weights, version);
+            return svc.set_weights(snapshot, version);
         }
         for e in &self.explorers {
-            e.set_weights(weights, version)?;
+            e.set_weights(snapshot, version)?;
         }
         Ok(())
+    }
+
+    /// `load_explorer_snapshot` from raw leaf vectors (convenience for
+    /// callers holding a plain `Vec<Vec<f32>>` snapshot).
+    pub fn load_explorer_weights(&self, weights: &[Vec<f32>], version: u64) -> Result<()> {
+        self.load_explorer_snapshot(&WeightSnapshot::from_weights(weights), version)
     }
 
     /// Start trainer AND all explorers from an externally produced weight

@@ -11,7 +11,7 @@ use anyhow::Result;
 use crate::buffer::ExperienceBuffer;
 use crate::envs::math::verify;
 use crate::exec::ThreadPool;
-use crate::model::WeightSync;
+use crate::model::{WeightSnapshot, WeightSync};
 use crate::tokenizer::Tokenizer;
 use crate::util::json::Value;
 
@@ -181,10 +181,10 @@ impl Explorer {
         self.endpoint.sync_weights(sync)
     }
 
-    /// Overwrite the endpoint's weights (initial load / bench over
-    /// checkpoints).
-    pub fn set_weights(&self, weights: &[Vec<f32>], version: u64) -> Result<()> {
-        self.endpoint.set_weights(weights, version)
+    /// Overwrite the endpoint's weights from a shared snapshot (initial
+    /// load / bench over checkpoints).
+    pub fn set_weights(&self, snapshot: &WeightSnapshot, version: u64) -> Result<()> {
+        self.endpoint.set_weights(snapshot, version)
     }
 
     /// Bench mode (paper §2.1.1): evaluate the current weights on a task

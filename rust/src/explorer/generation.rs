@@ -13,7 +13,7 @@ use std::sync::{Arc, RwLock};
 
 use anyhow::{ensure, Result};
 
-use crate::model::{ParamStore, WeightSync};
+use crate::model::{ParamStore, WeightSnapshot, WeightSync, WeightUpdate};
 use crate::runtime::{GenerationState, ModelEngine, Tensor};
 use crate::tokenizer::{BOS, EOS};
 use crate::util::rng::Rng;
@@ -82,8 +82,10 @@ pub trait RolloutModel: Send + Sync {
 pub trait RolloutEndpoint: RolloutModel {
     /// Pull newer weights from the sync service if published.
     fn sync_weights(&self, sync: &dyn WeightSync) -> Result<bool>;
-    /// Overwrite weights directly (initial load / bench over checkpoints).
-    fn set_weights(&self, weights: &[Vec<f32>], version: u64) -> Result<()>;
+    /// Overwrite weights from a shared snapshot (initial load / bench
+    /// over checkpoints).  The snapshot is borrowed, never copied: pool
+    /// endpoints fan one snapshot out across every replica.
+    fn set_weights(&self, snapshot: &WeightSnapshot, version: u64) -> Result<()>;
 }
 
 /// An in-flight generation batch (KV caches + per-row cursors).
@@ -167,23 +169,63 @@ impl GenerationEngine {
         self.params.read().unwrap().version()
     }
 
-    /// Pull newer weights if available.  Takes the write lock: in-flight
-    /// rollouts finish first, new ones wait (the single-explorer service
-    /// gap the paper describes).
+    /// Pull newer weights if available and apply them with minimal
+    /// serving stall (see [`apply_update`](Self::apply_update)).
     pub fn try_sync(&self, sync: &dyn WeightSync) -> Result<bool> {
         let current = self.params_version();
         if let Some(update) = sync.fetch_if_newer(current)? {
-            let mut guard = self.params.write().unwrap();
-            guard.load_snapshot(&update.weights, update.version)?;
-            crate::log_debug!("explorer", "synced weights to v{} (step {})", update.version, update.step);
-            return Ok(true);
+            let applied = self.apply_update(&update)?;
+            if applied {
+                crate::log_debug!(
+                    "explorer",
+                    "synced weights to v{} (step {})",
+                    update.version,
+                    update.step
+                );
+            }
+            return Ok(applied);
         }
         Ok(false)
     }
 
-    /// Overwrite weights directly (initial load).
-    pub fn set_weights(&self, weights: &[Vec<f32>], version: u64) -> Result<()> {
-        self.params.write().unwrap().load_snapshot(weights, version)
+    /// Low-stall delta apply of a published update.
+    ///
+    /// Three phases: *plan* under the read lock (diff fingerprints,
+    /// rollouts keep running), *prepare* with no lock held (rebuild only
+    /// the dirty leaves, large ones in parallel on the shared prepare
+    /// pool), *commit* under the write lock (swap literal handles in).
+    /// In-flight rollouts therefore only ever wait for the pointer
+    /// swaps, not for the full-model rebuild the old path did under the
+    /// write lock.  Returns false when the store already reached
+    /// `update.version` (another syncer raced us there).
+    pub fn apply_update(&self, update: &WeightUpdate) -> Result<bool> {
+        let dirty = {
+            let guard = self.params.read().unwrap();
+            if guard.version() >= update.version {
+                return Ok(false);
+            }
+            guard.plan_delta(&update.snapshot)?
+        };
+        let prepared =
+            ParamStore::prepare_leaves(&self.engine.model, &update.snapshot, &dirty)?;
+        let mut guard = self.params.write().unwrap();
+        if guard.version() >= update.version {
+            return Ok(false);
+        }
+        guard.commit_prepared(&update.snapshot, prepared, update.version)?;
+        Ok(true)
+    }
+
+    /// Overwrite weights from a shared snapshot (initial load).  Also a
+    /// delta apply: leaves whose fingerprints already match are kept.
+    pub fn set_weights(&self, snapshot: &WeightSnapshot, version: u64) -> Result<()> {
+        self.params.write().unwrap().apply_snapshot(snapshot, version).map(|_| ())
+    }
+
+    /// Leaves skipped across all weight applies so far (delta-apply
+    /// effectiveness; see `ParamStore::fingerprint_hits`).
+    pub fn fingerprint_hits(&self) -> u64 {
+        self.params.read().unwrap().fingerprint_hits()
     }
 
     pub fn snapshot_weights(&self) -> Result<Vec<Vec<f32>>> {
@@ -498,8 +540,8 @@ impl RolloutEndpoint for GenerationEngine {
         self.try_sync(sync)
     }
 
-    fn set_weights(&self, weights: &[Vec<f32>], version: u64) -> Result<()> {
-        GenerationEngine::set_weights(self, weights, version)
+    fn set_weights(&self, snapshot: &WeightSnapshot, version: u64) -> Result<()> {
+        GenerationEngine::set_weights(self, snapshot, version)
     }
 }
 
@@ -613,7 +655,7 @@ impl RolloutEndpoint for MockModel {
         Ok(false)
     }
 
-    fn set_weights(&self, _weights: &[Vec<f32>], version: u64) -> Result<()> {
+    fn set_weights(&self, _snapshot: &WeightSnapshot, version: u64) -> Result<()> {
         self.set_version(version);
         Ok(())
     }

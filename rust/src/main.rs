@@ -256,8 +256,9 @@ fn cmd_bench(m: &trinity_rft::util::cli::Matches) -> Result<()> {
     let session = RftSession::build(cfg, None, None)?;
     if let Some(ckpt) = m.get("checkpoint") {
         let ck = trinity_rft::model::load_checkpoint(ckpt)?;
-        session.load_explorer_weights(&ck.weights(), ck.weight_version)?;
-        println!("loaded checkpoint step={} version={}", ck.step, ck.weight_version);
+        let (step, version) = (ck.step, ck.weight_version);
+        session.load_explorer_snapshot(&ck.into_snapshot(), version)?;
+        println!("loaded checkpoint step={step} version={version}");
     }
     let tiers_str = m.get_or("tiers", "math500s,amcs");
     let tiers: Vec<&str> = tiers_str.split(',').collect();

@@ -31,6 +31,16 @@ impl Checkpoint {
     pub fn weights(&self) -> Vec<Vec<f32>> {
         self.leaves.iter().map(|(_, _, w)| w.clone()).collect()
     }
+
+    /// Move the decoded leaf buffers into a shareable
+    /// [`WeightSnapshot`](super::snapshot::WeightSnapshot) without
+    /// copying them again — the load path's counterpart to
+    /// `CheckpointSync::publish` writing straight from snapshot leaves.
+    pub fn into_snapshot(self) -> std::sync::Arc<super::snapshot::WeightSnapshot> {
+        super::snapshot::WeightSnapshot::of(
+            self.leaves.into_iter().map(|(_, _, w)| w).collect(),
+        )
+    }
 }
 
 // -- CRC32 (IEEE 802.3) ------------------------------------------------------

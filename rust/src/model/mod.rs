@@ -4,10 +4,12 @@
 
 pub mod checkpoint;
 pub mod params;
+pub mod snapshot;
 pub mod sync;
 
 pub use checkpoint::{load_checkpoint, save_checkpoint, Checkpoint};
-pub use params::ParamStore;
+pub use params::{ParamStore, PreparedLeaves};
+pub use snapshot::{fingerprint_f32, WeightSnapshot};
 pub use sync::{
     CheckpointSync, MemorySync, SyncCtx, WeightSync, WeightSyncFactory, WeightSyncRegistry,
     WeightUpdate,

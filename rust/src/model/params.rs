@@ -1,16 +1,44 @@
 //! The parameter store: model weights held as PJRT literals in manifest
 //! leaf order (identical to jax's sorted-dict pytree flattening, which is
 //! the AOT contract).
+//!
+//! Consumers on the weight-distribution path additionally track the
+//! content fingerprint of the snapshot leaf each literal was last built
+//! from (`applied`), so applying a new [`WeightSnapshot`] rebuilds only
+//! the leaves whose content actually changed (dirty-leaf delta apply).
+//! The rebuild itself can be split into a lock-free *prepare* phase
+//! ([`ParamStore::prepare_leaves`], parallelized over large leaves) and
+//! a short *commit* ([`ParamStore::commit_prepared`]) that only swaps
+//! literal handles — see `GenerationEngine::apply_update`.
 
-use anyhow::{ensure, Context, Result};
+use std::sync::{Arc, OnceLock};
 
+use anyhow::{anyhow, ensure, Context, Result};
+
+use crate::exec::ThreadPool;
 use crate::runtime::artifact::ModelInfo;
 use crate::util::rng::Rng;
+
+use super::snapshot::{fingerprint_f32, WeightSnapshot};
+
+/// Fingerprint sentinel: "host content unknown" (set after a device
+/// train step replaces the literals).  Real fingerprints are never 0.
+const FP_UNKNOWN: u64 = 0;
+
+/// Leaves at or above this element count are rebuilt on the shared
+/// prepare pool; smaller ones are cheaper to build inline than to ship
+/// across threads.
+const POOL_LEAF_THRESHOLD: usize = 1 << 15;
 
 pub struct ParamStore {
     pub model: ModelInfo,
     literals: Vec<xla::Literal>,
     version: u64,
+    /// Per-leaf content fingerprint of the snapshot leaf each literal
+    /// was last built from ([`FP_UNKNOWN`] when nothing is known).
+    applied: Vec<u64>,
+    /// Cumulative leaves *skipped* by delta applies (fingerprint hits).
+    fingerprint_hits: u64,
 }
 
 // Literals are host-memory buffers behind raw pointers; moving them across
@@ -18,6 +46,44 @@ pub struct ParamStore {
 // impls are only blocked by the raw pointers in the `xla` wrappers.
 unsafe impl Send for ParamStore {}
 unsafe impl Sync for ParamStore {}
+
+/// A literal crossing from a prepare worker back to the committer; same
+/// safety argument as the `ParamStore` impls above.
+struct SendLit(xla::Literal);
+unsafe impl Send for SendLit {}
+
+/// Shared pool for the prepare phase of weight applies.  Small and
+/// lazily built: applies are bursty (one per publish per consumer) and
+/// the work is memcpy-bound, so a few threads saturate it.
+fn prepare_pool() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let size = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).clamp(2, 4);
+        ThreadPool::new("weight-apply", size)
+    })
+}
+
+/// Leaf literals rebuilt outside the params lock, ready to swap in:
+/// `(leaf index, literal, fingerprint it was built from)`.
+pub struct PreparedLeaves {
+    leaves: Vec<(usize, xla::Literal, u64)>,
+}
+
+impl PreparedLeaves {
+    /// No pre-built leaves: `commit_prepared` rebuilds every dirty leaf
+    /// inline (the non-parallel apply path).
+    pub fn none() -> PreparedLeaves {
+        PreparedLeaves { leaves: Vec::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.leaves.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.leaves.is_empty()
+    }
+}
 
 impl ParamStore {
     /// Initialize parameters exactly as `model.init_params` does shape-wise:
@@ -38,7 +104,8 @@ impl ParamStore {
             literals.push(to_literal(&data, &p.shape)?);
         }
         let _ = rng.next_u64();
-        Ok(ParamStore { model: model.clone(), literals, version: 0 })
+        let applied = vec![FP_UNKNOWN; literals.len()];
+        Ok(ParamStore { model: model.clone(), literals, version: 0, applied, fingerprint_hits: 0 })
     }
 
     /// Build from a host snapshot (leaf order must match the manifest).
@@ -49,7 +116,21 @@ impl ParamStore {
             ensure!(w.len() == p.element_count(), "leaf '{}' size mismatch", p.name);
             literals.push(to_literal(w, &p.shape)?);
         }
-        Ok(ParamStore { model: model.clone(), literals, version: 0 })
+        let applied = vec![FP_UNKNOWN; literals.len()];
+        Ok(ParamStore { model: model.clone(), literals, version: 0, applied, fingerprint_hits: 0 })
+    }
+
+    /// Build from a shared [`WeightSnapshot`], recording its fingerprints
+    /// so a later delta apply starts warm.
+    pub fn from_weight_snapshot(model: &ModelInfo, snapshot: &WeightSnapshot) -> Result<ParamStore> {
+        ensure!(snapshot.leaf_count() == model.params.len(), "snapshot leaf count mismatch");
+        let mut literals = Vec::with_capacity(snapshot.leaf_count());
+        for (i, p) in model.params.iter().enumerate() {
+            ensure!(snapshot.leaf(i).len() == p.element_count(), "leaf '{}' size mismatch", p.name);
+            literals.push(to_literal(snapshot.leaf(i), &p.shape)?);
+        }
+        let applied = snapshot.fingerprints().to_vec();
+        Ok(ParamStore { model: model.clone(), literals, version: 0, applied, fingerprint_hits: 0 })
     }
 
     pub fn literals(&self) -> &[xla::Literal] {
@@ -68,10 +149,19 @@ impl ParamStore {
         self.version = v;
     }
 
+    /// Leaves skipped by delta applies so far (cumulative; tests assert
+    /// a partial update rebuilds exactly the dirty leaves).
+    pub fn fingerprint_hits(&self) -> u64 {
+        self.fingerprint_hits
+    }
+
     /// Replace all leaves (e.g. with a train step's outputs). Bumps version.
     pub fn replace(&mut self, literals: Vec<xla::Literal>) -> Result<()> {
         ensure!(literals.len() == self.literals.len(), "leaf count mismatch on replace");
         self.literals = literals;
+        // device outputs: host content unknown until the next snapshot,
+        // so a subsequent apply must treat every leaf as dirty
+        self.applied.fill(FP_UNKNOWN);
         self.version += 1;
         Ok(())
     }
@@ -81,15 +171,132 @@ impl ParamStore {
         self.literals.iter().map(|l| l.to_vec::<f32>().context("literal to_vec")).collect()
     }
 
-    /// Load a host snapshot in place (weight sync receive path).
+    /// Publish-side snapshot: copy each leaf out once, fingerprint it,
+    /// and — when `prev` (the previously published snapshot) already
+    /// holds a leaf with identical content — share `prev`'s buffer
+    /// instead of keeping the fresh copy.  Consumers then see both the
+    /// same fingerprint *and* the same allocation for unchanged leaves,
+    /// so frozen embeddings / norm scales ride through publish after
+    /// publish without being re-sent or re-applied.
+    pub fn to_snapshot(&self, prev: Option<&WeightSnapshot>) -> Result<Arc<WeightSnapshot>> {
+        let n = self.literals.len();
+        let prev = prev.filter(|p| p.leaf_count() == n);
+        let mut leaves = Vec::with_capacity(n);
+        let mut fps = Vec::with_capacity(n);
+        for (i, l) in self.literals.iter().enumerate() {
+            let data = l.to_vec::<f32>().context("literal to_vec")?;
+            let fp = fingerprint_f32(&data);
+            match prev {
+                Some(p) if p.fingerprint(i) == fp => leaves.push(Arc::clone(p.leaf_arc(i))),
+                _ => leaves.push(Arc::new(data)),
+            }
+            fps.push(fp);
+        }
+        Ok(Arc::new(WeightSnapshot::from_parts(leaves, fps)))
+    }
+
+    /// Load a host snapshot in place (legacy receive path; snapshot-based
+    /// consumers use [`apply_snapshot`](Self::apply_snapshot)).
     pub fn load_snapshot(&mut self, weights: &[Vec<f32>], version: u64) -> Result<()> {
         ensure!(weights.len() == self.literals.len(), "snapshot leaf count mismatch");
         for (i, (p, w)) in self.model.params.iter().zip(weights).enumerate() {
             ensure!(w.len() == p.element_count(), "leaf '{}' size mismatch", p.name);
             self.literals[i] = to_literal(w, &p.shape)?;
+            self.applied[i] = FP_UNKNOWN;
         }
         self.version = version;
         Ok(())
+    }
+
+    /// Leaves that must be rebuilt to bring this store to `snapshot`
+    /// (fingerprint mismatch or unknown).  Read-only: callers plan under
+    /// a read lock, [`prepare`](Self::prepare_leaves) with no lock, then
+    /// [`commit`](Self::commit_prepared) under a short write lock.
+    pub fn plan_delta(&self, snapshot: &WeightSnapshot) -> Result<Vec<usize>> {
+        ensure!(snapshot.leaf_count() == self.literals.len(), "snapshot leaf count mismatch");
+        Ok((0..self.literals.len())
+            .filter(|&i| self.applied[i] != snapshot.fingerprint(i))
+            .collect())
+    }
+
+    /// Rebuild the literals for `dirty` leaves of `snapshot` without any
+    /// store lock held.  Large leaves fan out over the shared prepare
+    /// pool (each worker borrows the snapshot's `Arc` buffer — no data
+    /// copy beyond the literal itself); small leaves build inline.
+    pub fn prepare_leaves(
+        model: &ModelInfo,
+        snapshot: &WeightSnapshot,
+        dirty: &[usize],
+    ) -> Result<PreparedLeaves> {
+        ensure!(snapshot.leaf_count() == model.params.len(), "snapshot leaf count mismatch");
+        let mut out = Vec::with_capacity(dirty.len());
+        let mut jobs = Vec::new();
+        for &i in dirty {
+            let p = &model.params[i];
+            ensure!(snapshot.leaf(i).len() == p.element_count(), "leaf '{}' size mismatch", p.name);
+            if p.element_count() >= POOL_LEAF_THRESHOLD {
+                let data = Arc::clone(snapshot.leaf_arc(i));
+                let shape = p.shape.clone();
+                jobs.push((
+                    i,
+                    prepare_pool().submit(move || to_literal(&data, &shape).map(SendLit)),
+                ));
+            } else {
+                out.push((i, to_literal(snapshot.leaf(i), &p.shape)?, snapshot.fingerprint(i)));
+            }
+        }
+        for (i, promise) in jobs {
+            let lit = promise.wait().map_err(|e| anyhow!("weight prepare worker: {e}"))??;
+            out.push((i, lit.0, snapshot.fingerprint(i)));
+        }
+        Ok(PreparedLeaves { leaves: out })
+    }
+
+    /// Swap pre-built literals in and bring the store to `snapshot` at
+    /// `version`.  The critical section is pointer swaps plus an inline
+    /// rebuild of any leaf that became dirty *after* the plan (e.g. a
+    /// train step replaced literals in between) — with an up-to-date
+    /// plan this is O(leaves) handle moves, not O(parameters).  Returns
+    /// the number of leaves rebuilt; unchanged leaves count as
+    /// fingerprint hits.
+    pub fn commit_prepared(
+        &mut self,
+        snapshot: &WeightSnapshot,
+        prepared: PreparedLeaves,
+        version: u64,
+    ) -> Result<usize> {
+        ensure!(snapshot.leaf_count() == self.literals.len(), "snapshot leaf count mismatch");
+        let mut rebuilt = 0usize;
+        for (i, lit, fp) in prepared.leaves {
+            ensure!(i < self.literals.len(), "prepared leaf {i} out of range");
+            self.literals[i] = lit;
+            self.applied[i] = fp;
+            rebuilt += 1;
+        }
+        for (i, p) in self.model.params.iter().enumerate() {
+            let fp = snapshot.fingerprint(i);
+            if self.applied[i] != fp {
+                ensure!(
+                    snapshot.leaf(i).len() == p.element_count(),
+                    "leaf '{}' size mismatch",
+                    p.name
+                );
+                self.literals[i] = to_literal(snapshot.leaf(i), &p.shape)?;
+                self.applied[i] = fp;
+                rebuilt += 1;
+            }
+        }
+        self.fingerprint_hits += (self.literals.len() - rebuilt) as u64;
+        self.version = version;
+        Ok(rebuilt)
+    }
+
+    /// One-shot delta apply (plan + rebuild + commit inline, no
+    /// parallelism): rebuild exactly the leaves whose fingerprints
+    /// differ from `snapshot`'s, skip the rest.  Returns the number of
+    /// leaves rebuilt.
+    pub fn apply_snapshot(&mut self, snapshot: &WeightSnapshot, version: u64) -> Result<usize> {
+        self.commit_prepared(snapshot, PreparedLeaves::none(), version)
     }
 
     /// Total parameter count.
@@ -97,13 +304,17 @@ impl ParamStore {
         self.model.params.iter().map(|p| p.element_count()).sum()
     }
 
-    /// L2 distance to another store (diagnostics / tests).
+    /// L2 distance to another store (diagnostics / tests).  Streams
+    /// leaf-by-leaf — at most one leaf of each store is materialized on
+    /// the host at a time, never a full snapshot of either.
     pub fn l2_distance(&self, other: &ParamStore) -> Result<f64> {
-        let a = self.snapshot()?;
-        let b = other.snapshot()?;
+        ensure!(self.literals.len() == other.literals.len(), "leaf count mismatch");
         let mut acc = 0.0f64;
-        for (x, y) in a.iter().zip(&b) {
-            for (u, v) in x.iter().zip(y) {
+        for (a, b) in self.literals.iter().zip(&other.literals) {
+            let x = a.to_vec::<f32>().context("literal to_vec")?;
+            let y = b.to_vec::<f32>().context("literal to_vec")?;
+            ensure!(x.len() == y.len(), "leaf size mismatch");
+            for (u, v) in x.iter().zip(&y) {
                 acc += ((u - v) as f64).powi(2);
             }
         }
@@ -178,5 +389,72 @@ mod tests {
         store.load_snapshot(&other.snapshot().unwrap(), 42).unwrap();
         assert_eq!(store.version(), 42);
         assert_eq!(store.l2_distance(&other).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn weight_snapshot_roundtrip_is_exact() {
+        let Some(model) = tiny_model() else { return };
+        let store = ParamStore::init(&model, 5).unwrap();
+        let snap = store.to_snapshot(None).unwrap();
+        let rebuilt = ParamStore::from_weight_snapshot(&model, &snap).unwrap();
+        assert_eq!(store.l2_distance(&rebuilt).unwrap(), 0.0);
+        // a warm store has nothing dirty against its own snapshot
+        assert!(rebuilt.plan_delta(&snap).unwrap().is_empty());
+    }
+
+    #[test]
+    fn to_snapshot_reuses_unchanged_leaf_buffers() {
+        let Some(model) = tiny_model() else { return };
+        let store = ParamStore::init(&model, 5).unwrap();
+        let first = store.to_snapshot(None).unwrap();
+        let second = store.to_snapshot(Some(&first)).unwrap();
+        // nothing changed between publishes: every buffer is shared
+        assert_eq!(second.shared_leaves(&first), store.leaf_count());
+        let cold = store.to_snapshot(None).unwrap();
+        assert_eq!(cold.shared_leaves(&first), 0);
+        assert_eq!(cold.fingerprints(), first.fingerprints());
+    }
+
+    #[test]
+    fn delta_apply_rebuilds_only_dirty_leaves() {
+        let Some(model) = tiny_model() else { return };
+        let base = ParamStore::init(&model, 5).unwrap();
+        let base_snap = base.to_snapshot(None).unwrap();
+        let mut store = ParamStore::from_weight_snapshot(&model, &base_snap).unwrap();
+        let n = store.leaf_count();
+
+        // perturb one leaf, republish
+        let mut weights = base_snap.to_weights();
+        weights[0][0] += 1.0;
+        let next = WeightSnapshot::of(weights);
+        let dirty = store.plan_delta(&next).unwrap();
+        assert_eq!(dirty, vec![0]);
+        let rebuilt = store.apply_snapshot(&next, 2).unwrap();
+        assert_eq!(rebuilt, 1);
+        assert_eq!(store.fingerprint_hits(), (n - 1) as u64);
+        assert_eq!(store.version(), 2);
+        // byte-identical to a cold full apply of the same snapshot
+        let full = ParamStore::from_weight_snapshot(&model, &next).unwrap();
+        assert_eq!(store.l2_distance(&full).unwrap(), 0.0);
+    }
+
+    #[test]
+    fn prepare_commit_matches_inline_apply() {
+        let Some(model) = tiny_model() else { return };
+        let base = ParamStore::init(&model, 6).unwrap();
+        let base_snap = base.to_snapshot(None).unwrap();
+        let target = ParamStore::init(&model, 7).unwrap().to_snapshot(None).unwrap();
+
+        let mut inline = ParamStore::from_weight_snapshot(&model, &base_snap).unwrap();
+        inline.apply_snapshot(&target, 3).unwrap();
+
+        let mut staged = ParamStore::from_weight_snapshot(&model, &base_snap).unwrap();
+        let dirty = staged.plan_delta(&target).unwrap();
+        let prepared = ParamStore::prepare_leaves(&model, &target, &dirty).unwrap();
+        assert_eq!(prepared.len(), dirty.len());
+        let rebuilt = staged.commit_prepared(&target, prepared, 3).unwrap();
+        assert_eq!(rebuilt, dirty.len());
+        assert_eq!(staged.version(), 3);
+        assert_eq!(inline.l2_distance(&staged).unwrap(), 0.0);
     }
 }

@@ -1,0 +1,168 @@
+//! Immutable, shareable weight snapshots — the unit of weight
+//! distribution.
+//!
+//! A [`WeightSnapshot`] holds every parameter leaf as an `Arc`-shared
+//! host buffer plus a content fingerprint per leaf, both computed once
+//! at publish time.  Everything downstream of the trainer — the sync
+//! services, the rollout service's replica pool, checkpoint load —
+//! passes `Arc<WeightSnapshot>` around, so fanning one publish out to N
+//! consumers costs N refcount bumps instead of N deep copies, and
+//! consumers can diff fingerprints to rebuild only the leaves that
+//! actually changed (see `ParamStore::plan_delta`).
+
+use std::sync::Arc;
+
+/// Content fingerprint of one leaf (FNV-1a over the f32 bytes).
+///
+/// Never returns 0: the zero value is reserved as the "unknown" sentinel
+/// consumers use for leaves whose host content they can no longer vouch
+/// for (e.g. after a device train step replaced the literal).
+pub fn fingerprint_f32(data: &[f32]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    let mut h = OFFSET;
+    for v in data {
+        for b in v.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(PRIME);
+        }
+    }
+    // length guards against trailing-zero collisions across shapes
+    h ^= data.len() as u64;
+    h = h.wrapping_mul(PRIME);
+    if h == 0 {
+        1
+    } else {
+        h
+    }
+}
+
+/// An immutable published weight set: `Arc`-shared leaf buffers in
+/// manifest leaf order, with per-leaf content fingerprints.
+#[derive(Debug, Clone)]
+pub struct WeightSnapshot {
+    leaves: Vec<Arc<Vec<f32>>>,
+    fingerprints: Vec<u64>,
+}
+
+impl WeightSnapshot {
+    /// Wrap already-shared leaf buffers, fingerprinting each once.
+    pub fn from_leaves(leaves: Vec<Arc<Vec<f32>>>) -> WeightSnapshot {
+        let fingerprints = leaves.iter().map(|l| fingerprint_f32(l)).collect();
+        WeightSnapshot { leaves, fingerprints }
+    }
+
+    /// Wrap leaf buffers whose fingerprints the caller already knows
+    /// (publish-side delta reuse).  Callers must pass fingerprints
+    /// produced by [`fingerprint_f32`] over exactly these buffers.
+    pub(crate) fn from_parts(leaves: Vec<Arc<Vec<f32>>>, fingerprints: Vec<u64>) -> WeightSnapshot {
+        debug_assert_eq!(leaves.len(), fingerprints.len());
+        WeightSnapshot { leaves, fingerprints }
+    }
+
+    /// Take ownership of plain leaf vectors (no copy) and share them.
+    pub fn of(weights: Vec<Vec<f32>>) -> Arc<WeightSnapshot> {
+        Arc::new(Self::from_leaves(weights.into_iter().map(Arc::new).collect()))
+    }
+
+    /// Copy borrowed leaf slices into a fresh snapshot (compat shims for
+    /// `&[Vec<f32>]` call sites; the copy happens once, at the boundary).
+    pub fn from_weights(weights: &[Vec<f32>]) -> Arc<WeightSnapshot> {
+        Self::of(weights.to_vec())
+    }
+
+    pub fn leaf_count(&self) -> usize {
+        self.leaves.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.leaves.is_empty()
+    }
+
+    /// Leaf `i`'s data.
+    pub fn leaf(&self, i: usize) -> &[f32] {
+        &self.leaves[i]
+    }
+
+    /// Leaf `i`'s shared buffer (refcount bumps only; used to carry
+    /// unchanged leaves from one published snapshot into the next).
+    pub fn leaf_arc(&self, i: usize) -> &Arc<Vec<f32>> {
+        &self.leaves[i]
+    }
+
+    /// Leaf `i`'s content fingerprint (never 0).
+    pub fn fingerprint(&self, i: usize) -> u64 {
+        self.fingerprints[i]
+    }
+
+    pub fn fingerprints(&self) -> &[u64] {
+        &self.fingerprints
+    }
+
+    /// Total elements across leaves.
+    pub fn total_elements(&self) -> usize {
+        self.leaves.iter().map(|l| l.len()).sum()
+    }
+
+    /// Leaves whose buffers are literally shared with `other`
+    /// (`Arc::ptr_eq`) — publish-side reuse telemetry.
+    pub fn shared_leaves(&self, other: &WeightSnapshot) -> usize {
+        self.leaves
+            .iter()
+            .zip(&other.leaves)
+            .filter(|(a, b)| Arc::ptr_eq(a, b))
+            .count()
+    }
+
+    /// Copy out to plain vectors (compat with `&[Vec<f32>]` consumers).
+    pub fn to_weights(&self) -> Vec<Vec<f32>> {
+        self.leaves.iter().map(|l| l.as_ref().clone()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_is_content_addressed() {
+        let a = fingerprint_f32(&[1.0, 2.0, 3.0]);
+        let b = fingerprint_f32(&[1.0, 2.0, 3.0]);
+        let c = fingerprint_f32(&[1.0, 2.0, 3.5]);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_ne!(a, 0);
+        assert_ne!(fingerprint_f32(&[]), 0);
+    }
+
+    #[test]
+    fn fingerprint_distinguishes_lengths() {
+        // zero-padding must not alias shorter leaves
+        assert_ne!(fingerprint_f32(&[0.0; 4]), fingerprint_f32(&[0.0; 8]));
+    }
+
+    #[test]
+    fn snapshot_shares_buffers_not_copies() {
+        let snap = WeightSnapshot::of(vec![vec![1.0; 8], vec![2.0; 4]]);
+        let other = Arc::clone(&snap);
+        assert!(Arc::ptr_eq(&snap, &other));
+        assert!(Arc::ptr_eq(snap.leaf_arc(0), other.leaf_arc(0)));
+        assert_eq!(snap.leaf_count(), 2);
+        assert_eq!(snap.total_elements(), 12);
+        assert_eq!(snap.leaf(1), &[2.0; 4]);
+    }
+
+    #[test]
+    fn shared_leaves_counts_pointer_reuse() {
+        let a = WeightSnapshot::of(vec![vec![1.0; 4], vec![2.0; 4]]);
+        let b = WeightSnapshot::from_parts(
+            vec![Arc::clone(a.leaf_arc(0)), Arc::new(vec![3.0; 4])],
+            vec![a.fingerprint(0), fingerprint_f32(&[3.0; 4])],
+        );
+        assert_eq!(b.shared_leaves(&a), 1);
+        // equal content in a distinct allocation is not "shared"
+        let c = WeightSnapshot::of(a.to_weights());
+        assert_eq!(c.shared_leaves(&a), 0);
+        assert_eq!(c.fingerprints(), a.fingerprints());
+    }
+}

@@ -11,8 +11,15 @@
 //! published something newer, and multiple explorers may pull the same
 //! version at different moments (the multi-explorer mode's 24/7-service
 //! property relies on this).
+//!
+//! Weight payloads move as [`Arc<WeightSnapshot>`]: one publish
+//! materializes the host buffers once, and every consumer's
+//! [`fetch_if_newer`](WeightSync::fetch_if_newer) is a refcount bump —
+//! an N-replica pool pulling one version shares a single allocation
+//! (see `DESIGN.md` §10).
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 use anyhow::{Context, Result};
@@ -20,19 +27,36 @@ use anyhow::{Context, Result};
 use crate::util::Registry;
 
 use super::checkpoint::{load_checkpoint, save_checkpoint};
+use super::snapshot::WeightSnapshot;
 
+/// One published weight version.  `Clone` is cheap by construction: the
+/// snapshot is behind an `Arc`, so updates fan out to any number of
+/// consumers without copying weight data.
 #[derive(Debug, Clone)]
 pub struct WeightUpdate {
     pub version: u64,
     pub step: u64,
-    pub weights: Vec<Vec<f32>>,
+    /// The published weights, shared across every consumer of this
+    /// version (leaf buffers + per-leaf fingerprints for delta apply).
+    pub snapshot: Arc<WeightSnapshot>,
 }
 
+/// The trainer→explorer weight distribution service.
+///
+/// Contract: `publish` makes `snapshot` the newest version visible to
+/// every consumer; `fetch_if_newer` returns that version **without
+/// copying weight data** (the returned [`WeightUpdate`] shares the
+/// published `Arc<WeightSnapshot>`); `latest_version` is a cheap probe
+/// safe to call on every admitted batch.
 pub trait WeightSync: Send + Sync {
-    /// Trainer-side: publish weights as `version` (monotonically increasing).
-    fn publish(&self, version: u64, step: u64, weights: Vec<Vec<f32>>) -> Result<()>;
+    /// Trainer-side: publish `snapshot` as `version` (monotonically
+    /// increasing).  The snapshot is immutable from here on; publishers
+    /// that reuse unchanged leaf buffers across versions (see
+    /// `ParamStore::to_snapshot`) let consumers skip those leaves
+    /// entirely on apply.
+    fn publish(&self, version: u64, step: u64, snapshot: Arc<WeightSnapshot>) -> Result<()>;
     /// Explorer-side: fetch the newest published weights if newer than
-    /// `current_version`.
+    /// `current_version`.  Returns a shared handle, never a copy.
     fn fetch_if_newer(&self, current_version: u64) -> Result<Option<WeightUpdate>>;
     /// Latest published version (0 = nothing published).
     fn latest_version(&self) -> u64;
@@ -151,13 +175,18 @@ impl Default for WeightSyncRegistry {
 // in-memory (NCCL analog)
 
 #[derive(Default)]
-struct MemState {
-    latest: Option<WeightUpdate>,
+struct MemShared {
+    state: Mutex<Option<WeightUpdate>>,
+    cvar: Condvar,
+    /// Mirror of the published version, updated inside the publish
+    /// critical section: version probes (`latest_version`) never touch
+    /// the mutex — replica pools hit them on every admitted batch.
+    latest: AtomicU64,
 }
 
 #[derive(Clone, Default)]
 pub struct MemorySync {
-    state: Arc<(Mutex<MemState>, Condvar)>,
+    shared: Arc<MemShared>,
 }
 
 impl MemorySync {
@@ -172,11 +201,10 @@ impl MemorySync {
         current_version: u64,
         timeout: std::time::Duration,
     ) -> Option<WeightUpdate> {
-        let (lock, cvar) = &*self.state;
         let deadline = std::time::Instant::now() + timeout;
-        let mut guard = lock.lock().unwrap();
+        let mut guard = self.shared.state.lock().unwrap();
         loop {
-            if let Some(u) = &guard.latest {
+            if let Some(u) = &*guard {
                 if u.version > current_version {
                     return Some(u.clone());
                 }
@@ -185,39 +213,40 @@ impl MemorySync {
             if now >= deadline {
                 return None;
             }
-            let (g, res) = cvar.wait_timeout(guard, deadline - now).unwrap();
+            let (g, res) = self.shared.cvar.wait_timeout(guard, deadline - now).unwrap();
             guard = g;
             if res.timed_out() {
-                return guard.latest.clone().filter(|u| u.version > current_version);
+                return guard.clone().filter(|u| u.version > current_version);
             }
         }
     }
 }
 
 impl WeightSync for MemorySync {
-    fn publish(&self, version: u64, step: u64, weights: Vec<Vec<f32>>) -> Result<()> {
-        let (lock, cvar) = &*self.state;
-        let mut guard = lock.lock().unwrap();
-        guard.latest = Some(WeightUpdate { version, step, weights });
-        cvar.notify_all();
+    fn publish(&self, version: u64, step: u64, snapshot: Arc<WeightSnapshot>) -> Result<()> {
+        let mut guard = self.shared.state.lock().unwrap();
+        *guard = Some(WeightUpdate { version, step, snapshot });
+        // Release pairs with the Acquire in latest_version(): a probe
+        // that observes the new version will find it under the mutex
+        self.shared.latest.store(version, Ordering::Release);
+        self.shared.cvar.notify_all();
         Ok(())
     }
 
     fn fetch_if_newer(&self, current_version: u64) -> Result<Option<WeightUpdate>> {
-        let (lock, _) = &*self.state;
-        let guard = lock.lock().unwrap();
-        // check the version BEFORE cloning: the common already-current
-        // probe must not pay a full-weight copy (replica pools probe on
-        // every admitted batch)
-        Ok(match &guard.latest {
-            Some(u) if u.version > current_version => Some(u.clone()),
-            _ => None,
-        })
+        // lock-free probe first: the common already-current case pays
+        // one atomic load, no mutex
+        if self.shared.latest.load(Ordering::Acquire) <= current_version {
+            return Ok(None);
+        }
+        let guard = self.shared.state.lock().unwrap();
+        // the clone is two Arc bumps (snapshot + nothing else) — weight
+        // data is never copied on the fetch path
+        Ok(guard.clone().filter(|u| u.version > current_version))
     }
 
     fn latest_version(&self) -> u64 {
-        let (lock, _) = &*self.state;
-        lock.lock().unwrap().latest.as_ref().map(|u| u.version).unwrap_or(0)
+        self.shared.latest.load(Ordering::Acquire)
     }
 }
 
@@ -266,12 +295,14 @@ impl CheckpointSync {
 }
 
 impl WeightSync for CheckpointSync {
-    fn publish(&self, version: u64, step: u64, weights: Vec<Vec<f32>>) -> Result<()> {
+    fn publish(&self, version: u64, step: u64, snapshot: Arc<WeightSnapshot>) -> Result<()> {
+        // serialize straight from the shared leaf buffers — no
+        // intermediate Vec<Vec<f32>> materialization
         let leaves: Vec<(String, Vec<usize>, &[f32])> = self
             .leaf_names
             .iter()
-            .zip(&weights)
-            .map(|((n, s), w)| (n.clone(), s.clone(), w.as_slice()))
+            .enumerate()
+            .map(|(i, (n, s))| (n.clone(), s.clone(), snapshot.leaf(i)))
             .collect();
         save_checkpoint(self.ckpt_path(version), &self.preset, step, version, &leaves)?;
         // atomic LATEST update
@@ -294,11 +325,15 @@ impl WeightSync for CheckpointSync {
             }
             match load_checkpoint(self.ckpt_path(latest)) {
                 Ok(ck) => {
+                    // the decoded leaf vectors move into the snapshot —
+                    // the old double-copy (decode, then weights() clone)
+                    // is gone
+                    let (version, step) = (ck.weight_version, ck.step);
                     return Ok(Some(WeightUpdate {
-                        version: ck.weight_version,
-                        step: ck.step,
-                        weights: ck.weights(),
-                    }))
+                        version,
+                        step,
+                        snapshot: ck.into_snapshot(),
+                    }));
                 }
                 Err(e) => last_err = Some(e),
             }
@@ -319,8 +354,8 @@ impl WeightSync for CheckpointSync {
 mod tests {
     use super::*;
 
-    fn weights(tag: f32) -> Vec<Vec<f32>> {
-        vec![vec![tag; 4], vec![tag * 2.0; 2]]
+    fn weights(tag: f32) -> Arc<WeightSnapshot> {
+        WeightSnapshot::of(vec![vec![tag; 4], vec![tag * 2.0; 2]])
     }
 
     #[test]
@@ -332,8 +367,19 @@ mod tests {
         assert_eq!((u.version, u.step), (1, 10));
         assert!(s.fetch_if_newer(1).unwrap().is_none());
         s.publish(2, 20, weights(2.0)).unwrap();
-        assert_eq!(s.fetch_if_newer(1).unwrap().unwrap().weights[0][0], 2.0);
+        assert_eq!(s.fetch_if_newer(1).unwrap().unwrap().snapshot.leaf(0)[0], 2.0);
         assert_eq!(s.latest_version(), 2);
+    }
+
+    #[test]
+    fn memory_fetch_shares_the_published_allocation() {
+        let s = MemorySync::new();
+        let published = weights(4.0);
+        s.publish(1, 1, Arc::clone(&published)).unwrap();
+        let a = s.fetch_if_newer(0).unwrap().unwrap();
+        let b = s.fetch_if_newer(0).unwrap().unwrap();
+        assert!(Arc::ptr_eq(&a.snapshot, &published));
+        assert!(Arc::ptr_eq(&a.snapshot, &b.snapshot));
     }
 
     #[test]
@@ -360,12 +406,28 @@ mod tests {
         let u = s.fetch_if_newer(2).unwrap().unwrap();
         assert_eq!(u.version, 4);
         assert_eq!(u.step, 400);
-        assert_eq!(u.weights[1][0], 8.0);
+        assert_eq!(u.snapshot.leaf(1)[0], 8.0);
         s.rotate(1).unwrap();
         assert!(!dir.join("weights_v1.ckpt").exists());
         assert!(dir.join("weights_v4.ckpt").exists());
         // fetch still works after rotation
         assert!(s.fetch_if_newer(0).unwrap().is_some());
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_preserves_fingerprints() {
+        // fingerprints are content-derived, so a checkpoint hop must
+        // reproduce them exactly (delta apply keeps working across the
+        // durable path)
+        let dir = std::env::temp_dir().join(format!("trft_sync_fp_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let names = vec![("a".to_string(), vec![4]), ("b".to_string(), vec![2])];
+        let s = CheckpointSync::new(&dir, "tiny", names).unwrap();
+        let published = weights(7.0);
+        s.publish(1, 10, Arc::clone(&published)).unwrap();
+        let u = s.fetch_if_newer(0).unwrap().unwrap();
+        assert_eq!(u.snapshot.fingerprints(), published.fingerprints());
         std::fs::remove_dir_all(&dir).unwrap();
     }
 
@@ -412,7 +474,7 @@ mod tests {
             leaf_names: vec![("a".to_string(), vec![4])],
         };
         let s = WeightSyncRegistry::global().build("Checkpoint", &ctx).unwrap();
-        s.publish(1, 5, vec![vec![1.0; 4]]).unwrap();
+        s.publish(1, 5, WeightSnapshot::of(vec![vec![1.0; 4]])).unwrap();
         assert_eq!(s.latest_version(), 1);
         std::fs::remove_dir_all(ctx.dir.unwrap()).unwrap();
     }

@@ -57,28 +57,30 @@ unsafe impl Send for TrainState {}
 
 impl TrainState {
     pub fn new(params: ParamStore) -> Result<TrainState> {
-        let zeros = |model: &ModelInfo| -> Result<Vec<xla::Literal>> {
-            model
-                .params
-                .iter()
-                .map(|p| {
-                    let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
-                    xla::Literal::vec1(&vec![0f32; p.element_count()])
-                        .reshape(&dims)
-                        .context("zero literal")
-                })
-                .collect()
-        };
-        let m = zeros(&params.model)?;
-        let v = zeros(&params.model)?;
+        let m = Self::zero_moments(&params.model)?;
+        let v = Self::zero_moments(&params.model)?;
         Ok(TrainState { params, m, v, step: 0 })
     }
 
+    /// Param-shaped zero literals (fresh Adam moments).
+    fn zero_moments(model: &ModelInfo) -> Result<Vec<xla::Literal>> {
+        model
+            .params
+            .iter()
+            .map(|p| {
+                let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(&vec![0f32; p.element_count()])
+                    .reshape(&dims)
+                    .context("zero literal")
+            })
+            .collect()
+    }
+
     /// Reset optimizer moments (used when swapping in external weights).
+    /// Builds fresh zeros directly — the params never leave the store.
     pub fn reset_optimizer(&mut self) -> Result<()> {
-        let fresh = TrainState::new(ParamStore::from_snapshot(&self.params.model, &self.params.snapshot()?)?)?;
-        self.m = fresh.m;
-        self.v = fresh.v;
+        self.m = Self::zero_moments(&self.params.model)?;
+        self.v = Self::zero_moments(&self.params.model)?;
         self.step = 0;
         Ok(())
     }

@@ -21,7 +21,7 @@ use anyhow::{anyhow, ensure, Result};
 use crate::cache::{ParkedSession, PrefixIndex, RowLease, SessionPark};
 use crate::explorer::generation::{GenOutput, GenerationEngine, RolloutEndpoint, SamplingArgs};
 use crate::explorer::Session;
-use crate::model::WeightSync;
+use crate::model::{WeightSnapshot, WeightUpdate};
 use crate::obs::{Span, SpanKind, SpanRecorder};
 use crate::tokenizer::BOS;
 
@@ -122,8 +122,12 @@ pub trait ReplicaEngine: Send + Sync {
     /// Max rows a shared session can hold.
     fn max_batch(&self) -> usize;
     fn weight_version(&self) -> u64;
-    fn sync_weights(&self, sync: &dyn WeightSync) -> Result<bool>;
-    fn set_weights(&self, weights: &[Vec<f32>], version: u64) -> Result<()>;
+    /// Apply a published update the *service* fetched once for the whole
+    /// pool (the rolling sync shares one `Arc<WeightSnapshot>` across
+    /// every replica instead of N independent sync pulls).  Returns true
+    /// when this replica moved to `update.version`.
+    fn apply_update(&self, update: &WeightUpdate) -> Result<bool>;
+    fn set_weights(&self, snapshot: &WeightSnapshot, version: u64) -> Result<()>;
     /// Serve one shared session: the initial `rows` plus whatever
     /// [`ServeCtl::refill`] yields mid-session.  Every claimed row is
     /// handed back through `ctl`; on an engine-level error un-served
@@ -573,8 +577,8 @@ impl ReplicaEngine for EngineReplica {
         self.engine.params_version()
     }
 
-    fn sync_weights(&self, sync: &dyn WeightSync) -> Result<bool> {
-        let updated = self.engine.try_sync(sync)?;
+    fn apply_update(&self, update: &WeightUpdate) -> Result<bool> {
+        let updated = self.engine.apply_update(update)?;
         if updated {
             // a new policy version invalidates every parked KV session
             self.invalidate_parked();
@@ -582,8 +586,8 @@ impl ReplicaEngine for EngineReplica {
         Ok(updated)
     }
 
-    fn set_weights(&self, weights: &[Vec<f32>], version: u64) -> Result<()> {
-        self.engine.set_weights(weights, version)?;
+    fn set_weights(&self, snapshot: &WeightSnapshot, version: u64) -> Result<()> {
+        self.engine.set_weights(snapshot, version)?;
         self.invalidate_parked();
         Ok(())
     }
@@ -748,12 +752,16 @@ impl ReplicaEngine for ModelReplica {
         self.model.weight_version()
     }
 
-    fn sync_weights(&self, sync: &dyn WeightSync) -> Result<bool> {
-        self.model.sync_weights(sync)
+    fn apply_update(&self, update: &WeightUpdate) -> Result<bool> {
+        if self.model.weight_version() >= update.version {
+            return Ok(false);
+        }
+        self.model.set_weights(&update.snapshot, update.version)?;
+        Ok(true)
     }
 
-    fn set_weights(&self, weights: &[Vec<f32>], version: u64) -> Result<()> {
-        self.model.set_weights(weights, version)
+    fn set_weights(&self, snapshot: &WeightSnapshot, version: u64) -> Result<()> {
+        self.model.set_weights(snapshot, version)
     }
 
     fn serve(&self, rows: &mut Vec<RowJob>, ctl: &mut dyn ServeCtl) -> Result<()> {

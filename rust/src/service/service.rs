@@ -15,7 +15,7 @@ use crate::exec::Promise;
 use crate::explorer::generation::{
     GenOutput, GenerationEngine, RolloutEndpoint, RolloutModel, SamplingArgs,
 };
-use crate::model::WeightSync;
+use crate::model::{WeightSnapshot, WeightSync};
 use crate::obs::SpanRecorder;
 
 use super::batcher::{route_job, run_worker, RowJob, WorkerSetup};
@@ -367,27 +367,35 @@ impl RolloutModel for RolloutService {
 }
 
 impl RolloutEndpoint for RolloutService {
-    /// Rolling weight update: replicas pull one at a time while the
-    /// others keep serving.  Succeeds if any replica synced; fails only
-    /// when every replica failed.
+    /// Rolling weight update: the service fetches the published update
+    /// **once** and applies the same shared `Arc<WeightSnapshot>` to
+    /// each lagging replica in turn, so the others keep serving and the
+    /// pool never holds more than one copy of the published weights —
+    /// the old shape was N independent sync pulls, N deep copies.
+    /// Succeeds if any replica applied; fails only when every replica
+    /// failed.
     fn sync_weights(&self, sync: &dyn WeightSync) -> Result<bool> {
         // every explorer driver probes before every batch; skip the
-        // replica walk entirely when the whole pool is already current
-        if sync.latest_version() <= self.weight_version() {
+        // fetch entirely when the whole pool is already current
+        let pool_version = self.weight_version();
+        if sync.latest_version() <= pool_version {
             return Ok(false);
         }
+        let Some(update) = sync.fetch_if_newer(pool_version)? else {
+            return Ok(false);
+        };
         let mut updated = false;
         let mut failures = 0usize;
         let mut last_err: Option<anyhow::Error> = None;
         for replica in &self.replicas {
-            match replica.engine.sync_weights(sync) {
+            match replica.engine.apply_update(&update) {
                 Ok(true) => updated = true,
                 Ok(false) => {}
                 Err(e) => {
                     failures += 1;
                     crate::log_warn!(
                         "service",
-                        "replica {} weight pull failed: {e:#}",
+                        "replica {} weight apply failed: {e:#}",
                         replica.id
                     );
                     last_err = Some(e);
@@ -396,7 +404,7 @@ impl RolloutEndpoint for RolloutService {
         }
         if failures == self.replicas.len() {
             if let Some(e) = last_err {
-                return Err(e.context("every replica failed to pull weights"));
+                return Err(e.context("every replica failed to apply weights"));
             }
         }
         if updated {
@@ -410,9 +418,9 @@ impl RolloutEndpoint for RolloutService {
         Ok(updated)
     }
 
-    fn set_weights(&self, weights: &[Vec<f32>], version: u64) -> Result<()> {
+    fn set_weights(&self, snapshot: &WeightSnapshot, version: u64) -> Result<()> {
         for replica in &self.replicas {
-            replica.engine.set_weights(weights, version)?;
+            replica.engine.set_weights(snapshot, version)?;
         }
         if let Some(prefix) = &self.prefix {
             prefix.invalidate_below(version);
@@ -487,7 +495,7 @@ mod tests {
         let svc = service(vec![a, b], ServiceConfig::default());
         assert_eq!(svc.weight_version(), 0);
         let sync = MemorySync::new();
-        sync.publish(5, 50, vec![vec![0.0]]).unwrap();
+        sync.publish(5, 50, WeightSnapshot::of(vec![vec![0.0]])).unwrap();
         assert!(svc.sync_weights(&sync).unwrap());
         assert_eq!(svc.weight_version(), 5);
         let snap = svc.snapshot();

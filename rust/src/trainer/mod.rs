@@ -16,4 +16,4 @@ pub use spec::{
     AlgorithmConfig, AlgorithmSpec, GroupingPolicy, HyperParams, LossSpec, OpmdFlavor, Pairing,
     PolicyLoss, TauSlot,
 };
-pub use trainer::{StepMetrics, Trainer, TrainerConfig};
+pub use trainer::{PublishStats, StepMetrics, Trainer, TrainerConfig};

@@ -7,7 +7,7 @@ use std::time::Instant;
 use anyhow::{Context, Result};
 
 use crate::buffer::{ExperienceBatch, SampleStrategy};
-use crate::model::{ParamStore, WeightSync};
+use crate::model::{ParamStore, WeightSnapshot, WeightSync};
 use crate::runtime::{ModelEngine, TrainState};
 
 use super::batch::build_batch;
@@ -52,6 +52,21 @@ impl StepMetrics {
     }
 }
 
+/// What one [`Trainer::publish_weights`] call did, for the coordinator's
+/// telemetry: how many leaf buffers the new snapshot shares with the
+/// previously published one (changed leaves = `total_leaves -
+/// reused_leaves`) and how long the trainer stalled building it.
+#[derive(Debug, Clone, Copy)]
+pub struct PublishStats {
+    pub version: u64,
+    pub total_leaves: usize,
+    /// Leaves whose content fingerprint matched the previous publish, so
+    /// the prior `Arc` buffer was shared instead of re-allocated.
+    pub reused_leaves: usize,
+    /// Seconds spent snapshotting device weights into the shared buffer.
+    pub stall_s: f64,
+}
+
 pub struct Trainer {
     engine: Arc<ModelEngine>,
     state: TrainState,
@@ -59,6 +74,9 @@ pub struct Trainer {
     pub config: TrainerConfig,
     version: u64,
     history: Vec<StepMetrics>,
+    /// The last snapshot handed to the sync service; unchanged leaves of
+    /// the next publish share its buffers.
+    last_published: Option<Arc<WeightSnapshot>>,
 }
 
 impl Trainer {
@@ -69,7 +87,15 @@ impl Trainer {
         config: TrainerConfig,
     ) -> Result<Trainer> {
         let state = TrainState::new(params)?;
-        Ok(Trainer { engine, state, strategy, version: config.initial_version, config, history: vec![] })
+        Ok(Trainer {
+            engine,
+            state,
+            strategy,
+            version: config.initial_version,
+            config,
+            history: vec![],
+            last_published: None,
+        })
     }
 
     pub fn step(&self) -> u64 {
@@ -132,11 +158,29 @@ impl Trainer {
     }
 
     /// Publish current weights as the next version.
-    pub fn publish_weights(&mut self, sync: &dyn WeightSync) -> Result<u64> {
+    ///
+    /// Builds an immutable [`WeightSnapshot`] from the device params,
+    /// sharing the buffer of every leaf whose fingerprint matches the
+    /// previous publish, then hands the `Arc` to the sync service — no
+    /// further weight copies happen on the distribution path.
+    pub fn publish_weights(&mut self, sync: &dyn WeightSync) -> Result<PublishStats> {
         self.version += 1;
-        let snap = self.state.params.snapshot()?;
-        sync.publish(self.version, self.state.step, snap)?;
-        Ok(self.version)
+        let t0 = Instant::now();
+        let snap = self.state.params.to_snapshot(self.last_published.as_deref())?;
+        let stall_s = t0.elapsed().as_secs_f64();
+        let reused = match self.last_published.as_deref() {
+            Some(prev) => snap.shared_leaves(prev),
+            None => 0,
+        };
+        let stats = PublishStats {
+            version: self.version,
+            total_leaves: snap.leaf_count(),
+            reused_leaves: reused,
+            stall_s,
+        };
+        sync.publish(self.version, self.state.step, Arc::clone(&snap))?;
+        self.last_published = Some(snap);
+        Ok(stats)
     }
 
     /// Save a checkpoint of the current state.

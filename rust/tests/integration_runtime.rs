@@ -248,9 +248,10 @@ fn weight_sync_roundtrip_through_engine() {
     assert!(trainer_params.l2_distance(&explorer_params).unwrap() > 0.0);
 
     let sync = trinity_rft::model::MemorySync::new();
-    sync.publish(1, 100, trainer_params.snapshot().unwrap()).unwrap();
+    let snap = trainer_params.to_snapshot(None).unwrap();
+    sync.publish(1, 100, snap).unwrap();
     let update = sync.fetch_if_newer(0).unwrap().unwrap();
-    explorer_params.load_snapshot(&update.weights, update.version).unwrap();
+    explorer_params.apply_snapshot(&update.snapshot, update.version).unwrap();
     assert_eq!(trainer_params.l2_distance(&explorer_params).unwrap(), 0.0);
 
     // both produce identical logprobs now

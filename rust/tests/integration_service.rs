@@ -246,7 +246,7 @@ fn rolling_weight_sync_and_min_version_accounting() {
     let svc = service_over(vec![a, b], ServiceConfig::default());
     let sync = MemorySync::new();
     assert_eq!(svc.weight_version(), 0);
-    sync.publish(3, 30, vec![vec![1.0]]).unwrap();
+    sync.publish(3, 30, trinity_rft::model::WeightSnapshot::of(vec![vec![1.0]])).unwrap();
     assert!(svc.sync_weights(&sync).unwrap());
     assert_eq!(svc.weight_version(), 3);
     let snap = svc.snapshot();

@@ -1,0 +1,159 @@
+//! Integration: the zero-copy weight distribution plane.
+//!
+//! Ungated tests cover the pure snapshot/sync layer (no PJRT): a
+//! published `Arc<WeightSnapshot>` must reach every concurrent fetcher
+//! as the SAME allocation — fetch is a refcount bump, never a copy.
+//! Artifact-gated tests (skip without `make artifacts`) cover the delta
+//! apply against real engine literals: unchanged leaves are skipped by
+//! fingerprint, and the result is byte-identical to a full rebuild.
+
+use std::sync::Arc;
+
+use trinity_rft::explorer::GenerationEngine;
+use trinity_rft::model::{MemorySync, ParamStore, WeightSnapshot, WeightSync};
+use trinity_rft::runtime::{Manifest, ModelEngine, RuntimeClient};
+
+fn engine() -> Option<(Arc<RuntimeClient>, ModelEngine)> {
+    let manifest = Manifest::load_default()?;
+    let client = RuntimeClient::global();
+    let engine = ModelEngine::new(client.clone(), &manifest, "tiny").unwrap();
+    Some((client, engine))
+}
+
+// ---------------------------------------------------------------------------
+// ungated: snapshot sharing through MemorySync
+
+#[test]
+fn concurrent_fetches_share_the_published_allocation() {
+    let sync = MemorySync::new();
+    let published = WeightSnapshot::of(vec![vec![1.0; 64], vec![2.0; 32]]);
+    sync.publish(1, 10, Arc::clone(&published)).unwrap();
+
+    // N threads fetch the same version concurrently; every one must get
+    // the identical Arc — pointer equality, not just equal bytes.
+    let updates: Vec<_> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..4)
+            .map(|_| s.spawn(|| sync.fetch_if_newer(0).unwrap().unwrap()))
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(updates.len(), 4);
+    for u in &updates {
+        assert_eq!(u.version, 1);
+        assert!(
+            Arc::ptr_eq(&u.snapshot, &published),
+            "fetch_if_newer must hand out the published Arc, not a copy"
+        );
+        for i in 0..published.leaf_count() {
+            assert!(Arc::ptr_eq(u.snapshot.leaf_arc(i), published.leaf_arc(i)));
+        }
+    }
+}
+
+#[test]
+fn latest_version_probe_short_circuits_stale_fetches() {
+    let sync = MemorySync::new();
+    assert_eq!(sync.latest_version(), 0);
+    assert!(sync.fetch_if_newer(0).unwrap().is_none());
+    sync.publish(1, 5, WeightSnapshot::of(vec![vec![0.5]])).unwrap();
+    sync.publish(2, 6, WeightSnapshot::of(vec![vec![0.7]])).unwrap();
+    assert_eq!(sync.latest_version(), 2);
+    assert!(sync.fetch_if_newer(2).unwrap().is_none(), "probe says current");
+    let u = sync.fetch_if_newer(1).unwrap().unwrap();
+    assert_eq!(u.version, 2);
+    assert_eq!(u.snapshot.leaf(0)[0], 0.7);
+}
+
+#[test]
+fn republish_shares_unchanged_leaf_buffers() {
+    // The trainer-side reuse contract at the snapshot level: a second
+    // snapshot built against the first shares every unchanged buffer.
+    let a = WeightSnapshot::of(vec![vec![1.0; 16], vec![2.0; 8], vec![3.0; 4]]);
+    let mut w = a.to_weights();
+    w[1][0] = 9.0;
+    let fresh = WeightSnapshot::from_weights(&w);
+    assert_eq!(a.shared_leaves(&fresh), 0, "independent builds share nothing");
+    assert_eq!(fresh.fingerprint(0), a.fingerprint(0));
+    assert_ne!(fresh.fingerprint(1), a.fingerprint(1));
+}
+
+// ---------------------------------------------------------------------------
+// artifact-gated: delta apply against real engine literals
+
+#[test]
+fn delta_apply_is_byte_identical_and_skips_clean_leaves() {
+    let Some((_c, engine)) = engine() else { return };
+    let src = ParamStore::init(&engine.model, 21).unwrap();
+    let mut dst = ParamStore::init(&engine.model, 22).unwrap();
+    assert!(src.l2_distance(&dst).unwrap() > 0.0);
+
+    // full first apply: every leaf dirty
+    let snap1 = src.to_snapshot(None).unwrap();
+    let n = snap1.leaf_count();
+    assert_eq!(dst.apply_snapshot(&snap1, 1).unwrap(), n);
+    assert_eq!(src.l2_distance(&dst).unwrap(), 0.0, "byte-identical after apply");
+
+    // perturb exactly one leaf and republish
+    let mut weights = snap1.to_weights();
+    weights[0][0] += 1.0;
+    let snap2 = WeightSnapshot::from_weights(&weights);
+    assert_eq!(dst.plan_delta(&snap2).unwrap(), vec![0], "only leaf 0 dirty");
+
+    let hits_before = dst.fingerprint_hits();
+    let rebuilt = dst.apply_snapshot(&snap2, 2).unwrap();
+    assert_eq!(rebuilt, 1, "K of N leaves unchanged -> rebuild exactly N-K");
+    assert_eq!(dst.fingerprint_hits() - hits_before, (n - 1) as u64);
+
+    // the delta-applied store matches a from-scratch rebuild exactly
+    let full = ParamStore::from_weight_snapshot(&engine.model, &snap2).unwrap();
+    assert_eq!(dst.l2_distance(&full).unwrap(), 0.0);
+}
+
+#[test]
+fn prepared_commit_matches_one_shot_apply() {
+    let Some((_c, engine)) = engine() else { return };
+    let src = ParamStore::init(&engine.model, 23).unwrap();
+    let snap = src.to_snapshot(None).unwrap();
+
+    let mut inline = ParamStore::init(&engine.model, 24).unwrap();
+    inline.apply_snapshot(&snap, 1).unwrap();
+
+    let mut staged = ParamStore::init(&engine.model, 25).unwrap();
+    let dirty = staged.plan_delta(&snap).unwrap();
+    let prepared = ParamStore::prepare_leaves(&engine.model, &snap, &dirty).unwrap();
+    assert_eq!(prepared.len(), dirty.len());
+    staged.commit_prepared(&snap, prepared, 1).unwrap();
+
+    assert_eq!(inline.l2_distance(&staged).unwrap(), 0.0);
+    assert_eq!(staged.version(), 1);
+}
+
+#[test]
+fn generation_engine_delta_syncs_through_memory_sync() {
+    let Some((_c, engine)) = engine() else { return };
+    let engine = Arc::new(engine);
+    let trainer = ParamStore::init(&engine.model, 31).unwrap();
+    let gen =
+        GenerationEngine::new(Arc::clone(&engine), ParamStore::init(&engine.model, 32).unwrap());
+
+    let sync = MemorySync::new();
+    let snap1 = trainer.to_snapshot(None).unwrap();
+    sync.publish(1, 10, Arc::clone(&snap1)).unwrap();
+    assert!(gen.try_sync(&sync).unwrap());
+    assert_eq!(gen.params_version(), 1);
+    assert!(!gen.try_sync(&sync).unwrap(), "already current");
+
+    // republish identical content at a newer version: the apply must be
+    // all fingerprint hits, no leaf rebuilds
+    let snap2 = trainer.to_snapshot(Some(&snap1)).unwrap();
+    assert_eq!(snap2.shared_leaves(&snap1), snap1.leaf_count(), "publish-side reuse");
+    sync.publish(2, 20, snap2).unwrap();
+    let hits_before = gen.fingerprint_hits();
+    assert!(gen.try_sync(&sync).unwrap());
+    assert_eq!(gen.params_version(), 2);
+    assert_eq!(
+        gen.fingerprint_hits() - hits_before,
+        snap1.leaf_count() as u64,
+        "identical republish applies via fingerprint hits only"
+    );
+}
