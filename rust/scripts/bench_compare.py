@@ -32,9 +32,18 @@ HIGHER_IS_BETTER = {
     "prefill_reduction_total",
     "reused",
     "completed",
+    "rows_per_s",
+    "saved_prefill_tokens",
 }
-# ...while growth in these is
-LOWER_IS_BETTER = {"wall_s", "mb_copied"}
+# ...while growth in these is (train_wait_ms stays non-directional:
+# DRR deliberately trades train waits for interactive waits)
+LOWER_IS_BETTER = {
+    "wall_s",
+    "mb_copied",
+    "interactive_wait_ms",
+    "interactive_wait_p95_ms",
+    "turn2_wall_ms",
+}
 SOFT_THRESHOLD = 0.25  # fraction of the baseline value
 
 

@@ -111,6 +111,12 @@ pub struct CacheMetrics {
     /// Matched prefixes that fell back cold (quarantined / overloaded
     /// holder); the request is still served, just without reuse.
     pub affinity_fallbacks: AtomicU64,
+    /// Parked sessions moved to a healthy replica instead of falling
+    /// back cold (QoS live migration, DESIGN.md §11).
+    pub migrations: AtomicU64,
+    /// Prefill tokens the migrations above kept reusable (the matched
+    /// prefix that would otherwise have been re-prefilled cold).
+    pub migration_saved_tokens: AtomicU64,
 }
 
 /// Point-in-time cache telemetry (rides on `ServiceSnapshot`).
@@ -128,6 +134,8 @@ pub struct CacheSnapshot {
     pub trie_evictions: u64,
     pub invalidations: u64,
     pub affinity_fallbacks: u64,
+    pub migrations: u64,
+    pub migration_saved_tokens: u64,
     pub trie_entries: usize,
     pub trie_tokens: usize,
 }
@@ -153,9 +161,26 @@ impl CacheSnapshot {
             ("cache_evictions".to_string(), (self.trie_evictions + self.park_evicted) as f64),
             ("cache_invalidations".to_string(), self.invalidations as f64),
             ("cache_fallbacks".to_string(), self.affinity_fallbacks as f64),
+            ("cache_migrations".to_string(), self.migrations as f64),
+            ("cache_migration_saved_tokens".to_string(), self.migration_saved_tokens as f64),
             ("cache_entries".to_string(), self.trie_entries as f64),
         ]
     }
+}
+
+/// Full routing decision for a session-tagged prompt.  QoS migration
+/// needs more than hit/miss: *who* holds the prefix and *why* it was
+/// rejected decide whether the parked session can be moved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouteDecision {
+    /// No usable prefix: serve cold on the least-loaded path.
+    Miss,
+    /// Pin to the prefix holder, reusing `matched` tokens.
+    Affinity { replica: usize, matched: usize },
+    /// A prefix of `matched` tokens exists on `holder` (produced under
+    /// `version`) but the holder was rejected for `reason`; see
+    /// `qos::migratable` for which reasons allow moving the session.
+    Cold { holder: usize, matched: usize, version: u64, reason: Fallback },
 }
 
 /// The service-wide prefix index: trie + affinity policy + telemetry.
@@ -197,35 +222,53 @@ impl PrefixIndex {
         prompt: &[i32],
         replicas: &[ReplicaView],
     ) -> (Option<usize>, usize) {
+        match self.route_decision(prompt, replicas) {
+            RouteDecision::Affinity { replica, matched } => (Some(replica), matched),
+            _ => (None, 0),
+        }
+    }
+
+    /// The full routing decision for a session-tagged prompt.  Same
+    /// counters as [`route_scored`](Self::route_scored) (which wraps
+    /// this), but a `Cold` fallback keeps the holder / matched length /
+    /// version visible so the QoS plane can migrate the parked session
+    /// instead of re-prefilling (DESIGN.md §11).
+    pub fn route_decision(&self, prompt: &[i32], replicas: &[ReplicaView]) -> RouteDecision {
         self.metrics.lookups.fetch_add(1, Ordering::Relaxed);
         let mut trie = self.trie.lock().unwrap();
         let Some(m) = trie.lookup(prompt) else {
             self.metrics.misses.fetch_add(1, Ordering::Relaxed);
-            return (None, 0);
+            return RouteDecision::Miss;
         };
         match self.policy.decide(m.len, m.version, m.replica, replicas) {
             Route::Affinity(id) => {
                 self.metrics.hits.fetch_add(1, Ordering::Relaxed);
                 self.metrics.reused_tokens.fetch_add(m.len as u64, Ordering::Relaxed);
-                (Some(id), m.len)
+                RouteDecision::Affinity { replica: id, matched: m.len }
             }
             Route::Cold(Fallback::ShortPrefix) => {
                 self.metrics.misses.fetch_add(1, Ordering::Relaxed);
-                (None, 0)
+                RouteDecision::Miss
             }
             Route::Cold(Fallback::Stale) | Route::Cold(Fallback::Unknown) => {
                 // the stored prefix can never be reused: drop it now
                 trie.remove(&prompt[..m.len]);
                 self.metrics.invalidations.fetch_add(1, Ordering::Relaxed);
                 self.metrics.misses.fetch_add(1, Ordering::Relaxed);
-                (None, 0)
+                RouteDecision::Miss
             }
-            Route::Cold(_) => {
+            Route::Cold(reason) => {
                 // quarantined / overloaded holder: the prefix stays (the
-                // replica may heal), the request goes cold
+                // replica may heal), the request goes cold — unless the
+                // QoS plane migrates the session
                 self.metrics.affinity_fallbacks.fetch_add(1, Ordering::Relaxed);
                 self.metrics.misses.fetch_add(1, Ordering::Relaxed);
-                (None, 0)
+                RouteDecision::Cold {
+                    holder: m.replica,
+                    matched: m.len,
+                    version: m.version,
+                    reason,
+                }
             }
         }
     }
@@ -275,6 +318,16 @@ impl PrefixIndex {
         }
     }
 
+    /// Account a live session migration and rebind the stored prefix to
+    /// its new holder, so subsequent turns route straight to the
+    /// destination (`insert` on an existing path refreshes the entry in
+    /// place; no tokens are re-stored).
+    pub fn note_migrated(&self, prefix: &[i32], dest: usize, version: u64, saved_tokens: usize) {
+        self.metrics.migrations.fetch_add(1, Ordering::Relaxed);
+        self.metrics.migration_saved_tokens.fetch_add(saved_tokens as u64, Ordering::Relaxed);
+        self.trie.lock().unwrap().insert(prefix, dest, version);
+    }
+
     pub fn snapshot(&self) -> CacheSnapshot {
         let (trie_entries, trie_tokens) = {
             let trie = self.trie.lock().unwrap();
@@ -295,6 +348,8 @@ impl PrefixIndex {
             trie_evictions: load(&m.trie_evictions),
             invalidations: load(&m.invalidations),
             affinity_fallbacks: load(&m.affinity_fallbacks),
+            migrations: load(&m.migrations),
+            migration_saved_tokens: load(&m.migration_saved_tokens),
             trie_entries,
             trie_tokens,
         }
@@ -369,6 +424,41 @@ mod tests {
         let snap = idx.snapshot();
         assert!(snap.trie_evictions >= 1, "{snap:?}");
         assert!(snap.trie_tokens <= 4);
+    }
+
+    #[test]
+    fn route_decision_surfaces_holder_on_cold_fallback() {
+        let idx = PrefixIndex::new(CacheConfig { min_prefix: 2, ..Default::default() });
+        idx.admit(&[1, 2, 3, 4], 0, 0);
+        let mut replicas = views(2);
+        replicas[0].ready = false;
+        let d = idx.route_decision(&[1, 2, 3, 4, 5], &replicas);
+        assert_eq!(
+            d,
+            RouteDecision::Cold {
+                holder: 0,
+                matched: 4,
+                version: 0,
+                reason: Fallback::Quarantined
+            }
+        );
+        // the wrapper maps the same decision to the legacy shape
+        assert_eq!(idx.route_scored(&[1, 2, 3, 4, 5], &replicas), (None, 0));
+        assert_eq!(idx.snapshot().affinity_fallbacks, 2);
+    }
+
+    #[test]
+    fn note_migrated_rebinds_the_prefix_holder() {
+        let idx = PrefixIndex::new(CacheConfig { min_prefix: 2, ..Default::default() });
+        idx.admit(&[1, 2, 3, 4], 0, 0);
+        idx.note_migrated(&[1, 2, 3, 4], 1, 0, 4);
+        // subsequent turns route straight to the destination
+        assert_eq!(idx.route(&[1, 2, 3, 4, 5], &views(2)), Some(1));
+        let snap = idx.snapshot();
+        assert_eq!(snap.migrations, 1);
+        assert_eq!(snap.migration_saved_tokens, 4);
+        assert_eq!(snap.trie_entries, 1, "rebind does not duplicate the entry");
+        assert!(snap.monitor_fields().iter().any(|(n, _)| n == "cache_migrations"));
     }
 
     #[test]

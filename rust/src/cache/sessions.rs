@@ -114,6 +114,21 @@ impl<S> SessionPark<S> {
         self.parked.remove(pos)
     }
 
+    /// Adopt a session extracted from another replica's park (QoS
+    /// migration, DESIGN.md §11): the session keeps its leases, weight
+    /// version and remaining TTL — only the holder changes.  Returns
+    /// how many sessions were evicted to respect the capacity bound
+    /// (including this one, immediately, when capacity is 0).
+    pub fn adopt(&mut self, parked: ParkedSession<S>) -> usize {
+        self.parked.push_front(parked);
+        let mut evicted = 0;
+        while self.parked.len() > self.capacity {
+            self.parked.pop_back();
+            evicted += 1;
+        }
+        evicted
+    }
+
     /// Drop parked sessions whose weights are older than `version`
     /// (invalidation-on-publish); returns how many.
     pub fn invalidate_below(&mut self, version: u64) -> usize {
@@ -191,6 +206,30 @@ mod tests {
         assert_eq!(park.invalidate_below(3), 2);
         assert_eq!(park.len(), 1);
         assert!(park.claim(|p| p.version == 3).is_some());
+    }
+
+    #[test]
+    fn adopt_preserves_leases_and_respects_capacity() {
+        let now = Instant::now();
+        let mut src: SessionPark<u32> = SessionPark::new(2, Duration::from_secs(60));
+        src.park(7, 3, vec![lease(42, &[1, 2, 3])], now);
+        let moved = src.claim(|p| p.row_resumes(0, 42, &[1, 2, 3, 4], 64)).unwrap();
+        let mut dst: SessionPark<u32> = SessionPark::new(1, Duration::from_secs(60));
+        assert_eq!(dst.adopt(moved), 0);
+        // the adopted session resumes on the destination exactly as it
+        // would have on the source: same lease, same version
+        let got = dst.claim(|p| p.version == 3 && p.row_resumes(0, 42, &[1, 2, 3, 4], 64));
+        assert_eq!(got.map(|p| p.state), Some(7));
+        // capacity still binds on adopt
+        dst.park(1, 3, vec![lease(1, &[1])], now);
+        let extra = ParkedSession {
+            state: 2,
+            version: 3,
+            rows: vec![lease(2, &[2])],
+            expires: now + Duration::from_secs(60),
+        };
+        assert_eq!(dst.adopt(extra), 1);
+        assert_eq!(dst.len(), 1);
     }
 
     #[test]

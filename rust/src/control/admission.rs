@@ -1,14 +1,17 @@
 //! Admission controller: a pressure-driven gate on explorer batch
 //! launches.
 //!
-//! Pressure is the **max** of four normalized components (any one
+//! Pressure is the **max** of five normalized components (any one
 //! saturated resource should throttle, a "utility" read of the gauges
 //! rather than `Free`'s raw `buffer_depth` threshold):
 //!
 //! * queue-wait p95 over `wait_hi_s`,
 //! * queued requests over `queue_hi` per *healthy* replica,
 //! * quarantined fraction of the pool over `quarantine_hi`,
-//! * buffer depth over `scheduler.max_buffer_depth` (when capped).
+//! * buffer depth over `scheduler.max_buffer_depth` (when capped),
+//! * per-class queued depth over the `[qos]` class caps (eval and
+//!   interactive; bulk train traffic is throttled by the components
+//!   above).  Uncapped classes contribute nothing.
 //!
 //! The gate closes after `hold_ticks` consecutive samples at pressure
 //! ≥ 1.0 and reopens after `hold_ticks` consecutive samples at
@@ -29,6 +32,9 @@ pub struct AdmissionController {
     hold_ticks: u64,
     replicas: f64,
     max_buffer_depth: f64,
+    /// `[qos]` per-class queued-job caps (0 = uncapped), indexed by
+    /// `RequestClass::index()`.
+    class_caps: [f64; crate::qos::CLASS_COUNT],
     open: AtomicBool,
     streak: AtomicU64,
     /// Last computed pressure, f64 bits (for snapshots).
@@ -45,6 +51,7 @@ impl AdmissionController {
             hold_ticks: cfg.hold_ticks.max(1),
             replicas: ctx.replicas.max(1) as f64,
             max_buffer_depth: ctx.max_buffer_depth as f64,
+            class_caps: ctx.class_caps.map(|c| c as f64),
             open: AtomicBool::new(true),
             streak: AtomicU64::new(0),
             pressure_bits: AtomicU64::new(0),
@@ -62,7 +69,16 @@ impl AdmissionController {
         } else {
             0.0
         };
-        wait.max(depth).max(quarantine).max(buffer)
+        let mut class = 0.0f64;
+        let eval_cap = self.class_caps[crate::qos::RequestClass::Eval.index()];
+        if eval_cap > 0.0 {
+            class = class.max(g.eval_queued / eval_cap);
+        }
+        let inter_cap = self.class_caps[crate::qos::RequestClass::Interactive.index()];
+        if inter_cap > 0.0 {
+            class = class.max(g.interactive_queued / inter_cap);
+        }
+        wait.max(depth).max(quarantine).max(buffer).max(class)
     }
 
     /// Whether batch launches are currently admitted.
@@ -131,6 +147,7 @@ mod tests {
             explorer_count: 1,
             batch_tasks: 4,
             max_buffer_depth: max_buffer,
+            class_caps: [0; crate::qos::CLASS_COUNT],
         };
         AdmissionController::new(&cfg, &ctx)
     }
@@ -151,6 +168,29 @@ mod tests {
         // uncapped buffer contributes nothing
         let c2 = controller(1, 0);
         assert!(c2.pressure_of(&g) < 0.7);
+    }
+
+    #[test]
+    fn class_caps_feed_pressure_only_when_set() {
+        let cfg = ControlConfig { hold_ticks: 1, ..Default::default() };
+        let mut ctx = ControlContext {
+            replicas: 4,
+            session_rows: 8,
+            repeat_times: 2,
+            explorer_count: 1,
+            batch_tasks: 4,
+            max_buffer_depth: 0,
+            class_caps: [0; crate::qos::CLASS_COUNT],
+        };
+        let g = Gauges { eval_queued: 12.0, interactive_queued: 3.0, ..Default::default() };
+        let uncapped = AdmissionController::new(&cfg, &ctx);
+        assert_eq!(uncapped.pressure_of(&g), 0.0, "uncapped classes contribute nothing");
+
+        ctx.class_caps[crate::qos::RequestClass::Eval.index()] = 8;
+        ctx.class_caps[crate::qos::RequestClass::Interactive.index()] = 6;
+        let capped = AdmissionController::new(&cfg, &ctx);
+        // eval 12/8 = 1.5 dominates interactive 3/6 = 0.5
+        assert!((capped.pressure_of(&g) - 1.5).abs() < 1e-9);
     }
 
     #[test]

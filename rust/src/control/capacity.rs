@@ -130,6 +130,7 @@ mod tests {
             explorer_count: 1,
             batch_tasks,
             max_buffer_depth: 0,
+            class_caps: [0; crate::qos::CLASS_COUNT],
         };
         CapacityController::new(&cfg, &ctx)
     }
@@ -184,6 +185,7 @@ mod tests {
             explorer_count: 1,
             batch_tasks: 1,
             max_buffer_depth: 0,
+            class_caps: [0; crate::qos::CLASS_COUNT],
         };
         let c = CapacityController::new(&cfg, &ctx);
         let g = Gauges::default();

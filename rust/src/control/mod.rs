@@ -276,6 +276,9 @@ pub struct ControlContext {
     /// `scheduler.max_buffer_depth` (0 = uncapped); feeds admission
     /// pressure so the gate subsumes `Free`'s raw depth check.
     pub max_buffer_depth: u64,
+    /// `[qos]` per-class queued-job caps (0 = uncapped), indexed by
+    /// `RequestClass::index()`; feeds admission pressure.
+    pub class_caps: [usize; crate::qos::CLASS_COUNT],
 }
 
 /// Everything a run's controllers share: the gauge feed, the decision
@@ -461,6 +464,7 @@ mod tests {
             explorer_count: 1,
             batch_tasks: 4,
             max_buffer_depth: 0,
+            class_caps: [0; crate::qos::CLASS_COUNT],
         }
     }
 

@@ -186,6 +186,94 @@ impl ServiceSection {
                 min_prefix: self.cache_min_prefix,
                 overload_margin: self.cache_overload_margin,
             },
+            // QoS knobs live in their own `[qos]` section; the session
+            // builder overwrites this from `QosSection::to_qos_config`.
+            qos: crate::qos::QosConfig::default(),
+        }
+    }
+}
+
+/// Typed QoS section (`qos.*`): request classes, weighted fair
+/// scheduling, and live session migration on the rollout service
+/// (DESIGN.md §11).  Off by default — when disabled the service
+/// dequeues FIFO with the shared deadline and never migrates, and
+/// rollouts are byte-identical to the pre-QoS service.
+#[derive(Debug, Clone)]
+pub struct QosSection {
+    pub enabled: bool,
+    /// DRR weight per class (backlogged bandwidth share).
+    pub train_weight: usize,
+    pub eval_weight: usize,
+    pub interactive_weight: usize,
+    /// Deficit replenished per cursor visit is `weight × quantum` jobs.
+    pub quantum: usize,
+    /// A queued head older than this pre-empts the deficit order,
+    /// milliseconds (0 disables aging).
+    pub aging_ms: u64,
+    /// Per-class deadline overrides, seconds (0 inherits
+    /// `service.timeout_s`).
+    pub train_deadline_s: f64,
+    pub eval_deadline_s: f64,
+    pub interactive_deadline_s: f64,
+    /// Per-class queued-job caps the `[control]` admission gate
+    /// consults (0 = uncapped).
+    pub train_cap: usize,
+    pub eval_cap: usize,
+    pub interactive_cap: usize,
+    /// Migrate parked sessions off overloaded/quarantined holders.
+    pub migration: bool,
+    /// Minimum prefill tokens a migration must save to be attempted.
+    pub migrate_min_tokens: usize,
+}
+
+impl Default for QosSection {
+    /// Knob defaults come from `qos::QosConfig::default()` — one source
+    /// of truth for YAML-configured and programmatic users.
+    fn default() -> Self {
+        use crate::qos::RequestClass;
+        let d = crate::qos::QosConfig::default();
+        QosSection {
+            enabled: d.enabled,
+            train_weight: d.weights[RequestClass::TrainRollout.index()] as usize,
+            eval_weight: d.weights[RequestClass::Eval.index()] as usize,
+            interactive_weight: d.weights[RequestClass::Interactive.index()] as usize,
+            quantum: d.quantum as usize,
+            aging_ms: d.aging.as_millis() as u64,
+            train_deadline_s: d.deadlines[RequestClass::TrainRollout.index()].as_secs_f64(),
+            eval_deadline_s: d.deadlines[RequestClass::Eval.index()].as_secs_f64(),
+            interactive_deadline_s: d.deadlines[RequestClass::Interactive.index()].as_secs_f64(),
+            train_cap: d.class_caps[RequestClass::TrainRollout.index()],
+            eval_cap: d.class_caps[RequestClass::Eval.index()],
+            interactive_cap: d.class_caps[RequestClass::Interactive.index()],
+            migration: d.migration,
+            migrate_min_tokens: d.migrate_min_tokens,
+        }
+    }
+}
+
+impl QosSection {
+    /// Bad values survive the conversion (clamped only as far as needed
+    /// to avoid `Duration::from_secs_f64` panics) so `QosConfig::validate`
+    /// rejects them loudly instead of silently correcting the config.
+    pub fn to_qos_config(&self) -> crate::qos::QosConfig {
+        let secs = |v: f64| {
+            let v = if v.is_finite() { v.clamp(0.0, 1e9) } else { 0.0 };
+            std::time::Duration::from_secs_f64(v)
+        };
+        let w = |v: usize| v.min(u32::MAX as usize) as u32;
+        crate::qos::QosConfig {
+            enabled: self.enabled,
+            weights: [w(self.train_weight), w(self.eval_weight), w(self.interactive_weight)],
+            quantum: w(self.quantum),
+            aging: std::time::Duration::from_millis(self.aging_ms),
+            deadlines: [
+                secs(self.train_deadline_s),
+                secs(self.eval_deadline_s),
+                secs(self.interactive_deadline_s),
+            ],
+            class_caps: [self.train_cap, self.eval_cap, self.interactive_cap],
+            migration: self.migration,
+            migrate_min_tokens: self.migrate_min_tokens,
         }
     }
 }
@@ -328,6 +416,8 @@ pub struct RftConfig {
     pub observability: ObservabilitySection,
     /// Typed control-plane keys (see [`ControlSection`]).
     pub control: ControlSection,
+    /// Typed QoS serving-plane keys (see [`QosSection`]).
+    pub qos: QosSection,
     pub model_preset: String,
     pub seed: u64,
     /// Registered algorithm name (see `trinity algorithms list`).
@@ -389,6 +479,7 @@ impl Default for RftConfig {
             service: ServiceSection::default(),
             observability: ObservabilitySection::default(),
             control: ControlSection::default(),
+            qos: QosSection::default(),
             model_preset: "tiny".into(),
             seed: 42,
             algorithm: "grpo".into(),
@@ -568,6 +659,29 @@ impl RftConfig {
             g("control.capacity_headroom", &mut cfg.control.capacity_headroom);
         }
 
+        // typed QoS serving-plane section
+        b("qos.enabled", &mut cfg.qos.enabled);
+        us("qos.train_weight", &mut cfg.qos.train_weight);
+        us("qos.eval_weight", &mut cfg.qos.eval_weight);
+        us("qos.interactive_weight", &mut cfg.qos.interactive_weight);
+        us("qos.quantum", &mut cfg.qos.quantum);
+        u("qos.aging_ms", &mut cfg.qos.aging_ms);
+        {
+            let g = |key: &str, out: &mut f64| {
+                if let Some(x) = v.path(key).and_then(Value::as_f64) {
+                    *out = x;
+                }
+            };
+            g("qos.train_deadline_s", &mut cfg.qos.train_deadline_s);
+            g("qos.eval_deadline_s", &mut cfg.qos.eval_deadline_s);
+            g("qos.interactive_deadline_s", &mut cfg.qos.interactive_deadline_s);
+        }
+        us("qos.train_cap", &mut cfg.qos.train_cap);
+        us("qos.eval_cap", &mut cfg.qos.eval_cap);
+        us("qos.interactive_cap", &mut cfg.qos.interactive_cap);
+        b("qos.migration", &mut cfg.qos.migration);
+        us("qos.migrate_min_tokens", &mut cfg.qos.migrate_min_tokens);
+
         us("explorer.count", &mut cfg.explorer_count);
         us("explorer.threads", &mut cfg.explorer_threads);
         us("explorer.batch_tasks", &mut cfg.batch_tasks);
@@ -650,6 +764,8 @@ impl RftConfig {
         }
         // no-op when [control] is absent/disabled
         self.control.to_control_config().validate()?;
+        // no-op when [qos] is absent/disabled
+        self.qos.to_qos_config().validate()?;
         Ok(())
     }
 
@@ -1052,6 +1168,49 @@ control:
         let bad = "mode: both\ncontrol:\n  enabled: true\n  hold_ticks: 0\n";
         assert!(RftConfig::from_value(&yamlite::parse(bad).unwrap()).is_err());
         let ok = "mode: both\ncontrol:\n  release: 1.5\n"; // disabled: not validated
+        assert!(RftConfig::from_value(&yamlite::parse(ok).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn qos_section_parses_and_validates() {
+        let yaml = "\
+mode: both
+qos:
+  enabled: true
+  train_weight: 8
+  eval_weight: 3
+  interactive_weight: 5
+  quantum: 2
+  aging_ms: 250
+  interactive_deadline_s: 1.5
+  eval_cap: 32
+  migration: false
+  migrate_min_tokens: 64
+";
+        let cfg = RftConfig::from_value(&yamlite::parse(yaml).unwrap()).unwrap();
+        assert!(cfg.qos.enabled);
+        let qc = cfg.qos.to_qos_config();
+        assert_eq!(qc.weights, [8, 3, 5]);
+        assert_eq!(qc.quantum, 2);
+        assert_eq!(qc.aging, std::time::Duration::from_millis(250));
+        use crate::qos::RequestClass;
+        assert!(
+            (qc.deadlines[RequestClass::Interactive.index()].as_secs_f64() - 1.5).abs() < 1e-9
+        );
+        assert!(qc.deadlines[RequestClass::TrainRollout.index()].is_zero(), "unset inherits");
+        assert_eq!(qc.cap_for(RequestClass::Eval), Some(32));
+        assert_eq!(qc.cap_for(RequestClass::TrainRollout), None);
+        assert!(!qc.migration);
+        assert_eq!(qc.migrate_min_tokens, 64);
+        // defaults: qos off, zero behavioral delta
+        let off = RftConfig::from_value(&yamlite::parse("mode: both\n").unwrap()).unwrap();
+        assert!(!off.qos.enabled);
+        // bad knobs fail at config time (only when enabled)
+        let bad = "mode: both\nqos:\n  enabled: true\n  eval_weight: 0\n";
+        assert!(RftConfig::from_value(&yamlite::parse(bad).unwrap()).is_err());
+        let bad = "mode: both\nqos:\n  enabled: true\n  quantum: 0\n";
+        assert!(RftConfig::from_value(&yamlite::parse(bad).unwrap()).is_err());
+        let ok = "mode: both\nqos:\n  quantum: 0\n"; // disabled: not validated
         assert!(RftConfig::from_value(&yamlite::parse(ok).unwrap()).is_ok());
     }
 

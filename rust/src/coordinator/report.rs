@@ -468,15 +468,17 @@ mod tests {
         // hand-off: histogram tails and cache counters stay readable on
         // the final report.
         let metrics = crate::service::ServiceMetrics::new();
+        let eval = crate::qos::RequestClass::Eval;
         for ms in [5u64, 10, 20, 40] {
-            metrics.note_queue_wait(Duration::from_millis(ms));
-            metrics.note_rollout(Duration::from_millis(ms * 3));
+            metrics.note_queue_wait(Duration::from_millis(ms), eval);
+            metrics.note_rollout(Duration::from_millis(ms * 3), eval);
         }
         let mut snap = ServiceSnapshot {
             sessions: 2,
             rows: 6,
             queue_wait: metrics.queue_wait.snapshot(),
             rollout: metrics.rollout.snapshot(),
+            class_queue_wait: std::array::from_fn(|i| metrics.class_queue_wait[i].snapshot()),
             ..Default::default()
         };
         snap.cache = Some(crate::cache::CacheSnapshot {
@@ -491,6 +493,9 @@ mod tests {
         let (p50, p95, p99) = svc.queue_wait.p50_p95_p99();
         assert!(p50 > 0.0 && p95 >= p50 && p99 >= p95, "{p50} {p95} {p99}");
         assert_eq!(svc.rollout.count, 4);
+        // per-class split survives the hand-off too
+        assert_eq!(svc.class_queue_wait[eval.index()].count, 4);
+        assert_eq!(svc.class_queue_wait[crate::qos::RequestClass::Interactive.index()].count, 0);
         let cache = svc.cache.as_ref().unwrap();
         assert!((cache.hit_rate() - 0.7).abs() < 1e-12);
         assert_eq!(cache.parked, 2);

@@ -267,6 +267,7 @@ impl RftSession {
             seed: cfg.seed,
             session: None,
             trace: 0,
+            class: crate::qos::RequestClass::TrainRollout,
         };
         let ex_cfg = |i: usize| ExplorerConfig {
             runner: RunnerConfig {
@@ -290,11 +291,10 @@ impl RftSession {
                 let params = ParamStore::from_snapshot(&engine.model, &init_snapshot)?;
                 engines.push(Arc::new(GenerationEngine::new(Arc::clone(&engine), params)));
             }
-            let svc = Arc::new(RolloutService::over_engines_obs(
-                engines,
-                cfg.service.to_service_config(),
-                observer.clone(),
-            )?);
+            let mut svc_cfg = cfg.service.to_service_config();
+            svc_cfg.qos = cfg.qos.to_qos_config();
+            let svc =
+                Arc::new(RolloutService::over_engines_obs(engines, svc_cfg, observer.clone())?);
             for i in 0..cfg.explorer_count {
                 explorers.push(Arc::new(Explorer::with_endpoint(
                     i,
@@ -426,6 +426,7 @@ impl RftSession {
                     explorer_count: cfg.explorer_count,
                     batch_tasks: cfg.batch_tasks,
                     max_buffer_depth: cfg.scheduler.max_buffer_depth,
+                    class_caps: cfg.qos.to_qos_config().class_caps,
                 };
                 let plane = ControlPlane::new(
                     cfg.control.to_control_config(),
@@ -458,9 +459,17 @@ impl RftSession {
                 g.rollout_p95_s = s.rollout.percentile(0.95);
                 g.weight_version =
                     s.replicas.iter().map(|r| r.weight_version).min().unwrap_or(0) as f64;
+                {
+                    use crate::qos::RequestClass;
+                    g.eval_queued = svc.class_queued(RequestClass::Eval) as f64;
+                    g.interactive_queued = svc.class_queued(RequestClass::Interactive) as f64;
+                    g.interactive_wait_p95_s =
+                        s.class_queue_wait[RequestClass::Interactive.index()].percentile(0.95);
+                }
                 if let Some(c) = &s.cache {
                     g.cache_hit_rate = c.hit_rate();
                     g.parked = c.parked as f64;
+                    g.migrations = c.migrations as f64;
                 }
             }
             hub.publish(g);

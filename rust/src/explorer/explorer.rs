@@ -192,7 +192,14 @@ impl Explorer {
     /// rollouts per task, greedy-ish low temperature.
     pub fn evaluate(&self, tasks: &[Task], temperature: f32) -> Result<EvalReport> {
         let mut report = EvalReport { tasks: tasks.len(), ..Default::default() };
-        let sampling = SamplingArgs { temperature, ..self.config.sampling.clone() };
+        // eval traffic runs under its own QoS class: with `[qos]` on it
+        // gets its DRR share (and per-class deadline/cap) instead of
+        // competing head-to-head with bulk training rollouts
+        let sampling = SamplingArgs {
+            temperature,
+            class: crate::qos::RequestClass::Eval,
+            ..self.config.sampling.clone()
+        };
         let mut total_reward = 0.0;
         let mut total_len = 0.0;
         let mut rollouts = 0usize;

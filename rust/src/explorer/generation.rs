@@ -34,6 +34,11 @@ pub struct SamplingArgs {
     /// never reads it; the service stamps it onto row jobs so every
     /// span of one episode shares a timeline.
     pub trace: u64,
+    /// QoS traffic class (train / eval / interactive).  Sampling never
+    /// reads it; the service's fair scheduler, per-class deadlines and
+    /// class-tagged telemetry do (DESIGN.md §11).  Defaults to
+    /// `TrainRollout`, so class-unaware callers behave as before.
+    pub class: crate::qos::RequestClass,
 }
 
 impl Default for SamplingArgs {
@@ -46,6 +51,7 @@ impl Default for SamplingArgs {
             seed: 0,
             session: None,
             trace: 0,
+            class: crate::qos::RequestClass::TrainRollout,
         }
     }
 }
@@ -556,10 +562,11 @@ fn log_softmax_at(logits: &[f32], idx: usize) -> f32 {
 
 /// Scripted rollout model: configurable latency, failure rate and response
 /// text; used by runner/coordinator/service unit tests and failure
-/// injection.  `fail_rate` is settable at runtime so circuit-breaker
-/// tests can break a replica and then heal it.
+/// injection.  `fail_rate` and `latency` are settable at runtime so
+/// circuit-breaker tests can break a replica and heal it, and fairness /
+/// migration tests can slow a replica mid-run deterministically.
 pub struct MockModel {
-    pub latency: std::time::Duration,
+    latency_ns: std::sync::atomic::AtomicU64,
     fail_rate: std::sync::atomic::AtomicU64,
     pub respond: Box<dyn Fn(&[i32], &mut Rng) -> Vec<i32> + Send + Sync>,
     rng: std::sync::Mutex<Rng>,
@@ -569,7 +576,7 @@ pub struct MockModel {
 impl MockModel {
     pub fn new(seed: u64, latency: std::time::Duration, fail_rate: f64) -> MockModel {
         MockModel {
-            latency,
+            latency_ns: std::sync::atomic::AtomicU64::new(latency.as_nanos() as u64),
             fail_rate: std::sync::atomic::AtomicU64::new(fail_rate.to_bits()),
             respond: Box::new(|_, rng| {
                 let n = 1 + rng.below(4) as usize;
@@ -591,6 +598,18 @@ impl MockModel {
         self.version.store(v, std::sync::atomic::Ordering::SeqCst);
     }
 
+    pub fn latency(&self) -> std::time::Duration {
+        std::time::Duration::from_nanos(self.latency_ns.load(std::sync::atomic::Ordering::SeqCst))
+    }
+
+    /// Change the injected per-request latency (fairness and migration
+    /// tests slow one replica mid-run to force overload/starvation
+    /// scenarios deterministically).
+    pub fn set_latency(&self, latency: std::time::Duration) {
+        self.latency_ns
+            .store(latency.as_nanos() as u64, std::sync::atomic::Ordering::SeqCst);
+    }
+
     pub fn fail_rate(&self) -> f64 {
         f64::from_bits(self.fail_rate.load(std::sync::atomic::Ordering::SeqCst))
     }
@@ -604,8 +623,9 @@ impl MockModel {
 
 impl RolloutModel for MockModel {
     fn chat(&self, prompt: &[i32], n: usize, _args: &SamplingArgs) -> Result<Vec<GenOutput>> {
-        if !self.latency.is_zero() {
-            std::thread::sleep(self.latency);
+        let latency = self.latency();
+        if !latency.is_zero() {
+            std::thread::sleep(latency);
         }
         let fail_rate = self.fail_rate();
         let mut rng = self.rng.lock().unwrap();
@@ -678,6 +698,17 @@ mod tests {
             assert_eq!(o.loss_mask[..3], [0.0, 0.0, 0.0]);
             assert!(o.loss_mask[3..].iter().all(|&m| m == 1.0));
         }
+    }
+
+    #[test]
+    fn mock_model_latency_is_settable() {
+        let m = MockModel::new(1, std::time::Duration::from_millis(5), 0.0);
+        assert_eq!(m.latency(), std::time::Duration::from_millis(5));
+        let t0 = std::time::Instant::now();
+        m.chat(&[1], 1, &SamplingArgs::default()).unwrap();
+        assert!(t0.elapsed() >= std::time::Duration::from_millis(5));
+        m.set_latency(std::time::Duration::ZERO);
+        assert_eq!(m.latency(), std::time::Duration::ZERO);
     }
 
     #[test]

@@ -119,6 +119,13 @@ impl WorkflowRunner {
                             } else {
                                 sampling.trace
                             },
+                            // a caller-set class (the eval driver) wins;
+                            // otherwise the workflow declares its own
+                            class: if sampling.class == Default::default() {
+                                wf.class()
+                            } else {
+                                sampling.class
+                            },
                             ..sampling.clone()
                         },
                         rng: Rng::with_stream(cfg.seed.wrapping_add(i as u64), attempt as u64 | 1),

@@ -111,6 +111,14 @@ impl<'a> WorkflowCtx<'a> {
 
 pub trait Workflow: Send + Sync {
     fn name(&self) -> &'static str;
+    /// The QoS request class this workflow's rollouts run under
+    /// (DESIGN.md §11).  The runner stamps it on the per-task sampling
+    /// unless the caller already tagged a non-default class (the eval
+    /// driver tags `Eval`); latency-sensitive human-in-the-loop
+    /// workflows override this to `Interactive`.
+    fn class(&self) -> crate::qos::RequestClass {
+        crate::qos::RequestClass::TrainRollout
+    }
     fn run(&self, ctx: &mut WorkflowCtx) -> Result<Vec<Experience>>;
 }
 

@@ -27,6 +27,10 @@
 //!   prefix trie, parked KV sessions resumed across the turns of one
 //!   workflow episode, and affinity routing to the replica holding the
 //!   prefix (DESIGN.md §7).
+//! * [`qos`] — the QoS serving plane over the service: request classes
+//!   (train / eval / interactive) with per-class deadlines, weighted
+//!   deficit-round-robin fair scheduling, and live migration of parked
+//!   sessions off overloaded or quarantined replicas (DESIGN.md §11).
 //! * [`obs`] — the observability plane: lock-free span recorder with
 //!   per-episode trace IDs, fixed-bucket latency histograms, the
 //!   readable telemetry hub, and Chrome-trace export (DESIGN.md §8).
@@ -58,6 +62,7 @@ pub mod exec;
 pub mod explorer;
 pub mod model;
 pub mod obs;
+pub mod qos;
 pub mod runtime;
 pub mod service;
 pub mod tokenizer;

@@ -27,7 +27,9 @@ fn cli() -> Cli {
             "run an RFT process from a YAML config and print the run report \
              ([control] runs append a `control` summary line: decision count, \
              admission gate + pressure, live batch tasks, staleness lag, and \
-             the last three controller decisions)",
+             the last three controller decisions; [qos] runs split the service \
+             line per request class: train/eval/interactive submitted, \
+             completed, expired, and queue-wait p95)",
             vec![
                 arg("config", "path to YAML config"),
                 arg("mode", "override mode (both|async|train|bench)"),
@@ -175,6 +177,26 @@ fn cmd_run(m: &trinity_rft::util::cli::Matches) -> Result<()> {
                 p95 * 1e3,
                 p99 * 1e3
             );
+        }
+        // per-class QoS split: only classes that saw traffic, and only
+        // when more than one class did (all-train runs keep the old shape)
+        let active: Vec<_> = trinity_rft::qos::RequestClass::ALL
+            .iter()
+            .filter(|c| svc.class_submitted[c.index()] > 0)
+            .collect();
+        if active.len() > 1 {
+            for c in active {
+                let i = c.index();
+                println!(
+                    "class {:<11} {} submitted, {} completed, {} expired, \
+                     queue wait p95 {:.1}ms",
+                    c.as_str(),
+                    svc.class_submitted[i],
+                    svc.class_completed[i],
+                    svc.class_expired[i],
+                    svc.class_queue_wait[i].percentile(0.95) * 1e3
+                );
+            }
         }
         if let Some(cache) = &svc.cache {
             println!(

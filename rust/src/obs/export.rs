@@ -45,6 +45,7 @@ fn category(kind: SpanKind) -> &'static str {
         SpanKind::SyncStall => "sync",
         SpanKind::DevicePrefill | SpanKind::DeviceDecode | SpanKind::DeviceTrain => "device",
         SpanKind::ControlDecision => "control",
+        SpanKind::Migrate | SpanKind::ClassWait => "qos",
     }
 }
 

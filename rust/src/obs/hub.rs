@@ -42,6 +42,15 @@ pub struct Gauges {
     pub sample_wait_p95_s: f64,
     /// End-to-end rollout latency p95, seconds.
     pub rollout_p95_s: f64,
+    /// Queued eval-class requests (QoS plane; 0 when qos is off).
+    pub eval_queued: f64,
+    /// Queued interactive-class requests (QoS plane; 0 when qos is off).
+    pub interactive_queued: f64,
+    /// Interactive-class queue-wait p95, seconds (the latency band the
+    /// fair scheduler defends).
+    pub interactive_wait_p95_s: f64,
+    /// Sessions live-migrated off overloaded/quarantined replicas.
+    pub migrations: f64,
 }
 
 macro_rules! gauge_fields {
@@ -80,6 +89,10 @@ gauge_fields!(
     weight_version,
     sample_wait_p95_s,
     rollout_p95_s,
+    eval_queued,
+    interactive_queued,
+    interactive_wait_p95_s,
+    migrations,
 );
 
 pub struct TelemetryHub {

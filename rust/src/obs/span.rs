@@ -51,6 +51,13 @@ pub enum SpanKind {
     /// A control-plane controller changed its output (`detail` packs
     /// controller id and new value; see `control::Decision::detail`).
     ControlDecision = 11,
+    /// A parked session moved to a healthy replica (QoS live migration;
+    /// `detail` packs destination replica and prefill tokens saved).
+    Migrate = 12,
+    /// Queued-to-claimed wait of a non-default-class job, mirrored from
+    /// its QueueWait span so per-class waits are separable in the trace
+    /// (`detail` = `RequestClass::index()`).
+    ClassWait = 13,
 }
 
 impl SpanKind {
@@ -67,6 +74,8 @@ impl SpanKind {
             SpanKind::DeviceDecode => "device_decode",
             SpanKind::DeviceTrain => "device_train",
             SpanKind::ControlDecision => "control_decision",
+            SpanKind::Migrate => "migrate",
+            SpanKind::ClassWait => "class_wait",
         }
     }
 
@@ -83,6 +92,8 @@ impl SpanKind {
             9 => SpanKind::DeviceDecode,
             10 => SpanKind::DeviceTrain,
             11 => SpanKind::ControlDecision,
+            12 => SpanKind::Migrate,
+            13 => SpanKind::ClassWait,
             _ => return None,
         })
     }

@@ -1,0 +1,93 @@
+//! Request classes: the unit of differentiation in the QoS serving
+//! plane (DESIGN.md §11).
+//!
+//! A [`RequestClass`] rides on `SamplingArgs` from the workflow that
+//! issued the request all the way into the service's `RowJob`s, where
+//! the fair scheduler, per-class deadlines and class-tagged telemetry
+//! read it.  The default is [`RequestClass::TrainRollout`], so code
+//! that never mentions classes behaves exactly as before.
+
+/// Traffic class of a rollout request.
+///
+/// Classes are deliberately coarse — they describe *why* the tokens
+/// are being generated, which is what scheduling policy cares about:
+///
+/// * [`TrainRollout`](RequestClass::TrainRollout) — bulk experience
+///   generation for the trainer; throughput-oriented, deadline-tolerant.
+/// * [`Eval`](RequestClass::Eval) — benchmark / held-out evaluation
+///   passes running alongside training; should not be starved by
+///   rollout bursts, moderate latency expectations.
+/// * [`Interactive`](RequestClass::Interactive) — human-in-the-loop or
+///   probe traffic; low volume, latency-sensitive, tightest deadline.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum RequestClass {
+    /// Bulk training rollouts (the overwhelming majority of traffic).
+    #[default]
+    TrainRollout,
+    /// Benchmark / held-out evaluation requests.
+    Eval,
+    /// Human-in-the-loop or latency-sensitive probe requests.
+    Interactive,
+}
+
+/// Number of request classes; sizes all per-class state arrays.
+pub const CLASS_COUNT: usize = 3;
+
+impl RequestClass {
+    /// Every class, in index order (stable: telemetry arrays and the
+    /// DRR deficit table are indexed by this order).
+    pub const ALL: [RequestClass; CLASS_COUNT] =
+        [RequestClass::TrainRollout, RequestClass::Eval, RequestClass::Interactive];
+
+    /// Stable dense index into per-class arrays.
+    pub fn index(self) -> usize {
+        match self {
+            RequestClass::TrainRollout => 0,
+            RequestClass::Eval => 1,
+            RequestClass::Interactive => 2,
+        }
+    }
+
+    /// Inverse of [`index`](Self::index).
+    pub fn from_index(i: usize) -> Option<RequestClass> {
+        RequestClass::ALL.get(i).copied()
+    }
+
+    /// Short label used in config keys, telemetry field names and the
+    /// `trinity run` per-class summary line.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RequestClass::TrainRollout => "train",
+            RequestClass::Eval => "eval",
+            RequestClass::Interactive => "interactive",
+        }
+    }
+
+    /// Parse a config-file label (accepts the long spelling too).
+    pub fn parse(s: &str) -> Option<RequestClass> {
+        match s {
+            "train" | "train_rollout" => Some(RequestClass::TrainRollout),
+            "eval" => Some(RequestClass::Eval),
+            "interactive" => Some(RequestClass::Interactive),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn index_roundtrip_and_labels() {
+        for (i, c) in RequestClass::ALL.iter().enumerate() {
+            assert_eq!(c.index(), i);
+            assert_eq!(RequestClass::from_index(i), Some(*c));
+            assert_eq!(RequestClass::parse(c.as_str()), Some(*c));
+        }
+        assert_eq!(RequestClass::from_index(CLASS_COUNT), None);
+        assert_eq!(RequestClass::parse("bulk"), None);
+        assert_eq!(RequestClass::parse("train_rollout"), Some(RequestClass::TrainRollout));
+        assert_eq!(RequestClass::default(), RequestClass::TrainRollout);
+    }
+}

@@ -1,0 +1,262 @@
+//! Live session migration (DESIGN.md §11): when the affinity policy
+//! rejects the prefix-holding replica as `Cold(Overloaded)` or
+//! `Cold(Quarantined)`, move the parked session to a healthy replica
+//! instead of re-prefilling the whole transcript from scratch.
+//!
+//! Mechanically a migration is an in-process handoff: the service
+//! *extracts* the `ParkedSession` from the holder's park (the same
+//! `claim` used by resume), *adopts* it into the destination's park,
+//! and routes the request there — where the ordinary
+//! `try_resume`/`extend_row` path claims it and feeds only the delta
+//! tokens.  Byte-identity is inherited from that path: a resumed row
+//! is exactly a cold re-chat of transcript + delta under the same
+//! weights.
+//!
+//! [`SessionState`] is the serializable control-plane descriptor of a
+//! parked session — session keys, per-row transcript leases and the
+//! weight-version stamp, in a stable little-endian byte format.  It is
+//! what a future cross-process `SessionStateCache` would ship; today
+//! it sizes the migration (prefill tokens saved) and documents the
+//! contract, and the byte round-trip is unit-tested.
+
+use anyhow::{bail, Result};
+
+use crate::cache::{Fallback, ParkedSession, ReplicaView, RowLease};
+
+/// Serialized per-row lease: the episode key plus the transcript whose
+/// KV the row holds.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RowState {
+    pub key: u64,
+    pub transcript: Vec<i32>,
+}
+
+/// Serializable descriptor of a parked session: everything needed to
+/// account for (or, cross-process, rebuild) the session except the
+/// device-resident KV payload itself.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SessionState {
+    /// Weight version every byte of the session's KV was produced under.
+    pub version: u64,
+    /// Per-row leases; `None` for rows that finished without a lease.
+    pub rows: Vec<Option<RowState>>,
+}
+
+/// Serialization magic: "TQS" + format version 1.
+const MAGIC: [u8; 4] = *b"TQS1";
+
+impl SessionState {
+    /// Describe a parked session (payload-agnostic: the KV itself never
+    /// leaves the engine; the descriptor is the control-plane view).
+    pub fn describe<S>(parked: &ParkedSession<S>) -> SessionState {
+        SessionState {
+            version: parked.version,
+            rows: parked
+                .rows
+                .iter()
+                .map(|r| {
+                    r.as_ref().map(|l| RowState { key: l.key, transcript: l.transcript.clone() })
+                })
+                .collect(),
+        }
+    }
+
+    /// Total transcript tokens under lease — the prefill a destination
+    /// replica skips by resuming instead of serving cold.
+    pub fn prefill_tokens(&self) -> usize {
+        self.rows.iter().flatten().map(|r| r.transcript.len()).sum()
+    }
+
+    /// Prefill tokens a follow-up `prompt` for `key` would save if this
+    /// session were resumed (the longest resumable lease), 0 when no
+    /// row resumes.
+    pub fn saved_for(&self, key: u64, prompt: &[i32], cache_len: usize) -> usize {
+        self.rows
+            .iter()
+            .flatten()
+            .filter(|r| {
+                RowLease { key: r.key, transcript: r.transcript.clone() }
+                    .resumes(key, prompt, cache_len)
+            })
+            .map(|r| r.transcript.len())
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Stable little-endian byte encoding (magic, version, row count,
+    /// then per row a presence tag + key + transcript).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(16 + 8 * self.rows.len());
+        out.extend_from_slice(&MAGIC);
+        out.extend_from_slice(&self.version.to_le_bytes());
+        out.extend_from_slice(&(self.rows.len() as u32).to_le_bytes());
+        for row in &self.rows {
+            match row {
+                None => out.push(0),
+                Some(r) => {
+                    out.push(1);
+                    out.extend_from_slice(&r.key.to_le_bytes());
+                    out.extend_from_slice(&(r.transcript.len() as u32).to_le_bytes());
+                    for &t in &r.transcript {
+                        out.extend_from_slice(&t.to_le_bytes());
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Inverse of [`to_bytes`](Self::to_bytes); rejects truncated or
+    /// foreign input loudly.
+    pub fn from_bytes(bytes: &[u8]) -> Result<SessionState> {
+        let mut at = 0usize;
+        let take = |at: &mut usize, n: usize| -> Result<&[u8]> {
+            if *at + n > bytes.len() {
+                bail!("session state truncated at byte {} (want {n} more)", *at);
+            }
+            let s = &bytes[*at..*at + n];
+            *at += n;
+            Ok(s)
+        };
+        if take(&mut at, 4)? != MAGIC {
+            bail!("not a serialized session state (bad magic)");
+        }
+        let version = u64::from_le_bytes(take(&mut at, 8)?.try_into().unwrap());
+        let n_rows = u32::from_le_bytes(take(&mut at, 4)?.try_into().unwrap()) as usize;
+        let mut rows = Vec::with_capacity(n_rows);
+        for _ in 0..n_rows {
+            match take(&mut at, 1)?[0] {
+                0 => rows.push(None),
+                1 => {
+                    let key = u64::from_le_bytes(take(&mut at, 8)?.try_into().unwrap());
+                    let len = u32::from_le_bytes(take(&mut at, 4)?.try_into().unwrap()) as usize;
+                    let mut transcript = Vec::with_capacity(len);
+                    for _ in 0..len {
+                        transcript
+                            .push(i32::from_le_bytes(take(&mut at, 4)?.try_into().unwrap()));
+                    }
+                    rows.push(Some(RowState { key, transcript }));
+                }
+                tag => bail!("bad row tag {tag}"),
+            }
+        }
+        if at != bytes.len() {
+            bail!("{} trailing bytes after session state", bytes.len() - at);
+        }
+        Ok(SessionState { version, rows })
+    }
+}
+
+/// Is this affinity fallback a migration trigger?  Only holder-side
+/// conditions qualify: `Stale` KV is incorrect anywhere, `ShortPrefix`
+/// is not worth moving, `Unknown` has nothing to move.
+pub fn migratable(reason: Fallback) -> bool {
+    matches!(reason, Fallback::Overloaded | Fallback::Quarantined)
+}
+
+/// Net benefit of landing a migrated session on a destination with
+/// `dest_load` pending rows: prefill tokens saved minus the estimated
+/// prefill already queued ahead of it (load × fleet mean prompt).
+pub fn migration_gain(saved_tokens: usize, dest_load: usize, mean_prompt_tokens: u64) -> i64 {
+    saved_tokens as i64 - (dest_load as i64).saturating_mul(mean_prompt_tokens as i64)
+}
+
+/// Cost-aware destination choice: among ready peers of the holder that
+/// serve exactly the session's weight version (a resumed KV must match
+/// the weights that continue it), pick the one with the best
+/// [`migration_gain`]; `None` when no destination nets positive — a
+/// cold serve is then at least as cheap as migrating.
+pub fn choose_destination(
+    replicas: &[ReplicaView],
+    holder: usize,
+    version: u64,
+    saved_tokens: usize,
+    mean_prompt_tokens: u64,
+) -> Option<usize> {
+    replicas
+        .iter()
+        .filter(|r| r.ready && r.id != holder && r.version == version)
+        .map(|r| (migration_gain(saved_tokens, r.load, mean_prompt_tokens), r))
+        .filter(|(gain, _)| *gain > 0)
+        .max_by_key(|(gain, r)| (*gain, std::cmp::Reverse(r.id)))
+        .map(|(_, r)| r.id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::{Duration, Instant};
+
+    fn state() -> SessionState {
+        SessionState {
+            version: 7,
+            rows: vec![
+                Some(RowState { key: 42, transcript: vec![1, -2, 3, 4] }),
+                None,
+                Some(RowState { key: 43, transcript: vec![5] }),
+            ],
+        }
+    }
+
+    #[test]
+    fn byte_roundtrip_is_identity() {
+        let s = state();
+        let bytes = s.to_bytes();
+        assert_eq!(SessionState::from_bytes(&bytes).unwrap(), s);
+        assert_eq!(s.prefill_tokens(), 5);
+    }
+
+    #[test]
+    fn corrupt_bytes_rejected() {
+        let s = state();
+        let mut bytes = s.to_bytes();
+        assert!(SessionState::from_bytes(&bytes[..bytes.len() - 1]).is_err(), "truncated");
+        bytes.push(0);
+        assert!(SessionState::from_bytes(&bytes).is_err(), "trailing");
+        let mut bad = s.to_bytes();
+        bad[0] = b'X';
+        assert!(SessionState::from_bytes(&bad).is_err(), "magic");
+    }
+
+    #[test]
+    fn describe_mirrors_parked_leases() {
+        let parked = ParkedSession {
+            state: 0u32,
+            version: 9,
+            rows: vec![Some(RowLease { key: 5, transcript: vec![1, 2] }), None],
+            expires: Instant::now() + Duration::from_secs(1),
+        };
+        let s = SessionState::describe(&parked);
+        assert_eq!(s.version, 9);
+        assert_eq!(s.rows[0], Some(RowState { key: 5, transcript: vec![1, 2] }));
+        assert_eq!(s.rows[1], None);
+        assert_eq!(s.saved_for(5, &[1, 2, 3], 64), 2);
+        assert_eq!(s.saved_for(6, &[1, 2, 3], 64), 0, "wrong key saves nothing");
+    }
+
+    #[test]
+    fn migratable_only_on_holder_side_fallbacks() {
+        assert!(migratable(Fallback::Overloaded));
+        assert!(migratable(Fallback::Quarantined));
+        assert!(!migratable(Fallback::Stale));
+        assert!(!migratable(Fallback::ShortPrefix));
+        assert!(!migratable(Fallback::Unknown));
+    }
+
+    #[test]
+    fn destination_weighs_saved_tokens_against_load() {
+        let pool = vec![
+            ReplicaView { id: 0, load: 20, ready: true, version: 1 },  // the holder
+            ReplicaView { id: 1, load: 3, ready: true, version: 1 },
+            ReplicaView { id: 2, load: 0, ready: true, version: 1 },
+            ReplicaView { id: 3, load: 0, ready: false, version: 1 }, // quarantined
+            ReplicaView { id: 4, load: 0, ready: true, version: 2 },  // wrong weights
+        ];
+        // 64 tokens saved, mean prompt 8: replica 2 (gain 64) beats 1 (gain 40)
+        assert_eq!(choose_destination(&pool, 0, 1, 64, 8), Some(2));
+        // tiny savings against deep queues: nobody nets positive
+        assert_eq!(choose_destination(&pool[..2].to_vec(), 0, 1, 4, 8), None);
+        // version mismatch and quarantine are never destinations
+        assert_eq!(choose_destination(&pool[3..].to_vec(), 9, 1, 64, 8), None);
+    }
+}

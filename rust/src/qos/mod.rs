@@ -1,0 +1,175 @@
+//! QoS serving plane (DESIGN.md §11): request classes, weighted fair
+//! scheduling, and live session migration for the rollout service.
+//!
+//! The rollout service absorbs a mixed workload — bulk training
+//! rollouts, continuous benchmark evaluation, and latency-sensitive
+//! interactive probes — through one queue per replica.  This module
+//! turns that single-tier queue into a serving plane:
+//!
+//! * [`class`] — [`RequestClass`] (TrainRollout / Eval / Interactive)
+//!   carried on `SamplingArgs` into every `RowJob`, with per-class
+//!   deadline defaults and class-tagged telemetry.
+//! * [`sched`] — [`DrrScheduler`]: weighted deficit-round-robin across
+//!   per-class queues with starvation-proof aging, so heavy training
+//!   traffic cannot starve interactive or eval requests.
+//! * [`migrate`] — [`SessionState`] descriptors and cost-aware
+//!   destination choice for moving a parked multi-turn session off an
+//!   overloaded or quarantined holder onto a healthy replica, where the
+//!   existing `extend_row` resume path continues it without
+//!   re-prefilling.
+//!
+//! Everything is gated behind [`QosConfig::enabled`] (the `[qos]`
+//! config section): disabled, the service dequeues FIFO, deadlines
+//! come from `request_timeout`, and no migration happens — behavior is
+//! byte-identical to a build without this module.
+
+pub mod class;
+pub mod migrate;
+pub mod sched;
+
+pub use class::{RequestClass, CLASS_COUNT};
+pub use migrate::{choose_destination, migratable, migration_gain, RowState, SessionState};
+pub use sched::DrrScheduler;
+
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+/// Typed `[qos]` knobs (`QosSection` in the run config converts into
+/// this; it rides on `ServiceConfig`).
+#[derive(Debug, Clone)]
+pub struct QosConfig {
+    /// Master switch: off = FIFO dequeue, shared deadline, no
+    /// migration — byte-identical to the pre-QoS service.
+    pub enabled: bool,
+    /// DRR weight per class (index = `RequestClass::index()`); the
+    /// backlogged bandwidth share is proportional to these.
+    pub weights: [u32; CLASS_COUNT],
+    /// Deficit replenished per cursor visit is `weight × quantum`
+    /// jobs; 1 gives the smoothest interleave.
+    pub quantum: u32,
+    /// A queued head older than this pre-empts the deficit order
+    /// (starvation escape hatch); 0 disables aging.
+    pub aging: Duration,
+    /// Per-class deadline override; `ZERO` inherits the service-wide
+    /// `request_timeout`.
+    pub deadlines: [Duration; CLASS_COUNT],
+    /// Per-class queued-job cap consulted by the `[control]` admission
+    /// gate (pressure 1.0 at the cap); 0 = uncapped.
+    pub class_caps: [usize; CLASS_COUNT],
+    /// Migrate parked sessions off overloaded/quarantined holders.
+    pub migration: bool,
+    /// Minimum prefill tokens a migration must save to be attempted.
+    pub migrate_min_tokens: usize,
+}
+
+impl Default for QosConfig {
+    fn default() -> Self {
+        QosConfig {
+            enabled: false,
+            weights: [4, 2, 2],
+            quantum: 1,
+            aging: Duration::from_millis(500),
+            deadlines: [Duration::ZERO; CLASS_COUNT],
+            class_caps: [0; CLASS_COUNT],
+            migration: true,
+            migrate_min_tokens: 16,
+        }
+    }
+}
+
+impl QosConfig {
+    /// Reject configurations that would wedge the scheduler.  A no-op
+    /// when disabled, mirroring the other config sections.
+    pub fn validate(&self) -> Result<()> {
+        if !self.enabled {
+            return Ok(());
+        }
+        if self.weights.iter().any(|&w| w == 0) {
+            bail!("qos.weights must all be >= 1 (a zero-weight class would never be served)");
+        }
+        if self.quantum == 0 {
+            bail!("qos.quantum must be >= 1");
+        }
+        if self.migration && self.migrate_min_tokens == 0 {
+            bail!("qos.migrate_min_tokens must be >= 1 when migration is enabled");
+        }
+        Ok(())
+    }
+
+    /// Effective deadline for a class: the per-class override when set,
+    /// else the service-wide default.  Disabled QoS always uses the
+    /// default (byte-identity with the pre-QoS service).
+    pub fn deadline_for(&self, class: RequestClass, default: Duration) -> Duration {
+        if !self.enabled {
+            return default;
+        }
+        let d = self.deadlines[class.index()];
+        if d.is_zero() {
+            default
+        } else {
+            d
+        }
+    }
+
+    /// The admission cap for a class, when one is configured.
+    pub fn cap_for(&self, class: RequestClass) -> Option<usize> {
+        if !self.enabled {
+            return None;
+        }
+        match self.class_caps[class.index()] {
+            0 => None,
+            cap => Some(cap),
+        }
+    }
+
+    /// Should this fallback trigger a migration attempt?
+    pub fn wants_migration(&self, reason: crate::cache::Fallback) -> bool {
+        self.enabled && self.migration && migratable(reason)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_is_permissive_and_inert() {
+        let cfg = QosConfig { weights: [0; CLASS_COUNT], ..QosConfig::default() };
+        assert!(cfg.validate().is_ok(), "disabled skips validation");
+        let d = Duration::from_secs(120);
+        assert_eq!(cfg.deadline_for(RequestClass::Interactive, d), d);
+        assert_eq!(cfg.cap_for(RequestClass::TrainRollout), None);
+        assert!(!cfg.wants_migration(crate::cache::Fallback::Overloaded));
+    }
+
+    #[test]
+    fn enabled_validates_weights_and_quantum() {
+        let mut cfg = QosConfig { enabled: true, ..QosConfig::default() };
+        assert!(cfg.validate().is_ok());
+        cfg.weights[1] = 0;
+        assert!(cfg.validate().is_err());
+        cfg.weights[1] = 2;
+        cfg.quantum = 0;
+        assert!(cfg.validate().is_err());
+        cfg.quantum = 1;
+        cfg.migrate_min_tokens = 0;
+        assert!(cfg.validate().is_err());
+        cfg.migration = false;
+        assert!(cfg.validate().is_ok(), "min-tokens only matters with migration on");
+    }
+
+    #[test]
+    fn per_class_deadlines_and_caps() {
+        let mut cfg = QosConfig { enabled: true, ..QosConfig::default() };
+        cfg.deadlines[RequestClass::Interactive.index()] = Duration::from_millis(250);
+        cfg.class_caps[RequestClass::TrainRollout.index()] = 64;
+        let d = Duration::from_secs(120);
+        assert_eq!(cfg.deadline_for(RequestClass::Interactive, d), Duration::from_millis(250));
+        assert_eq!(cfg.deadline_for(RequestClass::Eval, d), d, "unset inherits default");
+        assert_eq!(cfg.cap_for(RequestClass::TrainRollout), Some(64));
+        assert_eq!(cfg.cap_for(RequestClass::Eval), None);
+        assert!(cfg.wants_migration(crate::cache::Fallback::Quarantined));
+        assert!(!cfg.wants_migration(crate::cache::Fallback::Stale));
+    }
+}

@@ -1,0 +1,191 @@
+//! Weighted deficit-round-robin over per-class queues (DESIGN.md §11).
+//!
+//! The scheduler itself is a tiny pure state machine — the batcher's
+//! `RequestQueue` owns the per-class deques and asks [`DrrScheduler`]
+//! *which class to serve next*; the scheduler never touches jobs.
+//! That keeps fairness unit-testable without threads: feed it queue
+//! lengths and head waits, count what it picks.
+//!
+//! Classic DRR with one-job-per-pick: the cursor parks on a class
+//! until its deficit is spent, then advances and replenishes the next
+//! class's deficit by `weight × quantum`.  Two departures from the
+//! textbook version:
+//!
+//! * **Job cost is 1** (a row, not bytes) — prompt-length imbalance is
+//!   handled by routing (`route_job`'s pending-prefill tie-break), not
+//!   by the dequeue order.
+//! * **Starvation-proof aging**: any class whose head job has waited
+//!   longer than `aging` pre-empts the deficit order outright (oldest
+//!   head first).  Aging does not charge the class's deficit — it is
+//!   an escape hatch, and normal fairness resumes immediately after.
+
+use std::time::Duration;
+
+use super::{QosConfig, CLASS_COUNT};
+
+/// Cost charged per dequeued job.
+const JOB_COST: u64 = 1;
+
+/// Deficit-round-robin pick state for one queue.
+#[derive(Debug, Default)]
+pub struct DrrScheduler {
+    deficit: [u64; CLASS_COUNT],
+    cursor: usize,
+}
+
+impl DrrScheduler {
+    pub fn new() -> DrrScheduler {
+        DrrScheduler::default()
+    }
+
+    /// Current deficit counters (telemetry / tests).
+    pub fn deficits(&self) -> [u64; CLASS_COUNT] {
+        self.deficit
+    }
+
+    /// Choose which class the queue should dequeue from next.
+    ///
+    /// `lens[c]` is the number of queued jobs of class `c` and
+    /// `head_wait[c]` how long the oldest of them has been waiting
+    /// (`None` when empty).  Returns `None` only when every class is
+    /// empty.  The caller must actually dequeue from the returned
+    /// class — the pick charges its deficit.
+    pub fn pick(
+        &mut self,
+        lens: &[usize; CLASS_COUNT],
+        head_wait: &[Option<Duration>; CLASS_COUNT],
+        cfg: &QosConfig,
+    ) -> Option<usize> {
+        if lens.iter().all(|&l| l == 0) {
+            return None;
+        }
+        // Aging override: serve the oldest starved head regardless of
+        // deficits, without charging — fairness resumes right after.
+        if !cfg.aging.is_zero() {
+            let aged = (0..CLASS_COUNT)
+                .filter(|&c| lens[c] > 0)
+                .filter_map(|c| head_wait[c].map(|w| (w, c)))
+                .filter(|&(w, _)| w > cfg.aging)
+                .max_by_key(|&(w, c)| (w, std::cmp::Reverse(c)));
+            if let Some((_, c)) = aged {
+                return Some(c);
+            }
+        }
+        // DRR proper: spend the parked class's deficit, else advance
+        // the cursor and replenish on arrival.  Bounded: within two
+        // sweeps some non-empty class replenishes to >= JOB_COST
+        // (weights are validated >= 1).
+        for _ in 0..2 * CLASS_COUNT + 1 {
+            let c = self.cursor;
+            if lens[c] > 0 && self.deficit[c] >= JOB_COST {
+                self.deficit[c] -= JOB_COST;
+                return Some(c);
+            }
+            if lens[c] == 0 {
+                // classic DRR: an emptied class forfeits leftover
+                // deficit, so it cannot bank credit while idle
+                self.deficit[c] = 0;
+            }
+            self.cursor = (self.cursor + 1) % CLASS_COUNT;
+            let n = self.cursor;
+            if lens[n] > 0 {
+                self.deficit[n] =
+                    self.deficit[n].saturating_add(cfg.weights[n] as u64 * cfg.quantum as u64);
+            }
+        }
+        // Unreachable with validated config; serve any non-empty class
+        // rather than stall the worker.
+        (0..CLASS_COUNT).find(|&c| lens[c] > 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::qos::RequestClass;
+
+    fn cfg(weights: [u32; CLASS_COUNT], aging_ms: u64) -> QosConfig {
+        QosConfig {
+            enabled: true,
+            weights,
+            quantum: 1,
+            aging: Duration::from_millis(aging_ms),
+            ..QosConfig::default()
+        }
+    }
+
+    /// Serve `total` picks from always-backlogged queues; return per-class counts.
+    fn shares(weights: [u32; CLASS_COUNT], total: usize) -> [usize; CLASS_COUNT] {
+        let cfg = cfg(weights, 0);
+        let mut drr = DrrScheduler::new();
+        let lens = [1000usize; CLASS_COUNT];
+        let waits = [Some(Duration::from_millis(1)); CLASS_COUNT];
+        let mut served = [0usize; CLASS_COUNT];
+        for _ in 0..total {
+            let c = drr.pick(&lens, &waits, &cfg).unwrap();
+            served[c] += 1;
+        }
+        served
+    }
+
+    #[test]
+    fn backlogged_shares_track_weights() {
+        let served = shares([4, 2, 2], 800);
+        // 4:2:2 over 800 picks -> 400/200/200, allow rounding slack
+        assert!((served[0] as i64 - 400).abs() <= 8, "{served:?}");
+        assert!((served[1] as i64 - 200).abs() <= 8, "{served:?}");
+        assert!((served[2] as i64 - 200).abs() <= 8, "{served:?}");
+    }
+
+    #[test]
+    fn single_class_gets_everything() {
+        let cfg = cfg([4, 2, 2], 0);
+        let mut drr = DrrScheduler::new();
+        let mut lens = [0usize; CLASS_COUNT];
+        lens[RequestClass::Interactive.index()] = 5;
+        let mut waits = [None; CLASS_COUNT];
+        waits[RequestClass::Interactive.index()] = Some(Duration::from_millis(1));
+        for _ in 0..5 {
+            assert_eq!(drr.pick(&lens, &waits, &cfg), Some(RequestClass::Interactive.index()));
+        }
+        assert_eq!(drr.pick(&[0; CLASS_COUNT], &[None; CLASS_COUNT], &cfg), None);
+    }
+
+    #[test]
+    fn aging_preempts_deficit_order() {
+        let cfg = cfg([1000, 1, 1], 50);
+        let mut drr = DrrScheduler::new();
+        let lens = [1000, 0, 3];
+        let mut waits = [Some(Duration::from_millis(1)), None, Some(Duration::from_millis(200))];
+        // interactive head has starved past the aging bound: it wins
+        // even against a monster train weight
+        assert_eq!(drr.pick(&lens, &waits, &cfg), Some(2));
+        // once its head is fresh again, train's weight dominates
+        waits[2] = Some(Duration::from_millis(1));
+        let mut train = 0;
+        for _ in 0..100 {
+            if drr.pick(&lens, &waits, &cfg) == Some(0) {
+                train += 1;
+            }
+        }
+        assert!(train >= 95, "train served {train}/100");
+    }
+
+    #[test]
+    fn idle_class_forfeits_banked_deficit() {
+        let cfg = cfg([1, 1, 4], 0);
+        let mut drr = DrrScheduler::new();
+        // interactive banks deficit while backlogged...
+        let lens = [10, 10, 10];
+        let waits = [Some(Duration::from_millis(1)); CLASS_COUNT];
+        for _ in 0..12 {
+            drr.pick(&lens, &waits, &cfg);
+        }
+        // ...then drains; its stored credit must not survive idling
+        let idle = [10, 10, 0];
+        for _ in 0..CLASS_COUNT + 1 {
+            drr.pick(&idle, &waits, &cfg);
+        }
+        assert_eq!(drr.deficits()[2], 0);
+    }
+}

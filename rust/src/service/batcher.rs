@@ -9,6 +9,13 @@
 //! (continuous batching).  Deadlines are enforced at pop time, failures
 //! feed the replica's circuit breaker, and a newly quarantined replica
 //! drains its queue to healthy peers.
+//!
+//! With the QoS plane enabled (`[qos]`, DESIGN.md §11) the queue splits
+//! into per-class deques dequeued by weighted deficit-round-robin with
+//! starvation-proof aging, so bulk training traffic cannot starve
+//! interactive or eval requests; admission and refill matching then
+//! stay within the leader's class (sessions are class-pure).  Disabled,
+//! the single-FIFO path below is exactly the pre-QoS behavior.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -21,6 +28,7 @@ use crate::cache::PrefixIndex;
 use crate::exec::future::Completer;
 use crate::explorer::generation::{GenOutput, SamplingArgs};
 use crate::obs::{Span, SpanKind, SpanRecorder};
+use crate::qos::{DrrScheduler, QosConfig, RequestClass, CLASS_COUNT};
 
 use super::replica::{ReplicaState, ServeCtl};
 use super::telemetry::ServiceMetrics;
@@ -77,15 +85,56 @@ impl SampleKey {
 // request queue
 
 struct QueueState {
+    /// The single-FIFO path (QoS disabled) — exactly the pre-QoS queue.
     jobs: VecDeque<RowJob>,
+    /// Per-class deques (QoS enabled), indexed by `RequestClass::index`.
+    classes: [VecDeque<RowJob>; CLASS_COUNT],
+    /// Deficit-round-robin state over `classes` (QoS enabled only).
+    drr: DrrScheduler,
     closed: bool,
+}
+
+impl QueueState {
+    fn total(&self) -> usize {
+        self.jobs.len() + self.classes.iter().map(|q| q.len()).sum::<usize>()
+    }
+
+    fn drain_all(&mut self) -> Vec<RowJob> {
+        let mut out: Vec<RowJob> = self.jobs.drain(..).collect();
+        for q in self.classes.iter_mut() {
+            out.extend(q.drain(..));
+        }
+        out
+    }
+
+    /// DRR-ordered pop (QoS path): feed per-class depths and head waits
+    /// to the scheduler, pop the head of the class it picks.
+    fn pop_fair(&mut self, cfg: &QosConfig) -> Option<RowJob> {
+        let now = Instant::now();
+        let mut lens = [0usize; CLASS_COUNT];
+        let mut waits = [None; CLASS_COUNT];
+        for c in 0..CLASS_COUNT {
+            lens[c] = self.classes[c].len();
+            waits[c] = self.classes[c].front().map(|j| now.saturating_duration_since(j.enqueued));
+        }
+        let c = self.drr.pick(&lens, &waits, cfg)?;
+        self.classes[c].pop_front()
+    }
 }
 
 /// A replica's request queue (condvar-based, like `exec::channel` but
 /// with key-matching pops for sampling-compatible admission).
+///
+/// Built plain ([`RequestQueue::new`]) it is one FIFO.  Built with an
+/// enabled [`QosConfig`] ([`RequestQueue::with_qos`]) it keeps one
+/// deque per [`RequestClass`] and dequeues by weighted deficit-round-
+/// robin, and key-matching pops (admission / refill) stay within the
+/// session leader's class so batches are class-pure.
 pub struct RequestQueue {
     state: Mutex<QueueState>,
     cvar: Condvar,
+    /// `Some` = per-class DRR dequeue; `None` = plain FIFO.
+    qos: Option<QosConfig>,
 }
 
 impl Default for RequestQueue {
@@ -96,10 +145,31 @@ impl Default for RequestQueue {
 
 impl RequestQueue {
     pub fn new() -> RequestQueue {
+        RequestQueue::build(None)
+    }
+
+    /// A queue honoring the QoS plane; falls back to the plain FIFO
+    /// when `cfg.enabled` is false.
+    pub fn with_qos(cfg: &QosConfig) -> RequestQueue {
+        RequestQueue::build(cfg.enabled.then(|| cfg.clone()))
+    }
+
+    fn build(qos: Option<QosConfig>) -> RequestQueue {
         RequestQueue {
-            state: Mutex::new(QueueState { jobs: VecDeque::new(), closed: false }),
+            state: Mutex::new(QueueState {
+                jobs: VecDeque::new(),
+                classes: std::array::from_fn(|_| VecDeque::new()),
+                drr: DrrScheduler::new(),
+                closed: false,
+            }),
             cvar: Condvar::new(),
+            qos,
         }
+    }
+
+    /// Whether this queue is running the per-class DRR path.
+    pub fn qos_enabled(&self) -> bool {
+        self.qos.is_some()
     }
 
     /// Enqueue; hands the job back if the queue is closed (shutdown).
@@ -108,26 +178,46 @@ impl RequestQueue {
         if st.closed {
             return Err(job);
         }
-        st.jobs.push_back(job);
+        match &self.qos {
+            Some(_) => {
+                let c = job.args.class.index();
+                st.classes[c].push_back(job);
+            }
+            None => st.jobs.push_back(job),
+        }
         drop(st);
         self.cvar.notify_all();
         Ok(())
     }
 
     pub fn len(&self) -> usize {
-        self.state.lock().unwrap().jobs.len()
+        self.state.lock().unwrap().total()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Blocking pop of the front job (any key), bounded by `timeout`.
+    /// Jobs of one class waiting here (both paths scan; the FIFO path
+    /// reads each job's class tag).  Feeds the per-class admission caps
+    /// the `[control]` gate consults.
+    pub fn class_len(&self, class: RequestClass) -> usize {
+        let st = self.state.lock().unwrap();
+        st.classes[class.index()].len()
+            + st.jobs.iter().filter(|j| j.args.class == class).count()
+    }
+
+    /// Blocking pop bounded by `timeout`: the front job (FIFO path) or
+    /// the DRR-scheduled class head (QoS path).
     pub fn pop_timeout(&self, timeout: Duration) -> Option<RowJob> {
         let deadline = Instant::now() + timeout;
         let mut st = self.state.lock().unwrap();
         loop {
-            if let Some(job) = st.jobs.pop_front() {
+            let popped = match &self.qos {
+                Some(cfg) => st.pop_fair(cfg),
+                None => st.jobs.pop_front(),
+            };
+            if let Some(job) = popped {
                 return Some(job);
             }
             if st.closed {
@@ -143,19 +233,45 @@ impl RequestQueue {
     }
 
     /// Non-blocking: remove the first job whose sampling key matches.
-    pub fn try_pop_matching(&self, key: &SampleKey) -> Option<RowJob> {
+    /// On the QoS path only `class` (the session leader's) is scanned.
+    pub fn try_pop_matching(&self, key: &SampleKey, class: RequestClass) -> Option<RowJob> {
         let mut st = self.state.lock().unwrap();
-        let pos = st.jobs.iter().position(|j| j.batch_key() == *key)?;
-        st.jobs.remove(pos)
+        match &self.qos {
+            Some(_) => {
+                let q = &mut st.classes[class.index()];
+                let pos = q.iter().position(|j| j.batch_key() == *key)?;
+                q.remove(pos)
+            }
+            None => {
+                let pos = st.jobs.iter().position(|j| j.batch_key() == *key)?;
+                st.jobs.remove(pos)
+            }
+        }
     }
 
     /// Key-matching pop that waits until `deadline` for a match (the
-    /// admission window).
-    pub fn pop_matching_until(&self, key: &SampleKey, deadline: Instant) -> Option<RowJob> {
+    /// admission window).  Same class restriction as
+    /// [`try_pop_matching`](Self::try_pop_matching).
+    pub fn pop_matching_until(
+        &self,
+        key: &SampleKey,
+        class: RequestClass,
+        deadline: Instant,
+    ) -> Option<RowJob> {
         let mut st = self.state.lock().unwrap();
         loop {
-            if let Some(pos) = st.jobs.iter().position(|j| j.batch_key() == *key) {
-                return st.jobs.remove(pos);
+            let pos = match &self.qos {
+                Some(_) => {
+                    let q = &st.classes[class.index()];
+                    q.iter().position(|j| j.batch_key() == *key)
+                }
+                None => st.jobs.iter().position(|j| j.batch_key() == *key),
+            };
+            if let Some(pos) = pos {
+                return match &self.qos {
+                    Some(_) => st.classes[class.index()].remove(pos),
+                    None => st.jobs.remove(pos),
+                };
             }
             if st.closed {
                 return None;
@@ -172,14 +288,14 @@ impl RequestQueue {
     /// Remove everything (quarantine drain / shutdown).
     pub fn drain(&self) -> Vec<RowJob> {
         let mut st = self.state.lock().unwrap();
-        st.jobs.drain(..).collect()
+        st.drain_all()
     }
 
     /// Close the queue and hand back what was still waiting.
     pub fn close(&self) -> Vec<RowJob> {
         let mut st = self.state.lock().unwrap();
         st.closed = true;
-        let left = st.jobs.drain(..).collect();
+        let left = st.drain_all();
         drop(st);
         self.cvar.notify_all();
         left
@@ -192,6 +308,9 @@ impl RequestQueue {
 /// Least-loaded routing over ready replicas, with an optional affinity
 /// override: `preferred` (the replica holding the request's KV prefix,
 /// pre-vetted by the affinity policy) wins while it is still ready.
+/// Least-loaded ties break by *pending estimated prefill tokens*
+/// (queue depth × fleet mean prompt length) — two replicas with equal
+/// in-flight load are not equal when one has a deeper prefill backlog.
 /// When every replica is quarantined the job still lands somewhere: the
 /// replica whose health probe is due soonest (requests are never
 /// dropped by the router).
@@ -214,13 +333,15 @@ pub fn route_job(
         // through to the normal cold path
     }
     let now = Instant::now();
+    let mean_prompt = metrics.mean_prompt_tokens();
+    let pending = |r: &ReplicaState| r.queue.len() as u64 * mean_prompt;
     let pick = replicas
         .iter()
         .filter(|r| Some(r.id) != exclude && r.ready())
-        .min_by_key(|r| (r.load(), r.id))
+        .min_by_key(|r| (r.load(), pending(r), r.id))
         .or_else(|| {
             // only the excluded replica is healthy — better it than none
-            replicas.iter().filter(|r| r.ready()).min_by_key(|r| (r.load(), r.id))
+            replicas.iter().filter(|r| r.ready()).min_by_key(|r| (r.load(), pending(r), r.id))
         })
         .or_else(|| {
             replicas.iter().min_by_key(|r| (r.probe_eta_ms(now), r.load(), r.id))
@@ -243,15 +364,17 @@ fn fail_now(job: RowJob, why: &str, metrics: &ServiceMetrics) {
 
 /// Complete a job whose deadline passed while it was queued.
 pub(super) fn expire_job(job: RowJob, metrics: &ServiceMetrics) {
-    metrics.expired.fetch_add(1, Ordering::SeqCst);
+    metrics.note_expired(job.args.class);
     let waited = job.enqueued.elapsed();
     job.completer
         .complete(Err(anyhow!("request deadline exceeded after {waited:?} in queue")));
 }
 
 /// Record one job's queued-to-claimed wait: always into the metrics
-/// histogram, and as a QueueWait span on the claiming replica when
-/// tracing is enabled.
+/// histograms (fleet + the job's class), and as spans on the claiming
+/// replica when tracing is enabled — a QueueWait span for every job,
+/// plus a ClassWait span (detail = class index) for non-default classes
+/// so per-class waits are separable in the trace.
 fn note_claimed(
     job: &RowJob,
     now: Instant,
@@ -260,7 +383,7 @@ fn note_claimed(
     obs: Option<&Arc<SpanRecorder>>,
 ) {
     let wait = now.saturating_duration_since(job.enqueued);
-    metrics.note_queue_wait(wait);
+    metrics.note_queue_wait(wait, job.args.class);
     if let Some(o) = obs {
         o.record(Span {
             trace: job.trace,
@@ -270,6 +393,16 @@ fn note_claimed(
             dur_us: wait.as_micros() as u64,
             detail: job.attempts as u64,
         });
+        if job.args.class != RequestClass::TrainRollout {
+            o.record(Span {
+                trace: job.trace,
+                kind: SpanKind::ClassWait,
+                replica: replica_id as u32,
+                start_us: o.rel_us(job.enqueued),
+                dur_us: wait.as_micros() as u64,
+                detail: job.args.class.index() as u64,
+            });
+        }
     }
 }
 
@@ -296,6 +429,9 @@ pub struct WorkerSetup {
 struct WorkerCtl<'a> {
     replica: &'a ReplicaState,
     key: SampleKey,
+    /// The session leader's request class: refill matching stays inside
+    /// it on the QoS path (class-pure sessions).
+    class: RequestClass,
     metrics: &'a ServiceMetrics,
     cache: Option<&'a Arc<PrefixIndex>>,
     obs: Option<&'a Arc<SpanRecorder>>,
@@ -318,7 +454,7 @@ impl ServeCtl for WorkerCtl<'_> {
             {
                 return None;
             }
-            let job = self.replica.queue.try_pop_matching(&self.key)?;
+            let job = self.replica.queue.try_pop_matching(&self.key, self.class)?;
             let now = Instant::now();
             if job.expired(now) {
                 expire_job(job, self.metrics);
@@ -337,7 +473,7 @@ impl ServeCtl for WorkerCtl<'_> {
         self.replica.inflight.fetch_sub(1, Ordering::SeqCst);
         self.replica.rows_served.fetch_add(1, Ordering::SeqCst);
         self.replica.breaker.lock().unwrap().record_success();
-        self.metrics.completed.fetch_add(1, Ordering::SeqCst);
+        self.metrics.note_completed(job.args.class);
         // a session-tagged transcript is a reusable prefix for the
         // episode's next turn: index it under this replica and the
         // exact weight version that served it
@@ -421,12 +557,13 @@ pub fn run_worker(setup: WorkerSetup) {
         }
         note_claimed(&first, now, replica.id, &metrics, obs.as_ref());
         let key = first.batch_key();
+        let class = first.args.class;
         let native = replica.engine.max_batch();
         let max_batch = if cfg.max_batch > 0 { cfg.max_batch.min(native) } else { native };
         let mut batch = vec![first];
         let admit_deadline = now + cfg.admission_window;
         while batch.len() < max_batch {
-            match replica.queue.pop_matching_until(&key, admit_deadline) {
+            match replica.queue.pop_matching_until(&key, class, admit_deadline) {
                 Some(job) if job.expired(Instant::now()) => expire_job(job, &metrics),
                 Some(job) => {
                     note_claimed(&job, Instant::now(), replica.id, &metrics, obs.as_ref());
@@ -444,6 +581,7 @@ pub fn run_worker(setup: WorkerSetup) {
         let mut ctl = WorkerCtl {
             replica: &replica,
             key,
+            class,
             metrics: &metrics,
             cache: cache.as_ref(),
             obs: obs.as_ref(),
@@ -584,11 +722,12 @@ mod tests {
         q.push(c).map_err(|_| ()).unwrap();
         assert_eq!(q.len(), 3);
         // matching pop skips the non-matching middle job
-        let first = q.try_pop_matching(&key_hot).unwrap();
+        let train = RequestClass::TrainRollout;
+        let first = q.try_pop_matching(&key_hot, train).unwrap();
         assert_eq!(first.batch_key(), key_hot);
-        let second = q.try_pop_matching(&key_hot).unwrap();
+        let second = q.try_pop_matching(&key_hot, train).unwrap();
         assert_eq!(second.batch_key(), key_hot);
-        assert!(q.try_pop_matching(&key_hot).is_none());
+        assert!(q.try_pop_matching(&key_hot, train).is_none());
         assert_eq!(q.len(), 1); // the 0.5-temperature job remains
     }
 
@@ -600,7 +739,8 @@ mod tests {
         drop(probe);
         let q2 = Arc::clone(&q);
         let h = std::thread::spawn(move || {
-            q2.pop_matching_until(&key, Instant::now() + Duration::from_millis(500))
+            let train = RequestClass::TrainRollout;
+            q2.pop_matching_until(&key, train, Instant::now() + Duration::from_millis(500))
         });
         std::thread::sleep(Duration::from_millis(20));
         let (late, _pl) = job(1.0, Duration::from_secs(5));
@@ -619,6 +759,65 @@ mod tests {
         assert!(q.push(b).is_err());
         drop(pb);
         assert!(q.pop_timeout(Duration::from_millis(5)).is_none());
+    }
+
+    fn classed_job(
+        class: RequestClass,
+        ttl: Duration,
+    ) -> (RowJob, Promise<Result<GenOutput>>) {
+        let (mut j, p) = job(1.0, ttl);
+        j.args.class = class;
+        (j, p)
+    }
+
+    #[test]
+    fn qos_queue_interleaves_classes_by_weight() {
+        let cfg = QosConfig { enabled: true, aging: Duration::ZERO, ..Default::default() };
+        let q = RequestQueue::with_qos(&cfg);
+        assert!(q.qos_enabled());
+        let ttl = Duration::from_secs(5);
+        let mut promises = vec![];
+        for _ in 0..8 {
+            let (j, p) = classed_job(RequestClass::TrainRollout, ttl);
+            q.push(j).map_err(|_| ()).unwrap();
+            promises.push(p);
+        }
+        for _ in 0..8 {
+            let (j, p) = classed_job(RequestClass::Interactive, ttl);
+            q.push(j).map_err(|_| ()).unwrap();
+            promises.push(p);
+        }
+        assert_eq!(q.class_len(RequestClass::TrainRollout), 8);
+        assert_eq!(q.class_len(RequestClass::Interactive), 8);
+        // despite 8 train jobs enqueued first, interactive jobs appear
+        // early in the dequeue order instead of waiting behind them all
+        let mut first_interactive_at = None;
+        for i in 0..16 {
+            let j = q.pop_timeout(Duration::from_millis(50)).unwrap();
+            if j.args.class == RequestClass::Interactive && first_interactive_at.is_none() {
+                first_interactive_at = Some(i);
+            }
+        }
+        let at = first_interactive_at.expect("interactive jobs dequeued");
+        assert!(at < 8, "interactive head FIFO-blocked behind train backlog (index {at})");
+    }
+
+    #[test]
+    fn qos_matching_pops_stay_within_the_leader_class() {
+        let cfg = QosConfig { enabled: true, ..Default::default() };
+        let q = RequestQueue::with_qos(&cfg);
+        let ttl = Duration::from_secs(5);
+        let (train, _pt) = classed_job(RequestClass::TrainRollout, ttl);
+        let (eval, _pe) = classed_job(RequestClass::Eval, ttl);
+        let key = train.batch_key();
+        assert_eq!(eval.batch_key(), key, "same sampling key across classes");
+        q.push(train).map_err(|_| ()).unwrap();
+        q.push(eval).map_err(|_| ()).unwrap();
+        // an eval-led session must not pull the train job as a refill
+        let got = q.try_pop_matching(&key, RequestClass::Eval).unwrap();
+        assert_eq!(got.args.class, RequestClass::Eval);
+        assert!(q.try_pop_matching(&key, RequestClass::Eval).is_none());
+        assert_eq!(q.class_len(RequestClass::TrainRollout), 1);
     }
 
     #[test]

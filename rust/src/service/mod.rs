@@ -64,6 +64,9 @@ pub struct ServiceConfig {
     pub quarantine: Duration,
     /// Prefix-reuse cache knobs (`service.cache_*` config keys).
     pub cache: crate::cache::CacheConfig,
+    /// QoS serving-plane knobs (`[qos]` config section): request
+    /// classes, fair scheduling, session migration (DESIGN.md §11).
+    pub qos: crate::qos::QosConfig,
 }
 
 impl Default for ServiceConfig {
@@ -78,6 +81,7 @@ impl Default for ServiceConfig {
             breaker_failures: 3,
             quarantine: Duration::from_millis(500),
             cache: crate::cache::CacheConfig::default(),
+            qos: crate::qos::QosConfig::default(),
         }
     }
 }
@@ -89,6 +93,7 @@ impl ServiceConfig {
         ensure!(self.breaker_failures >= 1, "service.breaker_failures must be >= 1");
         ensure!(self.request_timeout > Duration::ZERO, "service.timeout_s must be > 0");
         self.cache.validate()?;
+        self.qos.validate()?;
         Ok(())
     }
 }

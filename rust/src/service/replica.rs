@@ -139,6 +139,24 @@ pub trait ReplicaEngine: Send + Sync {
     fn parked(&self) -> usize {
         0
     }
+    /// Live migration source (QoS plane, DESIGN.md §11): hand over the
+    /// parked session holding episode `key`'s lease at exactly weight
+    /// `version`, removing it from this replica.  `None` = not held
+    /// here or unsupported (the caller falls back to a cold serve).
+    fn extract_session(&self, key: u64, version: u64) -> Option<ParkedSession<Session>> {
+        let _ = (key, version);
+        None
+    }
+    /// Live migration sink: adopt a session extracted from a peer so
+    /// the episode's next turn resumes here instead of re-prefilling.
+    /// On rejection (no parking capacity / unsupported) the session is
+    /// handed back untouched so the caller can restore it.
+    fn adopt_session(
+        &self,
+        parked: ParkedSession<Session>,
+    ) -> std::result::Result<(), ParkedSession<Session>> {
+        Err(parked)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -720,6 +738,38 @@ impl ReplicaEngine for EngineReplica {
     fn parked(&self) -> usize {
         self.parked_len()
     }
+
+    fn extract_session(&self, key: u64, version: u64) -> Option<ParkedSession<Session>> {
+        let mut park = self.park.lock().unwrap();
+        if let Some(cache) = &self.cache {
+            cache.note_park_expired(park.sweep(Instant::now()));
+        }
+        park.claim(|p| {
+            p.version == version
+                && p.rows.iter().any(|l| l.as_ref().is_some_and(|l| l.key == key))
+        })
+    }
+
+    fn adopt_session(
+        &self,
+        parked: ParkedSession<Session>,
+    ) -> std::result::Result<(), ParkedSession<Session>> {
+        // adopted KV must be continued by exactly the weights that
+        // produced it — reject on any version skew (the router checks
+        // this too, but weights can roll between decision and adopt)
+        if parked.version != self.engine.params_version() {
+            return Err(parked);
+        }
+        let mut park = self.park.lock().unwrap();
+        if park.capacity() == 0 {
+            return Err(parked);
+        }
+        let evicted = park.adopt(parked);
+        if let Some(cache) = &self.cache {
+            cache.note_parked(evicted);
+        }
+        Ok(())
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -845,10 +895,22 @@ pub struct ReplicaState {
 
 impl ReplicaState {
     pub fn new(id: usize, engine: Arc<dyn ReplicaEngine>, breaker: Breaker) -> ReplicaState {
+        Self::with_qos(id, engine, breaker, &crate::qos::QosConfig::default())
+    }
+
+    /// A replica whose queue honors the QoS plane (per-class DRR
+    /// dequeue) when `qos.enabled`; identical to [`new`](Self::new)
+    /// otherwise.
+    pub fn with_qos(
+        id: usize,
+        engine: Arc<dyn ReplicaEngine>,
+        breaker: Breaker,
+        qos: &crate::qos::QosConfig,
+    ) -> ReplicaState {
         ReplicaState {
             id,
             engine,
-            queue: RequestQueue::new(),
+            queue: RequestQueue::with_qos(qos),
             breaker: Mutex::new(breaker),
             inflight: AtomicUsize::new(0),
             rows_served: AtomicU64::new(0),

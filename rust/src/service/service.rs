@@ -6,17 +6,18 @@
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, ensure, Result};
 
-use crate::cache::{PrefixIndex, ReplicaView};
+use crate::cache::{PrefixIndex, ReplicaView, RouteDecision};
 use crate::exec::Promise;
 use crate::explorer::generation::{
     GenOutput, GenerationEngine, RolloutEndpoint, RolloutModel, SamplingArgs,
 };
 use crate::model::{WeightSnapshot, WeightSync};
-use crate::obs::SpanRecorder;
+use crate::obs::{SpanKind, SpanRecorder};
+use crate::qos::{choose_destination, RequestClass, SessionState};
 
 use super::batcher::{route_job, run_worker, RowJob, WorkerSetup};
 use super::replica::{
@@ -69,10 +70,11 @@ impl RolloutService {
             .into_iter()
             .enumerate()
             .map(|(id, engine)| {
-                Arc::new(ReplicaState::new(
+                Arc::new(ReplicaState::with_qos(
                     id,
                     engine,
                     Breaker::new(cfg.breaker_failures, cfg.quarantine),
+                    &cfg.qos,
                 ))
             })
             .collect();
@@ -234,6 +236,12 @@ impl RolloutService {
         self.prefix.as_ref()
     }
 
+    /// Requests of one class queued across the pool right now (feeds
+    /// the per-class gauges and the `[control]` admission caps).
+    pub fn class_queued(&self, class: RequestClass) -> usize {
+        self.replicas.iter().map(|r| r.queue.class_len(class)).sum()
+    }
+
     /// Point-in-time telemetry (flows into `Monitor`/`ModeReport`).
     pub fn snapshot(&self) -> ServiceSnapshot {
         let replicas: Vec<_> = self.replicas.iter().map(|r| r.snapshot()).collect();
@@ -253,10 +261,80 @@ impl RolloutService {
             queue_wait: m.queue_wait.snapshot(),
             rollout: m.rollout.snapshot(),
             prefill: m.prefill.snapshot(),
+            class_submitted: std::array::from_fn(|i| m.class_submitted[i].load(Ordering::SeqCst)),
+            class_completed: std::array::from_fn(|i| m.class_completed[i].load(Ordering::SeqCst)),
+            class_expired: std::array::from_fn(|i| m.class_expired[i].load(Ordering::SeqCst)),
+            class_queue_wait: std::array::from_fn(|i| m.class_queue_wait[i].snapshot()),
+            class_rollout: std::array::from_fn(|i| m.class_rollout[i].snapshot()),
             queued: replicas.iter().map(|r| r.queued).sum(),
             inflight: replicas.iter().map(|r| r.inflight).sum(),
             replicas,
             cache: self.prefix.as_ref().map(|p| p.snapshot()),
+        }
+    }
+
+    /// Force-quarantine a replica (maintenance drain): opens its
+    /// breaker for `cooldown`, so routing treats it as cold and — with
+    /// the QoS plane on — its parked sessions become migration sources.
+    /// Returns false for an unknown id.
+    pub fn quarantine_replica(&self, id: usize, cooldown: Duration) -> bool {
+        match self.replicas.iter().find(|r| r.id == id) {
+            Some(r) => {
+                r.breaker.lock().unwrap().quarantine_for(Instant::now(), cooldown);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Live session migration (QoS plane, DESIGN.md §11): move episode
+    /// `key`'s parked session off `holder` onto the cost-best
+    /// same-version peer and rebind the prefix there, so the current
+    /// turn resumes instead of re-prefilling `matched` tokens.  `None`
+    /// = not worth it or not possible; callers cold-serve (always
+    /// correct, just slower).
+    #[allow(clippy::too_many_arguments)]
+    fn try_migrate(
+        &self,
+        idx: &Arc<PrefixIndex>,
+        key: u64,
+        prompt: &[i32],
+        holder: usize,
+        version: u64,
+        matched: usize,
+        trace: u64,
+        views: &[ReplicaView],
+    ) -> Option<usize> {
+        let mean_prompt = self.metrics.mean_prompt_tokens() as usize;
+        let dest = choose_destination(views, holder, version, matched, mean_prompt)?;
+        let holder_state = self.replicas.iter().find(|r| r.id == holder)?;
+        let parked = holder_state.engine.extract_session(key, version)?;
+        // descriptor-level sanity: a lease must actually resume this
+        // prompt (the trie can match a prefix whose lease moved on)
+        let state = SessionState::describe(&parked);
+        let saved = state.saved_for(key, prompt, usize::MAX);
+        if saved == 0 {
+            let _ = holder_state.engine.adopt_session(parked);
+            return None;
+        }
+        let dest_state = self.replicas.iter().find(|r| r.id == dest)?;
+        match dest_state.engine.adopt_session(parked) {
+            Ok(()) => {
+                idx.note_migrated(&prompt[..matched], dest, version, saved);
+                if let Some(o) = &self.obs {
+                    // detail packs the destination and the prefill
+                    // tokens the move saves
+                    let detail = ((dest as u64) << 32) | saved as u64;
+                    o.mark(trace, SpanKind::Migrate, holder as u32, detail);
+                }
+                Some(dest)
+            }
+            Err(parked) => {
+                // destination refused (capacity / weights rolled since
+                // the decision): restore the holder's park, cold-serve
+                let _ = holder_state.engine.adopt_session(parked);
+                None
+            }
         }
     }
 
@@ -294,10 +372,12 @@ impl RolloutModel for RolloutService {
         ensure!(!self.shutdown.load(Ordering::SeqCst), "rollout service shut down");
         // session-tagged follow-up turns prefer the replica holding
         // their KV prefix — unless it is quarantined, stale or
-        // overloaded, in which case this is None and the rows take the
-        // normal least-loaded path (cold prefill, always correct)
+        // overloaded.  With the QoS plane on, a quarantined/overloaded
+        // holder's parked session is *migrated* to a healthy
+        // same-version peer and resumed there; otherwise the rows take
+        // the normal least-loaded path (cold prefill, always correct).
         let (preferred, reused) = match (&self.prefix, args.session) {
-            (Some(idx), Some(_)) => {
+            (Some(idx), Some(key)) => {
                 let views: Vec<ReplicaView> = self
                     .replicas
                     .iter()
@@ -308,12 +388,29 @@ impl RolloutModel for RolloutService {
                         version: r.engine.weight_version(),
                     })
                     .collect();
-                idx.route_scored(prompt, &views)
+                match idx.route_decision(prompt, &views) {
+                    RouteDecision::Affinity { replica, matched } => (Some(replica), matched),
+                    RouteDecision::Cold { holder, matched, version, reason }
+                        if self.cfg.qos.wants_migration(reason)
+                            && matched >= self.cfg.qos.migrate_min_tokens =>
+                    {
+                        let dest = self.try_migrate(
+                            idx, key, prompt, holder, version, matched, args.trace, &views,
+                        );
+                        match dest {
+                            Some(dest) => (Some(dest), matched),
+                            None => (None, 0),
+                        }
+                    }
+                    _ => (None, 0),
+                }
             }
             _ => (None, 0),
         };
         let now = Instant::now();
-        let deadline = now + self.cfg.request_timeout;
+        // per-class deadline (QoS plane); the fleet default otherwise
+        let deadline = now + self.cfg.qos.deadline_for(args.class, self.cfg.request_timeout);
+        self.metrics.note_submitted(n as u64, prompt.len() as u64, args.class);
         let mut promises = Vec::with_capacity(n);
         for i in 0..n {
             let (completer, promise) = Promise::pair();
@@ -331,7 +428,6 @@ impl RolloutModel for RolloutService {
                 reused: reused as u32,
                 completer,
             };
-            self.metrics.submitted.fetch_add(1, Ordering::SeqCst);
             route_job(&self.replicas, job, None, &self.metrics, preferred);
             promises.push(promise);
         }
@@ -352,7 +448,7 @@ impl RolloutModel for RolloutService {
                 }
             }
         }
-        self.metrics.note_rollout(now.elapsed());
+        self.metrics.note_rollout(now.elapsed(), args.class);
         match first_err {
             Some(e) => Err(e.context("rollout service request failed")),
             None => Ok(outs),

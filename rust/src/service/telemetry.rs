@@ -10,6 +10,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
 use crate::obs::{HistSnapshot, Histogram};
+use crate::qos::{RequestClass, CLASS_COUNT};
 
 /// Fleet-wide counters (per-replica counters live on `ReplicaState`).
 #[derive(Debug, Default)]
@@ -41,6 +42,18 @@ pub struct ServiceMetrics {
     pub rollout: Histogram,
     /// Cold per-turn prefill latency (engine replicas; resumes skip it).
     pub prefill: Histogram,
+    /// Prompt tokens submitted (pending-prefill estimation: divided by
+    /// `submitted` it yields the fleet mean prompt length that
+    /// `route_job`'s cost-aware tie-break multiplies by queue depth).
+    pub prompt_tokens: AtomicU64,
+    /// Per-class row counts, indexed by `RequestClass::index()`.
+    pub class_submitted: [AtomicU64; CLASS_COUNT],
+    pub class_completed: [AtomicU64; CLASS_COUNT],
+    pub class_expired: [AtomicU64; CLASS_COUNT],
+    /// Per-class queued-to-claimed latency.
+    pub class_queue_wait: [Histogram; CLASS_COUNT],
+    /// Per-class end-to-end rollout latency.
+    pub class_rollout: [Histogram; CLASS_COUNT],
 }
 
 impl ServiceMetrics {
@@ -48,14 +61,17 @@ impl ServiceMetrics {
         ServiceMetrics::default()
     }
 
-    /// Record how long a row sat queued before being claimed.
-    pub fn note_queue_wait(&self, wait: Duration) {
+    /// Record how long a row sat queued before being claimed, tagged
+    /// with its class (the fleet histogram and the per-class one).
+    pub fn note_queue_wait(&self, wait: Duration, class: RequestClass) {
         self.queue_wait.observe_duration(wait);
+        self.class_queue_wait[class.index()].observe_duration(wait);
     }
 
     /// Record one `chat` call's end-to-end latency.
-    pub fn note_rollout(&self, elapsed: Duration) {
+    pub fn note_rollout(&self, elapsed: Duration, class: RequestClass) {
         self.rollout.observe_duration(elapsed);
+        self.class_rollout[class.index()].observe_duration(elapsed);
     }
 
     /// Record one cold prefill.
@@ -63,8 +79,36 @@ impl ServiceMetrics {
         self.prefill.observe_duration(elapsed);
     }
 
+    /// Account rows accepted by `chat`: count, class, prompt tokens.
+    pub fn note_submitted(&self, rows: u64, prompt_tokens: u64, class: RequestClass) {
+        self.submitted.fetch_add(rows, Ordering::Relaxed);
+        self.prompt_tokens.fetch_add(prompt_tokens * rows, Ordering::Relaxed);
+        self.class_submitted[class.index()].fetch_add(rows, Ordering::Relaxed);
+    }
+
+    pub fn note_completed(&self, class: RequestClass) {
+        self.completed.fetch_add(1, Ordering::Relaxed);
+        self.class_completed[class.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_expired(&self, class: RequestClass) {
+        self.expired.fetch_add(1, Ordering::Relaxed);
+        self.class_expired[class.index()].fetch_add(1, Ordering::Relaxed);
+    }
+
     pub fn mean_queue_wait_s(&self) -> f64 {
         self.queue_wait.snapshot().mean()
+    }
+
+    /// Fleet mean prompt length in tokens (0 before the first submit) —
+    /// the per-queued-row prefill estimate for cost-aware routing.
+    pub fn mean_prompt_tokens(&self) -> u64 {
+        let submitted = self.submitted.load(Ordering::Relaxed);
+        if submitted == 0 {
+            0
+        } else {
+            self.prompt_tokens.load(Ordering::Relaxed) / submitted
+        }
     }
 }
 
@@ -108,6 +152,14 @@ pub struct ServiceSnapshot {
     pub prefill: HistSnapshot,
     pub queued: usize,
     pub inflight: usize,
+    /// Per-class row counts, indexed by `RequestClass::index()`.
+    pub class_submitted: [u64; CLASS_COUNT],
+    pub class_completed: [u64; CLASS_COUNT],
+    pub class_expired: [u64; CLASS_COUNT],
+    /// Per-class queue-wait latency distributions.
+    pub class_queue_wait: [HistSnapshot; CLASS_COUNT],
+    /// Per-class end-to-end rollout latency distributions.
+    pub class_rollout: [HistSnapshot; CLASS_COUNT],
     pub replicas: Vec<ReplicaSnapshot>,
     /// Prefix-reuse cache telemetry (present when the cache is enabled).
     pub cache: Option<crate::cache::CacheSnapshot>,
@@ -156,6 +208,22 @@ impl ServiceSnapshot {
             fields.push((format!("{name}_p95_s"), p95));
             fields.push((format!("{name}_p99_s"), p99));
         }
+        for class in RequestClass::ALL {
+            let i = class.index();
+            // only emit class rows that saw traffic, so class-unaware
+            // runs keep their exact historical field set
+            if self.class_submitted[i] == 0 {
+                continue;
+            }
+            let name = class.as_str();
+            fields.push((format!("class_{name}_submitted"), self.class_submitted[i] as f64));
+            fields.push((format!("class_{name}_completed"), self.class_completed[i] as f64));
+            fields.push((format!("class_{name}_expired"), self.class_expired[i] as f64));
+            let (_, wait_p95, _) = self.class_queue_wait[i].p50_p95_p99();
+            let (_, roll_p95, _) = self.class_rollout[i].p50_p95_p99();
+            fields.push((format!("class_{name}_queue_wait_p95_s"), wait_p95));
+            fields.push((format!("class_{name}_rollout_p95_s"), roll_p95));
+        }
         for r in &self.replicas {
             fields.push((format!("replica{}_rows", r.id), r.rows as f64));
             fields.push((format!("replica{}_version", r.id), r.weight_version as f64));
@@ -197,8 +265,8 @@ mod tests {
     fn queue_wait_histogram_mean_and_percentiles() {
         let m = ServiceMetrics::new();
         assert_eq!(m.mean_queue_wait_s(), 0.0);
-        m.note_queue_wait(Duration::from_millis(10));
-        m.note_queue_wait(Duration::from_millis(30));
+        m.note_queue_wait(Duration::from_millis(10), RequestClass::TrainRollout);
+        m.note_queue_wait(Duration::from_millis(30), RequestClass::TrainRollout);
         // the histogram mean tracks the exact mean to within rounding
         assert!((m.mean_queue_wait_s() - 0.020).abs() < 1e-4, "{}", m.mean_queue_wait_s());
         let snap = m.queue_wait.snapshot();
@@ -209,7 +277,7 @@ mod tests {
     #[test]
     fn rollout_and_prefill_histograms_record() {
         let m = ServiceMetrics::new();
-        m.note_rollout(Duration::from_millis(50));
+        m.note_rollout(Duration::from_millis(50), RequestClass::TrainRollout);
         m.note_prefill(Duration::from_millis(5));
         assert_eq!(m.rollout.snapshot().count, 1);
         assert_eq!(m.prefill.snapshot().count, 1);
@@ -217,10 +285,49 @@ mod tests {
     }
 
     #[test]
+    fn class_tagged_metrics_split_per_class() {
+        let m = ServiceMetrics::new();
+        m.note_submitted(2, 8, RequestClass::Interactive);
+        m.note_submitted(4, 16, RequestClass::TrainRollout);
+        m.note_queue_wait(Duration::from_millis(5), RequestClass::Interactive);
+        m.note_queue_wait(Duration::from_millis(40), RequestClass::TrainRollout);
+        m.note_rollout(Duration::from_millis(20), RequestClass::Interactive);
+        m.note_completed(RequestClass::Interactive);
+        m.note_expired(RequestClass::TrainRollout);
+        let i = RequestClass::Interactive.index();
+        let t = RequestClass::TrainRollout.index();
+        assert_eq!(m.class_submitted[i].load(Ordering::Relaxed), 2);
+        assert_eq!(m.class_submitted[t].load(Ordering::Relaxed), 4);
+        assert_eq!(m.class_completed[i].load(Ordering::Relaxed), 1);
+        assert_eq!(m.class_expired[t].load(Ordering::Relaxed), 1);
+        assert_eq!(m.class_queue_wait[i].snapshot().count, 1);
+        assert_eq!(m.class_rollout[i].snapshot().count, 1);
+        // fleet aggregates still see everything
+        assert_eq!(m.submitted.load(Ordering::Relaxed), 6);
+        assert_eq!(m.queue_wait.snapshot().count, 2);
+        // mean prompt: (2*8 + 4*16) / 6 = 13
+        assert_eq!(m.mean_prompt_tokens(), 13);
+        // snapshot fields surface only classes that saw traffic
+        let snap = ServiceSnapshot {
+            class_submitted: [4, 0, 2],
+            class_queue_wait: [
+                m.class_queue_wait[t].snapshot(),
+                HistSnapshot::default(),
+                m.class_queue_wait[i].snapshot(),
+            ],
+            ..Default::default()
+        };
+        let fields = snap.monitor_fields();
+        assert!(fields.iter().any(|(n, _)| n == "class_interactive_queue_wait_p95_s"));
+        assert!(fields.iter().any(|(n, _)| n == "class_train_submitted"));
+        assert!(!fields.iter().any(|(n, _)| n.starts_with("class_eval")), "no eval traffic");
+    }
+
+    #[test]
     fn monitor_fields_cover_replicas_and_percentiles() {
         let m = ServiceMetrics::new();
-        m.note_queue_wait(Duration::from_millis(10));
-        m.note_rollout(Duration::from_millis(80));
+        m.note_queue_wait(Duration::from_millis(10), RequestClass::TrainRollout);
+        m.note_rollout(Duration::from_millis(80), RequestClass::TrainRollout);
         let snap = ServiceSnapshot {
             queue_wait: m.queue_wait.snapshot(),
             rollout: m.rollout.snapshot(),

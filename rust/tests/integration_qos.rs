@@ -1,0 +1,256 @@
+//! QoS serving plane integration: the ISSUE-9 acceptance surface.
+//!
+//! * fairness — under a 10:1 train:interactive backlog the DRR
+//!   scheduler keeps interactive queue waits below train waits, while
+//!   the FIFO control run (qos off) starves the late-arriving
+//!   interactive traffic,
+//! * deadlines — a tight per-class interactive deadline expires only
+//!   interactive rows; train rows with the fleet default complete,
+//! * migration — mock-path replicas decline session extraction
+//!   gracefully (cold serve, zero failures), and — artifact-gated — a
+//!   real engine pool migrates a parked KV session off a quarantined
+//!   holder with byte-identical output and ≥50% of the turn's prefill
+//!   tokens saved.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use trinity_rft::explorer::{MockModel, RolloutEndpoint, RolloutModel, SamplingArgs};
+use trinity_rft::model::ParamStore;
+use trinity_rft::qos::RequestClass;
+use trinity_rft::runtime::{Manifest, ModelEngine, RuntimeClient};
+use trinity_rft::service::{RolloutService, ServiceConfig};
+use trinity_rft::tokenizer::Tokenizer;
+
+fn service_with(cfg: ServiceConfig, models: Vec<Arc<MockModel>>) -> Arc<RolloutService> {
+    let endpoints: Vec<Arc<dyn RolloutEndpoint>> =
+        models.into_iter().map(|m| m as Arc<dyn RolloutEndpoint>).collect();
+    Arc::new(RolloutService::over_models(endpoints, cfg).unwrap())
+}
+
+/// One replica, one row per session, fixed per-request latency: a
+/// serial server whose dequeue order is exactly the scheduler's.
+fn serial_service(qos_enabled: bool, latency: Duration) -> Arc<RolloutService> {
+    let mut cfg = ServiceConfig::default();
+    cfg.max_batch = 1;
+    cfg.qos.enabled = qos_enabled;
+    service_with(cfg, vec![Arc::new(MockModel::new(7, latency, 0.0))])
+}
+
+/// Spawn `n` concurrent single-row chats of one class; returns the
+/// join handles (each chat blocks until its row completes).
+fn spawn_chats(
+    svc: &Arc<RolloutService>,
+    n: usize,
+    class: RequestClass,
+) -> Vec<std::thread::JoinHandle<anyhow::Result<()>>> {
+    (0..n)
+        .map(|i| {
+            let svc = Arc::clone(svc);
+            std::thread::spawn(move || {
+                let args = SamplingArgs {
+                    max_new_tokens: 2,
+                    seed: i as u64,
+                    class,
+                    ..Default::default()
+                };
+                svc.chat(&[1, 40 + i as i32], 1, &args)?;
+                Ok(())
+            })
+        })
+        .collect()
+}
+
+/// 10:1 train:interactive backlog on a serial replica.  Returns
+/// (mean train wait, mean interactive wait) in seconds.
+fn class_waits(qos_enabled: bool) -> (f64, f64) {
+    let svc = serial_service(qos_enabled, Duration::from_millis(2));
+    let train = spawn_chats(&svc, 30, RequestClass::TrainRollout);
+    // let the train backlog build before interactive traffic arrives
+    std::thread::sleep(Duration::from_millis(8));
+    let interactive = spawn_chats(&svc, 3, RequestClass::Interactive);
+    for h in train.into_iter().chain(interactive) {
+        h.join().unwrap().unwrap();
+    }
+    let s = svc.snapshot();
+    assert_eq!(s.class_completed[RequestClass::TrainRollout.index()], 30);
+    assert_eq!(s.class_completed[RequestClass::Interactive.index()], 3);
+    assert_eq!(s.failed + s.expired, 0, "{s:?}");
+    (
+        s.class_queue_wait[RequestClass::TrainRollout.index()].mean(),
+        s.class_queue_wait[RequestClass::Interactive.index()].mean(),
+    )
+}
+
+#[test]
+fn drr_keeps_interactive_waits_below_train_under_backlog() {
+    let (train, interactive) = class_waits(true);
+    assert!(
+        interactive < train,
+        "DRR must serve the interactive class ahead of the train backlog: \
+         interactive mean wait {interactive:.4}s vs train {train:.4}s"
+    );
+}
+
+#[test]
+fn fifo_control_run_starves_late_interactive_traffic() {
+    let (train, interactive) = class_waits(false);
+    assert!(
+        interactive > train,
+        "FIFO drains in arrival order, so the late interactive rows must \
+         wait out the whole train backlog: interactive mean wait \
+         {interactive:.4}s vs train {train:.4}s"
+    );
+}
+
+#[test]
+fn per_class_deadline_expires_only_its_class() {
+    let mut cfg = ServiceConfig::default();
+    cfg.max_batch = 1;
+    cfg.qos.enabled = true;
+    cfg.qos.deadlines[RequestClass::Interactive.index()] = Duration::from_millis(15);
+    let svc = service_with(cfg, vec![Arc::new(MockModel::new(8, Duration::from_millis(60), 0.0))]);
+
+    // row 1 occupies the serial replica for 60ms; the tight-deadline
+    // interactive row queued behind it must expire at pop time, while
+    // the train row with the fleet-default deadline completes
+    let first = spawn_chats(&svc, 1, RequestClass::TrainRollout);
+    std::thread::sleep(Duration::from_millis(5));
+    let queued_train = spawn_chats(&svc, 1, RequestClass::TrainRollout);
+    let queued_interactive = {
+        let svc = Arc::clone(&svc);
+        std::thread::spawn(move || {
+            let args = SamplingArgs {
+                max_new_tokens: 2,
+                class: RequestClass::Interactive,
+                ..Default::default()
+            };
+            svc.chat(&[1, 2, 3], 1, &args)
+        })
+    };
+
+    assert!(
+        queued_interactive.join().unwrap().is_err(),
+        "the interactive row must expire, not wait out the train rollout"
+    );
+    for h in first.into_iter().chain(queued_train) {
+        h.join().unwrap().unwrap();
+    }
+    let s = svc.snapshot();
+    assert_eq!(s.class_expired[RequestClass::Interactive.index()], 1, "{s:?}");
+    assert_eq!(s.class_expired[RequestClass::TrainRollout.index()], 0, "{s:?}");
+    assert_eq!(s.class_completed[RequestClass::TrainRollout.index()], 2, "{s:?}");
+    assert_eq!(s.failed, 0, "expiry is not a failure: {s:?}");
+}
+
+#[test]
+fn mock_replicas_decline_migration_and_cold_serve() {
+    // mock-path replicas have no extractable KV sessions (the trait
+    // default declines): a migration-eligible turn must fall back to a
+    // cold serve on the healthy peer with zero failures
+    let mut cfg = ServiceConfig::default();
+    cfg.cache.min_prefix = 2;
+    cfg.qos.enabled = true;
+    cfg.qos.migrate_min_tokens = 2;
+    let svc = service_with(
+        cfg,
+        vec![
+            Arc::new(MockModel::new(11, Duration::ZERO, 0.0)),
+            Arc::new(MockModel::new(12, Duration::from_millis(1), 0.0)),
+        ],
+    );
+
+    let args = SamplingArgs { session: Some(404), ..Default::default() };
+    let turn1 = svc.chat(&[1, 30, 31, 32], 1, &args).unwrap().remove(0);
+    assert!(svc.quarantine_replica(0, Duration::from_secs(30)));
+
+    let mut prompt = turn1.tokens.clone();
+    prompt.extend([33, 34]);
+    let turn2 = svc.chat(&prompt, 1, &args).unwrap().remove(0);
+    assert!(turn2.tokens.len() > prompt.len(), "fallback turn must still generate");
+
+    let s = svc.snapshot();
+    assert_eq!(s.failed, 0, "{s:?}");
+    let cache = s.cache.expect("cache enabled");
+    assert_eq!(cache.migrations, 0, "mocks cannot hand over sessions: {cache:?}");
+    assert!(s.replicas[1].rows >= 1, "peer must have served the turn: {s:?}");
+}
+
+// ---------------------------------------------------------------------------
+// artifact-gated: live migration over real GenerationEngine replicas
+
+fn engine_service(replicas: usize, qos_on: bool, seed: u64) -> anyhow::Result<Arc<RolloutService>> {
+    let manifest = Manifest::load_default().expect("caller checks artifacts");
+    let client = RuntimeClient::global();
+    let engine = Arc::new(ModelEngine::new(client, &manifest, "tiny")?);
+    engine.warmup()?;
+    let mut engines = Vec::with_capacity(replicas);
+    for _ in 0..replicas {
+        // same init seed on every replica: one logical model behind N
+        // serving replicas, exactly like the scheduler's pool
+        let params = ParamStore::init(&engine.model, seed)?;
+        engines.push(Arc::new(trinity_rft::explorer::GenerationEngine::new(
+            Arc::clone(&engine),
+            params,
+        )));
+    }
+    let mut cfg = ServiceConfig::default();
+    cfg.cache.enabled = qos_on;
+    cfg.cache.min_prefix = 2;
+    cfg.qos.enabled = qos_on;
+    cfg.qos.migrate_min_tokens = 4;
+    Ok(Arc::new(RolloutService::over_engines(engines, cfg)?))
+}
+
+#[test]
+fn engine_migration_is_byte_identical_and_saves_prefill() {
+    if Manifest::load_default().is_none() {
+        return; // no artifacts in this environment
+    }
+    let warm = engine_service(2, true, 23).unwrap();
+    let cold = engine_service(1, false, 23).unwrap();
+    let tok = Tokenizer::new();
+
+    let args = SamplingArgs {
+        max_new_tokens: 4,
+        temperature: 1.0,
+        seed: 99,
+        session: Some(888),
+        ..Default::default()
+    };
+    // turn 1: least-loaded ties break to replica 0, which parks the
+    // episode's KV session
+    let prompt1 = tok.encode_prompt("open the red chest");
+    let w1 = warm.chat(&prompt1, 1, &args).unwrap().remove(0);
+    let c1 = cold.chat(&prompt1, 1, &args).unwrap().remove(0);
+    assert_eq!(w1.tokens, c1.tokens, "turn 1 diverged before any migration");
+
+    // drain the holder: turn 2 now sees Cold(Quarantined) and must
+    // migrate the parked session to replica 1 instead of re-prefilling
+    assert!(warm.quarantine_replica(0, Duration::from_secs(30)));
+    let mut prompt2 = w1.tokens.clone();
+    prompt2.extend(tok.encode("north"));
+    let w2 = warm.chat(&prompt2, 1, &args).unwrap().remove(0);
+    let c2 = cold.chat(&prompt2, 1, &args).unwrap().remove(0);
+
+    assert_eq!(w2.tokens, c2.tokens, "migrated turn must be byte-identical");
+    assert_eq!(w2.prompt_len, c2.prompt_len);
+    for (lw, lc) in w2.logprobs.iter().zip(&c2.logprobs) {
+        assert!((lw - lc).abs() < 1e-4, "migrated logprobs diverged: {lw} vs {lc}");
+    }
+    assert_eq!(w2.loss_mask, c2.loss_mask);
+
+    let cache = warm.snapshot().cache.expect("cache enabled");
+    assert!(cache.migrations >= 1, "turn 2 must migrate the parked session: {cache:?}");
+    assert!(
+        cache.migration_saved_tokens as usize * 2 >= prompt2.len(),
+        "migration must save >=50% of the turn's prefill: saved \
+         {} of {} prompt tokens: {cache:?}",
+        cache.migration_saved_tokens,
+        prompt2.len()
+    );
+    assert!(cache.resumed >= 1, "the migrated session must resume on the peer: {cache:?}");
+    let s = warm.snapshot();
+    assert_eq!(s.failed, 0, "{s:?}");
+    assert!(s.replicas[1].rows >= 1, "replica 1 must have served the migrated turn: {s:?}");
+}
