@@ -1,0 +1,177 @@
+//! Micro-bench: the diagnostics plane in isolation (no PJRT) —
+//! DESIGN.md §12's cost model measured directly:
+//!
+//! 1. flight dump: wall cost of assembling + writing one self-contained
+//!    anomaly bundle (span tail, gauge history, sections),
+//! 2. attribution: episodes/s through the critical-path sweep over a
+//!    synthetic multi-turn span population,
+//! 3. SLO assess: per-call cost of the rolling per-class burn diff.
+//!
+//! Also writes `bench_out/trace.json` from the synthetic episode
+//! population so CI can smoke-run `trinity doctor --file` against it.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use trinity_rft::obs::{
+    attribute, write_trace, Anomaly, FlightConfig, FlightRecorder, Gauges, Histogram, SloConfig,
+    SloEngine, Span, SpanKind, SpanRecorder, TelemetryHub,
+};
+use trinity_rft::qos::CLASS_COUNT;
+use trinity_rft::util::benchkit::{scaled, write_json, Table};
+use trinity_rft::util::json::Value;
+use trinity_rft::util::rng::Rng;
+
+fn span(trace: u64, kind: SpanKind, start_us: u64, dur_us: u64, detail: u64) -> Span {
+    Span { trace, kind, replica: 0, start_us, dur_us, detail }
+}
+
+/// A synthetic two-turn episode population: queue -> cold prefill inside
+/// decode, a think gap, queue -> cache resume inside decode.
+fn episode_population(episodes: u64, rng: &mut Rng) -> Vec<Span> {
+    let mut spans = Vec::with_capacity(episodes as usize * 6);
+    for t in 1..=episodes {
+        let t0 = t * 5_000;
+        let q1 = 50 + rng.below(200);
+        let p = 200 + rng.below(400);
+        let d1 = p + 100 + rng.below(300);
+        spans.push(span(t, SpanKind::QueueWait, t0, q1, 1));
+        spans.push(span(t, SpanKind::Prefill, t0 + q1, p, 64));
+        spans.push(span(t, SpanKind::Decode, t0 + q1, d1, 8));
+        let gap = t0 + q1 + d1 + 100 + rng.below(200);
+        let q2 = 30 + rng.below(100);
+        let r = 20 + rng.below(60);
+        let d2 = r + 80 + rng.below(200);
+        spans.push(span(t, SpanKind::QueueWait, gap, q2, 1));
+        spans.push(span(t, SpanKind::Resume, gap + q2, r, 48));
+        spans.push(span(t, SpanKind::Decode, gap + q2, d2, 8));
+    }
+    spans
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut rng = Rng::new(42);
+    let mut rows_json = vec![];
+
+    // -- 1. flight-dump cost ------------------------------------------
+    let dir = std::env::temp_dir().join(format!("trft_diag_bench_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let dumps = scaled(16).max(4) as u64;
+    let tail = episode_population(64, &mut rng);
+    let recorder = Arc::new(SpanRecorder::new(1 << 12));
+    let hub = Arc::new(TelemetryHub::with_history(Duration::from_millis(1), 256));
+    for i in 0..128 {
+        hub.publish(Gauges { queued: i as f64, occupancy: 0.5, ..Default::default() });
+    }
+    let flight = FlightRecorder::new(FlightConfig {
+        dir: Some(dir.clone()),
+        max_dumps: dumps,
+        min_interval: Duration::ZERO,
+        ..Default::default()
+    });
+    flight.connect_spans(Arc::clone(&recorder));
+    flight.connect_hub(Arc::clone(&hub));
+    flight.set_config_digest("bench");
+    let start = Instant::now();
+    for i in 0..dumps {
+        // each bundle drains the ring, so re-fill the tail it embeds
+        for s in &tail {
+            recorder.record(*s);
+        }
+        flight
+            .trigger(Anomaly::BreakerOpen, &format!("bench trigger {i}"))
+            .expect("dump must be written");
+    }
+    let dump_wall = start.elapsed().as_secs_f64();
+    let dump_ms = 1e3 * dump_wall / dumps as f64;
+    let dump_bytes = std::fs::metadata(dir.join("flight-0.json"))?.len();
+    let _ = std::fs::remove_dir_all(&dir);
+    let mut table = Table::new(
+        "flight dump (384-span tail, 128-sample gauge history)",
+        &["dumps", "ms/dump", "bundle (KiB)"],
+    );
+    table.row(vec![
+        dumps.to_string(),
+        format!("{dump_ms:.2}"),
+        format!("{:.1}", dump_bytes as f64 / 1024.0),
+    ]);
+    table.print();
+    rows_json.push(Value::obj(vec![
+        ("bench", Value::str("flight_dump")),
+        ("dumps", Value::num(dumps as f64)),
+        ("ms_per_dump", Value::num(dump_ms)),
+        ("bundle_kib", Value::num(dump_bytes as f64 / 1024.0)),
+    ]));
+
+    // -- 2. critical-path attribution throughput ----------------------
+    let episodes = scaled(2_000).max(200) as u64;
+    let spans = episode_population(episodes, &mut rng);
+    let start = Instant::now();
+    let breakdowns = attribute(&spans);
+    let attr_wall = start.elapsed().as_secs_f64();
+    assert_eq!(breakdowns.len(), episodes as usize);
+    let eps_per_s = episodes as f64 / attr_wall;
+    let mut table = Table::new(
+        "critical-path attribution (2-turn episodes, 6 spans each)",
+        &["episodes", "wall (ms)", "episodes/s"],
+    );
+    table.row(vec![
+        episodes.to_string(),
+        format!("{:.1}", attr_wall * 1e3),
+        format!("{eps_per_s:.0}"),
+    ]);
+    table.print();
+    rows_json.push(Value::obj(vec![
+        ("bench", Value::str("attribution")),
+        ("episodes", Value::num(episodes as f64)),
+        ("wall_ms", Value::num(attr_wall * 1e3)),
+        ("episodes_per_s", Value::num(eps_per_s)),
+    ]));
+
+    // -- 3. SLO assess cost -------------------------------------------
+    let iters = scaled(20_000).max(1_000);
+    let engine = SloEngine::new(SloConfig {
+        targets: [
+            Duration::from_secs(5),
+            Duration::from_millis(500),
+            Duration::from_millis(10),
+        ],
+        objective: 0.99,
+    });
+    let hists: [Histogram; CLASS_COUNT] = Default::default();
+    let start = Instant::now();
+    for i in 0..iters {
+        hists[i % CLASS_COUNT].observe(1e-4 * (1 + rng.below(100)) as f64);
+        let snaps = std::array::from_fn(|c| hists[c].snapshot());
+        let burn = engine.assess(&snaps);
+        assert!(burn.iter().all(|b| b.is_finite()));
+    }
+    let slo_wall = start.elapsed().as_secs_f64();
+    let ns_per_assess = 1e9 * slo_wall / iters as f64;
+    let mut table = Table::new(
+        "SLO burn assessment (3 classes, snapshot + rolling diff)",
+        &["assessments", "ns/assess"],
+    );
+    table.row(vec![iters.to_string(), format!("{ns_per_assess:.0}")]);
+    table.print();
+    rows_json.push(Value::obj(vec![
+        ("bench", Value::str("slo_assess")),
+        ("iters", Value::num(iters as f64)),
+        ("ns_per_assess", Value::num(ns_per_assess)),
+    ]));
+
+    // the synthetic population doubles as the doctor smoke-test input
+    let trace_path = std::path::Path::new("bench_out").join("trace.json");
+    write_trace(&trace_path, &spans)?;
+    println!("\nwrote {} ({} episodes) for `trinity doctor --file`", trace_path.display(), episodes);
+
+    write_json("micro_diag", &Value::arr(rows_json));
+    println!(
+        "\nexpectations: a flight dump costs low single-digit milliseconds\n\
+         and fires only on anomalies, so the steady-state overhead is zero;\n\
+         attribution sweeps tens of thousands of episodes per second (it\n\
+         runs once, at drain); SLO assessment is sub-microsecond and rides\n\
+         the existing gauge cadence (DESIGN.md §12)."
+    );
+    Ok(())
+}

@@ -11,15 +11,21 @@ carries a "bench" case label plus numeric metrics.  Rows are matched by
 (bench file, case label, ordinal), so reordering cases within a label is
 a baseline refresh, not a silent mismatch.
 
-Report-only by design: drifts beyond the soft threshold print GitHub
-warning annotations but the exit code is always 0 — the numbers come
-from shared CI runners, so a hard gate would flake.  Refresh the
-baseline with `--emit-baseline`: it takes the BENCH_baseline artifact of
-a trusted run and writes a ready-to-commit rust/BENCH_baseline.json
-(normalized key order, comparable metrics only).
+Report-only by design for *numbers*: drifts beyond the soft threshold
+print GitHub warning annotations but never fail the build — the numbers
+come from shared CI runners, so a hard gate would flake.  *Malformed
+input* is different: an unreadable or non-JSON file exits 2 loudly,
+because silently comparing garbage would make every future drift
+invisible.  When `$GITHUB_STEP_SUMMARY` is set the comparison table
+(including the baseline's provenance note) is appended to the job
+summary.  Refresh the baseline with `--emit-baseline`: it takes the
+BENCH_baseline artifact of a trusted run and writes a ready-to-commit
+rust/BENCH_baseline.json (normalized key order, comparable metrics
+only).
 """
 
 import json
+import os
 import sys
 from collections import defaultdict
 
@@ -34,6 +40,7 @@ HIGHER_IS_BETTER = {
     "completed",
     "rows_per_s",
     "saved_prefill_tokens",
+    "episodes_per_s",
 }
 # ...while growth in these is (train_wait_ms stays non-directional:
 # DRR deliberately trades train waits for interactive waits)
@@ -43,8 +50,32 @@ LOWER_IS_BETTER = {
     "interactive_wait_ms",
     "interactive_wait_p95_ms",
     "turn2_wall_ms",
+    "ms_per_dump",
+    "ns_per_assess",
 }
 SOFT_THRESHOLD = 0.25  # fraction of the baseline value
+
+
+def load(path):
+    """Parse a merged bench document, exiting 2 on unreadable/bad input."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        print(f"::error title=bench compare::cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def write_step_summary(lines):
+    """Append markdown to the GitHub job summary, when one is available."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    try:
+        with open(path, "a") as f:
+            f.write("\n".join(lines) + "\n")
+    except OSError as e:
+        print(f"step summary unavailable: {e}", file=sys.stderr)
 
 
 def cases(doc):
@@ -67,8 +98,7 @@ def emit_baseline(artifact_path, out_path):
     the row measured); drops everything else so baseline diffs stay
     reviewable.
     """
-    with open(artifact_path) as f:
-        doc = json.load(f)
+    doc = load(artifact_path)
     benches = {}
     for name, rows in sorted(doc.get("benches", {}).items()):
         kept = []
@@ -100,28 +130,38 @@ def main():
     if len(sys.argv) != 3:
         print(__doc__)
         return 0
-    with open(sys.argv[1]) as f:
-        base = json.load(f)
-    with open(sys.argv[2]) as f:
-        cur = json.load(f)
+    base = load(sys.argv[1])
+    cur = load(sys.argv[2])
+
+    summary = ["### Micro-bench comparison", ""]
+    if base.get("note"):
+        summary += [f"> {base['note']}", ""]
 
     if base.get("scale") != cur.get("scale"):
-        print(
+        msg = (
             f"baseline scale {base.get('scale')!r} != current {cur.get('scale')!r}; "
             "numbers are not comparable — refresh the baseline"
         )
+        print(msg)
+        write_step_summary(summary + [msg])
         return 0
 
     base_cases, cur_cases = cases(base), cases(cur)
     if not set(base_cases) & set(cur_cases):
-        print(
+        msg = (
             "baseline has no comparable cases — seed it by committing the "
             "BENCH_baseline CI artifact as rust/BENCH_baseline.json "
             "(bench_compare.py --emit-baseline <artifact> normalizes it)"
         )
+        print(msg)
+        write_step_summary(summary + [msg])
         return 0
 
     drifts = 0
+    summary += [
+        "| case | metric | baseline | current | delta |",
+        "| --- | --- | ---: | ---: | ---: |",
+    ]
     for key in sorted(set(base_cases) & set(cur_cases)):
         b_row, c_row = base_cases[key], cur_cases[key]
         for metric in sorted(set(b_row) & set(c_row)):
@@ -134,6 +174,11 @@ def main():
             worse = -delta if metric in HIGHER_IS_BETTER else delta
             name = "/".join(str(k) for k in key) + f" {metric}"
             print(f"  {name:<48} {b:>10.3f} -> {c:>10.3f}  ({delta:+.1%})")
+            mark = " ⚠️" if worse > SOFT_THRESHOLD else ""
+            summary.append(
+                f"| {'/'.join(str(k) for k in key)} | {metric} "
+                f"| {b:.3f} | {c:.3f} | {delta:+.1%}{mark} |"
+            )
             if worse > SOFT_THRESHOLD:
                 drifts += 1
                 print(
@@ -142,7 +187,10 @@ def main():
                 )
     for key in sorted(set(base_cases) - set(cur_cases)):
         print(f"  note: baseline case {key} missing from current run")
-    print(f"{drifts} metric(s) beyond the {SOFT_THRESHOLD:.0%} soft threshold")
+        summary.append(f"| {'/'.join(str(k) for k in key)} | — | missing from current run | | |")
+    tail = f"{drifts} metric(s) beyond the {SOFT_THRESHOLD:.0%} soft threshold"
+    print(tail)
+    write_step_summary(summary + ["", tail])
     return 0
 
 

@@ -49,7 +49,8 @@ use std::sync::{Arc, Mutex, OnceLock};
 use anyhow::{bail, Result};
 
 use crate::log_warn;
-use crate::obs::{Gauges, SpanKind, SpanRecorder, TelemetryHub, NO_REPLICA};
+use crate::obs::{FlightSource, Gauges, SpanKind, SpanRecorder, TelemetryHub, NO_REPLICA};
+use crate::util::json::Value;
 
 /// Typed `[control]` knobs (`ControlSection` in the run config converts
 /// into this).  Band semantics:
@@ -401,6 +402,13 @@ impl ControlPlane {
         self.stale_holds.load(Ordering::Relaxed)
     }
 
+    /// Wrap this plane as a flight-recorder evidence source: every dump
+    /// then carries the retained decision ring, so a post-mortem can see
+    /// what the controllers did in the window before the anomaly.
+    pub fn flight_source(self: &Arc<Self>) -> Arc<DecisionSource> {
+        Arc::new(DecisionSource { plane: Arc::clone(self) })
+    }
+
     pub fn snapshot(&self) -> ControlSnapshot {
         ControlSnapshot {
             decisions: self.log.total(),
@@ -448,6 +456,40 @@ impl ControlSnapshot {
             out.push(("control/staleness_lag".to_string(), lag as f64));
         }
         out
+    }
+}
+
+/// Flight-dump evidence section: the `[control]` decision ring as JSON
+/// (see [`ControlPlane::flight_source`]).
+pub struct DecisionSource {
+    plane: Arc<ControlPlane>,
+}
+
+impl FlightSource for DecisionSource {
+    fn name(&self) -> &'static str {
+        "control"
+    }
+
+    fn collect(&self) -> Value {
+        let log = self.plane.decisions();
+        let recent = log
+            .recent()
+            .iter()
+            .map(|d| {
+                Value::obj(vec![
+                    ("controller", Value::str(d.controller.as_str())),
+                    ("at_s", Value::num(d.at_s)),
+                    ("from", Value::num(d.from)),
+                    ("to", Value::num(d.to)),
+                    ("cause", Value::str(d.cause)),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("total", Value::int(log.total() as i64)),
+            ("stale_holds", Value::int(self.plane.stale_holds() as i64)),
+            ("recent", Value::arr(recent)),
+        ])
     }
 }
 
@@ -581,6 +623,26 @@ mod tests {
         assert!(plane.admit());
         assert_eq!(plane.snapshot().decisions, before, "no decisions on stale gauges");
         assert_eq!(plane.stale_holds(), 1, "warn/hold once per stale episode");
+    }
+
+    #[test]
+    fn flight_source_exports_the_decision_ring() {
+        let hub = Arc::new(TelemetryHub::new(Duration::from_micros(1)));
+        let mut cfg = enabled_cfg();
+        cfg.hold_ticks = 1;
+        let plane = ControlPlane::new(cfg, ctx(), Arc::clone(&hub), None);
+        hub.publish(Gauges { queue_wait_p95_s: 10.0, ..Default::default() });
+        assert!(!plane.admit(), "over-band pressure closes the gate");
+        let doc = plane.flight_source().collect();
+        assert!(doc.get("total").and_then(Value::as_i64).unwrap() >= 1);
+        let recent = doc.get("recent").and_then(Value::as_array).unwrap();
+        assert!(!recent.is_empty());
+        assert_eq!(
+            recent[0].get("controller").and_then(Value::as_str),
+            Some("admission"),
+            "{recent:?}"
+        );
+        assert!(recent[0].get("cause").and_then(Value::as_str).is_some());
     }
 
     #[test]

@@ -290,6 +290,30 @@ pub struct ObservabilitySection {
     pub sample_every_s: f64,
     /// Where `trace.json` is written (default: the monitor dir).
     pub trace_path: Option<String>,
+    /// Gauge snapshots retained for trend windows (0 = no history).
+    pub gauge_history: usize,
+    /// Slowest episodes reported with critical-path breakdowns.
+    pub critical_top_k: usize,
+    /// Flight-recorder dump cap over the run (0 disables dumping).
+    pub flight_max_dumps: u64,
+    /// Minimum spacing between flight dumps, seconds.
+    pub flight_min_interval_s: f64,
+    /// Deadline expiries within the window that count as a burst
+    /// (0 disables the deadline-burst trigger).
+    pub flight_expiry_burst: usize,
+    /// Window for the expiry-burst counter, seconds.
+    pub flight_expiry_window_s: f64,
+    /// Newest spans embedded per flight dump.
+    pub flight_span_tail: usize,
+    /// SLO burn rate that fires a flight dump (0 disables).
+    pub flight_burn_threshold: f64,
+    /// Per-class SLO latency targets, seconds (0 = class untracked).
+    pub slo_train_s: f64,
+    pub slo_eval_s: f64,
+    pub slo_interactive_s: f64,
+    /// Fraction of waits that must meet the target (error budget is
+    /// `1 - objective`).
+    pub slo_objective: f64,
 }
 
 impl Default for ObservabilitySection {
@@ -302,6 +326,18 @@ impl Default for ObservabilitySection {
             ring_capacity: d.ring_capacity,
             sample_every_s: d.sample_every.as_secs_f64(),
             trace_path: None,
+            gauge_history: d.gauge_history,
+            critical_top_k: d.critical_top_k,
+            flight_max_dumps: d.flight.max_dumps,
+            flight_min_interval_s: d.flight.min_interval.as_secs_f64(),
+            flight_expiry_burst: d.flight.expiry_burst as usize,
+            flight_expiry_window_s: d.flight.expiry_window.as_secs_f64(),
+            flight_span_tail: d.flight.span_tail,
+            flight_burn_threshold: d.flight.burn_threshold,
+            slo_train_s: 0.0,
+            slo_eval_s: 0.0,
+            slo_interactive_s: 0.0,
+            slo_objective: d.slo.objective,
         }
     }
 }
@@ -309,6 +345,8 @@ impl Default for ObservabilitySection {
 impl ObservabilitySection {
     /// Clamped only as far as needed to avoid `Duration::from_secs_f64`
     /// panics; `ObsConfig::validate` rejects bad values loudly.
+    /// `flight.dir` stays `None` here — the session build fills it from
+    /// the monitor dir.
     pub fn to_obs_config(&self) -> crate::obs::ObsConfig {
         let secs = |v: f64| {
             let v = if v.is_finite() { v.clamp(0.0, 1e9) } else { 0.0 };
@@ -319,6 +357,25 @@ impl ObservabilitySection {
             ring_capacity: self.ring_capacity,
             sample_every: secs(self.sample_every_s),
             trace_path: self.trace_path.as_ref().map(PathBuf::from),
+            gauge_history: self.gauge_history,
+            critical_top_k: self.critical_top_k,
+            flight: crate::obs::FlightConfig {
+                dir: None,
+                max_dumps: self.flight_max_dumps,
+                min_interval: secs(self.flight_min_interval_s),
+                expiry_burst: self.flight_expiry_burst.min(u32::MAX as usize) as u32,
+                expiry_window: secs(self.flight_expiry_window_s),
+                span_tail: self.flight_span_tail,
+                burn_threshold: self.flight_burn_threshold,
+            },
+            slo: crate::obs::SloConfig {
+                targets: [
+                    secs(self.slo_train_s),
+                    secs(self.slo_eval_s),
+                    secs(self.slo_interactive_s),
+                ],
+                objective: self.slo_objective,
+            },
         }
     }
 }
@@ -629,11 +686,28 @@ impl RftConfig {
         // typed observability section
         b("observability.enabled", &mut cfg.observability.enabled);
         us("observability.ring_capacity", &mut cfg.observability.ring_capacity);
-        if let Some(x) = v.path("observability.sample_every_s").and_then(Value::as_f64) {
-            cfg.observability.sample_every_s = x;
-        }
         if let Some(p) = v.path("observability.trace_path").and_then(Value::as_str) {
             cfg.observability.trace_path = Some(p.to_string());
+        }
+        us("observability.gauge_history", &mut cfg.observability.gauge_history);
+        us("observability.critical_top_k", &mut cfg.observability.critical_top_k);
+        u("observability.flight_max_dumps", &mut cfg.observability.flight_max_dumps);
+        us("observability.flight_expiry_burst", &mut cfg.observability.flight_expiry_burst);
+        us("observability.flight_span_tail", &mut cfg.observability.flight_span_tail);
+        {
+            let g = |key: &str, out: &mut f64| {
+                if let Some(x) = v.path(key).and_then(Value::as_f64) {
+                    *out = x;
+                }
+            };
+            g("observability.sample_every_s", &mut cfg.observability.sample_every_s);
+            g("observability.flight_min_interval_s", &mut cfg.observability.flight_min_interval_s);
+            g("observability.flight_expiry_window_s", &mut cfg.observability.flight_expiry_window_s);
+            g("observability.flight_burn_threshold", &mut cfg.observability.flight_burn_threshold);
+            g("observability.slo_train_s", &mut cfg.observability.slo_train_s);
+            g("observability.slo_eval_s", &mut cfg.observability.slo_eval_s);
+            g("observability.slo_interactive_s", &mut cfg.observability.slo_interactive_s);
+            g("observability.slo_objective", &mut cfg.observability.slo_objective);
         }
 
         // typed control-plane section
@@ -786,6 +860,19 @@ impl RftConfig {
             h.lr = 0.0;
         }
         h
+    }
+
+    /// Short stable digest of the full resolved config (FNV-1a over the
+    /// `Debug` form): stamps flight dumps and reports so a post-mortem
+    /// can tell which configuration produced them.  Identical configs
+    /// digest identically; any knob change moves it.
+    pub fn digest(&self) -> String {
+        let mut hash: u64 = 0xcbf2_9ce4_8422_2325;
+        for byte in format!("{self:?}").bytes() {
+            hash ^= byte as u64;
+            hash = hash.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        format!("{hash:016x}")
     }
 }
 
@@ -1115,6 +1202,65 @@ observability:
         assert!(RftConfig::from_value(&yamlite::parse(bad).unwrap()).is_err());
         let ok = "mode: both\nobservability:\n  ring_capacity: 0\n"; // disabled: not validated
         assert!(RftConfig::from_value(&yamlite::parse(ok).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn diagnostics_knobs_parse_into_flight_and_slo_configs() {
+        let yaml = "\
+mode: both
+observability:
+  enabled: true
+  gauge_history: 64
+  critical_top_k: 3
+  flight_max_dumps: 4
+  flight_min_interval_s: 2.5
+  flight_expiry_burst: 16
+  flight_expiry_window_s: 1.0
+  flight_span_tail: 128
+  flight_burn_threshold: 3.5
+  slo_interactive_s: 0.25
+  slo_objective: 0.95
+";
+        let cfg = RftConfig::from_value(&yamlite::parse(yaml).unwrap()).unwrap();
+        let oc = cfg.observability.to_obs_config();
+        assert_eq!(oc.gauge_history, 64);
+        assert_eq!(oc.critical_top_k, 3);
+        assert_eq!(oc.flight.max_dumps, 4);
+        assert!((oc.flight.min_interval.as_secs_f64() - 2.5).abs() < 1e-9);
+        assert_eq!(oc.flight.expiry_burst, 16);
+        assert!((oc.flight.expiry_window.as_secs_f64() - 1.0).abs() < 1e-9);
+        assert_eq!(oc.flight.span_tail, 128);
+        assert!((oc.flight.burn_threshold - 3.5).abs() < 1e-9);
+        assert!(oc.flight.dir.is_none(), "dir is filled at session build");
+        use crate::qos::RequestClass;
+        assert!(oc.slo.any_target());
+        assert!(
+            (oc.slo.targets[RequestClass::Interactive.index()].as_secs_f64() - 0.25).abs() < 1e-9
+        );
+        assert!(oc.slo.targets[RequestClass::TrainRollout.index()].is_zero());
+        assert!((oc.slo.objective - 0.95).abs() < 1e-9);
+        // defaults: no SLO targets, recorder knobs mirror FlightConfig
+        let d = RftConfig::default().observability.to_obs_config();
+        assert!(!d.slo.any_target());
+        assert_eq!(d.flight.max_dumps, crate::obs::FlightConfig::default().max_dumps);
+        // bad knobs fail at config time (only when enabled)
+        let bad = "mode: both\nobservability:\n  enabled: true\n  slo_objective: 1.0\n";
+        assert!(RftConfig::from_value(&yamlite::parse(bad).unwrap()).is_err());
+        let bad = "mode: both\nobservability:\n  enabled: true\n  flight_burn_threshold: -1\n";
+        assert!(RftConfig::from_value(&yamlite::parse(bad).unwrap()).is_err());
+        let ok = "mode: both\nobservability:\n  slo_objective: 1.0\n"; // disabled: not validated
+        assert!(RftConfig::from_value(&yamlite::parse(ok).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn config_digest_is_stable_and_knob_sensitive() {
+        let a = RftConfig::default();
+        let b = RftConfig::default();
+        assert_eq!(a.digest(), b.digest(), "identical configs digest identically");
+        assert_eq!(a.digest().len(), 16);
+        let mut c = RftConfig::default();
+        c.seed = 43;
+        assert_ne!(a.digest(), c.digest(), "any knob change moves the digest");
     }
 
     #[test]

@@ -61,6 +61,23 @@ pub struct ModeReport {
     /// Where the Chrome trace-event file was written, when observability
     /// was enabled and the run exported one.
     pub trace_path: Option<PathBuf>,
+    /// Critical-path breakdowns of the slowest episodes (observability
+    /// runs only; at most `critical_top_k` entries, slowest first).
+    pub critical_paths: Vec<crate::obs::EpisodeBreakdown>,
+    /// Flight-recorder activity over the run (diagnostics-enabled runs
+    /// only): "47 anomalies, 8 dumped" on the report line.
+    pub flight: Option<FlightStats>,
+}
+
+/// Flight-recorder lifetime counters for the run report.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FlightStats {
+    /// Anomaly triggers observed (dumped or suppressed).
+    pub triggers: u64,
+    /// Dumps actually written.
+    pub dumps: u64,
+    /// Triggers swallowed by the rate limit or the dump cap.
+    pub suppressed: u64,
 }
 
 impl ModeReport {
@@ -268,6 +285,8 @@ impl RunRecorder {
             sample_wait: self.sample_wait.snapshot(),
             control: None,
             trace_path: None,
+            critical_paths: vec![],
+            flight: None,
         }
     }
 }

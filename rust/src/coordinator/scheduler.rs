@@ -24,7 +24,9 @@ use crate::explorer::{
     SamplingArgs, WorkflowRegistry,
 };
 use crate::model::{ParamStore, SyncCtx, WeightSnapshot, WeightSync, WeightSyncRegistry};
-use crate::obs::{write_trace, Gauges, SpanRecorder, TelemetryHub};
+use crate::obs::{
+    attribute, write_trace, Anomaly, FlightRecorder, Gauges, SloEngine, SpanRecorder, TelemetryHub,
+};
 use crate::runtime::{Manifest, ModelEngine, RuntimeClient};
 use crate::service::RolloutService;
 use crate::tokenizer::Tokenizer;
@@ -33,7 +35,7 @@ use crate::trainer::{AlgorithmRegistry, Trainer, TrainerConfig};
 use super::config::RftConfig;
 use super::monitor::Monitor;
 use super::policy::{resolve_policy, ExplorerPlan, Progress, SyncPolicy};
-use super::report::{ModeReport, RolloutRecord, RunRecorder};
+use super::report::{FlightStats, ModeReport, RolloutRecord, RunRecorder};
 use super::tasks::{AlfworldTaskSource, MathTaskSource, ShardedTaskSource, TaskSource};
 
 /// Shared run state: the policy-visible [`Progress`] plus the failure
@@ -178,6 +180,13 @@ pub struct RftSession {
     /// publishes samples on the configured cadence and policies read
     /// them via [`SyncPolicy::connect_telemetry`].
     pub telemetry: Option<Arc<TelemetryHub>>,
+    /// Flight recorder when `observability.enabled` — anomaly triggers
+    /// (breaker opens, deadline bursts, migration failures, SLO burn)
+    /// dump self-contained diagnostic bundles into the monitor dir.
+    pub flight: Option<Arc<FlightRecorder>>,
+    /// Per-class SLO accountant when any class has a latency target —
+    /// assessed on the gauge cadence, published as `slo_burn_*` gauges.
+    pub slo: Option<Arc<SloEngine>>,
     origin: Instant,
 }
 
@@ -224,10 +233,33 @@ impl RftSession {
         let obs_cfg = cfg.observability.to_obs_config();
         let observer = obs_cfg.enabled.then(|| Arc::new(SpanRecorder::new(obs_cfg.ring_capacity)));
         let telemetry = (obs_cfg.enabled || cfg.control.enabled)
-            .then(|| Arc::new(TelemetryHub::new(obs_cfg.sample_every)));
+            .then(|| Arc::new(TelemetryHub::with_history(obs_cfg.sample_every, obs_cfg.gauge_history)));
         if let Some(spans) = &observer {
             engine.set_observer(Arc::clone(spans));
         }
+
+        // flight recorder (DESIGN.md §12): anomaly-triggered diagnostic
+        // dumps, landing next to the monitor series unless a dump dir
+        // is set explicitly
+        let flight = obs_cfg.enabled.then(|| {
+            let mut fcfg = obs_cfg.flight.clone();
+            if fcfg.dir.is_none() {
+                fcfg.dir = cfg.monitor_dir.clone();
+            }
+            let recorder = Arc::new(FlightRecorder::new(fcfg));
+            recorder.set_config_digest(cfg.digest());
+            if let Some(spans) = &observer {
+                recorder.connect_spans(Arc::clone(spans));
+            }
+            if let Some(hub) = &telemetry {
+                recorder.connect_hub(Arc::clone(hub));
+            }
+            recorder
+        });
+        // SLO engine: only when a class actually has a latency target —
+        // burn assessment otherwise never pays the per-publish diff
+        let slo = (obs_cfg.enabled && obs_cfg.slo.any_target())
+            .then(|| Arc::new(SloEngine::new(obs_cfg.slo)));
 
         // both sides start from identical weights
         let trainer_params = ParamStore::init(&engine.model, cfg.seed)?;
@@ -293,8 +325,12 @@ impl RftSession {
             }
             let mut svc_cfg = cfg.service.to_service_config();
             svc_cfg.qos = cfg.qos.to_qos_config();
-            let svc =
-                Arc::new(RolloutService::over_engines_obs(engines, svc_cfg, observer.clone())?);
+            let svc = Arc::new(RolloutService::over_engines_diag(
+                engines,
+                svc_cfg,
+                observer.clone(),
+                flight.clone(),
+            )?);
             for i in 0..cfg.explorer_count {
                 explorers.push(Arc::new(Explorer::with_endpoint(
                     i,
@@ -364,6 +400,8 @@ impl RftSession {
             trainer: Some(trainer),
             observer,
             telemetry,
+            flight,
+            slo,
             origin: Instant::now(),
         })
     }
@@ -437,6 +475,10 @@ impl RftSession {
                 // an adaptive policy hands its staleness controller to
                 // the plane here (no-op default for static policies)
                 policy.connect_control(&plane);
+                // flight dumps then carry the control decision ring
+                if let Some(f) = &self.flight {
+                    f.attach(plane.flight_source());
+                }
                 Some(plane)
             }
             _ => None,
@@ -465,6 +507,29 @@ impl RftSession {
                     g.interactive_queued = svc.class_queued(RequestClass::Interactive) as f64;
                     g.interactive_wait_p95_s =
                         s.class_queue_wait[RequestClass::Interactive.index()].percentile(0.95);
+                    if let Some(slo) = &self.slo {
+                        let burn = slo.assess(&s.class_queue_wait);
+                        g.slo_burn_train = burn[RequestClass::TrainRollout.index()];
+                        g.slo_burn_eval = burn[RequestClass::Eval.index()];
+                        g.slo_burn_interactive = burn[RequestClass::Interactive.index()];
+                        if let Some(f) = &self.flight {
+                            let threshold = f.config().burn_threshold;
+                            if threshold > 0.0 {
+                                for class in crate::qos::RequestClass::ALL {
+                                    let b = burn[class.index()];
+                                    if b >= threshold {
+                                        f.trigger(
+                                            Anomaly::SloBurn,
+                                            &format!(
+                                                "{} burn {b:.2} >= threshold {threshold:.2}",
+                                                class.as_str()
+                                            ),
+                                        );
+                                    }
+                                }
+                            }
+                        }
+                    }
                 }
                 if let Some(c) = &s.cache {
                     g.cache_hit_rate = c.hit_rate();
@@ -598,11 +663,15 @@ impl RftSession {
         report.control = control.as_ref().map(|plane| plane.snapshot());
         // drain the span ring into a Chrome trace-event file (viewable
         // in chrome://tracing / Perfetto, summarized by `trinity trace`)
+        // and attribute the slowest episodes' wall time from the same
+        // drained spans (`trinity doctor` re-derives this offline)
         if let Some(spans) = &self.observer {
             let drained = spans.drain();
-            let dest = cfg
-                .observability
-                .to_obs_config()
+            let obs_cfg = cfg.observability.to_obs_config();
+            let mut paths = attribute(&drained);
+            paths.truncate(obs_cfg.critical_top_k);
+            report.critical_paths = paths;
+            let dest = obs_cfg
                 .trace_path
                 .or_else(|| cfg.monitor_dir.as_ref().map(|d| d.join("trace.json")));
             if let Some(dest) = dest {
@@ -613,6 +682,13 @@ impl RftSession {
                     }
                 }
             }
+        }
+        if let Some(f) = &self.flight {
+            report.flight = Some(FlightStats {
+                triggers: f.triggers(),
+                dumps: f.dumps(),
+                suppressed: f.suppressed(),
+            });
         }
         self.trainer = Some(trainer);
         Ok(report)

@@ -6,6 +6,7 @@
 //! trinity bench      --preset tiny --tiers math500s,amcs --tasks 16 --k 4
 //! trinity opmd       --steps 400 --group 8
 //! trinity trace      --file runs/demo/trace.json
+//! trinity doctor     --file runs/demo/trace.json
 //! trinity algorithms list
 //! trinity info
 //! ```
@@ -71,6 +72,18 @@ fn cli() -> Cli {
             "summarize a trace.json written by a run with [observability] enabled \
              (open the same file in chrome://tracing or Perfetto for the visual timeline)",
             vec![arg("file", "path to the trace.json to summarize")],
+        )
+        .command(
+            "doctor",
+            "diagnose where episode wall time went: load a trace.json (or a \
+             flight-<n>.json anomaly dump) and attribute every episode's wall \
+             clock into queue/prefill/resume/decode/sync/retry/migrate \
+             segments; prints the dominant bottleneck per request class and \
+             the slowest episodes in detail",
+            vec![
+                arg("file", "path to a trace.json or flight dump to analyze"),
+                arg_default("top", "how many slowest episodes to detail", "5"),
+            ],
         )
         .command(
             "algorithms",
@@ -249,8 +262,34 @@ fn cmd_run(m: &trinity_rft::util::cli::Matches) -> Result<()> {
             );
         }
     }
+    if !report.critical_paths.is_empty() {
+        println!("critical paths  {} slowest episodes:", report.critical_paths.len());
+        for b in &report.critical_paths {
+            let (dom, dom_us) = b.dominant();
+            println!(
+                "  trace {:<6} {:<11} {:>8.1}ms  dominant {} ({:.0}%)",
+                b.trace,
+                b.class.as_str(),
+                b.wall_us as f64 / 1e3,
+                dom,
+                100.0 * dom_us as f64 / b.wall_us.max(1) as f64
+            );
+        }
+    }
+    if let Some(f) = &report.flight {
+        if f.triggers > 0 {
+            println!(
+                "flight          {} anomaly triggers, {} dumps written, {} suppressed",
+                f.triggers, f.dumps, f.suppressed
+            );
+        }
+    }
     if let Some(path) = &report.trace_path {
-        println!("trace           {} (inspect with `trinity trace --file {0}`)", path.display());
+        println!(
+            "trace           {} (inspect with `trinity trace --file {0}` or \
+             `trinity doctor --file {0}`)",
+            path.display()
+        );
     }
     let rewards = report.reward_series();
     if !rewards.is_empty() {
@@ -268,6 +307,85 @@ fn cmd_trace(m: &trinity_rft::util::cli::Matches) -> Result<()> {
         .ok_or_else(|| anyhow::anyhow!("--file <trace.json> required (see `trinity run` with [observability] enabled)"))?;
     let doc = load_trace(std::path::Path::new(&path))?;
     print!("{}", summarize_trace(&doc)?);
+    Ok(())
+}
+
+fn cmd_doctor(m: &trinity_rft::util::cli::Matches) -> Result<()> {
+    use trinity_rft::obs::{attribute, class_summary, load_trace, spans_from_trace, top_k};
+    use trinity_rft::util::json::Value;
+    let path = m.get("file").ok_or_else(|| {
+        anyhow::anyhow!(
+            "--file <trace.json | flight-N.json> required (runs with [observability] \
+             enabled write trace.json; anomaly triggers write flight dumps next to it)"
+        )
+    })?;
+    let k = m.get_usize("top", 5);
+    let doc = load_trace(std::path::Path::new(&path))?;
+    // flight dumps carry an anomaly header in front of the same
+    // traceEvents shape a trace.json has
+    if let Some(anomaly) = doc.get("anomaly").and_then(Value::as_str) {
+        println!("flight dump     anomaly={anomaly}");
+        if let Some(detail) = doc.get("detail").and_then(Value::as_str) {
+            println!("detail          {detail}");
+        }
+        if let Some(at) = doc.get("at_s").and_then(Value::as_f64) {
+            println!("captured at     {at:.3}s into the run");
+        }
+        if let Some(digest) = doc.get("config_digest").and_then(Value::as_str) {
+            println!("config digest   {digest}");
+        }
+        println!();
+    }
+    let spans = spans_from_trace(&doc)?;
+    let breakdowns = attribute(&spans);
+    if breakdowns.is_empty() {
+        println!(
+            "no episodes in {path}: only run-plumbing spans (trace 0) or an empty span tail"
+        );
+        return Ok(());
+    }
+    let pct = |part: u64, whole: u64| 100.0 * part as f64 / whole.max(1) as f64;
+    println!("{} episodes, dominant bottleneck per class:\n", breakdowns.len());
+    println!("{:<12} {:>9} {:>12}  {}", "class", "episodes", "wall", "dominant segment");
+    for (class, count, wall, segs) in class_summary(&breakdowns) {
+        let (dom, dom_us) = segs.into_iter().max_by_key(|&(_, us)| us).unwrap_or(("other", 0));
+        println!(
+            "{:<12} {:>9} {:>10.1}ms  {} ({:.0}% of wall)",
+            class.as_str(),
+            count,
+            wall as f64 / 1e3,
+            dom,
+            pct(dom_us, wall)
+        );
+    }
+    let slowest = top_k(&breakdowns, k);
+    println!("\n{} slowest episodes:", slowest.len());
+    for b in slowest {
+        let (dom, dom_us) = b.dominant();
+        let mut notes = String::new();
+        if b.retries > 0 {
+            notes.push_str(&format!(", {} retries", b.retries));
+        }
+        if b.migrated {
+            notes.push_str(", migrated");
+        }
+        println!(
+            "  trace {:<6} {:<11} wall {:>8.1}ms  dominant {} ({:.0}%){}",
+            b.trace,
+            b.class.as_str(),
+            b.wall_us as f64 / 1e3,
+            dom,
+            pct(dom_us, b.wall_us),
+            notes
+        );
+        let parts: Vec<String> = b
+            .segments()
+            .iter()
+            .filter(|&&(_, us)| us > 0)
+            .map(|&(name, us)| format!("{name} {:.1}ms", us as f64 / 1e3))
+            .collect();
+        println!("                {}", parts.join(" / "));
+    }
     Ok(())
 }
 
@@ -443,6 +561,7 @@ fn main() {
     let result = match matches.command.as_str() {
         "run" => cmd_run(&matches),
         "trace" => cmd_trace(&matches),
+        "doctor" => cmd_doctor(&matches),
         "bench" => cmd_bench(&matches),
         "opmd" => cmd_opmd(&matches),
         "perf" => cmd_perf(&matches),

@@ -1,0 +1,325 @@
+//! Critical-path attribution (DESIGN.md §12): where did each episode's
+//! wall time actually go?
+//!
+//! The span ring records *what happened*; this module answers *what
+//! dominated*.  Spans sharing a trace id are grouped into an episode,
+//! and the episode's wall-clock interval is swept once: every
+//! elementary sub-interval is attributed to the most specific span
+//! covering it, so the segments **partition** the wall time — they sum
+//! to it exactly, with uncovered time (workflow thinking, env steps,
+//! scheduling gaps) landing in `other`.
+//!
+//! Specificity resolves overlap: a `decode` span covers serve-to-done
+//! and contains the cold `prefill` (or cache `resume`) that started it,
+//! so the serve marker wins inside its interval and only the remainder
+//! counts as decode.  A queue wait whose claim took more than one
+//! attempt (`detail` ≥ 2) is re-queue time caused by a retry and is
+//! attributed to `retry`, not `queue`.  Trainer weight publishes
+//! (`SyncStall`, trace 0) are global: their overlap with an episode is
+//! attributed to `sync` wherever nothing episode-local was running.
+
+use crate::qos::RequestClass;
+
+use super::span::{Span, SpanKind};
+
+/// Names of the attribution segments, in [`EpisodeBreakdown::segments`]
+/// order.
+pub const SEGMENT_NAMES: [&str; 8] =
+    ["queue", "prefill", "resume", "decode", "sync", "retry", "migrate", "other"];
+
+/// One episode's wall time, partitioned.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EpisodeBreakdown {
+    /// Episode trace id.
+    pub trace: u64,
+    /// Request class (from the episode's `ClassWait` mirror spans;
+    /// defaults to [`RequestClass::TrainRollout`]).
+    pub class: RequestClass,
+    /// Episode start, µs relative to the recorder origin.
+    pub start_us: u64,
+    /// First span start to last span end.
+    pub wall_us: u64,
+    /// First-attempt queue waits.
+    pub queue_us: u64,
+    /// Cold prompt prefill.
+    pub prefill_us: u64,
+    /// Cache-hit resume (delta prefill only).
+    pub resume_us: u64,
+    /// Token generation (serve time not inside a prefill/resume).
+    pub decode_us: u64,
+    /// Overlap with trainer weight publishes, where otherwise idle.
+    pub sync_us: u64,
+    /// Re-queue waits after failed attempts.
+    pub retry_us: u64,
+    /// Live session migration.
+    pub migrate_us: u64,
+    /// Residual: wall time no span explains.
+    pub other_us: u64,
+    /// Retry markers observed.
+    pub retries: u64,
+    /// True when the episode's session was live-migrated.
+    pub migrated: bool,
+}
+
+impl EpisodeBreakdown {
+    /// `(name, µs)` per segment, in [`SEGMENT_NAMES`] order.  The values
+    /// sum to `wall_us` exactly.
+    pub fn segments(&self) -> [(&'static str, u64); 8] {
+        [
+            ("queue", self.queue_us),
+            ("prefill", self.prefill_us),
+            ("resume", self.resume_us),
+            ("decode", self.decode_us),
+            ("sync", self.sync_us),
+            ("retry", self.retry_us),
+            ("migrate", self.migrate_us),
+            ("other", self.other_us),
+        ]
+    }
+
+    /// The dominant segment: `(name, µs)` of the largest share.
+    pub fn dominant(&self) -> (&'static str, u64) {
+        self.segments().into_iter().max_by_key(|&(_, us)| us).unwrap_or(("other", 0))
+    }
+}
+
+/// An interval contributing to the sweep: `[start, end)` attributed to
+/// segment `seg` with precedence `priority` (higher wins on overlap).
+struct Cover {
+    start: u64,
+    end: u64,
+    seg: usize,
+    priority: u8,
+}
+
+fn segment_of(span: &Span) -> Option<(usize, u8)> {
+    // (segment index, priority); higher priority = more specific
+    match span.kind {
+        SpanKind::QueueWait if span.detail >= 2 => Some((5, 3)), // retry re-queue
+        SpanKind::QueueWait => Some((0, 3)),
+        SpanKind::Prefill => Some((1, 5)),
+        SpanKind::Resume => Some((2, 5)),
+        SpanKind::Migrate => Some((6, 5)),
+        SpanKind::Decode => Some((3, 4)),
+        SpanKind::SyncStall => Some((4, 1)),
+        _ => None,
+    }
+}
+
+/// Attribute one episode's spans (plus the run's global sync stalls).
+fn breakdown(trace: u64, episode: &[&Span], syncs: &[&Span]) -> EpisodeBreakdown {
+    let start = episode.iter().map(|s| s.start_us).min().unwrap_or(0);
+    let end = episode.iter().map(|s| s.start_us + s.dur_us).max().unwrap_or(start);
+
+    let mut out = EpisodeBreakdown {
+        trace,
+        start_us: start,
+        wall_us: end - start,
+        ..Default::default()
+    };
+    let mut covers: Vec<Cover> = Vec::with_capacity(episode.len() + syncs.len());
+    let mut cuts: Vec<u64> = Vec::with_capacity(2 * (episode.len() + syncs.len()) + 2);
+    cuts.push(start);
+    cuts.push(end);
+    for s in episode {
+        match s.kind {
+            SpanKind::Retry => out.retries += 1,
+            SpanKind::Migrate => out.migrated = true,
+            SpanKind::ClassWait => {
+                // class mirror: label only, never swept (it duplicates
+                // the queue-wait interval)
+                if let Some(c) = RequestClass::from_index(s.detail as usize) {
+                    out.class = c;
+                }
+                continue;
+            }
+            _ => {}
+        }
+        let Some((seg, priority)) = segment_of(s) else { continue };
+        if s.dur_us == 0 {
+            continue;
+        }
+        covers.push(Cover { start: s.start_us, end: s.start_us + s.dur_us, seg, priority });
+        cuts.push(s.start_us);
+        cuts.push(s.start_us + s.dur_us);
+    }
+    // global weight publishes, clipped to the episode's interval
+    for s in syncs {
+        let (a, b) = (s.start_us.max(start), (s.start_us + s.dur_us).min(end));
+        if a >= b {
+            continue;
+        }
+        let Some((seg, priority)) = segment_of(s) else { continue };
+        covers.push(Cover { start: a, end: b, seg, priority });
+        cuts.push(a);
+        cuts.push(b);
+    }
+
+    cuts.sort_unstable();
+    cuts.dedup();
+    let mut segs = [0u64; 8];
+    for w in cuts.windows(2) {
+        let (a, b) = (w[0], w[1]);
+        if a < start || b > end {
+            continue;
+        }
+        let win = covers
+            .iter()
+            .filter(|c| c.start <= a && c.end >= b)
+            .max_by_key(|c| c.priority)
+            .map(|c| c.seg)
+            .unwrap_or(7); // uncovered -> other
+        segs[win] += b - a;
+    }
+    [
+        &mut out.queue_us,
+        &mut out.prefill_us,
+        &mut out.resume_us,
+        &mut out.decode_us,
+        &mut out.sync_us,
+        &mut out.retry_us,
+        &mut out.migrate_us,
+        &mut out.other_us,
+    ]
+    .into_iter()
+    .zip(segs)
+    .for_each(|(slot, v)| *slot = v);
+    out
+}
+
+/// Group `spans` by trace id and attribute each episode, sorted by wall
+/// time descending (the slowest episode first).  Trace 0 spans are run
+/// plumbing, not an episode; its `SyncStall` spans contribute to every
+/// episode they overlap.
+pub fn attribute(spans: &[Span]) -> Vec<EpisodeBreakdown> {
+    let syncs: Vec<&Span> =
+        spans.iter().filter(|s| s.trace == 0 && s.kind == SpanKind::SyncStall).collect();
+    let mut traces: Vec<u64> = spans.iter().map(|s| s.trace).filter(|&t| t != 0).collect();
+    traces.sort_unstable();
+    traces.dedup();
+    let mut out: Vec<EpisodeBreakdown> = traces
+        .into_iter()
+        .map(|t| {
+            let episode: Vec<&Span> = spans.iter().filter(|s| s.trace == t).collect();
+            breakdown(t, &episode, &syncs)
+        })
+        .collect();
+    out.sort_by(|a, b| b.wall_us.cmp(&a.wall_us).then(a.trace.cmp(&b.trace)));
+    out
+}
+
+/// The `k` slowest episodes (attribution order is already slowest-first).
+pub fn top_k(breakdowns: &[EpisodeBreakdown], k: usize) -> &[EpisodeBreakdown] {
+    &breakdowns[..k.min(breakdowns.len())]
+}
+
+/// Per-class aggregate: `(class, episodes, total wall µs, summed
+/// segments)` for every class with at least one episode — the body of
+/// `trinity doctor`'s dominant-bottleneck table.
+pub fn class_summary(
+    breakdowns: &[EpisodeBreakdown],
+) -> Vec<(RequestClass, usize, u64, [(&'static str, u64); 8])> {
+    RequestClass::ALL
+        .into_iter()
+        .filter_map(|class| {
+            let eps: Vec<&EpisodeBreakdown> =
+                breakdowns.iter().filter(|b| b.class == class).collect();
+            if eps.is_empty() {
+                return None;
+            }
+            let mut segs = [("", 0u64); 8];
+            for (i, name) in SEGMENT_NAMES.iter().enumerate() {
+                segs[i] = (*name, eps.iter().map(|b| b.segments()[i].1).sum());
+            }
+            let wall = eps.iter().map(|b| b.wall_us).sum();
+            Some((class, eps.len(), wall, segs))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::NO_REPLICA;
+
+    fn span(trace: u64, kind: SpanKind, start_us: u64, dur_us: u64, detail: u64) -> Span {
+        Span { trace, kind, replica: 0, start_us, dur_us, detail }
+    }
+
+    #[test]
+    fn segments_partition_the_wall_time_exactly() {
+        // a two-turn episode: queue -> cold prefill inside decode,
+        // a gap, then queue -> cache resume inside decode
+        let spans = vec![
+            span(1, SpanKind::QueueWait, 0, 100, 1),
+            span(1, SpanKind::Prefill, 100, 300, 64),
+            span(1, SpanKind::Decode, 100, 500, 8), // contains the prefill
+            span(1, SpanKind::QueueWait, 800, 50, 1),
+            span(1, SpanKind::Resume, 850, 40, 48),
+            span(1, SpanKind::Decode, 850, 150, 8), // contains the resume
+        ];
+        let b = &attribute(&spans)[0];
+        assert_eq!(b.trace, 1);
+        assert_eq!(b.wall_us, 1000);
+        assert_eq!(b.queue_us, 150);
+        assert_eq!(b.prefill_us, 300, "serve marker wins inside decode");
+        assert_eq!(b.resume_us, 40, "cache-hit turn is resume, not prefill");
+        assert_eq!(b.decode_us, 200 + 110, "decode keeps only its remainder");
+        assert_eq!(b.other_us, 200, "the inter-turn gap");
+        let total: u64 = b.segments().iter().map(|&(_, us)| us).sum();
+        assert_eq!(total, b.wall_us, "segments must partition the wall");
+        assert_eq!(b.dominant(), ("decode", 310));
+        assert_eq!(b.class, RequestClass::TrainRollout);
+    }
+
+    #[test]
+    fn retry_requeues_sync_overlap_and_class_label() {
+        let spans = vec![
+            span(2, SpanKind::QueueWait, 0, 100, 1),
+            span(2, SpanKind::Retry, 100, 0, 2),
+            span(2, SpanKind::QueueWait, 100, 200, 2), // second attempt
+            span(2, SpanKind::ClassWait, 300, 0, RequestClass::Interactive.index() as u64),
+            span(2, SpanKind::Decode, 300, 100, 4),
+            // trace-0 sync stall covering the idle tail of the episode
+            span(0, SpanKind::SyncStall, 400, 400, 0),
+            span(2, SpanKind::Migrate, 700, 0, 0),
+        ];
+        let b = &attribute(&spans)[0];
+        assert_eq!(b.class, RequestClass::Interactive);
+        assert_eq!(b.wall_us, 700);
+        assert_eq!(b.queue_us, 100, "first attempt is queue");
+        assert_eq!(b.retry_us, 200, "re-queue after a retry is retry time");
+        assert_eq!(b.retries, 1);
+        assert_eq!(b.decode_us, 100);
+        assert_eq!(b.sync_us, 300, "publish overlap clipped to the episode");
+        assert_eq!(b.other_us, 0);
+        assert!(b.migrated);
+        let total: u64 = b.segments().iter().map(|&(_, us)| us).sum();
+        assert_eq!(total, b.wall_us);
+    }
+
+    #[test]
+    fn attribution_sorts_slowest_first_and_aggregates_by_class() {
+        let spans = vec![
+            span(1, SpanKind::QueueWait, 0, 50, 1),
+            span(1, SpanKind::Decode, 50, 100, 2),
+            span(2, SpanKind::QueueWait, 0, 400, 1),
+            span(2, SpanKind::Decode, 400, 100, 2),
+            span(0, SpanKind::DeviceTrain, 0, 999, 0), // plumbing, ignored
+        ];
+        let all = attribute(&spans);
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].trace, 2, "slowest first");
+        assert_eq!(top_k(&all, 1).len(), 1);
+        assert_eq!(top_k(&all, 10).len(), 2);
+        let per_class = class_summary(&all);
+        assert_eq!(per_class.len(), 1);
+        let (class, count, wall, segs) = per_class[0];
+        assert_eq!(class, RequestClass::TrainRollout);
+        assert_eq!(count, 2);
+        assert_eq!(wall, 150 + 500);
+        let queue = segs.iter().find(|&&(n, _)| n == "queue").unwrap().1;
+        assert_eq!(queue, 450);
+        assert!(attribute(&[]).is_empty());
+    }
+}

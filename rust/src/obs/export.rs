@@ -17,7 +17,7 @@ use anyhow::{Context, Result};
 
 use crate::util::json::Value;
 
-use super::span::{Span, SpanKind, NO_REPLICA};
+use super::span::{MigrateDetail, Span, SpanKind, NO_REPLICA};
 
 /// The pid under which device-lane spans render.
 pub const DEVICE_LANE: u64 = 999;
@@ -64,6 +64,21 @@ pub fn chrome_trace(spans: &[Span]) -> Value {
         ]));
     }
     for s in spans {
+        // migrate spans unpack their detail word into readable args —
+        // raw `dest<<32|saved` is useless in a trace viewer
+        let args = if s.kind == SpanKind::Migrate {
+            let m = MigrateDetail::unpack(s.detail);
+            Value::obj(vec![
+                ("dest_replica", Value::int(m.dest_replica as i64)),
+                ("saved_tokens", Value::int(m.saved_tokens as i64)),
+                ("replica", Value::int(s.replica as i64)),
+            ])
+        } else {
+            Value::obj(vec![
+                ("detail", Value::int(s.detail as i64)),
+                ("replica", Value::int(s.replica as i64)),
+            ])
+        };
         events.push(Value::obj(vec![
             ("name", Value::str(s.kind.as_str())),
             ("cat", Value::str(category(s.kind))),
@@ -72,13 +87,55 @@ pub fn chrome_trace(spans: &[Span]) -> Value {
             ("dur", Value::int(s.dur_us as i64)),
             ("pid", Value::int(lane(s) as i64)),
             ("tid", Value::int(s.trace as i64)),
-            ("args", Value::obj(vec![
-                ("detail", Value::int(s.detail as i64)),
-                ("replica", Value::int(s.replica as i64)),
-            ])),
+            ("args", args),
         ]));
     }
     Value::obj(vec![("traceEvents", Value::arr(events))])
+}
+
+/// Rebuild the span list from a trace document — the inverse of
+/// [`chrome_trace`], so `trinity doctor` and the flight-dump analyzer
+/// run the same attribution code on a file as on a live ring.  Metadata
+/// events and unknown span names are skipped (forward compatibility);
+/// `Migrate` args are re-packed through [`MigrateDetail`].
+pub fn spans_from_trace(doc: &Value) -> Result<Vec<Span>> {
+    let events = doc
+        .get("traceEvents")
+        .and_then(Value::as_array)
+        .context("not a trace: missing traceEvents")?;
+    let mut spans = Vec::with_capacity(events.len());
+    for e in events {
+        if e.get("ph").and_then(Value::as_str) != Some("X") {
+            continue;
+        }
+        let Some(kind) = e.get("name").and_then(Value::as_str).and_then(SpanKind::parse) else {
+            continue;
+        };
+        let int = |key: &str| e.get(key).and_then(Value::as_i64).unwrap_or(0).max(0) as u64;
+        let arg = |key: &str| {
+            e.get("args").and_then(|a| a.get(key)).and_then(Value::as_i64).unwrap_or(0).max(0)
+                as u64
+        };
+        let detail = if kind == SpanKind::Migrate {
+            MigrateDetail {
+                dest_replica: arg("dest_replica") as u32,
+                saved_tokens: arg("saved_tokens") as u32,
+            }
+            .pack()
+        } else {
+            arg("detail")
+        };
+        spans.push(Span {
+            trace: int("tid"),
+            kind,
+            replica: arg("replica") as u32,
+            start_us: int("ts"),
+            dur_us: int("dur"),
+            detail,
+        });
+    }
+    spans.sort_by_key(|s| (s.start_us, s.trace));
+    Ok(spans)
 }
 
 /// Write `trace.json` for chrome://tracing / Perfetto.
@@ -222,5 +279,40 @@ mod tests {
     #[test]
     fn summarize_rejects_non_traces() {
         assert!(summarize_trace(&Value::obj(vec![("x", Value::int(1))])).is_err());
+        assert!(spans_from_trace(&Value::obj(vec![("x", Value::int(1))])).is_err());
+    }
+
+    #[test]
+    fn migrate_args_are_readable_not_packed() {
+        let detail = MigrateDetail { dest_replica: 2, saved_tokens: 345 }.pack();
+        let s = Span { trace: 4, kind: SpanKind::Migrate, replica: 1, start_us: 10, dur_us: 0, detail };
+        let doc = chrome_trace(&[s]);
+        let events = doc.get("traceEvents").and_then(Value::as_array).unwrap();
+        let e = events
+            .iter()
+            .find(|e| e.get("name").and_then(Value::as_str) == Some("migrate"))
+            .unwrap();
+        let args = e.get("args").unwrap();
+        assert_eq!(args.get("dest_replica").and_then(Value::as_i64), Some(2));
+        assert_eq!(args.get("saved_tokens").and_then(Value::as_i64), Some(345));
+        assert!(args.get("detail").is_none(), "raw packed word must not leak: {args}");
+    }
+
+    #[test]
+    fn spans_roundtrip_through_the_trace_document() {
+        let mut original = spans();
+        original.push(Span {
+            trace: 9,
+            kind: SpanKind::Migrate,
+            replica: 0,
+            start_us: 500,
+            dur_us: 0,
+            detail: MigrateDetail { dest_replica: 1, saved_tokens: 30 }.pack(),
+        });
+        let rebuilt = spans_from_trace(&chrome_trace(&original)).unwrap();
+        assert_eq!(rebuilt.len(), original.len());
+        let mut expected = original.clone();
+        expected.sort_by_key(|s| (s.start_us, s.trace));
+        assert_eq!(rebuilt, expected, "round-trip must preserve every field");
     }
 }

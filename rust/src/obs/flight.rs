@@ -1,0 +1,449 @@
+//! Flight recorder (DESIGN.md §12): when something goes wrong, snapshot
+//! the evidence *before it is gone*.
+//!
+//! Gauges are point-in-time and the span ring overwrites itself — by the
+//! time a human looks at a failed run, the window around the failure has
+//! been recycled.  The [`FlightRecorder`] watches for anomalies
+//! (deadline-expiry bursts, circuit-breaker opens, failed migrations,
+//! SLO burn past threshold) and on trigger dumps a **self-contained**
+//! `flight-<seq>.json` bundle to the monitor dir: the span-ring tail as
+//! Chrome trace events (so `trinity doctor` and `chrome://tracing` both
+//! open it), the gauge history, the `[control]` decision ring, per-class
+//! queue state, and a config digest identifying the run.
+//!
+//! Dumps are rate-limited (one per `min_interval`) and bounded in count
+//! (`max_dumps`), so a failure storm costs a handful of files, not a
+//! disk.  Triggers are counted even when suppressed — the run report can
+//! say "47 anomalies, 8 dumped".
+//!
+//! Wiring is acyclic by construction: the recorder holds `Arc`s *into*
+//! the system (span ring, hub, sources wrapping the control plane and
+//! replica queues); nothing the recorder reads holds the recorder.
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::qos::RequestClass;
+use crate::util::json::Value;
+
+use super::export::chrome_trace;
+use super::hub::TelemetryHub;
+use super::span::SpanRecorder;
+
+/// What tripped the recorder.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Anomaly {
+    /// `expiry_burst` deadline expiries inside one `expiry_window`.
+    DeadlineBurst,
+    /// A replica's circuit breaker opened (quarantine).
+    BreakerOpen,
+    /// A live session migration failed to land.
+    MigrationFailure,
+    /// A class's SLO burn rate crossed `burn_threshold`.
+    SloBurn,
+}
+
+impl Anomaly {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Anomaly::DeadlineBurst => "deadline_burst",
+            Anomaly::BreakerOpen => "breaker_open",
+            Anomaly::MigrationFailure => "migration_failure",
+            Anomaly::SloBurn => "slo_burn",
+        }
+    }
+}
+
+/// Flight-recorder knobs (a slice of `ObsConfig`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlightConfig {
+    /// Where dumps land; `None` = count triggers but never write.
+    pub dir: Option<PathBuf>,
+    /// Dumps written over the recorder's lifetime (0 disables dumping).
+    pub max_dumps: u64,
+    /// Minimum spacing between dumps.
+    pub min_interval: Duration,
+    /// Deadline expiries within `expiry_window` that count as a burst
+    /// (0 disables the deadline trigger).
+    pub expiry_burst: u32,
+    /// Window for the expiry-burst counter.
+    pub expiry_window: Duration,
+    /// Newest spans embedded per dump.
+    pub span_tail: usize,
+    /// SLO burn rate at which the scheduler triggers [`Anomaly::SloBurn`]
+    /// (0 disables; read by the scheduler, carried here so one struct
+    /// describes the whole recorder).
+    pub burn_threshold: f64,
+}
+
+impl Default for FlightConfig {
+    fn default() -> Self {
+        FlightConfig {
+            dir: None,
+            max_dumps: 8,
+            min_interval: Duration::from_secs(30),
+            expiry_burst: 8,
+            expiry_window: Duration::from_secs(5),
+            span_tail: 512,
+            burn_threshold: 2.0,
+        }
+    }
+}
+
+impl FlightConfig {
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if !self.burn_threshold.is_finite() || self.burn_threshold < 0.0 {
+            anyhow::bail!("flight burn_threshold must be finite and >= 0");
+        }
+        Ok(())
+    }
+}
+
+/// A pluggable evidence source: each contributes one named section to
+/// every dump.  Implemented by the control plane (decision ring) and the
+/// rollout service (per-class queue state); anything else can attach.
+pub trait FlightSource: Send + Sync {
+    fn name(&self) -> &'static str;
+    fn collect(&self) -> Value;
+}
+
+#[derive(Default)]
+struct ExpiryWindow {
+    /// Origin-relative µs of the window start.
+    start_us: u64,
+    count: u32,
+}
+
+pub struct FlightRecorder {
+    cfg: FlightConfig,
+    origin: Instant,
+    /// Dumps written (also the next dump's sequence number).
+    dumps: AtomicU64,
+    /// Anomaly triggers observed, dumped or not.
+    triggers: AtomicU64,
+    /// Triggers suppressed by the rate limit / dump cap.
+    suppressed: AtomicU64,
+    /// Origin-relative µs of the last dump; `u64::MAX` = never.
+    last_dump_us: AtomicU64,
+    expiries: Mutex<ExpiryWindow>,
+    spans: Mutex<Option<Arc<SpanRecorder>>>,
+    hub: Mutex<Option<Arc<TelemetryHub>>>,
+    sources: Mutex<Vec<Arc<dyn FlightSource>>>,
+    config_digest: Mutex<String>,
+}
+
+impl FlightRecorder {
+    pub fn new(cfg: FlightConfig) -> FlightRecorder {
+        FlightRecorder {
+            cfg,
+            origin: Instant::now(),
+            dumps: AtomicU64::new(0),
+            triggers: AtomicU64::new(0),
+            suppressed: AtomicU64::new(0),
+            last_dump_us: AtomicU64::new(u64::MAX),
+            expiries: Mutex::new(ExpiryWindow::default()),
+            spans: Mutex::new(None),
+            hub: Mutex::new(None),
+            sources: Mutex::new(Vec::new()),
+            config_digest: Mutex::new(String::new()),
+        }
+    }
+
+    pub fn config(&self) -> &FlightConfig {
+        &self.cfg
+    }
+
+    /// Attach the span ring whose tail each dump embeds.
+    pub fn connect_spans(&self, spans: Arc<SpanRecorder>) {
+        *self.spans.lock().unwrap() = Some(spans);
+    }
+
+    /// Attach the telemetry hub whose gauges + history each dump embeds.
+    pub fn connect_hub(&self, hub: Arc<TelemetryHub>) {
+        *self.hub.lock().unwrap() = Some(hub);
+    }
+
+    /// Attach an evidence source (control decisions, class queues, ...).
+    pub fn attach(&self, source: Arc<dyn FlightSource>) {
+        self.sources.lock().unwrap().push(source);
+    }
+
+    /// Stamp the config digest identifying the run the dumps belong to.
+    pub fn set_config_digest(&self, digest: impl Into<String>) {
+        *self.config_digest.lock().unwrap() = digest.into();
+    }
+
+    /// Anomaly triggers observed (dumped or suppressed).
+    pub fn triggers(&self) -> u64 {
+        self.triggers.load(Ordering::Relaxed)
+    }
+
+    /// Dumps actually written.
+    pub fn dumps(&self) -> u64 {
+        self.dumps.load(Ordering::Relaxed)
+    }
+
+    /// Triggers swallowed by the rate limit or the dump cap.
+    pub fn suppressed(&self) -> u64 {
+        self.suppressed.load(Ordering::Relaxed)
+    }
+
+    /// Note one deadline expiry of `class`; trips
+    /// [`Anomaly::DeadlineBurst`] when `expiry_burst` land inside one
+    /// `expiry_window`.
+    pub fn note_expiry(&self, class: RequestClass) {
+        if self.cfg.expiry_burst == 0 {
+            return;
+        }
+        let now_us = self.origin.elapsed().as_micros() as u64;
+        let window_us = self.cfg.expiry_window.as_micros() as u64;
+        let burst = {
+            let mut w = self.expiries.lock().unwrap();
+            if now_us.saturating_sub(w.start_us) > window_us || w.count == 0 {
+                w.start_us = now_us;
+                w.count = 1;
+                false
+            } else {
+                w.count += 1;
+                let hit = w.count >= self.cfg.expiry_burst;
+                if hit {
+                    w.count = 0; // re-arm
+                }
+                hit
+            }
+        };
+        if burst {
+            self.trigger(
+                Anomaly::DeadlineBurst,
+                &format!(
+                    "{} expiries within {:.1}s (last: class {})",
+                    self.cfg.expiry_burst,
+                    self.cfg.expiry_window.as_secs_f64(),
+                    class.as_str()
+                ),
+            );
+        }
+    }
+
+    /// Fire an anomaly: rate-limited and count-bounded; returns the dump
+    /// path when one was written.
+    pub fn trigger(&self, anomaly: Anomaly, detail: &str) -> Option<PathBuf> {
+        self.triggers.fetch_add(1, Ordering::Relaxed);
+        if self.cfg.max_dumps == 0 || self.cfg.dir.is_none() {
+            self.suppressed.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        // rate limit: one winner per min_interval (CAS, any thread)
+        let now_us = self.origin.elapsed().as_micros() as u64;
+        let interval_us = self.cfg.min_interval.as_micros() as u64;
+        loop {
+            let last = self.last_dump_us.load(Ordering::Relaxed);
+            if last != u64::MAX && now_us < last.saturating_add(interval_us) {
+                self.suppressed.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+            if self
+                .last_dump_us
+                .compare_exchange(last, now_us, Ordering::Relaxed, Ordering::Relaxed)
+                .is_ok()
+            {
+                break;
+            }
+        }
+        // count bound
+        let seq = self.dumps.fetch_add(1, Ordering::Relaxed);
+        if seq >= self.cfg.max_dumps {
+            self.dumps.fetch_sub(1, Ordering::Relaxed);
+            self.suppressed.fetch_add(1, Ordering::Relaxed);
+            return None;
+        }
+        let doc = self.bundle(anomaly, detail, seq, now_us);
+        let dir = self.cfg.dir.clone().expect("checked above");
+        let path = dir.join(format!("flight-{seq}.json"));
+        let written = std::fs::create_dir_all(&dir)
+            .and_then(|_| std::fs::write(&path, doc.to_string_pretty()));
+        if let Err(e) = written {
+            crate::log_warn!("flight", "failed to write {path:?}: {e}");
+            return None;
+        }
+        crate::log_warn!(
+            "flight",
+            "anomaly {}: dumped {path:?} ({detail})",
+            anomaly.as_str()
+        );
+        Some(path)
+    }
+
+    /// Assemble the self-contained dump document.
+    fn bundle(&self, anomaly: Anomaly, detail: &str, seq: u64, now_us: u64) -> Value {
+        let gauges_obj = |g: &super::hub::Gauges| {
+            Value::Object(g.fields().into_iter().map(|(k, v)| (k.to_string(), Value::num(v))).collect())
+        };
+        let mut doc = Value::obj(vec![
+            ("flight", Value::int(seq as i64)),
+            ("anomaly", Value::str(anomaly.as_str())),
+            ("detail", Value::str(detail)),
+            ("at_s", Value::num(now_us as f64 / 1e6)),
+            ("config_digest", Value::str(self.config_digest.lock().unwrap().clone())),
+        ]);
+        if let Some(hub) = self.hub.lock().unwrap().as_ref() {
+            doc.set("gauges", gauges_obj(&hub.gauges()));
+            doc.set(
+                "gauge_history",
+                Value::arr(hub.history().iter().map(gauges_obj).collect()),
+            );
+        }
+        let sections: Vec<(String, Value)> = self
+            .sources
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|s| (s.name().to_string(), s.collect()))
+            .collect();
+        doc.set("sections", Value::Object(sections));
+        if let Some(spans) = self.spans.lock().unwrap().as_ref() {
+            let all = spans.drain();
+            let tail = &all[all.len().saturating_sub(self.cfg.span_tail)..];
+            // embed as traceEvents so doctor/chrome open dumps directly
+            if let Some(events) = chrome_trace(tail).get("traceEvents") {
+                doc.set("traceEvents", events.clone());
+            }
+        }
+        doc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::hub::Gauges;
+    use crate::obs::span::{Span, SpanKind};
+
+    struct StaticSource;
+    impl FlightSource for StaticSource {
+        fn name(&self) -> &'static str {
+            "static"
+        }
+        fn collect(&self) -> Value {
+            Value::obj(vec![("answer", Value::int(42))])
+        }
+    }
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("trft_flight_{tag}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn dump_is_self_contained_and_rate_limited() {
+        let dir = temp_dir("bundle");
+        let _ = std::fs::remove_dir_all(&dir);
+        let recorder = FlightRecorder::new(FlightConfig {
+            dir: Some(dir.clone()),
+            min_interval: Duration::from_secs(3600),
+            ..Default::default()
+        });
+        let spans = Arc::new(SpanRecorder::new(64));
+        spans.record(Span {
+            trace: 5,
+            kind: SpanKind::Decode,
+            replica: 0,
+            start_us: 10,
+            dur_us: 20,
+            detail: 4,
+        });
+        let hub = Arc::new(TelemetryHub::new(Duration::from_millis(1)));
+        hub.publish(Gauges { queued: 3.0, ..Default::default() });
+        hub.publish(Gauges { queued: 9.0, ..Default::default() });
+        recorder.connect_spans(Arc::clone(&spans));
+        recorder.connect_hub(Arc::clone(&hub));
+        recorder.attach(Arc::new(StaticSource));
+        recorder.set_config_digest("deadbeef");
+
+        let path = recorder.trigger(Anomaly::BreakerOpen, "replica 0 quarantined").unwrap();
+        assert_eq!(path.file_name().unwrap().to_str().unwrap(), "flight-0.json");
+        let doc = Value::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(doc.get("anomaly").and_then(Value::as_str), Some("breaker_open"));
+        assert_eq!(doc.get("config_digest").and_then(Value::as_str), Some("deadbeef"));
+        assert_eq!(doc.path("gauges.queued").and_then(Value::as_f64), Some(9.0));
+        let history = doc.get("gauge_history").and_then(Value::as_array).unwrap();
+        assert_eq!(history.len(), 2, "history reconstructs the window");
+        assert_eq!(history[0].get("queued").and_then(Value::as_f64), Some(3.0));
+        assert_eq!(doc.path("sections.static.answer").and_then(Value::as_i64), Some(42));
+        let events = doc.get("traceEvents").and_then(Value::as_array).unwrap();
+        assert!(events.iter().any(|e| e.get("name").and_then(Value::as_str) == Some("decode")));
+
+        // second trigger inside the interval: counted, not dumped
+        assert!(recorder.trigger(Anomaly::MigrationFailure, "again").is_none());
+        assert_eq!(recorder.triggers(), 2);
+        assert_eq!(recorder.dumps(), 1);
+        assert_eq!(recorder.suppressed(), 1);
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 1);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn dump_count_is_bounded() {
+        let dir = temp_dir("cap");
+        let _ = std::fs::remove_dir_all(&dir);
+        let recorder = FlightRecorder::new(FlightConfig {
+            dir: Some(dir.clone()),
+            max_dumps: 2,
+            min_interval: Duration::ZERO,
+            ..Default::default()
+        });
+        for i in 0..5 {
+            recorder.trigger(Anomaly::SloBurn, &format!("t{i}"));
+        }
+        assert_eq!(recorder.dumps(), 2);
+        assert_eq!(recorder.triggers(), 5);
+        assert_eq!(recorder.suppressed(), 3);
+        assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 2);
+        std::fs::remove_dir_all(&dir).unwrap();
+
+        let disabled = FlightRecorder::new(FlightConfig { max_dumps: 0, ..Default::default() });
+        assert!(disabled.trigger(Anomaly::BreakerOpen, "x").is_none());
+        assert_eq!((disabled.triggers(), disabled.dumps()), (1, 0));
+    }
+
+    #[test]
+    fn expiry_burst_trips_only_inside_the_window() {
+        let dir = temp_dir("burst");
+        let _ = std::fs::remove_dir_all(&dir);
+        let recorder = FlightRecorder::new(FlightConfig {
+            dir: Some(dir.clone()),
+            expiry_burst: 3,
+            expiry_window: Duration::from_secs(60),
+            min_interval: Duration::ZERO,
+            ..Default::default()
+        });
+        recorder.note_expiry(RequestClass::Interactive);
+        recorder.note_expiry(RequestClass::Interactive);
+        assert_eq!(recorder.triggers(), 0, "below the burst threshold");
+        recorder.note_expiry(RequestClass::Interactive);
+        assert_eq!(recorder.triggers(), 1, "third expiry trips the burst");
+        assert_eq!(recorder.dumps(), 1);
+        let dump = std::fs::read_to_string(dir.join("flight-0.json")).unwrap();
+        assert!(dump.contains("deadline_burst"), "{dump}");
+        assert!(dump.contains("interactive"), "{dump}");
+        std::fs::remove_dir_all(&dir).unwrap();
+
+        let off = FlightRecorder::new(FlightConfig { expiry_burst: 0, ..Default::default() });
+        for _ in 0..100 {
+            off.note_expiry(RequestClass::Eval);
+        }
+        assert_eq!(off.triggers(), 0, "trigger disabled by expiry_burst=0");
+    }
+
+    #[test]
+    fn no_dir_counts_but_never_writes() {
+        let recorder = FlightRecorder::new(FlightConfig {
+            dir: None,
+            min_interval: Duration::ZERO,
+            ..Default::default()
+        });
+        assert!(recorder.trigger(Anomaly::BreakerOpen, "x").is_none());
+        assert_eq!(recorder.triggers(), 1);
+    }
+}

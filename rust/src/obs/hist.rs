@@ -113,6 +113,28 @@ impl HistSnapshot {
         bucket_upper_s(BUCKETS - 1)
     }
 
+    /// Fraction of observations strictly above `secs` (0 when empty).
+    ///
+    /// Bucket granularity applies: a bucket counts as "over" only when
+    /// its *entire* range lies above `secs`, so the result is a lower
+    /// bound within one ×2 bucket width — the conservative direction for
+    /// an SLO violation ratio (never alarms on data that might comply).
+    pub fn fraction_over(&self, secs: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let over: u64 = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| i == 0 || bucket_upper_s(i - 1) >= secs)
+            .map(|(_, &c)| c)
+            .sum();
+        // bucket 0 has lower bound 0: it is "over" only when secs < 0
+        let over = if secs >= 0.0 { over - self.counts[0] } else { over };
+        over as f64 / self.count as f64
+    }
+
     /// Accumulate another snapshot (replica/run aggregation).
     pub fn merge(&mut self, other: &HistSnapshot) {
         for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
@@ -198,6 +220,96 @@ mod tests {
         assert!(m.percentile(0.95) > 0.1, "{}", m.percentile(0.95));
         let (p50, p95, p99) = m.p50_p95_p99();
         assert!(p50 <= p95 && p95 <= p99);
+    }
+
+    #[test]
+    fn empty_snapshot_percentiles_are_zero() {
+        let s = HistSnapshot::default();
+        for q in [0.0, 0.5, 0.95, 0.99, 1.0] {
+            assert_eq!(s.percentile(q), 0.0, "q={q}");
+        }
+        assert_eq!(s.p50_p95_p99(), (0.0, 0.0, 0.0));
+        assert_eq!(s.mean(), 0.0);
+        assert_eq!(s.fraction_over(0.0), 0.0);
+    }
+
+    #[test]
+    fn single_sample_every_percentile_lands_in_its_bucket() {
+        let h = Histogram::new();
+        h.observe(0.003); // -> the (2ms, 4ms] bucket
+        let s = h.snapshot();
+        assert_eq!(s.count, 1);
+        for q in [0.0, 0.01, 0.5, 0.99, 1.0] {
+            let p = s.percentile(q);
+            assert!(p > 0.002 && p <= 0.004096, "q={q} p={p}");
+        }
+        assert!((s.mean() - 0.003).abs() < 1e-6);
+        assert_eq!(s.fraction_over(0.001), 1.0);
+        assert_eq!(s.fraction_over(1.0), 0.0);
+    }
+
+    #[test]
+    fn overflow_bucket_saturates_not_wraps() {
+        let h = Histogram::new();
+        // hours and days land in the open-ended top bucket
+        for secs in [3.0e3, 9.0e4, 1.0e12] {
+            h.observe(secs);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.counts[BUCKETS - 1], 3, "{:?}", s.counts);
+        assert_eq!(s.count, 3);
+        // percentiles stay inside the top bucket instead of wrapping
+        let top = bucket_upper_s(BUCKETS - 1);
+        let floor = bucket_upper_s(BUCKETS - 2);
+        assert!(s.percentile(0.99) > floor && s.percentile(0.99) <= top);
+        assert_eq!(s.percentile(1.0), top);
+        assert_eq!(s.fraction_over(1.0), 1.0);
+    }
+
+    #[test]
+    fn merge_of_disjoint_snapshots_preserves_both_populations() {
+        let fast = Histogram::new();
+        let slow = Histogram::new();
+        for _ in 0..8 {
+            fast.observe(1e-5);
+        }
+        for _ in 0..8 {
+            slow.observe(2.0);
+        }
+        let (a, b) = (fast.snapshot(), slow.snapshot());
+        // the two populations occupy disjoint bucket sets
+        assert!((0..BUCKETS).all(|i| a.counts[i] == 0 || b.counts[i] == 0));
+        let mut m = a;
+        m.merge(&b);
+        assert_eq!(m.count, 16);
+        for i in 0..BUCKETS {
+            assert_eq!(m.counts[i], a.counts[i] + b.counts[i]);
+        }
+        assert!((m.sum_s - (8.0 * 1e-5 + 8.0 * 2.0)).abs() < 1e-3);
+        // exactly half the mass sits above any point between the modes
+        assert!((m.fraction_over(0.1) - 0.5).abs() < 1e-12);
+        assert!(m.percentile(0.25) < 1e-4 && m.percentile(0.75) > 1.0);
+    }
+
+    #[test]
+    fn fraction_over_is_a_conservative_violation_ratio() {
+        let h = Histogram::new();
+        for _ in 0..90 {
+            h.observe(0.001);
+        }
+        for _ in 0..10 {
+            h.observe(0.512);
+        }
+        let s = h.snapshot();
+        // threshold above the fast mode, below the slow mode
+        let f = s.fraction_over(0.01);
+        assert!((f - 0.10).abs() < 1e-12, "f={f}");
+        // threshold inside the slow mode's bucket: conservative (the
+        // bucket straddles it, so it does not count as violating)
+        assert!(s.fraction_over(0.6) <= 0.10);
+        // everything is over a negative threshold, nothing over the top
+        assert_eq!(s.fraction_over(-1.0), 1.0);
+        assert_eq!(s.fraction_over(f64::INFINITY), 0.0);
     }
 
     #[test]

@@ -8,8 +8,17 @@
 //! policy holding the hub reads the latest sample lock-free from its
 //! `admit` / `publish_after` hooks.  Gauges are stored as f64 bit
 //! patterns in atomics, so readers never block a publisher.
+//!
+//! The hub also keeps a bounded **gauge history**: each published sample
+//! is appended to a ring of the last N samples, so trend-reading
+//! consumers (the flight recorder, predictive `[control]` policies) can
+//! ask "what did the last few seconds look like" instead of only "what
+//! is true right now".  History uses a mutex — appends happen only on
+//! the publish cadence, never on the serving path.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// One gauge sample: the live control-plane view a policy can act on.
@@ -51,6 +60,13 @@ pub struct Gauges {
     pub interactive_wait_p95_s: f64,
     /// Sessions live-migrated off overloaded/quarantined replicas.
     pub migrations: f64,
+    /// Train-class SLO error-budget burn rate (0 = within budget; 1 =
+    /// burning exactly the allowed violation budget; >1 = over-burning).
+    pub slo_burn_train: f64,
+    /// Eval-class SLO burn rate (see [`Gauges::slo_burn_train`]).
+    pub slo_burn_eval: f64,
+    /// Interactive-class SLO burn rate (see [`Gauges::slo_burn_train`]).
+    pub slo_burn_interactive: f64,
 }
 
 macro_rules! gauge_fields {
@@ -70,6 +86,16 @@ macro_rules! gauge_fields {
             }
             fn load(&self) -> Gauges {
                 Gauges { $($field: f64::from_bits(self.$field.load(Ordering::Relaxed)),)* }
+            }
+        }
+
+        impl Gauges {
+            /// Every gauge as a `(name, value)` pair, in field order —
+            /// the serialization view flight dumps and the monitor use.
+            /// Generated alongside the atomic cells so a new gauge field
+            /// can never be silently missing from either.
+            pub fn fields(&self) -> Vec<(&'static str, f64)> {
+                vec![$((stringify!($field), self.$field),)*]
             }
         }
     };
@@ -93,7 +119,14 @@ gauge_fields!(
     interactive_queued,
     interactive_wait_p95_s,
     migrations,
+    slo_burn_train,
+    slo_burn_eval,
+    slo_burn_interactive,
 );
+
+/// Default number of gauge samples the history ring retains (256
+/// samples at the default 250ms cadence ≈ the last minute of the run).
+pub const DEFAULT_GAUGE_HISTORY: usize = 256;
 
 pub struct TelemetryHub {
     origin: Instant,
@@ -102,17 +135,29 @@ pub struct TelemetryHub {
     last_sample_us: AtomicU64,
     samples: AtomicU64,
     cells: Cells,
+    /// Ring of the last `history_cap` published samples (0 = disabled).
+    history_cap: usize,
+    history: Mutex<VecDeque<Gauges>>,
 }
 
 impl TelemetryHub {
-    /// A hub whose [`due`](Self::due) gate opens every `sample_every`.
+    /// A hub whose [`due`](Self::due) gate opens every `sample_every`,
+    /// retaining [`DEFAULT_GAUGE_HISTORY`] samples of history.
     pub fn new(sample_every: Duration) -> TelemetryHub {
+        TelemetryHub::with_history(sample_every, DEFAULT_GAUGE_HISTORY)
+    }
+
+    /// A hub retaining up to `history` published samples (0 disables the
+    /// history ring; the live cells always work).
+    pub fn with_history(sample_every: Duration, history: usize) -> TelemetryHub {
         TelemetryHub {
             origin: Instant::now(),
             cadence_us: sample_every.as_micros().max(1) as u64,
             last_sample_us: AtomicU64::new(u64::MAX),
             samples: AtomicU64::new(0),
             cells: Cells::new(),
+            history_cap: history,
+            history: Mutex::new(VecDeque::with_capacity(history.min(4096))),
         }
     }
 
@@ -122,6 +167,26 @@ impl TelemetryHub {
         g.at_s = self.origin.elapsed().as_secs_f64();
         g.tick = (self.samples.fetch_add(1, Ordering::Relaxed) + 1) as f64;
         self.cells.store(&g);
+        if self.history_cap > 0 {
+            let mut h = self.history.lock().unwrap();
+            if h.len() == self.history_cap {
+                h.pop_front();
+            }
+            h.push_back(g);
+        }
+    }
+
+    /// The retained history, oldest first (empty when history is off).
+    pub fn history(&self) -> Vec<Gauges> {
+        self.history.lock().unwrap().iter().copied().collect()
+    }
+
+    /// History samples taken within `window_s` seconds of the newest
+    /// retained sample, oldest first.  `f64::INFINITY` returns all.
+    pub fn trend(&self, window_s: f64) -> Vec<Gauges> {
+        let h = self.history.lock().unwrap();
+        let Some(latest) = h.back().map(|g| g.at_s) else { return Vec::new() };
+        h.iter().filter(|g| latest - g.at_s <= window_s).copied().collect()
     }
 
     /// The latest published sample (all zeros before the first publish).
@@ -202,6 +267,46 @@ mod tests {
         assert_eq!(g.tick, 2.0);
         assert!(hub.age_s().is_finite());
         assert!(hub.age_s() < 60.0);
+    }
+
+    #[test]
+    fn history_ring_is_bounded_and_ordered() {
+        let hub = TelemetryHub::with_history(Duration::from_millis(1), 4);
+        for i in 0..10u64 {
+            hub.publish(Gauges { queued: i as f64, ..Default::default() });
+        }
+        let h = hub.history();
+        assert_eq!(h.len(), 4, "ring bounded at capacity");
+        let queued: Vec<f64> = h.iter().map(|g| g.queued).collect();
+        assert_eq!(queued, vec![6.0, 7.0, 8.0, 9.0], "oldest first, newest kept");
+        assert!(h.windows(2).all(|w| w[0].tick < w[1].tick));
+        // trend(∞) returns everything retained; trend(0) at least the
+        // newest sample (it is always within 0s of itself)
+        assert_eq!(hub.trend(f64::INFINITY).len(), 4);
+        let newest = hub.trend(0.0);
+        assert!(!newest.is_empty());
+        assert_eq!(newest.last().unwrap().queued, 9.0);
+    }
+
+    #[test]
+    fn zero_capacity_disables_history() {
+        let hub = TelemetryHub::with_history(Duration::from_millis(1), 0);
+        hub.publish(Gauges { queued: 3.0, ..Default::default() });
+        assert!(hub.history().is_empty());
+        assert!(hub.trend(f64::INFINITY).is_empty());
+        assert_eq!(hub.gauges().queued, 3.0, "live cells unaffected");
+    }
+
+    #[test]
+    fn fields_view_covers_every_gauge() {
+        let g = Gauges { queued: 2.0, slo_burn_interactive: 1.5, ..Default::default() };
+        let fields = g.fields();
+        // one pair per struct field, in declaration order
+        assert_eq!(fields[0].0, "tick");
+        assert!(fields.iter().any(|&(k, v)| k == "queued" && v == 2.0));
+        assert!(fields.iter().any(|&(k, v)| k == "slo_burn_interactive" && v == 1.5));
+        let names: std::collections::HashSet<&str> = fields.iter().map(|&(k, _)| k).collect();
+        assert_eq!(names.len(), fields.len(), "no duplicate field names");
     }
 
     #[test]

@@ -1,7 +1,7 @@
-//! Observability plane (DESIGN.md §8): end-to-end tracing and metrics
-//! for the layered serving stack.
+//! Observability plane (DESIGN.md §8, §12): end-to-end tracing,
+//! metrics, and diagnostics for the layered serving stack.
 //!
-//! Three read paths over one write path:
+//! Read paths over one write path:
 //!
 //! * [`span`] — the lock-free [`SpanRecorder`]: per-episode trace IDs
 //!   threaded from `WorkflowCtx::chat_turn` through `SamplingArgs` →
@@ -11,24 +11,40 @@
 //!   mergeable) replacing mean-only accounting for queue wait, rollout
 //!   latency, sample wait and per-turn prefill.
 //! * [`hub`] — the [`TelemetryHub`]: live gauges sampled on a cadence
-//!   and readable by `SyncPolicy` / the scheduler (the adaptive-control
-//!   prerequisite from ROADMAP item 2).
+//!   and readable by `SyncPolicy` / the scheduler, plus a bounded
+//!   gauge-history ring for trend windows.
 //! * [`export`] — Chrome trace-event JSON (`trace.json` for
-//!   chrome://tracing / Perfetto) and the `trinity trace` summary.
+//!   chrome://tracing / Perfetto), the `trinity trace` summary, and the
+//!   inverse mapping trace-file → spans used by `trinity doctor`.
+//! * [`critical`] — critical-path attribution: partition each episode's
+//!   wall time into queue/prefill/resume/decode/sync/retry/migrate.
+//! * [`slo`] — per-class latency targets with rolling error-budget burn
+//!   rates, published as gauges.
+//! * [`flight`] — the flight recorder: anomaly-triggered self-contained
+//!   diagnostic dumps (span tail + gauge history + decision ring +
+//!   queue state), rate-limited and bounded.
 //!
 //! The whole plane is config-gated behind `[observability]`
 //! ([`ObsConfig`]); when disabled no recorder exists, spans cost one
 //! `Option` check, and existing runs behave byte-identically.
 
+pub mod critical;
 pub mod export;
+pub mod flight;
 pub mod hist;
 pub mod hub;
+pub mod slo;
 pub mod span;
 
-pub use export::{chrome_trace, load_trace, summarize_trace, write_trace, DEVICE_LANE};
+pub use critical::{attribute, class_summary, top_k, EpisodeBreakdown, SEGMENT_NAMES};
+pub use export::{
+    chrome_trace, load_trace, spans_from_trace, summarize_trace, write_trace, DEVICE_LANE,
+};
+pub use flight::{Anomaly, FlightConfig, FlightRecorder, FlightSource};
 pub use hist::{HistSnapshot, Histogram, BUCKETS};
-pub use hub::{Gauges, TelemetryHub};
-pub use span::{Span, SpanKind, SpanRecorder, NO_REPLICA};
+pub use hub::{Gauges, TelemetryHub, DEFAULT_GAUGE_HISTORY};
+pub use slo::{SloConfig, SloEngine};
+pub use span::{MigrateDetail, Span, SpanKind, SpanRecorder, NO_REPLICA};
 
 use std::path::PathBuf;
 use std::time::Duration;
@@ -47,6 +63,15 @@ pub struct ObsConfig {
     pub sample_every: Duration,
     /// Where to write `trace.json`; defaults to the monitor dir.
     pub trace_path: Option<PathBuf>,
+    /// Gauge samples retained for trend windows (0 = no history).
+    pub gauge_history: usize,
+    /// Flight-recorder knobs (`dir` is filled from the monitor dir at
+    /// session build; `max_dumps = 0` disables the recorder entirely).
+    pub flight: FlightConfig,
+    /// Per-class SLO targets + objective (all-zero targets = no engine).
+    pub slo: SloConfig,
+    /// Slowest episodes reported with critical-path breakdowns.
+    pub critical_top_k: usize,
 }
 
 impl Default for ObsConfig {
@@ -56,6 +81,10 @@ impl Default for ObsConfig {
             ring_capacity: 1 << 16,
             sample_every: Duration::from_millis(250),
             trace_path: None,
+            gauge_history: DEFAULT_GAUGE_HISTORY,
+            flight: FlightConfig::default(),
+            slo: SloConfig::default(),
+            critical_top_k: 5,
         }
     }
 }
@@ -71,6 +100,8 @@ impl ObsConfig {
         if self.sample_every.is_zero() {
             bail!("observability.sample_every_s must be > 0");
         }
+        self.flight.validate()?;
+        self.slo.validate()?;
         Ok(())
     }
 }
@@ -91,5 +122,11 @@ mod tests {
         on.ring_capacity = 1024;
         on.sample_every = Duration::ZERO;
         assert!(on.validate().is_err());
+        on.sample_every = Duration::from_millis(10);
+        on.slo.objective = 1.5;
+        assert!(on.validate().is_err(), "bad slo objective rejected when enabled");
+        on.slo.objective = 0.99;
+        on.flight.burn_threshold = f64::NAN;
+        assert!(on.validate().is_err(), "bad burn threshold rejected when enabled");
     }
 }

@@ -1,0 +1,214 @@
+//! Per-class SLO engine (DESIGN.md §12): typed latency targets per
+//! [`RequestClass`] with a rolling error-budget **burn rate** computed
+//! from the per-class queue-wait histograms the QoS plane already
+//! maintains.
+//!
+//! The vocabulary is the standard SRE one: an *objective* (e.g. "99% of
+//! interactive waits under 250ms") grants an error budget of
+//! `1 - objective` violations; the burn rate is the measured violation
+//! fraction divided by that budget.  Burn 0 = no violations at all,
+//! burn 1 = consuming the budget exactly as fast as it accrues, burn >1
+//! = over-burning (the class will miss its SLO if sustained).  Burn
+//! rates are published as gauges (`slo_burn_*`) so `[control]` policies
+//! and the flight recorder can read them live.
+//!
+//! The engine is *rolling*: each [`SloEngine::assess`] call diffs the
+//! cumulative per-class histograms against the previous call's
+//! snapshots, so the burn reflects only the observations of the last
+//! assessment window, not the whole run.  An empty window holds the
+//! previous burn (no data is not the same as no violations).
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::qos::{RequestClass, CLASS_COUNT};
+
+use super::hist::HistSnapshot;
+
+/// Typed per-class latency targets.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloConfig {
+    /// Latency target per class, indexed by `RequestClass::index()`;
+    /// `Duration::ZERO` = the class is untracked (burn stays 0).
+    pub targets: [Duration; CLASS_COUNT],
+    /// Fraction of observations that must meet the target (e.g. 0.99).
+    /// The error budget is `1 - objective`.
+    pub objective: f64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        SloConfig { targets: [Duration::ZERO; CLASS_COUNT], objective: 0.99 }
+    }
+}
+
+impl SloConfig {
+    /// True when at least one class has a target — the scheduler only
+    /// builds an engine (and pays the per-publish diff) in that case.
+    pub fn any_target(&self) -> bool {
+        self.targets.iter().any(|t| !t.is_zero())
+    }
+
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if !self.objective.is_finite() || !(0.0..1.0).contains(&self.objective) {
+            anyhow::bail!("slo objective must be in [0, 1), got {}", self.objective);
+        }
+        Ok(())
+    }
+}
+
+#[derive(Debug, Default)]
+struct SloState {
+    /// Cumulative per-class snapshots as of the previous assessment.
+    last: [HistSnapshot; CLASS_COUNT],
+    /// Burn rates as of the previous assessment (held through empty
+    /// windows).
+    burn: [f64; CLASS_COUNT],
+}
+
+/// Rolling error-budget accountant over cumulative class histograms.
+pub struct SloEngine {
+    cfg: SloConfig,
+    state: Mutex<SloState>,
+}
+
+impl SloEngine {
+    pub fn new(cfg: SloConfig) -> SloEngine {
+        SloEngine { cfg, state: Mutex::new(SloState::default()) }
+    }
+
+    pub fn config(&self) -> &SloConfig {
+        &self.cfg
+    }
+
+    /// Diff `waits` (cumulative per-class queue-wait snapshots, indexed
+    /// by `RequestClass::index()`) against the previous call and return
+    /// the per-class burn rates for the window in between.
+    pub fn assess(&self, waits: &[HistSnapshot; CLASS_COUNT]) -> [f64; CLASS_COUNT] {
+        let mut st = self.state.lock().unwrap();
+        for class in RequestClass::ALL {
+            let i = class.index();
+            let target = self.cfg.targets[i];
+            if target.is_zero() {
+                st.burn[i] = 0.0;
+                st.last[i] = waits[i];
+                continue;
+            }
+            let window = window_delta(&waits[i], &st.last[i]);
+            if window.count > 0 {
+                let violations = window.fraction_over(target.as_secs_f64());
+                let budget = (1.0 - self.cfg.objective).max(f64::EPSILON);
+                st.burn[i] = violations / budget;
+            }
+            // empty window: hold the previous burn
+            st.last[i] = waits[i];
+        }
+        st.burn
+    }
+
+    /// The burn rates of the latest assessment (all zeros before the
+    /// first).
+    pub fn burns(&self) -> [f64; CLASS_COUNT] {
+        self.state.lock().unwrap().burn
+    }
+}
+
+/// `current - last`, per bucket, saturating — the observations that
+/// arrived since the previous assessment.  Saturation (instead of
+/// wrapping) keeps a restarted metrics source from poisoning the burn.
+fn window_delta(current: &HistSnapshot, last: &HistSnapshot) -> HistSnapshot {
+    let mut out = HistSnapshot::default();
+    for (o, (c, l)) in out.counts.iter_mut().zip(current.counts.iter().zip(last.counts.iter())) {
+        *o = c.saturating_sub(*l);
+    }
+    out.count = current.count.saturating_sub(last.count);
+    out.sum_s = (current.sum_s - last.sum_s).max(0.0);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::hist::Histogram;
+
+    fn targets(train: f64, eval: f64, interactive: f64) -> [Duration; CLASS_COUNT] {
+        [train, eval, interactive].map(Duration::from_secs_f64)
+    }
+
+    #[test]
+    fn burn_goes_positive_only_for_the_violated_class() {
+        let engine = SloEngine::new(SloConfig {
+            targets: targets(10.0, 0.0, 0.010),
+            objective: 0.9,
+        });
+        let hists: [Histogram; CLASS_COUNT] = Default::default();
+        // train waits comfortably under its 10s target; interactive
+        // blows through its 10ms target on half its requests
+        for _ in 0..20 {
+            hists[RequestClass::TrainRollout.index()].observe(0.005);
+        }
+        for _ in 0..10 {
+            hists[RequestClass::Interactive.index()].observe(0.001);
+            hists[RequestClass::Interactive.index()].observe(0.200);
+        }
+        let snaps = std::array::from_fn(|i| hists[i].snapshot());
+        let burn = engine.assess(&snaps);
+        assert_eq!(burn[RequestClass::TrainRollout.index()], 0.0, "{burn:?}");
+        assert_eq!(burn[RequestClass::Eval.index()], 0.0, "untracked class: {burn:?}");
+        // 50% violations against a 10% budget = burn 5
+        let i = RequestClass::Interactive.index();
+        assert!((burn[i] - 5.0).abs() < 1e-9, "{burn:?}");
+        assert_eq!(engine.burns(), burn);
+    }
+
+    #[test]
+    fn assessment_is_rolling_not_cumulative() {
+        let engine = SloEngine::new(SloConfig {
+            targets: targets(0.010, 0.0, 0.0),
+            objective: 0.5,
+        });
+        let hist = Histogram::new();
+        let snap_of = |h: &Histogram| {
+            let mut s: [HistSnapshot; CLASS_COUNT] = Default::default();
+            s[0] = h.snapshot();
+            s
+        };
+        // window 1: all slow -> burn 2 (100% violations / 50% budget)
+        for _ in 0..10 {
+            hist.observe(1.0);
+        }
+        let b1 = engine.assess(&snap_of(&hist));
+        assert!((b1[0] - 2.0).abs() < 1e-9, "{b1:?}");
+        // window 2: all fast -> burn drops to 0 even though the
+        // cumulative histogram still holds the slow observations
+        for _ in 0..10 {
+            hist.observe(0.0001);
+        }
+        let b2 = engine.assess(&snap_of(&hist));
+        assert_eq!(b2[0], 0.0, "{b2:?}");
+        // window 3: nothing new -> the last burn holds
+        for _ in 0..3 {
+            assert_eq!(engine.assess(&snap_of(&hist))[0], 0.0);
+        }
+        for _ in 0..5 {
+            hist.observe(1.0);
+        }
+        let b4 = engine.assess(&snap_of(&hist));
+        assert!((b4[0] - 2.0).abs() < 1e-9, "{b4:?}");
+        let held = engine.assess(&snap_of(&hist));
+        assert!((held[0] - 2.0).abs() < 1e-9, "empty window holds: {held:?}");
+    }
+
+    #[test]
+    fn config_validates_objective_and_reports_targets() {
+        assert!(SloConfig::default().validate().is_ok());
+        assert!(!SloConfig::default().any_target());
+        let cfg = SloConfig { targets: targets(0.0, 1.0, 0.0), objective: 0.99 };
+        assert!(cfg.any_target());
+        assert!(cfg.validate().is_ok());
+        for bad in [1.0, 1.5, -0.1, f64::NAN] {
+            let cfg = SloConfig { objective: bad, ..Default::default() };
+            assert!(cfg.validate().is_err(), "objective {bad} must be rejected");
+        }
+    }
+}

@@ -61,6 +61,25 @@ pub enum SpanKind {
 }
 
 impl SpanKind {
+    /// Every kind, in discriminant order — sized by the same table
+    /// [`from_u8`](Self::from_u8) decodes, so round-trip tests can
+    /// enumerate the full set without hand-maintaining a second list.
+    pub const ALL: [SpanKind; 13] = [
+        SpanKind::QueueWait,
+        SpanKind::Prefill,
+        SpanKind::Resume,
+        SpanKind::Decode,
+        SpanKind::Retry,
+        SpanKind::Reroute,
+        SpanKind::SyncStall,
+        SpanKind::DevicePrefill,
+        SpanKind::DeviceDecode,
+        SpanKind::DeviceTrain,
+        SpanKind::ControlDecision,
+        SpanKind::Migrate,
+        SpanKind::ClassWait,
+    ];
+
     pub fn as_str(&self) -> &'static str {
         match self {
             SpanKind::QueueWait => "queue_wait",
@@ -79,7 +98,10 @@ impl SpanKind {
         }
     }
 
-    fn from_u8(v: u8) -> Option<SpanKind> {
+    /// Decode a packed discriminant (the inverse of `kind as u8`).
+    /// Public so trace files round-trip: `export::spans_from_trace`
+    /// rebuilds `Span`s from Chrome trace events by name and packed id.
+    pub fn from_u8(v: u8) -> Option<SpanKind> {
         Some(match v {
             1 => SpanKind::QueueWait,
             2 => SpanKind::Prefill,
@@ -96,6 +118,36 @@ impl SpanKind {
             13 => SpanKind::ClassWait,
             _ => return None,
         })
+    }
+
+    /// Inverse of [`as_str`](Self::as_str): parse a trace-event name.
+    pub fn parse(name: &str) -> Option<SpanKind> {
+        SpanKind::ALL.iter().copied().find(|k| k.as_str() == name)
+    }
+}
+
+/// Typed view of the packed [`SpanKind::Migrate`] span detail.  The ring
+/// stores one `u64` per span, so a migration packs its destination
+/// replica and the prefill tokens the move saved into that word; this
+/// helper is the single owner of the layout — the service packs with it
+/// and the trace export / doctor unpack with it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MigrateDetail {
+    /// Replica the parked session moved to.
+    pub dest_replica: u32,
+    /// Prefill tokens the migration saved vs a cold re-serve.
+    pub saved_tokens: u32,
+}
+
+impl MigrateDetail {
+    /// Pack into the span's `detail` word (`dest << 32 | saved`).
+    pub fn pack(self) -> u64 {
+        ((self.dest_replica as u64) << 32) | self.saved_tokens as u64
+    }
+
+    /// Unpack a `Migrate` span's `detail` word.
+    pub fn unpack(detail: u64) -> MigrateDetail {
+        MigrateDetail { dest_replica: (detail >> 32) as u32, saved_tokens: detail as u32 }
     }
 }
 
@@ -302,6 +354,38 @@ mod tests {
         assert_eq!(r.recorded(), 2048);
         assert_eq!(r.drain().len(), 2048);
         assert_eq!(r.overwritten(), 0);
+    }
+
+    #[test]
+    fn span_kind_from_u8_roundtrips_every_variant() {
+        for kind in SpanKind::ALL {
+            assert_eq!(SpanKind::from_u8(kind as u8), Some(kind), "{kind:?}");
+            assert_eq!(SpanKind::parse(kind.as_str()), Some(kind), "{kind:?}");
+        }
+        // the discriminant table is dense over 1..=ALL.len() and closed:
+        // anything outside decodes to None (guards hand-maintained rows
+        // as kinds are added)
+        assert_eq!(SpanKind::ALL.len(), 13);
+        for v in 0..=u8::MAX {
+            let decoded = SpanKind::from_u8(v);
+            if (1..=SpanKind::ALL.len() as u8).contains(&v) {
+                assert_eq!(decoded.map(|k| k as u8), Some(v));
+            } else {
+                assert_eq!(decoded, None, "stray discriminant {v}");
+            }
+        }
+        assert_eq!(SpanKind::parse("no_such_kind"), None);
+    }
+
+    #[test]
+    fn migrate_detail_packs_and_unpacks() {
+        let d = MigrateDetail { dest_replica: 3, saved_tokens: 417 };
+        assert_eq!(d.pack(), (3u64 << 32) | 417);
+        assert_eq!(MigrateDetail::unpack(d.pack()), d);
+        // extremes survive the round-trip without cross-contamination
+        let max = MigrateDetail { dest_replica: u32::MAX, saved_tokens: u32::MAX };
+        assert_eq!(MigrateDetail::unpack(max.pack()), max);
+        assert_eq!(MigrateDetail::unpack(0), MigrateDetail { dest_replica: 0, saved_tokens: 0 });
     }
 
     #[test]

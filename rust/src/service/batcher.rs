@@ -27,7 +27,7 @@ use anyhow::{anyhow, Result};
 use crate::cache::PrefixIndex;
 use crate::exec::future::Completer;
 use crate::explorer::generation::{GenOutput, SamplingArgs};
-use crate::obs::{Span, SpanKind, SpanRecorder};
+use crate::obs::{Anomaly, FlightRecorder, Span, SpanKind, SpanRecorder};
 use crate::qos::{DrrScheduler, QosConfig, RequestClass, CLASS_COUNT};
 
 use super::replica::{ReplicaState, ServeCtl};
@@ -362,9 +362,18 @@ fn fail_now(job: RowJob, why: &str, metrics: &ServiceMetrics) {
     job.completer.complete(Err(anyhow!("{why}")));
 }
 
-/// Complete a job whose deadline passed while it was queued.
-pub(super) fn expire_job(job: RowJob, metrics: &ServiceMetrics) {
+/// Complete a job whose deadline passed while it was queued.  The
+/// flight recorder (when present) counts the expiry toward its
+/// deadline-burst trigger.
+pub(super) fn expire_job(
+    job: RowJob,
+    metrics: &ServiceMetrics,
+    flight: Option<&Arc<FlightRecorder>>,
+) {
     metrics.note_expired(job.args.class);
+    if let Some(f) = flight {
+        f.note_expiry(job.args.class);
+    }
     let waited = job.enqueued.elapsed();
     job.completer
         .complete(Err(anyhow!("request deadline exceeded after {waited:?} in queue")));
@@ -420,6 +429,9 @@ pub struct WorkerSetup {
     pub cache: Option<Arc<PrefixIndex>>,
     /// Span recorder, when observability is enabled.
     pub obs: Option<Arc<SpanRecorder>>,
+    /// Flight recorder, when diagnostics are enabled: breaker opens and
+    /// deadline-expiry bursts fire anomaly dumps through it.
+    pub flight: Option<Arc<FlightRecorder>>,
     pub shutdown: Arc<AtomicBool>,
 }
 
@@ -435,6 +447,7 @@ struct WorkerCtl<'a> {
     metrics: &'a ServiceMetrics,
     cache: Option<&'a Arc<PrefixIndex>>,
     obs: Option<&'a Arc<SpanRecorder>>,
+    flight: Option<&'a Arc<FlightRecorder>>,
     /// Refills left before the session must end.  Bounds session
     /// lifetime so a steady stream of same-key traffic cannot starve a
     /// queued request with a different sampling key (which can only be
@@ -457,7 +470,7 @@ impl ServeCtl for WorkerCtl<'_> {
             let job = self.replica.queue.try_pop_matching(&self.key, self.class)?;
             let now = Instant::now();
             if job.expired(now) {
-                expire_job(job, self.metrics);
+                expire_job(job, self.metrics, self.flight);
                 continue;
             }
             note_claimed(&job, now, self.replica.id, self.metrics, self.obs);
@@ -496,6 +509,12 @@ impl ServeCtl for WorkerCtl<'_> {
                 "replica {} quarantined after consecutive failures: {err:#}",
                 self.replica.id
             );
+            if let Some(f) = self.flight {
+                f.trigger(
+                    Anomaly::BreakerOpen,
+                    &format!("replica {} quarantined after consecutive failures", self.replica.id),
+                );
+            }
         }
         let open = breaker.is_open();
         drop(breaker);
@@ -507,7 +526,7 @@ impl ServeCtl for WorkerCtl<'_> {
 /// The per-replica serving loop.  Runs until shutdown with an empty
 /// queue; a quarantined replica parks here until its probe heals it.
 pub fn run_worker(setup: WorkerSetup) {
-    let WorkerSetup { replica, peers, cfg, metrics, cache, obs, shutdown } = setup;
+    let WorkerSetup { replica, peers, cfg, metrics, cache, obs, flight, shutdown } = setup;
     const PARK: Duration = Duration::from_millis(20);
     loop {
         // -- circuit breaker gate ------------------------------------
@@ -524,7 +543,7 @@ pub fn run_worker(setup: WorkerSetup) {
             }
             // quarantined replicas still honor deadlines and hand their
             // queued traffic to healthy peers
-            sweep_quarantined_queue(&replica, &peers, &metrics, obs.as_ref());
+            sweep_quarantined_queue(&replica, &peers, &metrics, obs.as_ref(), flight.as_ref());
             if wait > Duration::ZERO {
                 std::thread::sleep(wait.min(PARK));
                 continue;
@@ -552,7 +571,7 @@ pub fn run_worker(setup: WorkerSetup) {
         };
         let now = Instant::now();
         if first.expired(now) {
-            expire_job(first, &metrics);
+            expire_job(first, &metrics, flight.as_ref());
             continue;
         }
         note_claimed(&first, now, replica.id, &metrics, obs.as_ref());
@@ -564,7 +583,9 @@ pub fn run_worker(setup: WorkerSetup) {
         let admit_deadline = now + cfg.admission_window;
         while batch.len() < max_batch {
             match replica.queue.pop_matching_until(&key, class, admit_deadline) {
-                Some(job) if job.expired(Instant::now()) => expire_job(job, &metrics),
+                Some(job) if job.expired(Instant::now()) => {
+                    expire_job(job, &metrics, flight.as_ref())
+                }
                 Some(job) => {
                     note_claimed(&job, Instant::now(), replica.id, &metrics, obs.as_ref());
                     batch.push(job);
@@ -585,6 +606,7 @@ pub fn run_worker(setup: WorkerSetup) {
             metrics: &metrics,
             cache: cache.as_ref(),
             obs: obs.as_ref(),
+            flight: flight.as_ref(),
             refill_budget: 16 * max_batch.max(1),
             max_inflight: max_batch.max(1),
             failed: vec![],
@@ -610,6 +632,12 @@ pub fn run_worker(setup: WorkerSetup) {
                 if breaker.record_failure(Instant::now()) {
                     replica.quarantines.fetch_add(1, Ordering::SeqCst);
                     crate::log_warn!("service", "replica {} quarantined: {e:#}", replica.id);
+                    if let Some(f) = &flight {
+                        f.trigger(
+                            Anomaly::BreakerOpen,
+                            &format!("replica {} quarantined on engine failure", replica.id),
+                        );
+                    }
                 }
                 drop(breaker);
                 for job in batch.drain(..) {
@@ -668,6 +696,7 @@ fn sweep_quarantined_queue(
     peers: &[Arc<ReplicaState>],
     metrics: &ServiceMetrics,
     obs: Option<&Arc<SpanRecorder>>,
+    flight: Option<&Arc<FlightRecorder>>,
 ) {
     if replica.queue.is_empty() {
         return;
@@ -676,7 +705,7 @@ fn sweep_quarantined_queue(
     let now = Instant::now();
     for job in replica.queue.drain() {
         if job.expired(now) {
-            expire_job(job, metrics);
+            expire_job(job, metrics, flight);
         } else if peer_ready {
             metrics.rerouted.fetch_add(1, Ordering::SeqCst);
             if let Some(o) = obs {
@@ -826,7 +855,7 @@ mod tests {
         let (j, p) = job(1.0, Duration::ZERO);
         std::thread::sleep(Duration::from_millis(2));
         assert!(j.expired(Instant::now()));
-        expire_job(j, &metrics);
+        expire_job(j, &metrics, None);
         assert_eq!(metrics.expired.load(Ordering::SeqCst), 1);
         let err = p.wait().unwrap().unwrap_err().to_string();
         assert!(err.contains("deadline exceeded"), "{err}");

@@ -16,8 +16,11 @@ use crate::explorer::generation::{
     GenOutput, GenerationEngine, RolloutEndpoint, RolloutModel, SamplingArgs,
 };
 use crate::model::{WeightSnapshot, WeightSync};
-use crate::obs::{SpanKind, SpanRecorder};
+use crate::obs::{
+    Anomaly, FlightRecorder, FlightSource, MigrateDetail, SpanKind, SpanRecorder,
+};
 use crate::qos::{choose_destination, RequestClass, SessionState};
+use crate::util::json::Value;
 
 use super::batcher::{route_job, run_worker, RowJob, WorkerSetup};
 use super::replica::{
@@ -39,6 +42,9 @@ pub struct RolloutService {
     prefix: Option<Arc<PrefixIndex>>,
     /// Span recorder threaded into workers and replicas (None = off).
     obs: Option<Arc<SpanRecorder>>,
+    /// Flight recorder (None = off): breaker opens, deadline bursts and
+    /// failed migrations fire anomaly dumps through it.
+    flight: Option<Arc<FlightRecorder>>,
     shutdown: Arc<AtomicBool>,
     workers: Mutex<Vec<JoinHandle<()>>>,
 }
@@ -47,7 +53,7 @@ impl RolloutService {
     /// Build over explicit replica engines; spawns one worker per replica.
     pub fn new(engines: Vec<Arc<dyn ReplicaEngine>>, cfg: ServiceConfig) -> Result<RolloutService> {
         let prefix = Self::build_index(&cfg);
-        Self::assemble(engines, cfg, prefix, Arc::new(ServiceMetrics::new()), None)
+        Self::assemble(engines, cfg, prefix, Arc::new(ServiceMetrics::new()), None, None)
     }
 
     /// The service-wide prefix index for a config (shared with the
@@ -62,6 +68,7 @@ impl RolloutService {
         prefix: Option<Arc<PrefixIndex>>,
         metrics: Arc<ServiceMetrics>,
         obs: Option<Arc<SpanRecorder>>,
+        flight: Option<Arc<FlightRecorder>>,
     ) -> Result<RolloutService> {
         ensure!(!engines.is_empty(), "rollout service needs at least one replica");
         cfg.validate()?;
@@ -87,6 +94,7 @@ impl RolloutService {
                 metrics: Arc::clone(&metrics),
                 cache: prefix.clone(),
                 obs: obs.clone(),
+                flight: flight.clone(),
                 shutdown: Arc::clone(&shutdown),
             };
             let poisoned_replica = Arc::clone(replica);
@@ -128,12 +136,22 @@ impl RolloutService {
                     .expect("spawn service worker"),
             );
         }
+        // evidence section for flight dumps: per-class queue pressure
+        // and per-replica health at the moment of the anomaly (acyclic:
+        // the source holds Arcs into the pool, not the service)
+        if let Some(f) = &flight {
+            f.attach(Arc::new(QueuePressureSource {
+                replicas: replicas.clone(),
+                metrics: Arc::clone(&metrics),
+            }));
+        }
         Ok(RolloutService {
             cfg,
             replicas,
             metrics,
             prefix,
             obs,
+            flight,
             shutdown,
             workers: Mutex::new(workers),
         })
@@ -157,6 +175,18 @@ impl RolloutService {
         cfg: ServiceConfig,
         obs: Option<Arc<SpanRecorder>>,
     ) -> Result<RolloutService> {
+        Self::over_engines_diag(engines, cfg, obs, None)
+    }
+
+    /// [`over_engines_obs`](Self::over_engines_obs) with the full
+    /// diagnostics plane: anomalies on the serving path (breaker opens,
+    /// deadline bursts, failed migrations) fire flight dumps.
+    pub fn over_engines_diag(
+        engines: Vec<Arc<GenerationEngine>>,
+        cfg: ServiceConfig,
+        obs: Option<Arc<SpanRecorder>>,
+        flight: Option<Arc<FlightRecorder>>,
+    ) -> Result<RolloutService> {
         let refill_chunk = cfg.refill_chunk;
         let prefix = Self::build_index(&cfg);
         let metrics = Arc::new(ServiceMetrics::new());
@@ -175,7 +205,7 @@ impl RolloutService {
                 Arc::new(replica) as Arc<dyn ReplicaEngine>
             })
             .collect();
-        Self::assemble(replicas, cfg, prefix, metrics, obs)
+        Self::assemble(replicas, cfg, prefix, metrics, obs, flight)
     }
 
     /// A pool over plain endpoints (mock engines in tests and benches).
@@ -191,6 +221,18 @@ impl RolloutService {
         models: Vec<Arc<dyn RolloutEndpoint>>,
         cfg: ServiceConfig,
         obs: Option<Arc<SpanRecorder>>,
+    ) -> Result<RolloutService> {
+        Self::over_models_diag(models, cfg, obs, None)
+    }
+
+    /// [`over_models_obs`](Self::over_models_obs) with the full
+    /// diagnostics plane attached (see
+    /// [`over_engines_diag`](Self::over_engines_diag)).
+    pub fn over_models_diag(
+        models: Vec<Arc<dyn RolloutEndpoint>>,
+        cfg: ServiceConfig,
+        obs: Option<Arc<SpanRecorder>>,
+        flight: Option<Arc<FlightRecorder>>,
     ) -> Result<RolloutService> {
         let max_batch = if cfg.max_batch > 0 { cfg.max_batch } else { 8 };
         let prefix = Self::build_index(&cfg);
@@ -210,12 +252,17 @@ impl RolloutService {
                 Arc::new(replica) as Arc<dyn ReplicaEngine>
             })
             .collect();
-        Self::assemble(replicas, cfg, prefix, metrics, obs)
+        Self::assemble(replicas, cfg, prefix, metrics, obs, flight)
     }
 
     /// The span recorder, when observability is enabled.
     pub fn observer(&self) -> Option<&Arc<SpanRecorder>> {
         self.obs.as_ref()
+    }
+
+    /// The flight recorder, when diagnostics are enabled.
+    pub fn flight(&self) -> Option<&Arc<FlightRecorder>> {
+        self.flight.as_ref()
     }
 
     pub fn config(&self) -> &ServiceConfig {
@@ -281,6 +328,12 @@ impl RolloutService {
         match self.replicas.iter().find(|r| r.id == id) {
             Some(r) => {
                 r.breaker.lock().unwrap().quarantine_for(Instant::now(), cooldown);
+                if let Some(f) = &self.flight {
+                    f.trigger(
+                        Anomaly::BreakerOpen,
+                        &format!("replica {id} force-quarantined for {cooldown:?}"),
+                    );
+                }
                 true
             }
             None => false,
@@ -315,6 +368,12 @@ impl RolloutService {
         let saved = state.saved_for(key, prompt, usize::MAX);
         if saved == 0 {
             let _ = holder_state.engine.adopt_session(parked);
+            if let Some(f) = &self.flight {
+                f.trigger(
+                    Anomaly::MigrationFailure,
+                    &format!("session {key:#x}: lease on replica {holder} resumes nothing"),
+                );
+            }
             return None;
         }
         let dest_state = self.replicas.iter().find(|r| r.id == dest)?;
@@ -324,8 +383,11 @@ impl RolloutService {
                 if let Some(o) = &self.obs {
                     // detail packs the destination and the prefill
                     // tokens the move saves
-                    let detail = ((dest as u64) << 32) | saved as u64;
-                    o.mark(trace, SpanKind::Migrate, holder as u32, detail);
+                    let detail = MigrateDetail {
+                        dest_replica: dest as u32,
+                        saved_tokens: saved as u32,
+                    };
+                    o.mark(trace, SpanKind::Migrate, holder as u32, detail.pack());
                 }
                 Some(dest)
             }
@@ -333,6 +395,12 @@ impl RolloutService {
                 // destination refused (capacity / weights rolled since
                 // the decision): restore the holder's park, cold-serve
                 let _ = holder_state.engine.adopt_session(parked);
+                if let Some(f) = &self.flight {
+                    f.trigger(
+                        Anomaly::MigrationFailure,
+                        &format!("session {key:#x}: destination replica {dest} refused adoption"),
+                    );
+                }
                 None
             }
         }
@@ -360,6 +428,57 @@ impl RolloutService {
 impl Drop for RolloutService {
     fn drop(&mut self) {
         self.shutdown();
+    }
+}
+
+/// Flight-dump evidence section: per-class queue pressure and
+/// per-replica health at the instant of the anomaly.  Holds `Arc`s into
+/// the pool (not the service), keeping the recorder wiring acyclic.
+struct QueuePressureSource {
+    replicas: Vec<Arc<ReplicaState>>,
+    metrics: Arc<ServiceMetrics>,
+}
+
+impl FlightSource for QueuePressureSource {
+    fn name(&self) -> &'static str {
+        "queues"
+    }
+
+    fn collect(&self) -> Value {
+        let classes: Vec<(String, Value)> = RequestClass::ALL
+            .iter()
+            .map(|&class| {
+                let i = class.index();
+                let queued: usize =
+                    self.replicas.iter().map(|r| r.queue.class_len(class)).sum();
+                let count = |c: &std::sync::atomic::AtomicU64| c.load(Ordering::Relaxed) as i64;
+                (
+                    class.as_str().to_string(),
+                    Value::obj(vec![
+                        ("queued", Value::int(queued as i64)),
+                        ("submitted", Value::int(count(&self.metrics.class_submitted[i]))),
+                        ("completed", Value::int(count(&self.metrics.class_completed[i]))),
+                        ("expired", Value::int(count(&self.metrics.class_expired[i]))),
+                    ]),
+                )
+            })
+            .collect();
+        let replicas = self
+            .replicas
+            .iter()
+            .map(|r| {
+                Value::obj(vec![
+                    ("id", Value::int(r.id as i64)),
+                    ("queued", Value::int(r.queue.len() as i64)),
+                    ("inflight", Value::int(r.inflight.load(Ordering::SeqCst) as i64)),
+                    ("ready", Value::Bool(r.ready())),
+                ])
+            })
+            .collect();
+        Value::obj(vec![
+            ("classes", Value::Object(classes)),
+            ("replicas", Value::arr(replicas)),
+        ])
     }
 }
 

@@ -1,0 +1,269 @@
+//! Diagnostics integration: the flight recorder, critical-path
+//! attribution, and per-class SLO engine acceptance surface.
+//!
+//! * quarantine — inducing a breaker open via
+//!   [`RolloutService::quarantine_replica`] writes exactly one
+//!   rate-limited flight dump whose span tail, gauge history, and queue
+//!   sections reconstruct the failure window;
+//! * critical path — a mock multi-turn episode's attributed segments
+//!   partition its wall time exactly, and a cache-hit turn lands in
+//!   `resume`, not `prefill`;
+//! * SLO — the burn rate goes positive only for the class whose latency
+//!   target is actually violated;
+//! * disabled — without the diagnostics plane the run is byte-identical
+//!   and no dump files are written.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use trinity_rft::buffer::Experience;
+use trinity_rft::explorer::{
+    AlfworldWorkflow, MockModel, RolloutEndpoint, RolloutModel, SamplingArgs, Task, Workflow,
+    WorkflowCtx,
+};
+use trinity_rft::obs::{
+    attribute, class_summary, FlightConfig, FlightRecorder, Gauges, SloConfig, SloEngine, Span,
+    SpanKind, SpanRecorder, TelemetryHub,
+};
+use trinity_rft::qos::RequestClass;
+use trinity_rft::service::{RolloutService, ServiceConfig};
+use trinity_rft::tokenizer::{Tokenizer, EOS};
+use trinity_rft::util::json::Value;
+use trinity_rft::util::rng::Rng;
+
+/// A mock whose response is a pure function of the prompt, so two
+/// identical call sequences produce byte-identical outputs.
+fn deterministic_mock(seed: u64) -> MockModel {
+    let tok = Tokenizer::new();
+    let look = tok.encode("look");
+    MockModel::new(seed, Duration::ZERO, 0.0).with_response(move |_prompt, _rng| {
+        let mut r = look.clone();
+        r.push(EOS);
+        r
+    })
+}
+
+fn alfworld_task(seed: i64, repeat: usize) -> Task {
+    let mut t = Task::new("diag-ep", "alfworld", Value::obj(vec![("seed", Value::int(seed))]));
+    t.repeat_times = repeat;
+    t
+}
+
+/// Run the multi-turn workflow against a service handle, single-file,
+/// so the request order is deterministic.
+fn run_episodes(svc: &Arc<RolloutService>, seed: i64, repeat: usize) -> Vec<Experience> {
+    let tok = Tokenizer::new();
+    let task = alfworld_task(seed, repeat);
+    let sampling = SamplingArgs { max_new_tokens: 8, ..Default::default() };
+    let model: &dyn RolloutModel = svc.as_ref();
+    let mut ctx = WorkflowCtx { model, tokenizer: &tok, task: &task, sampling, rng: Rng::new(7) };
+    let wf =
+        AlfworldWorkflow { max_env_steps: 3, env_init_cost: Duration::ZERO, max_seq_tokens: 200 };
+    wf.run(&mut ctx).unwrap()
+}
+
+fn temp_dir(tag: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("trft_diag_{tag}_{}", std::process::id()))
+}
+
+#[test]
+fn induced_quarantine_dumps_one_bundle_reconstructing_the_window() {
+    let dir = temp_dir("quarantine");
+    let _ = std::fs::remove_dir_all(&dir);
+    let recorder = Arc::new(SpanRecorder::new(1 << 12));
+    let hub = Arc::new(TelemetryHub::with_history(Duration::from_millis(1), 16));
+    let flight = Arc::new(FlightRecorder::new(FlightConfig {
+        dir: Some(dir.clone()),
+        min_interval: Duration::from_secs(3600),
+        ..Default::default()
+    }));
+    flight.connect_spans(Arc::clone(&recorder));
+    flight.connect_hub(Arc::clone(&hub));
+    flight.set_config_digest("cafe0123cafe0123");
+
+    let mut cfg = ServiceConfig::default();
+    cfg.cache.enabled = true;
+    let endpoints: Vec<Arc<dyn RolloutEndpoint>> = vec![Arc::new(deterministic_mock(3))];
+    let svc = Arc::new(
+        RolloutService::over_models_diag(
+            endpoints,
+            cfg,
+            Some(Arc::clone(&recorder)),
+            Some(Arc::clone(&flight)),
+        )
+        .unwrap(),
+    );
+
+    // traffic before the failure: the span ring and gauge history now
+    // hold the window the dump must reconstruct
+    let exps = run_episodes(&svc, 5, 2);
+    assert!(!exps.is_empty());
+    hub.publish(Gauges { queued: 1.0, ..Default::default() });
+    hub.publish(Gauges { queued: 4.0, ..Default::default() });
+
+    // two induced quarantines: the first dumps, the second is inside
+    // min_interval and is suppressed (counted, not written)
+    assert!(svc.quarantine_replica(0, Duration::from_secs(60)));
+    assert!(svc.quarantine_replica(0, Duration::from_secs(60)));
+    assert_eq!(flight.triggers(), 2);
+    assert_eq!(flight.dumps(), 1, "rate limit allows exactly one dump");
+    assert_eq!(flight.suppressed(), 1);
+    assert_eq!(std::fs::read_dir(&dir).unwrap().count(), 1);
+
+    let doc =
+        Value::parse(&std::fs::read_to_string(dir.join("flight-0.json")).unwrap()).unwrap();
+    assert_eq!(doc.get("anomaly").and_then(Value::as_str), Some("breaker_open"));
+    assert_eq!(doc.get("config_digest").and_then(Value::as_str), Some("cafe0123cafe0123"));
+    let detail = doc.get("detail").and_then(Value::as_str).unwrap();
+    assert!(detail.contains("replica 0"), "{detail}");
+    // the gauge history reconstructs the pre-failure trend
+    let history = doc.get("gauge_history").and_then(Value::as_array).unwrap();
+    assert_eq!(history.len(), 2, "both published samples embedded");
+    assert_eq!(history[0].get("queued").and_then(Value::as_f64), Some(1.0));
+    assert_eq!(history[1].get("queued").and_then(Value::as_f64), Some(4.0));
+    // the span tail reconstructs the episodes' serve pipeline
+    let events = doc.get("traceEvents").and_then(Value::as_array).unwrap();
+    for name in ["queue_wait", "decode"] {
+        assert!(
+            events.iter().any(|e| e.get("name").and_then(Value::as_str) == Some(name)),
+            "missing {name} span in dump"
+        );
+    }
+    // the service contributed its per-class queue section
+    assert!(doc.path("sections.queues.replicas").is_some(), "{doc:?}");
+    assert!(doc.path("sections.queues.classes.train.completed").is_some(), "{doc:?}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
+#[test]
+fn critical_path_partitions_episode_wall_and_credits_cache_hits_to_resume() {
+    // real multi-turn service episodes: the attributed segments must
+    // partition each episode's wall time exactly
+    let recorder = Arc::new(SpanRecorder::new(1 << 12));
+    let mut cfg = ServiceConfig::default();
+    cfg.cache.enabled = true;
+    let endpoints: Vec<Arc<dyn RolloutEndpoint>> = vec![Arc::new(deterministic_mock(7))];
+    let svc = Arc::new(
+        RolloutService::over_models_obs(endpoints, cfg, Some(Arc::clone(&recorder))).unwrap(),
+    );
+    run_episodes(&svc, 11, 2);
+    let spans = recorder.drain();
+    assert!(spans.iter().any(|s| s.kind == SpanKind::Resume), "cache-hit turns must resume");
+    let breakdowns = attribute(&spans);
+    assert_eq!(breakdowns.len(), 2, "one breakdown per episode");
+    for b in &breakdowns {
+        let total: u64 = b.segments().iter().map(|&(_, us)| us).sum();
+        assert_eq!(total, b.wall_us, "segments must partition the wall exactly: {b:?}");
+    }
+    let per_class = class_summary(&breakdowns);
+    assert_eq!(per_class.len(), 1);
+    assert_eq!(per_class[0].0, RequestClass::TrainRollout);
+    assert_eq!(per_class[0].1, 2);
+
+    // a hand-built mock multi-turn episode pins the attribution rules:
+    // turn 1 cold-prefills, turn 2 hits the cache — its serve time must
+    // land in `resume`, not `prefill`
+    let span = |kind, start_us, dur_us, detail| Span {
+        trace: 9,
+        kind,
+        replica: 0,
+        start_us,
+        dur_us,
+        detail,
+    };
+    let episode = vec![
+        span(SpanKind::QueueWait, 0, 100, 1),
+        span(SpanKind::Prefill, 100, 300, 64),
+        span(SpanKind::Decode, 100, 500, 8),
+        span(SpanKind::QueueWait, 800, 50, 1),
+        span(SpanKind::Resume, 850, 40, 48),
+        span(SpanKind::Decode, 850, 150, 8),
+    ];
+    let b = &attribute(&episode)[0];
+    assert_eq!(b.wall_us, 1000);
+    assert_eq!(b.queue_us, 150);
+    assert_eq!(b.prefill_us, 300, "turn 1 is the cold prefill");
+    assert_eq!(b.resume_us, 40, "the cache-hit turn is resume, not prefill");
+    assert_eq!(b.decode_us, 310, "decode keeps only its remainder");
+    assert_eq!(b.other_us, 200, "the inter-turn gap is residual");
+    let total: u64 = b.segments().iter().map(|&(_, us)| us).sum();
+    assert_eq!(total, b.wall_us);
+}
+
+#[test]
+fn slo_burn_goes_positive_only_for_the_violated_class() {
+    // interactive target 1µs: any measurable queue wait violates it;
+    // train target 10s: sequential mock traffic never comes close;
+    // eval: untracked (no target), burn must stay 0
+    let engine = SloEngine::new(SloConfig {
+        targets: [Duration::from_secs(10), Duration::ZERO, Duration::from_micros(1)],
+        objective: 0.9,
+    });
+    let mut cfg = ServiceConfig::default();
+    cfg.max_batch = 1;
+    let endpoints: Vec<Arc<dyn RolloutEndpoint>> =
+        vec![Arc::new(MockModel::new(5, Duration::from_millis(2), 0.0))];
+    let svc = Arc::new(RolloutService::over_models(endpoints, cfg).unwrap());
+    let tok = Tokenizer::new();
+    let prompt = tok.encode("go");
+    let call = |class: RequestClass| {
+        let args = SamplingArgs { max_new_tokens: 4, class, ..Default::default() };
+        let model: &dyn RolloutModel = svc.as_ref();
+        model.chat(&prompt, 1, &args).unwrap();
+    };
+    for _ in 0..3 {
+        call(RequestClass::TrainRollout);
+    }
+    // concurrent interactive burst against one 2ms replica: the later
+    // requests queue for milliseconds, far over the 1µs target
+    std::thread::scope(|s| {
+        for _ in 0..4 {
+            s.spawn(|| call(RequestClass::Interactive));
+        }
+    });
+    let snap = svc.snapshot();
+    let burn = engine.assess(&snap.class_queue_wait);
+    assert!(burn[RequestClass::Interactive.index()] > 0.0, "violated class must burn: {burn:?}");
+    assert_eq!(burn[RequestClass::TrainRollout.index()], 0.0, "{burn:?}");
+    assert_eq!(burn[RequestClass::Eval.index()], 0.0, "untracked class: {burn:?}");
+    assert_eq!(engine.burns(), burn);
+}
+
+#[test]
+fn disabled_diagnostics_are_byte_identical_and_write_nothing() {
+    let dir = temp_dir("disabled");
+    let _ = std::fs::remove_dir_all(&dir);
+    let recorder = Arc::new(SpanRecorder::new(1 << 12));
+    let flight = Arc::new(FlightRecorder::new(FlightConfig {
+        dir: Some(dir.clone()),
+        ..Default::default()
+    }));
+    flight.connect_spans(Arc::clone(&recorder));
+
+    let service = |obs: Option<Arc<SpanRecorder>>, f: Option<Arc<FlightRecorder>>| {
+        let mut cfg = ServiceConfig::default();
+        cfg.cache.enabled = true;
+        let endpoints: Vec<Arc<dyn RolloutEndpoint>> = vec![Arc::new(deterministic_mock(11))];
+        Arc::new(RolloutService::over_models_diag(endpoints, cfg, obs, f).unwrap())
+    };
+    let diag = service(Some(Arc::clone(&recorder)), Some(Arc::clone(&flight)));
+    let plain = service(None, None);
+    assert!(plain.observer().is_none());
+    assert!(plain.flight().is_none());
+
+    let exps_diag = run_episodes(&diag, 9, 2);
+    let exps_plain = run_episodes(&plain, 9, 2);
+    assert_eq!(exps_diag.len(), exps_plain.len());
+    for (x, y) in exps_diag.iter().zip(&exps_plain) {
+        assert_eq!(x.tokens, y.tokens, "token streams diverged");
+        assert_eq!(x.logprobs, y.logprobs, "logprobs diverged");
+        assert_eq!(x.loss_mask, y.loss_mask, "loss masks diverged");
+        assert_eq!(x.prompt_len, y.prompt_len);
+        assert_eq!(x.reward, y.reward);
+    }
+
+    // the healthy diag run fired no anomaly; the dump dir was never
+    // even created (dumping is the only thing that touches disk)
+    assert_eq!(flight.triggers(), 0);
+    assert!(!dir.exists(), "no dump files on a healthy run");
+}
