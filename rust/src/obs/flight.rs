@@ -123,7 +123,8 @@ pub struct FlightRecorder {
     dumps: AtomicU64,
     /// Anomaly triggers observed, dumped or not.
     triggers: AtomicU64,
-    /// Triggers suppressed by the rate limit / dump cap.
+    /// Triggers that produced no dump (rate limit, dump cap, or a
+    /// failed write) — `triggers == dumps + suppressed` always holds.
     suppressed: AtomicU64,
     /// Origin-relative µs of the last dump; `u64::MAX` = never.
     last_dump_us: AtomicU64,
@@ -185,7 +186,7 @@ impl FlightRecorder {
         self.dumps.load(Ordering::Relaxed)
     }
 
-    /// Triggers swallowed by the rate limit or the dump cap.
+    /// Triggers that produced no dump (rate limit, cap, failed write).
     pub fn suppressed(&self) -> u64 {
         self.suppressed.load(Ordering::Relaxed)
     }
@@ -231,14 +232,19 @@ impl FlightRecorder {
     /// path when one was written.
     pub fn trigger(&self, anomaly: Anomaly, detail: &str) -> Option<PathBuf> {
         self.triggers.fetch_add(1, Ordering::Relaxed);
-        if self.cfg.max_dumps == 0 || self.cfg.dir.is_none() {
+        // cap check first: a capped recorder never consumes the
+        // rate-limit window it will no longer use
+        if self.cfg.max_dumps == 0
+            || self.cfg.dir.is_none()
+            || self.dumps.load(Ordering::Relaxed) >= self.cfg.max_dumps
+        {
             self.suppressed.fetch_add(1, Ordering::Relaxed);
             return None;
         }
         // rate limit: one winner per min_interval (CAS, any thread)
         let now_us = self.origin.elapsed().as_micros() as u64;
         let interval_us = self.cfg.min_interval.as_micros() as u64;
-        loop {
+        let prev_dump_us = loop {
             let last = self.last_dump_us.load(Ordering::Relaxed);
             if last != u64::MAX && now_us < last.saturating_add(interval_us) {
                 self.suppressed.fetch_add(1, Ordering::Relaxed);
@@ -249,10 +255,10 @@ impl FlightRecorder {
                 .compare_exchange(last, now_us, Ordering::Relaxed, Ordering::Relaxed)
                 .is_ok()
             {
-                break;
+                break last;
             }
-        }
-        // count bound
+        };
+        // count bound (re-checked: the early load races with other winners)
         let seq = self.dumps.fetch_add(1, Ordering::Relaxed);
         if seq >= self.cfg.max_dumps {
             self.dumps.fetch_sub(1, Ordering::Relaxed);
@@ -265,6 +271,17 @@ impl FlightRecorder {
         let written = std::fs::create_dir_all(&dir)
             .and_then(|_| std::fs::write(&path, doc.to_string_pretty()));
         if let Err(e) = written {
+            // a failed write is not a dump: roll the counter back so
+            // dumps() stays exact, and release the rate-limit window so
+            // the next anomaly may still produce evidence
+            self.dumps.fetch_sub(1, Ordering::Relaxed);
+            let _ = self.last_dump_us.compare_exchange(
+                now_us,
+                prev_dump_us,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            );
+            self.suppressed.fetch_add(1, Ordering::Relaxed);
             crate::log_warn!("flight", "failed to write {path:?}: {e}");
             return None;
         }
@@ -434,6 +451,33 @@ mod tests {
             off.note_expiry(RequestClass::Eval);
         }
         assert_eq!(off.triggers(), 0, "trigger disabled by expiry_burst=0");
+    }
+
+    #[test]
+    fn failed_write_rolls_back_accounting() {
+        // a FILE at the dump-dir path makes create_dir_all fail
+        let blocker = temp_dir("blocked");
+        let _ = std::fs::remove_dir_all(&blocker);
+        let _ = std::fs::remove_file(&blocker);
+        std::fs::write(&blocker, b"not a dir").unwrap();
+        let recorder = FlightRecorder::new(FlightConfig {
+            dir: Some(blocker.clone()),
+            min_interval: Duration::from_secs(3600),
+            ..Default::default()
+        });
+        assert!(recorder.trigger(Anomaly::BreakerOpen, "x").is_none());
+        assert_eq!(
+            (recorder.triggers(), recorder.dumps(), recorder.suppressed()),
+            (1, 0, 1),
+            "a failed write is suppressed, not counted as a dump"
+        );
+        // the failure released the rate-limit window and its sequence
+        // number: the next trigger dumps as soon as the path is writable
+        std::fs::remove_file(&blocker).unwrap();
+        let path = recorder.trigger(Anomaly::BreakerOpen, "y").unwrap();
+        assert_eq!(path.file_name().unwrap().to_str().unwrap(), "flight-0.json");
+        assert_eq!((recorder.triggers(), recorder.dumps(), recorder.suppressed()), (2, 1, 1));
+        std::fs::remove_dir_all(&blocker).unwrap();
     }
 
     #[test]

@@ -502,7 +502,13 @@ impl ServeCtl for WorkerCtl<'_> {
         self.replica.inflight.fetch_sub(1, Ordering::SeqCst);
         self.replica.failures.fetch_add(1, Ordering::SeqCst);
         let mut breaker = self.replica.breaker.lock().unwrap();
-        if breaker.record_failure(Instant::now()) {
+        let opened = breaker.record_failure(Instant::now());
+        let open = breaker.is_open();
+        // release before triggering: the flight dump's evidence sources
+        // re-lock this breaker (QueuePressureSource reads replica health),
+        // so firing under the guard would self-deadlock
+        drop(breaker);
+        if opened {
             self.replica.quarantines.fetch_add(1, Ordering::SeqCst);
             crate::log_warn!(
                 "service",
@@ -516,8 +522,6 @@ impl ServeCtl for WorkerCtl<'_> {
                 );
             }
         }
-        let open = breaker.is_open();
-        drop(breaker);
         self.failed.push((job, err));
         !open
     }
@@ -629,7 +633,10 @@ pub fn run_worker(setup: WorkerSetup) {
             Err(e) => {
                 replica.failures.fetch_add(1, Ordering::SeqCst);
                 let mut breaker = replica.breaker.lock().unwrap();
-                if breaker.record_failure(Instant::now()) {
+                let opened = breaker.record_failure(Instant::now());
+                // same as WorkerCtl::fail — never trigger under the guard
+                drop(breaker);
+                if opened {
                     replica.quarantines.fetch_add(1, Ordering::SeqCst);
                     crate::log_warn!("service", "replica {} quarantined: {e:#}", replica.id);
                     if let Some(f) = &flight {
@@ -639,7 +646,6 @@ pub fn run_worker(setup: WorkerSetup) {
                         );
                     }
                 }
-                drop(breaker);
                 for job in batch.drain(..) {
                     replica.inflight.fetch_sub(1, Ordering::SeqCst);
                     failed.push((job, anyhow!("engine failure: {e:#}")));

@@ -135,6 +135,59 @@ fn induced_quarantine_dumps_one_bundle_reconstructing_the_window() {
     std::fs::remove_dir_all(&dir).unwrap();
 }
 
+/// Regression: the worker's failure path fires the breaker-open trigger
+/// while the flight recorder's queue source reads replica health via the
+/// same breaker mutex — triggering under the guard self-deadlocked the
+/// worker.  This drives a real quarantine through `WorkerCtl::fail`
+/// (not `quarantine_replica`, whose guard is a released temporary) and
+/// proves the dump lands with the re-locking section intact.
+#[test]
+fn worker_path_quarantine_dumps_without_deadlocking() {
+    let dir = temp_dir("worker_quarantine");
+    let _ = std::fs::remove_dir_all(&dir);
+    let recorder = Arc::new(SpanRecorder::new(1 << 10));
+    let flight = Arc::new(FlightRecorder::new(FlightConfig {
+        dir: Some(dir.clone()),
+        ..Default::default()
+    }));
+    flight.connect_spans(Arc::clone(&recorder));
+
+    let mut cfg = ServiceConfig::default();
+    cfg.breaker_failures = 2;
+    cfg.max_attempts = 2;
+    cfg.retry_backoff = Duration::from_millis(1);
+    cfg.quarantine = Duration::from_millis(20);
+    // failure rate 1.0: every row fails, the second failure opens the
+    // breaker from inside the serve loop
+    let endpoints: Vec<Arc<dyn RolloutEndpoint>> =
+        vec![Arc::new(MockModel::new(3, Duration::ZERO, 1.0))];
+    let svc = Arc::new(
+        RolloutService::over_models_diag(
+            endpoints,
+            cfg,
+            Some(Arc::clone(&recorder)),
+            Some(Arc::clone(&flight)),
+        )
+        .unwrap(),
+    );
+    let tok = Tokenizer::new();
+    let args = SamplingArgs { max_new_tokens: 4, ..Default::default() };
+    let model: &dyn RolloutModel = svc.as_ref();
+    // would hang here if the trigger fired under the breaker guard
+    model.chat(&tok.encode("go"), 1, &args).unwrap_err();
+
+    assert_eq!(flight.dumps(), 1, "worker-path quarantine must dump");
+    let doc =
+        Value::parse(&std::fs::read_to_string(dir.join("flight-0.json")).unwrap()).unwrap();
+    assert_eq!(doc.get("anomaly").and_then(Value::as_str), Some("breaker_open"));
+    // the queue section re-locks the breaker to report health: its
+    // presence (with the replica reported not-ready) is the proof the
+    // trigger ran outside the guard
+    let replicas = doc.path("sections.queues.replicas").and_then(Value::as_array).unwrap();
+    assert_eq!(replicas[0].get("ready").and_then(Value::as_bool), Some(false), "{doc:?}");
+    std::fs::remove_dir_all(&dir).unwrap();
+}
+
 #[test]
 fn critical_path_partitions_episode_wall_and_credits_cache_hits_to_resume() {
     // real multi-turn service episodes: the attributed segments must
